@@ -1,0 +1,73 @@
+//! Streaming community detection — the paper's §7 extension realized:
+//! the VeilGraph model (hot vertices + frozen remainder) applied to
+//! label-propagation community detection on an evolving social network.
+//!
+//!     cargo run --release --example communities
+
+use veilgraph::community::labelprop::{label_propagation, pair_agreement};
+use veilgraph::community::streaming::StreamingCommunities;
+use veilgraph::coordinator::udf::Action;
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::generate;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::timer::Stopwatch;
+
+fn main() -> veilgraph::error::Result<()> {
+    // An ego-style network: dense core plus periphery.
+    let edges = generate::ego_network(5_000, 250, 0.3, 6, 77);
+    println!("network: {} edges", edges.len());
+
+    let mut streaming = StreamingCommunities::new(
+        edges.iter().copied(),
+        SummaryParams::new(0.15, 1, 0.1),
+        30,
+    )?;
+    println!(
+        "initial communities: {} (exact label propagation)\n",
+        {
+            let mut labels = streaming.labels().to_vec();
+            labels.sort_unstable();
+            labels.dedup();
+            labels.len()
+        }
+    );
+
+    println!(
+        "{:>5} {:>8} {:>8} {:>10} {:>10} {:>10}",
+        "query", "|K|", "sweeps", "approx(ms)", "exact(ms)", "agreement"
+    );
+    for batch in 0..6u64 {
+        // 150 new members join, attaching to the core (plus some churn)
+        for i in 0..150u64 {
+            let member = 10_000 + batch * 1_000 + i;
+            streaming.ingest(EdgeOp::add(member, i % 250));
+            streaming.ingest(EdgeOp::add(i % 250, member));
+        }
+        let r = streaming.query(Action::ComputeApproximate)?;
+
+        // exact reference on the same (post-update) topology
+        let sw = Stopwatch::start();
+        let reference = {
+            let mut g = DynamicGraph::new();
+            for (s, d) in streaming.graph().edges() {
+                let _ = g.add_edge(streaming.graph().id(s), streaming.graph().id(d));
+            }
+            label_propagation(&g, 30)
+        };
+        let exact_ms = sw.secs() * 1e3;
+        let agree = pair_agreement(&r.labels, &reference.labels, 50_000, batch);
+        println!(
+            "{:>5} {:>8} {:>8} {:>10.2} {:>10.2} {:>10.4}",
+            r.query_id,
+            r.hot_vertices,
+            r.sweeps,
+            r.elapsed_secs * 1e3,
+            exact_ms,
+            agree
+        );
+    }
+    println!("\nstreaming label propagation recomputes only the hot set yet stays");
+    println!("in near-total co-membership agreement with the full recomputation.");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: build a graph, stream edge updates, serve approximate
+//! PageRank queries, and inspect what the engine did.
+//!
+//!     cargo run --release --example quickstart
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::graph::generate;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::summary::params::SummaryParams;
+
+fn main() -> veilgraph::error::Result<()> {
+    // A small scale-free graph: 1 000 vertices, preferential attachment.
+    let edges = generate::barabasi_albert(1_000, 3, 0.5, 42);
+    println!("initial graph: {} edges", edges.len());
+
+    // The model parameters (r, n, Δ) — Fig. 1's knobs:
+    //   r = 0.2  → vertices whose degree changed >20 % become hot (K_r)
+    //   n = 1    → plus their 1-hop neighborhoods (K_n)
+    //   Δ = 0.1  → plus score-weighted extra hops (K_Δ, Eq. 5)
+    let mut engine = EngineBuilder::new()
+        .params(SummaryParams::new(0.2, 1, 0.1))
+        .build_from_edges(edges)?;
+    println!("initial exact PageRank done (measurement point 0)\n");
+
+    // Stream three batches of updates, querying after each (Alg. 1).
+    for batch in 0..3u64 {
+        for i in 0..25u64 {
+            // new vertices attaching to the old core
+            engine.ingest(EdgeOp::add(2_000 + batch * 100 + i, i * 7 % 500));
+        }
+        let result = engine.query()?;
+        println!(
+            "query {}: action={}, |K|={} of {} vertices ({:.1}%), \
+             summary edges={}, {:.2}ms",
+            result.query_id,
+            result.action,
+            result.exec.summary_vertices,
+            result.ids.len(),
+            100.0 * result.exec.summary_vertices as f64 / result.ids.len() as f64,
+            result.exec.summary_edges,
+            result.exec.elapsed_secs * 1e3,
+        );
+        println!("  top-5: {:?}", result.top(5));
+    }
+
+    println!("\nengine metrics:\n{}", engine.metrics().to_json().to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Social-feed serving: concurrent producers push follow-edges into the
+//! threaded query server while clients query influencer rankings —
+//! exercising the server, the bounded ingestion queue and backpressure
+//! counters (Fig. 2's deployment shape).
+//!
+//!     cargo run --release --example social_feed
+
+use std::sync::Arc;
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::ServerHandle;
+use veilgraph::graph::generate;
+use veilgraph::stream::backpressure::OverflowPolicy;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::rng::Xoshiro256pp;
+use veilgraph::util::timer::Stopwatch;
+
+fn main() -> veilgraph::error::Result<()> {
+    // A social network stand-in (reciprocal preferential attachment).
+    let n0 = 10_000u64;
+    let base = generate::barabasi_albert(n0 as usize, 4, 0.7, 99);
+    println!("social graph: {} follow edges", base.len());
+    let engine = EngineBuilder::new()
+        .params(SummaryParams::new(0.2, 1, 0.1))
+        .build_from_edges(base)?;
+    let server = Arc::new(ServerHandle::spawn(engine, 8_192, OverflowPolicy::Block));
+
+    // 4 producer threads: new users following existing accounts, plus
+    // some unfollows.
+    let producers: Vec<_> = (0..4u64)
+        .map(|t| {
+            let s = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256pp::new(1000 + t);
+                for i in 0..2_000u64 {
+                    let new_user = 100_000 + t * 10_000 + i;
+                    // follow 1-3 popular accounts (low ids are oldest/hubs)
+                    for _ in 0..rng.range(1, 4) {
+                        let target = rng.next_below(n0 / 10);
+                        let _ = s.ingest(EdgeOp::add(new_user, target));
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // 1 client thread: queries the influencer board while updates land.
+    let client = {
+        let s = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            for q in 0..8 {
+                std::thread::sleep(std::time::Duration::from_millis(60));
+                let sw = Stopwatch::start();
+                let r = s.query().expect("query");
+                lat.push(sw.secs());
+                println!(
+                    "query {:>2}: |V|={:>6} |K|={:>5} action={} {:.1}ms  top-3 {:?}",
+                    q + 1,
+                    r.ids.len(),
+                    r.exec.summary_vertices,
+                    r.action,
+                    r.exec.elapsed_secs * 1e3,
+                    r.top(3).iter().map(|(v, _)| *v).collect::<Vec<_>>()
+                );
+            }
+            lat
+        })
+    };
+
+    for p in producers {
+        p.join().unwrap();
+    }
+    let lat = client.join().unwrap();
+    let stats = server.stats()?;
+    println!("\nserved {} queries while ingesting ~24k ops from 4 threads", lat.len());
+    println!(
+        "mean query latency {:.1}ms; engine metrics:\n{}",
+        lat.iter().sum::<f64>() / lat.len() as f64 * 1e3,
+        stats.to_string_pretty()
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT lowering: JAX (L2+L1) → HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per capacity C in CAPACITIES and variant in {step, run}:
+    artifacts/pagerank_{variant}_c{C}.hlo.txt
+plus artifacts/manifest.json describing every artifact (shapes, scalars
+layout, fused iteration count) for the rust loader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.model import (  # noqa: E402
+    CAPACITIES,
+    ITERS_FUSED,
+    TILE,
+    VARIANTS,
+    example_args,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: str, capacity: int) -> str:
+    fn = functools.partial(VARIANTS[variant], capacity=capacity)
+    lowered = jax.jit(fn).lower(*example_args(capacity))
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--capacities",
+        default=",".join(str(c) for c in CAPACITIES),
+        help="comma-separated capacities to lower",
+    )
+    ap.add_argument(
+        "--variants", default="step,run", help="comma-separated variants"
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    capacities = [int(c) for c in args.capacities.split(",") if c]
+    variants = [v for v in args.variants.split(",") if v]
+
+    manifest = {
+        "format": "hlo-text",
+        "tile": TILE,
+        "iters_fused": ITERS_FUSED,
+        "scalars_layout": ["beta", "teleport"],
+        "artifacts": [],
+    }
+
+    for cap in capacities:
+        for variant in variants:
+            text = lower_variant(variant, cap)
+            name = f"pagerank_{variant}_c{cap}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "variant": variant,
+                    "capacity": cap,
+                    "outputs": 1 if variant == "step" else 2,
+                    "sha256_16": digest,
+                    "bytes": len(text),
+                }
+            )
+            print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,118 @@
+"""L1 — Pallas kernel for one summarized-PageRank power iteration.
+
+VeilGraph's summarized computation runs PageRank only over the *summary
+graph* ``G = (K ∪ {B}, E_K ∪ E_B)`` (paper §3.1).  The rust coordinator
+densifies the (small) summary graph into a padded capacity-``C`` problem:
+
+    A[z, u] = val((u, z)) = 1 / d_out(u)   for (u, z) ∈ E_K, else 0
+    b[z]    = Σ_{(w,z) ∈ E_B} w_s / d_out(w)     (frozen big-vertex flow)
+    mask[z] = 1.0 for z < |K|, else 0.0
+
+and the kernel computes one vertex-centric power-method update
+
+    r'[z] = mask[z] · ( β · (A @ r + b)[z] + (1-β) / n )
+
+where ``n`` is |V| of the *full* graph, so summary ranks stay directly
+comparable with full-graph ranks (DESIGN.md §2).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the mat-vec is tiled as a
+2-D grid of (TILE × TILE) blocks.  Grid dim 0 walks row tiles, grid dim 1
+walks column (reduction) tiles; partial sums accumulate into the output
+ref, and the affine epilogue (β, teleport, mask) runs on the last column
+step.  One A-tile is 128·128·4 B = 64 KiB of VMEM — comfortably inside the
+~16 MiB budget with double buffering.  ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge.  Capacities are multiples of TILE (enforced below).
+TILE = 128
+
+# Capacities for which `aot.py` emits artifacts.  Rust picks the smallest
+# capacity >= |K| and pads; above the max it falls back to the sparse
+# rust-native summarized executor.
+CAPACITIES = (128, 256, 512, 1024, 2048)
+
+
+def _step_kernel(a_ref, r_ref, b_ref, mask_ref, scalars_ref, o_ref):
+    """One (row_tile, col_tile) grid step of r' = mask·(β(A@r+b)+(1-β)/n).
+
+    a_ref:      (TILE, TILE) block of A            [VMEM]
+    r_ref:      (TILE, 1)    column-tile slice of r [VMEM]
+    b_ref:      (TILE, 1)    row-tile slice of b    [VMEM]
+    mask_ref:   (TILE, 1)    row-tile slice of mask [VMEM]
+    scalars_ref:(1, 2)       [β, (1-β)/n]           [VMEM, broadcast]
+    o_ref:      (TILE, 1)    row-tile slice of r'   [VMEM, accumulated]
+    """
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Partial mat-vec: (TILE×TILE) @ (TILE×1) — MXU-shaped contraction.
+    o_ref[...] += jnp.dot(
+        a_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        beta = scalars_ref[0, 0]
+        teleport = scalars_ref[0, 1]
+        acc = o_ref[...]
+        o_ref[...] = mask_ref[...] * (beta * (acc + b_ref[...]) + teleport)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def pagerank_step(a, r, b, mask, beta, teleport, *, capacity: int):
+    """One summarized-PageRank iteration over a padded dense summary graph.
+
+    Args:
+      a:        (C, C) f32 — dense padded transition matrix, A[z,u]=1/d_out(u).
+      r:        (C,)   f32 — current hot-vertex ranks (padded with 0).
+      b:        (C,)   f32 — per-target big-vertex contribution b_z.
+      mask:     (C,)   f32 — 1.0 on valid rows, 0.0 on padding.
+      beta:     scalar f32 — damping factor β.
+      teleport: scalar f32 — (1-β)/n with n = |V| of the full graph.
+      capacity: C, a multiple of TILE from CAPACITIES.
+
+    Returns:
+      (C,) f32 — updated ranks r'.
+    """
+    if capacity % TILE != 0:
+        raise ValueError(f"capacity {capacity} not a multiple of {TILE}")
+    c = capacity
+    grid = (c // TILE, c // TILE)
+
+    r2 = r.reshape(c, 1).astype(jnp.float32)
+    b2 = b.reshape(c, 1).astype(jnp.float32)
+    m2 = mask.reshape(c, 1).astype(jnp.float32)
+    scalars = jnp.stack([beta, teleport]).reshape(1, 2).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[
+            # A block (i, k): rows follow grid dim 0, cols the reduction dim.
+            pl.BlockSpec((TILE, TILE), lambda i, k: (i, k)),
+            # r slice follows the reduction dim.
+            pl.BlockSpec((TILE, 1), lambda i, k: (k, 0)),
+            # b, mask slices follow the row dim.
+            pl.BlockSpec((TILE, 1), lambda i, k: (i, 0)),
+            pl.BlockSpec((TILE, 1), lambda i, k: (i, 0)),
+            # scalars broadcast to every step.
+            pl.BlockSpec((1, 2), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), r2, b2, m2, scalars)
+    return out.reshape(c)

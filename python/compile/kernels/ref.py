@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+These are the correctness ground truth: `python/tests/` asserts the Pallas
+kernel (interpret mode) and the lowered HLO agree with these to float32
+tolerance, and the rust integration tests check the runtime path against
+vectors produced by the same formulas.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pagerank_step_ref(a, r, b, mask, beta, teleport):
+    """r' = mask · (β·(A@r + b) + teleport), all f32."""
+    a = a.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    return mask * (beta * (a @ r + b) + teleport)
+
+
+def pagerank_iterations_ref(a, r, b, mask, beta, teleport, iters: int):
+    """`iters` repeated applications of `pagerank_step_ref`."""
+    for _ in range(iters):
+        r = pagerank_step_ref(a, r, b, mask, beta, teleport)
+    return r
+
+
+def pagerank_run_ref(a, r0, b, mask, beta, teleport, iters: int):
+    """Model oracle: final ranks + L1 delta of the last iteration."""
+    r_prev = pagerank_iterations_ref(a, r0, b, mask, beta, teleport, iters - 1)
+    r_last = pagerank_step_ref(a, r_prev, b, mask, beta, teleport)
+    delta = jnp.sum(jnp.abs(r_last - r_prev))
+    return r_last, delta

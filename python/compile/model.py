@@ -1,0 +1,91 @@
+"""L2 — JAX model: the summarized-PageRank compute graph VeilGraph executes.
+
+Two exported entry points, both built on the L1 Pallas kernel
+(`kernels.pagerank_step`):
+
+* ``summarized_step``  — one power iteration.  The rust coordinator loops
+  this artifact when it wants per-iteration convergence control.
+* ``summarized_run``   — ``ITERS_FUSED`` iterations fused into one artifact
+  with ``lax.fori_loop`` (compiled once, no unrolling) returning the final
+  ranks *and* the L1 delta of the last iteration, so the coordinator can
+  decide whether another fused chunk is needed without an extra round-trip.
+
+Both are lowered per capacity by ``aot.py`` to HLO *text* and executed from
+rust through PJRT.  Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.pagerank_step import CAPACITIES, TILE, pagerank_step
+
+# Iterations fused into a single `summarized_run` artifact.  The rust
+# coordinator chains chunks of ITERS_FUSED until its convergence epsilon or
+# iteration cap is reached.
+ITERS_FUSED = 10
+
+
+def summarized_step(a, r, b, mask, scalars, *, capacity: int):
+    """One summarized-PageRank iteration (thin wrapper over the L1 kernel).
+
+    `scalars` is a (2,) f32 vector [β, (1-β)/n] — packing them into one
+    operand keeps the rust call-site signature stable across variants.
+    Returns a 1-tuple (lowered with return_tuple=True).
+    """
+    beta = scalars[0]
+    teleport = scalars[1]
+    return (pagerank_step(a, r, b, mask, beta, teleport, capacity=capacity),)
+
+
+def summarized_run(a, r, b, mask, scalars, *, capacity: int):
+    """ITERS_FUSED power iterations + L1 delta of the last one.
+
+    Returns (ranks, delta) where delta = ||r_T - r_{T-1}||_1 over valid
+    rows.  fori_loop keeps the HLO compact (a while op, not an unrolled
+    chain) — see DESIGN.md §Perf / ablation A6.
+    """
+    beta = scalars[0]
+    teleport = scalars[1]
+
+    def body(_, carry):
+        r_prev, _ = carry
+        r_next = pagerank_step(
+            a, r_prev, b, mask, beta, teleport, capacity=capacity
+        )
+        delta = jnp.sum(jnp.abs(r_next - r_prev))
+        return (r_next, delta)
+
+    init = (r.astype(jnp.float32), jnp.float32(0.0))
+    ranks, delta = jax.lax.fori_loop(0, ITERS_FUSED, body, init)
+    return (ranks, delta)
+
+
+def example_args(capacity: int):
+    """Abstract argument shapes used for AOT lowering at `capacity`."""
+    c = capacity
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((c, c), f32),  # a
+        jax.ShapeDtypeStruct((c,), f32),    # r
+        jax.ShapeDtypeStruct((c,), f32),    # b
+        jax.ShapeDtypeStruct((c,), f32),    # mask
+        jax.ShapeDtypeStruct((2,), f32),    # scalars [beta, teleport]
+    )
+
+
+VARIANTS = {
+    "step": summarized_step,
+    "run": summarized_run,
+}
+
+__all__ = [
+    "CAPACITIES",
+    "TILE",
+    "ITERS_FUSED",
+    "VARIANTS",
+    "example_args",
+    "summarized_step",
+    "summarized_run",
+]

@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas kernel (interpret mode) vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot — everything
+the rust runtime executes lowers through `pagerank_step`.  Hypothesis
+sweeps shapes (capacities), sparsity patterns, scalar ranges and dtypes.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels.pagerank_step import (  # noqa: E402
+    CAPACITIES,
+    TILE,
+    pagerank_step,
+)
+from compile.kernels.ref import pagerank_step_ref  # noqa: E402
+
+RTOL = 1e-5
+ATOL = 1e-6
+
+
+def random_problem(rng, capacity, n_valid, density=0.05, dtype=np.float32):
+    """A random padded summary-graph problem with `n_valid` hot vertices."""
+    a = np.zeros((capacity, capacity), dtype=dtype)
+    if n_valid > 0:
+        nnz = max(1, int(density * n_valid * n_valid))
+        rows = rng.integers(0, n_valid, size=nnz)
+        cols = rng.integers(0, n_valid, size=nnz)
+        # val((u,z)) = 1/d_out(u) ∈ (0, 1]
+        a[rows, cols] = rng.uniform(0.01, 1.0, size=nnz).astype(dtype)
+    r = np.zeros(capacity, dtype=dtype)
+    b = np.zeros(capacity, dtype=dtype)
+    mask = np.zeros(capacity, dtype=dtype)
+    r[:n_valid] = rng.uniform(0.0, 1.0, size=n_valid).astype(dtype)
+    b[:n_valid] = rng.uniform(0.0, 0.5, size=n_valid).astype(dtype)
+    mask[:n_valid] = 1.0
+    return a, r, b, mask
+
+
+def check(capacity, n_valid, beta=0.85, teleport=1e-4, seed=0, density=0.05,
+          dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    a, r, b, mask = random_problem(rng, capacity, n_valid, density, dtype)
+    got = pagerank_step(
+        jnp.asarray(a), jnp.asarray(r), jnp.asarray(b), jnp.asarray(mask),
+        jnp.float32(beta), jnp.float32(teleport), capacity=capacity,
+    )
+    want = pagerank_step_ref(
+        jnp.asarray(a), jnp.asarray(r), jnp.asarray(b), jnp.asarray(mask),
+        jnp.float32(beta), jnp.float32(teleport),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+    # Padding rows must be exactly zero (masked).
+    np.testing.assert_array_equal(np.asarray(got)[n_valid:], 0.0)
+
+
+@pytest.mark.parametrize("capacity", CAPACITIES)
+def test_kernel_matches_ref_full_capacity(capacity):
+    check(capacity, n_valid=capacity, seed=capacity)
+
+
+@pytest.mark.parametrize("capacity", CAPACITIES)
+def test_kernel_matches_ref_partial_fill(capacity):
+    check(capacity, n_valid=capacity // 3 + 1, seed=capacity + 1)
+
+
+def test_kernel_single_valid_vertex():
+    check(TILE, n_valid=1, seed=7)
+
+
+def test_kernel_empty_summary_is_all_zero():
+    # n_valid = 0: mask kills everything, output must be identically zero.
+    a = jnp.zeros((TILE, TILE), jnp.float32)
+    z = jnp.zeros((TILE,), jnp.float32)
+    got = pagerank_step(a, z, z, z, jnp.float32(0.85), jnp.float32(0.1),
+                        capacity=TILE)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_kernel_zero_matrix_gives_teleport_plus_b():
+    # A = 0 ⇒ r' = mask·(β·b + teleport) exactly.
+    c = 2 * TILE
+    rng = np.random.default_rng(3)
+    _, r, b, mask = random_problem(rng, c, c // 2)
+    a = jnp.zeros((c, c), jnp.float32)
+    got = pagerank_step(a, jnp.asarray(r), jnp.asarray(b), jnp.asarray(mask),
+                        jnp.float32(0.85), jnp.float32(0.01), capacity=c)
+    want = mask * (0.85 * b + 0.01)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=RTOL, atol=ATOL)
+
+
+def test_kernel_identity_matrix_scales_rank():
+    # A = I ⇒ r' = β·(r + b) + teleport on valid rows.
+    c = TILE
+    rng = np.random.default_rng(9)
+    _, r, b, mask = random_problem(rng, c, c)
+    a = jnp.eye(c, dtype=jnp.float32)
+    got = pagerank_step(a, jnp.asarray(r), jnp.asarray(b), jnp.asarray(mask),
+                        jnp.float32(0.5), jnp.float32(0.25), capacity=c)
+    want = 0.5 * (r + b) + 0.25
+    np.testing.assert_allclose(np.asarray(got), want, rtol=RTOL, atol=ATOL)
+
+
+def test_kernel_rejects_unaligned_capacity():
+    a = jnp.zeros((100, 100), jnp.float32)
+    z = jnp.zeros((100,), jnp.float32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        pagerank_step(a, z, z, z, jnp.float32(0.85), jnp.float32(0.1),
+                      capacity=100)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cap_idx=st.integers(0, 2),            # capacities 128/256/512 for speed
+    fill=st.floats(0.01, 1.0),
+    beta=st.floats(0.05, 0.99),
+    teleport=st.floats(1e-8, 0.5),
+    density=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_hypothesis_sweep(cap_idx, fill, beta, teleport, density, seed):
+    capacity = CAPACITIES[cap_idx]
+    n_valid = max(1, int(fill * capacity))
+    check(capacity, n_valid, beta=beta, teleport=teleport, seed=seed,
+          density=density)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_accepts_f64_inputs_downcasts(seed):
+    # dtype sweep: f64 inputs are downcast to f32 inside the kernel wrapper.
+    check(TILE, n_valid=TILE // 2, seed=seed, dtype=np.float64)
+
+
+def test_kernel_is_linear_in_rank():
+    # r' is affine in r: step(2r) - step(r) == β·A·r on valid rows.
+    c = TILE
+    rng = np.random.default_rng(11)
+    a, r, b, mask = random_problem(rng, c, c, density=0.1)
+    s1 = pagerank_step(jnp.asarray(a), jnp.asarray(r), jnp.asarray(b),
+                       jnp.asarray(mask), jnp.float32(0.85),
+                       jnp.float32(0.01), capacity=c)
+    s2 = pagerank_step(jnp.asarray(a), jnp.asarray(2 * r), jnp.asarray(b),
+                       jnp.asarray(mask), jnp.float32(0.85),
+                       jnp.float32(0.01), capacity=c)
+    lin = np.asarray(s2) - np.asarray(s1)
+    want = mask * (0.85 * (a @ r))
+    np.testing.assert_allclose(lin, want, rtol=1e-4, atol=1e-5)

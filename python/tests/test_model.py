@@ -1,0 +1,90 @@
+"""L2 correctness: model variants vs oracle; shapes; fixed-point behaviour."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels.ref import (  # noqa: E402
+    pagerank_iterations_ref,
+    pagerank_run_ref,
+)
+from compile.model import (  # noqa: E402
+    ITERS_FUSED,
+    example_args,
+    summarized_run,
+    summarized_step,
+)
+from tests.test_kernel import random_problem  # noqa: E402
+
+CAP = 128
+
+
+def make(seed=0, n_valid=CAP, capacity=CAP, density=0.05):
+    rng = np.random.default_rng(seed)
+    a, r, b, mask = random_problem(rng, capacity, n_valid, density)
+    scalars = np.array([0.85, 1e-3], dtype=np.float32)
+    return tuple(jnp.asarray(x) for x in (a, r, b, mask, scalars))
+
+
+def test_step_variant_matches_single_ref_iteration():
+    a, r, b, mask, scalars = make(seed=1)
+    (got,) = summarized_step(a, r, b, mask, scalars, capacity=CAP)
+    want = pagerank_iterations_ref(a, r, b, mask, scalars[0], scalars[1], 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_run_variant_matches_fused_ref_iterations():
+    a, r, b, mask, scalars = make(seed=2)
+    ranks, delta = summarized_run(a, r, b, mask, scalars, capacity=CAP)
+    want_r, want_d = pagerank_run_ref(
+        a, r, b, mask, scalars[0], scalars[1], ITERS_FUSED
+    )
+    np.testing.assert_allclose(np.asarray(ranks), np.asarray(want_r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(delta), float(want_d),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_run_converges_toward_fixed_point():
+    # Chaining run artifacts must drive the L1 delta toward zero: the
+    # summarized system r' = βAr + βb + t is a contraction for β<1 when
+    # columns of A sum to ≤ 1.
+    a, r, b, mask, scalars = make(seed=3, density=0.02)
+    a = a / jnp.maximum(jnp.sum(a, axis=0, keepdims=True), 1.0)
+    d_prev = None
+    for _ in range(4):
+        r, delta = summarized_run(a, r, b, mask, scalars, capacity=CAP)
+        d = float(delta)
+        if d_prev is not None:
+            assert d <= d_prev + 1e-6
+        d_prev = d
+    assert d_prev < 1e-3
+
+
+def test_example_args_shapes_cover_all_operands():
+    args = example_args(256)
+    assert [tuple(x.shape) for x in args] == [
+        (256, 256), (256,), (256,), (256,), (2,)
+    ]
+    assert all(x.dtype == jnp.float32 for x in args)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), fill=st.floats(0.05, 1.0))
+def test_step_hypothesis_partial_fill(seed, fill):
+    n_valid = max(1, int(fill * CAP))
+    a, r, b, mask, scalars = make(seed=seed, n_valid=n_valid)
+    (got,) = summarized_step(a, r, b, mask, scalars, capacity=CAP)
+    want = pagerank_iterations_ref(a, r, b, mask, scalars[0], scalars[1], 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert not np.any(np.asarray(got)[n_valid:])

@@ -1,0 +1,268 @@
+//! `cargo bench --bench ablation` — ablations of the design choices
+//! DESIGN.md §6 calls out:
+//!
+//! * **A1** summarized-XLA vs summarized-rust-sparse vs exact.
+//! * **A2** frozen big-vertex contributions vs recomputing them per
+//!   iteration (correctness-neutral; shows why freezing matters).
+//! * **A3** K_Δ on vs off (accuracy + summary-size impact).
+//! * **A4** pull (CSR) vs push PageRank traversal.
+//! * **A5** shuffled vs incidence-ordered streams (paper §5, cnr-2000).
+//! * **A6** fused 10-iteration artifact vs per-step execute round-trips.
+//! * **A8** stream nature (paper §7): power-law growth vs Erdős–Rényi vs
+//!   sliding-window streams over the same base graph.
+
+use veilgraph::bench::{BenchConfig, Bencher};
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::policies::{AlwaysApproximate, AlwaysExact};
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::generate;
+use veilgraph::metrics::ranking::top_k_ids;
+use veilgraph::metrics::rbo::rbo_ext;
+use veilgraph::pagerank::power::{PageRank, PageRankConfig};
+use veilgraph::pagerank::summarized::run_summarized;
+use veilgraph::runtime::artifact::Variant;
+use veilgraph::runtime::client::XlaRuntime;
+use veilgraph::stream::source::{chunked_events, split_stream};
+use veilgraph::summary::bigvertex::SummaryGraph;
+use veilgraph::summary::hot::HotSet;
+use veilgraph::summary::params::SummaryParams;
+
+/// Push-style PageRank iteration (A4 comparator): scatter contributions
+/// along out-edges instead of gathering along in-edges.
+fn pagerank_push(out_csr: &[(u32, u32)], n: usize, iters: usize, beta: f64) -> Vec<f64> {
+    let mut out_deg = vec![0u32; n];
+    for &(u, _) in out_csr {
+        out_deg[u as usize] += 1;
+    }
+    let teleport = 1.0 - beta;
+    let mut ranks = vec![1.0f64; n];
+    let mut next = vec![0.0f64; n];
+    for _ in 0..iters {
+        for x in next.iter_mut() {
+            *x = teleport;
+        }
+        for &(u, v) in out_csr {
+            next[v as usize] += beta * ranks[u as usize] / out_deg[u as usize] as f64;
+        }
+        std::mem::swap(&mut ranks, &mut next);
+    }
+    ranks
+}
+
+fn full_hot(g: &DynamicGraph) -> HotSet {
+    let idxs: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    HotSet { k_r: idxs, k_n: vec![], k_delta: vec![], hot: vec![true; g.num_vertices()] }
+}
+
+fn main() {
+    let mut b = Bencher::with_config(BenchConfig { warmup: 2, iters: 10, min_secs: 0.2 });
+    let cfg = PageRankConfig { epsilon: 1e-8, max_iters: 100, ..Default::default() };
+
+    // ================= A1: executor comparison =========================
+    println!("== A1: summarized executors vs exact (|K| = 1500 of 20k) ==");
+    let edges = generate::copying_web(20_000, 10, 0.7, 7);
+    let (graph, _) = DynamicGraph::from_edges(edges.iter().copied());
+    let csr = graph.snapshot();
+    let exact_runner = PageRank::new(cfg);
+    let full = exact_runner.run(&csr);
+    // hot set: the 1500 highest-degree vertices (a realistic K shape)
+    let mut by_deg: Vec<u32> = (0..graph.num_vertices() as u32).collect();
+    by_deg.sort_by_key(|&v| std::cmp::Reverse(graph.degree(v)));
+    let k_set: Vec<u32> = by_deg[..1500].to_vec();
+    let mut hot = vec![false; graph.num_vertices()];
+    for &v in &k_set {
+        hot[v as usize] = true;
+    }
+    let hs = HotSet { k_r: k_set, k_n: vec![], k_delta: vec![], hot };
+    let summary = SummaryGraph::build(&graph, &hs, &full.ranks, 1.0);
+    b.bench("a1_exact_full_graph", || exact_runner.run(&csr));
+    b.bench("a1_summarized_sparse", || run_summarized(&summary, &cfg));
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").is_file();
+    if have_artifacts {
+        let mut rt = XlaRuntime::new(&artifacts).unwrap();
+        let cap = rt.ensure_tier(Variant::Run, summary.num_vertices()).unwrap();
+        let dense = summary.to_dense(cap);
+        let teleport = cfg.teleport(summary.full_n) as f32;
+        b.bench(&format!("a1_summarized_xla_c{cap}"), || {
+            rt.execute(Variant::Run, cap, &dense.a, &dense.r0, &dense.b, &dense.mask, 0.85, teleport)
+                .unwrap()
+        });
+    }
+
+    // ================= A2: frozen vs recomputed boundary ================
+    println!("\n== A2: frozen b_z vs recomputing boundary each iteration ==");
+    b.bench("a2_frozen_boundary", || run_summarized(&summary, &cfg));
+    // recompute = rebuild the summary every iteration (the naive scheme)
+    b.bench("a2_recompute_boundary", || {
+        let mut ranks = full.ranks.clone();
+        for _ in 0..10 {
+            let s = SummaryGraph::build(&graph, &hs, &ranks, 1.0);
+            let one = PageRankConfig { max_iters: 1, epsilon: 0.0, ..cfg };
+            let r = run_summarized(&s, &one);
+            for (li, &v) in s.vertices.iter().enumerate() {
+                ranks[v as usize] = r.ranks[li];
+            }
+        }
+        ranks
+    });
+
+    // ================= A3: K_Δ on/off ===================================
+    println!("\n== A3: K_Δ contribution (accuracy & summary size) ==");
+    let ds_edges = generate::barabasi_albert(8_000, 4, 0.6, 11);
+    let (initial, stream) = split_stream(&ds_edges, 2_000, true, 3);
+    let events = chunked_events(&stream, 10);
+    for (label, params) in [
+        ("a3_with_kdelta", SummaryParams::new(0.2, 1, 0.01)),
+        ("a3_without_kdelta", SummaryParams::new(0.2, 1, 1e9_f64)), // Δ→∞ ⇒ radius 0
+    ] {
+        let mut approx = EngineBuilder::new()
+            .params(params)
+            .udf(Box::new(AlwaysApproximate))
+            .pagerank(cfg)
+            .build_from_edges(initial.iter().copied())
+            .unwrap();
+        let mut exact = EngineBuilder::new()
+            .udf(Box::new(AlwaysExact))
+            .pagerank(cfg)
+            .build_from_edges(initial.iter().copied())
+            .unwrap();
+        let ra = approx.run_stream(events.clone()).unwrap();
+        let re = exact.run_stream(events.clone()).unwrap();
+        let mut rbo = 0.0;
+        let mut k_avg = 0.0;
+        for (a, e) in ra.iter().zip(&re) {
+            rbo += rbo_ext(
+                &top_k_ids(&a.ids, &a.ranks, 1000),
+                &top_k_ids(&e.ids, &e.ranks, 1000),
+                0.99,
+            );
+            k_avg += a.exec.summary_vertices as f64;
+        }
+        println!(
+            "{label}: avg RBO {:.4}, avg |K| {:.0}",
+            rbo / ra.len() as f64,
+            k_avg / ra.len() as f64
+        );
+    }
+
+    // ================= A4: pull vs push =================================
+    println!("\n== A4: pull (CSR gather) vs push (edge scatter), 10 iters ==");
+    let el: Vec<(u32, u32)> = graph
+        .edges()
+        .collect();
+    let ten = PageRankConfig { max_iters: 10, epsilon: 0.0, ..cfg };
+    let pr10 = PageRank::new(ten);
+    b.bench("a4_pull_10iters", || pr10.run(&csr));
+    b.bench("a4_push_10iters", || {
+        pagerank_push(&el, graph.num_vertices(), 10, 0.85)
+    });
+    // numerics agree
+    let pull = pr10.run(&csr).ranks;
+    let push = pagerank_push(&el, graph.num_vertices(), 10, 0.85);
+    let max_diff = pull
+        .iter()
+        .zip(&push)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("a4 max |pull - push| = {max_diff:.2e} (must be ~0)");
+
+    // ================= A5: shuffled vs incidence stream =================
+    println!("\n== A5: shuffled vs incidence-ordered stream (web graph) ==");
+    let web = generate::copying_web(10_000, 10, 0.7, 5);
+    for (label, shuffled) in [("a5_incidence", false), ("a5_shuffled", true)] {
+        let (init, stream) = split_stream(&web, 2_000, shuffled, 13);
+        let ev = chunked_events(&stream, 10);
+        let mut eng = EngineBuilder::new()
+            .params(SummaryParams::new(0.2, 1, 0.1))
+            .pagerank(cfg)
+            .build_from_edges(init.iter().copied())
+            .unwrap();
+        let rs = eng.run_stream(ev).unwrap();
+        let k_avg: f64 =
+            rs.iter().map(|r| r.exec.summary_vertices as f64).sum::<f64>() / rs.len() as f64;
+        let t_avg: f64 =
+            rs.iter().map(|r| r.exec.elapsed_secs).sum::<f64>() / rs.len() as f64;
+        println!("{label}: avg |K| {k_avg:.0}, avg query {:.2}ms", t_avg * 1e3);
+    }
+
+    // ================= A6: fused vs per-step round-trips ================
+    if have_artifacts {
+        println!("\n== A6: fused run-artifact (10 iters/call) vs step-artifact ==");
+        let mut rt = XlaRuntime::new(&artifacts).unwrap();
+        let small = generate::barabasi_albert(400, 3, 0.4, 23);
+        let (g2, _) = DynamicGraph::from_edges(small);
+        let f2 = PageRank::new(cfg).run(&g2.snapshot());
+        let s2 = SummaryGraph::build(&g2, &full_hot(&g2), &f2.ranks, 1.0);
+        let cap = rt.ensure_tier(Variant::Run, s2.num_vertices()).unwrap();
+        rt.ensure_tier(Variant::Step, s2.num_vertices()).unwrap();
+        let d2 = s2.to_dense(cap);
+        let teleport = cfg.teleport(s2.full_n) as f32;
+        b.bench("a6_fused_10iters_1call", || {
+            rt.execute(Variant::Run, cap, &d2.a, &d2.r0, &d2.b, &d2.mask, 0.85, teleport).unwrap()
+        });
+        b.bench("a6_step_10iters_10calls", || {
+            let mut r = d2.r0.clone();
+            for _ in 0..10 {
+                r = rt
+                    .execute(Variant::Step, cap, &d2.a, &r, &d2.b, &d2.mask, 0.85, teleport)
+                    .unwrap()
+                    .ranks;
+            }
+            r
+        });
+    }
+
+    // ================= A8: stream nature (paper §7) =====================
+    println!("\n== A8: stream nature — power-law growth vs ER vs sliding window ==");
+    {
+        use veilgraph::stream::event::UpdateEvent;
+        use veilgraph::stream::synthetic::{er_stream, powerlaw_growth_stream, sliding_window_stream};
+        let base_edges = generate::barabasi_albert(6_000, 4, 0.6, 51);
+        let (base_graph, _) = DynamicGraph::from_edges(base_edges.iter().copied());
+        let streams: Vec<(&str, Vec<veilgraph::stream::event::EdgeOp>)> = vec![
+            ("a8_powerlaw_growth", powerlaw_growth_stream(&base_graph, 2_000, 0.3, 9)),
+            ("a8_erdos_renyi", er_stream(6_000, 2_000, 9)),
+            ("a8_sliding_window", {
+                let extra: Vec<(u64, u64)> =
+                    er_stream(6_000, 1_000, 10).iter().filter_map(|op| match op {
+                        veilgraph::stream::event::EdgeOp::AddEdge(u, v) => Some((*u, *v)),
+                        _ => None,
+                    }).collect();
+                sliding_window_stream(&extra, 300)
+            }),
+        ];
+        for (label, ops) in streams {
+            let mut engine = EngineBuilder::new()
+                .params(SummaryParams::new(0.2, 1, 0.1))
+                .udf(Box::new(AlwaysApproximate))
+                .pagerank(cfg)
+                .build_from_edges(base_edges.iter().copied())
+                .unwrap();
+            let mut events: Vec<UpdateEvent> = Vec::new();
+            let q = 10;
+            for (i, op) in ops.iter().enumerate() {
+                events.push(UpdateEvent::Op(*op));
+                if (i + 1) % (ops.len() / q).max(1) == 0 {
+                    events.push(UpdateEvent::Query);
+                }
+            }
+            let rs = engine.run_stream(events).unwrap();
+            let k_avg: f64 =
+                rs.iter().map(|r| r.exec.summary_vertices as f64).sum::<f64>() / rs.len().max(1) as f64;
+            let t_avg: f64 =
+                rs.iter().map(|r| r.exec.elapsed_secs).sum::<f64>() / rs.len().max(1) as f64;
+            println!(
+                "{label}: {} queries, avg |K| {k_avg:.0}, avg query {:.2}ms, final |V| {}",
+                rs.len(),
+                t_avg * 1e3,
+                engine.graph().num_vertices()
+            );
+        }
+    }
+
+    println!("\n{}", b.report());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/ablation_bench.csv", b.to_csv()).expect("write csv");
+    println!("CSV written to results/ablation_bench.csv");
+}

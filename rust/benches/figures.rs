@@ -1,0 +1,67 @@
+//! `cargo bench --bench figures` — regenerates every evaluation artifact
+//! of the paper: Table 1 and Figures 3–30 (7 datasets × {vertex ratio,
+//! edge ratio, RBO, speedup}), writing CSVs + quick-look ASCII plots to
+//! `results/` and a summary to stdout.
+//!
+//! Scale: `VEILGRAPH_SCALE` env var (default 0.1 ⇒ ~1/10 of the
+//! DESIGN.md Table 1b stand-in sizes, minutes not hours;
+//! `VEILGRAPH_SCALE=1.0` reproduces the full stand-ins). The parameter
+//! grid is always the paper's full 18 combinations.
+
+use veilgraph::experiments::datasets::{all_datasets, table1};
+use veilgraph::experiments::figures::{figure_summary, figures_for_dataset};
+use veilgraph::experiments::harness::{run_experiment, HarnessConfig, Metric};
+use veilgraph::experiments::report::{headline, markdown_rows, write_experiment};
+use veilgraph::util::timer::{fmt_duration, Stopwatch};
+
+fn main() {
+    let scale: f64 = std::env::var("VEILGRAPH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let cfg = HarnessConfig::default();
+    println!("== VeilGraph figure regeneration (scale {scale}, Q={}, 18 combos) ==\n", cfg.q);
+    println!("Table 1 (paper vs stand-ins):\n{}", table1(scale));
+
+    let total = Stopwatch::start();
+    let mut md = String::new();
+    let mut headline_best = (0.0f64, 0.0f64);
+    for spec in all_datasets() {
+        let sw = Stopwatch::start();
+        let edges = spec.generate(scale);
+        let result = run_experiment(
+            spec.name,
+            &edges,
+            spec.stream_len_at(scale),
+            spec.shuffled,
+            &cfg,
+        )
+        .expect("experiment failed");
+        write_experiment("results", &result).expect("write results");
+        let (speedup, rbo) = headline(&result);
+        if speedup > headline_best.0 {
+            headline_best = (speedup, rbo);
+        }
+        println!(
+            "\n-- {} (paper: {}) done in {} --",
+            spec.name,
+            spec.paper_name,
+            fmt_duration(sw.secs())
+        );
+        for fig in figures_for_dataset(spec.name) {
+            println!("{}", figure_summary(&fig, &result));
+        }
+        // paper-shape checks, printed not asserted (bench, not test)
+        let best_rbo = result.ranked(Metric::Rbo)[0].avg(Metric::Rbo);
+        let best_speedup = result.ranked(Metric::Speedup)[0].avg(Metric::Speedup);
+        println!(
+            "   paper-shape: best RBO {best_rbo:.4} (paper: >0.95 achievable), best speedup {best_speedup:.2}x (paper: 3-4x+)"
+        );
+        md.push_str(&markdown_rows(&result));
+    }
+    println!("\n== all figures regenerated in {} ==", fmt_duration(total.secs()));
+    println!("headline: best speedup {:.2}x at RBO {:.4}", headline_best.0, headline_best.1);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/figures_summary.md", md).expect("write summary");
+    println!("CSVs + quicklooks in results/, markdown in results/figures_summary.md");
+}

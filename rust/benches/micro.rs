@@ -1,0 +1,133 @@
+//! `cargo bench --bench micro` — hot-path micro-benchmarks (§Perf):
+//! exact PageRank iteration, hot-set selection, summary construction,
+//! densification, sparse summarized run, XLA execute round-trip, RBO,
+//! CSR snapshot, top-k. Results feed EXPERIMENTS.md §Perf.
+
+use std::collections::HashMap;
+
+use veilgraph::bench::{BenchConfig, Bencher};
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::generate;
+use veilgraph::metrics::ranking::top_k_ids;
+use veilgraph::metrics::rbo::rbo_ext;
+use veilgraph::pagerank::power::{PageRank, PageRankConfig};
+use veilgraph::pagerank::summarized::run_summarized;
+use veilgraph::runtime::artifact::Variant;
+use veilgraph::runtime::client::XlaRuntime;
+use veilgraph::summary::bigvertex::SummaryGraph;
+use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut b = Bencher::with_config(BenchConfig { warmup: 2, iters: 12, min_secs: 0.2 });
+
+    // -- substrate: a mid-size web graph -------------------------------
+    let edges = generate::copying_web(50_000, 10, 0.7, 42);
+    let (graph, _) = DynamicGraph::from_edges(edges.iter().copied());
+    let csr = graph.snapshot();
+    let n = graph.num_vertices();
+    println!("workload: copying-web |V|={n} |E|={}\n", graph.num_edges());
+
+    b.bench("csr_snapshot_50k", || graph.snapshot());
+
+    let pr = PageRank::new(PageRankConfig { epsilon: 0.0, max_iters: 1, ..Default::default() });
+    b.bench("pagerank_1iter_50k", || pr.run(&csr));
+
+    let pr_full =
+        PageRank::new(PageRankConfig { epsilon: 1e-8, max_iters: 100, ..Default::default() });
+    let full = pr_full.run(&csr);
+    println!("  (full exact run: {} iterations)\n", full.iterations);
+    b.bench("pagerank_converged_50k", || pr_full.run(&csr));
+
+    // -- hot-set selection over a realistic update batch ----------------
+    let mut prev_degree: HashMap<u64, usize> = HashMap::new();
+    let mut rng = Xoshiro256pp::new(9);
+    for _ in 0..800 {
+        let id = rng.next_below(n as u64);
+        if let Some(idx) = graph.index(id) {
+            prev_degree.insert(id, graph.degree(idx).saturating_sub(2).max(1));
+        }
+    }
+    let params = SummaryParams::new(0.1, 1, 0.1);
+    let inputs = HotSetInputs {
+        graph: &graph,
+        prev_degree: &prev_degree,
+        new_vertices: &[],
+        prev_ranks: &full.ranks,
+    };
+    let hot = compute_hot_set(&inputs, &params);
+    println!("  (hot set: |K_r|={} |K_n|={} |K_Δ|={})\n", hot.k_r.len(), hot.k_n.len(), hot.k_delta.len());
+    b.bench("hot_set_800_touched", || compute_hot_set(&inputs, &params));
+
+    // -- summary build + executors --------------------------------------
+    b.bench("summary_build", || SummaryGraph::build(&graph, &hot, &full.ranks, 1.0));
+    let summary = SummaryGraph::build(&graph, &hot, &full.ranks, 1.0);
+    println!(
+        "  (summary: |K|={} |E_K|={} |E_B|={})\n",
+        summary.num_vertices(),
+        summary.num_internal_edges(),
+        summary.num_boundary_edges
+    );
+    let cfg = PageRankConfig { epsilon: 1e-8, max_iters: 100, ..Default::default() };
+    b.bench("summarized_sparse", || run_summarized(&summary, &cfg));
+
+    // -- XLA path (capacity-tiered) --------------------------------------
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let skip_xla = std::env::var("VEILGRAPH_SKIP_XLA").is_ok();
+    if !skip_xla && artifacts.join("manifest.json").is_file() {
+        let mut rt = XlaRuntime::new(&artifacts).unwrap();
+        for cap in [128usize, 512, 2048] {
+            rt.ensure_tier(Variant::Run, cap).unwrap();
+            // synthetic dense problem at this capacity
+            let k = cap * 3 / 4;
+            let mut hs = HotSet::default();
+            hs.hot = vec![false; n];
+            let dense = {
+                // random small summary padded to cap
+                let mut rng = Xoshiro256pp::new(cap as u64);
+                let mut a = vec![0.0f32; cap * cap];
+                for _ in 0..(k * 8) {
+                    let z = rng.range(0, k);
+                    let u = rng.range(0, k);
+                    a[z * cap + u] = 0.125;
+                }
+                let r = vec![1.0f32; cap];
+                let b = vec![0.1f32; cap];
+                let mut mask = vec![0.0f32; cap];
+                for m in mask.iter_mut().take(k) {
+                    *m = 1.0;
+                }
+                (a, r, b, mask)
+            };
+            let _ = hs;
+            b.bench(&format!("xla_run10_c{cap}"), || {
+                rt.execute(Variant::Run, cap, &dense.0, &dense.1, &dense.2, &dense.3, 0.85, 0.15)
+                    .unwrap()
+            });
+            // §Perf runtime-1: device-resident constants, only r uploaded.
+            let prepared = rt.prepare_dense(cap, &dense.0, &dense.2, &dense.3, 0.85, 0.15).unwrap();
+            b.bench(&format!("xla_run10_prepared_c{cap}"), || {
+                rt.execute_prepared(Variant::Run, &prepared, &dense.1).unwrap()
+            });
+        }
+    } else if skip_xla {
+        println!("(VEILGRAPH_SKIP_XLA set — skipping XLA benches)");
+    } else {
+        println!("(artifacts/ missing — skipping XLA benches; run `make artifacts`)");
+    }
+
+    // -- metrics ----------------------------------------------------------
+    let ids: Vec<u64> = (0..n as u64).collect();
+    b.bench("top_k_4000_of_50k", || top_k_ids(&ids, &full.ranks, 4000));
+    let ranking_a = top_k_ids(&ids, &full.ranks, 4000);
+    let mut ranking_b = ranking_a.clone();
+    ranking_b.swap(10, 500);
+    ranking_b.swap(3, 7);
+    b.bench("rbo_ext_4000", || rbo_ext(&ranking_a, &ranking_b, 0.99));
+
+    println!("{}", b.report());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/micro_bench.csv", b.to_csv()).expect("write csv");
+    println!("CSV written to results/micro_bench.csv");
+}

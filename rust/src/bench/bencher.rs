@@ -1,0 +1,164 @@
+//! Micro-benchmark harness (substrate for the unavailable `criterion`).
+//!
+//! Warmup + timed iterations with outlier-aware statistics; results print
+//! as an aligned table and export to CSV. Used by the `cargo bench`
+//! targets (`rust/benches/*.rs`, `harness = false`).
+
+use crate::util::stats::{percentile, Summary};
+use crate::util::timer::{fmt_duration, Stopwatch};
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration seconds.
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Median iteration time in seconds.
+    pub fn median_secs(&self) -> f64 {
+        self.summary.p50
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (discarded).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Minimum total measured time; iterations repeat until reached.
+    pub min_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 10, min_secs: 0.05 }
+    }
+}
+
+/// The bench harness: collects named results.
+#[derive(Debug, Default)]
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    /// Harness with default config.
+    pub fn new() -> Self {
+        Self { config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    /// Harness with explicit config.
+    pub fn with_config(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Benchmark a closure; the closure's return value is black-boxed so
+    /// the optimizer cannot elide the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.config.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.config.iters);
+        let total = Stopwatch::start();
+        loop {
+            for _ in 0..self.config.iters {
+                let sw = Stopwatch::start();
+                std::hint::black_box(f());
+                samples.push(sw.secs());
+            }
+            if total.secs() >= self.config.min_secs {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples);
+        self.results.push(BenchResult { name: name.to_string(), samples, summary });
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render an aligned report table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let name_w = self.results.iter().map(|r| r.name.len()).max().unwrap_or(4).max(4);
+        out.push_str(&format!(
+            "{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>10}  {:>6}\n",
+            "name", "median", "mean", "p95", "max", "iters"
+        ));
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>10}  {:>6}\n",
+                r.name,
+                fmt_duration(r.summary.p50),
+                fmt_duration(r.summary.mean),
+                fmt_duration(percentile(&r.samples, 95.0)),
+                fmt_duration(r.summary.max),
+                r.samples.len(),
+            ));
+        }
+        out
+    }
+
+    /// Export results as CSV (`name,median_secs,mean_secs,p95_secs,iters`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,median_secs,mean_secs,p95_secs,iters\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.name,
+                r.summary.p50,
+                r.summary.mean,
+                percentile(&r.samples, 95.0),
+                r.samples.len()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples_and_reports() {
+        let mut b = Bencher::with_config(BenchConfig { warmup: 1, iters: 5, min_secs: 0.0 });
+        b.bench("noop", || 1 + 1);
+        b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(b.results().len(), 2);
+        assert!(b.results()[0].samples.len() >= 5);
+        let rep = b.report();
+        assert!(rep.contains("noop") && rep.contains("spin") && rep.contains("median"));
+        let csv = b.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn min_secs_forces_more_iterations() {
+        let mut b = Bencher::with_config(BenchConfig { warmup: 0, iters: 2, min_secs: 0.01 });
+        let r = b.bench("tiny", || 0);
+        assert!(r.samples.len() > 2, "should repeat until min time");
+    }
+
+    #[test]
+    fn median_is_positive_for_real_work() {
+        let mut b = Bencher::with_config(BenchConfig { warmup: 1, iters: 5, min_secs: 0.0 });
+        let r = b.bench("sleepish", || std::thread::sleep(std::time::Duration::from_micros(100)));
+        assert!(r.median_secs() >= 50e-6);
+    }
+}

@@ -1,0 +1,5 @@
+//! In-repo micro-benchmark harness (criterion substitute; see DESIGN.md
+//! §Substitutions).
+
+pub mod bencher;
+pub use bencher::{BenchConfig, Bencher};

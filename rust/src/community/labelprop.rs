@@ -1,0 +1,221 @@
+//! Label propagation community detection (Raghavan et al. 2007) over a
+//! CSR snapshot — the exact baseline for the streaming variant.
+//!
+//! Semi-synchronous: each sweep, every vertex adopts the most frequent
+//! label among its (in + out) neighbors, ties broken toward the smaller
+//! label so the algorithm is deterministic and convergent. The paper
+//! names “greedy clustering methods” and “maintaining online communities
+//! updated” as targets of the VeilGraph model (§3.1, §7); this module +
+//! [`crate::community::streaming`] realize that extension.
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::VertexIdx;
+
+/// Result of a label-propagation run.
+#[derive(Clone, Debug)]
+pub struct Communities {
+    /// Community label per dense vertex index (labels are vertex indices
+    /// of community "seeds"; stable across runs).
+    pub labels: Vec<u32>,
+    /// Sweeps executed.
+    pub sweeps: usize,
+    /// Labels changed in the final sweep (0 ⇔ converged).
+    pub last_changes: usize,
+}
+
+impl Communities {
+    /// Number of distinct communities.
+    pub fn num_communities(&self) -> usize {
+        let mut set: Vec<u32> = self.labels.clone();
+        set.sort_unstable();
+        set.dedup();
+        set.len()
+    }
+
+    /// Members of the community containing `v`.
+    pub fn community_of(&self, v: VertexIdx) -> Vec<VertexIdx> {
+        let l = self.labels[v as usize];
+        (0..self.labels.len() as u32).filter(|&u| self.labels[u as usize] == l).collect()
+    }
+}
+
+/// Most frequent neighbor label; ties toward the smaller label; `None`
+/// for isolated vertices.
+fn dominant_label(g: &DynamicGraph, v: VertexIdx, labels: &[u32]) -> Option<u32> {
+    let mut counts: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    for &w in g.out_neighbors(v).iter().chain(g.in_neighbors(v)) {
+        *counts.entry(labels[w as usize]).or_default() += 1;
+    }
+    counts
+        .into_iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0))) // max count, min label
+        .map(|(l, _)| l)
+}
+
+/// Run label propagation from singleton labels until stable (or
+/// `max_sweeps`).
+pub fn label_propagation(g: &DynamicGraph, max_sweeps: usize) -> Communities {
+    let n = g.num_vertices();
+    let labels: Vec<u32> = (0..n as u32).collect();
+    label_propagation_from(g, labels, max_sweeps)
+}
+
+/// Run label propagation from a warm-start labeling (the streaming
+/// variant seeds with the previous measurement point's labels).
+pub fn label_propagation_from(
+    g: &DynamicGraph,
+    mut labels: Vec<u32>,
+    max_sweeps: usize,
+) -> Communities {
+    let n = g.num_vertices();
+    assert_eq!(labels.len(), n, "label vector length mismatch");
+    let mut sweeps = 0;
+    let mut last_changes = 0;
+    for _ in 0..max_sweeps {
+        sweeps += 1;
+        last_changes = 0;
+        // deterministic order; semi-synchronous (reads see this sweep's
+        // earlier writes, which accelerates convergence and keeps ties
+        // stable)
+        for v in 0..n as u32 {
+            if let Some(l) = dominant_label(g, v, &labels) {
+                if labels[v as usize] != l {
+                    labels[v as usize] = l;
+                    last_changes += 1;
+                }
+            }
+        }
+        if last_changes == 0 {
+            break;
+        }
+    }
+    Communities { labels, sweeps, last_changes }
+}
+
+/// Restricted sweep: only vertices in `active` may change labels; the
+/// rest are frozen (the summarized/streaming update step).
+pub fn label_propagation_restricted(
+    g: &DynamicGraph,
+    mut labels: Vec<u32>,
+    active: &[VertexIdx],
+    max_sweeps: usize,
+) -> Communities {
+    let mut sweeps = 0;
+    let mut last_changes = 0;
+    for _ in 0..max_sweeps {
+        sweeps += 1;
+        last_changes = 0;
+        for &v in active {
+            if let Some(l) = dominant_label(g, v, &labels) {
+                if labels[v as usize] != l {
+                    labels[v as usize] = l;
+                    last_changes += 1;
+                }
+            }
+        }
+        if last_changes == 0 {
+            break;
+        }
+    }
+    Communities { labels, sweeps, last_changes }
+}
+
+/// Agreement between two labelings: fraction of vertex *pairs* (sampled)
+/// on which they agree about co-membership — a cheap Rand-index estimate
+/// used to score streaming communities against the exact baseline.
+pub fn pair_agreement(a: &[u32], b: &[u32], samples: usize, seed: u64) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut rng = crate::util::rng::Xoshiro256pp::new(seed);
+    let mut agree = 0usize;
+    for _ in 0..samples {
+        let i = rng.range(0, n);
+        let j = rng.range(0, n);
+        if i == j {
+            agree += 1;
+            continue;
+        }
+        let same_a = a[i] == a[j];
+        let same_b = b[i] == b[j];
+        if same_a == same_b {
+            agree += 1;
+        }
+    }
+    agree as f64 / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two triangles joined by one weak edge.
+    fn two_triangles() -> DynamicGraph {
+        DynamicGraph::from_edges(vec![
+            (0, 1), (1, 0), (1, 2), (2, 1), (2, 0), (0, 2), // triangle A
+            (3, 4), (4, 3), (4, 5), (5, 4), (5, 3), (3, 5), // triangle B
+            (2, 3), // weak bridge
+        ])
+        .0
+    }
+
+    #[test]
+    fn finds_the_two_triangles() {
+        let g = two_triangles();
+        let c = label_propagation(&g, 50);
+        assert_eq!(c.last_changes, 0, "must converge");
+        assert_eq!(c.labels[0], c.labels[1]);
+        assert_eq!(c.labels[1], c.labels[2]);
+        assert_eq!(c.labels[3], c.labels[4]);
+        assert_eq!(c.labels[4], c.labels[5]);
+        assert_ne!(c.labels[0], c.labels[3], "triangles must stay separate");
+        assert_eq!(c.num_communities(), 2);
+        assert_eq!(c.community_of(0).len(), 3);
+    }
+
+    #[test]
+    fn is_deterministic() {
+        let g = two_triangles();
+        assert_eq!(label_propagation(&g, 50).labels, label_propagation(&g, 50).labels);
+    }
+
+    #[test]
+    fn warm_start_at_fixed_point_is_noop() {
+        let g = two_triangles();
+        let c = label_propagation(&g, 50);
+        let c2 = label_propagation_from(&g, c.labels.clone(), 50);
+        assert_eq!(c2.sweeps, 1);
+        assert_eq!(c2.labels, c.labels);
+    }
+
+    #[test]
+    fn restricted_sweep_freezes_inactive() {
+        let g = two_triangles();
+        let init: Vec<u32> = (0..6).collect();
+        // only vertex 1 may move: it adopts the min label among {0, 2} → 0
+        let c = label_propagation_restricted(&g, init.clone(), &[1], 10);
+        assert_eq!(c.labels[1], 0);
+        for v in [0usize, 2, 3, 4, 5] {
+            assert_eq!(c.labels[v], init[v], "frozen vertex {v} moved");
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_keep_their_label() {
+        let mut g = two_triangles();
+        g.add_vertex(99);
+        let c = label_propagation(&g, 50);
+        assert_eq!(c.labels[6], 6, "isolated vertex keeps singleton label");
+    }
+
+    #[test]
+    fn pair_agreement_bounds() {
+        let a = vec![0u32, 0, 1, 1];
+        assert_eq!(pair_agreement(&a, &a, 500, 1), 1.0);
+        let b = vec![0u32, 1, 0, 1];
+        let v = pair_agreement(&a, &b, 2000, 1);
+        assert!(v < 1.0 && v > 0.0);
+    }
+}

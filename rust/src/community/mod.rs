@@ -1,0 +1,6 @@
+//! Community detection on the VeilGraph model (paper §7 future work):
+//! exact label propagation plus the streaming/summarized variant that
+//! restricts recomputation to the hot-vertex set.
+
+pub mod labelprop;
+pub mod streaming;

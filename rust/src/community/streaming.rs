@@ -1,0 +1,267 @@
+//! Streaming communities: the VeilGraph model applied to label
+//! propagation (paper §7: “extend and reproduce GraphBolt's techniques to
+//! other problems such as maintaining online communities updated”).
+//!
+//! Reuses the exact same machinery as the PageRank engine — the
+//! pending-update buffer with `d_{t-1}` capture and hot-vertex selection
+//! (Eqs. 2–5) — but the summarized computation is a *restricted* label
+//! propagation: only hot vertices may change labels, the rest are frozen
+//! (the big-vertex analogue: frozen vertices contribute their labels but
+//! are never recomputed).
+
+use std::collections::HashMap;
+
+use crate::coordinator::udf::Action;
+use crate::error::{Error, Result};
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::VertexId;
+use crate::community::labelprop::{
+    label_propagation, label_propagation_from, label_propagation_restricted, Communities,
+};
+use crate::stream::buffer::UpdateBuffer;
+use crate::stream::event::EdgeOp;
+use crate::summary::hot::{compute_hot_set, HotSetInputs};
+use crate::summary::params::SummaryParams;
+use crate::util::timer::Stopwatch;
+
+/// A community query result.
+#[derive(Clone, Debug)]
+pub struct CommunityResult {
+    pub query_id: u64,
+    pub action: Action,
+    /// Label per dense index.
+    pub labels: Vec<u32>,
+    /// |K| recomputed this query (0 for exact/repeat).
+    pub hot_vertices: usize,
+    pub elapsed_secs: f64,
+    pub sweeps: usize,
+}
+
+/// Streaming community engine (VeilGraph model, label-propagation
+/// algorithm).
+pub struct StreamingCommunities {
+    graph: DynamicGraph,
+    buffer: UpdateBuffer,
+    params: SummaryParams,
+    max_sweeps: usize,
+    labels: Vec<u32>,
+    /// Degree-change scores stand in for ranks in Eq. 5: we use the
+    /// previous labels' community sizes as the “score” signal so bigger
+    /// communities expand further (documented deviation; PageRank uses
+    /// ranks).
+    community_size: Vec<f64>,
+    carry_prev_degree: HashMap<VertexId, usize>,
+    carry_new_vertices: Vec<VertexId>,
+    query_count: u64,
+}
+
+impl StreamingCommunities {
+    /// Build over an initial edge list; runs the initial exact label
+    /// propagation (measurement point 0).
+    pub fn new(
+        edges: impl IntoIterator<Item = (VertexId, VertexId)>,
+        params: SummaryParams,
+        max_sweeps: usize,
+    ) -> Result<Self> {
+        let (graph, _) = DynamicGraph::from_edges(edges);
+        let initial = label_propagation(&graph, max_sweeps);
+        let mut s = Self {
+            graph,
+            buffer: UpdateBuffer::new(),
+            params,
+            max_sweeps,
+            labels: initial.labels,
+            community_size: Vec::new(),
+            carry_prev_degree: HashMap::new(),
+            carry_new_vertices: Vec::new(),
+            query_count: 0,
+        };
+        s.refresh_scores();
+        Ok(s)
+    }
+
+    fn refresh_scores(&mut self) {
+        let n = self.graph.num_vertices();
+        let mut counts: HashMap<u32, f64> = HashMap::new();
+        for &l in &self.labels {
+            *counts.entry(l).or_default() += 1.0;
+        }
+        // Relative community size ∈ (0, 1]: keeps Eq. 5's radius in the
+        // same O(1)-score regime the unnormalized PageRank calibrates for.
+        self.community_size = (0..n)
+            .map(|v| counts.get(&self.labels[v]).copied().unwrap_or(1.0) / n.max(1) as f64)
+            .collect();
+    }
+
+    /// Ingest one operation.
+    pub fn ingest(&mut self, op: EdgeOp) {
+        self.buffer.register(op);
+    }
+
+    /// The current graph.
+    pub fn graph(&self) -> &DynamicGraph {
+        &self.graph
+    }
+
+    /// Current labels.
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Serve a query with the given action (the caller's UDF decides —
+    /// kept explicit here to mirror Alg. 1 without duplicating the
+    /// PageRank engine's policy plumbing).
+    pub fn query(&mut self, action: Action) -> Result<CommunityResult> {
+        let sw = Stopwatch::start();
+        self.query_count += 1;
+        if !self.buffer.is_empty() {
+            let applied = self.buffer.apply(&mut self.graph)?;
+            for (id, d) in applied.prev_degree {
+                if !self.carry_prev_degree.contains_key(&id)
+                    && !self.carry_new_vertices.contains(&id)
+                {
+                    self.carry_prev_degree.insert(id, d);
+                }
+            }
+            for id in applied.new_vertices {
+                if !self.carry_new_vertices.contains(&id) {
+                    self.carry_new_vertices.push(id);
+                }
+            }
+        }
+        // new vertices start as their own singleton community
+        let n = self.graph.num_vertices();
+        if self.labels.len() < n {
+            for v in self.labels.len()..n {
+                self.labels.push(v as u32);
+            }
+            self.refresh_scores();
+        }
+        let result = match action {
+            Action::RepeatLast => Communities {
+                labels: self.labels.clone(),
+                sweeps: 0,
+                last_changes: 0,
+            },
+            Action::ComputeExact => {
+                let c = label_propagation_from(&self.graph, self.labels.clone(), self.max_sweeps);
+                self.carry_prev_degree.clear();
+                self.carry_new_vertices.clear();
+                c
+            }
+            Action::ComputeApproximate => {
+                let inputs = HotSetInputs {
+                    graph: &self.graph,
+                    prev_degree: &self.carry_prev_degree,
+                    new_vertices: &self.carry_new_vertices,
+                    prev_ranks: &self.community_size,
+                };
+                let hot = compute_hot_set(&inputs, &self.params);
+                let active = hot.all();
+                self.carry_prev_degree.clear();
+                self.carry_new_vertices.clear();
+                let mut c = label_propagation_restricted(
+                    &self.graph,
+                    self.labels.clone(),
+                    &active,
+                    self.max_sweeps,
+                );
+                c.sweeps = c.sweeps.min(self.max_sweeps);
+                if c.labels.len() != n {
+                    return Err(Error::Engine("label vector desync".into()));
+                }
+                self.labels = c.labels.clone();
+                self.refresh_scores();
+                return Ok(CommunityResult {
+                    query_id: self.query_count,
+                    action,
+                    labels: self.labels.clone(),
+                    hot_vertices: active.len(),
+                    elapsed_secs: sw.secs(),
+                    sweeps: c.sweeps,
+                });
+            }
+        };
+        self.labels = result.labels.clone();
+        self.refresh_scores();
+        Ok(CommunityResult {
+            query_id: self.query_count,
+            action,
+            labels: result.labels,
+            hot_vertices: 0,
+            elapsed_secs: sw.secs(),
+            sweeps: result.sweeps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::community::labelprop::pair_agreement;
+    use crate::graph::generate;
+
+    fn params() -> SummaryParams {
+        SummaryParams::new(0.1, 1, 0.1)
+    }
+
+    #[test]
+    fn initial_communities_match_exact() {
+        let edges = generate::ego_network(300, 40, 0.4, 4, 3);
+        let sc = StreamingCommunities::new(edges.iter().copied(), params(), 30).unwrap();
+        let (g, _) = DynamicGraph::from_edges(edges.iter().copied());
+        let exact = label_propagation(&g, 30);
+        assert_eq!(sc.labels(), &exact.labels[..]);
+    }
+
+    #[test]
+    fn approximate_updates_track_exact_recompute() {
+        let edges = generate::ego_network(400, 50, 0.4, 4, 7);
+        let mut stream_engine =
+            StreamingCommunities::new(edges.iter().copied(), params(), 30).unwrap();
+        let mut exact_engine =
+            StreamingCommunities::new(edges.iter().copied(), params(), 30).unwrap();
+        for batch in 0..5u64 {
+            for i in 0..20u64 {
+                let op = EdgeOp::add(1000 + batch * 20 + i, i % 50);
+                stream_engine.ingest(op);
+                exact_engine.ingest(op);
+            }
+            let a = stream_engine.query(Action::ComputeApproximate).unwrap();
+            let e = exact_engine.query(Action::ComputeExact).unwrap();
+            assert!(a.hot_vertices > 0, "updates must produce hot vertices");
+            let agree = pair_agreement(&a.labels, &e.labels, 20_000, batch);
+            assert!(agree > 0.9, "batch {batch}: agreement {agree}");
+            // the approximate engine must not have touched most labels
+            assert!(a.hot_vertices < stream_engine.graph().num_vertices() / 2);
+        }
+    }
+
+    #[test]
+    fn repeat_last_returns_cached_labels() {
+        let edges = generate::ego_network(200, 30, 0.4, 3, 9);
+        let mut sc = StreamingCommunities::new(edges.iter().copied(), params(), 30).unwrap();
+        let before = sc.labels().to_vec();
+        sc.ingest(EdgeOp::add(500, 0));
+        let r = sc.query(Action::RepeatLast).unwrap();
+        assert_eq!(r.sweeps, 0);
+        // new vertex got a singleton label appended; old labels unchanged
+        assert_eq!(&r.labels[..before.len()], &before[..]);
+        assert_eq!(r.labels.len(), before.len() + 1);
+    }
+
+    #[test]
+    fn new_vertices_join_communities_via_approximate() {
+        let edges = generate::ego_network(200, 30, 0.5, 3, 11);
+        let mut sc = StreamingCommunities::new(edges.iter().copied(), params(), 30).unwrap();
+        // attach a new vertex firmly to the core
+        for t in 0..5u64 {
+            sc.ingest(EdgeOp::add(999, t));
+            sc.ingest(EdgeOp::add(t, 999));
+        }
+        let r = sc.query(Action::ComputeApproximate).unwrap();
+        let idx = sc.graph().index(999).unwrap() as usize;
+        let core_label = r.labels[0];
+        assert_eq!(r.labels[idx], core_label, "new vertex must join the core community");
+    }
+}

@@ -1,0 +1,209 @@
+//! Adaptive serving policy — the paper's §7 research direction:
+//! “approximation strategies based on the statistical records, from a
+//! set of manually implemented policies to automations based on machine
+//! learning.”
+//!
+//! [`AdaptivePolicy`] learns online from the engine's own statistical
+//! records, with no labels required:
+//!
+//! * It tracks an **error budget**: a proxy for accumulated approximation
+//!   error, grown every approximate/repeated query proportionally to the
+//!   touched-vertex ratio (update magnitude) and reset by exact queries.
+//!   When the budget crosses `error_budget`, it forces an exact refresh —
+//!   an automated version of “performing an exact computation if too
+//!   much entropy has accumulated” (§7).
+//! * It adapts the **repeat threshold** by stochastic approximation
+//!   (Robbins–Monro): the threshold moves to steer the observed fraction
+//!   of repeat-served queries toward `target_repeat_rate`, so the knob
+//!   self-tunes to the stream instead of needing per-dataset hand
+//!   calibration.
+
+use crate::coordinator::udf::{Action, ExecStats, QueryContext, UdfSuite};
+
+/// Online self-tuning policy. See module docs.
+#[derive(Clone, Debug)]
+pub struct AdaptivePolicy {
+    /// Error-proxy ceiling before an exact refresh is forced.
+    pub error_budget: f64,
+    /// Desired fraction of queries served from cache.
+    pub target_repeat_rate: f64,
+    /// Robbins–Monro step size for the repeat threshold.
+    pub learning_rate: f64,
+    // --- state ---
+    accumulated_error: f64,
+    repeat_threshold: f64,
+    queries: u64,
+    repeats: u64,
+    exacts_forced: u64,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        Self::new(0.5, 0.2)
+    }
+}
+
+impl AdaptivePolicy {
+    /// `error_budget`: sum of touched ratios tolerated before an exact
+    /// refresh; `target_repeat_rate`: fraction of queries to serve from
+    /// cache.
+    pub fn new(error_budget: f64, target_repeat_rate: f64) -> Self {
+        assert!(error_budget > 0.0);
+        assert!((0.0..1.0).contains(&target_repeat_rate));
+        Self {
+            error_budget,
+            target_repeat_rate,
+            learning_rate: 0.05,
+            accumulated_error: 0.0,
+            repeat_threshold: 0.001,
+            queries: 0,
+            repeats: 0,
+            exacts_forced: 0,
+        }
+    }
+
+    /// Observed repeat rate so far.
+    pub fn repeat_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.repeats as f64 / self.queries as f64
+        }
+    }
+
+    /// Current (learned) repeat threshold on the touched ratio.
+    pub fn repeat_threshold(&self) -> f64 {
+        self.repeat_threshold
+    }
+
+    /// Exact refreshes the error budget has forced.
+    pub fn exacts_forced(&self) -> u64 {
+        self.exacts_forced
+    }
+
+    /// Current error proxy.
+    pub fn accumulated_error(&self) -> f64 {
+        self.accumulated_error
+    }
+}
+
+impl UdfSuite for AdaptivePolicy {
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        self.queries += 1;
+        let magnitude = ctx.stats.touched_ratio();
+        // 1) budget check: too much approximation debt → exact refresh
+        if self.accumulated_error + magnitude > self.error_budget {
+            self.exacts_forced += 1;
+            return Action::ComputeExact;
+        }
+        // 2) threshold check with online adaptation
+        let action = if magnitude < self.repeat_threshold {
+            self.repeats += 1;
+            Action::RepeatLast
+        } else {
+            Action::ComputeApproximate
+        };
+        // Robbins–Monro: move the threshold toward the target repeat rate.
+        let signal = if action == Action::RepeatLast { 1.0 } else { 0.0 };
+        self.repeat_threshold +=
+            self.learning_rate * (self.target_repeat_rate - signal) * self.repeat_threshold.max(1e-6);
+        self.repeat_threshold = self.repeat_threshold.clamp(0.0, 0.5);
+        action
+    }
+
+    fn on_query_result(&mut self, ctx: &QueryContext, action: Action, _stats: &ExecStats) {
+        // Update the error proxy from what actually happened.
+        match action {
+            Action::ComputeExact => self.accumulated_error = 0.0,
+            Action::ComputeApproximate => {
+                // approximation leaves residual error ∝ what it skipped
+                self.accumulated_error += 0.1 * ctx.stats.touched_ratio();
+            }
+            Action::RepeatLast => {
+                // serving stale results accrues the full update magnitude
+                self.accumulated_error += ctx.stats.touched_ratio();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::buffer::UpdateStatistics;
+
+    fn ctx(touched: usize, total: usize) -> QueryContext {
+        QueryContext {
+            query_id: 1,
+            stats: UpdateStatistics {
+                touched_vertices: touched,
+                total_vertices: total,
+                ..Default::default()
+            },
+            num_vertices: total,
+            num_edges: total * 3,
+            queries_since_exact: 0,
+        }
+    }
+
+    fn drive(p: &mut AdaptivePolicy, touched: usize, total: usize) -> Action {
+        let c = ctx(touched, total);
+        let a = p.on_query(&c);
+        let stats = ExecStats {
+            elapsed_secs: 0.001,
+            backend: None,
+            summary_vertices: 0,
+            summary_edges: 0,
+            iterations: 0,
+        };
+        p.on_query_result(&c, a, &stats);
+        a
+    }
+
+    #[test]
+    fn budget_forces_exact_refresh() {
+        let mut p = AdaptivePolicy::new(0.3, 0.1);
+        let mut saw_exact = false;
+        for _ in 0..60 {
+            if drive(&mut p, 100, 1000) == Action::ComputeExact {
+                saw_exact = true;
+                assert_eq!(p.accumulated_error(), 0.0, "exact resets the budget");
+                break;
+            }
+        }
+        assert!(saw_exact, "10% updates must exhaust a 0.3 budget within 60 queries");
+        assert!(p.exacts_forced() >= 1);
+    }
+
+    #[test]
+    fn threshold_adapts_toward_target_repeat_rate() {
+        let mut p = AdaptivePolicy::new(1e18, 0.5); // budget effectively off
+        // constant small updates (ratio 0.002)
+        for _ in 0..400 {
+            drive(&mut p, 2, 1000);
+        }
+        let rate = p.repeat_rate();
+        assert!(
+            (rate - 0.5).abs() < 0.2,
+            "repeat rate should approach target 0.5, got {rate} (threshold {})",
+            p.repeat_threshold()
+        );
+    }
+
+    #[test]
+    fn tiny_updates_get_repeated_big_ones_do_not() {
+        let mut p = AdaptivePolicy::new(1e18, 0.2);
+        assert_eq!(drive(&mut p, 0, 1000), Action::RepeatLast);
+        assert_eq!(drive(&mut p, 500, 1000), Action::ComputeApproximate);
+    }
+
+    #[test]
+    fn threshold_stays_in_bounds() {
+        let mut p = AdaptivePolicy::new(1e18, 0.9);
+        for _ in 0..2000 {
+            drive(&mut p, 1, 10_000);
+        }
+        assert!(p.repeat_threshold() <= 0.5);
+        assert!(p.repeat_threshold() >= 0.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Engine checkpointing: save/restore of the graph + rank state in a
+//! compact binary format, so a long-lived VeilGraph job can restart
+//! without replaying its whole stream (operational requirement for the
+//! serving deployment of Fig. 2; the paper's `OnStart`/`OnStop` UDFs are
+//! the natural hook points).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "VGCP" | u32 version | u64 n_vertices | u64 n_edges | u64 query_count
+//! n_vertices × u64 vertex id          (dense order)
+//! n_edges    × (u32 src_idx, u32 dst_idx)
+//! n_vertices × f64 rank
+//! u64 fnv1a-64 checksum of everything above
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::dynamic::DynamicGraph;
+
+const MAGIC: &[u8; 4] = b"VGCP";
+const VERSION: u32 = 1;
+
+/// A deserialized checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub graph: DynamicGraph,
+    pub ranks: Vec<f64>,
+    pub query_count: u64,
+}
+
+/// FNV-1a 64-bit running hash.
+#[derive(Clone, Copy)]
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+}
+
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: Fnv,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.hash.update(bytes);
+        self.inner.write_all(bytes)?;
+        Ok(())
+    }
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+    fn f64(&mut self, v: f64) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+}
+
+struct HashingReader<R: Read> {
+    inner: R,
+    hash: Fnv,
+}
+
+impl<R: Read> HashingReader<R> {
+    fn take(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner.read_exact(buf)?;
+        self.hash.update(buf);
+        Ok(())
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.take(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.take(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.take(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+}
+
+/// Serialize graph + ranks + query counter to `path`.
+pub fn save(
+    path: impl AsRef<Path>,
+    graph: &DynamicGraph,
+    ranks: &[f64],
+    query_count: u64,
+) -> Result<()> {
+    if ranks.len() != graph.num_vertices() {
+        return Err(Error::Engine(format!(
+            "checkpoint: ranks {} != vertices {}",
+            ranks.len(),
+            graph.num_vertices()
+        )));
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = HashingWriter { inner: BufWriter::new(f), hash: Fnv::new() };
+    w.put(MAGIC)?;
+    w.u32(VERSION)?;
+    w.u64(graph.num_vertices() as u64)?;
+    w.u64(graph.num_edges() as u64)?;
+    w.u64(query_count)?;
+    for &id in graph.ids() {
+        w.u64(id)?;
+    }
+    for (s, d) in graph.edges() {
+        w.u32(s)?;
+        w.u32(d)?;
+    }
+    for &r in ranks {
+        w.f64(r)?;
+    }
+    let digest = w.hash.0;
+    w.inner.write_all(&digest.to_le_bytes())?;
+    w.inner.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint, verifying magic/version/checksum.
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let f = std::fs::File::open(path)?;
+    let mut r = HashingReader { inner: BufReader::new(f), hash: Fnv::new() };
+    let mut magic = [0u8; 4];
+    r.take(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Parse("not a VeilGraph checkpoint".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::Parse(format!("unsupported checkpoint version {version}")));
+    }
+    let n = r.u64()? as usize;
+    let m = r.u64()? as usize;
+    let query_count = r.u64()?;
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(r.u64()?);
+    }
+    let mut graph = DynamicGraph::new();
+    for &id in &ids {
+        graph.add_vertex(id);
+    }
+    for _ in 0..m {
+        let s = r.u32()? as usize;
+        let d = r.u32()? as usize;
+        if s >= n || d >= n {
+            return Err(Error::Parse("checkpoint edge index out of range".into()));
+        }
+        graph
+            .add_edge(ids[s], ids[d])
+            .map_err(|e| Error::Parse(format!("corrupt checkpoint: {e}")))?;
+    }
+    let mut ranks = Vec::with_capacity(n);
+    for _ in 0..n {
+        ranks.push(r.f64()?);
+    }
+    let expect = r.hash.0;
+    let mut tail = [0u8; 8];
+    r.inner.read_exact(&mut tail)?;
+    if u64::from_le_bytes(tail) != expect {
+        return Err(Error::Parse("checkpoint checksum mismatch".into()));
+    }
+    Ok(Checkpoint { graph, ranks, query_count })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("vg-ckpt-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let edges = generate::barabasi_albert(200, 3, 0.5, 3);
+        let (g, _) = DynamicGraph::from_edges(edges);
+        let ranks: Vec<f64> = (0..g.num_vertices()).map(|i| i as f64 * 0.01).collect();
+        let p = tmp("roundtrip");
+        save(&p, &g, &ranks, 42).unwrap();
+        let c = load(&p).unwrap();
+        assert_eq!(c.query_count, 42);
+        assert_eq!(c.graph.num_vertices(), g.num_vertices());
+        assert_eq!(c.graph.num_edges(), g.num_edges());
+        assert_eq!(c.ranks, ranks);
+        assert_eq!(c.graph.ids(), g.ids());
+        for (s, d) in g.edges() {
+            assert!(c.graph.has_edge(g.id(s), g.id(d)));
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 3)]);
+        let p = tmp("corrupt");
+        save(&p, &g, &[0.1, 0.2, 0.3], 1).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err(), "flipped byte must fail checksum or parse");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOPE....xxxxxxxxxxxx").unwrap();
+        let e = load(&p).unwrap_err();
+        assert!(e.to_string().contains("not a VeilGraph checkpoint"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rank_length_mismatch_rejected_on_save() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let p = tmp("mismatch");
+        assert!(save(&p, &g, &[0.1], 0).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

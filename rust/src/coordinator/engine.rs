@@ -1,0 +1,672 @@
+//! The VeilGraph engine: Alg. 1's execution structure.
+//!
+//! ```text
+//! OnStart
+//! repeat
+//!   msg ← TakeMessage(stream)
+//!   if msg is Add/Remove        → Register*(msg)
+//!   else if msg is Query:
+//!     update? ← BeforeUpdates(graphUpdates, statistics)
+//!     if update? → ApplyUpdates
+//!     response ← OnQuery(…)
+//!     newRanks ← RepeatLast | ComputeApproximate | ComputeExact
+//!     OutputResult(newRanks)
+//!     OnQueryResult(…)
+//! until stopped
+//! OnStop
+//! ```
+//!
+//! The engine owns the graph, the pending-update buffer, the current rank
+//! vector, the (r, n, Δ) parameters and the summarized executor (XLA or
+//! sparse). One engine = one logical VeilGraph job; the server
+//! ([`crate::coordinator::server`]) wraps it behind a queue for
+//! concurrent producers.
+
+use std::collections::HashMap;
+
+use crate::coordinator::udf::{Action, DefaultSuite, ExecStats, QueryContext, UdfSuite};
+use crate::error::{Error, Result};
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::VertexId;
+use crate::metrics::ranking::top_k_ids;
+use crate::metrics::registry::MetricsRegistry;
+use crate::pagerank::power::{PageRank, PageRankConfig};
+use crate::pagerank::summarized::merge_ranks;
+use crate::runtime::executor::SummarizedExecutor;
+use crate::stream::buffer::UpdateBuffer;
+use crate::stream::event::{EdgeOp, UpdateEvent};
+use crate::summary::bigvertex::SummaryGraph;
+use crate::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
+use crate::summary::params::SummaryParams;
+use crate::util::timer::Stopwatch;
+
+/// A served query: the ranking plus execution metadata.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// Measurement point `t` (1-based; 0 is the initial computation).
+    pub query_id: u64,
+    /// How the query was served.
+    pub action: Action,
+    /// Vertex ids in dense order, aligned with `ranks`.
+    pub ids: Vec<VertexId>,
+    /// PageRank scores (full graph).
+    pub ranks: Vec<f64>,
+    /// Execution statistics.
+    pub exec: ExecStats,
+}
+
+impl QueryResult {
+    /// Top-k `(vertex, score)` pairs, descending.
+    pub fn top(&self, k: usize) -> Vec<(VertexId, f64)> {
+        let ids = top_k_ids(&self.ids, &self.ranks, k);
+        let pos: HashMap<VertexId, usize> =
+            self.ids.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+        ids.into_iter().map(|v| (v, self.ranks[pos[&v]])).collect()
+    }
+
+    /// Top-k ids only (for RBO comparisons).
+    pub fn top_ids(&self, k: usize) -> Vec<VertexId> {
+        top_k_ids(&self.ids, &self.ranks, k)
+    }
+}
+
+/// Builder for [`Engine`].
+pub struct EngineBuilder {
+    params: SummaryParams,
+    pr_config: PageRankConfig,
+    artifacts_dir: Option<std::path::PathBuf>,
+    warmup: bool,
+    max_xla_k: Option<usize>,
+    udf: Box<dyn UdfSuite>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    /// Defaults: paper mid-grid parameters (r=0.2, n=1, Δ=0.1), β=0.85,
+    /// sparse executor, `DefaultSuite` UDFs.
+    pub fn new() -> Self {
+        Self {
+            params: SummaryParams::new(0.2, 1, 0.1),
+            pr_config: PageRankConfig::default(),
+            artifacts_dir: None,
+            warmup: false,
+            max_xla_k: None,
+            udf: Box::new(DefaultSuite),
+        }
+    }
+
+    /// Set (r, n, Δ).
+    pub fn params(mut self, p: SummaryParams) -> Self {
+        self.params = p;
+        self
+    }
+
+    /// Set the PageRank configuration.
+    pub fn pagerank(mut self, c: PageRankConfig) -> Self {
+        self.pr_config = c;
+        self
+    }
+
+    /// Attach the XLA runtime with artifacts from `dir`.
+    pub fn artifacts_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Compile all artifact tiers at build time (keeps compilation off
+    /// the query path).
+    pub fn warmup(mut self, yes: bool) -> Self {
+        self.warmup = yes;
+        self
+    }
+
+    /// Route summaries with |K| ≤ `k` to the XLA dense path (see
+    /// [`crate::runtime::executor::DEFAULT_MAX_XLA_K`] for the cost
+    /// rationale).
+    pub fn max_xla_k(mut self, k: usize) -> Self {
+        self.max_xla_k = Some(k);
+        self
+    }
+
+    /// Install a custom UDF suite.
+    pub fn udf(mut self, udf: Box<dyn UdfSuite>) -> Self {
+        self.udf = udf;
+        self
+    }
+
+    /// Build the engine over an initial edge list and run the initial
+    /// complete PageRank (the paper's setup: “each execution will begin
+    /// with a complete PageRank execution”).
+    pub fn build_from_edges(
+        self,
+        edges: impl IntoIterator<Item = (VertexId, VertexId)>,
+    ) -> Result<Engine> {
+        let (graph, _dups) = DynamicGraph::from_edges(edges);
+        self.build_from_graph(graph)
+    }
+
+    /// Resume from a checkpoint written by [`Engine::save_checkpoint`]:
+    /// restores the graph, the rank vector and the query counter without
+    /// re-running the initial exact computation.
+    pub fn build_from_checkpoint(mut self, path: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let ckpt = crate::coordinator::checkpoint::load(path)?;
+        let mut executor = match &self.artifacts_dir {
+            Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
+            None => SummarizedExecutor::sparse_only(),
+        };
+        if let Some(k) = self.max_xla_k {
+            executor.set_max_xla_k(k);
+        }
+        if self.warmup {
+            executor.warmup()?;
+        }
+        self.udf.on_start();
+        Ok(Engine {
+            graph: ckpt.graph,
+            buffer: UpdateBuffer::new(),
+            params: self.params,
+            pr_config: self.pr_config,
+            executor,
+            udf: self.udf,
+            metrics: MetricsRegistry::new(),
+            ranks: ckpt.ranks,
+            carry_prev_degree: HashMap::new(),
+            carry_new_vertices: Vec::new(),
+            query_count: ckpt.query_count,
+            queries_since_exact: 0,
+            stopped: false,
+        })
+    }
+
+    /// Build from an existing graph.
+    pub fn build_from_graph(mut self, graph: DynamicGraph) -> Result<Engine> {
+        let mut executor = match &self.artifacts_dir {
+            Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
+            None => SummarizedExecutor::sparse_only(),
+        };
+        if let Some(k) = self.max_xla_k {
+            executor.set_max_xla_k(k);
+        }
+        if self.warmup {
+            executor.warmup()?;
+        }
+        self.udf.on_start();
+        let mut engine = Engine {
+            graph,
+            buffer: UpdateBuffer::new(),
+            params: self.params,
+            pr_config: self.pr_config,
+            executor,
+            udf: self.udf,
+            metrics: MetricsRegistry::new(),
+            ranks: Vec::new(),
+            carry_prev_degree: HashMap::new(),
+            carry_new_vertices: Vec::new(),
+            query_count: 0,
+            queries_since_exact: 0,
+            stopped: false,
+        };
+        // Initial complete execution (measurement point 0).
+        let (_, secs) = crate::util::timer::timed(|| engine.compute_exact());
+        engine.metrics.time("initial_exact_secs", secs);
+        Ok(engine)
+    }
+}
+
+/// The VeilGraph coordinator engine.
+pub struct Engine {
+    graph: DynamicGraph,
+    buffer: UpdateBuffer,
+    params: SummaryParams,
+    pr_config: PageRankConfig,
+    executor: SummarizedExecutor,
+    udf: Box<dyn UdfSuite>,
+    metrics: MetricsRegistry,
+    /// Current full rank vector (dense index order).
+    ranks: Vec<f64>,
+    /// `d_{t-1}` accumulated across applies since the last recompute —
+    /// if a query repeats the cached answer after applying updates, the
+    /// degree baseline must survive to the next measurement point.
+    carry_prev_degree: HashMap<VertexId, usize>,
+    carry_new_vertices: Vec<VertexId>,
+    query_count: u64,
+    queries_since_exact: u64,
+    stopped: bool,
+}
+
+impl Engine {
+    /// Ingest one graph operation (Alg. 1 lines 4–5).
+    pub fn ingest(&mut self, op: EdgeOp) {
+        self.buffer.register(op);
+        self.metrics.inc("ops_ingested", 1);
+    }
+
+    /// Ingest a batch.
+    pub fn ingest_many(&mut self, ops: impl IntoIterator<Item = EdgeOp>) {
+        for op in ops {
+            self.ingest(op);
+        }
+    }
+
+    /// Serve one query (Alg. 1 lines 6–20).
+    pub fn query(&mut self) -> Result<QueryResult> {
+        if self.stopped {
+            return Err(Error::Engine("engine is stopped".into()));
+        }
+        let sw = Stopwatch::start();
+        self.query_count += 1;
+        let query_id = self.query_count;
+        let stats = self.buffer.statistics(&self.graph);
+
+        // BeforeUpdates → ApplyUpdates
+        let update = self.udf.before_updates(self.buffer.pending(), &stats);
+        if update && !self.buffer.is_empty() {
+            let applied = self.buffer.apply(&mut self.graph)?;
+            // Keep the EARLIEST previous degree per vertex across applies.
+            for (id, d) in applied.prev_degree {
+                if !self.carry_prev_degree.contains_key(&id)
+                    && !self.carry_new_vertices.contains(&id)
+                {
+                    self.carry_prev_degree.insert(id, d);
+                }
+            }
+            for id in applied.new_vertices {
+                if !self.carry_new_vertices.contains(&id) {
+                    self.carry_new_vertices.push(id);
+                }
+            }
+            self.metrics.inc("applies", 1);
+        }
+
+        let ctx = QueryContext {
+            query_id,
+            stats,
+            num_vertices: self.graph.num_vertices(),
+            num_edges: self.graph.num_edges(),
+            queries_since_exact: self.queries_since_exact,
+        };
+
+        // OnQuery → dispatch
+        let action = self.udf.on_query(&ctx);
+        let mut exec = ExecStats {
+            elapsed_secs: 0.0,
+            backend: None,
+            summary_vertices: 0,
+            summary_edges: 0,
+            iterations: 0,
+        };
+        match action {
+            Action::RepeatLast => {
+                self.extend_ranks_for_new_vertices();
+                self.queries_since_exact += 1;
+            }
+            Action::ComputeApproximate => {
+                let (summary, hot) = self.build_summary();
+                exec.summary_vertices = summary.num_vertices();
+                exec.summary_edges = summary.num_edges();
+                if summary.num_vertices() > 0 {
+                    let (res, backend) = self.executor.execute(&summary, &self.pr_config)?;
+                    exec.backend = Some(backend);
+                    exec.iterations = res.iterations;
+                    self.extend_ranks_for_new_vertices();
+                    let default = self.pr_config.init_rank(self.graph.num_vertices());
+                    self.ranks = merge_ranks(&self.ranks, &summary, &res.ranks, default);
+                } else {
+                    self.extend_ranks_for_new_vertices();
+                }
+                let _ = hot;
+                self.carry_prev_degree.clear();
+                self.carry_new_vertices.clear();
+                self.queries_since_exact += 1;
+            }
+            Action::ComputeExact => {
+                exec.iterations = self.compute_exact();
+                self.carry_prev_degree.clear();
+                self.carry_new_vertices.clear();
+                self.queries_since_exact = 0;
+            }
+        }
+        exec.elapsed_secs = sw.secs();
+
+        // Metrics + OnQueryResult
+        self.metrics.inc("queries", 1);
+        let action_counter = match action {
+            Action::RepeatLast => "action_repeat-last",
+            Action::ComputeApproximate => "action_approximate",
+            Action::ComputeExact => "action_exact",
+        };
+        self.metrics.inc(action_counter, 1);
+        self.metrics.time("query_secs", exec.elapsed_secs);
+        self.metrics.set("last_summary_vertices", exec.summary_vertices as f64);
+        self.metrics.set("last_summary_edges", exec.summary_edges as f64);
+        self.udf.on_query_result(&ctx, action, &exec);
+
+        Ok(QueryResult {
+            query_id,
+            action,
+            ids: self.graph.ids().to_vec(),
+            ranks: self.ranks.clone(),
+            exec,
+        })
+    }
+
+    /// Consume a prepared event stream, returning one result per query.
+    pub fn run_stream(&mut self, events: impl IntoIterator<Item = UpdateEvent>) -> Result<Vec<QueryResult>> {
+        let mut out = Vec::new();
+        for ev in events {
+            match ev {
+                UpdateEvent::Op(op) => self.ingest(op),
+                UpdateEvent::Query => out.push(self.query()?),
+                UpdateEvent::Stop => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Stop the engine (Alg. 1 `OnStop`); further queries error.
+    pub fn stop(&mut self) {
+        if !self.stopped {
+            self.udf.on_stop();
+            self.stopped = true;
+        }
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    /// Run the exact power method (warm-started) and install the ranks.
+    /// Returns iterations executed.
+    fn compute_exact(&mut self) -> usize {
+        let csr = self.graph.snapshot();
+        let pr = PageRank::new(self.pr_config);
+        self.extend_ranks_for_new_vertices();
+        let warm = self.pr_config.warm_start_exact
+            && self.ranks.len() == csr.num_vertices()
+            && !self.ranks.is_empty();
+        let res = if warm { pr.run_from(&csr, self.ranks.clone()) } else { pr.run(&csr) };
+        self.ranks = res.ranks;
+        res.iterations
+    }
+
+    /// Build the hot set + summary graph for the current carry state.
+    fn build_summary(&self) -> (SummaryGraph, HotSet) {
+        let inputs = HotSetInputs {
+            graph: &self.graph,
+            prev_degree: &self.carry_prev_degree,
+            new_vertices: &self.carry_new_vertices,
+            prev_ranks: &self.ranks,
+        };
+        let hot = compute_hot_set(&inputs, &self.params);
+        let default = self.pr_config.init_rank(self.graph.num_vertices());
+        let summary = SummaryGraph::build(&self.graph, &hot, &self.ranks, default);
+        (summary, hot)
+    }
+
+    /// Grow the rank vector with teleport-level defaults when the graph
+    /// gained vertices.
+    fn extend_ranks_for_new_vertices(&mut self) {
+        let n = self.graph.num_vertices();
+        if self.ranks.len() < n {
+            self.ranks.resize(n, self.pr_config.init_rank(n));
+        }
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    /// The current graph.
+    pub fn graph(&self) -> &DynamicGraph {
+        &self.graph
+    }
+
+    /// The current full rank vector (dense index order).
+    pub fn ranks(&self) -> &[f64] {
+        &self.ranks
+    }
+
+    /// Engine metrics.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Model parameters.
+    pub fn params(&self) -> SummaryParams {
+        self.params
+    }
+
+    /// Number of queries served.
+    pub fn query_count(&self) -> u64 {
+        self.query_count
+    }
+
+    /// Whether the XLA backend is attached.
+    pub fn has_xla(&self) -> bool {
+        self.executor.has_xla()
+    }
+
+    /// Persist graph + ranks + query counter (see
+    /// [`crate::coordinator::checkpoint`]); pending (unapplied) updates
+    /// are NOT captured — drain them with a query first or re-ingest
+    /// after restore.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        if !self.buffer.is_empty() {
+            return Err(Error::Engine(format!(
+                "{} pending updates not applied — query() before checkpointing",
+                self.buffer.len()
+            )));
+        }
+        crate::coordinator::checkpoint::save(path, &self.graph, &self.ranks, self.query_count)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policies::{AlwaysExact, PeriodicExactPolicy};
+    use crate::metrics::rbo::rbo_ext;
+
+    fn ring(n: u64) -> Vec<(u64, u64)> {
+        (0..n).map(|i| (i, (i + 1) % n)).collect()
+    }
+
+    #[test]
+    fn builder_runs_initial_exact() {
+        let e = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+        assert_eq!(e.ranks().len(), 10);
+        // Unnormalized (Gelly) variant: a symmetric ring converges to 1.0
+        // per vertex (teleport (1-β) + β·1 = 1).
+        for &r in e.ranks() {
+            assert!((r - 1.0).abs() < 1e-6, "ring rank {r}");
+        }
+        assert!(!e.has_xla());
+    }
+
+    #[test]
+    fn query_without_updates_returns_same_ranks() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+        let before = e.ranks().to_vec();
+        let r = e.query().unwrap();
+        assert_eq!(r.action, Action::ComputeApproximate);
+        assert_eq!(r.exec.summary_vertices, 0, "no updates ⇒ empty hot set");
+        assert_eq!(r.ranks, before);
+    }
+
+    #[test]
+    fn approximate_query_tracks_exact_closely() {
+        // Skewed (preferential-attachment) graph so the ranking is
+        // meaningful (a ring is all-ties and RBO is noise); stream in a
+        // handful of edges and compare against the exact ground truth.
+        let base = crate::graph::generate::barabasi_albert(300, 3, 0.3, 42);
+        let mut approx = EngineBuilder::new()
+            .params(SummaryParams::new(0.1, 1, 0.1))
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        let mut exact = EngineBuilder::new()
+            .udf(Box::new(AlwaysExact))
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        let updates: Vec<EdgeOp> =
+            (0..15u64).map(|i| EdgeOp::add(200 + i, (i * 7 + 3) % 50)).collect();
+        approx.ingest_many(updates.clone());
+        exact.ingest_many(updates);
+        let ra = approx.query().unwrap();
+        let re = exact.query().unwrap();
+        assert_eq!(ra.action, Action::ComputeApproximate);
+        assert!(ra.exec.summary_vertices > 0);
+        assert!(
+            ra.exec.summary_vertices < approx.graph().num_vertices(),
+            "summary must be a strict subset"
+        );
+        let rbo = rbo_ext(&ra.top_ids(50), &re.top_ids(50), 0.98);
+        assert!(rbo > 0.9, "rbo {rbo}");
+    }
+
+    #[test]
+    fn new_vertices_get_ranks() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(5)).unwrap();
+        e.ingest(EdgeOp::add(100, 0));
+        e.ingest(EdgeOp::add(101, 100));
+        let r = e.query().unwrap();
+        assert_eq!(r.ids.len(), 7);
+        assert_eq!(r.ranks.len(), 7);
+        assert!(r.ranks.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn periodic_policy_resets_exact_counter() {
+        let mut e = EngineBuilder::new()
+            .udf(Box::new(PeriodicExactPolicy::new(2)))
+            .build_from_edges(ring(10))
+            .unwrap();
+        let mut actions = Vec::new();
+        for i in 0..4 {
+            e.ingest(EdgeOp::add(i, (i + 5) % 10));
+            actions.push(e.query().unwrap().action);
+        }
+        assert_eq!(
+            actions,
+            vec![
+                Action::ComputeApproximate,
+                Action::ComputeExact,
+                Action::ComputeApproximate,
+                Action::ComputeExact
+            ]
+        );
+    }
+
+    #[test]
+    fn repeat_last_preserves_degree_baseline_for_next_query() {
+        // Policy: repeat on first query, approximate on second. The degree
+        // baseline from query 1's applied updates must still be visible at
+        // query 2, otherwise the hot set is empty and accuracy collapses.
+        struct RepeatOnce(u32);
+        impl UdfSuite for RepeatOnce {
+            fn on_query(&mut self, _: &QueryContext) -> Action {
+                self.0 += 1;
+                if self.0 == 1 {
+                    Action::RepeatLast
+                } else {
+                    Action::ComputeApproximate
+                }
+            }
+        }
+        let mut e = EngineBuilder::new()
+            .params(SummaryParams::new(0.1, 0, 9.0))
+            .udf(Box::new(RepeatOnce(0)))
+            .build_from_edges(ring(20))
+            .unwrap();
+        e.ingest(EdgeOp::add(0, 10)); // changes degrees of 0 and 10
+        let r1 = e.query().unwrap();
+        assert_eq!(r1.action, Action::RepeatLast);
+        // no new updates before the second query
+        let r2 = e.query().unwrap();
+        assert_eq!(r2.action, Action::ComputeApproximate);
+        assert!(r2.exec.summary_vertices > 0, "carry-over baseline must trigger K_r");
+    }
+
+    #[test]
+    fn exact_clears_carry_state() {
+        let mut e = EngineBuilder::new()
+            .udf(Box::new(AlwaysExact))
+            .build_from_edges(ring(10))
+            .unwrap();
+        e.ingest(EdgeOp::add(0, 5));
+        let _ = e.query().unwrap();
+        // Next approximate-style summary would be empty — verify via metrics
+        assert_eq!(e.metrics().counter("action_exact"), 1);
+        assert_eq!(e.queries_since_exact, 0);
+    }
+
+    #[test]
+    fn run_stream_serves_all_queries() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(20)).unwrap();
+        let events = vec![
+            UpdateEvent::Op(EdgeOp::add(0, 7)),
+            UpdateEvent::Query,
+            UpdateEvent::Op(EdgeOp::add(3, 11)),
+            UpdateEvent::Op(EdgeOp::add(4, 12)),
+            UpdateEvent::Query,
+            UpdateEvent::Stop,
+        ];
+        let results = e.run_stream(events).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].query_id, 2);
+        assert_eq!(e.metrics().counter("queries"), 2);
+    }
+
+    #[test]
+    fn stopped_engine_rejects_queries() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(5)).unwrap();
+        e.stop();
+        assert!(e.query().is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        let p = std::env::temp_dir().join(format!("vg-engine-ckpt-{}", std::process::id()));
+        let mut e = EngineBuilder::new().build_from_edges(ring(30)).unwrap();
+        e.ingest(EdgeOp::add(0, 15));
+        let r1 = e.query().unwrap();
+        e.save_checkpoint(&p).unwrap();
+        let mut resumed = EngineBuilder::new().build_from_checkpoint(&p).unwrap();
+        assert_eq!(resumed.query_count(), e.query_count());
+        assert_eq!(resumed.ranks(), e.ranks());
+        // both engines serve the same next query
+        resumed.ingest(EdgeOp::add(1, 16));
+        e.ingest(EdgeOp::add(1, 16));
+        let a = resumed.query().unwrap();
+        let b = e.query().unwrap();
+        assert_eq!(a.query_id, b.query_id);
+        assert_eq!(a.ranks, b.ranks);
+        let _ = r1;
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn checkpoint_refuses_pending_updates() {
+        let p = std::env::temp_dir().join(format!("vg-engine-ckpt2-{}", std::process::id()));
+        let mut e = EngineBuilder::new().build_from_edges(ring(5)).unwrap();
+        e.ingest(EdgeOp::add(0, 3));
+        assert!(e.save_checkpoint(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn top_returns_sorted_pairs() {
+        let mut e = EngineBuilder::new().build_from_edges(vec![(0, 1), (2, 1), (3, 1), (1, 0)]).unwrap();
+        let r = e.query().unwrap();
+        let top = r.top(2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].1 >= top[1].1);
+        assert_eq!(top[0].0, 1, "vertex 1 receives from everyone");
+    }
+}

@@ -1,0 +1,273 @@
+//! Built-in query-serving policies (§4: “For simple rules, these
+//! functions don't need to be programmed, as we supply the implementation
+//! with parameters for the simplest rules such as threshold comparisons,
+//! fixed values, intervals and change ratios.”)
+//!
+//! Also implements the paper's motivating SLA idea (§1: “SLAs for graph
+//! processing, with different tiers of accuracy and resource
+//! efficiency”) as [`SlaTier`].
+
+use crate::coordinator::udf::{Action, ExecStats, QueryContext, UdfSuite};
+use crate::stream::buffer::UpdateStatistics;
+use crate::stream::event::EdgeOp;
+
+/// Always recompute exactly (the ground-truth baseline of §5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlwaysExact;
+
+impl UdfSuite for AlwaysExact {
+    fn on_query(&mut self, _ctx: &QueryContext) -> Action {
+        Action::ComputeExact
+    }
+}
+
+/// Always serve the summarized approximation (the paper's evaluated
+/// configuration).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlwaysApproximate;
+
+impl UdfSuite for AlwaysApproximate {
+    fn on_query(&mut self, _ctx: &QueryContext) -> Action {
+        Action::ComputeApproximate
+    }
+}
+
+/// Change-ratio thresholds: if the fraction of touched vertices is below
+/// `repeat_below`, repeat the last answer; above `exact_above`, recompute
+/// exactly; otherwise approximate. (“e.g., repeating the last results if
+/// the updates were not deemed significant or performing an exact
+/// computation if too much entropy has accumulated” — §7.)
+#[derive(Clone, Copy, Debug)]
+pub struct ChangeRatioPolicy {
+    /// Touched-vertex ratio below which the cached result is fresh enough.
+    pub repeat_below: f64,
+    /// Touched-vertex ratio above which only an exact recompute will do.
+    pub exact_above: f64,
+}
+
+impl ChangeRatioPolicy {
+    /// Construct; requires `repeat_below <= exact_above`.
+    pub fn new(repeat_below: f64, exact_above: f64) -> Self {
+        assert!(repeat_below <= exact_above);
+        Self { repeat_below, exact_above }
+    }
+}
+
+impl UdfSuite for ChangeRatioPolicy {
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        let ratio = ctx.stats.touched_ratio();
+        if ratio < self.repeat_below {
+            Action::RepeatLast
+        } else if ratio > self.exact_above {
+            Action::ComputeExact
+        } else {
+            Action::ComputeApproximate
+        }
+    }
+}
+
+/// Interval policy: exact every `exact_every` queries, approximate in
+/// between (bounds error accumulation — the paper's RBO plots show why
+/// periodic refresh matters over long streams).
+#[derive(Clone, Copy, Debug)]
+pub struct PeriodicExactPolicy {
+    /// Period of exact refreshes (≥ 1).
+    pub exact_every: u64,
+}
+
+impl PeriodicExactPolicy {
+    /// Construct with period ≥ 1.
+    pub fn new(exact_every: u64) -> Self {
+        Self { exact_every: exact_every.max(1) }
+    }
+}
+
+impl UdfSuite for PeriodicExactPolicy {
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        if ctx.queries_since_exact + 1 >= self.exact_every {
+            Action::ComputeExact
+        } else {
+            Action::ComputeApproximate
+        }
+    }
+}
+
+/// Accuracy/efficiency SLA tiers (§1's motivation, made concrete).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlaTier {
+    /// Max accuracy: exact on every query.
+    Gold,
+    /// Balanced: approximate, exact refresh every `refresh`.
+    Silver { refresh: u64 },
+    /// Max efficiency: approximate; repeat cached results for tiny
+    /// updates (< 0.1 % touched).
+    Bronze,
+}
+
+/// UDF suite implementing [`SlaTier`].
+#[derive(Clone, Copy, Debug)]
+pub struct SlaPolicy {
+    /// Configured tier.
+    pub tier: SlaTier,
+}
+
+impl UdfSuite for SlaPolicy {
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        match self.tier {
+            SlaTier::Gold => Action::ComputeExact,
+            SlaTier::Silver { refresh } => {
+                if ctx.queries_since_exact + 1 >= refresh.max(1) {
+                    Action::ComputeExact
+                } else {
+                    Action::ComputeApproximate
+                }
+            }
+            SlaTier::Bronze => {
+                if ctx.stats.touched_ratio() < 0.001 {
+                    Action::RepeatLast
+                } else {
+                    Action::ComputeApproximate
+                }
+            }
+        }
+    }
+}
+
+/// Postpone applying updates until at least `min_pending` operations have
+/// accumulated (a `BeforeUpdates` batching rule); composes with an inner
+/// `OnQuery` policy.
+#[derive(Debug)]
+pub struct BatchingPolicy<P: UdfSuite> {
+    /// Minimum buffered operations before updates are applied.
+    pub min_pending: usize,
+    /// Inner policy deciding the action.
+    pub inner: P,
+}
+
+impl<P: UdfSuite> UdfSuite for BatchingPolicy<P> {
+    fn before_updates(&mut self, pending: &[EdgeOp], stats: &UpdateStatistics) -> bool {
+        let _ = stats;
+        pending.len() >= self.min_pending
+    }
+
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        // If updates were postponed the cached result is still exact w.r.t.
+        // the applied graph — repeating is free.
+        if ctx.stats.pending_total() > 0 && ctx.stats.pending_total() < self.min_pending {
+            Action::RepeatLast
+        } else {
+            self.inner.on_query(ctx)
+        }
+    }
+
+    fn on_query_result(&mut self, ctx: &QueryContext, action: Action, stats: &ExecStats) {
+        self.inner.on_query_result(ctx, action, stats);
+    }
+}
+
+/// A recording wrapper that logs every decision (used by tests and the
+/// experiment harness to audit policies).
+#[derive(Debug, Default)]
+pub struct RecordingSuite<P: UdfSuite> {
+    /// Inner policy.
+    pub inner: P,
+    /// Actions taken, in order.
+    pub actions: Vec<Action>,
+    /// `(on_start, on_stop)` call counts.
+    pub lifecycle: (u32, u32),
+}
+
+impl<P: UdfSuite> UdfSuite for RecordingSuite<P> {
+    fn on_start(&mut self) {
+        self.lifecycle.0 += 1;
+        self.inner.on_start();
+    }
+
+    fn before_updates(&mut self, pending: &[EdgeOp], stats: &UpdateStatistics) -> bool {
+        self.inner.before_updates(pending, stats)
+    }
+
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        let a = self.inner.on_query(ctx);
+        self.actions.push(a);
+        a
+    }
+
+    fn on_query_result(&mut self, ctx: &QueryContext, action: Action, stats: &ExecStats) {
+        self.inner.on_query_result(ctx, action, stats);
+    }
+
+    fn on_stop(&mut self) {
+        self.lifecycle.1 += 1;
+        self.inner.on_stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(touched: usize, total: usize, since_exact: u64) -> QueryContext {
+        QueryContext {
+            query_id: 1,
+            stats: UpdateStatistics {
+                touched_vertices: touched,
+                total_vertices: total,
+                pending_add_edges: touched, // representative
+                ..Default::default()
+            },
+            num_vertices: total,
+            num_edges: total * 4,
+            queries_since_exact: since_exact,
+        }
+    }
+
+    #[test]
+    fn change_ratio_policy_three_bands() {
+        let mut p = ChangeRatioPolicy::new(0.01, 0.5);
+        assert_eq!(p.on_query(&ctx(1, 1000, 0)), Action::RepeatLast);
+        assert_eq!(p.on_query(&ctx(100, 1000, 0)), Action::ComputeApproximate);
+        assert_eq!(p.on_query(&ctx(900, 1000, 0)), Action::ComputeExact);
+    }
+
+    #[test]
+    fn periodic_policy_refreshes() {
+        let mut p = PeriodicExactPolicy::new(3);
+        assert_eq!(p.on_query(&ctx(10, 100, 0)), Action::ComputeApproximate);
+        assert_eq!(p.on_query(&ctx(10, 100, 1)), Action::ComputeApproximate);
+        assert_eq!(p.on_query(&ctx(10, 100, 2)), Action::ComputeExact);
+    }
+
+    #[test]
+    fn sla_tiers_behave() {
+        let mut gold = SlaPolicy { tier: SlaTier::Gold };
+        assert_eq!(gold.on_query(&ctx(0, 100, 0)), Action::ComputeExact);
+        let mut silver = SlaPolicy { tier: SlaTier::Silver { refresh: 2 } };
+        assert_eq!(silver.on_query(&ctx(5, 100, 0)), Action::ComputeApproximate);
+        assert_eq!(silver.on_query(&ctx(5, 100, 1)), Action::ComputeExact);
+        let mut bronze = SlaPolicy { tier: SlaTier::Bronze };
+        assert_eq!(bronze.on_query(&ctx(0, 100_000, 0)), Action::RepeatLast);
+        assert_eq!(bronze.on_query(&ctx(5_000, 100_000, 0)), Action::ComputeApproximate);
+    }
+
+    #[test]
+    fn batching_policy_postpones_small_batches() {
+        let mut p = BatchingPolicy { min_pending: 10, inner: AlwaysApproximate };
+        assert!(!p.before_updates(&[EdgeOp::add(1, 2)], &UpdateStatistics::default()));
+        let many: Vec<EdgeOp> = (0..10).map(|i| EdgeOp::add(i, i + 1)).collect();
+        assert!(p.before_updates(&many, &UpdateStatistics::default()));
+        // small pending ⇒ repeat
+        assert_eq!(p.on_query(&ctx(2, 100, 0)), Action::RepeatLast);
+    }
+
+    #[test]
+    fn recording_suite_captures_everything() {
+        let mut p = RecordingSuite { inner: AlwaysExact, actions: vec![], lifecycle: (0, 0) };
+        p.on_start();
+        let _ = p.on_query(&ctx(1, 10, 0));
+        let _ = p.on_query(&ctx(2, 10, 0));
+        p.on_stop();
+        assert_eq!(p.actions, vec![Action::ComputeExact, Action::ComputeExact]);
+        assert_eq!(p.lifecycle, (1, 1));
+    }
+}

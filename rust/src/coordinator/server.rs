@@ -1,0 +1,315 @@
+//! Threaded query server: the “GraphBolt module” of Fig. 2.
+//!
+//! Producers (stream sources, clients) talk to a single engine thread
+//! through a bounded command queue (backpressure per
+//! [`crate::stream::backpressure`]); query responses come back over
+//! per-request channels. A JSON line protocol over TCP is layered on top
+//! for out-of-process clients (`veilgraph serve`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::engine::{Engine, QueryResult};
+use crate::error::{Error, Result};
+use crate::stream::backpressure::{BoundedQueue, OverflowPolicy};
+use crate::stream::event::EdgeOp;
+use crate::util::json::Json;
+
+/// Commands accepted by the engine thread.
+enum Command {
+    Op(EdgeOp),
+    Query(Sender<Result<QueryResult>>),
+    Stats(Sender<Json>),
+    Shutdown,
+}
+
+/// Handle to a running engine thread.
+pub struct ServerHandle {
+    queue: Arc<BoundedQueue<Command>>,
+    worker: Option<JoinHandle<()>>,
+    running: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Spawn the engine thread with a command queue of `queue_capacity`.
+    pub fn spawn(mut engine: Engine, queue_capacity: usize, policy: OverflowPolicy) -> Self {
+        let queue = Arc::new(BoundedQueue::new(queue_capacity, policy));
+        let running = Arc::new(AtomicBool::new(true));
+        let q2 = Arc::clone(&queue);
+        let r2 = Arc::clone(&running);
+        let worker = std::thread::Builder::new()
+            .name("veilgraph-engine".into())
+            .spawn(move || {
+                while let Some(cmd) = q2.pop() {
+                    match cmd {
+                        Command::Op(op) => engine.ingest(op),
+                        Command::Query(reply) => {
+                            let _ = reply.send(engine.query());
+                        }
+                        Command::Stats(reply) => {
+                            let _ = reply.send(engine.metrics().to_json());
+                        }
+                        Command::Shutdown => break,
+                    }
+                }
+                engine.stop();
+                r2.store(false, Ordering::SeqCst);
+            })
+            .expect("spawn engine thread");
+        Self { queue, worker: Some(worker), running }
+    }
+
+    /// Enqueue a graph operation (non-blocking result; backpressure policy
+    /// applies).
+    pub fn ingest(&self, op: EdgeOp) -> Result<()> {
+        self.queue.push(Command::Op(op))
+    }
+
+    /// Serve a query synchronously.
+    pub fn query(&self) -> Result<QueryResult> {
+        let (tx, rx) = channel();
+        self.queue.push(Command::Query(tx))?;
+        rx.recv().map_err(|_| Error::Engine("engine thread gone".into()))?
+    }
+
+    /// Engine metrics snapshot.
+    pub fn stats(&self) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.queue.push(Command::Stats(tx))?;
+        rx.recv().map_err(|_| Error::Engine("engine thread gone".into()))
+    }
+
+    /// True while the engine thread is alive.
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    /// Stop the engine and join the thread.
+    pub fn shutdown(mut self) {
+        let _ = self.queue.push(Command::Shutdown);
+        self.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.queue.push(Command::Shutdown);
+        self.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// JSON line protocol: one request object per line, one response per line.
+///
+/// Requests:
+/// * `{"op":"add","src":1,"dst":2}`      → `{"ok":true}`
+/// * `{"op":"remove","src":1,"dst":2}`   → `{"ok":true}`
+/// * `{"op":"query","top":10}`           → `{"ok":true,"action":…,"top":[[id,score],…]}`
+/// * `{"op":"stats"}`                    → `{"ok":true,"stats":{…}}`
+/// * `{"op":"shutdown"}`                 → `{"ok":true}` and closes.
+pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
+    let fail = |msg: String| {
+        (Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))]), false)
+    };
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return fail(e.to_string()),
+    };
+    let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+    match op {
+        "add" | "remove" => {
+            let (src, dst) = match (
+                req.get("src").and_then(Json::as_u64),
+                req.get("dst").and_then(Json::as_u64),
+            ) {
+                (Some(s), Some(d)) => (s, d),
+                _ => return fail("add/remove need numeric src and dst".into()),
+            };
+            let e = if op == "add" { EdgeOp::add(src, dst) } else { EdgeOp::remove(src, dst) };
+            match handle.ingest(e) {
+                Ok(()) => (Json::obj(vec![("ok", Json::Bool(true))]), false),
+                Err(e) => fail(e.to_string()),
+            }
+        }
+        "query" => {
+            let top = req.get("top").and_then(Json::as_u64).unwrap_or(10) as usize;
+            match handle.query() {
+                Ok(res) => {
+                    let pairs = res
+                        .top(top)
+                        .into_iter()
+                        .map(|(id, score)| {
+                            Json::Arr(vec![Json::Num(id as f64), Json::Num(score)])
+                        })
+                        .collect();
+                    (
+                        Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("query_id", Json::Num(res.query_id as f64)),
+                            ("action", Json::Str(res.action.to_string())),
+                            ("elapsed_secs", Json::Num(res.exec.elapsed_secs)),
+                            ("summary_vertices", Json::Num(res.exec.summary_vertices as f64)),
+                            ("top", Json::Arr(pairs)),
+                        ]),
+                        false,
+                    )
+                }
+                Err(e) => fail(e.to_string()),
+            }
+        }
+        "stats" => match handle.stats() {
+            Ok(stats) => {
+                (Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)]), false)
+            }
+            Err(e) => fail(e.to_string()),
+        },
+        "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
+        other => fail(format!("unknown op {other:?}")),
+    }
+}
+
+/// Serve the line protocol over TCP until a client sends `shutdown`.
+/// Returns the bound address after start (useful with port 0 in tests).
+pub fn serve_tcp(handle: ServerHandle, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::log_info!("listening on {}", listener.local_addr()?);
+    let mut shutdown = false;
+    while !shutdown {
+        let (stream, peer) = listener.accept()?;
+        crate::log_debug!("client {peer}");
+        shutdown = serve_connection(&handle, stream)?;
+    }
+    handle.shutdown();
+    Ok(())
+}
+
+fn serve_connection(handle: &ServerHandle, stream: TcpStream) -> Result<bool> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = handle_request(handle, &line);
+        writer.write_all(resp.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if shutdown {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineBuilder;
+
+    fn handle() -> ServerHandle {
+        let edges: Vec<(u64, u64)> = (0..20).map(|i| (i, (i + 1) % 20)).collect();
+        let engine = EngineBuilder::new().build_from_edges(edges).unwrap();
+        ServerHandle::spawn(engine, 64, OverflowPolicy::Block)
+    }
+
+    #[test]
+    fn ingest_then_query_roundtrip() {
+        let h = handle();
+        h.ingest(EdgeOp::add(0, 10)).unwrap();
+        let r = h.query().unwrap();
+        assert_eq!(r.query_id, 1);
+        assert!(!r.ranks.is_empty());
+        h.shutdown();
+    }
+
+    #[test]
+    fn stats_reflect_served_queries() {
+        let h = handle();
+        let _ = h.query().unwrap();
+        let _ = h.query().unwrap();
+        let stats = h.stats().unwrap();
+        assert_eq!(
+            stats.get("counters").unwrap().get("queries").unwrap().as_u64(),
+            Some(2)
+        );
+        h.shutdown();
+    }
+
+    #[test]
+    fn concurrent_producers_are_serialized() {
+        let h = std::sync::Arc::new(handle());
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h2 = std::sync::Arc::clone(&h);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..25u64 {
+                    h2.ingest(EdgeOp::add(100 + t * 100 + i, i % 20)).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let r = h.query().unwrap();
+        assert_eq!(r.ids.len(), 20 + 100, "20 ring + 100 new sources");
+    }
+
+    #[test]
+    fn line_protocol_add_query_stats() {
+        let h = handle();
+        let (resp, stop) = handle_request(&h, r#"{"op":"add","src":3,"dst":9}"#);
+        assert!(!stop);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
+        let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
+        assert!(resp.get("stats").is_some());
+        let (_, stop) = handle_request(&h, r#"{"op":"shutdown"}"#);
+        assert!(stop);
+        h.shutdown();
+    }
+
+    #[test]
+    fn line_protocol_rejects_garbage() {
+        let h = handle();
+        let (resp, stop) = handle_request(&h, "not json");
+        assert!(!stop);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let (resp, _) = handle_request(&h, r#"{"op":"add","src":1}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let (resp, _) = handle_request(&h, r#"{"op":"fly"}"#);
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("fly"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn tcp_server_end_to_end() {
+        use std::io::{BufRead, BufReader, Write};
+        let h = handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_connection(&h, stream).unwrap();
+            h.shutdown();
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(b"{\"op\":\"add\",\"src\":1,\"dst\":15}\n{\"op\":\"query\",\"top\":2}\n{\"op\":\"shutdown\"}\n").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 3);
+        let q = Json::parse(&lines[1]).unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true));
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,128 @@
+//! The five-UDF program structure (Alg. 1, §4).
+//!
+//! “The API of GraphBolt consists of these five ordered UDFs which
+//! specify the execution logic that will guide the approximate
+//! processing”: `OnStart`, `BeforeUpdates`, `OnQuery`, `OnQueryResult`,
+//! `OnStop`. Users needing custom behaviour implement [`UdfSuite`];
+//! built-in policies for “the simplest rules such as threshold
+//! comparisons, fixed values, intervals and change ratios” live in
+//! [`crate::coordinator::policies`].
+
+use crate::runtime::executor::Backend;
+use crate::stream::buffer::UpdateStatistics;
+use crate::stream::event::EdgeOp;
+
+/// The action indicator returned by `OnQuery` (§4 item 3): serve from
+/// cache, approximate over the summary graph, or recompute exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// a) return the last calculated result.
+    RepeatLast,
+    /// b) compute an approximation over the summary graph.
+    ComputeApproximate,
+    /// c) exact recomputation over the complete graph.
+    ComputeExact,
+}
+
+impl std::fmt::Display for Action {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Action::RepeatLast => "repeat-last",
+            Action::ComputeApproximate => "approximate",
+            Action::ComputeExact => "exact",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Context handed to `OnQuery`: everything Alg. 1 exposes (query id,
+/// update statistics, graph dimensions, history).
+#[derive(Clone, Debug)]
+pub struct QueryContext {
+    /// Unique, monotonically increasing query id (measurement point `t`).
+    pub query_id: u64,
+    /// Statistics of the updates pending when the query arrived.
+    pub stats: UpdateStatistics,
+    /// |V| after updates were applied.
+    pub num_vertices: usize,
+    /// |E| after updates were applied.
+    pub num_edges: usize,
+    /// Queries since the last exact computation.
+    pub queries_since_exact: u64,
+}
+
+/// Per-query execution statistics handed to `OnQueryResult` (§4 item 4).
+#[derive(Clone, Debug)]
+pub struct ExecStats {
+    /// Wall time serving the query (seconds).
+    pub elapsed_secs: f64,
+    /// Backend that served it (None for repeat-last).
+    pub backend: Option<Backend>,
+    /// |K| (summary vertices), 0 unless approximate.
+    pub summary_vertices: usize,
+    /// |E_K| + |E_B| (summary edges), 0 unless approximate.
+    pub summary_edges: usize,
+    /// Power iterations executed.
+    pub iterations: usize,
+}
+
+/// The five ordered user-defined functions.
+///
+/// Default implementations reproduce the paper's evaluation behaviour:
+/// always apply pending updates, always compute the approximate
+/// (summarized) result.
+pub trait UdfSuite: Send {
+    /// Preparatory hook (resources, files, …).
+    fn on_start(&mut self) {}
+
+    /// Called after a query arrives, before updates are applied. Return
+    /// `false` to postpone applying updates (they stay buffered).
+    fn before_updates(&mut self, _pending: &[EdgeOp], _stats: &UpdateStatistics) -> bool {
+        true
+    }
+
+    /// Decide how to serve this query.
+    fn on_query(&mut self, _ctx: &QueryContext) -> Action {
+        Action::ComputeApproximate
+    }
+
+    /// Invoked after the response is computed.
+    fn on_query_result(&mut self, _ctx: &QueryContext, _action: Action, _stats: &ExecStats) {}
+
+    /// Symmetrical to `on_start`.
+    fn on_stop(&mut self) {}
+}
+
+/// The default suite: paper-protocol behaviour (apply everything,
+/// always approximate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DefaultSuite;
+
+impl UdfSuite for DefaultSuite {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_suite_applies_and_approximates() {
+        let mut s = DefaultSuite;
+        s.on_start();
+        assert!(s.before_updates(&[], &UpdateStatistics::default()));
+        let ctx = QueryContext {
+            query_id: 1,
+            stats: UpdateStatistics::default(),
+            num_vertices: 10,
+            num_edges: 20,
+            queries_since_exact: 1,
+        };
+        assert_eq!(s.on_query(&ctx), Action::ComputeApproximate);
+        s.on_stop();
+    }
+
+    #[test]
+    fn action_display() {
+        assert_eq!(Action::RepeatLast.to_string(), "repeat-last");
+        assert_eq!(Action::ComputeExact.to_string(), "exact");
+    }
+}

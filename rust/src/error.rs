@@ -1,0 +1,83 @@
+//! Unified error type for the VeilGraph library.
+
+use thiserror::Error;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors surfaced by VeilGraph public APIs.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A vertex id referenced by an operation does not exist in the graph.
+    #[error("unknown vertex {0}")]
+    UnknownVertex(u64),
+
+    /// An edge referenced by an operation does not exist in the graph.
+    #[error("unknown edge ({0}, {1})")]
+    UnknownEdge(u64, u64),
+
+    /// Malformed input data (edge lists, streams, configs).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Malformed or inconsistent JSON.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// A required AOT artifact is missing or inconsistent.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The PJRT runtime rejected a load/compile/execute call.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Engine state machine misuse (e.g. query before initial compute).
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    /// Capacity exceeded (summary larger than the largest artifact and no
+    /// fallback allowed).
+    #[error("capacity error: need {needed}, max {max}")]
+    Capacity { needed: usize, max: usize },
+
+    /// Backpressure: the ingestion queue is full and the policy is Reject.
+    #[error("backpressure: queue full ({0} pending)")]
+    Backpressure(usize),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_informative() {
+        assert_eq!(Error::UnknownVertex(7).to_string(), "unknown vertex 7");
+        assert_eq!(
+            Error::Capacity { needed: 4096, max: 2048 }.to_string(),
+            "capacity error: need 4096, max 2048"
+        );
+        assert!(Error::Parse("bad line".into()).to_string().contains("bad line"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,203 @@
+//! Figure registry: maps every figure of the paper's evaluation (Figs.
+//! 3–30) to a (dataset, metric) pair and renders/persists it.
+//!
+//! Layout of the paper's §5.3: per dataset, four figures in fixed order —
+//! vertex ratio, edge ratio, RBO, speedup — each plotting the best-3 and
+//! worst-3 parameter combinations by metric average over Q = 50 queries.
+//! eu-2005 (Figs. 7–10) plots an r = 0.10 subset instead of best/worst
+//! (§5.3: “For this dataset we focus on parameter combinations for a
+//! fixed r = 0.10”).
+
+use crate::experiments::harness::{CombinationResult, ExperimentResult, Metric};
+use crate::util::ascii_plot::{render, Series};
+
+/// One figure's identity.
+#[derive(Clone, Debug)]
+pub struct FigureSpec {
+    /// Paper figure number (3–30).
+    pub number: u32,
+    /// Stand-in dataset name.
+    pub dataset: &'static str,
+    /// Which metric it plots.
+    pub metric: Metric,
+    /// Whether the paper plots the fixed-r subset instead of best/worst.
+    pub fixed_r_subset: bool,
+}
+
+/// All 28 evaluation figures in paper order.
+pub fn all_figures() -> Vec<FigureSpec> {
+    let order: [(&'static str, bool); 7] = [
+        ("web-cnr", false),       // Figs. 3–6
+        ("web-eu", true),         // Figs. 7–10 (r = 0.10 subset)
+        ("social-enron", false),  // Figs. 11–14
+        ("cit-hepph", false),     // Figs. 15–18
+        ("social-dblp", false),   // Figs. 19–22
+        ("social-amazon", false), // Figs. 23–26
+        ("fb-ego", false),        // Figs. 27–30
+    ];
+    let metrics = [Metric::VertexRatio, Metric::EdgeRatio, Metric::Rbo, Metric::Speedup];
+    let mut out = Vec::with_capacity(28);
+    let mut number = 3;
+    for (dataset, fixed_r_subset) in order {
+        for metric in metrics {
+            out.push(FigureSpec { number, dataset, metric, fixed_r_subset });
+            number += 1;
+        }
+    }
+    out
+}
+
+/// Figures belonging to a dataset.
+pub fn figures_for_dataset(dataset: &str) -> Vec<FigureSpec> {
+    all_figures().into_iter().filter(|f| f.dataset == dataset).collect()
+}
+
+/// Figure spec by number.
+pub fn figure_by_number(number: u32) -> Option<FigureSpec> {
+    all_figures().into_iter().find(|f| f.number == number)
+}
+
+/// Select the combinations a figure plots.
+pub fn select_combos<'a>(
+    fig: &FigureSpec,
+    result: &'a ExperimentResult,
+) -> Vec<&'a CombinationResult> {
+    if fig.fixed_r_subset {
+        // eu-2005: all combinations with r = 0.10 (6 of 18).
+        result.combos.iter().filter(|c| (c.params.r - 0.10).abs() < 1e-9).collect()
+    } else {
+        result.best_worst(fig.metric, 3)
+    }
+}
+
+/// Render one figure as an ASCII chart (quick look; CSV is the durable
+/// output).
+pub fn render_figure(fig: &FigureSpec, result: &ExperimentResult) -> String {
+    let combos = select_combos(fig, result);
+    let series: Vec<Series> = combos
+        .iter()
+        .map(|c| Series::new(format!("{} (avg {:.4})", c.params.label(), c.avg(fig.metric)), c.series(fig.metric)))
+        .collect();
+    let title = format!(
+        "Figure {} — {} {} (|S|={}, Q={})",
+        fig.number,
+        result.dataset,
+        fig.metric.name(),
+        result.stream_len,
+        result.q
+    );
+    render(&title, &series, 70, 16)
+}
+
+/// CSV for one figure: `query,<combo1>,<combo2>,…` (one column per
+/// plotted combination).
+pub fn figure_csv(fig: &FigureSpec, result: &ExperimentResult) -> String {
+    let combos = select_combos(fig, result);
+    let mut out = String::from("query");
+    for c in &combos {
+        out.push(',');
+        out.push_str(&c.params.label());
+    }
+    out.push('\n');
+    let q = combos.iter().map(|c| c.rows.len()).max().unwrap_or(0);
+    for i in 0..q {
+        out.push_str(&(i + 1).to_string());
+        for c in &combos {
+            out.push(',');
+            if let Some(row) = c.rows.get(i) {
+                out.push_str(&format!("{:.6}", fig.metric.value(row)));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// One-line summary used in EXPERIMENTS.md tables: best avg, worst avg.
+pub fn figure_summary(fig: &FigureSpec, result: &ExperimentResult) -> String {
+    let ranked = result.ranked(fig.metric);
+    let best = ranked.first().map(|c| c.avg(fig.metric)).unwrap_or(0.0);
+    let worst = ranked.last().map(|c| c.avg(fig.metric)).unwrap_or(0.0);
+    format!(
+        "fig {:>2}  {:<14} {:<12} best-avg {:>9.4}  worst-avg {:>9.4}",
+        fig.number,
+        fig.dataset,
+        fig.metric.name(),
+        best,
+        worst
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::harness::{run_experiment, HarnessConfig};
+    use crate::graph::generate::barabasi_albert;
+    use crate::summary::params::SummaryParams;
+
+    #[test]
+    fn registry_covers_figs_3_to_30() {
+        let figs = all_figures();
+        assert_eq!(figs.len(), 28);
+        assert_eq!(figs.first().unwrap().number, 3);
+        assert_eq!(figs.last().unwrap().number, 30);
+        // every dataset has exactly the four metrics in paper order
+        for ds in ["web-cnr", "web-eu", "fb-ego"] {
+            let f = figures_for_dataset(ds);
+            assert_eq!(f.len(), 4);
+            assert_eq!(f[0].metric, Metric::VertexRatio);
+            assert_eq!(f[3].metric, Metric::Speedup);
+        }
+        // eu-2005 figures use the fixed-r subset
+        assert!(figure_by_number(7).unwrap().fixed_r_subset);
+        assert!(!figure_by_number(3).unwrap().fixed_r_subset);
+    }
+
+    fn tiny_result() -> ExperimentResult {
+        let edges = barabasi_albert(300, 3, 0.5, 31);
+        let cfg = HarnessConfig {
+            q: 4,
+            grid: vec![
+                SummaryParams::new(0.10, 0, 0.1),
+                SummaryParams::new(0.10, 1, 0.9),
+                SummaryParams::new(0.30, 0, 0.9),
+            ],
+            seed: 5,
+            workers: 2,
+            ..Default::default()
+        };
+        run_experiment("web-eu", &edges, 80, false, &cfg).unwrap()
+    }
+
+    #[test]
+    fn fixed_r_subset_filters_to_r010() {
+        let res = tiny_result();
+        let fig = figure_by_number(9).unwrap(); // eu-2005 RBO
+        let combos = select_combos(&fig, &res);
+        assert_eq!(combos.len(), 2);
+        assert!(combos.iter().all(|c| (c.params.r - 0.10).abs() < 1e-9));
+    }
+
+    #[test]
+    fn csv_has_header_and_q_rows() {
+        let res = tiny_result();
+        let fig = figure_by_number(10).unwrap();
+        let csv = figure_csv(&fig, &res);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + 4);
+        assert!(lines[0].starts_with("query,"));
+        assert!(lines[1].starts_with("1,"));
+    }
+
+    #[test]
+    fn render_and_summary_do_not_panic() {
+        let res = tiny_result();
+        for n in [7, 8, 9, 10] {
+            let fig = figure_by_number(n).unwrap();
+            let txt = render_figure(&fig, &res);
+            assert!(txt.contains(&format!("Figure {n}")));
+            let s = figure_summary(&fig, &res);
+            assert!(s.contains("best-avg"));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! The paper's evaluation (§5) as a regenerable experiment suite:
+//! dataset stand-ins (Table 1), the replay harness (Q = 50 queries × 18
+//! parameter combinations × ground truth), the figure registry
+//! (Figs. 3–30) and result persistence.
+
+pub mod datasets;
+pub mod figures;
+pub mod harness;
+pub mod report;

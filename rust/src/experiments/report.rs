@@ -1,0 +1,106 @@
+//! Result persistence: writes figure CSVs, ASCII plots and the
+//! EXPERIMENTS.md summary block for a set of experiment runs.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::experiments::figures::{figure_csv, figure_summary, figures_for_dataset, render_figure};
+use crate::experiments::harness::{ExperimentResult, Metric};
+
+/// Write everything for one experiment under `out_dir`:
+/// `fig{N}_{dataset}_{metric}.csv` + a combined `{dataset}.txt` quicklook.
+/// Returns the file names written.
+pub fn write_experiment(out_dir: impl AsRef<Path>, result: &ExperimentResult) -> Result<Vec<String>> {
+    let out_dir = out_dir.as_ref();
+    std::fs::create_dir_all(out_dir)?;
+    let mut written = Vec::new();
+    let mut quicklook = String::new();
+    for fig in figures_for_dataset(&result.dataset) {
+        let csv_name = format!("fig{:02}_{}_{}.csv", fig.number, fig.dataset, fig.metric.name());
+        std::fs::write(out_dir.join(&csv_name), figure_csv(&fig, result))?;
+        written.push(csv_name);
+        quicklook.push_str(&render_figure(&fig, result));
+        quicklook.push('\n');
+        quicklook.push_str(&figure_summary(&fig, result));
+        quicklook.push_str("\n\n");
+    }
+    let txt_name = format!("{}.txt", result.dataset);
+    std::fs::write(out_dir.join(&txt_name), quicklook)?;
+    written.push(txt_name);
+    Ok(written)
+}
+
+/// Markdown table row per figure for EXPERIMENTS.md.
+pub fn markdown_rows(result: &ExperimentResult) -> String {
+    let mut out = String::new();
+    for fig in figures_for_dataset(&result.dataset) {
+        let ranked = result.ranked(fig.metric);
+        let best = ranked.first().map(|c| (c.params.label(), c.avg(fig.metric)));
+        let worst = ranked.last().map(|c| (c.params.label(), c.avg(fig.metric)));
+        if let (Some((bl, bv)), Some((wl, wv))) = (best, worst) {
+            out.push_str(&format!(
+                "| Fig. {} | {} | {} | {bv:.4} ({bl}) | {wv:.4} ({wl}) |\n",
+                fig.number,
+                result.dataset,
+                fig.metric.name(),
+            ));
+        }
+    }
+    out
+}
+
+/// Aggregate headline: average speedup and RBO of the combination with
+/// the best speedup (for the paper's “>50 % time reduction at >95 %
+/// accuracy” claim).
+pub fn headline(result: &ExperimentResult) -> (f64, f64) {
+    let by_speedup = result.ranked(Metric::Speedup);
+    match by_speedup.first() {
+        Some(best) => (best.avg(Metric::Speedup), best.avg(Metric::Rbo)),
+        None => (0.0, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::harness::{run_experiment, HarnessConfig};
+    use crate::graph::generate::barabasi_albert;
+    use crate::summary::params::SummaryParams;
+
+    fn tiny() -> ExperimentResult {
+        let edges = barabasi_albert(250, 3, 0.5, 77);
+        let cfg = HarnessConfig {
+            q: 3,
+            grid: vec![SummaryParams::new(0.1, 0, 0.1), SummaryParams::new(0.3, 0, 0.9)],
+            seed: 5,
+            workers: 2,
+            ..Default::default()
+        };
+        run_experiment("web-cnr", &edges, 60, true, &cfg).unwrap()
+    }
+
+    #[test]
+    fn write_experiment_emits_4_csvs_and_quicklook() {
+        let res = tiny();
+        let dir = std::env::temp_dir().join(format!("vg-report-{}", std::process::id()));
+        let files = write_experiment(&dir, &res).unwrap();
+        assert_eq!(files.len(), 5);
+        assert!(files.iter().any(|f| f.contains("fig03") && f.contains("vertex_ratio")));
+        assert!(files.iter().any(|f| f.ends_with("web-cnr.txt")));
+        for f in &files {
+            assert!(dir.join(f).is_file());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn markdown_and_headline() {
+        let res = tiny();
+        let md = markdown_rows(&res);
+        assert_eq!(md.lines().count(), 4);
+        assert!(md.contains("| Fig. 3 |"));
+        let (speedup, rbo) = headline(&res);
+        assert!(speedup > 0.0);
+        assert!((0.0..=1.0).contains(&rbo));
+    }
+}

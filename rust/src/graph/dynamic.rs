@@ -1,0 +1,315 @@
+//! Mutable directed graph the update stream is applied to.
+//!
+//! Design notes:
+//! * User-facing vertex ids are sparse `u64` (datasets keep their original
+//!   ids); internally they compact to dense `u32` indices so CSR snapshots
+//!   and rank vectors are flat arrays.
+//! * Both out- and in-adjacency are maintained: PageRank pulls over
+//!   in-edges, the hot-vertex expansion (Eqs. 3–4) walks neighborhoods in
+//!   both directions, and degree deltas (Eq. 2) need out-degrees.
+//! * Parallel edges are rejected (the paper's streams sample distinct
+//!   edges); self-loops are allowed but excluded by the generators.
+//! * Removal keeps the vertex slot (ids stay stable, as in the paper's
+//!   model where a vertex's history matters across measurement points).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+use crate::graph::{VertexId, VertexIdx};
+
+/// A growable directed graph with stable dense indices.
+#[derive(Clone, Debug, Default)]
+pub struct DynamicGraph {
+    /// Sparse user id → dense index.
+    index_of: HashMap<VertexId, VertexIdx>,
+    /// Dense index → sparse user id.
+    id_of: Vec<VertexId>,
+    /// Out-adjacency per dense index.
+    out_adj: Vec<Vec<VertexIdx>>,
+    /// In-adjacency per dense index.
+    in_adj: Vec<Vec<VertexIdx>>,
+    /// Edge count.
+    m: usize,
+}
+
+impl DynamicGraph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from an iterator of (src, dst) pairs, adding vertices on the
+    /// fly and ignoring duplicate edges (returns how many were ignored).
+    pub fn from_edges<I: IntoIterator<Item = (VertexId, VertexId)>>(edges: I) -> (Self, usize) {
+        let mut g = Self::new();
+        let mut dups = 0;
+        for (u, v) in edges {
+            if g.add_edge(u, v).is_err() {
+                dups += 1;
+            }
+        }
+        (g, dups)
+    }
+
+    /// Number of vertices (including isolated ones).
+    pub fn num_vertices(&self) -> usize {
+        self.id_of.len()
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.m
+    }
+
+    /// Dense index for a user id, if present.
+    pub fn index(&self, id: VertexId) -> Option<VertexIdx> {
+        self.index_of.get(&id).copied()
+    }
+
+    /// User id for a dense index.
+    pub fn id(&self, idx: VertexIdx) -> VertexId {
+        self.id_of[idx as usize]
+    }
+
+    /// Insert a vertex (no-op if present); returns its dense index.
+    pub fn add_vertex(&mut self, id: VertexId) -> VertexIdx {
+        if let Some(&i) = self.index_of.get(&id) {
+            return i;
+        }
+        let idx = self.id_of.len() as VertexIdx;
+        self.index_of.insert(id, idx);
+        self.id_of.push(id);
+        self.out_adj.push(Vec::new());
+        self.in_adj.push(Vec::new());
+        idx
+    }
+
+    /// Add a directed edge; vertices are created as needed.
+    ///
+    /// Errors with [`Error::Parse`] on duplicate edges (the caller decides
+    /// whether duplicates are benign — `from_edges` counts and drops them).
+    pub fn add_edge(&mut self, src: VertexId, dst: VertexId) -> Result<()> {
+        let s = self.add_vertex(src);
+        let d = self.add_vertex(dst);
+        if self.out_adj[s as usize].contains(&d) {
+            return Err(Error::Parse(format!("duplicate edge ({src}, {dst})")));
+        }
+        self.out_adj[s as usize].push(d);
+        self.in_adj[d as usize].push(s);
+        self.m += 1;
+        Ok(())
+    }
+
+    /// Remove a directed edge.
+    pub fn remove_edge(&mut self, src: VertexId, dst: VertexId) -> Result<()> {
+        let s = self.index(src).ok_or(Error::UnknownVertex(src))?;
+        let d = self.index(dst).ok_or(Error::UnknownVertex(dst))?;
+        let out = &mut self.out_adj[s as usize];
+        let pos = out.iter().position(|&x| x == d).ok_or(Error::UnknownEdge(src, dst))?;
+        out.swap_remove(pos);
+        let inn = &mut self.in_adj[d as usize];
+        let pos = inn.iter().position(|&x| x == s).expect("in/out adjacency desync");
+        inn.swap_remove(pos);
+        self.m -= 1;
+        Ok(())
+    }
+
+    /// Remove a vertex and all incident edges. The dense slot survives
+    /// (ids remain stable) but becomes isolated.
+    pub fn remove_vertex(&mut self, id: VertexId) -> Result<()> {
+        let v = self.index(id).ok_or(Error::UnknownVertex(id))?;
+        let outs: Vec<VertexIdx> = self.out_adj[v as usize].clone();
+        for d in outs {
+            let inn = &mut self.in_adj[d as usize];
+            if let Some(p) = inn.iter().position(|&x| x == v) {
+                inn.swap_remove(p);
+                self.m -= 1;
+            }
+        }
+        self.out_adj[v as usize].clear();
+        let ins: Vec<VertexIdx> = self.in_adj[v as usize].clone();
+        for s in ins {
+            let out = &mut self.out_adj[s as usize];
+            if let Some(p) = out.iter().position(|&x| x == v) {
+                out.swap_remove(p);
+                self.m -= 1;
+            }
+        }
+        self.in_adj[v as usize].clear();
+        Ok(())
+    }
+
+    /// True if the edge exists.
+    pub fn has_edge(&self, src: VertexId, dst: VertexId) -> bool {
+        match (self.index(src), self.index(dst)) {
+            (Some(s), Some(d)) => self.out_adj[s as usize].contains(&d),
+            _ => false,
+        }
+    }
+
+    /// Out-degree by dense index.
+    pub fn out_degree(&self, idx: VertexIdx) -> usize {
+        self.out_adj[idx as usize].len()
+    }
+
+    /// In-degree by dense index.
+    pub fn in_degree(&self, idx: VertexIdx) -> usize {
+        self.in_adj[idx as usize].len()
+    }
+
+    /// Total degree (in + out) by dense index — the paper's `d_t(u)` uses
+    /// the degree affected by incoming stream updates.
+    pub fn degree(&self, idx: VertexIdx) -> usize {
+        self.out_degree(idx) + self.in_degree(idx)
+    }
+
+    /// Out-neighbors by dense index.
+    pub fn out_neighbors(&self, idx: VertexIdx) -> &[VertexIdx] {
+        &self.out_adj[idx as usize]
+    }
+
+    /// In-neighbors by dense index.
+    pub fn in_neighbors(&self, idx: VertexIdx) -> &[VertexIdx] {
+        &self.in_adj[idx as usize]
+    }
+
+    /// Mean total degree over all vertices (`d̄` in Eq. 5).
+    pub fn mean_degree(&self) -> f64 {
+        if self.id_of.is_empty() {
+            return 0.0;
+        }
+        // Every edge contributes one out- and one in-degree.
+        2.0 * self.m as f64 / self.id_of.len() as f64
+    }
+
+    /// Freeze the current topology into a pull-oriented CSR snapshot:
+    /// in-edge CSR plus out-degree array (what the power method consumes).
+    pub fn snapshot(&self) -> Csr {
+        let n = self.num_vertices();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut targets = Vec::with_capacity(self.m);
+        for v in 0..n {
+            // CSR row v lists the *sources* of v's in-edges.
+            targets.extend_from_slice(&self.in_adj[v]);
+            offsets.push(targets.len() as u64);
+        }
+        let out_degree: Vec<u32> = (0..n).map(|v| self.out_adj[v].len() as u32).collect();
+        Csr::from_parts(offsets, targets, out_degree)
+    }
+
+    /// Iterate over all edges as (src_idx, dst_idx).
+    pub fn edges(&self) -> impl Iterator<Item = (VertexIdx, VertexIdx)> + '_ {
+        self.out_adj
+            .iter()
+            .enumerate()
+            .flat_map(|(s, outs)| outs.iter().map(move |&d| (s as VertexIdx, d)))
+    }
+
+    /// All user ids in dense order.
+    pub fn ids(&self) -> &[VertexId] {
+        &self.id_of
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> DynamicGraph {
+        let (g, dups) = DynamicGraph::from_edges(vec![(10, 20), (20, 30), (30, 10)]);
+        assert_eq!(dups, 0);
+        g
+    }
+
+    #[test]
+    fn add_edges_and_degrees() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        let i10 = g.index(10).unwrap();
+        assert_eq!(g.out_degree(i10), 1);
+        assert_eq!(g.in_degree(i10), 1);
+        assert_eq!(g.degree(i10), 2);
+        assert!((g.mean_degree() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_edge_rejected() {
+        let mut g = triangle();
+        assert!(g.add_edge(10, 20).is_err());
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn duplicate_count_in_bulk_load() {
+        let (g, dups) = DynamicGraph::from_edges(vec![(1, 2), (1, 2), (2, 3)]);
+        assert_eq!(dups, 1);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn remove_edge_updates_both_sides() {
+        let mut g = triangle();
+        g.remove_edge(10, 20).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert!(!g.has_edge(10, 20));
+        let i20 = g.index(20).unwrap();
+        assert_eq!(g.in_degree(i20), 0);
+        assert!(g.remove_edge(10, 20).is_err());
+        assert!(g.remove_edge(99, 20).is_err());
+    }
+
+    #[test]
+    fn remove_vertex_clears_incident_edges() {
+        let mut g = triangle();
+        g.add_edge(20, 10).unwrap();
+        g.remove_vertex(20).unwrap();
+        assert_eq!(g.num_edges(), 1); // only 30 -> 10 survives
+        assert!(!g.has_edge(10, 20) && !g.has_edge(20, 30) && !g.has_edge(20, 10));
+        // slot survives: id still resolvable, isolated
+        let i20 = g.index(20).unwrap();
+        assert_eq!(g.degree(i20), 0);
+    }
+
+    #[test]
+    fn self_loop_allowed_once() {
+        let mut g = DynamicGraph::new();
+        g.add_edge(5, 5).unwrap();
+        assert!(g.add_edge(5, 5).is_err());
+        let i = g.index(5).unwrap();
+        assert_eq!(g.out_degree(i), 1);
+        assert_eq!(g.in_degree(i), 1);
+    }
+
+    #[test]
+    fn snapshot_matches_topology() {
+        let g = triangle();
+        let csr = g.snapshot();
+        assert_eq!(csr.num_vertices(), 3);
+        assert_eq!(csr.num_edges(), 3);
+        for v in 0..3u32 {
+            let srcs = csr.row(v);
+            assert_eq!(srcs.len(), g.in_degree(v));
+            for &s in srcs {
+                assert!(g.out_neighbors(s).contains(&v));
+            }
+            assert_eq!(csr.out_degree(v) as usize, g.out_degree(v));
+        }
+    }
+
+    #[test]
+    fn ids_survive_in_dense_order() {
+        let g = triangle();
+        assert_eq!(g.ids(), &[10, 20, 30]);
+        assert_eq!(g.id(g.index(30).unwrap()), 30);
+    }
+
+    #[test]
+    fn edges_iterator_covers_all() {
+        let g = triangle();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es.len(), 3);
+    }
+}

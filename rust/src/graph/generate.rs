@@ -1,0 +1,284 @@
+//! Deterministic synthetic graph generators.
+//!
+//! Substitute for the paper's LAW/SNAP datasets (unavailable offline; see
+//! DESIGN.md §Substitutions). Each generator reproduces the *class* of
+//! topology of the original: heavy-tailed in-degree for web graphs
+//! (copying model), preferential attachment for social/co-author/
+//! co-purchase networks, a time-layered DAG for citations, and a dense
+//! core for the Facebook ego network. All are deterministic given a seed.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Edge list with user ids 0..n-1.
+pub type EdgeList = Vec<(u64, u64)>;
+
+fn dedupe(edges: &mut EdgeList) {
+    let mut seen = std::collections::HashSet::with_capacity(edges.len());
+    edges.retain(|&(u, v)| u != v && seen.insert((u, v)));
+}
+
+/// G(n, m) Erdős–Rényi: `m` distinct directed edges drawn uniformly.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> EdgeList {
+    assert!(n >= 2, "need at least 2 vertices");
+    let max_m = n * (n - 1);
+    let m = m.min(max_m);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut seen = std::collections::HashSet::with_capacity(m);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let u = rng.next_below(n as u64);
+        let v = rng.next_below(n as u64);
+        if u != v && seen.insert((u, v)) {
+            edges.push((u, v));
+        }
+    }
+    edges
+}
+
+/// Barabási–Albert preferential attachment. Each new vertex attaches
+/// `m_per` edges to existing vertices chosen ∝ degree (repeated-endpoint
+/// sampling over the edge list, the standard O(1) trick). `mutual_prob`
+/// adds the reciprocal edge with that probability — social networks
+/// (enron email, dblp co-authorship) are heavily reciprocal, web graphs
+/// are not.
+pub fn barabasi_albert(n: usize, m_per: usize, mutual_prob: f64, seed: u64) -> EdgeList {
+    assert!(n > m_per && m_per >= 1);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut edges: EdgeList = Vec::with_capacity(n * m_per);
+    // endpoint pool: every edge contributes both endpoints → degree-biased.
+    let mut pool: Vec<u64> = Vec::with_capacity(2 * n * m_per);
+    // seed clique over m_per+1 vertices
+    for u in 0..=(m_per as u64) {
+        let v = (u + 1) % (m_per as u64 + 1);
+        edges.push((u, v));
+        pool.push(u);
+        pool.push(v);
+    }
+    for u in (m_per + 1)..n {
+        let u = u as u64;
+        let mut chosen = std::collections::BTreeSet::new();
+        let mut guard = 0;
+        while chosen.len() < m_per && guard < 50 * m_per {
+            let t = pool[rng.range(0, pool.len())];
+            if t != u {
+                chosen.insert(t);
+            }
+            guard += 1;
+        }
+        for &t in &chosen {
+            edges.push((u, t));
+            pool.push(u);
+            pool.push(t);
+            if rng.chance(mutual_prob) {
+                edges.push((t, u));
+                pool.push(t);
+                pool.push(u);
+            }
+        }
+    }
+    dedupe(&mut edges);
+    edges
+}
+
+/// Kumar et al. copying model for web graphs: each new page links `d`
+/// times; with probability `copy_prob` it copies the corresponding
+/// out-link of a random prototype page, otherwise it links to a uniform
+/// random page. Produces the power-law in-degree distribution measured on
+/// real web crawls (cnr-2000, eu-2005).
+pub fn copying_web(n: usize, d: usize, copy_prob: f64, seed: u64) -> EdgeList {
+    assert!(n > d + 1 && d >= 1);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut out_adj: Vec<Vec<u64>> = Vec::with_capacity(n);
+    // seed: a small cycle so every prototype has out-links
+    let s = d + 1;
+    for u in 0..s {
+        let mut links = Vec::with_capacity(d);
+        for k in 1..=d {
+            links.push(((u + k) % s) as u64);
+        }
+        out_adj.push(links);
+    }
+    for u in s..n {
+        let proto = rng.range(0, u);
+        let mut links = Vec::with_capacity(d);
+        for k in 0..d {
+            let t = if rng.chance(copy_prob) && k < out_adj[proto].len() {
+                out_adj[proto][k]
+            } else {
+                rng.next_below(u as u64)
+            };
+            links.push(t);
+        }
+        out_adj.push(links);
+    }
+    let mut edges: EdgeList =
+        out_adj.iter().enumerate().flat_map(|(u, ls)| ls.iter().map(move |&v| (u as u64, v))).collect();
+    dedupe(&mut edges);
+    edges
+}
+
+/// Citation DAG (Cit-HepPh stand-in): vertices arrive in time order and
+/// cite `d`-ish earlier papers with preferential attachment; edges always
+/// point backwards in time (a DAG, like real citation graphs).
+pub fn citation_dag(n: usize, d: usize, seed: u64) -> EdgeList {
+    assert!(n > d + 1 && d >= 1);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut edges: EdgeList = Vec::with_capacity(n * d);
+    let mut pool: Vec<u64> = vec![0];
+    for u in 1..n {
+        let u = u as u64;
+        let refs = 1 + rng.range(0, 2 * d - 1); // 1..2d citations, mean ~d
+        let mut chosen = std::collections::BTreeSet::new();
+        for _ in 0..refs {
+            // 70 % preferential, 30 % uniform over the past
+            let t = if rng.chance(0.7) {
+                pool[rng.range(0, pool.len())]
+            } else {
+                rng.next_below(u)
+            };
+            if t < u {
+                chosen.insert(t);
+            }
+        }
+        for &t in &chosen {
+            edges.push((u, t));
+            pool.push(t);
+        }
+        pool.push(u);
+    }
+    dedupe(&mut edges);
+    edges
+}
+
+/// Dense ego network (Facebook New Orleans stand-in): a dense core of
+/// `core` vertices (each pair linked with prob `p_core`, both directions)
+/// plus a periphery attaching preferentially to the core.
+pub fn ego_network(n: usize, core: usize, p_core: f64, d_periph: usize, seed: u64) -> EdgeList {
+    assert!(core < n && core >= 2);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut edges: EdgeList = Vec::new();
+    for u in 0..core as u64 {
+        for v in 0..core as u64 {
+            if u != v && rng.chance(p_core) {
+                edges.push((u, v));
+            }
+        }
+    }
+    for u in core as u64..n as u64 {
+        let mut chosen = std::collections::BTreeSet::new();
+        let mut guard = 0;
+        while chosen.len() < d_periph && guard < 50 * d_periph {
+            // 80 % to the core, 20 % to other periphery
+            let t = if rng.chance(0.8) {
+                rng.next_below(core as u64)
+            } else {
+                rng.next_below(u)
+            };
+            if t != u {
+                chosen.insert(t);
+            }
+            guard += 1;
+        }
+        for &t in &chosen {
+            edges.push((u, t));
+            if rng.chance(0.6) {
+                edges.push((t, u)); // friendship reciprocity
+            }
+        }
+    }
+    dedupe(&mut edges);
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dynamic::DynamicGraph;
+
+    fn in_degree_tail(edges: &EdgeList, n: usize) -> (f64, usize) {
+        let mut deg = vec![0usize; n];
+        for &(_, v) in edges {
+            deg[v as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap();
+        let mean = edges.len() as f64 / n as f64;
+        (mean, max)
+    }
+
+    #[test]
+    fn er_produces_exact_count_distinct() {
+        let e = erdos_renyi(100, 500, 1);
+        assert_eq!(e.len(), 500);
+        let set: std::collections::HashSet<_> = e.iter().collect();
+        assert_eq!(set.len(), 500);
+        assert!(e.iter().all(|&(u, v)| u != v && u < 100 && v < 100));
+    }
+
+    #[test]
+    fn er_is_deterministic_per_seed() {
+        assert_eq!(erdos_renyi(50, 100, 9), erdos_renyi(50, 100, 9));
+        assert_ne!(erdos_renyi(50, 100, 9), erdos_renyi(50, 100, 10));
+    }
+
+    #[test]
+    fn ba_heavy_tail() {
+        let n = 2000;
+        let e = barabasi_albert(n, 4, 0.5, 7);
+        let (mean, max) = in_degree_tail(&e, n);
+        // preferential attachment: max in-degree far above mean
+        assert!(max as f64 > 10.0 * mean, "max {max} mean {mean}");
+        // no dups/self-loops
+        let set: std::collections::HashSet<_> = e.iter().collect();
+        assert_eq!(set.len(), e.len());
+        assert!(e.iter().all(|&(u, v)| u != v));
+    }
+
+    #[test]
+    fn copying_web_heavy_tail_and_out_degree() {
+        let n = 2000;
+        let d = 8;
+        let e = copying_web(n, d, 0.6, 3);
+        let (mean, max) = in_degree_tail(&e, n);
+        assert!(max as f64 > 10.0 * mean, "max {max} mean {mean}");
+        // out-degree bounded by d
+        let mut od = vec![0usize; n];
+        for &(u, _) in &e {
+            od[u as usize] += 1;
+        }
+        assert!(od.iter().all(|&x| x <= d));
+    }
+
+    #[test]
+    fn citation_is_acyclic() {
+        let e = citation_dag(500, 5, 11);
+        assert!(e.iter().all(|&(u, v)| v < u), "edges must point back in time");
+        let (g, dups) = DynamicGraph::from_edges(e.iter().copied());
+        assert_eq!(dups, 0);
+        assert!(g.num_edges() > 500);
+    }
+
+    #[test]
+    fn ego_core_is_dense() {
+        let e = ego_network(500, 50, 0.4, 4, 13);
+        let core_edges = e.iter().filter(|&&(u, v)| u < 50 && v < 50).count();
+        // expected ~ 0.4 * 50 * 49 ≈ 980
+        assert!(core_edges > 600, "core {core_edges}");
+        let set: std::collections::HashSet<_> = e.iter().collect();
+        assert_eq!(set.len(), e.len());
+    }
+
+    #[test]
+    fn all_generators_load_into_dynamic_graph() {
+        for e in [
+            erdos_renyi(100, 300, 1),
+            barabasi_albert(100, 3, 0.3, 2),
+            copying_web(100, 4, 0.5, 3),
+            citation_dag(100, 3, 4),
+            ego_network(100, 20, 0.3, 3, 5),
+        ] {
+            let (g, dups) = DynamicGraph::from_edges(e.iter().copied());
+            assert_eq!(dups, 0, "generators must not emit duplicates");
+            assert_eq!(g.num_edges(), e.len());
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Edge-list and stream file I/O.
+//!
+//! Format: tab- or whitespace-separated `src dst` per line, `#` comments,
+//! exactly the layout of SNAP/LAW exports and of the paper's offline
+//! stream files (§5: “for each dataset and stream size, we defined
+//! (offline) a tab-separated file containing the stream of edge
+//! additions”).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::generate::EdgeList;
+
+/// Parse an edge list from a reader.
+pub fn read_edges<R: std::io::Read>(r: R) -> Result<EdgeList> {
+    let mut edges = Vec::new();
+    for (lineno, line) in BufReader::new(r).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => return Err(Error::Parse(format!("line {}: expected 'src dst'", lineno + 1))),
+        };
+        let u: u64 = u
+            .parse()
+            .map_err(|_| Error::Parse(format!("line {}: bad src {u:?}", lineno + 1)))?;
+        let v: u64 = v
+            .parse()
+            .map_err(|_| Error::Parse(format!("line {}: bad dst {v:?}", lineno + 1)))?;
+        edges.push((u, v));
+    }
+    Ok(edges)
+}
+
+/// Load an edge list from a file path.
+pub fn load_edges(path: impl AsRef<Path>) -> Result<EdgeList> {
+    read_edges(std::fs::File::open(path)?)
+}
+
+/// Write an edge list as TSV.
+pub fn write_edges<W: Write>(w: W, edges: &[(u64, u64)], header: Option<&str>) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    if let Some(h) = header {
+        for line in h.lines() {
+            writeln!(w, "# {line}")?;
+        }
+    }
+    for &(u, v) in edges {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Save an edge list to a file path.
+pub fn save_edges(path: impl AsRef<Path>, edges: &[(u64, u64)], header: Option<&str>) -> Result<()> {
+    write_edges(std::fs::File::create(path)?, edges, header)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_header_and_comments() {
+        let edges = vec![(1, 2), (3, 4), (1000000007, 5)];
+        let mut buf = Vec::new();
+        write_edges(&mut buf, &edges, Some("test graph\nsecond line")).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("# test graph\n# second line\n"));
+        let back = read_edges(&buf[..]).unwrap();
+        assert_eq!(back, edges);
+    }
+
+    #[test]
+    fn parses_mixed_whitespace_and_blank_lines() {
+        let src = "\n# c\n1 2\n3\t4\n  5   6  \n";
+        assert_eq!(read_edges(src.as_bytes()).unwrap(), vec![(1, 2), (3, 4), (5, 6)]);
+    }
+
+    #[test]
+    fn reports_line_numbers_on_errors() {
+        let e = read_edges("1 2\nxyz 4\n".as_bytes()).unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e2 = read_edges("1\n".as_bytes()).unwrap_err();
+        assert!(e2.to_string().contains("line 1"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("veilgraph-io-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("edges.tsv");
+        let edges = vec![(7, 8), (9, 10)];
+        save_edges(&p, &edges, None).unwrap();
+        assert_eq!(load_edges(&p).unwrap(), edges);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,20 @@
+//! Graph substrate: dynamic directed graphs, CSR snapshots, traversal,
+//! synthetic generators and edge-list I/O.
+//!
+//! Replaces Flink Gelly's graph layer in the paper's stack. The
+//! [`dynamic::DynamicGraph`] is the mutable store the stream applies
+//! updates to; [`csr::Csr`] is the frozen snapshot the PageRank kernels
+//! consume (pull-based, so we store *in*-edges CSR plus an out-degree
+//! array).
+
+pub mod csr;
+pub mod dynamic;
+pub mod generate;
+pub mod io;
+pub mod traversal;
+
+/// Vertex identifier as seen by users (sparse, stable across updates).
+pub type VertexId = u64;
+
+/// Dense internal index after id-compaction (CSR position).
+pub type VertexIdx = u32;

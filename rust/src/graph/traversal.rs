@@ -1,0 +1,207 @@
+//! Breadth-first neighborhood expansion.
+//!
+//! The paper's `K_n` (Eq. 3) expands a uniform diameter `n` around the
+//! seed set `K_r`; `K_Δ` (Eq. 4) expands a *per-vertex* radius `f_Δ(v)`.
+//! Both reduce to a multi-source BFS with per-frontier-vertex depth
+//! budgets, implemented here over the [`DynamicGraph`] adjacency (both
+//! edge directions — update locality propagates along either).
+
+use std::collections::VecDeque;
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::VertexIdx;
+
+/// Which adjacency to walk during expansion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Out,
+    In,
+    Both,
+}
+
+fn push_neighbors(
+    g: &DynamicGraph,
+    v: VertexIdx,
+    dir: Direction,
+    mut f: impl FnMut(VertexIdx),
+) {
+    if matches!(dir, Direction::Out | Direction::Both) {
+        for &w in g.out_neighbors(v) {
+            f(w);
+        }
+    }
+    if matches!(dir, Direction::In | Direction::Both) {
+        for &w in g.in_neighbors(v) {
+            f(w);
+        }
+    }
+}
+
+/// Multi-source BFS up to `max_depth` hops; returns `(vertex, depth)` for
+/// every vertex reached (seeds at depth 0, each vertex reported once at
+/// its minimum depth).
+pub fn bfs_multi(
+    g: &DynamicGraph,
+    seeds: &[VertexIdx],
+    max_depth: u32,
+    dir: Direction,
+) -> Vec<(VertexIdx, u32)> {
+    let n = g.num_vertices();
+    let mut depth = vec![u32::MAX; n];
+    let mut out = Vec::new();
+    let mut q = VecDeque::new();
+    for &s in seeds {
+        if depth[s as usize] == u32::MAX {
+            depth[s as usize] = 0;
+            out.push((s, 0));
+            q.push_back(s);
+        }
+    }
+    while let Some(v) = q.pop_front() {
+        let d = depth[v as usize];
+        if d >= max_depth {
+            continue;
+        }
+        push_neighbors(g, v, dir, |w| {
+            if depth[w as usize] == u32::MAX {
+                depth[w as usize] = d + 1;
+                out.push((w, d + 1));
+                q.push_back(w);
+            }
+        });
+    }
+    out
+}
+
+/// BFS where each seed carries its own depth budget (the `K_Δ` shape):
+/// vertex `w` is reached if some seed `s` with budget `b_s` satisfies
+/// `dist(s, w) <= b_s`. Implemented as a best-budget propagation: the
+/// frontier carries the *remaining* budget, and a vertex is re-expanded
+/// only if reached with a strictly larger remaining budget.
+pub fn bfs_budgeted(
+    g: &DynamicGraph,
+    seeds: &[(VertexIdx, u32)],
+    dir: Direction,
+) -> Vec<VertexIdx> {
+    let n = g.num_vertices();
+    // remaining[v] = best remaining budget when v was reached (+1 offset; 0
+    // = unreached).
+    let mut remaining = vec![0u32; n];
+    let mut q = VecDeque::new();
+    for &(s, b) in seeds {
+        let r = b.saturating_add(1);
+        if r > remaining[s as usize] {
+            remaining[s as usize] = r;
+            q.push_back(s);
+        }
+    }
+    let mut out: Vec<VertexIdx> = Vec::new();
+    while let Some(v) = q.pop_front() {
+        let r = remaining[v as usize];
+        if r <= 1 {
+            continue; // no budget left to expand
+        }
+        push_neighbors(g, v, dir, |w| {
+            if r - 1 > remaining[w as usize] {
+                remaining[w as usize] = r - 1;
+                q.push_back(w);
+            }
+        });
+    }
+    for v in 0..n {
+        if remaining[v] > 0 {
+            out.push(v as VertexIdx);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dynamic::DynamicGraph;
+
+    /// Path graph 0 -> 1 -> 2 -> 3 -> 4 (ids == indices).
+    fn path() -> DynamicGraph {
+        let (g, _) = DynamicGraph::from_edges((0..4).map(|i| (i, i + 1)));
+        g
+    }
+
+    #[test]
+    fn bfs_depth_limits() {
+        let g = path();
+        let r = bfs_multi(&g, &[0], 2, Direction::Out);
+        let mut got: Vec<_> = r.iter().map(|&(v, d)| (v, d)).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 0), (1, 1), (2, 2)]);
+    }
+
+    #[test]
+    fn bfs_depth_zero_returns_seeds_only() {
+        let g = path();
+        let r = bfs_multi(&g, &[2], 0, Direction::Both);
+        assert_eq!(r, vec![(2, 0)]);
+    }
+
+    #[test]
+    fn bfs_direction_in_walks_backwards() {
+        let g = path();
+        let r = bfs_multi(&g, &[4], 10, Direction::In);
+        assert_eq!(r.len(), 5);
+        let r_out = bfs_multi(&g, &[4], 10, Direction::Out);
+        assert_eq!(r_out.len(), 1);
+    }
+
+    #[test]
+    fn bfs_both_reaches_everything_from_middle() {
+        let g = path();
+        let r = bfs_multi(&g, &[2], 10, Direction::Both);
+        assert_eq!(r.len(), 5);
+    }
+
+    #[test]
+    fn multi_source_reports_min_depth() {
+        let g = path();
+        let r = bfs_multi(&g, &[0, 3], 1, Direction::Out);
+        let mut got: Vec<_> = r.into_iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 0), (1, 1), (3, 0), (4, 1)]);
+    }
+
+    #[test]
+    fn budgeted_respects_per_seed_budgets() {
+        let g = path();
+        // seed 0 with budget 1, seed 3 with budget 0
+        let mut r = bfs_budgeted(&g, &[(0, 1), (3, 0)], Direction::Out);
+        r.sort_unstable();
+        assert_eq!(r, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn budgeted_takes_best_budget_on_overlap() {
+        let g = path();
+        // seed 0 twice: once with 0, once with 3 — the larger must win.
+        let mut r = bfs_budgeted(&g, &[(0, 0), (0, 3)], Direction::Out);
+        r.sort_unstable();
+        assert_eq!(r, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn budgeted_empty_seeds() {
+        let g = path();
+        assert!(bfs_budgeted(&g, &[], Direction::Both).is_empty());
+    }
+
+    #[test]
+    fn budgeted_equals_uniform_bfs_when_budgets_equal() {
+        let (g, _) = DynamicGraph::from_edges(vec![
+            (0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 5), (5, 3), (1, 4),
+        ]);
+        let seeds = [0u32, 5u32];
+        let uniform: std::collections::BTreeSet<u32> =
+            bfs_multi(&g, &seeds, 2, Direction::Both).into_iter().map(|(v, _)| v).collect();
+        let budgeted: std::collections::BTreeSet<u32> =
+            bfs_budgeted(&g, &[(0, 2), (5, 2)], Direction::Both).into_iter().collect();
+        assert_eq!(uniform, budgeted);
+    }
+}

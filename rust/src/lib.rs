@@ -1,0 +1,64 @@
+//! # VeilGraph — streaming graph approximations
+//!
+//! A Rust + JAX + Pallas reproduction of *“VeilGraph: Streaming Graph
+//! Approximations”* (Coimbra, Rosa, Esteves, Francisco, Veiga, 2018 —
+//! originally published as *GraphBolt*; see DESIGN.md for the identity
+//! note).
+//!
+//! VeilGraph processes a stream of graph updates and serves approximate
+//! graph-algorithm results (PageRank as the case study) by restricting
+//! recomputation to a set of **hot vertices** `K = K_r ∪ K_n ∪ K_Δ` and a
+//! **summary graph** in which a single *big vertex* `B` aggregates every
+//! non-hot vertex.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — stream ingestion, update statistics, hot-vertex
+//!   selection, summary construction, the Alg.-1 UDF pipeline, query
+//!   serving, metrics and the experiment harness.
+//! * **Runtime** — [`runtime`] loads AOT-compiled HLO-text artifacts
+//!   (produced once by `python/compile/aot.py`) and executes them through
+//!   PJRT via the `xla` crate. Python never runs on the request path.
+//! * **L2/L1** — the summarized PageRank iteration itself: a JAX model
+//!   wrapping a Pallas kernel (`python/compile/`), lowered per capacity.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use veilgraph::prelude::*;
+//!
+//! let mut engine = EngineBuilder::new()
+//!     .params(SummaryParams::new(0.2, 1, 0.5))
+//!     .build_from_edges(vec![(0, 1), (1, 2), (2, 0)])
+//!     .unwrap();
+//! engine.ingest(EdgeOp::add(0, 2));
+//! let result = engine.query().unwrap();
+//! println!("top vertex = {:?}", result.top(1));
+//! ```
+
+pub mod bench;
+pub mod community;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod pagerank;
+pub mod runtime;
+pub mod stream;
+pub mod summary;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports of the most commonly used public items.
+pub mod prelude {
+    pub use crate::coordinator::engine::{Engine, EngineBuilder, QueryResult};
+    pub use crate::coordinator::udf::{Action, UdfSuite};
+    pub use crate::error::{Error, Result};
+    pub use crate::graph::csr::Csr;
+    pub use crate::graph::dynamic::DynamicGraph;
+    pub use crate::pagerank::power::{PageRank, PageRankConfig};
+    pub use crate::runtime::executor::{Backend, SummarizedExecutor};
+    pub use crate::stream::event::{EdgeOp, UpdateEvent};
+    pub use crate::summary::params::SummaryParams;
+}

@@ -1,0 +1,288 @@
+//! `veilgraph` — the leader binary.
+//!
+//! Subcommands:
+//! * `serve`      — run the query server (TCP JSON line protocol).
+//! * `generate`   — emit a synthetic dataset stand-in as TSV.
+//! * `experiment` — run the paper's protocol for one dataset, write CSVs.
+//! * `figures`    — regenerate paper figures (Table 1 + Figs. 3–30).
+//! * `info`       — artifact/platform diagnostics.
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::{serve_tcp, ServerHandle};
+use veilgraph::error::{Error, Result};
+use veilgraph::experiments::datasets::{all_datasets, dataset_by_name, table1};
+use veilgraph::experiments::figures::{figure_by_number, figures_for_dataset, render_figure};
+use veilgraph::experiments::harness::{run_experiment, HarnessConfig};
+use veilgraph::experiments::report::{headline, write_experiment};
+use veilgraph::graph::io::{load_edges, save_edges};
+use veilgraph::pagerank::power::PageRankConfig;
+use veilgraph::stream::backpressure::OverflowPolicy;
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::cli::Command;
+use veilgraph::util::timer::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest),
+        None => ("help", &[] as &[String]),
+    };
+    match cmd {
+        "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
+        "experiment" => cmd_experiment(rest),
+        "figures" => cmd_figures(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown command {other:?}\n\n{}", usage()))),
+    }
+}
+
+fn usage() -> String {
+    "veilgraph — streaming graph approximations\n\n\
+     commands:\n\
+       serve       run the query server (TCP JSON line protocol)\n\
+       generate    emit a synthetic dataset stand-in as TSV\n\
+       experiment  run the paper's protocol for one dataset\n\
+       figures     regenerate paper figures (Table 1 + Figs. 3-30)\n\
+       info        artifact/platform diagnostics\n\n\
+     run `veilgraph <command> --help` for options"
+        .to_string()
+}
+
+fn params_from(p: &veilgraph::util::cli::Parsed) -> Result<SummaryParams> {
+    Ok(SummaryParams::new(
+        p.req_parse::<f64>("r")?,
+        p.req_parse::<u32>("n")?,
+        p.req_parse::<f64>("delta")?,
+    ))
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "run the VeilGraph query server")
+        .opt("addr", "listen address", Some("127.0.0.1:7421"))
+        .opt("graph", "initial graph TSV (default: empty graph)", None)
+        .opt("dataset", "or: generate a stand-in dataset by name", None)
+        .opt("scale", "stand-in scale factor", Some("0.05"))
+        .opt("r", "update-ratio threshold", Some("0.2"))
+        .opt("n", "neighborhood diameter", Some("1"))
+        .opt("delta", "vertex-specific extension Δ", Some("0.1"))
+        .opt("artifacts", "artifacts dir for the XLA backend", Some("artifacts"))
+        .opt("queue", "ingestion queue capacity", Some("65536"))
+        .flag("no-xla", "force the sparse executor")
+        .flag("help", "show usage");
+    let p = cmd.parse(args)?;
+    if p.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let edges = initial_edges(&p)?;
+    let mut builder = EngineBuilder::new().params(params_from(&p)?);
+    if !p.flag("no-xla") {
+        let dir = p.get("artifacts").unwrap();
+        if std::path::Path::new(dir).join("manifest.json").is_file() {
+            builder = builder.artifacts_dir(dir).warmup(true);
+        } else {
+            eprintln!("note: {dir}/manifest.json missing — using sparse executor");
+        }
+    }
+    let engine = builder.build_from_edges(edges)?;
+    println!(
+        "engine ready: |V|={}, |E|={}, xla={}",
+        engine.graph().num_vertices(),
+        engine.graph().num_edges(),
+        engine.has_xla()
+    );
+    let handle = ServerHandle::spawn(engine, p.req_parse::<usize>("queue")?, OverflowPolicy::Block);
+    serve_tcp(handle, p.get("addr").unwrap())
+}
+
+fn initial_edges(p: &veilgraph::util::cli::Parsed) -> Result<Vec<(u64, u64)>> {
+    if let Some(path) = p.get("graph") {
+        return load_edges(path);
+    }
+    if let Some(name) = p.get("dataset") {
+        let spec = dataset_by_name(name)
+            .ok_or_else(|| Error::Usage(format!("unknown dataset {name:?}")))?;
+        return Ok(spec.generate(p.req_parse::<f64>("scale")?));
+    }
+    Ok(Vec::new())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let cmd = Command::new("generate", "emit a synthetic dataset stand-in as TSV")
+        .opt("dataset", "stand-in name (see `figures --table1`)", Some("web-cnr"))
+        .opt("scale", "scale factor (1.0 = DESIGN.md Table 1b)", Some("0.1"))
+        .opt("out", "output TSV path", None)
+        .flag("help", "show usage");
+    let p = cmd.parse(args)?;
+    if p.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let name = p.get("dataset").unwrap();
+    let scale = p.req_parse::<f64>("scale")?;
+    let spec =
+        dataset_by_name(name).ok_or_else(|| Error::Usage(format!("unknown dataset {name:?}")))?;
+    let edges = spec.generate(scale);
+    let header = format!(
+        "VeilGraph stand-in {} for {} at scale {scale} ({} edges)",
+        spec.name,
+        spec.paper_name,
+        edges.len()
+    );
+    match p.get("out") {
+        Some(path) => {
+            save_edges(path, &edges, Some(&header))?;
+            println!("wrote {} edges to {path}", edges.len());
+        }
+        None => {
+            let mut out = Vec::new();
+            veilgraph::graph::io::write_edges(&mut out, &edges, Some(&header))?;
+            print!("{}", String::from_utf8_lossy(&out));
+        }
+    }
+    Ok(())
+}
+
+fn harness_from(p: &veilgraph::util::cli::Parsed) -> Result<HarnessConfig> {
+    Ok(HarnessConfig {
+        q: p.req_parse::<usize>("queries")?,
+        pagerank: PageRankConfig {
+            beta: p.req_parse::<f64>("beta")?,
+            epsilon: 1e-8,
+            max_iters: 100,
+            dangling_redistribution: false,
+            normalized: false,
+            warm_start_exact: true,
+        },
+        seed: p.req_parse::<u64>("seed")?,
+        workers: p.req_parse::<usize>("workers")?,
+        ..Default::default()
+    })
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let cmd = Command::new("experiment", "run the paper protocol for one dataset")
+        .opt("dataset", "stand-in name", Some("social-enron"))
+        .opt("scale", "dataset scale factor", Some("0.1"))
+        .opt("queries", "queries per stream (paper: 50)", Some("50"))
+        .opt("beta", "PageRank damping factor", Some("0.85"))
+        .opt("seed", "stream sampling seed", Some("7"))
+        .opt("workers", "parallel combination replays", Some("8"))
+        .opt("out", "results directory", Some("results"))
+        .flag("help", "show usage");
+    let p = cmd.parse(args)?;
+    if p.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let name = p.get("dataset").unwrap().to_string();
+    let spec = dataset_by_name(&name)
+        .ok_or_else(|| Error::Usage(format!("unknown dataset {name:?}")))?;
+    let scale = p.req_parse::<f64>("scale")?;
+    let cfg = harness_from(&p)?;
+    let sw = veilgraph::util::timer::Stopwatch::start();
+    let edges = spec.generate(scale);
+    let result =
+        run_experiment(&name, &edges, spec.stream_len_at(scale), spec.shuffled, &cfg)?;
+    let files = write_experiment(p.get("out").unwrap(), &result)?;
+    let (speedup, rbo) = headline(&result);
+    println!("experiment {name} done in {}", fmt_duration(sw.secs()));
+    println!("  best-speedup combo: {speedup:.2}x at RBO {rbo:.4}");
+    println!("  wrote: {}", files.join(", "));
+    for fig in figures_for_dataset(&name) {
+        println!("{}", render_figure(&fig, &result));
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &[String]) -> Result<()> {
+    let cmd = Command::new("figures", "regenerate paper figures")
+        .opt("fig", "single figure number (3-30)", None)
+        .opt("scale", "dataset scale factor", Some("0.1"))
+        .opt("queries", "queries per stream", Some("50"))
+        .opt("beta", "PageRank damping factor", Some("0.85"))
+        .opt("seed", "stream sampling seed", Some("7"))
+        .opt("workers", "parallel combination replays", Some("8"))
+        .opt("out", "results directory", Some("results"))
+        .flag("all", "run every dataset (Figs. 3-30)")
+        .flag("table1", "print Table 1 (datasets) and exit")
+        .flag("help", "show usage");
+    let p = cmd.parse(args)?;
+    if p.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let scale = p.req_parse::<f64>("scale")?;
+    if p.flag("table1") {
+        println!("{}", table1(scale));
+        return Ok(());
+    }
+    let cfg = harness_from(&p)?;
+    let datasets: Vec<_> = if let Some(n) = p.get_parse::<u32>("fig")? {
+        let fig = figure_by_number(n)
+            .ok_or_else(|| Error::Usage(format!("figure {n} out of range 3-30")))?;
+        vec![dataset_by_name(fig.dataset).unwrap()]
+    } else if p.flag("all") {
+        all_datasets()
+    } else {
+        return Err(Error::Usage("pass --fig N or --all (or --table1)".into()));
+    };
+    for spec in datasets {
+        let sw = veilgraph::util::timer::Stopwatch::start();
+        let edges = spec.generate(scale);
+        let result =
+            run_experiment(spec.name, &edges, spec.stream_len_at(scale), spec.shuffled, &cfg)?;
+        write_experiment(p.get("out").unwrap(), &result)?;
+        let (speedup, rbo) = headline(&result);
+        println!(
+            "{}: {} figures written in {} (best speedup {speedup:.2}x @ RBO {rbo:.4})",
+            spec.name,
+            figures_for_dataset(spec.name).len(),
+            fmt_duration(sw.secs())
+        );
+        if let Some(n) = p.get_parse::<u32>("fig")? {
+            let fig = figure_by_number(n).unwrap();
+            println!("{}", render_figure(&fig, &result));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifact/platform diagnostics")
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .flag("help", "show usage");
+    let p = cmd.parse(args)?;
+    if p.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let dir = p.get("artifacts").unwrap();
+    match veilgraph::runtime::client::XlaRuntime::new(dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!("iters_fused: {}", rt.iters_fused());
+            println!("artifacts:");
+            for e in &rt.manifest().entries {
+                println!("  {:<28} variant={:?} capacity={}", e.name, e.variant, e.capacity);
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    Ok(())
+}

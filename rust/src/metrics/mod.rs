@@ -1,0 +1,6 @@
+//! Evaluation metrics: Rank-Biased Overlap (accuracy), ranking utilities
+//! and the engine's metrics registry.
+
+pub mod ranking;
+pub mod rbo;
+pub mod registry;

@@ -1,0 +1,84 @@
+//! Rank-list utilities: top-k extraction and the paper's truncation rule.
+//!
+//! §5.2: “for an update density lower or equal to 200 edges per update,
+//! we used the top 1000 ranks. Above the 200 edge density, we used the
+//! top 4000 ranks.”
+
+use crate::graph::VertexId;
+
+/// Extract the top-k vertex ids by score, descending; ties break by
+/// ascending id so rankings are deterministic.
+pub fn top_k_ids(ids: &[VertexId], scores: &[f64], k: usize) -> Vec<VertexId> {
+    assert_eq!(ids.len(), scores.len());
+    let mut order: Vec<usize> = (0..ids.len()).collect();
+    let k = k.min(ids.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // Partial selection then sort of the prefix — O(n + k log k).
+    order.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap().then(ids[a].cmp(&ids[b]))
+    });
+    let mut head: Vec<usize> = order[..k].to_vec();
+    head.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(ids[a].cmp(&ids[b])));
+    head.into_iter().map(|i| ids[i]).collect()
+}
+
+/// The paper's RBO truncation depth as a function of update density
+/// (edges per query).
+pub fn rbo_depth_for_density(edges_per_query: f64) -> usize {
+    if edges_per_query <= 200.0 {
+        1000
+    } else {
+        4000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_by_score_then_id() {
+        let ids = [10u64, 20, 30, 40];
+        let scores = [0.1, 0.9, 0.9, 0.5];
+        assert_eq!(top_k_ids(&ids, &scores, 3), vec![20, 30, 40]);
+        assert_eq!(top_k_ids(&ids, &scores, 1), vec![20]);
+    }
+
+    #[test]
+    fn top_k_clamps_to_len() {
+        let ids = [1u64, 2];
+        let scores = [0.5, 0.6];
+        assert_eq!(top_k_ids(&ids, &scores, 10), vec![2, 1]);
+    }
+
+    #[test]
+    fn top_k_zero_and_empty() {
+        assert!(top_k_ids(&[], &[], 5).is_empty());
+        let ids = [1u64];
+        assert_eq!(top_k_ids(&ids, &[1.0], 0).len(), 0);
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_on_random_input() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::new(5);
+        let n = 500;
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let scores: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let got = top_k_ids(&ids, &scores, 50);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+        let want: Vec<u64> = order[..50].iter().map(|&i| ids[i]).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn depth_rule_matches_paper() {
+        assert_eq!(rbo_depth_for_density(100.0), 1000);
+        assert_eq!(rbo_depth_for_density(200.0), 1000);
+        assert_eq!(rbo_depth_for_density(400.0), 4000);
+        assert_eq!(rbo_depth_for_density(800.0), 4000);
+    }
+}

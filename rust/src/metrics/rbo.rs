@@ -1,0 +1,157 @@
+//! Rank-Biased Overlap (Webber, Moffat & Zobel 2010) — the paper's
+//! accuracy metric (§5.2).
+//!
+//! RBO compares two (possibly truncated, possibly different-length)
+//! rankings, weighting agreement at high ranks more heavily; parameter
+//! `p ∈ (0,1)` sets how steeply weights decay (the expected evaluation
+//! depth is `1/(1-p)`). We implement `RBO_EXT` (the paper's Eq. 32):
+//! extrapolation of the overlap seen in the evaluated prefix to infinite
+//! depth, which is the standard point estimate.
+
+use std::collections::HashSet;
+
+/// Extrapolated RBO between two rankings (ids at decreasing relevance).
+///
+/// Handles uneven lengths per Webber §4.3. Returns a value in [0, 1]:
+/// 1 ⇔ identical prefixes, 0 ⇔ disjoint.
+pub fn rbo_ext<T: std::hash::Hash + Eq + Copy>(list_s: &[T], list_l: &[T], p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0, "p must be in (0,1)");
+    // s = shorter length, l = longer
+    let (short, long) = if list_s.len() <= list_l.len() { (list_s, list_l) } else { (list_l, list_s) };
+    let s = short.len();
+    let l = long.len();
+    if l == 0 {
+        return 1.0; // two empty rankings agree vacuously
+    }
+    if s == 0 {
+        return 0.0;
+    }
+
+    let mut seen_short: HashSet<T> = HashSet::with_capacity(s);
+    let mut seen_long: HashSet<T> = HashSet::with_capacity(l);
+    let mut x = 0usize; // overlap |S ∩ L| at depth d
+    let mut x_s = 0usize; // overlap at depth s (fixed once d > s)
+    let mut sum1 = 0.0; // Σ_{d=1}^{l} X_d/d · p^d
+    let mut sum2 = 0.0; // Σ_{d=s+1}^{l} X_s·(d-s)/(s·d) · p^d
+    let mut pd = 1.0; // p^d, updated incrementally
+
+    for d in 1..=l {
+        pd *= p;
+        if d <= s {
+            let a = short[d - 1];
+            let b = long[d - 1];
+            if a == b {
+                x += 1;
+            } else {
+                if seen_long.contains(&a) {
+                    x += 1;
+                }
+                if seen_short.contains(&b) {
+                    x += 1;
+                }
+                seen_short.insert(a);
+                seen_long.insert(b);
+            }
+            if d == s {
+                x_s = x;
+            }
+        } else {
+            let b = long[d - 1];
+            if seen_short.contains(&b) {
+                x += 1;
+            }
+            sum2 += x_s as f64 * (d - s) as f64 / (s as f64 * d as f64) * pd;
+        }
+        sum1 += x as f64 / d as f64 * pd;
+    }
+    let x_l = x;
+    let p_l = p.powi(l as i32);
+    let ext = ((x_l - x_s) as f64 / l as f64 + x_s as f64 / s as f64) * p_l;
+    ((1.0 - p) / p * (sum1 + sum2) + ext).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_lists_give_one() {
+        let a = [1u64, 2, 3, 4, 5];
+        let v = rbo_ext(&a, &a, 0.9);
+        assert!((v - 1.0).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn disjoint_lists_give_zero() {
+        let a = [1u64, 2, 3];
+        let b = [4u64, 5, 6];
+        let v = rbo_ext(&a, &b, 0.9);
+        assert!(v.abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn higher_ranks_weigh_more() {
+        let base = [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        // swap at the top vs swap at the bottom
+        let mut top = base;
+        top.swap(0, 1);
+        let mut bottom = base;
+        bottom.swap(8, 9);
+        let v_top = rbo_ext(&base, &top, 0.9);
+        let v_bottom = rbo_ext(&base, &bottom, 0.9);
+        assert!(v_top < v_bottom, "top {v_top} vs bottom {v_bottom}");
+    }
+
+    #[test]
+    fn symmetric_in_arguments() {
+        let a = [1u64, 2, 3, 4, 5, 6];
+        let b = [2u64, 1, 3, 7, 8];
+        let v1 = rbo_ext(&a, &b, 0.95);
+        let v2 = rbo_ext(&b, &a, 0.95);
+        assert!((v1 - v2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uneven_lengths_with_identical_prefix_stay_high() {
+        let long: Vec<u64> = (0..100).collect();
+        let short: Vec<u64> = (0..50).collect();
+        let v = rbo_ext(&short, &long, 0.98);
+        assert!(v > 0.95, "prefix agreement should extrapolate high, got {v}");
+    }
+
+    #[test]
+    fn known_value_two_element_example() {
+        // S = [a, b], L = [b, a]: X_1 = 0, X_2 = 2.
+        // RBO_EXT = (1-p)/p * (0·p/1 + 2/2·p²) + (2/2)·p² — with s = l = 2:
+        // = (1-p)·p + p². For p = 0.5: 0.25 + 0.25 = 0.5.
+        let v = rbo_ext(&[1u64, 2], &[2u64, 1], 0.5);
+        assert!((v - 0.5).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn partial_overlap_monotone_in_p_depth_weighting() {
+        // deeper-biased p (larger) should value the long agreeing tail more
+        let a: Vec<u64> = (0..200).collect();
+        let mut b = a.clone();
+        b.swap(0, 1); // disagreement only at the very top
+        let shallow = rbo_ext(&a, &b, 0.8);
+        let deep = rbo_ext(&a, &b, 0.995);
+        assert!(deep > shallow);
+    }
+
+    #[test]
+    fn empty_cases() {
+        let e: [u64; 0] = [];
+        assert_eq!(rbo_ext(&e, &e, 0.9), 1.0);
+        assert_eq!(rbo_ext(&e, &[1u64, 2], 0.9), 0.0);
+    }
+
+    #[test]
+    fn duplicate_free_assumption_holds_on_clamp() {
+        // even adversarial input stays within [0,1]
+        let a = [1u64, 1, 1];
+        let b = [1u64, 2, 3];
+        let v = rbo_ext(&a, &b, 0.9);
+        assert!((0.0..=1.0).contains(&v));
+    }
+}

@@ -1,0 +1,127 @@
+//! Engine metrics registry: counters, gauges and timing series exposed to
+//! the `OnQueryResult` UDF (the paper gives it “execution statistics
+//! (such as total execution time, physical space, network traffic …)”).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::Moments;
+
+/// A process-local metrics registry.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timings: BTreeMap<String, Moments>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    /// Set a gauge.
+    pub fn set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record a timing observation (seconds).
+    pub fn time(&mut self, name: &str, secs: f64) {
+        self.timings.entry(name.to_string()).or_default().push(secs);
+    }
+
+    /// Counter value (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Timing moments for a series.
+    pub fn timing(&self, name: &str) -> Option<&Moments> {
+        self.timings.get(name)
+    }
+
+    /// Export everything as JSON (for the server's `stats` command and
+    /// experiment reports).
+    pub fn to_json(&self) -> Json {
+        let counters =
+            Json::Obj(self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect());
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
+        let timings = Json::Obj(
+            self.timings
+                .iter()
+                .map(|(k, m)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(m.count() as f64)),
+                            ("mean", Json::Num(m.mean())),
+                            ("stddev", Json::Num(m.stddev())),
+                            ("min", Json::Num(if m.count() == 0 { 0.0 } else { m.min() })),
+                            ("max", Json::Num(if m.count() == 0 { 0.0 } else { m.max() })),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("gauges", gauges), ("timings", timings)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = MetricsRegistry::new();
+        m.inc("queries", 1);
+        m.inc("queries", 2);
+        assert_eq!(m.counter("queries"), 3);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut m = MetricsRegistry::new();
+        m.set("k_ratio", 0.1);
+        m.set("k_ratio", 0.2);
+        assert_eq!(m.gauge("k_ratio"), Some(0.2));
+    }
+
+    #[test]
+    fn timings_track_moments() {
+        let mut m = MetricsRegistry::new();
+        m.time("query", 1.0);
+        m.time("query", 3.0);
+        let t = m.timing("query").unwrap();
+        assert_eq!(t.count(), 2);
+        assert!((t.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let mut m = MetricsRegistry::new();
+        m.inc("a", 5);
+        m.set("g", 1.5);
+        m.time("t", 0.25);
+        let j = m.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("counters").unwrap().get("a").unwrap().as_u64(), Some(5));
+        assert_eq!(
+            parsed.get("timings").unwrap().get("t").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+    }
+}

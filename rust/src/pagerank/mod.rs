@@ -1,0 +1,6 @@
+//! PageRank: the exact power-method baseline and the rust-native
+//! summarized executor (the XLA-backed executor lives in
+//! [`crate::runtime`]).
+
+pub mod power;
+pub mod summarized;

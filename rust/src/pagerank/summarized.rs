@@ -1,0 +1,200 @@
+//! Rust-native summarized PageRank over a [`SummaryGraph`].
+//!
+//! Semantically identical to the XLA path (L2/L1 artifacts) — this sparse
+//! executor is (a) the fallback when `|K|` exceeds the largest AOT
+//! capacity, (b) the cross-check oracle for the runtime integration
+//! tests, and (c) ablation A1's comparison point.
+//!
+//! Update rule over the summary graph (teleport uses the FULL graph's
+//! |V| so summary ranks remain comparable to full ranks):
+//!
+//! ```text
+//! r'_z = (1-β)/n + β · ( Σ_{(u,z) ∈ E_K} val((u,z)) · r_u  +  b_z )
+//! ```
+
+use crate::pagerank::power::PageRankConfig;
+use crate::summary::bigvertex::SummaryGraph;
+
+/// Result of a summarized run (ranks are per *local* summary index).
+#[derive(Clone, Debug)]
+pub struct SummarizedResult {
+    pub ranks: Vec<f64>,
+    pub iterations: usize,
+    pub last_delta: f64,
+}
+
+/// Run the summarized power method starting from the summary's warm-start
+/// ranks (`r0` = previous measurement point's ranks of the hot vertices).
+pub fn run_summarized(s: &SummaryGraph, cfg: &PageRankConfig) -> SummarizedResult {
+    let k = s.num_vertices();
+    if k == 0 {
+        return SummarizedResult { ranks: vec![], iterations: 0, last_delta: 0.0 };
+    }
+    let teleport = cfg.teleport(s.full_n);
+    let epsilon = cfg.scaled_epsilon(s.full_n);
+    let mut ranks = s.r0.clone();
+    let mut next = vec![0.0f64; k];
+    let mut iterations = 0;
+    let mut last_delta = f64::INFINITY;
+    for _ in 0..cfg.max_iters {
+        let mut delta = 0.0;
+        for z in 0..k {
+            let mut sum = s.b[z];
+            for &(u, w) in s.row(z) {
+                sum += w as f64 * ranks[u as usize];
+            }
+            let x = teleport + cfg.beta * sum;
+            delta += (x - ranks[z]).abs();
+            next[z] = x;
+        }
+        iterations += 1;
+        last_delta = delta;
+        std::mem::swap(&mut ranks, &mut next);
+        if cfg.epsilon > 0.0 && last_delta < epsilon {
+            break;
+        }
+    }
+    SummarizedResult { ranks, iterations, last_delta }
+}
+
+/// Merge summarized ranks back into the full rank vector: hot vertices
+/// take their recomputed scores, everything else keeps its previous rank
+/// (“outside vertices are not worth recomputing” — §3). Returns the
+/// updated full vector, growing it with `(1-β)/n` defaults if the graph
+/// gained vertices since `prev`.
+pub fn merge_ranks(
+    prev: &[f64],
+    s: &SummaryGraph,
+    summarized: &[f64],
+    default_rank: f64,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(s.full_n);
+    out.extend_from_slice(&prev[..prev.len().min(s.full_n)]);
+    out.resize(s.full_n, default_rank);
+    for (li, &v) in s.vertices.iter().enumerate() {
+        out[v as usize] = summarized[li];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dynamic::DynamicGraph;
+    use crate::pagerank::power::PageRank;
+    use crate::summary::hot::HotSet;
+
+    fn full_hot(g: &DynamicGraph) -> HotSet {
+        let idxs: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        HotSet { k_r: idxs.clone(), k_n: vec![], k_delta: vec![], hot: vec![true; g.num_vertices()] }
+    }
+
+    fn cfg() -> PageRankConfig {
+        PageRankConfig {
+            beta: 0.85,
+            max_iters: 200,
+            epsilon: 1e-12,
+            normalized: true,
+            ..Default::default()
+        }
+    }
+
+    /// When K = V the summary graph IS the graph: summarized PageRank must
+    /// equal the exact power method.
+    #[test]
+    fn full_hot_set_reduces_to_exact_pagerank() {
+        let (g, _) = DynamicGraph::from_edges(vec![
+            (0, 1), (1, 2), (2, 0), (2, 3), (3, 0), (0, 3), (3, 4), (4, 2),
+        ]);
+        let n = g.num_vertices();
+        let prev = vec![1.0 / n as f64; n];
+        let s = SummaryGraph::build(&g, &full_hot(&g), &prev, 0.0);
+        assert_eq!(s.num_boundary_edges, 0);
+        let sr = run_summarized(&s, &cfg());
+        let exact = PageRank::new(cfg()).run(&g.snapshot());
+        for (li, &v) in s.vertices.iter().enumerate() {
+            assert!(
+                (sr.ranks[li] - exact.ranks[v as usize]).abs() < 1e-9,
+                "vertex {v}: {} vs {}",
+                sr.ranks[li],
+                exact.ranks[v as usize]
+            );
+        }
+    }
+
+    /// Langville–Meyer sanity: if the graph did not change and prev ranks
+    /// are the exact fixed point, the summarized run must stay at that
+    /// fixed point regardless of which K was chosen.
+    #[test]
+    fn fixed_point_is_preserved_for_any_hot_set() {
+        let (g, _) = DynamicGraph::from_edges(vec![
+            (0, 1), (1, 2), (2, 0), (2, 3), (3, 0), (0, 3), (3, 4), (4, 2), (1, 4),
+        ]);
+        let exact = PageRank::new(cfg()).run(&g.snapshot());
+        for k_set in [vec![0u32, 1], vec![2u32, 3, 4], vec![1u32]] {
+            let mut hot = vec![false; g.num_vertices()];
+            for &i in &k_set {
+                hot[i as usize] = true;
+            }
+            let hs = HotSet { k_r: k_set.clone(), k_n: vec![], k_delta: vec![], hot };
+            let s = SummaryGraph::build(&g, &hs, &exact.ranks, 0.0);
+            let sr = run_summarized(&s, &cfg());
+            for (li, &v) in s.vertices.iter().enumerate() {
+                assert!(
+                    (sr.ranks[li] - exact.ranks[v as usize]).abs() < 1e-9,
+                    "K={k_set:?} vertex {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_summary_is_noop() {
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1)]);
+        let hs = HotSet { k_r: vec![], k_n: vec![], k_delta: vec![], hot: vec![false; 2] };
+        let s = SummaryGraph::build(&g, &hs, &[0.5, 0.5], 0.0);
+        let sr = run_summarized(&s, &cfg());
+        assert!(sr.ranks.is_empty());
+        let merged = merge_ranks(&[0.5, 0.5], &s, &sr.ranks, 0.15 / 2.0);
+        assert_eq!(merged, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn merge_overwrites_only_hot_vertices() {
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1), (1, 2), (2, 0)]);
+        let mut hot = vec![false; 3];
+        hot[1] = true;
+        let hs = HotSet { k_r: vec![1], k_n: vec![], k_delta: vec![], hot };
+        let prev = vec![0.3, 0.3, 0.4];
+        let s = SummaryGraph::build(&g, &hs, &prev, 0.0);
+        let merged = merge_ranks(&prev, &s, &[0.9], 0.1);
+        assert_eq!(merged, vec![0.3, 0.9, 0.4]);
+    }
+
+    #[test]
+    fn merge_grows_vector_for_new_vertices() {
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1), (1, 2), (2, 3)]);
+        let mut hot = vec![false; 4];
+        hot[3] = true;
+        let hs = HotSet { k_r: vec![3], k_n: vec![], k_delta: vec![], hot };
+        let prev = vec![0.3, 0.3]; // graph grew from 2 to 4 vertices
+        let s = SummaryGraph::build(&g, &hs, &prev, 0.0);
+        let sr = run_summarized(&s, &cfg());
+        let merged = merge_ranks(&prev, &s, &sr.ranks, 0.15 / 4.0);
+        assert_eq!(merged.len(), 4);
+        assert_eq!(merged[0], 0.3);
+        let default = 0.15 / 4.0;
+        assert!((merged[2] - default).abs() < 1e-12, "untouched new vertex gets default");
+        assert_eq!(merged[3], sr.ranks[0]);
+    }
+
+    #[test]
+    fn convergence_reported() {
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1), (1, 0)]);
+        // Start far from the fixed point so convergence takes >1 iteration.
+        let s = SummaryGraph::build(&g, &full_hot(&g), &[0.9, 0.1], 0.0);
+        let sr = run_summarized(&s, &cfg());
+        assert!(sr.last_delta < 1e-12);
+        assert!(sr.iterations > 1);
+    }
+}

@@ -1,0 +1,218 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered HLO-text module (variant, capacity, output arity). The loader
+//! validates the manifest before compiling anything so a stale or
+//! partially-written artifacts directory fails fast with a clear error.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Artifact variants emitted by the AOT pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// One power iteration; 1 output (ranks).
+    Step,
+    /// `iters_fused` iterations; 2 outputs (ranks, L1 delta).
+    Run,
+}
+
+impl Variant {
+    fn parse(s: &str) -> Result<Variant> {
+        match s {
+            "step" => Ok(Variant::Step),
+            "run" => Ok(Variant::Run),
+            other => Err(Error::Artifact(format!("unknown variant {other:?}"))),
+        }
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub variant: Variant,
+    pub capacity: usize,
+    pub outputs: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// MXU tile edge the kernel was built with.
+    pub tile: usize,
+    /// Iterations fused into each `run` artifact.
+    pub iters_fused: usize,
+    /// All artifacts, sorted by (variant, capacity).
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        if json.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Artifact("manifest format must be hlo-text".into()));
+        }
+        let tile = json
+            .get("tile")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::Artifact("manifest missing tile".into()))? as usize;
+        let iters_fused = json
+            .get("iters_fused")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::Artifact("manifest missing iters_fused".into()))?
+            as usize;
+        let arts = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Artifact("artifact missing name".into()))?
+                .to_string();
+            let variant = Variant::parse(
+                a.get("variant")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing variant")))?,
+            )?;
+            let capacity = a
+                .get("capacity")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing capacity")))?
+                as usize;
+            let outputs = a.get("outputs").and_then(Json::as_u64).unwrap_or(1) as usize;
+            if capacity == 0 || capacity % tile != 0 {
+                return Err(Error::Artifact(format!(
+                    "{name}: capacity {capacity} not a positive multiple of tile {tile}"
+                )));
+            }
+            let path = dir.join(&name);
+            if !path.is_file() {
+                return Err(Error::Artifact(format!("missing artifact file {}", path.display())));
+            }
+            entries.push(ArtifactEntry { name, variant, capacity, outputs, path });
+        }
+        if entries.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        entries.sort_by_key(|e| (e.variant != Variant::Step, e.capacity));
+        Ok(Manifest { tile, iters_fused, entries })
+    }
+
+    /// Capacities available for `variant`, ascending.
+    pub fn capacities(&self, variant: Variant) -> Vec<usize> {
+        self.entries.iter().filter(|e| e.variant == variant).map(|e| e.capacity).collect()
+    }
+
+    /// Smallest capacity ≥ `needed` for `variant`.
+    pub fn pick_capacity(&self, variant: Variant, needed: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.variant == variant && e.capacity >= needed)
+            .min_by_key(|e| e.capacity)
+    }
+
+    /// Largest available capacity for `variant`.
+    pub fn max_capacity(&self, variant: Variant) -> usize {
+        self.capacities(variant).into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        for f in files {
+            let mut fh = std::fs::File::create(dir.join(f)).unwrap();
+            writeln!(fh, "HloModule fake").unwrap();
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("vg-artifact-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const GOOD: &str = r#"{
+      "format": "hlo-text", "tile": 128, "iters_fused": 10,
+      "scalars_layout": ["beta", "teleport"],
+      "artifacts": [
+        {"name": "s128.hlo.txt", "variant": "step", "capacity": 128, "outputs": 1},
+        {"name": "s256.hlo.txt", "variant": "step", "capacity": 256, "outputs": 1},
+        {"name": "r128.hlo.txt", "variant": "run", "capacity": 128, "outputs": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD, &["s128.hlo.txt", "s256.hlo.txt", "r128.hlo.txt"]);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.tile, 128);
+        assert_eq!(m.iters_fused, 10);
+        assert_eq!(m.capacities(Variant::Step), vec![128, 256]);
+        assert_eq!(m.capacities(Variant::Run), vec![128]);
+        assert_eq!(m.max_capacity(Variant::Step), 256);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn pick_capacity_selects_smallest_fit() {
+        let d = tmpdir("pick");
+        write_manifest(&d, GOOD, &["s128.hlo.txt", "s256.hlo.txt", "r128.hlo.txt"]);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.pick_capacity(Variant::Step, 1).unwrap().capacity, 128);
+        assert_eq!(m.pick_capacity(Variant::Step, 129).unwrap().capacity, 256);
+        assert!(m.pick_capacity(Variant::Step, 257).is_none());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_file_fails_fast() {
+        let d = tmpdir("missing");
+        write_manifest(&d, GOOD, &["s128.hlo.txt", "s256.hlo.txt"]); // r128 absent
+        let e = Manifest::load(&d).unwrap_err();
+        assert!(e.to_string().contains("missing artifact file"), "{e}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn unaligned_capacity_rejected() {
+        let d = tmpdir("unaligned");
+        let bad = GOOD.replace("\"capacity\": 256", "\"capacity\": 200");
+        write_manifest(&d, &bad, &["s128.hlo.txt", "s256.hlo.txt", "r128.hlo.txt"]);
+        let e = Manifest::load(&d).unwrap_err();
+        assert!(e.to_string().contains("multiple of tile"), "{e}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn absent_manifest_mentions_make_artifacts() {
+        let d = tmpdir("absent");
+        std::fs::create_dir_all(&d).unwrap();
+        let e = Manifest::load(&d).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,171 @@
+//! The summarized-PageRank executor: XLA dense path with sparse fallback.
+//!
+//! Given a [`SummaryGraph`], picks a backend:
+//!
+//! * **XLA dense** — if a runtime is attached and |K| fits an AOT
+//!   capacity tier: densify + pad, then chain `run` artifacts (each
+//!   `iters_fused` power iterations, returning the L1 delta) until the
+//!   convergence epsilon or the iteration cap is reached. One `execute`
+//!   round-trip per chunk (ablation A6 measures chunk-size sensitivity).
+//! * **Rust sparse** — otherwise (or when no artifacts are available):
+//!   the native executor in [`crate::pagerank::summarized`].
+//!
+//! Both produce identical semantics; integration tests cross-check them.
+
+use crate::error::{Error, Result};
+use crate::pagerank::power::PageRankConfig;
+use crate::pagerank::summarized::{run_summarized, SummarizedResult};
+use crate::runtime::artifact::Variant;
+use crate::runtime::client::XlaRuntime;
+use crate::summary::bigvertex::SummaryGraph;
+
+/// Which backend served a summarized computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT-executed dense padded kernel at the given capacity.
+    XlaDense { capacity: usize },
+    /// Rust-native sparse executor.
+    RustSparse,
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::XlaDense { capacity } => write!(f, "xla-dense(c{capacity})"),
+            Backend::RustSparse => write!(f, "rust-sparse"),
+        }
+    }
+}
+
+/// Default |K| ceiling for routing to the XLA dense path.
+///
+/// Cost-aware backend choice: the padded dense kernel does O(C²) work per
+/// iteration, the sparse executor O(|E_K|). On this CPU-PJRT +
+/// interpret-mode setup the crossover sits near C = 256 (micro bench:
+/// c128 ≈ 0.4 ms per 10 fused iterations, c512 ≈ 18 ms, c2048 ≈ 6.8 s vs
+/// ≈1 ms sparse) — on a real TPU the MXU moves it far right (DESIGN.md
+/// §Perf). Overridable via [`SummarizedExecutor::set_max_xla_k`] or the
+/// `VEILGRAPH_MAX_XLA_K` env var.
+pub const DEFAULT_MAX_XLA_K: usize = 256;
+
+/// Executor with optional XLA runtime.
+pub struct SummarizedExecutor {
+    runtime: Option<XlaRuntime>,
+    max_xla_k: usize,
+}
+
+fn default_max_xla_k() -> usize {
+    std::env::var("VEILGRAPH_MAX_XLA_K")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_MAX_XLA_K)
+}
+
+impl SummarizedExecutor {
+    /// Sparse-only executor (no artifacts required).
+    pub fn sparse_only() -> Self {
+        Self { runtime: None, max_xla_k: default_max_xla_k() }
+    }
+
+    /// Executor preferring the XLA path, with artifacts from `dir`.
+    pub fn with_artifacts(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self { runtime: Some(XlaRuntime::new(dir)?), max_xla_k: default_max_xla_k() })
+    }
+
+    /// Wrap an existing runtime.
+    pub fn with_runtime(runtime: XlaRuntime) -> Self {
+        Self { runtime: Some(runtime), max_xla_k: default_max_xla_k() }
+    }
+
+    /// Route summaries with |K| ≤ `k` to the XLA dense path (`usize::MAX`
+    /// = always when it fits a tier; 0 = never).
+    pub fn set_max_xla_k(&mut self, k: usize) {
+        self.max_xla_k = k;
+    }
+
+    /// Current routing ceiling.
+    pub fn max_xla_k(&self) -> usize {
+        self.max_xla_k
+    }
+
+    /// True if an XLA runtime is attached.
+    pub fn has_xla(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Compile all tiers up front (off the query path).
+    pub fn warmup(&mut self) -> Result<usize> {
+        match &mut self.runtime {
+            Some(rt) => rt.warmup(),
+            None => Ok(0),
+        }
+    }
+
+    /// Run the summarized computation, choosing the backend.
+    pub fn execute(
+        &mut self,
+        s: &SummaryGraph,
+        cfg: &PageRankConfig,
+    ) -> Result<(SummarizedResult, Backend)> {
+        let k = s.num_vertices();
+        if k == 0 {
+            return Ok((SummarizedResult { ranks: vec![], iterations: 0, last_delta: 0.0 }, Backend::RustSparse));
+        }
+        if let Some(rt) = &mut self.runtime {
+            if k <= self.max_xla_k && k <= rt.max_capacity(Variant::Run) {
+                let res = Self::execute_xla(rt, s, cfg)?;
+                return Ok(res);
+            }
+        }
+        Ok((run_summarized(s, cfg), Backend::RustSparse))
+    }
+
+    fn execute_xla(
+        rt: &mut XlaRuntime,
+        s: &SummaryGraph,
+        cfg: &PageRankConfig,
+    ) -> Result<(SummarizedResult, Backend)> {
+        let k = s.num_vertices();
+        let capacity = rt.ensure_tier(Variant::Run, k)?;
+        let dense = s.to_dense(capacity);
+        let teleport = cfg.teleport(s.full_n);
+        let epsilon = cfg.scaled_epsilon(s.full_n);
+        let chunk = rt.iters_fused().max(1);
+        // Upload the per-summary constants (A is C² floats) to the device
+        // ONCE; only the rank vector travels per fused chunk (§Perf).
+        let prepared = rt.prepare_dense(
+            capacity,
+            &dense.a,
+            &dense.b,
+            &dense.mask,
+            cfg.beta as f32,
+            teleport as f32,
+        )?;
+        let mut ranks = dense.r0.clone();
+        let mut iterations = 0usize;
+        let mut last_delta = f64::INFINITY;
+        while iterations < cfg.max_iters {
+            let out = rt.execute_prepared(Variant::Run, &prepared, &ranks)?;
+            ranks = out.ranks;
+            iterations += chunk;
+            last_delta = out
+                .delta
+                .ok_or_else(|| Error::Runtime("run artifact returned no delta".into()))?
+                as f64;
+            if cfg.epsilon > 0.0 && last_delta < epsilon {
+                break;
+            }
+        }
+        let ranks_f64: Vec<f64> = ranks[..k].iter().map(|&x| x as f64).collect();
+        Ok((
+            SummarizedResult { ranks: ranks_f64, iterations, last_delta },
+            Backend::XlaDense { capacity },
+        ))
+    }
+}
+
+impl std::fmt::Debug for SummarizedExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SummarizedExecutor").field("has_xla", &self.has_xla()).finish()
+    }
+}

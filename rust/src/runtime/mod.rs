@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact manifest, HLO-text loading/compilation, and
+//! the backend-choosing summarized executor.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path interface to the AOT-compiled L2/L1 stack.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;

@@ -1,0 +1,218 @@
+//! Bounded ingestion queue with load-shedding policies.
+//!
+//! The paper's related work (§1, §6) frames load shedding as one of the
+//! classic approximation levers for stream systems; VeilGraph's server
+//! needs a concrete policy when producers outpace the engine. Three
+//! policies:
+//!
+//! * `Block`    — backpressure proper: the producer waits.
+//! * `DropOldest` — shed the oldest buffered update (bounded staleness).
+//! * `Reject`   — fail fast; the caller sees [`Error::Backpressure`].
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+/// What to do when the queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    Block,
+    DropOldest,
+    Reject,
+}
+
+/// Counters describing shedding behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub pushed: u64,
+    pub popped: u64,
+    pub dropped: u64,
+    pub rejected: u64,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    stats: QueueStats,
+}
+
+/// A bounded MPMC queue with an overflow policy.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    policy: OverflowPolicy,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create a queue with `capacity` slots and an overflow policy.
+    pub fn new(capacity: usize, policy: OverflowPolicy) -> Self {
+        Self {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false, stats: QueueStats::default() }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+            policy,
+        }
+    }
+
+    /// Push an item, applying the overflow policy when full.
+    pub fn push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::Engine("queue closed".into()));
+        }
+        while g.q.len() >= self.capacity {
+            match self.policy {
+                OverflowPolicy::Block => {
+                    g = self.not_full.wait(g).unwrap();
+                    if g.closed {
+                        return Err(Error::Engine("queue closed".into()));
+                    }
+                }
+                OverflowPolicy::DropOldest => {
+                    g.q.pop_front();
+                    g.stats.dropped += 1;
+                }
+                OverflowPolicy::Reject => {
+                    g.stats.rejected += 1;
+                    let n = g.q.len();
+                    return Err(Error::Backpressure(n));
+                }
+            }
+        }
+        g.q.push_back(item);
+        g.stats.pushed += 1;
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop an item, blocking until one is available or the queue closes.
+    /// Returns `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.q.pop_front() {
+                g.stats.popped += 1;
+                drop(g);
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let x = g.q.pop_front();
+        if x.is_some() {
+            g.stats.popped += 1;
+            self.not_full.notify_one();
+        }
+        x
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current length.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shedding statistics.
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10, OverflowPolicy::Reject);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn reject_policy_errors_when_full() {
+        let q = BoundedQueue::new(2, OverflowPolicy::Reject);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let e = q.push(3).unwrap_err();
+        assert!(matches!(e, Error::Backpressure(2)));
+        assert_eq!(q.stats().rejected, 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drop_oldest_policy_shed_head() {
+        let q = BoundedQueue::new(2, OverflowPolicy::DropOldest);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.stats().dropped, 1);
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+    }
+
+    #[test]
+    fn block_policy_waits_for_consumer() {
+        let q = Arc::new(BoundedQueue::new(1, OverflowPolicy::Block));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_unblocks_consumers_and_fails_producers() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4, OverflowPolicy::Block));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        assert!(q.push(1).is_err());
+    }
+
+    #[test]
+    fn drain_after_close() {
+        let q = BoundedQueue::new(4, OverflowPolicy::Block);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -1,0 +1,243 @@
+//! Pending-update buffer and update statistics (Alg. 1's
+//! `RegisterAddEdge` / `RegisterRemoveEdge` / `graphUpdateStatistics`).
+//!
+//! “GraphBolt registers updates as they arrive for both statistical and
+//! processing purposes. Vertex and edge changes are kept until updates are
+//! formally applied to the graph. Until they are applied, statistics …
+//! are readily available.” (§3.2)
+//!
+//! The buffer also captures, at apply time, the *previous* degree
+//! `d_{t-1}(u)` of every touched vertex — exactly the quantity Eq. 2's
+//! update-ratio threshold needs at the next measurement point.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::VertexId;
+use crate::stream::event::EdgeOp;
+
+/// Read-only statistics over pending (unapplied) updates.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UpdateStatistics {
+    /// Pending `e+` count.
+    pub pending_add_edges: usize,
+    /// Pending `e-` count.
+    pub pending_remove_edges: usize,
+    /// Pending `v+` count.
+    pub pending_add_vertices: usize,
+    /// Pending `v-` count.
+    pub pending_remove_vertices: usize,
+    /// Distinct vertices touched by pending updates.
+    pub touched_vertices: usize,
+    /// Current total vertices in the graph (pre-apply).
+    pub total_vertices: usize,
+    /// Current total edges in the graph (pre-apply).
+    pub total_edges: usize,
+}
+
+impl UpdateStatistics {
+    /// Total pending operations.
+    pub fn pending_total(&self) -> usize {
+        self.pending_add_edges
+            + self.pending_remove_edges
+            + self.pending_add_vertices
+            + self.pending_remove_vertices
+    }
+
+    /// Touched vertices as a fraction of the current graph (the kind of
+    /// magnitude signal `BeforeUpdates` policies use).
+    pub fn touched_ratio(&self) -> f64 {
+        if self.total_vertices == 0 {
+            if self.touched_vertices > 0 { 1.0 } else { 0.0 }
+        } else {
+            self.touched_vertices as f64 / self.total_vertices as f64
+        }
+    }
+}
+
+/// Result of applying the buffered updates to the graph.
+#[derive(Clone, Debug, Default)]
+pub struct AppliedUpdates {
+    /// `d_{t-1}` (total degree before apply) per touched vertex.
+    /// Vertices new at this measurement point are *absent* from the map.
+    pub prev_degree: HashMap<VertexId, usize>,
+    /// Vertices that did not exist before this apply (paper footnote 2:
+    /// always included in `K_r`).
+    pub new_vertices: Vec<VertexId>,
+    /// Operations applied / skipped (duplicate edge, missing edge, …).
+    pub applied: usize,
+    /// Skipped operations with reasons (duplicates are benign in replays).
+    pub skipped: usize,
+}
+
+/// The pending-update buffer.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateBuffer {
+    ops: Vec<EdgeOp>,
+    touched: std::collections::HashSet<VertexId>,
+}
+
+impl UpdateBuffer {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one operation (Alg. 1 lines 4–5).
+    pub fn register(&mut self, op: EdgeOp) {
+        match op {
+            EdgeOp::AddEdge(u, v) | EdgeOp::RemoveEdge(u, v) => {
+                self.touched.insert(u);
+                self.touched.insert(v);
+            }
+            EdgeOp::AddVertex(u) | EdgeOp::RemoveVertex(u) => {
+                self.touched.insert(u);
+            }
+        }
+        self.ops.push(op);
+    }
+
+    /// Number of pending operations.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True if nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Pending operations (exposed to the `BeforeUpdates` UDF).
+    pub fn pending(&self) -> &[EdgeOp] {
+        &self.ops
+    }
+
+    /// Statistics snapshot against the current (pre-apply) graph.
+    pub fn statistics(&self, g: &DynamicGraph) -> UpdateStatistics {
+        let mut s = UpdateStatistics {
+            total_vertices: g.num_vertices(),
+            total_edges: g.num_edges(),
+            touched_vertices: self.touched.len(),
+            ..Default::default()
+        };
+        for op in &self.ops {
+            match op {
+                EdgeOp::AddEdge(..) => s.pending_add_edges += 1,
+                EdgeOp::RemoveEdge(..) => s.pending_remove_edges += 1,
+                EdgeOp::AddVertex(..) => s.pending_add_vertices += 1,
+                EdgeOp::RemoveVertex(..) => s.pending_remove_vertices += 1,
+            }
+        }
+        s
+    }
+
+    /// Apply all pending updates to `g` (Alg. 1 `ApplyUpdates`), capturing
+    /// `d_{t-1}` for every touched vertex and the set of new vertices.
+    /// Duplicate adds / missing removes are counted as skipped, not fatal —
+    /// stream replays may contain them.
+    pub fn apply(&mut self, g: &mut DynamicGraph) -> Result<AppliedUpdates> {
+        let mut out = AppliedUpdates::default();
+        // Capture previous degrees before any mutation.
+        for &id in &self.touched {
+            match g.index(id) {
+                Some(idx) => {
+                    out.prev_degree.insert(id, g.degree(idx));
+                }
+                None => out.new_vertices.push(id),
+            }
+        }
+        out.new_vertices.sort_unstable();
+        for op in self.ops.drain(..) {
+            let ok = match op {
+                EdgeOp::AddEdge(u, v) => g.add_edge(u, v).is_ok(),
+                EdgeOp::RemoveEdge(u, v) => g.remove_edge(u, v).is_ok(),
+                EdgeOp::AddVertex(u) => {
+                    g.add_vertex(u);
+                    true
+                }
+                EdgeOp::RemoveVertex(u) => g.remove_vertex(u).is_ok(),
+            };
+            if ok {
+                out.applied += 1;
+            } else {
+                out.skipped += 1;
+            }
+        }
+        self.touched.clear();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_tracks_touched_and_counts() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(1, 3));
+        buf.register(EdgeOp::add(3, 2));
+        buf.register(EdgeOp::remove(1, 2));
+        let s = buf.statistics(&g);
+        assert_eq!(s.pending_add_edges, 2);
+        assert_eq!(s.pending_remove_edges, 1);
+        assert_eq!(s.touched_vertices, 3);
+        assert_eq!(s.pending_total(), 3);
+        assert_eq!(s.total_edges, 1);
+        assert!((s.touched_ratio() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_captures_prev_degrees_and_new_vertices() {
+        let (mut g, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 3)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(2, 9)); // 9 is new
+        buf.register(EdgeOp::add(1, 3));
+        let out = buf.apply(&mut g).unwrap();
+        assert_eq!(out.new_vertices, vec![9]);
+        // 2 had degree 2 (in 1, out 1) before apply
+        assert_eq!(out.prev_degree[&2], 2);
+        assert_eq!(out.prev_degree[&1], 1);
+        assert_eq!(out.applied, 2);
+        assert_eq!(out.skipped, 0);
+        assert!(g.has_edge(2, 9) && g.has_edge(1, 3));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn duplicate_add_is_skipped_not_fatal() {
+        let (mut g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(1, 2));
+        buf.register(EdgeOp::remove(5, 6)); // nothing there
+        let out = buf.apply(&mut g).unwrap();
+        assert_eq!(out.applied, 0);
+        assert_eq!(out.skipped, 2);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn vertex_ops_apply() {
+        let (mut g, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 1)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::AddVertex(7));
+        buf.register(EdgeOp::RemoveVertex(2));
+        let out = buf.apply(&mut g).unwrap();
+        assert_eq!(out.applied, 2);
+        assert_eq!(g.num_edges(), 0);
+        assert!(g.index(7).is_some());
+    }
+
+    #[test]
+    fn statistics_reset_after_apply() {
+        let (mut g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(2, 3));
+        buf.apply(&mut g).unwrap();
+        let s = buf.statistics(&g);
+        assert_eq!(s.pending_total(), 0);
+        assert_eq!(s.touched_vertices, 0);
+    }
+}

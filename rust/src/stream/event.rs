@@ -1,0 +1,64 @@
+//! Stream event model.
+//!
+//! The paper's update model `S` supports edge additions/removals and
+//! vertex additions/removals (`e+`, `e-`, `v+`, `v-`; §4 “Stream of
+//! updates S”), plus client queries interleaved with updates (Alg. 1).
+//! The evaluation restricts itself to `e+`; the engine implements all.
+
+use crate::graph::VertexId;
+
+/// A single graph mutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeOp {
+    /// `e+` — add edge (src, dst).
+    AddEdge(VertexId, VertexId),
+    /// `e-` — remove edge (src, dst).
+    RemoveEdge(VertexId, VertexId),
+    /// `v+` — add an isolated vertex.
+    AddVertex(VertexId),
+    /// `v-` — remove a vertex and incident edges.
+    RemoveVertex(VertexId),
+}
+
+impl EdgeOp {
+    /// Convenience constructor for the common case.
+    pub fn add(src: VertexId, dst: VertexId) -> Self {
+        EdgeOp::AddEdge(src, dst)
+    }
+
+    /// Convenience constructor.
+    pub fn remove(src: VertexId, dst: VertexId) -> Self {
+        EdgeOp::RemoveEdge(src, dst)
+    }
+}
+
+/// An event as consumed by the engine's Alg.-1 loop: either a mutation or
+/// a query trigger.
+#[derive(Clone, Debug, PartialEq)]
+pub enum UpdateEvent {
+    /// Graph mutation, buffered until the next query applies updates.
+    Op(EdgeOp),
+    /// Client query — serve algorithm results now.
+    Query,
+    /// End of stream.
+    Stop,
+}
+
+impl From<EdgeOp> for UpdateEvent {
+    fn from(op: EdgeOp) -> Self {
+        UpdateEvent::Op(op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_conversion() {
+        assert_eq!(EdgeOp::add(1, 2), EdgeOp::AddEdge(1, 2));
+        assert_eq!(EdgeOp::remove(1, 2), EdgeOp::RemoveEdge(1, 2));
+        let ev: UpdateEvent = EdgeOp::add(3, 4).into();
+        assert_eq!(ev, UpdateEvent::Op(EdgeOp::AddEdge(3, 4)));
+    }
+}

@@ -1,0 +1,10 @@
+//! Update-stream substrate: event model, pending-update buffer with
+//! statistics, stream construction per the paper's evaluation protocol,
+//! and a bounded ingestion queue with load-shedding policies.
+
+pub mod backpressure;
+pub mod buffer;
+pub mod event;
+pub mod source;
+pub mod synthetic;
+pub mod trace;

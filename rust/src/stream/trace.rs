@@ -1,0 +1,233 @@
+//! Timestamped operation traces: record a production update/query stream
+//! and replay it later — the data-pipeline companion to checkpointing
+//! (record once, replay against any parameter combination, compare).
+//!
+//! Text format, one event per line (git-diffable, `#` comments):
+//! ```text
+//! <t_micros> a <src> <dst>     edge addition
+//! <t_micros> r <src> <dst>     edge removal
+//! <t_micros> va <id>           vertex addition
+//! <t_micros> vr <id>           vertex removal
+//! <t_micros> q                 query
+//! ```
+//! Replay can be as-fast-as-possible (the experiment harness mode) or
+//! rate-faithful via [`TraceEvent::delay_from`].
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::stream::event::{EdgeOp, UpdateEvent};
+
+/// One timestamped trace event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since trace start.
+    pub t_micros: u64,
+    /// The event payload.
+    pub event: UpdateEventKind,
+}
+
+/// Payload without the Stop sentinel (a trace ends at EOF).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateEventKind {
+    Op(EdgeOp),
+    Query,
+}
+
+impl TraceEvent {
+    /// Wall-clock delay between a previous event and this one.
+    pub fn delay_from(&self, prev: &TraceEvent) -> std::time::Duration {
+        std::time::Duration::from_micros(self.t_micros.saturating_sub(prev.t_micros))
+    }
+
+    /// Convert to the engine's event type.
+    pub fn to_update_event(&self) -> UpdateEvent {
+        match self.event {
+            UpdateEventKind::Op(op) => UpdateEvent::Op(op),
+            UpdateEventKind::Query => UpdateEvent::Query,
+        }
+    }
+}
+
+/// Serialize a trace.
+pub fn write_trace<W: Write>(w: W, events: &[TraceEvent]) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    writeln!(w, "# veilgraph trace v1")?;
+    for e in events {
+        match e.event {
+            UpdateEventKind::Op(EdgeOp::AddEdge(s, d)) => writeln!(w, "{} a {s} {d}", e.t_micros)?,
+            UpdateEventKind::Op(EdgeOp::RemoveEdge(s, d)) => {
+                writeln!(w, "{} r {s} {d}", e.t_micros)?
+            }
+            UpdateEventKind::Op(EdgeOp::AddVertex(v)) => writeln!(w, "{} va {v}", e.t_micros)?,
+            UpdateEventKind::Op(EdgeOp::RemoveVertex(v)) => writeln!(w, "{} vr {v}", e.t_micros)?,
+            UpdateEventKind::Query => writeln!(w, "{} q", e.t_micros)?,
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Parse a trace; validates monotone timestamps.
+pub fn read_trace<R: std::io::Read>(r: R) -> Result<Vec<TraceEvent>> {
+    let mut out = Vec::new();
+    let mut last_t = 0u64;
+    for (lineno, line) in BufReader::new(r).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut parts = t.split_whitespace();
+        let err = |msg: &str| Error::Parse(format!("trace line {}: {msg}", lineno + 1));
+        let t_micros: u64 = parts
+            .next()
+            .ok_or_else(|| err("missing timestamp"))?
+            .parse()
+            .map_err(|_| err("bad timestamp"))?;
+        if t_micros < last_t {
+            return Err(err("timestamps must be monotone"));
+        }
+        last_t = t_micros;
+        let kind = parts.next().ok_or_else(|| err("missing op"))?;
+        let mut num = |p: &mut std::str::SplitWhitespace<'_>| -> Result<u64> {
+            p.next().ok_or_else(|| err("missing id"))?.parse().map_err(|_| err("bad id"))
+        };
+        let event = match kind {
+            "a" => UpdateEventKind::Op(EdgeOp::AddEdge(num(&mut parts)?, num(&mut parts)?)),
+            "r" => UpdateEventKind::Op(EdgeOp::RemoveEdge(num(&mut parts)?, num(&mut parts)?)),
+            "va" => UpdateEventKind::Op(EdgeOp::AddVertex(num(&mut parts)?)),
+            "vr" => UpdateEventKind::Op(EdgeOp::RemoveVertex(num(&mut parts)?)),
+            "q" => UpdateEventKind::Query,
+            other => return Err(err(&format!("unknown op {other:?}"))),
+        };
+        out.push(TraceEvent { t_micros, event });
+    }
+    Ok(out)
+}
+
+/// Save a trace to a file.
+pub fn save_trace(path: impl AsRef<Path>, events: &[TraceEvent]) -> Result<()> {
+    write_trace(std::fs::File::create(path)?, events)
+}
+
+/// Load a trace from a file.
+pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<TraceEvent>> {
+    read_trace(std::fs::File::open(path)?)
+}
+
+/// A recorder that stamps events with elapsed wall time as they arrive.
+pub struct TraceRecorder {
+    started: std::time::Instant,
+    events: Vec<TraceEvent>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceRecorder {
+    /// Start recording now.
+    pub fn new() -> Self {
+        Self { started: std::time::Instant::now(), events: Vec::new() }
+    }
+
+    /// Record a graph operation.
+    pub fn op(&mut self, op: EdgeOp) {
+        let t_micros = self.started.elapsed().as_micros() as u64;
+        self.events.push(TraceEvent { t_micros, event: UpdateEventKind::Op(op) });
+    }
+
+    /// Record a query.
+    pub fn query(&mut self) {
+        let t_micros = self.started.elapsed().as_micros() as u64;
+        self.events.push(TraceEvent { t_micros, event: UpdateEventKind::Query });
+    }
+
+    /// Finish and return the trace.
+    pub fn finish(self) -> Vec<TraceEvent> {
+        self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent { t_micros: 0, event: UpdateEventKind::Op(EdgeOp::add(1, 2)) },
+            TraceEvent { t_micros: 120, event: UpdateEventKind::Op(EdgeOp::AddVertex(9)) },
+            TraceEvent { t_micros: 150, event: UpdateEventKind::Query },
+            TraceEvent { t_micros: 400, event: UpdateEventKind::Op(EdgeOp::remove(1, 2)) },
+            TraceEvent { t_micros: 500, event: UpdateEventKind::Op(EdgeOp::RemoveVertex(9)) },
+            TraceEvent { t_micros: 501, event: UpdateEventKind::Query },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_preserves_events() {
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &sample()).unwrap();
+        let back = read_trace(&buf[..]).unwrap();
+        assert_eq!(back, sample());
+    }
+
+    #[test]
+    fn rejects_non_monotone_timestamps() {
+        let text = "100 q\n50 q\n";
+        let e = read_trace(text.as_bytes()).unwrap_err();
+        assert!(e.to_string().contains("monotone"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(read_trace("abc q\n".as_bytes()).is_err());
+        assert!(read_trace("5 a 1\n".as_bytes()).is_err());
+        assert!(read_trace("5 zz 1 2\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn delays_and_conversion() {
+        let ev = sample();
+        assert_eq!(ev[1].delay_from(&ev[0]).as_micros(), 120);
+        assert_eq!(ev[2].to_update_event(), UpdateEvent::Query);
+        assert_eq!(ev[0].to_update_event(), UpdateEvent::Op(EdgeOp::add(1, 2)));
+    }
+
+    #[test]
+    fn recorder_stamps_monotone() {
+        let mut rec = TraceRecorder::new();
+        rec.op(EdgeOp::add(1, 2));
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        rec.query();
+        let tr = rec.finish();
+        assert_eq!(tr.len(), 2);
+        assert!(tr[1].t_micros >= tr[0].t_micros);
+    }
+
+    #[test]
+    fn trace_replays_through_engine() {
+        use crate::coordinator::engine::EngineBuilder;
+        let mut rec = TraceRecorder::new();
+        for i in 0..10u64 {
+            rec.op(EdgeOp::add(100 + i, i % 5));
+        }
+        rec.query();
+        let trace = rec.finish();
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &trace).unwrap();
+        let loaded = read_trace(&buf[..]).unwrap();
+        let mut engine = EngineBuilder::new()
+            .build_from_edges((0..5u64).map(|i| (i, (i + 1) % 5)))
+            .unwrap();
+        let results = engine
+            .run_stream(loaded.iter().map(|e| e.to_update_event()))
+            .unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(engine.graph().num_vertices(), 15);
+    }
+}

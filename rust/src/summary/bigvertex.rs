@@ -1,0 +1,293 @@
+//! Summary-graph construction with the big vertex `B` (§3.1).
+//!
+//! For the original graph `G = (V, E)` and hot set `K`, the summary graph
+//! is `G = (K ∪ {B}, E_K ∪ E_B)` where:
+//!
+//! * `E_K = {(u,v) ∈ E : u,v ∈ K}` — internal edges, each carrying
+//!   `val((u,v)) = 1/d_out(u)` with `d_out` taken in the FULL graph
+//!   before discarding (edges leaving `K` still count toward the degree
+//!   that divides `u`'s emitted score — §3.1).
+//! * `E_B = {(w,z) ∈ E : w ∉ K, z ∈ K}` — boundary edges, each carrying
+//!   the frozen contribution `val((w,z)) = w_s/d_out(w)` of its non-hot
+//!   source. We accumulate them per target as `b_z`; Eq. 1's scalar
+//!   `B_s = Σ val` is kept for reporting.
+//!
+//! Edges *into* `B` are discarded entirely (the rank of `B` is
+//! irrelevant), which is what makes the summarized computation `O(|K|)`.
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::VertexIdx;
+use crate::summary::hot::HotSet;
+
+/// The summarized problem, ready for either executor (sparse rust-native
+/// or dense-padded XLA).
+#[derive(Clone, Debug)]
+pub struct SummaryGraph {
+    /// Hot vertices in dense-graph index space, sorted; position = local
+    /// index.
+    pub vertices: Vec<VertexIdx>,
+    /// CSR over internal edges, pull orientation: `in_offsets[z]..` lists
+    /// `(local_src, weight)` pairs with `weight = 1/d_out(src)`.
+    pub in_offsets: Vec<u32>,
+    pub in_edges: Vec<(u32, f32)>,
+    /// Frozen big-vertex contribution per local target (`b_z`).
+    pub b: Vec<f64>,
+    /// Previous rank per local vertex (warm start `r_0`).
+    pub r0: Vec<f64>,
+    /// |E_B| (boundary edges folded into `b`).
+    pub num_boundary_edges: usize,
+    /// Eq. 1's `B_s = Σ_{(w,z) ∈ E_B} val((w,z))` (reporting only).
+    pub b_s: f64,
+    /// |V| of the FULL graph at this measurement point (teleport uses it
+    /// so summary ranks stay comparable with full-graph ranks).
+    pub full_n: usize,
+}
+
+impl SummaryGraph {
+    /// Build the summary graph for hot set `hot` over `g`.
+    ///
+    /// `prev_ranks[i]` is the previous measurement point's rank for dense
+    /// index `i`; vertices beyond its length (new vertices) warm-start at
+    /// `default_rank` (the PageRank variant's init value — see
+    /// [`crate::pagerank::power::PageRankConfig::init_rank`]).
+    pub fn build(
+        g: &DynamicGraph,
+        hot: &HotSet,
+        prev_ranks: &[f64],
+        default_rank: f64,
+    ) -> SummaryGraph {
+        let vertices = hot.all();
+        let k = vertices.len();
+        let full_n = g.num_vertices();
+
+        // dense graph index -> local index
+        let mut local_of = vec![u32::MAX; full_n];
+        for (li, &v) in vertices.iter().enumerate() {
+            local_of[v as usize] = li as u32;
+        }
+
+        let rank_of = |v: VertexIdx| prev_ranks.get(v as usize).copied().unwrap_or(default_rank);
+
+        let mut in_offsets = Vec::with_capacity(k + 1);
+        in_offsets.push(0u32);
+        let mut in_edges: Vec<(u32, f32)> = Vec::new();
+        let mut b = vec![0.0f64; k];
+        let mut r0 = Vec::with_capacity(k);
+        let mut num_boundary_edges = 0usize;
+        let mut b_s = 0.0f64;
+
+        for (li, &z) in vertices.iter().enumerate() {
+            r0.push(rank_of(z));
+            for &w in g.in_neighbors(z) {
+                let d_out = g.out_degree(w);
+                debug_assert!(d_out > 0, "in-neighbor must have an out-edge");
+                let wl = local_of[w as usize];
+                if wl != u32::MAX {
+                    // internal edge (E_K): weight 1/d_out in the FULL graph
+                    in_edges.push((wl, 1.0 / d_out as f32));
+                } else {
+                    // boundary edge (E_B): frozen contribution of w
+                    let val = rank_of(w) / d_out as f64;
+                    b[li] += val;
+                    b_s += val;
+                    num_boundary_edges += 1;
+                }
+            }
+            in_offsets.push(in_edges.len() as u32);
+        }
+
+        SummaryGraph { vertices, in_offsets, in_edges, b, r0, num_boundary_edges, b_s, full_n }
+    }
+
+    /// |K| — number of hot vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// |E_K| — internal edges.
+    pub fn num_internal_edges(&self) -> usize {
+        self.in_edges.len()
+    }
+
+    /// |E| = |E_K| + |E_B| — the paper's summary edge count.
+    pub fn num_edges(&self) -> usize {
+        self.in_edges.len() + self.num_boundary_edges
+    }
+
+    /// Internal in-edges of local vertex `z`.
+    #[inline]
+    pub fn row(&self, z: usize) -> &[(u32, f32)] {
+        &self.in_edges[self.in_offsets[z] as usize..self.in_offsets[z + 1] as usize]
+    }
+
+    /// Densify into padded row-major `A[z*cap + u] = val((u,z))`, plus the
+    /// padded `r0`, `b` and `mask` vectors the XLA artifacts consume.
+    /// Panics if `capacity < |K|` (the runtime picks the tier first).
+    pub fn to_dense(&self, capacity: usize) -> DenseSummary {
+        let k = self.num_vertices();
+        assert!(capacity >= k, "capacity {capacity} < |K| = {k}");
+        let mut a = vec![0.0f32; capacity * capacity];
+        for z in 0..k {
+            let row = &mut a[z * capacity..(z + 1) * capacity];
+            for &(u, w) in self.row(z) {
+                // Parallel internal edges cannot exist (DynamicGraph
+                // rejects duplicates) — plain assignment.
+                row[u as usize] = w;
+            }
+        }
+        let mut r0 = vec![0.0f32; capacity];
+        let mut b = vec![0.0f32; capacity];
+        let mut mask = vec![0.0f32; capacity];
+        for z in 0..k {
+            r0[z] = self.r0[z] as f32;
+            b[z] = self.b[z] as f32;
+            mask[z] = 1.0;
+        }
+        DenseSummary { a, r0, b, mask, capacity, k }
+    }
+}
+
+/// Padded dense form consumed by the AOT PageRank artifacts.
+#[derive(Clone, Debug)]
+pub struct DenseSummary {
+    /// Row-major `capacity × capacity` transition matrix.
+    pub a: Vec<f32>,
+    /// Padded warm-start ranks.
+    pub r0: Vec<f32>,
+    /// Padded big-vertex contributions.
+    pub b: Vec<f32>,
+    /// 1.0 on the first `k` rows.
+    pub mask: Vec<f32>,
+    /// Padded dimension.
+    pub capacity: usize,
+    /// Valid rows.
+    pub k: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::hot::HotSet;
+
+    /// Build a HotSet directly from a list of dense indices.
+    fn hot_of(g: &DynamicGraph, idxs: &[VertexIdx]) -> HotSet {
+        let mut hot = vec![false; g.num_vertices()];
+        for &i in idxs {
+            hot[i as usize] = true;
+        }
+        HotSet { k_r: idxs.to_vec(), k_n: vec![], k_delta: vec![], hot }
+    }
+
+    /// 0→1, 0→2, 1→2, 3→1, 3→0, 2→3  (ids == dense indices).
+    fn g6() -> DynamicGraph {
+        DynamicGraph::from_edges(vec![(0, 1), (0, 2), (1, 2), (3, 1), (3, 0), (2, 3)]).0
+    }
+
+    #[test]
+    fn internal_edges_carry_inverse_full_outdegree() {
+        let g = g6();
+        // K = {0, 1, 2}: edges inside: 0→1, 0→2, 1→2.
+        let hot = hot_of(&g, &[0, 1, 2]);
+        let prev = vec![0.1, 0.2, 0.3, 0.4];
+        let s = SummaryGraph::build(&g, &hot, &prev, 0.0);
+        assert_eq!(s.num_vertices(), 3);
+        assert_eq!(s.num_internal_edges(), 3);
+        // d_out(0) = 2 (both edges stay in K) ⇒ weight 0.5
+        let row1 = s.row(1); // in-edges of local 1 (dense 1): from 0 and from 3(boundary)
+        assert_eq!(row1.len(), 1);
+        assert_eq!(row1[0], (0, 0.5));
+        // row 2: from 0 (0.5) and from 1 (d_out(1) = 1 ⇒ 1.0)
+        let mut row2 = s.row(2).to_vec();
+        row2.sort_by_key(|&(u, _)| u);
+        assert_eq!(row2, vec![(0, 0.5), (1, 1.0)]);
+    }
+
+    #[test]
+    fn outgoing_edges_leaving_k_still_count_in_degree() {
+        let g = g6();
+        // K = {2, 3}: edge 2→3 internal; d_out(2) = 1 ⇒ weight 1.0.
+        // BUT consider K = {0, 1}: edge 0→1 internal, d_out(0)=2 even
+        // though 0→2 leaves K — the weight must still be 1/2.
+        let hot = hot_of(&g, &[0, 1]);
+        let s = SummaryGraph::build(&g, &hot, &[0.1, 0.2, 0.3, 0.4], 0.0);
+        let row1 = s.row(1);
+        assert_eq!(row1.len(), 1);
+        assert_eq!(row1[0].1, 0.5, "degree counts edges leaving K");
+    }
+
+    #[test]
+    fn boundary_contributions_freeze_prev_ranks() {
+        let g = g6();
+        let prev = vec![0.1, 0.2, 0.3, 0.4];
+        // K = {0, 1}: boundary in-edges: 3→1, 3→0 (w = 3, d_out(3) = 2).
+        let hot = hot_of(&g, &[0, 1]);
+        let s = SummaryGraph::build(&g, &hot, &prev, 0.0);
+        assert_eq!(s.num_boundary_edges, 2);
+        let expect = prev[3] / 2.0;
+        assert!((s.b[0] - expect).abs() < 1e-12); // into 0
+        assert!((s.b[1] - expect).abs() < 1e-12); // into 1
+        assert!((s.b_s - 2.0 * expect).abs() < 1e-12, "Eq. 1 aggregate");
+        assert_eq!(s.num_edges(), 1 + 2); // E_K = {0→1}, E_B = 2
+    }
+
+    #[test]
+    fn edges_into_big_vertex_are_discarded() {
+        let g = g6();
+        // K = {3}: in-edge 2→3 is boundary; out-edges 3→0, 3→1 vanish.
+        let hot = hot_of(&g, &[3]);
+        let s = SummaryGraph::build(&g, &hot, &[0.1, 0.2, 0.3, 0.4], 0.0);
+        assert_eq!(s.num_internal_edges(), 0);
+        assert_eq!(s.num_boundary_edges, 1);
+        assert!((s.b[0] - 0.3 / 1.0).abs() < 1e-12); // d_out(2) = 1
+    }
+
+    #[test]
+    fn warm_start_and_new_vertex_defaults() {
+        let g = g6();
+        let hot = hot_of(&g, &[1, 3]);
+        // prev_ranks shorter than |V| — vertex 3 has no previous rank.
+        let prev = vec![0.1, 0.2, 0.3];
+        let default = 0.15 / 4.0;
+        let s = SummaryGraph::build(&g, &hot, &prev, default);
+        assert!((s.r0[0] - 0.2).abs() < 1e-12);
+        assert!((s.r0[1] - default).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_hot_set_builds_empty_summary() {
+        let g = g6();
+        let hot = hot_of(&g, &[]);
+        let s = SummaryGraph::build(&g, &hot, &[0.1, 0.2, 0.3, 0.4], 0.0);
+        assert_eq!(s.num_vertices(), 0);
+        assert_eq!(s.num_edges(), 0);
+        assert_eq!(s.b_s, 0.0);
+    }
+
+    #[test]
+    fn to_dense_lays_out_row_major_with_mask() {
+        let g = g6();
+        let hot = hot_of(&g, &[0, 1, 2]);
+        let prev = vec![0.1, 0.2, 0.3, 0.4];
+        let s = SummaryGraph::build(&g, &hot, &prev, 0.0);
+        let d = s.to_dense(4);
+        assert_eq!(d.capacity, 4);
+        assert_eq!(d.k, 3);
+        // A[z=1, u=0] = 0.5
+        assert_eq!(d.a[1 * 4 + 0], 0.5);
+        // A[z=2, u=1] = 1.0
+        assert_eq!(d.a[2 * 4 + 1], 1.0);
+        // padding row 3 all zeros
+        assert!(d.a[12..16].iter().all(|&x| x == 0.0));
+        assert_eq!(d.mask, vec![1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(d.r0[3], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn to_dense_rejects_small_capacity() {
+        let g = g6();
+        let hot = hot_of(&g, &[0, 1, 2]);
+        let s = SummaryGraph::build(&g, &hot, &[0.0; 4], 0.0);
+        s.to_dense(2);
+    }
+}

@@ -1,0 +1,310 @@
+//! Hot-vertex selection: `K = K_r ∪ K_n ∪ K_Δ` (§3.2, Eqs. 2–5).
+//!
+//! 1. **`K_r`** — update-ratio threshold (Eq. 2): vertices whose total
+//!    degree changed by more than ratio `r` between measurement points
+//!    `t-1` and `t`. New vertices (no previous degree) are always
+//!    included (paper footnote 2).
+//! 2. **`K_n`** — uniform neighborhood expansion of diameter `n` around
+//!    `K_r` (Eq. 3).
+//! 3. **`K_Δ`** — score-sensitive extension (Eqs. 4–5): from each vertex
+//!    `v` in the frontier so far, expand an extra radius
+//!    `f_Δ(v) = log(n + d̄·v_s / (Δ·d_t(v))) / log d̄`.
+//!
+//!    The paper's prose motivates `f_Δ` by contribution decay: `v`'s
+//!    rank contribution dilutes by a factor ~`d̄` per hop, so hops are
+//!    followed until the contribution falls below a `Δ` fraction of
+//!    `v_s`. Eq. 4's quantifier structure (radius indexed by the
+//!    *candidate*) is not directly computable by forward search, so we
+//!    implement the decay interpretation: each already-hot vertex `v`
+//!    expands with per-seed budget `⌊f_Δ(v)⌋`, which matches both the
+//!    worked example (“with Δ = 0.1, we keep considering further hops
+//!    from v until the contribution drops below 10% of its score”) and
+//!    the reference implementation's breadth-first expansion. Budgets are
+//!    clamped to [`MAX_DELTA_RADIUS`] to bound worst-case work.
+
+use std::collections::HashMap;
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::traversal::{bfs_budgeted, bfs_multi, Direction};
+use crate::graph::{VertexId, VertexIdx};
+use crate::summary::params::SummaryParams;
+
+/// Safety clamp on the per-vertex Δ-expansion radius.
+pub const MAX_DELTA_RADIUS: u32 = 8;
+
+/// The selected hot set with per-tier membership (for figures/ablation).
+#[derive(Clone, Debug, Default)]
+pub struct HotSet {
+    /// Vertices from the update-ratio threshold (Eq. 2).
+    pub k_r: Vec<VertexIdx>,
+    /// Added by uniform expansion (Eq. 3), disjoint from `k_r`.
+    pub k_n: Vec<VertexIdx>,
+    /// Added by Δ-extension (Eq. 4), disjoint from the others.
+    pub k_delta: Vec<VertexIdx>,
+    /// Membership bitmap over dense indices (`true` ⇔ hot).
+    pub hot: Vec<bool>,
+}
+
+impl HotSet {
+    /// All hot vertices (`K`), sorted.
+    pub fn all(&self) -> Vec<VertexIdx> {
+        let mut v: Vec<VertexIdx> =
+            self.k_r.iter().chain(&self.k_n).chain(&self.k_delta).copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// |K|.
+    pub fn len(&self) -> usize {
+        self.k_r.len() + self.k_n.len() + self.k_delta.len()
+    }
+
+    /// True if no vertex is hot.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Membership test by dense index.
+    #[inline]
+    pub fn contains(&self, v: VertexIdx) -> bool {
+        self.hot.get(v as usize).copied().unwrap_or(false)
+    }
+}
+
+/// Inputs capturing the state between two measurement points.
+pub struct HotSetInputs<'a> {
+    /// The graph *after* applying this measurement point's updates.
+    pub graph: &'a DynamicGraph,
+    /// `d_{t-1}` for vertices touched by the applied updates (absent ⇒
+    /// untouched, degree unchanged ⇒ cannot enter `K_r`).
+    pub prev_degree: &'a HashMap<VertexId, usize>,
+    /// Vertices that did not exist before this measurement point.
+    pub new_vertices: &'a [VertexId],
+    /// Previous ranks per dense index (may be shorter than |V| if the
+    /// graph grew; missing entries default to 0 — “no established score”).
+    pub prev_ranks: &'a [f64],
+}
+
+/// Eq. 5: the Δ-expansion radius for vertex `v`.
+///
+/// `mean_deg` is `d̄`, the average degree of currently accumulated
+/// vertices; `score` is `v_s`. Guards: degenerate `d̄ <= 1` (log ≤ 0)
+/// yields radius 0; `d_t(v) = 0` is treated as 1 (an isolated vertex has
+/// nothing to dilute through).
+pub fn delta_radius(params: &SummaryParams, mean_deg: f64, score: f64, degree: usize) -> u32 {
+    if mean_deg <= 1.0 || score <= 0.0 {
+        return 0;
+    }
+    let d = degree.max(1) as f64;
+    let inner = params.n as f64 + mean_deg * score / (params.delta * d);
+    if inner <= 1.0 {
+        return 0;
+    }
+    let f = inner.ln() / mean_deg.ln();
+    let f = f.max(0.0).min(MAX_DELTA_RADIUS as f64);
+    f.floor() as u32
+}
+
+/// Compute `K = K_r ∪ K_n ∪ K_Δ` for one measurement point.
+pub fn compute_hot_set(inputs: &HotSetInputs<'_>, params: &SummaryParams) -> HotSet {
+    let g = inputs.graph;
+    let nv = g.num_vertices();
+    let mut hot = vec![false; nv];
+
+    // ---- Eq. 2: K_r --------------------------------------------------
+    let mut k_r: Vec<VertexIdx> = Vec::new();
+    for (&id, &d_prev) in inputs.prev_degree {
+        if let Some(idx) = g.index(id) {
+            let d_now = g.degree(idx);
+            let include = if d_prev == 0 {
+                // Degree was zero: any growth is an infinite ratio.
+                d_now > 0
+            } else {
+                let ratio = d_now as f64 / d_prev as f64;
+                (ratio - 1.0).abs() > params.r
+            };
+            if include && !hot[idx as usize] {
+                hot[idx as usize] = true;
+                k_r.push(idx);
+            }
+        }
+    }
+    for &id in inputs.new_vertices {
+        if let Some(idx) = g.index(id) {
+            if !hot[idx as usize] {
+                hot[idx as usize] = true;
+                k_r.push(idx);
+            }
+        }
+    }
+    k_r.sort_unstable();
+
+    // ---- Eq. 3: K_n --------------------------------------------------
+    let mut k_n: Vec<VertexIdx> = Vec::new();
+    if params.n > 0 && !k_r.is_empty() {
+        for (v, depth) in bfs_multi(g, &k_r, params.n, Direction::Both) {
+            if depth > 0 && !hot[v as usize] {
+                hot[v as usize] = true;
+                k_n.push(v);
+            }
+        }
+        k_n.sort_unstable();
+    }
+
+    // ---- Eqs. 4–5: K_Δ -----------------------------------------------
+    // Seeds: every currently hot vertex expands by its own decay radius.
+    let mean_deg = g.mean_degree();
+    let mut seeds: Vec<(VertexIdx, u32)> = Vec::with_capacity(k_r.len() + k_n.len());
+    for &v in k_r.iter().chain(&k_n) {
+        let score = inputs.prev_ranks.get(v as usize).copied().unwrap_or(0.0);
+        let radius = delta_radius(params, mean_deg, score, g.degree(v));
+        if radius > 0 {
+            seeds.push((v, radius));
+        }
+    }
+    let mut k_delta: Vec<VertexIdx> = Vec::new();
+    if !seeds.is_empty() {
+        for v in bfs_budgeted(g, &seeds, Direction::Both) {
+            if !hot[v as usize] {
+                hot[v as usize] = true;
+                k_delta.push(v);
+            }
+        }
+        k_delta.sort_unstable();
+    }
+
+    HotSet { k_r, k_n, k_delta, hot }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path 0→1→2→3→4→5 with user ids equal to indices.
+    fn path6() -> DynamicGraph {
+        DynamicGraph::from_edges((0..5u64).map(|i| (i, i + 1))).0
+    }
+
+    fn inputs<'a>(
+        g: &'a DynamicGraph,
+        prev: &'a HashMap<VertexId, usize>,
+        newv: &'a [VertexId],
+        ranks: &'a [f64],
+    ) -> HotSetInputs<'a> {
+        HotSetInputs { graph: g, prev_degree: prev, new_vertices: newv, prev_ranks: ranks }
+    }
+
+    #[test]
+    fn kr_includes_only_vertices_past_threshold() {
+        let g = path6();
+        // vertex 0 degree unchanged (1→1); vertex 2 doubled (1→2).
+        let prev: HashMap<u64, usize> = [(0, 1), (2, 1)].into_iter().collect();
+        let ranks = vec![0.0; 6];
+        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.5, 0, 9.0));
+        assert_eq!(hs.k_r, vec![g.index(2).unwrap()]);
+        assert!(hs.k_n.is_empty());
+    }
+
+    #[test]
+    fn ratio_threshold_is_strict_inequality() {
+        let g = path6();
+        // vertex 2: prev 1, now 2 ⇒ ratio change = 1.0 exactly.
+        let prev: HashMap<u64, usize> = [(2, 1)].into_iter().collect();
+        let ranks = vec![0.0; 6];
+        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(1.0, 0, 9.0));
+        assert!(hs.is_empty(), "|ratio-1| == r must NOT be included (Eq. 2 is >)");
+    }
+
+    #[test]
+    fn degree_decrease_also_triggers() {
+        let g = path6();
+        // vertex 3: prev degree 4, now 2 ⇒ |2/4 - 1| = 0.5 > 0.3.
+        let prev: HashMap<u64, usize> = [(3, 4)].into_iter().collect();
+        let ranks = vec![0.0; 6];
+        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.3, 0, 9.0));
+        assert_eq!(hs.k_r.len(), 1);
+    }
+
+    #[test]
+    fn new_vertices_always_enter_kr() {
+        let g = path6();
+        let prev = HashMap::new();
+        let ranks = vec![0.0; 6];
+        let hs = compute_hot_set(&inputs(&g, &prev, &[5], &ranks), &SummaryParams::new(0.9, 0, 9.0));
+        assert_eq!(hs.k_r, vec![g.index(5).unwrap()]);
+    }
+
+    #[test]
+    fn kn_expands_n_hops_both_directions() {
+        let g = path6();
+        let prev: HashMap<u64, usize> = [(2, 1)].into_iter().collect(); // 2 doubled
+        let ranks = vec![0.0; 6];
+        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.5, 1, 9.0));
+        // K_r = {2}; n=1 reaches 1 and 3.
+        let i = |u: u64| g.index(u).unwrap();
+        assert_eq!(hs.k_r, vec![i(2)]);
+        assert_eq!(hs.k_n, vec![i(1), i(3)]);
+        assert!(!hs.contains(i(0)) && !hs.contains(i(4)));
+    }
+
+    #[test]
+    fn delta_radius_monotonic_in_score_and_delta() {
+        let p_small = SummaryParams::new(0.1, 1, 0.01);
+        let p_big = SummaryParams::new(0.1, 1, 0.9);
+        let d = 10.0;
+        // higher score ⇒ larger radius
+        assert!(delta_radius(&p_small, d, 0.5, 4) >= delta_radius(&p_small, d, 0.001, 4));
+        // smaller Δ ⇒ larger radius (more conservative)
+        assert!(delta_radius(&p_small, d, 0.01, 4) >= delta_radius(&p_big, d, 0.01, 4));
+        // clamped
+        assert!(delta_radius(&p_small, d, 1e12, 1) <= MAX_DELTA_RADIUS);
+    }
+
+    #[test]
+    fn delta_radius_guards_degenerate_inputs() {
+        let p = SummaryParams::new(0.1, 1, 0.1);
+        assert_eq!(delta_radius(&p, 0.5, 1.0, 1), 0, "mean degree <= 1");
+        assert_eq!(delta_radius(&p, 10.0, 0.0, 1), 0, "zero score");
+        assert_eq!(delta_radius(&p, 10.0, -1.0, 1), 0, "negative score");
+    }
+
+    #[test]
+    fn kdelta_extends_past_kn_with_high_scores() {
+        let g = path6();
+        // vertex 1: degree 2 now, was 4 ⇒ |2/4 - 1| = 0.5 > 0.3 ⇒ K_r.
+        let prev: HashMap<u64, usize> = [(1, 4)].into_iter().collect();
+        let mut ranks = vec![0.0; 6];
+        ranks[g.index(1).unwrap() as usize] = 0.9; // huge score ⇒ big radius
+        let p = SummaryParams::new(0.3, 0, 0.001);
+        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &p);
+        assert_eq!(hs.k_r.len(), 1);
+        assert!(hs.k_n.is_empty());
+        // With mean degree ~1.67 > 1 and big score, Δ-expansion reaches out.
+        assert!(!hs.k_delta.is_empty(), "expected Δ expansion, got {hs:?}");
+        // tiers are disjoint
+        let all = hs.all();
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn untouched_graph_yields_empty_hot_set() {
+        let g = path6();
+        let prev = HashMap::new();
+        let ranks = vec![0.1; 6];
+        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.1, 1, 0.01));
+        assert!(hs.is_empty());
+        assert!(hs.all().is_empty());
+    }
+
+    #[test]
+    fn prev_ranks_shorter_than_graph_is_ok() {
+        let g = path6();
+        let prev: HashMap<u64, usize> = [(5, 1)].into_iter().collect();
+        let ranks = vec![0.5; 2]; // graph has 6 vertices
+        let hs =
+            compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.1, 1, 0.01));
+        // must not panic; vertex 5 degree 1→1 unchanged ⇒ empty or small
+        let _ = hs.len();
+    }
+}

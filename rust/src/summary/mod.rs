@@ -1,0 +1,6 @@
+//! The paper's core contribution: hot-vertex selection `(r, n, Δ)` and
+//! big-vertex summary-graph construction.
+
+pub mod bigvertex;
+pub mod hot;
+pub mod params;

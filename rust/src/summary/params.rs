@@ -1,0 +1,73 @@
+//! The VeilGraph model parameters `(r, n, Δ)` (§3.2).
+
+/// Parameters controlling hot-vertex selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SummaryParams {
+    /// Update-ratio threshold `r` (Eq. 2): minimum relative degree change
+    /// for a vertex to enter `K_r`.
+    pub r: f64,
+    /// Neighborhood diameter `n` (Eq. 3): uniform BFS expansion around
+    /// `K_r`.
+    pub n: u32,
+    /// Vertex-specific extension `Δ` (Eqs. 4–5): score-sensitive extra
+    /// expansion; smaller Δ expands further (more conservative).
+    pub delta: f64,
+}
+
+impl SummaryParams {
+    /// Construct parameters; `r >= 0`, `delta > 0`.
+    pub fn new(r: f64, n: u32, delta: f64) -> Self {
+        assert!(r >= 0.0, "r must be non-negative");
+        assert!(delta > 0.0, "delta must be positive");
+        Self { r, n, delta }
+    }
+
+    /// The paper's 18-combination evaluation grid (§5.2):
+    /// r ∈ {0.10, 0.20, 0.30} × n ∈ {0, 1} × Δ ∈ {0.01, 0.1, 0.9}.
+    pub fn paper_grid() -> Vec<SummaryParams> {
+        let mut out = Vec::with_capacity(18);
+        for &r in &[0.10, 0.20, 0.30] {
+            for &n in &[0u32, 1] {
+                for &delta in &[0.01, 0.1, 0.9] {
+                    out.push(SummaryParams::new(r, n, delta));
+                }
+            }
+        }
+        out
+    }
+
+    /// Label used in figures/CSVs, e.g. `r0.10-n1-d0.010`.
+    pub fn label(&self) -> String {
+        format!("r{:.2}-n{}-d{:.3}", self.r, self.n, self.delta)
+    }
+}
+
+impl std::fmt::Display for SummaryParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(r={:.2}, n={}, Δ={:.3})", self.r, self.n, self.delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_18_unique_combinations() {
+        let g = SummaryParams::paper_grid();
+        assert_eq!(g.len(), 18);
+        let labels: std::collections::HashSet<_> = g.iter().map(|p| p.label()).collect();
+        assert_eq!(labels.len(), 18);
+    }
+
+    #[test]
+    fn label_is_stable() {
+        assert_eq!(SummaryParams::new(0.1, 1, 0.01).label(), "r0.10-n1-d0.010");
+    }
+
+    #[test]
+    #[should_panic(expected = "delta")]
+    fn zero_delta_rejected() {
+        SummaryParams::new(0.1, 0, 0.0);
+    }
+}

@@ -1,0 +1,4 @@
+//! Test-support substrates, including the `vprop` mini property-testing
+//! framework (proptest substitute; see DESIGN.md §Substitutions).
+
+pub mod vprop;

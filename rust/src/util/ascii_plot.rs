@@ -1,0 +1,117 @@
+//! Terminal line plots for the figure harness.
+//!
+//! The paper's figures are per-query series (vertex ratio, edge ratio,
+//! RBO, speedup) for the best-3/worst-3 parameter combinations. The
+//! experiment harness writes CSVs for external plotting *and* renders a
+//! quick-look ASCII chart so `cargo bench --bench figures` output is
+//! self-contained.
+
+/// One named series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    /// Construct a series.
+    pub fn new(label: impl Into<String>, ys: Vec<f64>) -> Self {
+        Self { label: label.into(), ys }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render series into a `width`×`height` character grid with axis labels.
+/// X is the query index 1..=N (like the paper's figures).
+pub fn render(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let width = width.max(16);
+    let height = height.max(4);
+    let n = series.iter().map(|s| s.ys.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if n == 0 || series.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let finite = |v: f64| v.is_finite();
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in series {
+        for &y in s.ys.iter().filter(|y| finite(**y)) {
+            lo = lo.min(y);
+            hi = hi.max(y);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        out.push_str("  (no finite data)\n");
+        return out;
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for (i, &y) in s.ys.iter().enumerate() {
+            if !finite(y) {
+                continue;
+            }
+            let x = if n == 1 { 0 } else { i * (width - 1) / (n - 1) };
+            let fy = (y - lo) / (hi - lo);
+            let row = height - 1 - ((fy * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[row][x] = mark;
+        }
+    }
+    for (ri, row) in grid.iter().enumerate() {
+        let yval = hi - (hi - lo) * ri as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>9.4} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>10}1{:>w$}\n", "", n, w = width - 1));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_single_series_with_extremes_on_edges() {
+        let s = Series::new("up", (0..10).map(|i| i as f64).collect());
+        let txt = render("t", &[s], 40, 8);
+        assert!(txt.starts_with("t\n"));
+        assert!(txt.contains("up"));
+        // max label appears on first data row, min on last
+        assert!(txt.contains("9.0000"));
+        assert!(txt.contains("0.0000"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = Series::new("flat", vec![2.0; 5]);
+        let txt = render("flat", &[s], 30, 5);
+        assert!(txt.contains('*'));
+    }
+
+    #[test]
+    fn empty_series_is_graceful() {
+        assert!(render("none", &[], 30, 5).contains("no data"));
+        let s = Series::new("nan", vec![f64::NAN]);
+        assert!(render("nan", &[s], 30, 5).contains("no finite data"));
+    }
+
+    #[test]
+    fn multiple_series_use_distinct_marks() {
+        let a = Series::new("a", vec![0.0, 1.0]);
+        let b = Series::new("b", vec![1.0, 0.0]);
+        let txt = render("two", &[a, b], 30, 6);
+        assert!(txt.contains('*') && txt.contains('o'));
+    }
+}

@@ -1,0 +1,215 @@
+//! Small CLI argument parser (substrate for the unavailable `clap`).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, repeated
+//! options, and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Specification of one option/flag.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: option values + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    /// Last value of `--name`, if given (or its default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable option.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Typed accessor with parse error reporting.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Usage(format!("invalid value for --{name}: {s:?}"))),
+        }
+    }
+
+    /// Typed accessor with a required default already set in the spec.
+    pub fn req_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        self.get_parse::<T>(name)?
+            .ok_or_else(|| Error::Usage(format!("missing required --{name}")))
+    }
+}
+
+/// A command (or subcommand) definition.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// New command with a name and description.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    /// Add a value-taking option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let tail = if o.takes_value {
+                match o.default {
+                    Some(d) => format!(" <value>   (default: {d})"),
+                    None => " <value>".to_string(),
+                }
+            } else {
+                String::new()
+            };
+            s.push_str(&format!("  --{}{tail}\n      {}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse `args` (not including argv[0] / the subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(raw) = a.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (raw, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::Usage(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Usage(format!("--{name} needs a value")))?
+                        }
+                    };
+                    out.values.entry(name.to_string()).or_default().push(v);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::Usage(format!("--{name} takes no value")));
+                    }
+                    out.flags.insert(name.to_string(), true);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("count", "how many", Some("3"))
+            .opt("name", "a name", None)
+            .flag("verbose", "talk more")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(p.get("count"), Some("3"));
+        assert_eq!(p.get("name"), None);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn values_flags_positionals() {
+        let p = cmd()
+            .parse(&argv(&["--count", "7", "--verbose", "pos1", "--name=zed", "pos2"]))
+            .unwrap();
+        assert_eq!(p.req_parse::<u32>("count").unwrap(), 7);
+        assert_eq!(p.get("name"), Some("zed"));
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let p = cmd().parse(&argv(&["--name", "a", "--name", "b"])).unwrap();
+        assert_eq!(p.get_all("name"), &["a".to_string(), "b".to_string()]);
+        assert_eq!(p.get("name"), Some("b"));
+    }
+
+    #[test]
+    fn unknown_option_is_usage_error() {
+        let e = cmd().parse(&argv(&["--bogus"])).unwrap_err();
+        assert!(matches!(e, Error::Usage(_)));
+        assert!(e.to_string().contains("--bogus"));
+    }
+
+    #[test]
+    fn missing_value_is_usage_error() {
+        assert!(cmd().parse(&argv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_reports_option() {
+        let p = cmd().parse(&argv(&["--count", "zebra"])).unwrap();
+        let e = p.req_parse::<u32>("count").unwrap_err();
+        assert!(e.to_string().contains("count"));
+    }
+
+    #[test]
+    fn usage_mentions_all_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--count") && u.contains("--verbose") && u.contains("default: 3"));
+    }
+}

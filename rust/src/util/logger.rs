@@ -1,0 +1,124 @@
+//! Tiny leveled stderr logger (substrate for `log` + `env_logger`).
+//!
+//! Level is taken from `VEILGRAPH_LOG` (error|warn|info|debug|trace),
+//! default `info`. Thread-safe; messages are single `eprintln!` calls so
+//! they do not interleave mid-line.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+/// Log severity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: Once = Once::new();
+
+fn init() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("VEILGRAPH_LOG") {
+            LEVEL.store(Level::from_str(&v) as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(level: Level) {
+    init();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current level.
+pub fn level() -> Level {
+    init();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// True if `lvl` would be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Emit a message (used by the macros; prefer those).
+pub fn emit(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        eprintln!("[{} {target}] {msg}", lvl.tag());
+    }
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Error, module_path!(), format_args!($($t)*)) };
+}
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Warn, module_path!(), format_args!($($t)*)) };
+}
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Info, module_path!(), format_args!($($t)*)) };
+}
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Debug, module_path!(), format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_output() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+    }
+
+    #[test]
+    fn from_str_parses_known_levels() {
+        assert_eq!(Level::from_str("ERROR"), Level::Error);
+        assert_eq!(Level::from_str("warning"), Level::Warn);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+}

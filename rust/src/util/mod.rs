@@ -1,0 +1,23 @@
+//! General-purpose substrates.
+//!
+//! The offline build environment vendors only the `xla` crate closure, so
+//! everything a framework normally pulls from crates.io (rand, serde, clap,
+//! tokio, criterion, …) is implemented here, small and tested:
+//!
+//! * [`rng`] — SplitMix64 + Xoshiro256++ PRNGs, shuffling, sampling.
+//! * [`stats`] — streaming moments, percentiles, summaries.
+//! * [`json`] — minimal JSON value model, parser and writer.
+//! * [`logger`] — leveled stderr logger.
+//! * [`cli`] — declarative-ish argument parser for the `veilgraph` binary.
+//! * [`threadpool`] — fixed worker pool with panic propagation.
+//! * [`timer`] — stopwatches and scoped timers.
+//! * [`ascii_plot`] — terminal line plots for the figure harness.
+
+pub mod ascii_plot;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

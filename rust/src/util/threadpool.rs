@@ -1,0 +1,186 @@
+//! Fixed-size worker thread pool (substrate for the unavailable `tokio` /
+//! `rayon`).
+//!
+//! The coordinator uses it for parallel experiment grids and for the query
+//! server's worker side. Jobs are `FnOnce` closures; [`ThreadPool::scope_map`]
+//! gives a rayon-like parallel map with panic propagation.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("veilgraph-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                // Panics are contained per-job; scope_map
+                                // re-raises them on the caller side.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("failed to spawn worker"),
+            );
+        }
+        Self { tx, handles, size }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job submission.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool shut down");
+    }
+
+    /// Parallel map: applies `f` to every item, preserving order.
+    ///
+    /// Panics in `f` are captured and re-raised on the calling thread after
+    /// all jobs finish (first panic wins).
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            let (i, res) = rrx.recv().expect("worker vanished");
+            match res {
+                Ok(v) => slots[i] = Some(v),
+                Err(p) => {
+                    if panic.is_none() {
+                        panic = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.scope_map((0..200).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..200).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_handles_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.scope_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_map(vec![1, 2, 3], |x| {
+                if x == 2 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        assert!(res.is_err());
+        // Pool must still be usable after a contained panic.
+        let ok = pool.scope_map(vec![1, 2], |x| x + 1);
+        assert_eq!(ok, vec![2, 3]);
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.scope_map(vec![5], |x| x), vec![5]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Stopwatches and scoped timers used by the engine's statistics and the
+//! bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    started: Instant,
+}
+
+impl Stopwatch {
+    /// Start now.
+    pub fn start() -> Self {
+        Self { started: Instant::now() }
+    }
+
+    /// Elapsed time since start/restart.
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.started.elapsed();
+        self.started = Instant::now();
+        e
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Times a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+/// Human-friendly duration formatting for reports (µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let lap = sw.lap();
+        assert!(lap >= Duration::from_millis(5));
+        // After lap, the clock restarts.
+        assert!(sw.elapsed() < lap + Duration::from_millis(50));
+    }
+
+    #[test]
+    fn timed_returns_result_and_positive_time() {
+        let (v, t) = timed(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting_picks_units() {
+        assert!(fmt_duration(0.0000005).ends_with("µs"));
+        assert!(fmt_duration(0.5).ends_with("ms"));
+        assert!(fmt_duration(2.0).ends_with('s'));
+        assert_eq!(fmt_duration(1.5), "1.500s");
+    }
+}

@@ -1,0 +1,114 @@
+//! Black-box tests of the `veilgraph` binary (the leader entrypoint).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_veilgraph"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = bin().args(args).output().expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_all_subcommands() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["serve", "generate", "experiment", "figures", "info"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("frobnicate"));
+}
+
+#[test]
+fn table1_prints_all_seven_datasets() {
+    let (ok, stdout, _) = run(&["figures", "--table1", "--scale", "0.02"]);
+    assert!(ok, "{stdout}");
+    for ds in ["cnr-2000", "eu-2005", "Cit-HepPh", "enron", "dblp-2010", "amazon-2008", "Facebook-ego"]
+    {
+        assert!(stdout.contains(ds), "table1 missing {ds}");
+    }
+}
+
+#[test]
+fn generate_roundtrips_through_a_file() {
+    let path = std::env::temp_dir().join(format!("vg-cli-gen-{}.tsv", std::process::id()));
+    let (ok, stdout, stderr) = run(&[
+        "generate",
+        "--dataset",
+        "social-enron",
+        "--scale",
+        "0.02",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let edges = veilgraph::graph::io::load_edges(&path).unwrap();
+    assert!(edges.len() > 100, "generated {} edges", edges.len());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn generate_rejects_unknown_dataset() {
+    let (ok, _, stderr) = run(&["generate", "--dataset", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("nope"));
+}
+
+#[test]
+fn experiment_writes_figure_csvs() {
+    let out = std::env::temp_dir().join(format!("vg-cli-exp-{}", std::process::id()));
+    let (ok, stdout, stderr) = run(&[
+        "experiment",
+        "--dataset",
+        "social-enron",
+        "--scale",
+        "0.03",
+        "--queries",
+        "5",
+        "--workers",
+        "4",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("best-speedup"));
+    let files: Vec<String> = std::fs::read_dir(&out)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .collect();
+    assert!(files.iter().any(|f| f.contains("rbo")), "{files:?}");
+    assert!(files.iter().any(|f| f.contains("speedup")), "{files:?}");
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn figures_requires_a_selection() {
+    let (ok, _, stderr) = run(&["figures"]);
+    assert!(!ok);
+    assert!(stderr.contains("--fig") || stderr.contains("--all"));
+}
+
+#[test]
+fn info_reports_artifacts_when_present() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").is_file() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let (ok, stdout, _) = run(&["info", "--artifacts", artifacts.to_str().unwrap()]);
+    assert!(ok);
+    assert!(stdout.contains("platform: cpu"));
+    assert!(stdout.contains("pagerank_run_c128"));
+}

@@ -1,0 +1,219 @@
+//! Integration: the full engine over realistic streams — the paper's
+//! protocol end-to-end (split → chunk → replay → RBO/speedup), plus
+//! stream-operation coverage the paper leaves to future work (removals),
+//! and failure injection.
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::policies::{AlwaysExact, ChangeRatioPolicy, SlaPolicy, SlaTier};
+use veilgraph::coordinator::udf::Action;
+use veilgraph::graph::generate;
+use veilgraph::metrics::ranking::top_k_ids;
+use veilgraph::metrics::rbo::rbo_ext;
+use veilgraph::pagerank::power::PageRankConfig;
+use veilgraph::stream::event::{EdgeOp, UpdateEvent};
+use veilgraph::stream::source::{chunked_events, split_stream};
+use veilgraph::summary::params::SummaryParams;
+
+fn pr_cfg() -> PageRankConfig {
+    PageRankConfig { epsilon: 1e-8, max_iters: 100, ..Default::default() }
+}
+
+/// The paper's core claim at test scale: summarized replays keep RBO
+/// high while touching a small fraction of the graph.
+#[test]
+fn paper_protocol_keeps_rbo_high_with_small_summaries() {
+    let edges = generate::copying_web(3000, 8, 0.7, 1234);
+    let (initial, stream) = split_stream(&edges, 600, true, 99);
+    let events = chunked_events(&stream, 10);
+
+    let mut approx = EngineBuilder::new()
+        .params(SummaryParams::new(0.2, 1, 0.1))
+        .pagerank(pr_cfg())
+        .build_from_edges(initial.iter().copied())
+        .unwrap();
+    let mut exact = EngineBuilder::new()
+        .udf(Box::new(AlwaysExact))
+        .pagerank(pr_cfg())
+        .build_from_edges(initial.iter().copied())
+        .unwrap();
+
+    let ra = approx.run_stream(events.clone()).unwrap();
+    let re = exact.run_stream(events).unwrap();
+    assert_eq!(ra.len(), 10);
+    assert_eq!(re.len(), 10);
+
+    let mut rbo_sum = 0.0;
+    let mut vr_sum = 0.0;
+    for (a, e) in ra.iter().zip(&re) {
+        let rbo = rbo_ext(
+            &top_k_ids(&a.ids, &a.ranks, 500),
+            &top_k_ids(&e.ids, &e.ranks, 500),
+            0.99,
+        );
+        rbo_sum += rbo;
+        vr_sum += a.exec.summary_vertices as f64 / a.ids.len() as f64;
+    }
+    let rbo_avg = rbo_sum / 10.0;
+    let vr_avg = vr_sum / 10.0;
+    assert!(rbo_avg > 0.93, "avg RBO {rbo_avg}");
+    assert!(vr_avg < 0.5, "avg vertex ratio {vr_avg} should be well under 1");
+}
+
+/// Edge removals (`e-`) — the paper's model includes them even though the
+/// evaluation streams are additions-only.
+#[test]
+fn removals_are_tracked_and_affect_ranks() {
+    let base = generate::barabasi_albert(200, 3, 0.5, 5);
+    let mut e = EngineBuilder::new()
+        .params(SummaryParams::new(0.1, 1, 0.1))
+        .pagerank(pr_cfg())
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    // Remove a batch of the hub's in-edges: its rank must fall.
+    let hub = {
+        let r0 = e.query().unwrap();
+        r0.top(1)[0].0
+    };
+    let victims: Vec<EdgeOp> = base
+        .iter()
+        .filter(|&&(_, v)| v == hub)
+        .take(10)
+        .map(|&(u, v)| EdgeOp::remove(u, v))
+        .collect();
+    assert!(!victims.is_empty());
+    let before = e.query().unwrap().top(50);
+    let rank_before = before.iter().find(|(v, _)| *v == hub).unwrap().1;
+    e.ingest_many(victims);
+    let after = e.query().unwrap();
+    assert_eq!(after.action, Action::ComputeApproximate);
+    assert!(after.exec.summary_vertices > 0, "removals must mark hot vertices");
+    let rank_after = after.top(200).iter().find(|(v, _)| *v == hub).map(|(_, s)| *s).unwrap_or(0.0);
+    assert!(rank_after < rank_before, "hub rank should drop: {rank_before} -> {rank_after}");
+}
+
+/// Vertex removal (`v-`) drops all incident edges and keeps serving.
+#[test]
+fn vertex_removal_keeps_engine_consistent() {
+    let mut e = EngineBuilder::new()
+        .pagerank(pr_cfg())
+        .build_from_edges(vec![(0, 1), (1, 2), (2, 0), (2, 3), (3, 0)])
+        .unwrap();
+    e.ingest(EdgeOp::RemoveVertex(2));
+    let r = e.query().unwrap();
+    assert_eq!(e.graph().num_edges(), 2); // 0->1 and 3->0 survive
+    assert_eq!(r.ranks.len(), 4);
+    // another query still works
+    let _ = e.query().unwrap();
+}
+
+/// ChangeRatio policy switches between all three actions over a stream.
+#[test]
+fn change_ratio_policy_exercises_all_actions() {
+    let base = generate::erdos_renyi(500, 3000, 9);
+    let mut e = EngineBuilder::new()
+        .udf(Box::new(ChangeRatioPolicy::new(0.01, 0.2)))
+        .pagerank(pr_cfg())
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    // tiny update ⇒ repeat
+    e.ingest(EdgeOp::add(0, 499));
+    assert_eq!(e.query().unwrap().action, Action::RepeatLast);
+    // moderate update ⇒ approximate
+    e.ingest_many((0..30u64).map(|i| EdgeOp::add(i, 400 + (i % 50))));
+    assert_eq!(e.query().unwrap().action, Action::ComputeApproximate);
+    // massive update ⇒ exact
+    e.ingest_many((0..400u64).map(|i| EdgeOp::add(1000 + i, i % 500)));
+    assert_eq!(e.query().unwrap().action, Action::ComputeExact);
+}
+
+/// SLA tiers: gold always exact; bronze repeats tiny updates.
+#[test]
+fn sla_tiers_differ_in_work() {
+    // Bronze repeats only when < 0.1 % of vertices are touched — needs a
+    // graph big enough that one edge is below that bar.
+    let base = generate::barabasi_albert(3000, 3, 0.5, 17);
+    let mut gold = EngineBuilder::new()
+        .udf(Box::new(SlaPolicy { tier: SlaTier::Gold }))
+        .pagerank(pr_cfg())
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    let mut bronze = EngineBuilder::new()
+        .udf(Box::new(SlaPolicy { tier: SlaTier::Bronze }))
+        .pagerank(pr_cfg())
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    gold.ingest(EdgeOp::add(0, 2999));
+    bronze.ingest(EdgeOp::add(0, 2999));
+    assert_eq!(gold.query().unwrap().action, Action::ComputeExact);
+    assert_eq!(bronze.query().unwrap().action, Action::RepeatLast);
+}
+
+/// Duplicate adds and bogus removes in the stream must not poison the
+/// engine (failure injection).
+#[test]
+fn malformed_stream_operations_are_tolerated() {
+    let mut e = EngineBuilder::new()
+        .pagerank(pr_cfg())
+        .build_from_edges(vec![(0, 1), (1, 2)])
+        .unwrap();
+    e.ingest(EdgeOp::add(0, 1)); // duplicate
+    e.ingest(EdgeOp::remove(5, 6)); // nonexistent
+    e.ingest(EdgeOp::remove(0, 2)); // nonexistent edge between real vertices
+    e.ingest(EdgeOp::add(2, 0)); // legitimate
+    let r = e.query().unwrap();
+    assert_eq!(e.graph().num_edges(), 3);
+    assert!(r.ranks.iter().all(|&x| x.is_finite()));
+}
+
+/// A long stream with interleaved empty queries: query count, metrics and
+/// monotone ids stay consistent.
+#[test]
+fn long_stream_bookkeeping() {
+    let base = generate::erdos_renyi(100, 600, 3);
+    let mut e = EngineBuilder::new()
+        .pagerank(pr_cfg())
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    let mut events = Vec::new();
+    for i in 0..20u64 {
+        if i % 3 != 2 {
+            events.push(UpdateEvent::Op(EdgeOp::add(200 + i, i % 100)));
+        }
+        events.push(UpdateEvent::Query);
+    }
+    events.push(UpdateEvent::Stop);
+    let rs = e.run_stream(events).unwrap();
+    assert_eq!(rs.len(), 20);
+    for (i, r) in rs.iter().enumerate() {
+        assert_eq!(r.query_id, i as u64 + 1);
+    }
+    assert_eq!(e.metrics().counter("queries"), 20);
+    assert!(e.metrics().timing("query_secs").unwrap().count() == 20);
+}
+
+/// Exact-vs-approximate divergence is bounded over a long stream even
+/// without periodic refresh (the paper's RBO decay curves).
+#[test]
+fn rbo_decays_gracefully_not_catastrophically() {
+    let edges = generate::barabasi_albert(2000, 4, 0.6, 44);
+    let (initial, stream) = split_stream(&edges, 800, true, 7);
+    let events = chunked_events(&stream, 20);
+    let mut approx = EngineBuilder::new()
+        .params(SummaryParams::new(0.1, 1, 0.01)) // accuracy-oriented
+        .pagerank(pr_cfg())
+        .build_from_edges(initial.iter().copied())
+        .unwrap();
+    let mut exact = EngineBuilder::new()
+        .udf(Box::new(AlwaysExact))
+        .pagerank(pr_cfg())
+        .build_from_edges(initial.iter().copied())
+        .unwrap();
+    let ra = approx.run_stream(events.clone()).unwrap();
+    let re = exact.run_stream(events).unwrap();
+    let last_rbo = rbo_ext(
+        &top_k_ids(&ra[19].ids, &ra[19].ranks, 500),
+        &top_k_ids(&re[19].ids, &re[19].ranks, 500),
+        0.99,
+    );
+    assert!(last_rbo > 0.9, "RBO after 20 queries {last_rbo}");
+}

@@ -1,0 +1,283 @@
+//! Property-based tests (via the in-repo `vprop` framework) over the
+//! coordinator's core invariants: graph/CSR consistency, hot-set
+//! structure, summary-graph algebra, RBO axioms, and engine state.
+
+use std::collections::HashMap;
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::metrics::ranking::top_k_ids;
+use veilgraph::metrics::rbo::rbo_ext;
+use veilgraph::pagerank::power::{PageRank, PageRankConfig};
+use veilgraph::pagerank::summarized::{merge_ranks, run_summarized};
+use veilgraph::stream::buffer::UpdateBuffer;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::summary::bigvertex::SummaryGraph;
+use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::testing::vprop::{forall, Gen};
+
+fn random_graph(g: &mut Gen, max_n: usize, max_m: usize) -> DynamicGraph {
+    let n = g.usize(2..max_n);
+    let m = g.usize(1..max_m);
+    DynamicGraph::from_edges(g.edges(n, m)).0
+}
+
+fn random_params(g: &mut Gen) -> SummaryParams {
+    SummaryParams::new(g.f64(0.0..0.5), g.usize(0..3) as u32, g.f64(0.001..1.0))
+}
+
+/// CSR snapshot always mirrors the dynamic graph exactly.
+#[test]
+fn prop_snapshot_consistency() {
+    forall(60, 0xA1, |g| {
+        let dg = random_graph(g, 60, 300);
+        let csr = dg.snapshot();
+        assert_eq!(csr.num_vertices(), dg.num_vertices());
+        assert_eq!(csr.num_edges(), dg.num_edges());
+        let total_out: u32 = csr.out_degrees().iter().sum();
+        assert_eq!(total_out as usize, dg.num_edges());
+        for v in 0..dg.num_vertices() as u32 {
+            assert_eq!(csr.row(v).len(), dg.in_degree(v));
+            for &s in csr.row(v) {
+                assert!(dg.out_neighbors(s).contains(&v));
+            }
+        }
+    });
+}
+
+/// Applying a buffer then inspecting degrees reproduces d_{t-1} exactly.
+#[test]
+fn prop_buffer_prev_degrees_are_faithful() {
+    forall(60, 0xA2, |g| {
+        let mut dg = random_graph(g, 40, 150);
+        let before: HashMap<u64, usize> = dg
+            .ids()
+            .iter()
+            .map(|&id| (id, dg.degree(dg.index(id).unwrap())))
+            .collect();
+        let mut buf = UpdateBuffer::new();
+        for _ in 0..g.usize(1..20) {
+            let (u, v) = (g.u64(0..60), g.u64(0..60));
+            if u != v {
+                buf.register(EdgeOp::add(u, v));
+            }
+        }
+        let applied = buf.apply(&mut dg).unwrap();
+        for (&id, &d_prev) in &applied.prev_degree {
+            assert_eq!(before[&id], d_prev, "prev degree for {id}");
+        }
+        for id in &applied.new_vertices {
+            assert!(!before.contains_key(id), "{id} claimed new but existed");
+        }
+    });
+}
+
+/// Hot-set structure: tiers are disjoint, bitmap matches lists, every
+/// touched-and-past-threshold vertex is captured.
+#[test]
+fn prop_hot_set_structure() {
+    forall(50, 0xA3, |g| {
+        let mut dg = random_graph(g, 50, 200);
+        let mut buf = UpdateBuffer::new();
+        for _ in 0..g.usize(1..15) {
+            let (u, v) = (g.u64(0..70), g.u64(0..70));
+            if u != v {
+                buf.register(EdgeOp::add(u, v));
+            }
+        }
+        let applied = buf.apply(&mut dg).unwrap();
+        let ranks: Vec<f64> = (0..dg.num_vertices()).map(|_| g.f64(0.0..2.0)).collect();
+        let params = random_params(g);
+        let hs = compute_hot_set(
+            &HotSetInputs {
+                graph: &dg,
+                prev_degree: &applied.prev_degree,
+                new_vertices: &applied.new_vertices,
+                prev_ranks: &ranks,
+            },
+            &params,
+        );
+        // disjoint tiers
+        let all = hs.all();
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len(), "tiers overlap");
+        // bitmap agrees
+        for &v in &all {
+            assert!(hs.contains(v));
+        }
+        assert_eq!(hs.hot.iter().filter(|&&b| b).count(), all.len());
+        // every new vertex is in K_r
+        for id in &applied.new_vertices {
+            let idx = dg.index(*id).unwrap();
+            assert!(hs.k_r.contains(&idx), "new vertex {id} missing from K_r");
+        }
+        // Eq. 2 soundness: every K_r vertex either is new or crossed r
+        for &v in &hs.k_r {
+            let id = dg.id(v);
+            if let Some(&d_prev) = applied.prev_degree.get(&id) {
+                let d_now = dg.degree(v);
+                let crossed = if d_prev == 0 {
+                    d_now > 0
+                } else {
+                    (d_now as f64 / d_prev as f64 - 1.0).abs() > params.r
+                };
+                assert!(crossed, "vertex {id} in K_r without crossing r");
+            } else {
+                assert!(applied.new_vertices.contains(&id));
+            }
+        }
+    });
+}
+
+/// Summary-graph algebra: boundary sums match Eq. 1, edge weights are
+/// 1/d_out, warm starts echo prev ranks.
+#[test]
+fn prop_summary_graph_algebra() {
+    forall(50, 0xA4, |g| {
+        let dg = random_graph(g, 40, 200);
+        let n = dg.num_vertices();
+        let ranks: Vec<f64> = (0..n).map(|_| g.f64(0.01..1.5)).collect();
+        // random hot subset
+        let mut hot = vec![false; n];
+        let mut k_r = Vec::new();
+        for v in 0..n as u32 {
+            if g.bool(0.4) {
+                hot[v as usize] = true;
+                k_r.push(v);
+            }
+        }
+        let hs = HotSet { k_r, k_n: vec![], k_delta: vec![], hot };
+        let s = SummaryGraph::build(&dg, &hs, &ranks, 1.0);
+        // Eq. 1: b_s equals the sum over b
+        let b_total: f64 = s.b.iter().sum();
+        assert!((b_total - s.b_s).abs() < 1e-9);
+        // recompute boundary contributions independently
+        let mut expect_b_s = 0.0;
+        for (li, &z) in s.vertices.iter().enumerate() {
+            let mut expect = 0.0;
+            for &w in dg.in_neighbors(z) {
+                if !hs.contains(w) {
+                    expect += ranks[w as usize] / dg.out_degree(w) as f64;
+                }
+            }
+            assert!((s.b[li] - expect).abs() < 1e-9, "b_z mismatch at local {li}");
+            expect_b_s += expect;
+            assert!((s.r0[li] - ranks[z as usize]).abs() < 1e-12);
+        }
+        assert!((expect_b_s - s.b_s).abs() < 1e-9);
+        // weights are exactly 1/d_out of the full graph
+        for z in 0..s.num_vertices() {
+            for &(u_local, w) in s.row(z) {
+                let u_dense = s.vertices[u_local as usize];
+                let expect = 1.0 / dg.out_degree(u_dense) as f32;
+                assert_eq!(w, expect);
+            }
+        }
+    });
+}
+
+/// Fixed-point preservation (Langville–Meyer): summarizing at the exact
+/// fixed point returns the fixed point, for ANY hot set.
+#[test]
+fn prop_summarized_preserves_fixed_point() {
+    let cfg = PageRankConfig { epsilon: 1e-13, max_iters: 300, ..Default::default() };
+    forall(40, 0xA5, |g| {
+        let dg = random_graph(g, 30, 120);
+        let n = dg.num_vertices();
+        let exact = PageRank::new(cfg).run(&dg.snapshot());
+        let mut hot = vec![false; n];
+        let mut k_r = Vec::new();
+        for v in 0..n as u32 {
+            if g.bool(0.5) {
+                hot[v as usize] = true;
+                k_r.push(v);
+            }
+        }
+        let hs = HotSet { k_r, k_n: vec![], k_delta: vec![], hot };
+        let s = SummaryGraph::build(&dg, &hs, &exact.ranks, cfg.init_rank(n));
+        let sr = run_summarized(&s, &cfg);
+        for (li, &v) in s.vertices.iter().enumerate() {
+            assert!(
+                (sr.ranks[li] - exact.ranks[v as usize]).abs() < 1e-6,
+                "fixed point drifted at {v}: {} vs {}",
+                sr.ranks[li],
+                exact.ranks[v as usize]
+            );
+        }
+        // merge keeps non-hot untouched
+        let merged = merge_ranks(&exact.ranks, &s, &sr.ranks, cfg.init_rank(n));
+        for v in 0..n {
+            if !hs.contains(v as u32) {
+                assert_eq!(merged[v], exact.ranks[v]);
+            }
+        }
+    });
+}
+
+/// RBO axioms on random rankings: bounds, symmetry, self-similarity.
+#[test]
+fn prop_rbo_axioms() {
+    forall(80, 0xA6, |g| {
+        let n = g.usize(1..100);
+        let mut a: Vec<u64> = (0..n as u64).collect();
+        let mut b = a.clone();
+        g.rng().shuffle(&mut a);
+        g.rng().shuffle(&mut b);
+        let p = g.f64(0.5..0.999);
+        let v = rbo_ext(&a, &b, p);
+        assert!((0.0..=1.0).contains(&v), "rbo {v} out of bounds");
+        assert!((rbo_ext(&a, &b, p) - rbo_ext(&b, &a, p)).abs() < 1e-12, "asymmetric");
+        assert!((rbo_ext(&a, &a, p) - 1.0).abs() < 1e-9, "self-rbo != 1");
+        // truncation consistency: a prefix of itself scores >= any permutation
+        let k = g.usize(1..n + 1);
+        let prefix = &a[..k];
+        assert!(rbo_ext(prefix, &a, p) >= rbo_ext(&b, &a, p) - 1e-9);
+    });
+}
+
+/// top_k_ids is exactly the head of a stable full sort.
+#[test]
+fn prop_topk_matches_sort() {
+    forall(60, 0xA7, |g| {
+        let n = g.usize(1..200);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let scores: Vec<f64> = (0..n).map(|_| g.f64(0.0..1.0)).collect();
+        let k = g.usize(0..n + 1);
+        let got = top_k_ids(&ids, &scores, k);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&x, &y| scores[y].partial_cmp(&scores[x]).unwrap().then(x.cmp(&y)));
+        let want: Vec<u64> = order[..k].iter().map(|&i| ids[i]).collect();
+        assert_eq!(got, want);
+    });
+}
+
+/// Engine invariant: ranks vector always matches graph size, all finite,
+/// regardless of the op/query interleaving.
+#[test]
+fn prop_engine_rank_vector_integrity() {
+    forall(25, 0xA8, |g| {
+        let base = g.edges(30, 80);
+        let mut engine = EngineBuilder::new()
+            .params(random_params(g))
+            .build_from_edges(base)
+            .unwrap();
+        for _ in 0..g.usize(1..8) {
+            for _ in 0..g.usize(0..10) {
+                let (u, v) = (g.u64(0..50), g.u64(0..50));
+                if u == v {
+                    continue;
+                }
+                if g.bool(0.85) {
+                    engine.ingest(EdgeOp::add(u, v));
+                } else {
+                    engine.ingest(EdgeOp::remove(u, v));
+                }
+            }
+            let r = engine.query().unwrap();
+            assert_eq!(r.ranks.len(), engine.graph().num_vertices());
+            assert_eq!(r.ids.len(), r.ranks.len());
+            assert!(r.ranks.iter().all(|&x| x.is_finite() && x >= 0.0));
+        }
+    });
+}

@@ -1,0 +1,206 @@
+//! Integration: the PJRT runtime path end-to-end against the rust-native
+//! sparse oracle, using the real AOT artifacts built by `make artifacts`.
+//!
+//! These tests are skipped (with a loud message) if `artifacts/` has not
+//! been built — CI always builds artifacts first (`make test`).
+
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::generate;
+use veilgraph::pagerank::power::{PageRank, PageRankConfig};
+use veilgraph::pagerank::summarized::run_summarized;
+use veilgraph::runtime::artifact::{Manifest, Variant};
+use veilgraph::runtime::client::XlaRuntime;
+use veilgraph::runtime::executor::{Backend, SummarizedExecutor};
+use veilgraph::summary::bigvertex::SummaryGraph;
+use veilgraph::summary::hot::HotSet;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").is_file() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built — run `make artifacts`");
+        None
+    }
+}
+
+fn full_hot(g: &DynamicGraph) -> HotSet {
+    let idxs: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    HotSet { k_r: idxs, k_n: vec![], k_delta: vec![], hot: vec![true; g.num_vertices()] }
+}
+
+fn cfg() -> PageRankConfig {
+    PageRankConfig { beta: 0.85, max_iters: 100, epsilon: 1e-7, ..Default::default() }
+}
+
+#[test]
+fn manifest_covers_step_and_run_tiers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.capacities(Variant::Step).contains(&128));
+    assert!(m.capacities(Variant::Run).contains(&128));
+    assert!(m.iters_fused >= 1);
+    assert_eq!(m.tile, 128);
+}
+
+#[test]
+fn xla_step_matches_reference_formula() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let cap = rt.ensure_tier(Variant::Step, 100).unwrap();
+    assert_eq!(cap, 128);
+    // A = 0 except A[0,1] = 0.5; r = e1; b[0] = 0.25; mask first two rows.
+    let mut a = vec![0.0f32; cap * cap];
+    a[0 * cap + 1] = 0.5;
+    let mut r = vec![0.0f32; cap];
+    r[1] = 1.0;
+    let mut b = vec![0.0f32; cap];
+    b[0] = 0.25;
+    let mut mask = vec![0.0f32; cap];
+    mask[0] = 1.0;
+    mask[1] = 1.0;
+    let out = rt.execute(Variant::Step, cap, &a, &r, &b, &mask, 0.85, 0.01).unwrap();
+    assert!(out.delta.is_none());
+    // r'[0] = 0.85*(0.5*1 + 0.25) + 0.01 = 0.6475; r'[1] = 0.01; rest 0.
+    assert!((out.ranks[0] - 0.6475).abs() < 1e-6, "{}", out.ranks[0]);
+    assert!((out.ranks[1] - 0.01).abs() < 1e-6);
+    assert!(out.ranks[2..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn xla_run_variant_reports_delta_and_converges() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let cap = rt.ensure_tier(Variant::Run, 10).unwrap();
+    // Two-cycle between 0 and 1.
+    let mut a = vec![0.0f32; cap * cap];
+    a[0 * cap + 1] = 1.0;
+    a[1 * cap + 0] = 1.0;
+    let mut r = vec![0.0f32; cap];
+    r[0] = 0.9;
+    r[1] = 0.1;
+    let b = vec![0.0f32; cap];
+    let mut mask = vec![0.0f32; cap];
+    mask[0] = 1.0;
+    mask[1] = 1.0;
+    let teleport = 0.15 / 2.0;
+    let mut delta_prev = f32::INFINITY;
+    for _ in 0..4 {
+        let out = rt.execute(Variant::Run, cap, &a, &r, &b, &mask, 0.85, teleport).unwrap();
+        r = out.ranks.clone();
+        let d = out.delta.expect("run variant returns delta");
+        assert!(d <= delta_prev + 1e-6, "delta must shrink: {d} vs {delta_prev}");
+        delta_prev = d;
+    }
+    // Fixed point of the 2-cycle: 0.5 each.
+    assert!((r[0] - 0.5).abs() < 1e-3, "{}", r[0]);
+    assert!((r[1] - 0.5).abs() < 1e-3);
+}
+
+#[test]
+fn executor_xla_matches_sparse_oracle_on_random_summary() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Synthetic BA graph; hot set = all (dense comparison is strongest).
+    let edges = generate::barabasi_albert(300, 3, 0.4, 99);
+    let (g, _) = DynamicGraph::from_edges(edges);
+    let n = g.num_vertices();
+    let prev = vec![1.0 / n as f64; n];
+    let s = SummaryGraph::build(&g, &full_hot(&g), &prev, 0.0);
+    assert!(s.num_vertices() <= 512);
+
+    let sparse = run_summarized(&s, &cfg());
+    let mut exec = SummarizedExecutor::with_artifacts(&dir).unwrap();
+    exec.set_max_xla_k(usize::MAX); // force the dense path for the oracle check
+    let (xla, backend) = exec.execute(&s, &cfg()).unwrap();
+    assert!(matches!(backend, Backend::XlaDense { .. }), "{backend}");
+
+    assert_eq!(sparse.ranks.len(), xla.ranks.len());
+    for (i, (a, b)) in sparse.ranks.iter().zip(&xla.ranks).enumerate() {
+        assert!((a - b).abs() < 1e-5, "rank {i}: sparse {a} vs xla {b}");
+    }
+}
+
+#[test]
+fn executor_matches_exact_pagerank_when_k_is_everything() {
+    let Some(dir) = artifacts_dir() else { return };
+    let edges = generate::erdos_renyi(200, 1200, 5);
+    let (g, _) = DynamicGraph::from_edges(edges);
+    let n = g.num_vertices();
+    let prev = vec![1.0 / n as f64; n];
+    let s = SummaryGraph::build(&g, &full_hot(&g), &prev, 0.0);
+
+    let mut exec = SummarizedExecutor::with_artifacts(&dir).unwrap();
+    exec.set_max_xla_k(usize::MAX);
+    let (xla, _) = exec.execute(&s, &cfg()).unwrap();
+    let exact = PageRank::new(cfg()).run(&g.snapshot());
+    for (li, &v) in s.vertices.iter().enumerate() {
+        assert!(
+            (xla.ranks[li] - exact.ranks[v as usize]).abs() < 1e-4,
+            "vertex {v}: {} vs {}",
+            xla.ranks[li],
+            exact.ranks[v as usize]
+        );
+    }
+}
+
+#[test]
+fn oversized_summary_falls_back_to_sparse() {
+    let Some(dir) = artifacts_dir() else { return };
+    // 3000 hot vertices > max capacity 2048 ⇒ sparse backend.
+    let edges = generate::erdos_renyi(3000, 9000, 11);
+    let (g, _) = DynamicGraph::from_edges(edges);
+    let n = g.num_vertices();
+    let prev = vec![1.0 / n as f64; n];
+    let s = SummaryGraph::build(&g, &full_hot(&g), &prev, 0.0);
+    let mut exec = SummarizedExecutor::with_artifacts(&dir).unwrap();
+    let (_, backend) = exec.execute(&s, &cfg()).unwrap();
+    assert_eq!(backend, Backend::RustSparse);
+}
+
+#[test]
+fn warmup_compiles_all_tiers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut exec = SummarizedExecutor::with_artifacts(&dir).unwrap();
+    let n = exec.warmup().unwrap();
+    assert!(n >= 10, "expected >= 10 artifacts, got {n}");
+}
+
+#[test]
+fn engine_with_xla_backend_tracks_exact() {
+    use veilgraph::coordinator::engine::EngineBuilder;
+    use veilgraph::coordinator::policies::AlwaysExact;
+    use veilgraph::metrics::rbo::rbo_ext;
+    use veilgraph::stream::event::EdgeOp;
+    use veilgraph::summary::params::SummaryParams;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let base = generate::barabasi_albert(500, 3, 0.3, 7);
+    let mut approx = EngineBuilder::new()
+        .params(SummaryParams::new(0.1, 1, 0.1))
+        .artifacts_dir(&dir)
+        .max_xla_k(2048) // exercise the dense path regardless of CPU cost
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    assert!(approx.has_xla());
+    let mut exact = EngineBuilder::new()
+        .udf(Box::new(AlwaysExact))
+        .build_from_edges(base.iter().copied())
+        .unwrap();
+    for round in 0..3u64 {
+        let ops: Vec<EdgeOp> =
+            (0..20).map(|i| EdgeOp::add(400 + round * 20 + i, (i * 13 + round) % 100)).collect();
+        approx.ingest_many(ops.clone());
+        exact.ingest_many(ops);
+        let ra = approx.query().unwrap();
+        let re = exact.query().unwrap();
+        if ra.exec.summary_vertices > 0 && ra.exec.summary_vertices <= 2048 {
+            assert!(
+                matches!(ra.exec.backend, Some(Backend::XlaDense { .. })),
+                "expected XLA backend, got {:?}",
+                ra.exec.backend
+            );
+        }
+        let rbo = rbo_ext(&ra.top_ids(50), &re.top_ids(50), 0.98);
+        assert!(rbo > 0.85, "round {round}: rbo {rbo}");
+    }
+}
