@@ -1,0 +1,17 @@
+.PHONY: artifacts test bench clean
+
+# AOT-lower the JAX kernels to HLO-text artifacts for the rust runtime.
+# Needs python3 with jax (the repo is validated against jax 0.4.37).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+# Build + full test run with artifacts present, so the runtime
+# integration suite (rust/tests/runtime_integration.rs) does not skip.
+test: artifacts
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench micro && cargo bench --bench ablation
+
+clean:
+	rm -rf rust/target rust/artifacts rust/results results

@@ -6,6 +6,9 @@ import os
 import sys
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # CI installs it; bare envs skip cleanly
 from hypothesis import given, settings, strategies as st
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

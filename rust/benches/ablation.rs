@@ -10,6 +10,8 @@
 //! * **A6** fused 10-iteration artifact vs per-step execute round-trips.
 //! * **A8** stream nature (paper §7): power-law growth vs Erdős–Rényi vs
 //!   sliding-window streams over the same base graph.
+//! * **A9** parallel sharding: serial vs degree-balanced sharded
+//!   execution of both executors across shard counts.
 
 use veilgraph::bench::{BenchConfig, Bencher};
 use veilgraph::coordinator::engine::EngineBuilder;
@@ -26,6 +28,7 @@ use veilgraph::stream::source::{chunked_events, split_stream};
 use veilgraph::summary::bigvertex::SummaryGraph;
 use veilgraph::summary::hot::HotSet;
 use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::threadpool::ThreadPool;
 
 /// Push-style PageRank iteration (A4 comparator): scatter contributions
 /// along out-edges instead of gathering along in-edges.
@@ -85,8 +88,8 @@ fn main() {
         let dense = summary.to_dense(cap);
         let teleport = cfg.teleport(summary.full_n) as f32;
         b.bench(&format!("a1_summarized_xla_c{cap}"), || {
-            rt.execute(Variant::Run, cap, &dense.a, &dense.r0, &dense.b, &dense.mask, 0.85, teleport)
-                .unwrap()
+            let (a, r0, bb, m) = (&dense.a, &dense.r0, &dense.b, &dense.mask);
+            rt.execute(Variant::Run, cap, a, r0, bb, m, 0.85, teleport).unwrap()
         });
     }
 
@@ -217,7 +220,9 @@ fn main() {
     println!("\n== A8: stream nature — power-law growth vs ER vs sliding window ==");
     {
         use veilgraph::stream::event::UpdateEvent;
-        use veilgraph::stream::synthetic::{er_stream, powerlaw_growth_stream, sliding_window_stream};
+        use veilgraph::stream::synthetic::{
+            er_stream, powerlaw_growth_stream, sliding_window_stream,
+        };
         let base_edges = generate::barabasi_albert(6_000, 4, 0.6, 51);
         let (base_graph, _) = DynamicGraph::from_edges(base_edges.iter().copied());
         let streams: Vec<(&str, Vec<veilgraph::stream::event::EdgeOp>)> = vec![
@@ -248,8 +253,8 @@ fn main() {
                 }
             }
             let rs = engine.run_stream(events).unwrap();
-            let k_avg: f64 =
-                rs.iter().map(|r| r.exec.summary_vertices as f64).sum::<f64>() / rs.len().max(1) as f64;
+            let k_avg: f64 = rs.iter().map(|r| r.exec.summary_vertices as f64).sum::<f64>()
+                / rs.len().max(1) as f64;
             let t_avg: f64 =
                 rs.iter().map(|r| r.exec.elapsed_secs).sum::<f64>() / rs.len().max(1) as f64;
             println!(
@@ -259,6 +264,37 @@ fn main() {
                 engine.graph().num_vertices()
             );
         }
+    }
+
+    // ================= A9: parallel sharding ============================
+    println!("\n== A9: serial vs degree-balanced sharded executors ==");
+    {
+        let pool = ThreadPool::with_default_size();
+        let ten = PageRankConfig { max_iters: 10, epsilon: 0.0, ..cfg };
+        let t_serial = b.bench("a9_exact_serial_10iters", || PageRank::new(ten).run(&csr));
+        let t_serial = t_serial.median_secs();
+        for shards in [2usize, 4, 8] {
+            let pcfg = PageRankConfig { parallelism: shards, ..ten };
+            let r = b.bench(&format!("a9_exact_par{shards}_10iters"), || {
+                PageRank::new(pcfg).run_parallel(&csr, &pool)
+            });
+            println!("a9 exact par{shards}: {:.2}x vs serial", t_serial / r.median_secs());
+        }
+        // numerics agree exactly (fixed iteration count)
+        let serial = PageRank::new(ten).run(&csr).ranks;
+        let pcfg = PageRankConfig { parallelism: 4, ..ten };
+        let par = PageRank::new(pcfg).run_parallel(&csr, &pool).ranks;
+        let max_diff =
+            serial.iter().zip(&par).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        println!("a9 max |serial - par4| = {max_diff:.2e} (must be 0)");
+        // summarized executor over the A1 summary
+        let t_sparse = b.bench("a9_summarized_serial", || run_summarized(&summary, &cfg));
+        let t_sparse = t_sparse.median_secs();
+        let p4 = PageRankConfig { parallelism: 4, ..cfg };
+        let r = b.bench("a9_summarized_par4", || {
+            veilgraph::pagerank::summarized::run_summarized_parallel(&summary, &p4, &pool)
+        });
+        println!("a9 summarized par4: {:.2}x vs serial", t_sparse / r.median_secs());
     }
 
     println!("\n{}", b.report());

@@ -55,7 +55,8 @@ fn main() {
         let best_rbo = result.ranked(Metric::Rbo)[0].avg(Metric::Rbo);
         let best_speedup = result.ranked(Metric::Speedup)[0].avg(Metric::Speedup);
         println!(
-            "   paper-shape: best RBO {best_rbo:.4} (paper: >0.95 achievable), best speedup {best_speedup:.2}x (paper: 3-4x+)"
+            "   paper-shape: best RBO {best_rbo:.4} (paper: >0.95 achievable), \
+             best speedup {best_speedup:.2}x (paper: 3-4x+)"
         );
         md.push_str(&markdown_rows(&result));
     }

@@ -18,6 +18,7 @@ use veilgraph::summary::bigvertex::SummaryGraph;
 use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
 use veilgraph::summary::params::SummaryParams;
 use veilgraph::util::rng::Xoshiro256pp;
+use veilgraph::util::threadpool::ThreadPool;
 
 fn main() {
     let mut b = Bencher::with_config(BenchConfig { warmup: 2, iters: 12, min_secs: 0.2 });
@@ -40,6 +41,26 @@ fn main() {
     println!("  (full exact run: {} iterations)\n", full.iterations);
     b.bench("pagerank_converged_50k", || pr_full.run(&csr));
 
+    // -- serial vs sharded parallel exact PageRank ----------------------
+    // Fixed iteration count so every configuration does identical work;
+    // the speedup line is the tentpole number ROADMAP tracks.
+    let pool = ThreadPool::with_default_size();
+    println!("  (pool: {} workers)\n", pool.size());
+    let ten = PageRankConfig { epsilon: 0.0, max_iters: 10, ..Default::default() };
+    let serial_t = b.bench("pagerank_10iter_serial", || PageRank::new(ten).run(&csr)).median_secs();
+    let mut speedup_at_4 = 0.0f64;
+    for shards in [2usize, 4, 8] {
+        let cfg = PageRankConfig { parallelism: shards, ..ten };
+        let name = format!("pagerank_10iter_par{shards}");
+        let t = b.bench(&name, || PageRank::new(cfg).run_parallel(&csr, &pool)).median_secs();
+        let speedup = serial_t / t;
+        if shards == 4 {
+            speedup_at_4 = speedup;
+        }
+        println!("  ({name}: {speedup:.2}x vs serial)");
+    }
+    println!("  (serial-vs-parallel speedup at 4 shards: {speedup_at_4:.2}x)\n");
+
     // -- hot-set selection over a realistic update batch ----------------
     let mut prev_degree: HashMap<u64, usize> = HashMap::new();
     let mut rng = Xoshiro256pp::new(9);
@@ -57,7 +78,12 @@ fn main() {
         prev_ranks: &full.ranks,
     };
     let hot = compute_hot_set(&inputs, &params);
-    println!("  (hot set: |K_r|={} |K_n|={} |K_Δ|={})\n", hot.k_r.len(), hot.k_n.len(), hot.k_delta.len());
+    println!(
+        "  (hot set: |K_r|={} |K_n|={} |K_Δ|={})\n",
+        hot.k_r.len(),
+        hot.k_n.len(),
+        hot.k_delta.len()
+    );
     b.bench("hot_set_800_touched", || compute_hot_set(&inputs, &params));
 
     // -- summary build + executors --------------------------------------
@@ -71,6 +97,10 @@ fn main() {
     );
     let cfg = PageRankConfig { epsilon: 1e-8, max_iters: 100, ..Default::default() };
     b.bench("summarized_sparse", || run_summarized(&summary, &cfg));
+    let par_cfg = PageRankConfig { parallelism: 4, ..cfg };
+    b.bench("summarized_sparse_par4", || {
+        veilgraph::pagerank::summarized::run_summarized_parallel(&summary, &par_cfg, &pool)
+    });
 
     // -- XLA path (capacity-tiered) --------------------------------------
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

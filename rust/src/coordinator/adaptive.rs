@@ -105,8 +105,9 @@ impl UdfSuite for AdaptivePolicy {
         };
         // Robbins–Monro: move the threshold toward the target repeat rate.
         let signal = if action == Action::RepeatLast { 1.0 } else { 0.0 };
-        self.repeat_threshold +=
-            self.learning_rate * (self.target_repeat_rate - signal) * self.repeat_threshold.max(1e-6);
+        self.repeat_threshold += self.learning_rate
+            * (self.target_repeat_rate - signal)
+            * self.repeat_threshold.max(1e-6);
         self.repeat_threshold = self.repeat_threshold.clamp(0.0, 0.5);
         action
     }

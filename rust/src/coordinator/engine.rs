@@ -38,6 +38,7 @@ use crate::stream::event::{EdgeOp, UpdateEvent};
 use crate::summary::bigvertex::SummaryGraph;
 use crate::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
 use crate::summary::params::SummaryParams;
+use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
 
 /// A served query: the ranking plus execution metadata.
@@ -74,6 +75,10 @@ impl QueryResult {
 pub struct EngineBuilder {
     params: SummaryParams,
     pr_config: PageRankConfig,
+    /// Set via [`Self::parallelism`]; applied to `pr_config` at build
+    /// time so it survives a later [`Self::pagerank`] call replacing the
+    /// whole config (order-independent builder).
+    parallelism: Option<usize>,
     artifacts_dir: Option<std::path::PathBuf>,
     warmup: bool,
     max_xla_k: Option<usize>,
@@ -86,6 +91,16 @@ impl Default for EngineBuilder {
     }
 }
 
+/// Worker pool matching the config's `parallelism` knob (`None` when the
+/// executors run serial — no idle threads for the default config).
+fn pool_for(pr: &PageRankConfig) -> Option<ThreadPool> {
+    match pr.parallelism {
+        1 => None,
+        0 => Some(ThreadPool::with_default_size()),
+        k => Some(ThreadPool::new(k)),
+    }
+}
+
 impl EngineBuilder {
     /// Defaults: paper mid-grid parameters (r=0.2, n=1, Δ=0.1), β=0.85,
     /// sparse executor, `DefaultSuite` UDFs.
@@ -93,6 +108,7 @@ impl EngineBuilder {
         Self {
             params: SummaryParams::new(0.2, 1, 0.1),
             pr_config: PageRankConfig::default(),
+            parallelism: None,
             artifacts_dir: None,
             warmup: false,
             max_xla_k: None,
@@ -110,6 +126,25 @@ impl EngineBuilder {
     pub fn pagerank(mut self, c: PageRankConfig) -> Self {
         self.pr_config = c;
         self
+    }
+
+    /// Shard count for the PageRank executors (`1` = serial — the
+    /// default; `0` = one shard per available core; `k > 1` = exactly
+    /// `k`). Overrides [`PageRankConfig::parallelism`] at build time —
+    /// order-independent with respect to [`Self::pagerank`]. When the
+    /// resolved value is not `1`, the engine owns a worker pool reused
+    /// by every exact and sparse-summarized computation it serves.
+    pub fn parallelism(mut self, shards: usize) -> Self {
+        self.parallelism = Some(shards);
+        self
+    }
+
+    /// Fold the standalone `parallelism` override into the PageRank
+    /// config (call once, at build time).
+    fn resolve_parallelism(&mut self) {
+        if let Some(p) = self.parallelism {
+            self.pr_config.parallelism = p;
+        }
     }
 
     /// Attach the XLA runtime with artifacts from `dir`.
@@ -154,6 +189,7 @@ impl EngineBuilder {
     /// restores the graph, the rank vector and the query counter without
     /// re-running the initial exact computation.
     pub fn build_from_checkpoint(mut self, path: impl AsRef<std::path::Path>) -> Result<Engine> {
+        self.resolve_parallelism();
         let ckpt = crate::coordinator::checkpoint::load(path)?;
         let mut executor = match &self.artifacts_dir {
             Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
@@ -172,6 +208,7 @@ impl EngineBuilder {
             params: self.params,
             pr_config: self.pr_config,
             executor,
+            pool: pool_for(&self.pr_config),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
             ranks: ckpt.ranks,
@@ -185,6 +222,7 @@ impl EngineBuilder {
 
     /// Build from an existing graph.
     pub fn build_from_graph(mut self, graph: DynamicGraph) -> Result<Engine> {
+        self.resolve_parallelism();
         let mut executor = match &self.artifacts_dir {
             Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
             None => SummarizedExecutor::sparse_only(),
@@ -202,6 +240,7 @@ impl EngineBuilder {
             params: self.params,
             pr_config: self.pr_config,
             executor,
+            pool: pool_for(&self.pr_config),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
             ranks: Vec::new(),
@@ -225,6 +264,8 @@ pub struct Engine {
     params: SummaryParams,
     pr_config: PageRankConfig,
     executor: SummarizedExecutor,
+    /// Worker pool for the sharded executors (`None` ⇔ `parallelism == 1`).
+    pool: Option<ThreadPool>,
     udf: Box<dyn UdfSuite>,
     metrics: MetricsRegistry,
     /// Current full rank vector (dense index order).
@@ -310,7 +351,9 @@ impl Engine {
                 exec.summary_vertices = summary.num_vertices();
                 exec.summary_edges = summary.num_edges();
                 if summary.num_vertices() > 0 {
-                    let (res, backend) = self.executor.execute(&summary, &self.pr_config)?;
+                    let pool = self.pool.as_ref();
+                    let (res, backend) =
+                        self.executor.execute_pooled(&summary, &self.pr_config, pool)?;
                     exec.backend = Some(backend);
                     exec.iterations = res.iterations;
                     self.extend_ranks_for_new_vertices();
@@ -356,7 +399,10 @@ impl Engine {
     }
 
     /// Consume a prepared event stream, returning one result per query.
-    pub fn run_stream(&mut self, events: impl IntoIterator<Item = UpdateEvent>) -> Result<Vec<QueryResult>> {
+    pub fn run_stream(
+        &mut self,
+        events: impl IntoIterator<Item = UpdateEvent>,
+    ) -> Result<Vec<QueryResult>> {
         let mut out = Vec::new();
         for ev in events {
             match ev {
@@ -379,7 +425,8 @@ impl Engine {
     // ---- internals -----------------------------------------------------
 
     /// Run the exact power method (warm-started) and install the ranks.
-    /// Returns iterations executed.
+    /// Sharded across the engine's pool when `parallelism != 1`. Returns
+    /// iterations executed.
     fn compute_exact(&mut self) -> usize {
         let csr = self.graph.snapshot();
         let pr = PageRank::new(self.pr_config);
@@ -387,7 +434,12 @@ impl Engine {
         let warm = self.pr_config.warm_start_exact
             && self.ranks.len() == csr.num_vertices()
             && !self.ranks.is_empty();
-        let res = if warm { pr.run_from(&csr, self.ranks.clone()) } else { pr.run(&csr) };
+        let res = match (&self.pool, warm) {
+            (Some(pool), true) => pr.run_parallel_from(&csr, self.ranks.clone(), pool),
+            (Some(pool), false) => pr.run_parallel(&csr, pool),
+            (None, true) => pr.run_from(&csr, self.ranks.clone()),
+            (None, false) => pr.run(&csr),
+        };
         self.ranks = res.ranks;
         res.iterations
     }
@@ -435,6 +487,12 @@ impl Engine {
     /// Model parameters.
     pub fn params(&self) -> SummaryParams {
         self.params
+    }
+
+    /// Configured shard knob for the PageRank executors (`1` = serial,
+    /// `0` = auto: one shard per worker of the engine's pool).
+    pub fn parallelism(&self) -> usize {
+        self.pr_config.parallelism
     }
 
     /// Number of queries served.
@@ -661,8 +719,90 @@ mod tests {
     }
 
     #[test]
+    fn parallel_engine_matches_serial_engine() {
+        // Same stream through a serial and a 4-shard engine: every query
+        // must produce identical actions and matching ranks — the sharded
+        // executors change the schedule, never the numbers. (Tolerance
+        // 1e-12: the per-iteration values are bit-identical, but the L1
+        // convergence delta reduces in a different order, so the stopping
+        // iteration may differ by one right at the epsilon boundary.)
+        fn assert_close(a: &[f64], b: &[f64], what: &str) {
+            assert_eq!(a.len(), b.len(), "{what}");
+            let linf = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+            assert!(linf < 1e-12, "{what}: L∞ {linf}");
+        }
+        let base = crate::graph::generate::barabasi_albert(200, 3, 0.3, 17);
+        // Fixed iteration budget (epsilon = 0) ⇒ serial and parallel run
+        // the same iteration count, so ranks are bit-identical and the
+        // tolerance below is belt-and-suspenders.
+        let cfg0 = PageRankConfig { epsilon: 0.0, max_iters: 60, ..Default::default() };
+        let mut serial = EngineBuilder::new()
+            .params(SummaryParams::new(0.1, 1, 0.1))
+            .pagerank(cfg0)
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        let mut parallel = EngineBuilder::new()
+            .params(SummaryParams::new(0.1, 1, 0.1))
+            .pagerank(cfg0)
+            .parallelism(4)
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        assert_close(serial.ranks(), parallel.ranks(), "initial exact run");
+        for round in 0..3u64 {
+            let ops: Vec<EdgeOp> =
+                (0..12).map(|i| EdgeOp::add(150 + round * 12 + i, (i * 11 + round) % 60)).collect();
+            serial.ingest_many(ops.clone());
+            parallel.ingest_many(ops);
+            let rs = serial.query().unwrap();
+            let rp = parallel.query().unwrap();
+            assert_eq!(rs.action, rp.action, "round {round}");
+            assert_close(&rs.ranks, &rp.ranks, &format!("round {round}"));
+        }
+        // Exact recomputation (warm-started) also goes through the pool.
+        let mut exact_parallel = EngineBuilder::new()
+            .udf(Box::new(AlwaysExact))
+            .pagerank(cfg0)
+            .parallelism(0) // auto-size
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        let mut exact_serial = EngineBuilder::new()
+            .udf(Box::new(AlwaysExact))
+            .pagerank(cfg0)
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        exact_parallel.ingest(EdgeOp::add(3, 141));
+        exact_serial.ingest(EdgeOp::add(3, 141));
+        let a = exact_parallel.query().unwrap();
+        let b = exact_serial.query().unwrap();
+        assert_close(&a.ranks, &b.ranks, "warm-started exact");
+    }
+
+    #[test]
+    fn parallelism_survives_pagerank_builder_order() {
+        // .parallelism() must not be clobbered by a later .pagerank()
+        // replacing the whole config.
+        let e = EngineBuilder::new()
+            .parallelism(4)
+            .pagerank(PageRankConfig::default())
+            .build_from_edges(ring(5))
+            .unwrap();
+        assert_eq!(e.parallelism(), 4);
+        let e = EngineBuilder::new()
+            .pagerank(PageRankConfig::default())
+            .parallelism(3)
+            .build_from_edges(ring(5))
+            .unwrap();
+        assert_eq!(e.parallelism(), 3);
+        // Without the builder knob, the pagerank config's own value wins.
+        let cfg = PageRankConfig { parallelism: 2, ..Default::default() };
+        let e = EngineBuilder::new().pagerank(cfg).build_from_edges(ring(5)).unwrap();
+        assert_eq!(e.parallelism(), 2);
+    }
+
+    #[test]
     fn top_returns_sorted_pairs() {
-        let mut e = EngineBuilder::new().build_from_edges(vec![(0, 1), (2, 1), (3, 1), (1, 0)]).unwrap();
+        let mut e =
+            EngineBuilder::new().build_from_edges(vec![(0, 1), (2, 1), (3, 1), (1, 0)]).unwrap();
         let r = e.query().unwrap();
         let top = r.top(2);
         assert_eq!(top.len(), 2);

@@ -304,7 +304,11 @@ mod tests {
             h.shutdown();
         });
         let mut client = TcpStream::connect(addr).unwrap();
-        client.write_all(b"{\"op\":\"add\",\"src\":1,\"dst\":15}\n{\"op\":\"query\",\"top\":2}\n{\"op\":\"shutdown\"}\n").unwrap();
+        client
+            .write_all(
+                b"{\"op\":\"add\",\"src\":1,\"dst\":15}\n{\"op\":\"query\",\"top\":2}\n{\"op\":\"shutdown\"}\n",
+            )
+            .unwrap();
         let reader = BufReader::new(client.try_clone().unwrap());
         let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
         assert_eq!(lines.len(), 3);

@@ -1,62 +1,81 @@
 //! Unified error type for the VeilGraph library.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls (substrate for the unavailable
+//! `thiserror` crate) — the std-only build has no proc macros.
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All errors surfaced by VeilGraph public APIs.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A vertex id referenced by an operation does not exist in the graph.
-    #[error("unknown vertex {0}")]
     UnknownVertex(u64),
 
     /// An edge referenced by an operation does not exist in the graph.
-    #[error("unknown edge ({0}, {1})")]
     UnknownEdge(u64, u64),
 
     /// Malformed input data (edge lists, streams, configs).
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Malformed or inconsistent JSON.
-    #[error("json error: {0}")]
     Json(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// A required AOT artifact is missing or inconsistent.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// The PJRT runtime rejected a load/compile/execute call.
-    #[error("runtime error: {0}")]
+    /// The summarized runtime rejected a load/compile/execute call.
     Runtime(String),
 
     /// Engine state machine misuse (e.g. query before initial compute).
-    #[error("engine error: {0}")]
     Engine(String),
 
     /// Capacity exceeded (summary larger than the largest artifact and no
     /// fallback allowed).
-    #[error("capacity error: need {needed}, max {max}")]
     Capacity { needed: usize, max: usize },
 
     /// Backpressure: the ingestion queue is full and the policy is Reject.
-    #[error("backpressure: queue full ({0} pending)")]
     Backpressure(usize),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::UnknownVertex(v) => write!(f, "unknown vertex {v}"),
+            Error::UnknownEdge(u, v) => write!(f, "unknown edge ({u}, {v})"),
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::Json(msg) => write!(f, "json error: {msg}"),
+            Error::Usage(msg) => write!(f, "usage error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Engine(msg) => write!(f, "engine error: {msg}"),
+            Error::Capacity { needed, max } => {
+                write!(f, "capacity error: need {needed}, max {max}")
+            }
+            Error::Backpressure(n) => write!(f, "backpressure: queue full ({n} pending)"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
@@ -79,5 +98,13 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn source_chains_io_errors() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::other("disk").into();
+        assert!(e.source().is_some());
+        assert!(Error::Engine("state".into()).source().is_none());
     }
 }

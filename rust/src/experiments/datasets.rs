@@ -204,7 +204,10 @@ mod tests {
         let names: Vec<_> = ds.iter().map(|d| d.paper_name).collect();
         assert_eq!(
             names,
-            vec!["cnr-2000", "eu-2005", "Cit-HepPh", "enron", "dblp-2010", "amazon-2008", "Facebook-ego"]
+            vec![
+                "cnr-2000", "eu-2005", "Cit-HepPh", "enron", "dblp-2010", "amazon-2008",
+                "Facebook-ego"
+            ]
         );
         // paper's stream sizes
         assert!(ds.iter().all(|d| d.stream_len == 20_000 || d.stream_len == 40_000));

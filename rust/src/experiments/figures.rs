@@ -76,7 +76,10 @@ pub fn render_figure(fig: &FigureSpec, result: &ExperimentResult) -> String {
     let combos = select_combos(fig, result);
     let series: Vec<Series> = combos
         .iter()
-        .map(|c| Series::new(format!("{} (avg {:.4})", c.params.label(), c.avg(fig.metric)), c.series(fig.metric)))
+        .map(|c| {
+            let label = format!("{} (avg {:.4})", c.params.label(), c.avg(fig.metric));
+            Series::new(label, c.series(fig.metric))
+        })
         .collect();
     let title = format!(
         "Figure {} — {} {} (|S|={}, Q={})",

@@ -286,7 +286,8 @@ pub fn run_experiment(
     let rbo_depth = rbo_depth_for_density(density);
 
     crate::log_info!(
-        "experiment {dataset_name}: |V0 edges|={}, |S|={}, Q={}, density={density:.0}, rbo_depth={rbo_depth}",
+        "experiment {dataset_name}: |V0 edges|={}, |S|={}, Q={}, density={density:.0}, \
+         rbo_depth={rbo_depth}",
         initial.len(),
         stream.len(),
         cfg.q

@@ -10,7 +10,10 @@ use crate::experiments::harness::{ExperimentResult, Metric};
 /// Write everything for one experiment under `out_dir`:
 /// `fig{N}_{dataset}_{metric}.csv` + a combined `{dataset}.txt` quicklook.
 /// Returns the file names written.
-pub fn write_experiment(out_dir: impl AsRef<Path>, result: &ExperimentResult) -> Result<Vec<String>> {
+pub fn write_experiment(
+    out_dir: impl AsRef<Path>,
+    result: &ExperimentResult,
+) -> Result<Vec<String>> {
     let out_dir = out_dir.as_ref();
     std::fs::create_dir_all(out_dir)?;
     let mut written = Vec::new();

@@ -94,6 +94,60 @@ impl Csr {
         (0..self.num_vertices() as VertexIdx)
             .flat_map(move |v| self.row(v).iter().map(move |&s| (s, v)))
     }
+
+    /// Split the destination-vertex range into `k` contiguous shards
+    /// balanced by **in-edge count**, not vertex count (a power-law graph
+    /// splits evenly by vertices into shards whose gather work differs by
+    /// orders of magnitude; balancing by edges is what makes the parallel
+    /// executors scale — see `pagerank::power::PageRank::run_parallel`).
+    ///
+    /// Returns `k + 1` ascending cut points into vertex-index space:
+    /// shard `i` owns rows `cuts[i]..cuts[i + 1]`, `cuts[0] == 0`,
+    /// `cuts[k] == |V|`. Deterministic for a fixed `(graph, k)`, so
+    /// sharded reductions have a stable order. `k` is clamped to
+    /// `[1, |V|]` (trailing shards may be empty only when `|V| == 0`).
+    pub fn shards(&self, k: usize) -> Vec<usize> {
+        balanced_cuts(self.num_vertices(), k, |v| self.offsets[v + 1] - self.offsets[v])
+    }
+}
+
+/// Cut `n` contiguous rows into `k` ranges of near-equal total weight,
+/// where row `v` weighs `edge_count(v) + 1` (the `+ 1` accounts for the
+/// per-vertex work — teleport, delta, write — and keeps edge-free
+/// prefixes from collapsing into one giant shard). Shared by
+/// [`Csr::shards`] and `summary::bigvertex::SummaryGraph::shards`.
+///
+/// Greedy with lookahead-free rebalancing: each shard takes rows until it
+/// reaches `ceil(remaining_weight / remaining_shards)`, so early
+/// heavyweight rows cannot starve later shards.
+pub fn balanced_cuts(n: usize, k: usize, mut edge_count: impl FnMut(usize) -> u64) -> Vec<usize> {
+    let k = k.clamp(1, n.max(1));
+    let mut weights = Vec::with_capacity(n);
+    let mut total: u64 = 0;
+    for v in 0..n {
+        let w = edge_count(v) + 1;
+        weights.push(w);
+        total += w;
+    }
+    let mut cuts = Vec::with_capacity(k + 1);
+    cuts.push(0usize);
+    let mut v = 0usize;
+    let mut remaining = total;
+    for s in 0..k {
+        let shards_left = (k - s) as u64;
+        let want = remaining.div_ceil(shards_left);
+        // Leave at least one row for each of the later shards.
+        let ceiling = n - (k - s - 1);
+        let mut taken = 0u64;
+        while v < ceiling && (taken < want || taken == 0) {
+            taken += weights[v];
+            v += 1;
+        }
+        remaining -= taken;
+        cuts.push(v);
+    }
+    debug_assert_eq!(*cuts.last().unwrap(), n);
+    cuts
 }
 
 #[cfg(test)]
@@ -153,5 +207,92 @@ mod tests {
             assert_eq!(c.out_degree(v), 0);
         }
         assert_eq!(c.row(4), &[0]);
+    }
+
+    /// Shard weight (in-edges + 1 per row) for a cut range.
+    fn shard_weight(c: &Csr, lo: usize, hi: usize) -> u64 {
+        (lo..hi).map(|v| c.in_degree(v as u32) as u64 + 1).sum()
+    }
+
+    #[test]
+    fn shards_partition_the_vertex_range() {
+        let c = diamond();
+        for k in 1..=6 {
+            let cuts = c.shards(k);
+            assert_eq!(cuts[0], 0);
+            assert_eq!(*cuts.last().unwrap(), c.num_vertices());
+            assert!(cuts.windows(2).all(|w| w[0] <= w[1]), "{cuts:?}");
+            assert!(cuts.len() <= c.num_vertices() + 1, "k clamps to |V|");
+        }
+        assert_eq!(c.shards(1), vec![0, 4]);
+    }
+
+    #[test]
+    fn shards_balance_by_in_edges_not_vertices() {
+        // Vertex 0 receives an edge from everyone else; vertices 1..n-1
+        // receive nothing. A vertex-count split would give shard 0 half
+        // the edges plus half the vertices; the edge-balanced split must
+        // put row 0 alone (its weight ≈ total/2 already).
+        let n = 64usize;
+        let edges: Vec<(u32, u32)> = (1..n as u32).map(|v| (v, 0)).collect();
+        let c = Csr::from_edges(n, &edges);
+        let cuts = c.shards(2);
+        assert_eq!(cuts.len(), 3);
+        let w0 = shard_weight(&c, cuts[0], cuts[1]);
+        let w1 = shard_weight(&c, cuts[1], cuts[2]);
+        let total = w0 + w1;
+        assert!(cuts[1] < n / 4, "hub row must not drag half the vertices along: {cuts:?}");
+        let ideal = total / 2;
+        assert!(w0 <= ideal + n as u64 && w1 <= ideal + n as u64, "{w0} vs {w1}");
+    }
+
+    #[test]
+    fn shards_are_deterministic_and_cover_skewed_graphs() {
+        // Zipf-ish in-degrees: vertex v gets ~n/(v+1) in-edges.
+        let n = 200usize;
+        let mut edges = Vec::new();
+        for v in 0..n {
+            for s in 0..(n / (v + 1)).min(n - 1) {
+                edges.push((((v + s + 1) % n) as u32, v as u32));
+            }
+        }
+        let c = Csr::from_edges(n, &edges);
+        for k in [1usize, 2, 3, 4, 7, 16] {
+            let a = c.shards(k);
+            let b = c.shards(k);
+            assert_eq!(a, b, "shards must be deterministic");
+            assert_eq!(a.len(), k + 1);
+            // Every shard non-empty; no shard exceeds the greedy bound of
+            // ideal + heaviest single row (contiguous sharding cannot
+            // split one hub row across shards).
+            let total = shard_weight(&c, 0, n);
+            let max_row = (0..n).map(|v| c.in_degree(v as u32) as u64 + 1).max().unwrap();
+            for w in a.windows(2) {
+                assert!(w[1] > w[0], "empty shard in {a:?}");
+                let sw = shard_weight(&c, w[0], w[1]);
+                let bound = total.div_ceil(k as u64) + max_row + k as u64;
+                assert!(sw <= bound, "shard {w:?} weight {sw} > bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn shards_handle_degenerate_inputs() {
+        let empty = Csr::from_edges(0, &[]);
+        assert_eq!(empty.shards(4), vec![0, 0]);
+        let single = Csr::from_edges(1, &[]);
+        assert_eq!(single.shards(8), vec![0, 1]);
+        // k larger than |V| clamps: every shard holds exactly one vertex
+        let c = diamond();
+        assert_eq!(c.shards(100), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn balanced_cuts_respects_weights() {
+        // rows 0..3 weigh 1 each (+1), row 4 weighs 100 (+1)
+        let cuts = balanced_cuts(5, 2, |v| if v == 4 { 100 } else { 1 });
+        assert_eq!(cuts.len(), 3);
+        // the heavy row must sit alone in the second shard
+        assert_eq!(cuts, vec![0, 4, 5]);
     }
 }

@@ -111,8 +111,11 @@ pub fn copying_web(n: usize, d: usize, copy_prob: f64, seed: u64) -> EdgeList {
         }
         out_adj.push(links);
     }
-    let mut edges: EdgeList =
-        out_adj.iter().enumerate().flat_map(|(u, ls)| ls.iter().map(move |&v| (u as u64, v))).collect();
+    let mut edges: EdgeList = out_adj
+        .iter()
+        .enumerate()
+        .flat_map(|(u, ls)| ls.iter().map(move |&v| (u as u64, v)))
+        .collect();
     dedupe(&mut edges);
     edges
 }

@@ -58,7 +58,11 @@ pub fn write_edges<W: Write>(w: W, edges: &[(u64, u64)], header: Option<&str>) -
 }
 
 /// Save an edge list to a file path.
-pub fn save_edges(path: impl AsRef<Path>, edges: &[(u64, u64)], header: Option<&str>) -> Result<()> {
+pub fn save_edges(
+    path: impl AsRef<Path>,
+    edges: &[(u64, u64)],
+    header: Option<&str>,
+) -> Result<()> {
     write_edges(std::fs::File::create(path)?, edges, header)
 }
 

@@ -82,6 +82,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("delta", "vertex-specific extension Δ", Some("0.1"))
         .opt("artifacts", "artifacts dir for the XLA backend", Some("artifacts"))
         .opt("queue", "ingestion queue capacity", Some("65536"))
+        .opt("parallelism", "PageRank shards (1 = serial, 0 = one per core)", Some("1"))
         .flag("no-xla", "force the sparse executor")
         .flag("help", "show usage");
     let p = cmd.parse(args)?;
@@ -90,7 +91,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let edges = initial_edges(&p)?;
-    let mut builder = EngineBuilder::new().params(params_from(&p)?);
+    let mut builder = EngineBuilder::new()
+        .params(params_from(&p)?)
+        .parallelism(p.req_parse::<usize>("parallelism")?);
     if !p.flag("no-xla") {
         let dir = p.get("artifacts").unwrap();
         if std::path::Path::new(dir).join("manifest.json").is_file() {
@@ -168,6 +171,7 @@ fn harness_from(p: &veilgraph::util::cli::Parsed) -> Result<HarnessConfig> {
             dangling_redistribution: false,
             normalized: false,
             warm_start_exact: true,
+            parallelism: p.req_parse::<usize>("parallelism")?,
         },
         seed: p.req_parse::<u64>("seed")?,
         workers: p.req_parse::<usize>("workers")?,
@@ -183,6 +187,7 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         .opt("beta", "PageRank damping factor", Some("0.85"))
         .opt("seed", "stream sampling seed", Some("7"))
         .opt("workers", "parallel combination replays", Some("8"))
+        .opt("parallelism", "PageRank shards (1 = serial; multiplies --workers)", Some("1"))
         .opt("out", "results directory", Some("results"))
         .flag("help", "show usage");
     let p = cmd.parse(args)?;
@@ -218,6 +223,7 @@ fn cmd_figures(args: &[String]) -> Result<()> {
         .opt("beta", "PageRank damping factor", Some("0.85"))
         .opt("seed", "stream sampling seed", Some("7"))
         .opt("workers", "parallel combination replays", Some("8"))
+        .opt("parallelism", "PageRank shards (1 = serial; multiplies --workers)", Some("1"))
         .opt("out", "results directory", Some("results"))
         .flag("all", "run every dataset (Figs. 3-30)")
         .flag("table1", "print Table 1 (datasets) and exit")

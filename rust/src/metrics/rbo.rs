@@ -17,7 +17,8 @@ use std::collections::HashSet;
 pub fn rbo_ext<T: std::hash::Hash + Eq + Copy>(list_s: &[T], list_l: &[T], p: f64) -> f64 {
     assert!((0.0..1.0).contains(&p) && p > 0.0, "p must be in (0,1)");
     // s = shorter length, l = longer
-    let (short, long) = if list_s.len() <= list_l.len() { (list_s, list_l) } else { (list_l, list_s) };
+    let (short, long) =
+        if list_s.len() <= list_l.len() { (list_s, list_l) } else { (list_l, list_s) };
     let s = short.len();
     let l = long.len();
     if l == 0 {

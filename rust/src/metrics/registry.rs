@@ -54,8 +54,9 @@ impl MetricsRegistry {
     /// Export everything as JSON (for the server's `stats` command and
     /// experiment reports).
     pub fn to_json(&self) -> Json {
-        let counters =
-            Json::Obj(self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect());
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+        );
         let gauges =
             Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
         let timings = Json::Obj(

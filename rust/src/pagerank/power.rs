@@ -10,8 +10,19 @@
 //! matching Flink Gelly semantics — mass flowing into dangling vertices
 //! simply leaves the system unless `dangling_redistribution` is enabled
 //! (ablated in tests; the paper's baseline does not redistribute).
+//!
+//! Two execution strategies share the same numerics: the serial loop
+//! ([`PageRank::run`]/[`PageRank::run_from`]) and a sharded parallel
+//! variant ([`PageRank::run_parallel`]) that splits the destination-vertex
+//! range into in-edge-balanced shards ([`Csr::shards`]) and runs each
+//! iteration's gather across a [`ThreadPool`]. Every vertex's in-edge sum
+//! is accumulated in the identical order either way, so parallel ranks
+//! are bit-identical to serial ranks for any shard count; only the L1
+//! convergence delta is reduced per-shard (in shard order — deterministic
+//! for a fixed `parallelism`).
 
 use crate::graph::csr::Csr;
+use crate::util::threadpool::ThreadPool;
 
 /// PageRank configuration.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,6 +48,13 @@ pub struct PageRankConfig {
     /// runs so speedups are measured against the paper's own baseline;
     /// the warm-started baseline is reported separately in ablation A7).
     pub warm_start_exact: bool,
+    /// Shard count for the parallel executors ([`PageRank::run_parallel`]
+    /// and `pagerank::summarized::run_summarized_parallel`): `1` (the
+    /// default) = serial, `0` = one shard per pool worker, `k > 1` =
+    /// exactly `k` degree-balanced shards. Results are deterministic for
+    /// a fixed shard count — per-vertex sums run in the serial order and
+    /// the L1-delta reduction is per-shard then in shard order.
+    pub parallelism: usize,
 }
 
 impl Default for PageRankConfig {
@@ -48,6 +66,7 @@ impl Default for PageRankConfig {
             dangling_redistribution: false,
             normalized: false,
             warm_start_exact: true,
+            parallelism: 1,
         }
     }
 }
@@ -79,6 +98,16 @@ impl PageRankConfig {
             self.epsilon
         } else {
             self.epsilon * n.max(1) as f64
+        }
+    }
+
+    /// Resolve the `parallelism` knob against a pool: `0` = one shard per
+    /// worker, otherwise the exact configured count.
+    pub fn effective_shards(&self, pool: &ThreadPool) -> usize {
+        if self.parallelism == 0 {
+            pool.size()
+        } else {
+            self.parallelism
         }
     }
 }
@@ -166,6 +195,101 @@ impl PageRank {
             }
             iterations += 1;
             last_delta = delta;
+            std::mem::swap(&mut ranks, &mut next);
+            if cfg.epsilon > 0.0 && last_delta < epsilon {
+                break;
+            }
+        }
+        PageRankResult { ranks, iterations, last_delta }
+    }
+
+    /// Parallel run from the variant's uniform initial vector.
+    pub fn run_parallel(&self, csr: &Csr, pool: &ThreadPool) -> PageRankResult {
+        let n = csr.num_vertices();
+        let init = vec![self.config.init_rank(n); n];
+        self.run_parallel_from(csr, init, pool)
+    }
+
+    /// Parallel warm-started run: the sharded twin of [`Self::run_from`].
+    ///
+    /// The destination-vertex range is cut into
+    /// [`PageRankConfig::effective_shards`] in-edge-balanced shards once
+    /// per call ([`Csr::shards`]); each iteration dispatches one gather
+    /// job per shard over `pool`, writing a disjoint slice of the `next`
+    /// vector and returning its partial L1 delta. Partials are reduced in
+    /// shard order, so for a fixed shard count the result (ranks AND
+    /// iteration count) is deterministic — and the ranks themselves are
+    /// bit-identical to the serial executor's for *any* shard count,
+    /// because each vertex's in-edge sum runs in the serial order.
+    pub fn run_parallel_from(
+        &self,
+        csr: &Csr,
+        mut ranks: Vec<f64>,
+        pool: &ThreadPool,
+    ) -> PageRankResult {
+        let n = csr.num_vertices();
+        assert_eq!(ranks.len(), n, "warm start length mismatch");
+        if n == 0 {
+            return PageRankResult { ranks, iterations: 0, last_delta: 0.0 };
+        }
+        let shards = self.config.effective_shards(pool);
+        if shards <= 1 {
+            return self.run_from(csr, ranks);
+        }
+        let cfg = self.config;
+        let teleport = cfg.teleport(n);
+        let epsilon = cfg.scaled_epsilon(n);
+        let inv_out: Vec<f64> = csr
+            .out_degrees()
+            .iter()
+            .map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f64 })
+            .collect();
+        // Shard bounds + scratch buffers are computed/allocated once per
+        // run; per-iteration dispatch reuses them via `scope_chunks`.
+        let cuts = csr.shards(shards);
+        let mut contrib = vec![0.0f64; n];
+        let mut next = vec![0.0f64; n];
+        let mut iterations = 0;
+        let mut last_delta = f64::INFINITY;
+        for _ in 0..cfg.max_iters {
+            for u in 0..n {
+                contrib[u] = ranks[u] * inv_out[u];
+            }
+            let dangling_share = if cfg.dangling_redistribution {
+                let mass: f64 = csr
+                    .out_degrees()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &d)| d == 0)
+                    .map(|(u, _)| ranks[u])
+                    .sum();
+                cfg.beta * mass / n as f64
+            } else {
+                0.0
+            };
+            // One gather job per shard: shard i owns next[cuts[i]..cuts[i+1]].
+            let partials = {
+                let ranks = &ranks;
+                let contrib = &contrib;
+                let cuts_ref = &cuts;
+                pool.scope_chunks(&mut next, &cuts, move |i, chunk| {
+                    let lo = cuts_ref[i];
+                    let mut delta = 0.0f64;
+                    for (off, slot) in chunk.iter_mut().enumerate() {
+                        let v = lo + off;
+                        let mut sum = 0.0;
+                        for &u in csr.row(v as u32) {
+                            sum += contrib[u as usize];
+                        }
+                        let x = teleport + cfg.beta * sum + dangling_share;
+                        delta += (x - ranks[v]).abs();
+                        *slot = x;
+                    }
+                    delta
+                })
+            };
+            iterations += 1;
+            last_delta = partials.iter().sum();
             std::mem::swap(&mut ranks, &mut next);
             if cfg.epsilon > 0.0 && last_delta < epsilon {
                 break;
@@ -276,5 +400,109 @@ mod tests {
         let csr = Csr::from_edges(1, &[]);
         let res = PageRank::new(cfg(0.85)).run(&csr);
         assert!((res.ranks[0] - 0.15).abs() < 1e-12);
+    }
+
+    /// A graph with hubs, dangling vertices and isolated vertices —
+    /// exercises every branch of the sharded gather.
+    fn gnarly() -> Csr {
+        let mut edges = Vec::new();
+        for v in 1..40u32 {
+            edges.push((v, 0)); // hub in-edges
+            if v % 3 != 0 {
+                edges.push((0, v)); // hub out-edges
+            }
+            if v % 5 == 0 && v + 1 < 40 {
+                edges.push((v, v + 1));
+            }
+        }
+        // 40..44 are isolated ⇒ out-degree 0 ⇒ dangling.
+        Csr::from_edges(45, &edges)
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let pool = ThreadPool::new(4);
+        let csr = gnarly();
+        for normalized in [false, true] {
+            for dangling in [false, true] {
+                let mut c = cfg(0.85);
+                c.normalized = normalized;
+                c.dangling_redistribution = dangling;
+                c.epsilon = 0.0;
+                c.max_iters = 30;
+                let serial = PageRank::new(c).run(&csr);
+                for shards in [2usize, 3, 4, 7, 64] {
+                    c.parallelism = shards;
+                    let par = PageRank::new(c).run_parallel(&csr, &pool);
+                    assert_eq!(par.iterations, serial.iterations);
+                    assert_eq!(
+                        par.ranks, serial.ranks,
+                        "shards={shards} normalized={normalized} dangling={dangling}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_converges_like_serial() {
+        let pool = ThreadPool::new(4);
+        let csr = gnarly();
+        let mut c = cfg(0.85);
+        c.parallelism = 4;
+        let serial = PageRank::new(cfg(0.85)).run(&csr);
+        let par = PageRank::new(c).run_parallel(&csr, &pool);
+        assert!(par.last_delta < c.scaled_epsilon(csr.num_vertices()));
+        let linf = serial
+            .ranks
+            .iter()
+            .zip(&par.ranks)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(linf < 1e-12, "L∞ {linf}");
+    }
+
+    #[test]
+    fn parallel_warm_start_matches_serial_warm_start() {
+        let pool = ThreadPool::new(3);
+        let csr = gnarly();
+        let n = csr.num_vertices();
+        let warm: Vec<f64> = (0..n).map(|v| 1.0 / (v + 1) as f64).collect();
+        let mut c = cfg(0.85);
+        c.epsilon = 0.0;
+        c.max_iters = 12;
+        let serial = PageRank::new(c).run_from(&csr, warm.clone());
+        c.parallelism = 5;
+        let par = PageRank::new(c).run_parallel_from(&csr, warm, &pool);
+        assert_eq!(par.ranks, serial.ranks);
+    }
+
+    #[test]
+    fn parallel_handles_empty_graph_and_one_shard() {
+        let pool = ThreadPool::new(2);
+        let empty = Csr::from_edges(0, &[]);
+        let mut c = cfg(0.85);
+        c.parallelism = 4;
+        let res = PageRank::new(c).run_parallel(&empty, &pool);
+        assert!(res.ranks.is_empty());
+        assert_eq!(res.iterations, 0);
+        // parallelism = 1 falls back to the serial path
+        c.parallelism = 1;
+        let csr = Csr::from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        let serial = PageRank::new(cfg(0.85)).run(&csr);
+        let one = PageRank::new(c).run_parallel(&csr, &pool);
+        assert_eq!(one.ranks, serial.ranks);
+    }
+
+    #[test]
+    fn parallelism_zero_uses_pool_size() {
+        let pool = ThreadPool::new(3);
+        let mut c = cfg(0.85);
+        c.parallelism = 0;
+        assert_eq!(c.effective_shards(&pool), 3);
+        let csr = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let serial = PageRank::new(cfg(0.85)).run(&csr);
+        let auto = PageRank::new(c).run_parallel(&csr, &pool);
+        assert_eq!(auto.ranks, serial.ranks);
     }
 }

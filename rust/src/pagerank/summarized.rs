@@ -14,6 +14,7 @@
 
 use crate::pagerank::power::PageRankConfig;
 use crate::summary::bigvertex::SummaryGraph;
+use crate::util::threadpool::ThreadPool;
 
 /// Result of a summarized run (ranks are per *local* summary index).
 #[derive(Clone, Debug)]
@@ -57,6 +58,63 @@ pub fn run_summarized(s: &SummaryGraph, cfg: &PageRankConfig) -> SummarizedResul
     SummarizedResult { ranks, iterations, last_delta }
 }
 
+/// Sharded twin of [`run_summarized`]: local summary vertices are cut
+/// into [`PageRankConfig::parallelism`]-many internal-in-edge-balanced
+/// shards ([`SummaryGraph::shards`]; `0` = one per pool worker) and each
+/// iteration dispatches one gather job per shard over `pool`. Per-vertex
+/// sums run in the serial order, so ranks are bit-identical to the serial
+/// executor's; the L1 delta reduces per-shard then in shard order —
+/// deterministic for a fixed shard count.
+pub fn run_summarized_parallel(
+    s: &SummaryGraph,
+    cfg: &PageRankConfig,
+    pool: &ThreadPool,
+) -> SummarizedResult {
+    let k = s.num_vertices();
+    if k == 0 {
+        return SummarizedResult { ranks: vec![], iterations: 0, last_delta: 0.0 };
+    }
+    let shards = cfg.effective_shards(pool);
+    if shards <= 1 {
+        return run_summarized(s, cfg);
+    }
+    let teleport = cfg.teleport(s.full_n);
+    let epsilon = cfg.scaled_epsilon(s.full_n);
+    let cuts = s.shards(shards);
+    let mut ranks = s.r0.clone();
+    let mut next = vec![0.0f64; k];
+    let mut iterations = 0;
+    let mut last_delta = f64::INFINITY;
+    for _ in 0..cfg.max_iters {
+        let partials = {
+            let ranks = &ranks;
+            let cuts_ref = &cuts;
+            pool.scope_chunks(&mut next, &cuts, move |i, chunk| {
+                let lo = cuts_ref[i];
+                let mut delta = 0.0f64;
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    let z = lo + off;
+                    let mut sum = s.b[z];
+                    for &(u, w) in s.row(z) {
+                        sum += w as f64 * ranks[u as usize];
+                    }
+                    let x = teleport + cfg.beta * sum;
+                    delta += (x - ranks[z]).abs();
+                    *slot = x;
+                }
+                delta
+            })
+        };
+        iterations += 1;
+        last_delta = partials.iter().sum();
+        std::mem::swap(&mut ranks, &mut next);
+        if cfg.epsilon > 0.0 && last_delta < epsilon {
+            break;
+        }
+    }
+    SummarizedResult { ranks, iterations, last_delta }
+}
+
 /// Merge summarized ranks back into the full rank vector: hot vertices
 /// take their recomputed scores, everything else keeps its previous rank
 /// (“outside vertices are not worth recomputing” — §3). Returns the
@@ -86,7 +144,8 @@ mod tests {
 
     fn full_hot(g: &DynamicGraph) -> HotSet {
         let idxs: Vec<u32> = (0..g.num_vertices() as u32).collect();
-        HotSet { k_r: idxs.clone(), k_n: vec![], k_delta: vec![], hot: vec![true; g.num_vertices()] }
+        let hot = vec![true; g.num_vertices()];
+        HotSet { k_r: idxs.clone(), k_n: vec![], k_delta: vec![], hot }
     }
 
     fn cfg() -> PageRankConfig {
@@ -196,5 +255,52 @@ mod tests {
         let sr = run_summarized(&s, &cfg());
         assert!(sr.last_delta < 1e-12);
         assert!(sr.iterations > 1);
+    }
+
+    #[test]
+    fn parallel_summarized_matches_serial_bit_for_bit() {
+        let pool = ThreadPool::new(4);
+        let (g, _) = DynamicGraph::from_edges(vec![
+            (0, 1), (1, 2), (2, 0), (2, 3), (3, 0), (0, 3), (3, 4), (4, 2), (1, 4), (5, 0),
+            (0, 5), (5, 6), (6, 5),
+        ]);
+        let n = g.num_vertices();
+        let prev: Vec<f64> = (0..n).map(|v| 0.05 + 0.1 * v as f64).collect();
+        // Partial hot set ⇒ both internal and boundary edges exist.
+        let k_set = vec![0u32, 2, 3, 5, 6];
+        let mut hot = vec![false; n];
+        for &i in &k_set {
+            hot[i as usize] = true;
+        }
+        let hs = HotSet { k_r: k_set, k_n: vec![], k_delta: vec![], hot };
+        let s = SummaryGraph::build(&g, &hs, &prev, 0.0);
+        let mut c = cfg();
+        c.epsilon = 0.0;
+        c.max_iters = 25;
+        let serial = run_summarized(&s, &c);
+        for shards in [2usize, 3, 4, 7, 32] {
+            c.parallelism = shards;
+            let par = run_summarized_parallel(&s, &c, &pool);
+            assert_eq!(par.iterations, serial.iterations);
+            assert_eq!(par.ranks, serial.ranks, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn parallel_summarized_handles_empty_and_single_shard() {
+        let pool = ThreadPool::new(2);
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1)]);
+        let hs = HotSet { k_r: vec![], k_n: vec![], k_delta: vec![], hot: vec![false; 2] };
+        let s = SummaryGraph::build(&g, &hs, &[0.5, 0.5], 0.0);
+        let mut c = cfg();
+        c.parallelism = 4;
+        let sr = run_summarized_parallel(&s, &c, &pool);
+        assert!(sr.ranks.is_empty());
+        // parallelism = 1 falls back to the serial code path
+        let s2 = SummaryGraph::build(&g, &full_hot(&g), &[0.5, 0.5], 0.0);
+        c.parallelism = 1;
+        let serial = run_summarized(&s2, &cfg());
+        let one = run_summarized_parallel(&s2, &c, &pool);
+        assert_eq!(one.ranks, serial.ranks);
     }
 }

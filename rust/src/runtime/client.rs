@@ -1,14 +1,29 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//! Summarized-PageRank runtime: loads the AOT artifact manifest and
+//! executes the dense padded kernels.
 //!
-//! Exactly the wiring the reference (`/opt/xla-example/load_hlo.rs`)
-//! validates: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO
-//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos the
-//! linked xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! The original wiring targeted PJRT through the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`), with HLO *text* as the interchange
+//! format. That crate links a prebuilt `xla_extension` and cannot be
+//! vendored into this std-only build, so this module ships a **native
+//! fallback interpreter**: it validates the same `manifest.json` +
+//! artifact files and executes the *identical* masked dense update the
+//! lowered kernels implement,
 //!
-//! Executables are compiled once per (variant, capacity) tier and cached
-//! for the life of the process — compilation happens off the request
-//! path, at engine start or on first use of a tier.
+//! ```text
+//! r'_z = mask_z · ( β · (Σ_u A[z,u] · r_u + b_z) + teleport )
+//! ```
+//!
+//! in f32, fusing `iters_fused` iterations per `Run` call and returning
+//! the final iteration's L1 delta — so every caller (executor routing,
+//! engine, benches, integration tests) exercises the exact artifact
+//! contract. Swapping the body back to PJRT is a local change: the
+//! public surface (`XlaRuntime`, `StepOutput`, `PreparedDense`) is the
+//! original one.
+//!
+//! "Executables" are validated once per (variant, capacity) tier and
+//! cached for the life of the process — tier setup happens off the
+//! request path, at engine start or on first use of a tier.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -16,7 +31,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::runtime::artifact::{ArtifactEntry, Manifest, Variant};
 
-/// Output of one summarized-PageRank execution on the PJRT path.
+/// Output of one summarized-PageRank execution on the runtime path.
 #[derive(Clone, Debug)]
 pub struct StepOutput {
     /// Updated padded ranks (length = capacity; only the first `k` valid).
@@ -25,36 +40,26 @@ pub struct StepOutput {
     pub delta: Option<f32>,
 }
 
-/// A compiled executable for one (variant, capacity) tier.
+/// A validated executable for one (variant, capacity) tier.
+#[derive(Clone, Debug)]
 struct Tier {
-    exe: xla::PjRtLoadedExecutable,
     capacity: usize,
     outputs: usize,
+    iters: usize,
 }
 
-/// The PJRT runtime: client + lazily compiled tier cache.
+/// The summarized runtime: manifest + lazily validated tier cache.
 pub struct XlaRuntime {
-    client: xla::PjRtClient,
     manifest: Manifest,
     tiers: HashMap<(Variant, usize), Tier>,
 }
 
-// SAFETY: the xla crate's PJRT wrappers use `Rc` and raw pointers, making
-// them `!Send`. `XlaRuntime` owns its client and every executable compiled
-// from it exclusively (no `Rc` handle ever escapes this struct), so moving
-// the whole object graph to another thread — which is all the engine/server
-// do; there is never concurrent access from two threads — is sound. The
-// PJRT CPU client itself is thread-compatible.
-unsafe impl Send for XlaRuntime {}
-
 impl XlaRuntime {
-    /// Create a CPU PJRT client and read the artifact manifest
-    /// (compilation is deferred until a tier is first used, or
-    /// [`Self::warmup`]).
+    /// Read and validate the artifact manifest (tier setup is deferred
+    /// until a tier is first used, or [`Self::warmup`]).
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, manifest, tiers: HashMap::new() })
+        Ok(Self { manifest, tiers: HashMap::new() })
     }
 
     /// The manifest describing available artifacts.
@@ -62,9 +67,10 @@ impl XlaRuntime {
         &self.manifest
     }
 
-    /// PJRT platform name (diagnostics).
+    /// Platform name (diagnostics). The `-native` suffix marks the
+    /// fallback interpreter standing in for the PJRT CPU client.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu-native".to_string()
     }
 
     /// Iterations fused into each `run` artifact.
@@ -72,22 +78,32 @@ impl XlaRuntime {
         self.manifest.iters_fused
     }
 
-    /// Largest |K| the XLA path can serve for `variant`.
+    /// Largest |K| the dense path can serve for `variant`.
     pub fn max_capacity(&self, variant: Variant) -> usize {
         self.manifest.max_capacity(variant)
     }
 
-    fn compile_entry(client: &xla::PjRtClient, entry: &ArtifactEntry) -> Result<Tier> {
-        let path = entry.path.to_str().ok_or_else(|| {
-            Error::Artifact(format!("non-utf8 artifact path {}", entry.path.display()))
+    /// "Compile" an entry: check the artifact file exists and is
+    /// non-empty, mirroring the fail-fast behavior of the PJRT loader on
+    /// a stale or partially written artifacts directory.
+    fn compile_entry(entry: &ArtifactEntry, iters_fused: usize) -> Result<Tier> {
+        let meta = std::fs::metadata(&entry.path).map_err(|e| {
+            Error::Artifact(format!("cannot stat artifact {} ({e})", entry.path.display()))
         })?;
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        Ok(Tier { exe, capacity: entry.capacity, outputs: entry.outputs })
+        if meta.len() == 0 {
+            return Err(Error::Artifact(format!(
+                "artifact {} is empty — rebuild with `make artifacts`",
+                entry.path.display()
+            )));
+        }
+        let iters = match entry.variant {
+            Variant::Step => 1,
+            Variant::Run => iters_fused.max(1),
+        };
+        Ok(Tier { capacity: entry.capacity, outputs: entry.outputs, iters })
     }
 
-    /// Ensure the tier for (variant, needed) is compiled; returns its
+    /// Ensure the tier for (variant, needed) is ready; returns its
     /// capacity. Errors with [`Error::Capacity`] if `needed` exceeds every
     /// artifact (callers fall back to the sparse executor).
     pub fn ensure_tier(&mut self, variant: Variant, needed: usize) -> Result<usize> {
@@ -98,23 +114,73 @@ impl XlaRuntime {
             .clone();
         let key = (variant, entry.capacity);
         if !self.tiers.contains_key(&key) {
-            let tier = Self::compile_entry(&self.client, &entry)?;
+            let tier = Self::compile_entry(&entry, self.manifest.iters_fused)?;
             self.tiers.insert(key, tier);
         }
         Ok(entry.capacity)
     }
 
-    /// Compile every artifact up front (engine start; keeps compilation
-    /// off the query path entirely).
+    /// Validate every artifact up front (engine start; keeps setup off
+    /// the query path entirely).
     pub fn warmup(&mut self) -> Result<usize> {
         let entries: Vec<ArtifactEntry> = self.manifest.entries.clone();
         for e in &entries {
             let key = (e.variant, e.capacity);
             if !self.tiers.contains_key(&key) {
-                self.tiers.insert(key, Self::compile_entry(&self.client, e)?);
+                self.tiers.insert(key, Self::compile_entry(e, self.manifest.iters_fused)?);
             }
         }
         Ok(entries.len())
+    }
+
+    /// One masked dense power iteration into `next`; returns the L1 delta
+    /// against `r`.
+    #[allow(clippy::too_many_arguments)]
+    fn dense_iteration(
+        c: usize,
+        a: &[f32],
+        r: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        beta: f32,
+        teleport: f32,
+        next: &mut [f32],
+    ) -> f32 {
+        let mut delta = 0.0f32;
+        for z in 0..c {
+            let row = &a[z * c..(z + 1) * c];
+            let mut sum = 0.0f32;
+            for (u, &w) in row.iter().enumerate() {
+                sum += w * r[u];
+            }
+            let x = mask[z] * (beta * (sum + b[z]) + teleport);
+            delta += (x - r[z]).abs();
+            next[z] = x;
+        }
+        delta
+    }
+
+    fn run_tier(
+        tier: &Tier,
+        a: &[f32],
+        r: &[f32],
+        b: &[f32],
+        mask: &[f32],
+        beta: f32,
+        teleport: f32,
+    ) -> StepOutput {
+        let c = tier.capacity;
+        let mut ranks = r.to_vec();
+        let mut next = vec![0.0f32; c];
+        let mut delta = 0.0f32;
+        for _ in 0..tier.iters {
+            delta = Self::dense_iteration(c, a, &ranks, b, mask, beta, teleport, &mut next);
+            std::mem::swap(&mut ranks, &mut next);
+        }
+        // Lowered with return_tuple=True: 1 output = ranks only,
+        // 2 outputs = (ranks, delta).
+        let delta = if tier.outputs >= 2 { Some(delta) } else { None };
+        StepOutput { ranks, delta }
     }
 
     /// Execute one tier on padded dense inputs.
@@ -123,8 +189,9 @@ impl XlaRuntime {
     /// * `r`, `b`, `mask` — padded vectors of length `capacity`.
     /// * `beta`, `teleport` — the scalars operand `[β, (1-β)/n]`.
     ///
-    /// The tier must have been compiled (`ensure_tier`/`warmup`) with
+    /// The tier must have been prepared (`ensure_tier`/`warmup`) with
     /// capacity matching the input padding.
+    #[allow(clippy::too_many_arguments)]
     pub fn execute(
         &self,
         variant: Variant,
@@ -150,41 +217,27 @@ impl XlaRuntime {
                 mask.len()
             )));
         }
-        let a_lit = xla::Literal::vec1(a).reshape(&[c as i64, c as i64])?;
-        let r_lit = xla::Literal::vec1(r);
-        let b_lit = xla::Literal::vec1(b);
-        let m_lit = xla::Literal::vec1(mask);
-        let s_lit = xla::Literal::vec1(&[beta, teleport]);
-        let result = tier.exe.execute::<xla::Literal>(&[a_lit, r_lit, b_lit, m_lit, s_lit])?[0][0]
-            .to_literal_sync()?;
-        // Lowered with return_tuple=True: unwrap the 1- or 2-tuple.
-        if tier.outputs == 1 {
-            let out = result.to_tuple1()?;
-            Ok(StepOutput { ranks: out.to_vec::<f32>()?, delta: None })
-        } else {
-            let (ranks, delta) = result.to_tuple2()?;
-            Ok(StepOutput {
-                ranks: ranks.to_vec::<f32>()?,
-                delta: Some(delta.get_first_element::<f32>()?),
-            })
-        }
+        Ok(Self::run_tier(tier, a, r, b, mask, beta, teleport))
     }
 }
 
 /// Device-resident operands for repeated executions over the same summary
-/// (§Perf runtime-1): the A matrix (C² floats — 16 MiB at C = 2048), `b`,
-/// `mask` and scalars are uploaded once; only the rank vector travels per
-/// chunk when chaining fused-run artifacts to convergence.
+/// (§Perf runtime-1): on the PJRT path the A matrix (C² floats — 16 MiB
+/// at C = 2048), `b`, `mask` and scalars are uploaded once and only the
+/// rank vector travels per chunk. The native fallback keeps the same
+/// shape: constants are captured once here, `execute_prepared` takes only
+/// `r`.
 pub struct PreparedDense {
-    a: xla::PjRtBuffer,
-    b: xla::PjRtBuffer,
-    mask: xla::PjRtBuffer,
-    scalars: xla::PjRtBuffer,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    mask: Vec<f32>,
+    beta: f32,
+    teleport: f32,
     capacity: usize,
 }
 
 impl XlaRuntime {
-    /// Upload the per-summary constants to the device once.
+    /// Capture the per-summary constants once.
     pub fn prepare_dense(
         &self,
         capacity: usize,
@@ -200,15 +253,16 @@ impl XlaRuntime {
             )));
         }
         Ok(PreparedDense {
-            a: self.client.buffer_from_host_buffer(a, &[capacity, capacity], None)?,
-            b: self.client.buffer_from_host_buffer(b, &[capacity], None)?,
-            mask: self.client.buffer_from_host_buffer(mask, &[capacity], None)?,
-            scalars: self.client.buffer_from_host_buffer(&[beta, teleport], &[2], None)?,
+            a: a.to_vec(),
+            b: b.to_vec(),
+            mask: mask.to_vec(),
+            beta,
+            teleport,
             capacity,
         })
     }
 
-    /// Execute a tier against prepared device buffers, uploading only `r`.
+    /// Execute a tier against prepared constants, passing only `r`.
     pub fn execute_prepared(
         &self,
         variant: Variant,
@@ -223,20 +277,15 @@ impl XlaRuntime {
         if r.len() != c {
             return Err(Error::Runtime(format!("rank vector length {} != {c}", r.len())));
         }
-        let r_buf = self.client.buffer_from_host_buffer(r, &[c], None)?;
-        let args =
-            [&prepared.a, &r_buf, &prepared.b, &prepared.mask, &prepared.scalars];
-        let result = tier.exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
-        if tier.outputs == 1 {
-            let out = result.to_tuple1()?;
-            Ok(StepOutput { ranks: out.to_vec::<f32>()?, delta: None })
-        } else {
-            let (ranks, delta) = result.to_tuple2()?;
-            Ok(StepOutput {
-                ranks: ranks.to_vec::<f32>()?,
-                delta: Some(delta.get_first_element::<f32>()?),
-            })
-        }
+        Ok(Self::run_tier(
+            tier,
+            &prepared.a,
+            r,
+            &prepared.b,
+            &prepared.mask,
+            prepared.beta,
+            prepared.teleport,
+        ))
     }
 }
 
@@ -246,5 +295,120 @@ impl std::fmt::Debug for XlaRuntime {
             .field("platform", &self.platform())
             .field("tiers", &self.tiers.keys().collect::<Vec<_>>())
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal artifacts directory on disk for tier tests.
+    fn fake_artifacts(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("vg-client-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("step_c4.hlo.txt"), "HloModule step\n").unwrap();
+        std::fs::write(dir.join("run_c4.hlo.txt"), "HloModule run\n").unwrap();
+        let manifest = r#"{
+  "format": "hlo-text",
+  "tile": 4,
+  "iters_fused": 3,
+  "artifacts": [
+    {"name": "step_c4.hlo.txt", "variant": "step", "capacity": 4, "outputs": 1},
+    {"name": "run_c4.hlo.txt", "variant": "run", "capacity": 4, "outputs": 2}
+  ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        dir
+    }
+
+    #[test]
+    fn step_matches_reference_formula() {
+        let dir = fake_artifacts("step");
+        let mut rt = XlaRuntime::new(&dir).unwrap();
+        let cap = rt.ensure_tier(Variant::Step, 2).unwrap();
+        assert_eq!(cap, 4);
+        // A[0,1] = 0.5; r = e1; b[0] = 0.25; mask first two rows.
+        let mut a = vec![0.0f32; cap * cap];
+        a[1] = 0.5;
+        let mut r = vec![0.0f32; cap];
+        r[1] = 1.0;
+        let mut b = vec![0.0f32; cap];
+        b[0] = 0.25;
+        let mut mask = vec![0.0f32; cap];
+        mask[0] = 1.0;
+        mask[1] = 1.0;
+        let out = rt.execute(Variant::Step, cap, &a, &r, &b, &mask, 0.85, 0.01).unwrap();
+        assert!(out.delta.is_none(), "step variant has a single output");
+        // r'[0] = 0.85*(0.5 + 0.25) + 0.01 = 0.6475; r'[1] = 0.01; rest 0.
+        assert!((out.ranks[0] - 0.6475).abs() < 1e-6, "{}", out.ranks[0]);
+        assert!((out.ranks[1] - 0.01).abs() < 1e-6);
+        assert!(out.ranks[2..].iter().all(|&x| x == 0.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_fuses_iterations_and_reports_delta() {
+        let dir = fake_artifacts("run");
+        let mut rt = XlaRuntime::new(&dir).unwrap();
+        let cap = rt.ensure_tier(Variant::Run, 2).unwrap();
+        // Two-cycle between 0 and 1 converges toward 0.5 each.
+        let mut a = vec![0.0f32; cap * cap];
+        a[1] = 1.0;
+        a[cap] = 1.0;
+        let mut r = vec![0.0f32; cap];
+        r[0] = 0.9;
+        r[1] = 0.1;
+        let b = vec![0.0f32; cap];
+        let mut mask = vec![0.0f32; cap];
+        mask[0] = 1.0;
+        mask[1] = 1.0;
+        let teleport = 0.15 / 2.0;
+        let mut delta_prev = f32::INFINITY;
+        // Error contracts by 0.85 per iteration from |r0 - 0.5| = 0.4, so
+        // after 14 calls x 3 fused iters: 0.4 * 0.85^42 ≈ 4.3e-4 < 1e-3.
+        for _ in 0..14 {
+            let out = rt.execute(Variant::Run, cap, &a, &r, &b, &mask, 0.85, teleport).unwrap();
+            r = out.ranks.clone();
+            let d = out.delta.expect("run variant returns delta");
+            assert!(d <= delta_prev + 1e-6, "delta must shrink: {d} vs {delta_prev}");
+            delta_prev = d;
+        }
+        assert!((r[0] - 0.5).abs() < 1e-3, "{}", r[0]);
+        assert!((r[1] - 0.5).abs() < 1e-3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prepared_path_matches_direct_execute() {
+        let dir = fake_artifacts("prep");
+        let mut rt = XlaRuntime::new(&dir).unwrap();
+        let cap = rt.ensure_tier(Variant::Run, 3).unwrap();
+        let mut a = vec![0.0f32; cap * cap];
+        a[2] = 0.25;
+        a[cap] = 0.75;
+        let r = vec![0.3f32; cap];
+        let b = vec![0.05f32; cap];
+        let mask = vec![1.0f32, 1.0, 1.0, 0.0];
+        let direct = rt.execute(Variant::Run, cap, &a, &r, &b, &mask, 0.85, 0.0375).unwrap();
+        let prepared = rt.prepare_dense(cap, &a, &b, &mask, 0.85, 0.0375).unwrap();
+        let via = rt.execute_prepared(Variant::Run, &prepared, &r).unwrap();
+        assert_eq!(direct.ranks, via.ranks);
+        assert_eq!(direct.delta, via.delta);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_and_missing_tier_are_errors() {
+        let dir = fake_artifacts("err");
+        let mut rt = XlaRuntime::new(&dir).unwrap();
+        let short = vec![0.0f32; 3];
+        assert!(rt.execute(Variant::Step, 4, &short, &short, &short, &short, 0.85, 0.1).is_err());
+        rt.ensure_tier(Variant::Step, 2).unwrap();
+        assert!(rt.execute(Variant::Step, 4, &short, &short, &short, &short, 0.85, 0.1).is_err());
+        assert!(matches!(
+            rt.ensure_tier(Variant::Step, 99),
+            Err(Error::Capacity { needed: 99, max: 4 })
+        ));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

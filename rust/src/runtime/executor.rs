@@ -14,10 +14,11 @@
 
 use crate::error::{Error, Result};
 use crate::pagerank::power::PageRankConfig;
-use crate::pagerank::summarized::{run_summarized, SummarizedResult};
+use crate::pagerank::summarized::{run_summarized, run_summarized_parallel, SummarizedResult};
 use crate::runtime::artifact::Variant;
 use crate::runtime::client::XlaRuntime;
 use crate::summary::bigvertex::SummaryGraph;
+use crate::util::threadpool::ThreadPool;
 
 /// Which backend served a summarized computation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,9 +108,24 @@ impl SummarizedExecutor {
         s: &SummaryGraph,
         cfg: &PageRankConfig,
     ) -> Result<(SummarizedResult, Backend)> {
+        self.execute_pooled(s, cfg, None)
+    }
+
+    /// Run the summarized computation, choosing the backend; when the
+    /// sparse executor is picked and a pool is supplied (and
+    /// `cfg.parallelism != 1`), the run is sharded across the pool via
+    /// [`run_summarized_parallel`]. The dense path is untouched — it
+    /// already batches its work into one kernel call per fused chunk.
+    pub fn execute_pooled(
+        &mut self,
+        s: &SummaryGraph,
+        cfg: &PageRankConfig,
+        pool: Option<&ThreadPool>,
+    ) -> Result<(SummarizedResult, Backend)> {
         let k = s.num_vertices();
         if k == 0 {
-            return Ok((SummarizedResult { ranks: vec![], iterations: 0, last_delta: 0.0 }, Backend::RustSparse));
+            let empty = SummarizedResult { ranks: vec![], iterations: 0, last_delta: 0.0 };
+            return Ok((empty, Backend::RustSparse));
         }
         if let Some(rt) = &mut self.runtime {
             if k <= self.max_xla_k && k <= rt.max_capacity(Variant::Run) {
@@ -117,7 +133,11 @@ impl SummarizedExecutor {
                 return Ok(res);
             }
         }
-        Ok((run_summarized(s, cfg), Backend::RustSparse))
+        let res = match pool {
+            Some(pool) if cfg.parallelism != 1 => run_summarized_parallel(s, cfg, pool),
+            _ => run_summarized(s, cfg),
+        };
+        Ok((res, Backend::RustSparse))
     }
 
     fn execute_xla(

@@ -50,7 +50,11 @@ impl<T> BoundedQueue<T> {
     /// Create a queue with `capacity` slots and an overflow policy.
     pub fn new(capacity: usize, policy: OverflowPolicy) -> Self {
         Self {
-            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false, stats: QueueStats::default() }),
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+                stats: QueueStats::default(),
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity: capacity.max(1),

@@ -208,7 +208,8 @@ mod tests {
     #[test]
     fn streams_are_deterministic() {
         let g = base();
-        assert_eq!(powerlaw_growth_stream(&g, 100, 0.3, 9), powerlaw_growth_stream(&g, 100, 0.3, 9));
+        let a = powerlaw_growth_stream(&g, 100, 0.3, 9);
+        assert_eq!(a, powerlaw_growth_stream(&g, 100, 0.3, 9));
         assert_eq!(er_stream(50, 100, 9), er_stream(50, 100, 9));
         assert_eq!(mixed_stream(&g, 100, 0.2, 9), mixed_stream(&g, 100, 0.2, 9));
     }

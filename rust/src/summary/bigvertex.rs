@@ -120,6 +120,18 @@ impl SummaryGraph {
         &self.in_edges[self.in_offsets[z] as usize..self.in_offsets[z + 1] as usize]
     }
 
+    /// Split the local-vertex range into `k` contiguous shards balanced
+    /// by internal in-edge count — the summary-graph twin of
+    /// [`crate::graph::csr::Csr::shards`], consumed by
+    /// `pagerank::summarized::run_summarized_parallel`. Same contract:
+    /// `k + 1` ascending cut points, deterministic for a fixed `(summary,
+    /// k)`.
+    pub fn shards(&self, k: usize) -> Vec<usize> {
+        crate::graph::csr::balanced_cuts(self.num_vertices(), k, |z| {
+            (self.in_offsets[z + 1] - self.in_offsets[z]) as u64
+        })
+    }
+
     /// Densify into padded row-major `A[z*cap + u] = val((u,z))`, plus the
     /// padded `r0`, `b` and `mask` vectors the XLA artifacts consume.
     /// Panics if `capacity < |K|` (the runtime picks the tier first).

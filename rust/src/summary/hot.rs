@@ -230,7 +230,8 @@ mod tests {
         let g = path6();
         let prev = HashMap::new();
         let ranks = vec![0.0; 6];
-        let hs = compute_hot_set(&inputs(&g, &prev, &[5], &ranks), &SummaryParams::new(0.9, 0, 9.0));
+        let hs =
+            compute_hot_set(&inputs(&g, &prev, &[5], &ranks), &SummaryParams::new(0.9, 0, 9.0));
         assert_eq!(hs.k_r, vec![g.index(5).unwrap()]);
     }
 
@@ -292,7 +293,8 @@ mod tests {
         let g = path6();
         let prev = HashMap::new();
         let ranks = vec![0.1; 6];
-        let hs = compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.1, 1, 0.01));
+        let hs =
+            compute_hot_set(&inputs(&g, &prev, &[], &ranks), &SummaryParams::new(0.1, 1, 0.01));
         assert!(hs.is_empty());
         assert!(hs.all().is_empty());
     }

@@ -92,7 +92,10 @@ pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u32, seed: u64
             prop(&mut g);
         });
         if let Err(p) = result {
-            eprintln!("vprop: property failed at case {case}/{cases}, case_seed={case_seed:#x} (outer seed {seed})");
+            eprintln!(
+                "vprop: property failed at case {case}/{cases}, case_seed={case_seed:#x} \
+                 (outer seed {seed})"
+            );
             std::panic::resume_unwind(p);
         }
     }

@@ -72,7 +72,12 @@ impl Command {
     }
 
     /// Add a value-taking option.
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.opts.push(OptSpec { name, help, takes_value: true, default });
         self
     }
@@ -120,7 +125,9 @@ impl Command {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| Error::Usage(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                    .ok_or_else(|| {
+                        Error::Usage(format!("unknown option --{name}\n\n{}", self.usage()))
+                    })?;
                 if spec.takes_value {
                     let v = match inline {
                         Some(v) => v,

@@ -69,6 +69,66 @@ impl ThreadPool {
         self.tx.send(Msg::Run(Box::new(job))).expect("pool shut down");
     }
 
+    /// Scoped parallel execution over disjoint mutable chunks of a slice
+    /// — the substrate for the sharded PageRank executors.
+    ///
+    /// `cuts` holds `k + 1` ascending cut points with `cuts[0] == 0` and
+    /// `cuts[k] == data.len()` (the shape [`crate::graph::csr::Csr::shards`]
+    /// produces). Chunk `i` = `data[cuts[i]..cuts[i + 1]]`; `f(i, chunk)`
+    /// runs on the pool and its per-chunk results come back in chunk
+    /// order, giving callers a deterministic reduction order. Unlike
+    /// [`Self::scope_map`] the closure borrows its environment (`f` needs
+    /// only `Sync`, not `'static`), so per-iteration dispatch reuses the
+    /// caller's buffers instead of moving owned data through the queue.
+    ///
+    /// A single chunk runs inline on the caller's thread (no dispatch
+    /// cost for the `parallelism == 1` path). Panics in `f` are captured
+    /// and re-raised on the calling thread after every chunk has finished
+    /// (first panic wins) — the borrow of `data` never outlives the call.
+    pub fn scope_chunks<T, R, F>(&self, data: &mut [T], cuts: &[usize], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut [T]) -> R + Sync,
+    {
+        assert!(cuts.len() >= 2, "cuts must hold at least [0, len]");
+        assert_eq!(cuts[0], 0, "cuts must start at 0");
+        assert_eq!(*cuts.last().unwrap(), data.len(), "cuts must end at data.len()");
+        assert!(cuts.windows(2).all(|w| w[0] <= w[1]), "cuts must be ascending");
+        let k = cuts.len() - 1;
+        if k == 1 {
+            return vec![f(0, data)];
+        }
+        // Disjointness comes from safe borrow splitting — no aliasing to
+        // reason about, only the job lifetime below.
+        let mut chunks: Vec<&mut [T]> = Vec::with_capacity(k);
+        let mut rest = data;
+        for i in 0..k {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(cuts[i + 1] - cuts[i]);
+            chunks.push(head);
+            rest = tail;
+        }
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        let f = &f;
+        for (i, chunk) in chunks.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, chunk)));
+                let _ = rtx.send((i, out));
+            });
+            // SAFETY: the queue requires 'static jobs, but this function
+            // blocks below until all k jobs have reported through the
+            // channel (including on panic — jobs always send), so every
+            // borrow captured by `job` (the chunk, `f`) strictly outlives
+            // its execution. This is the standard scoped-pool erasure.
+            let job: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) };
+            self.tx.send(Msg::Run(job)).expect("pool shut down");
+        }
+        drop(rtx);
+        drain_results(&rrx, k)
+    }
+
     /// Parallel map: applies `f` to every item, preserving order.
     ///
     /// Panics in `f` are captured and re-raised on the calling thread after
@@ -91,24 +151,31 @@ impl ThreadPool {
             });
         }
         drop(rtx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
-        for _ in 0..n {
-            let (i, res) = rrx.recv().expect("worker vanished");
-            match res {
-                Ok(v) => slots[i] = Some(v),
-                Err(p) => {
-                    if panic.is_none() {
-                        panic = Some(p);
-                    }
+        drain_results(&rrx, n)
+    }
+}
+
+/// Collect exactly `n` indexed job results in submission order,
+/// re-raising the first captured panic only after every job has
+/// reported (so scoped borrows never outlive a running job).
+fn drain_results<R>(rrx: &mpsc::Receiver<(usize, thread::Result<R>)>, n: usize) -> Vec<R> {
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for _ in 0..n {
+        let (i, res) = rrx.recv().expect("worker vanished");
+        match res {
+            Ok(v) => slots[i] = Some(v),
+            Err(p) => {
+                if panic.is_none() {
+                    panic = Some(p);
                 }
             }
         }
-        if let Some(p) = panic {
-            std::panic::resume_unwind(p);
-        }
-        slots.into_iter().map(|s| s.unwrap()).collect()
     }
+    if let Some(p) = panic {
+        std::panic::resume_unwind(p);
+    }
+    slots.into_iter().map(|s| s.unwrap()).collect()
 }
 
 impl Drop for ThreadPool {
@@ -182,5 +249,96 @@ mod tests {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.size(), 1);
         assert_eq!(pool.scope_map(vec![5], |x| x), vec![5]);
+    }
+
+    #[test]
+    fn scope_chunks_writes_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 100];
+        let cuts = [0usize, 13, 50, 99, 100];
+        let sums = pool.scope_chunks(&mut data, &cuts, |i, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (i * 1000 + off) as u64;
+            }
+            chunk.iter().sum::<u64>()
+        });
+        assert_eq!(sums.len(), 4);
+        for (i, w) in cuts.windows(2).enumerate() {
+            let expect: u64 = (0..(w[1] - w[0])).map(|off| (i * 1000 + off) as u64).sum();
+            assert_eq!(sums[i], expect, "chunk {i}");
+            for (off, &x) in data[w[0]..w[1]].iter().enumerate() {
+                assert_eq!(x, (i * 1000 + off) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn scope_chunks_borrows_environment() {
+        // The whole point over scope_map: `f` may borrow caller state.
+        let pool = ThreadPool::new(3);
+        let weights: Vec<u64> = (0..30).collect();
+        let mut out = vec![0u64; 30];
+        let cuts = [0usize, 10, 20, 30];
+        let totals = pool.scope_chunks(&mut out, &cuts, |i, chunk| {
+            let lo = [0usize, 10, 20][i];
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = weights[lo + off] * 2;
+            }
+            chunk.iter().sum::<u64>()
+        });
+        assert_eq!(out, weights.iter().map(|w| w * 2).collect::<Vec<_>>());
+        assert_eq!(totals.iter().sum::<u64>(), weights.iter().sum::<u64>() * 2);
+    }
+
+    #[test]
+    fn scope_chunks_single_chunk_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![1i32, 2, 3];
+        let r = pool.scope_chunks(&mut data, &[0, 3], |i, chunk| {
+            assert_eq!(i, 0);
+            chunk.iter().sum::<i32>()
+        });
+        assert_eq!(r, vec![6]);
+    }
+
+    #[test]
+    fn scope_chunks_allows_empty_chunks_and_empty_data() {
+        let pool = ThreadPool::new(2);
+        let mut data: Vec<u8> = Vec::new();
+        let r = pool.scope_chunks(&mut data, &[0, 0], |_, chunk| chunk.len());
+        assert_eq!(r, vec![0]);
+        let mut data = vec![7u8; 4];
+        let r = pool.scope_chunks(&mut data, &[0, 0, 4, 4], |_, chunk| chunk.len());
+        assert_eq!(r, vec![0, 4, 0]);
+    }
+
+    #[test]
+    fn scope_chunks_propagates_panics_after_completion() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u32; 8];
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_chunks(&mut data, &[0, 4, 8], |i, chunk| {
+                if i == 1 {
+                    panic!("shard boom");
+                }
+                chunk.len()
+            })
+        }));
+        assert!(res.is_err());
+        // Pool must still be usable after a contained panic.
+        let ok = pool.scope_chunks(&mut data, &[0, 4, 8], |_, chunk| chunk.len());
+        assert_eq!(ok, vec![4, 4]);
+    }
+
+    #[test]
+    fn scope_chunks_rejects_malformed_cuts() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u32; 4];
+        for bad in [vec![0usize, 3], vec![1, 4], vec![0, 3, 2, 4]] {
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                pool.scope_chunks(&mut data, &bad, |_, chunk| chunk.len())
+            }));
+            assert!(res.is_err(), "cuts {bad:?} must be rejected");
+        }
     }
 }

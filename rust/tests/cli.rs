@@ -35,8 +35,9 @@ fn unknown_command_fails_with_usage() {
 fn table1_prints_all_seven_datasets() {
     let (ok, stdout, _) = run(&["figures", "--table1", "--scale", "0.02"]);
     assert!(ok, "{stdout}");
-    for ds in ["cnr-2000", "eu-2005", "Cit-HepPh", "enron", "dblp-2010", "amazon-2008", "Facebook-ego"]
-    {
+    for ds in [
+        "cnr-2000", "eu-2005", "Cit-HepPh", "enron", "dblp-2010", "amazon-2008", "Facebook-ego",
+    ] {
         assert!(stdout.contains(ds), "table1 missing {ds}");
     }
 }

@@ -16,6 +16,7 @@ use veilgraph::summary::bigvertex::SummaryGraph;
 use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
 use veilgraph::summary::params::SummaryParams;
 use veilgraph::testing::vprop::{forall, Gen};
+use veilgraph::util::threadpool::ThreadPool;
 
 fn random_graph(g: &mut Gen, max_n: usize, max_m: usize) -> DynamicGraph {
     let n = g.usize(2..max_n);
@@ -249,6 +250,115 @@ fn prop_topk_matches_sort() {
         order.sort_by(|&x, &y| scores[y].partial_cmp(&scores[x]).unwrap().then(x.cmp(&y)));
         let want: Vec<u64> = order[..k].iter().map(|&i| ids[i]).collect();
         assert_eq!(got, want);
+    });
+}
+
+/// Parallel executors are a pure scheduling change: for every shard count
+/// the sharded run must match the serial run within 1e-12 L∞ — on random
+/// graphs (which include dangling and isolated vertices by construction)
+/// and on both PageRank variants.
+#[test]
+fn prop_parallel_pagerank_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(25, 0xB1, |g| {
+        let dg = random_graph(g, 80, 400);
+        let csr = dg.snapshot();
+        let mut cfg = PageRankConfig {
+            epsilon: 0.0, // fixed iteration count ⇒ comparison is exact
+            max_iters: g.usize(1..40),
+            normalized: g.bool(0.5),
+            dangling_redistribution: g.bool(0.3),
+            ..Default::default()
+        };
+        let serial = PageRank::new(cfg).run(&csr);
+        for shards in [1usize, 2, 4, 7] {
+            cfg.parallelism = shards;
+            let par = PageRank::new(cfg).run_parallel(&csr, &pool);
+            assert_eq!(par.iterations, serial.iterations, "shards={shards}");
+            let linf = serial
+                .ranks
+                .iter()
+                .zip(&par.ranks)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(linf < 1e-12, "shards={shards}: L∞ {linf}");
+        }
+    });
+    // Edge cases the random corpus cannot hit: the empty graph, and a
+    // graph that is ALL dangling vertices (no edges at all).
+    for (n, edges) in [(0usize, vec![]), (9usize, vec![])] {
+        let csr = veilgraph::graph::csr::Csr::from_edges(n, &edges);
+        let mut cfg = PageRankConfig { epsilon: 0.0, max_iters: 5, ..Default::default() };
+        let serial = PageRank::new(cfg).run(&csr);
+        for shards in [1usize, 2, 4, 7] {
+            cfg.parallelism = shards;
+            let par = PageRank::new(cfg).run_parallel(&csr, &pool);
+            assert_eq!(par.ranks, serial.ranks, "|V|={n} shards={shards}");
+        }
+    }
+}
+
+/// Same guarantee for the summarized executor: sharded runs over random
+/// summaries (random graph, random hot subset, random warm start) match
+/// the serial sparse executor within 1e-12 L∞.
+#[test]
+fn prop_parallel_summarized_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(25, 0xB2, |g| {
+        let dg = random_graph(g, 60, 250);
+        let n = dg.num_vertices();
+        let ranks: Vec<f64> = (0..n).map(|_| g.f64(0.01..1.5)).collect();
+        let mut hot = vec![false; n];
+        let mut k_r = Vec::new();
+        for v in 0..n as u32 {
+            if g.bool(0.4) {
+                hot[v as usize] = true;
+                k_r.push(v);
+            }
+        }
+        let hs = HotSet { k_r, k_n: vec![], k_delta: vec![], hot };
+        let s = SummaryGraph::build(&dg, &hs, &ranks, 1.0);
+        let mut cfg =
+            PageRankConfig { epsilon: 0.0, max_iters: g.usize(1..30), ..Default::default() };
+        let serial = run_summarized(&s, &cfg);
+        for shards in [1usize, 2, 4, 7] {
+            cfg.parallelism = shards;
+            let par = veilgraph::pagerank::summarized::run_summarized_parallel(&s, &cfg, &pool);
+            assert_eq!(par.iterations, serial.iterations);
+            let linf = serial
+                .ranks
+                .iter()
+                .zip(&par.ranks)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(linf < 1e-12, "shards={shards}: L∞ {linf}");
+        }
+    });
+}
+
+/// Csr::shards always yields a valid partition whose per-shard edge
+/// weight respects the greedy balance bound.
+#[test]
+fn prop_shards_partition_and_balance() {
+    forall(60, 0xB3, |g| {
+        let dg = random_graph(g, 100, 500);
+        let csr = dg.snapshot();
+        let n = csr.num_vertices();
+        let k = g.usize(1..12);
+        let cuts = csr.shards(k);
+        assert_eq!(cuts[0], 0);
+        assert_eq!(*cuts.last().unwrap(), n);
+        assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(cuts.len(), k.min(n.max(1)) + 1);
+        let weight = |lo: usize, hi: usize| -> u64 {
+            (lo..hi).map(|v| csr.in_degree(v as u32) as u64 + 1).sum()
+        };
+        let total = weight(0, n);
+        let keff = (cuts.len() - 1) as u64;
+        let max_row = (0..n).map(|v| csr.in_degree(v as u32) as u64 + 1).max().unwrap_or(1);
+        for w in cuts.windows(2) {
+            assert!(weight(w[0], w[1]) <= total.div_ceil(keff) + max_row + keff);
+        }
     });
 }
 
