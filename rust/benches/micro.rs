@@ -1,13 +1,17 @@
 //! `cargo bench --bench micro` — hot-path micro-benchmarks (§Perf):
-//! exact PageRank iteration, hot-set selection, summary construction,
+//! exact PageRank iteration, snapshot pipeline (serial / parallel /
+//! cached / incremental), hot-set selection, summary construction,
 //! densification, sparse summarized run, XLA execute round-trip, RBO,
-//! CSR snapshot, top-k. Results feed EXPERIMENTS.md §Perf.
+//! top-k. Results feed EXPERIMENTS.md §Perf and the CI `bench` job's
+//! `BENCH_2.json` perf-trajectory artifact (results/micro_bench.json).
 
 use std::collections::HashMap;
 
 use veilgraph::bench::{BenchConfig, Bencher};
+use veilgraph::graph::csr::Csr;
 use veilgraph::graph::dynamic::DynamicGraph;
 use veilgraph::graph::generate;
+use veilgraph::graph::snapshot::SnapshotCache;
 use veilgraph::metrics::ranking::top_k_ids;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::pagerank::power::{PageRank, PageRankConfig};
@@ -17,6 +21,7 @@ use veilgraph::runtime::client::XlaRuntime;
 use veilgraph::summary::bigvertex::SummaryGraph;
 use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
 use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::json::Json;
 use veilgraph::util::rng::Xoshiro256pp;
 use veilgraph::util::threadpool::ThreadPool;
 
@@ -30,7 +35,62 @@ fn main() {
     let n = graph.num_vertices();
     println!("workload: copying-web |V|={n} |E|={}\n", graph.num_edges());
 
-    b.bench("csr_snapshot_50k", || graph.snapshot());
+    // One pool for every sharded bench — the engine architecture (shard
+    // counts above the worker count just queue; no extra threads exist).
+    let pool = ThreadPool::with_default_size();
+    println!("  (pool: {} workers)\n", pool.size());
+
+    // -- snapshot pipeline: serial vs parallel vs cached vs incremental --
+    let snap_serial_t = b.bench("csr_snapshot_50k", || graph.snapshot()).median_secs();
+    let mut snap_speedup_at_4 = 0.0f64;
+    for shards in [2usize, 4, 8] {
+        let name = format!("csr_snapshot_50k_par{shards}");
+        let t = b.bench(&name, || graph.snapshot_with(Some(&pool), shards)).median_secs();
+        let speedup = snap_serial_t / t;
+        if shards == 4 {
+            snap_speedup_at_4 = speedup;
+        }
+        println!("  ({name}: {speedup:.2}x vs serial)");
+    }
+    println!("  (snapshot-build speedup at 4 shards: {snap_speedup_at_4:.2}x)\n");
+
+    // Cache hit: a repeat query on an unmutated graph — zero allocations.
+    let mut cache = SnapshotCache::new();
+    let _ = cache.get(&graph, None, 1);
+    b.bench("csr_snapshot_cached_hit", || cache.get(&graph, None, 1).0);
+
+    // Incremental: ~500 dirty rows against a fixed previous snapshot.
+    // The toggles are applied ONCE, outside the timed closure, so the
+    // number is the pure rebuild cost and compares against
+    // csr_snapshot_50k directly.
+    let mut live = graph.clone();
+    let v0 = live.version();
+    let base_csr = live.snapshot();
+    let mut rng_inc = Xoshiro256pp::new(77);
+    for _ in 0..500 {
+        let u = rng_inc.next_below(n as u64);
+        let v = rng_inc.next_below(n as u64);
+        if live.has_edge(u, v) {
+            live.remove_edge(u, v).unwrap();
+        } else {
+            let _ = live.add_edge(u, v);
+        }
+    }
+    let inc_t = b
+        .bench("csr_snapshot_incremental_500", || live.snapshot_from(&base_csr, v0, None, 1))
+        .median_secs();
+    println!("  (csr_snapshot_incremental_500: {:.2}x vs full serial)\n", snap_serial_t / inc_t);
+
+    // Parallel counting-sort edge-list build.
+    let dense_edges: Vec<(u32, u32)> = graph.edges().collect();
+    let fe_serial_t =
+        b.bench("csr_from_edges_50k", || Csr::from_edges(n, &dense_edges)).median_secs();
+    let fe_par_t = b
+        .bench("csr_from_edges_50k_par4", || {
+            Csr::from_edges_pooled(n, &dense_edges, Some(&pool), 4)
+        })
+        .median_secs();
+    println!("  (csr_from_edges_50k_par4: {:.2}x vs serial)\n", fe_serial_t / fe_par_t);
 
     let pr = PageRank::new(PageRankConfig { epsilon: 0.0, max_iters: 1, ..Default::default() });
     b.bench("pagerank_1iter_50k", || pr.run(&csr));
@@ -44,8 +104,6 @@ fn main() {
     // -- serial vs sharded parallel exact PageRank ----------------------
     // Fixed iteration count so every configuration does identical work;
     // the speedup line is the tentpole number ROADMAP tracks.
-    let pool = ThreadPool::with_default_size();
-    println!("  (pool: {} workers)\n", pool.size());
     let ten = PageRankConfig { epsilon: 0.0, max_iters: 10, ..Default::default() };
     let serial_t = b.bench("pagerank_10iter_serial", || PageRank::new(ten).run(&csr)).median_secs();
     let mut speedup_at_4 = 0.0f64;
@@ -160,4 +218,39 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/micro_bench.csv", b.to_csv()).expect("write csv");
     println!("CSV written to results/micro_bench.csv");
+
+    // Machine-readable perf trajectory — the CI bench job uploads this
+    // as BENCH_2.json so speedups are tracked across PRs.
+    let mut benches = std::collections::BTreeMap::new();
+    for r in b.results() {
+        benches.insert(
+            r.name.clone(),
+            Json::obj(vec![
+                ("median_secs", Json::Num(r.summary.p50)),
+                ("mean_secs", Json::Num(r.summary.mean)),
+                ("iters", Json::Num(r.samples.len() as f64)),
+            ]),
+        );
+    }
+    let doc = Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                ("graph", Json::Str("copying-web".into())),
+                ("vertices", Json::Num(n as f64)),
+                ("edges", Json::Num(graph.num_edges() as f64)),
+            ]),
+        ),
+        ("pool_workers", Json::Num(pool.size() as f64)),
+        (
+            "speedups",
+            Json::obj(vec![
+                ("pagerank_10iter_par4_vs_serial", Json::Num(speedup_at_4)),
+                ("snapshot_par4_vs_serial", Json::Num(snap_speedup_at_4)),
+            ]),
+        ),
+        ("benches", Json::Obj(benches)),
+    ]);
+    std::fs::write("results/micro_bench.json", doc.to_string_pretty()).expect("write json");
+    println!("JSON written to results/micro_bench.json");
 }

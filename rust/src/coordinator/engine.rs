@@ -23,10 +23,12 @@
 //! concurrent producers.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::coordinator::udf::{Action, DefaultSuite, ExecStats, QueryContext, UdfSuite};
 use crate::error::{Error, Result};
 use crate::graph::dynamic::DynamicGraph;
+use crate::graph::snapshot::{SnapshotBuild, SnapshotCache, SnapshotStats};
 use crate::graph::VertexId;
 use crate::metrics::ranking::top_k_ids;
 use crate::metrics::registry::MetricsRegistry;
@@ -79,6 +81,9 @@ pub struct EngineBuilder {
     /// time so it survives a later [`Self::pagerank`] call replacing the
     /// whole config (order-independent builder).
     parallelism: Option<usize>,
+    /// Externally owned worker pool (see [`Self::shared_pool`]); when
+    /// absent the engine spawns its own per [`pool_for`].
+    shared_pool: Option<Arc<ThreadPool>>,
     artifacts_dir: Option<std::path::PathBuf>,
     warmup: bool,
     max_xla_k: Option<usize>,
@@ -109,6 +114,7 @@ impl EngineBuilder {
             params: SummaryParams::new(0.2, 1, 0.1),
             pr_config: PageRankConfig::default(),
             parallelism: None,
+            shared_pool: None,
             artifacts_dir: None,
             warmup: false,
             max_xla_k: None,
@@ -145,6 +151,24 @@ impl EngineBuilder {
         if let Some(p) = self.parallelism {
             self.pr_config.parallelism = p;
         }
+    }
+
+    /// Share an existing worker pool instead of spawning one per engine.
+    /// The experiment harness passes ONE pool to every combination replay
+    /// (total threads = outer workers + one shard pool, not their
+    /// product). The pool serves both the snapshot builds and the sharded
+    /// executors; `parallelism` still sets the shard count (`0` = one
+    /// shard per pool worker). Never hand an engine the pool whose
+    /// workers *call into* that engine — scoped dispatch would deadlock.
+    pub fn shared_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.shared_pool = Some(pool);
+        self
+    }
+
+    /// Resolve the engine's pool: a shared one wins, else spawn per
+    /// [`pool_for`].
+    fn resolve_pool(&mut self) -> Option<Arc<ThreadPool>> {
+        self.shared_pool.take().or_else(|| pool_for(&self.pr_config).map(Arc::new))
     }
 
     /// Attach the XLA runtime with artifacts from `dir`.
@@ -190,6 +214,7 @@ impl EngineBuilder {
     /// re-running the initial exact computation.
     pub fn build_from_checkpoint(mut self, path: impl AsRef<std::path::Path>) -> Result<Engine> {
         self.resolve_parallelism();
+        let pool = self.resolve_pool();
         let ckpt = crate::coordinator::checkpoint::load(path)?;
         let mut executor = match &self.artifacts_dir {
             Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
@@ -208,7 +233,8 @@ impl EngineBuilder {
             params: self.params,
             pr_config: self.pr_config,
             executor,
-            pool: pool_for(&self.pr_config),
+            pool,
+            snapshot: SnapshotCache::new(),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
             ranks: ckpt.ranks,
@@ -223,6 +249,7 @@ impl EngineBuilder {
     /// Build from an existing graph.
     pub fn build_from_graph(mut self, graph: DynamicGraph) -> Result<Engine> {
         self.resolve_parallelism();
+        let pool = self.resolve_pool();
         let mut executor = match &self.artifacts_dir {
             Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
             None => SummarizedExecutor::sparse_only(),
@@ -240,7 +267,8 @@ impl EngineBuilder {
             params: self.params,
             pr_config: self.pr_config,
             executor,
-            pool: pool_for(&self.pr_config),
+            pool,
+            snapshot: SnapshotCache::new(),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
             ranks: Vec::new(),
@@ -264,8 +292,15 @@ pub struct Engine {
     params: SummaryParams,
     pr_config: PageRankConfig,
     executor: SummarizedExecutor,
-    /// Worker pool for the sharded executors (`None` ⇔ `parallelism == 1`).
-    pool: Option<ThreadPool>,
+    /// The engine's ONE worker pool, shared by snapshot builds and the
+    /// sharded executors — owned (spawned at build time) or handed in via
+    /// [`EngineBuilder::shared_pool`]. `None` ⇔ serial config with no
+    /// shared pool.
+    pool: Option<Arc<ThreadPool>>,
+    /// Version-keyed CSR cache over `graph` (see
+    /// [`crate::graph::snapshot`]): repeat queries on an unchanged graph
+    /// skip the freeze step entirely.
+    snapshot: SnapshotCache,
     udf: Box<dyn UdfSuite>,
     metrics: MetricsRegistry,
     /// Current full rank vector (dense index order).
@@ -351,7 +386,7 @@ impl Engine {
                 exec.summary_vertices = summary.num_vertices();
                 exec.summary_edges = summary.num_edges();
                 if summary.num_vertices() > 0 {
-                    let pool = self.pool.as_ref();
+                    let pool = self.pool.as_deref();
                     let (res, backend) =
                         self.executor.execute_pooled(&summary, &self.pr_config, pool)?;
                     exec.backend = Some(backend);
@@ -425,16 +460,30 @@ impl Engine {
     // ---- internals -----------------------------------------------------
 
     /// Run the exact power method (warm-started) and install the ranks.
-    /// Sharded across the engine's pool when `parallelism != 1`. Returns
-    /// iterations executed.
+    /// The CSR comes from the version-keyed snapshot cache — a repeat
+    /// query on an unmutated graph performs zero CSR allocations, and
+    /// rebuilds are incremental + sharded across the engine's pool.
+    /// Returns iterations executed.
     fn compute_exact(&mut self) -> usize {
-        let csr = self.graph.snapshot();
+        let shards = match self.pool.as_deref() {
+            Some(pool) => self.pr_config.effective_shards(pool),
+            None => 1,
+        };
+        let (csr, build) = self.snapshot.get(&self.graph, self.pool.as_deref(), shards);
+        self.metrics.inc(
+            match build {
+                SnapshotBuild::CacheHit => "snapshot_cache_hits",
+                SnapshotBuild::Incremental => "snapshot_builds_incremental",
+                SnapshotBuild::Full => "snapshot_builds_full",
+            },
+            1,
+        );
         let pr = PageRank::new(self.pr_config);
         self.extend_ranks_for_new_vertices();
         let warm = self.pr_config.warm_start_exact
             && self.ranks.len() == csr.num_vertices()
             && !self.ranks.is_empty();
-        let res = match (&self.pool, warm) {
+        let res = match (self.pool.as_deref(), warm) {
             (Some(pool), true) => pr.run_parallel_from(&csr, self.ranks.clone(), pool),
             (Some(pool), false) => pr.run_parallel(&csr, pool),
             (None, true) => pr.run_from(&csr, self.ranks.clone()),
@@ -493,6 +542,11 @@ impl Engine {
     /// `0` = auto: one shard per worker of the engine's pool).
     pub fn parallelism(&self) -> usize {
         self.pr_config.parallelism
+    }
+
+    /// Snapshot-pipeline counters (hits / incremental / full builds).
+    pub fn snapshot_stats(&self) -> SnapshotStats {
+        self.snapshot.stats()
     }
 
     /// Number of queries served.
@@ -775,6 +829,65 @@ mod tests {
         let a = exact_parallel.query().unwrap();
         let b = exact_serial.query().unwrap();
         assert_close(&a.ranks, &b.ranks, "warm-started exact");
+    }
+
+    #[test]
+    fn snapshot_cache_serves_repeated_exact_queries() {
+        let mut e = EngineBuilder::new()
+            .udf(Box::new(AlwaysExact))
+            .build_from_edges(ring(12))
+            .unwrap();
+        // the initial complete execution built the snapshot once
+        assert_eq!(e.snapshot_stats().full, 1);
+        let _ = e.query().unwrap(); // no pending updates ⇒ cache hit
+        let _ = e.query().unwrap();
+        let s = e.snapshot_stats();
+        assert_eq!((s.full, s.incremental, s.hits), (1, 0, 2));
+        assert_eq!(e.metrics().counter("snapshot_cache_hits"), 2);
+        e.ingest(EdgeOp::add(0, 6));
+        let _ = e.query().unwrap(); // mutation ⇒ incremental rebuild
+        let s = e.snapshot_stats();
+        assert_eq!((s.full, s.incremental, s.hits), (1, 1, 2));
+        assert_eq!(e.metrics().counter("snapshot_builds_incremental"), 1);
+        assert_eq!(e.metrics().counter("snapshot_builds_full"), 1);
+    }
+
+    #[test]
+    fn shared_pool_engine_matches_owned_pool_engine() {
+        // One pool driven by two engines (sequentially here; the harness
+        // does it concurrently) must not change any numbers vs an engine
+        // that owns its pool.
+        let pool = std::sync::Arc::new(ThreadPool::new(4));
+        let cfg0 = PageRankConfig { epsilon: 0.0, max_iters: 40, ..Default::default() };
+        let base = crate::graph::generate::barabasi_albert(150, 3, 0.3, 5);
+        let mut shared = EngineBuilder::new()
+            .pagerank(cfg0)
+            .parallelism(4)
+            .shared_pool(std::sync::Arc::clone(&pool))
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        let mut owned = EngineBuilder::new()
+            .pagerank(cfg0)
+            .parallelism(4)
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        assert_eq!(shared.ranks(), owned.ranks());
+        for i in 0..3u64 {
+            shared.ingest(EdgeOp::add(200 + i, i * 13 % 50));
+            owned.ingest(EdgeOp::add(200 + i, i * 13 % 50));
+            let a = shared.query().unwrap();
+            let b = owned.query().unwrap();
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.ranks, b.ranks, "query {i}");
+        }
+        // a serial-config engine may still carry a shared pool: snapshot
+        // and executors stay serial (shards resolve to 1)
+        let serial = EngineBuilder::new()
+            .shared_pool(std::sync::Arc::clone(&pool))
+            .build_from_edges(ring(8))
+            .unwrap();
+        assert_eq!(serial.parallelism(), 1);
+        assert_eq!(serial.snapshot_stats().full, 1);
     }
 
     #[test]

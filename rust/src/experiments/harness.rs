@@ -9,6 +9,8 @@
 //! * RBO vs. ground truth (top-1000/4000)     (Figs. 5, 9, 13, 17, 21, 25, 29)
 //! * speedup = exact time / approx time       (Figs. 6, 10, 14, 18, 22, 26, 30)
 
+use std::sync::Arc;
+
 use crate::coordinator::engine::EngineBuilder;
 use crate::coordinator::policies::{AlwaysApproximate, AlwaysExact};
 use crate::error::Result;
@@ -18,7 +20,7 @@ use crate::pagerank::power::PageRankConfig;
 use crate::stream::event::UpdateEvent;
 use crate::stream::source::{chunked_events, split_stream, update_density};
 use crate::summary::params::SummaryParams;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{available_parallelism, ThreadPool};
 
 /// Number of queries per experiment (paper: Q = 50).
 pub const Q: usize = 50;
@@ -173,6 +175,9 @@ pub struct HarnessConfig {
     /// Stream sampling/shuffle seed.
     pub seed: u64,
     /// Workers for the combination grid (each replay is independent).
+    /// `run_experiment` clamps `workers × pagerank.parallelism` to the
+    /// machine's available parallelism (logging the clamp) and shares a
+    /// single shard pool across all replays.
     pub workers: usize,
 }
 
@@ -201,13 +206,15 @@ fn run_ground_truth(
     events: &[UpdateEvent],
     cfg: &HarnessConfig,
     rbo_depth: usize,
+    pool: Option<Arc<ThreadPool>>,
 ) -> Result<GroundTruth> {
     // Paper baseline: a *complete* (cold) PageRank execution per query.
     let gt_cfg = PageRankConfig { warm_start_exact: false, ..cfg.pagerank };
-    let mut engine = EngineBuilder::new()
-        .udf(Box::new(AlwaysExact))
-        .pagerank(gt_cfg)
-        .build_from_edges(initial.iter().copied())?;
+    let mut builder = EngineBuilder::new().udf(Box::new(AlwaysExact)).pagerank(gt_cfg);
+    if let Some(pool) = pool {
+        builder = builder.shared_pool(pool);
+    }
+    let mut engine = builder.build_from_edges(initial.iter().copied())?;
     let mut gt = GroundTruth {
         exact_secs: Vec::new(),
         top_ids: Vec::new(),
@@ -237,12 +244,16 @@ fn run_combination(
     params: SummaryParams,
     gt: &GroundTruth,
     rbo_depth: usize,
+    pool: Option<Arc<ThreadPool>>,
 ) -> Result<CombinationResult> {
-    let mut engine = EngineBuilder::new()
+    let mut builder = EngineBuilder::new()
         .params(params)
         .udf(Box::new(AlwaysApproximate))
-        .pagerank(cfg.pagerank)
-        .build_from_edges(initial.iter().copied())?;
+        .pagerank(cfg.pagerank);
+    if let Some(pool) = pool {
+        builder = builder.shared_pool(pool);
+    }
+    let mut engine = builder.build_from_edges(initial.iter().copied())?;
     let mut rows = Vec::new();
     let mut q = 0usize;
     for ev in events {
@@ -293,21 +304,54 @@ pub fn run_experiment(
         cfg.q
     );
 
-    let gt = run_ground_truth(&initial, &events, cfg, rbo_depth)?;
+    // Resolve the thread budget. Outer replay workers × inner PageRank
+    // shards must not exceed the machine, and engines no longer spawn one
+    // pool each: ONE shared inner pool serves the ground truth and every
+    // combination replay, so total threads are workers + shards (not
+    // their product). Outer workers block while their engine's shards
+    // run, and inner workers never re-enter a pool, so the two-pool
+    // split cannot deadlock.
+    let avail = available_parallelism();
+    let req_workers = cfg.workers.max(1);
+    let workers = req_workers.min(avail).min(cfg.grid.len().max(1));
+    let req_shards = if cfg.pagerank.parallelism == 0 {
+        avail
+    } else {
+        cfg.pagerank.parallelism
+    };
+    let shards = if workers.saturating_mul(req_shards) > avail {
+        (avail / workers).max(1)
+    } else {
+        req_shards
+    };
+    if workers != req_workers || shards != req_shards {
+        crate::log_info!(
+            "harness clamp: workers {req_workers}->{workers}, parallelism \
+             {req_shards}->{shards} (available_parallelism={avail})"
+        );
+    }
+    let mut cfg = cfg.clone();
+    cfg.workers = workers;
+    cfg.pagerank.parallelism = shards;
+    let inner: Option<Arc<ThreadPool>> = if shards != 1 {
+        Some(Arc::new(ThreadPool::new(shards)))
+    } else {
+        None
+    };
 
-    // Each combination's replay is independent — fan out over the pool.
+    let gt = run_ground_truth(&initial, &events, &cfg, rbo_depth, inner.clone())?;
+
+    // Each combination's replay is independent — fan out over the outer
+    // pool while all engines share the inner one.
     let pool = ThreadPool::new(cfg.workers);
-    let shared = std::sync::Arc::new((initial, events, cfg.clone(), gt));
-    let combos: Vec<Result<CombinationResult>> = pool.scope_map(
-        cfg.grid.clone(),
-        {
-            let shared = std::sync::Arc::clone(&shared);
-            move |params| {
-                let (initial, events, cfg, gt) = &*shared;
-                run_combination(initial, events, cfg, params, gt, rbo_depth)
-            }
-        },
-    );
+    let shared = Arc::new((initial, events, cfg.clone(), gt));
+    let combos: Vec<Result<CombinationResult>> = pool.scope_map(cfg.grid.clone(), {
+        let shared = Arc::clone(&shared);
+        move |params| {
+            let (initial, events, cfg, gt) = &*shared;
+            run_combination(initial, events, cfg, params, gt, rbo_depth, inner.clone())
+        }
+    });
     let mut out = Vec::with_capacity(combos.len());
     for c in combos {
         out.push(c?);
@@ -350,6 +394,26 @@ mod tests {
                 assert_eq!(row.query, i + 1);
                 assert!(row.vertex_ratio() <= 1.0);
                 assert!(row.edge_ratio() <= 1.5, "ratios stay plausible");
+                assert!((0.0..=1.0).contains(&row.rbo));
+                assert!(row.exact_secs > 0.0 && row.approx_secs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribed_config_is_clamped_and_still_correct() {
+        // workers × parallelism far beyond any machine: the harness must
+        // clamp (shared inner pool, capped shard count) and the replay
+        // must still produce the full series.
+        let edges = barabasi_albert(300, 3, 0.5, 31);
+        let mut cfg = quick_cfg();
+        cfg.workers = 64;
+        cfg.pagerank.parallelism = 64;
+        let res = run_experiment("test", &edges, 60, false, &cfg).unwrap();
+        assert_eq!(res.combos.len(), 2);
+        for c in &res.combos {
+            assert_eq!(c.rows.len(), 5);
+            for row in &c.rows {
                 assert!((0.0..=1.0).contains(&row.rbo));
                 assert!(row.exact_secs > 0.0 && row.approx_secs > 0.0);
             }

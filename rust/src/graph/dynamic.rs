@@ -15,8 +15,9 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
-use crate::graph::csr::Csr;
+use crate::graph::csr::{balanced_cuts, Csr};
 use crate::graph::{VertexId, VertexIdx};
+use crate::util::threadpool::ThreadPool;
 
 /// A growable directed graph with stable dense indices.
 #[derive(Clone, Debug, Default)]
@@ -31,6 +32,16 @@ pub struct DynamicGraph {
     in_adj: Vec<Vec<VertexIdx>>,
     /// Edge count.
     m: usize,
+    /// Topology version: bumped on every successful mutation (vertex
+    /// insert, edge add/remove, vertex removal). Failed or no-op calls
+    /// (duplicate edge, `add_vertex` of an existing id, unknown-edge
+    /// removal) leave it untouched. Snapshot caches key on this.
+    version: u64,
+    /// Per-row stamp: the version at which `in_adj[v]` last changed
+    /// (vertex creation counts). Incremental snapshot builds compare a
+    /// row's stamp against the cached snapshot's version to decide
+    /// whether the old CSR row can be bulk-copied.
+    row_version: Vec<u64>,
 }
 
 impl DynamicGraph {
@@ -62,6 +73,12 @@ impl DynamicGraph {
         self.m
     }
 
+    /// Current topology version (0 for an empty graph; see the field
+    /// docs for the bump rules).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     /// Dense index for a user id, if present.
     pub fn index(&self, id: VertexId) -> Option<VertexIdx> {
         self.index_of.get(&id).copied()
@@ -82,6 +99,8 @@ impl DynamicGraph {
         self.id_of.push(id);
         self.out_adj.push(Vec::new());
         self.in_adj.push(Vec::new());
+        self.version += 1;
+        self.row_version.push(self.version);
         idx
     }
 
@@ -98,6 +117,8 @@ impl DynamicGraph {
         self.out_adj[s as usize].push(d);
         self.in_adj[d as usize].push(s);
         self.m += 1;
+        self.version += 1;
+        self.row_version[d as usize] = self.version;
         Ok(())
     }
 
@@ -112,6 +133,8 @@ impl DynamicGraph {
         let pos = inn.iter().position(|&x| x == s).expect("in/out adjacency desync");
         inn.swap_remove(pos);
         self.m -= 1;
+        self.version += 1;
+        self.row_version[d as usize] = self.version;
         Ok(())
     }
 
@@ -119,12 +142,14 @@ impl DynamicGraph {
     /// (ids remain stable) but becomes isolated.
     pub fn remove_vertex(&mut self, id: VertexId) -> Result<()> {
         let v = self.index(id).ok_or(Error::UnknownVertex(id))?;
+        self.version += 1;
         let outs: Vec<VertexIdx> = self.out_adj[v as usize].clone();
         for d in outs {
             let inn = &mut self.in_adj[d as usize];
             if let Some(p) = inn.iter().position(|&x| x == v) {
                 inn.swap_remove(p);
                 self.m -= 1;
+                self.row_version[d as usize] = self.version;
             }
         }
         self.out_adj[v as usize].clear();
@@ -137,6 +162,7 @@ impl DynamicGraph {
             }
         }
         self.in_adj[v as usize].clear();
+        self.row_version[v as usize] = self.version;
         Ok(())
     }
 
@@ -185,18 +211,139 @@ impl DynamicGraph {
 
     /// Freeze the current topology into a pull-oriented CSR snapshot:
     /// in-edge CSR plus out-degree array (what the power method consumes).
+    /// CSR row `v` lists the *sources* of `v`'s in-edges. Serial full
+    /// build; see [`Self::snapshot_with`] / [`Self::snapshot_from`] for
+    /// the parallel and incremental variants (all three are bit-identical
+    /// for the same topology).
     pub fn snapshot(&self) -> Csr {
+        self.build_snapshot(None, None, 1)
+    }
+
+    /// Full snapshot rebuild, parallel when a pool is supplied and
+    /// `shards > 1`: a two-pass build over `shards` in-degree-balanced
+    /// row ranges (pass 1 computes per-range offset prefix sums, pass 2
+    /// fills disjoint `targets` slices). Bit-identical to
+    /// [`Self::snapshot`] for every shard count.
+    pub fn snapshot_with(&self, pool: Option<&ThreadPool>, shards: usize) -> Csr {
+        self.build_snapshot(None, pool, shards)
+    }
+
+    /// Incremental snapshot rebuild: rows untouched since `prev_version`
+    /// are bulk-copied from `prev` (runs of clean rows collapse into one
+    /// `copy_from_slice`); dirty rows re-read the live adjacency. Offsets
+    /// and out-degrees are always rebuilt (O(n) — cheap next to the edge
+    /// fill). Contract: `prev` MUST be a snapshot THIS graph produced at
+    /// version `prev_version` ([`crate::graph::snapshot::SnapshotCache`]
+    /// enforces the pairing; diverged clones sharing version numbers
+    /// would silently corrupt rows).
+    pub fn snapshot_from(
+        &self,
+        prev: &Csr,
+        prev_version: u64,
+        pool: Option<&ThreadPool>,
+        shards: usize,
+    ) -> Csr {
+        self.build_snapshot(Some((prev, prev_version)), pool, shards)
+    }
+
+    /// The one snapshot builder behind the three public variants.
+    fn build_snapshot(
+        &self,
+        prev: Option<(&Csr, u64)>,
+        pool: Option<&ThreadPool>,
+        shards: usize,
+    ) -> Csr {
         let n = self.num_vertices();
-        let mut offsets = Vec::with_capacity(n + 1);
-        offsets.push(0u64);
-        let mut targets = Vec::with_capacity(self.m);
-        for v in 0..n {
-            // CSR row v lists the *sources* of v's in-edges.
-            targets.extend_from_slice(&self.in_adj[v]);
-            offsets.push(targets.len() as u64);
+        let shards = shards.clamp(1, n.max(1));
+        let mut offsets = vec![0u64; n + 1];
+        let mut out_degree = vec![0u32; n];
+        let mut targets = vec![0 as VertexIdx; self.m];
+        match pool {
+            Some(pool) if shards > 1 && n > 0 => {
+                let cuts = balanced_cuts(n, shards, |v| self.in_adj[v].len() as u64);
+                // Pass 1: per-range local prefix sums of in-degrees, then
+                // rebase each range by the exclusive scan of range totals.
+                let totals = pool.scope_chunks(&mut offsets[1..], &cuts, |i, chunk| {
+                    let lo = cuts[i];
+                    let mut run = 0u64;
+                    for (off, slot) in chunk.iter_mut().enumerate() {
+                        run += self.in_adj[lo + off].len() as u64;
+                        *slot = run;
+                    }
+                    run
+                });
+                let mut bases = vec![0u64; cuts.len()];
+                for (i, t) in totals.iter().enumerate() {
+                    bases[i + 1] = bases[i] + t;
+                }
+                pool.scope_chunks(&mut offsets[1..], &cuts, |i, chunk| {
+                    if bases[i] > 0 {
+                        for slot in chunk.iter_mut() {
+                            *slot += bases[i];
+                        }
+                    }
+                });
+                pool.scope_chunks(&mut out_degree, &cuts, |i, chunk| {
+                    let lo = cuts[i];
+                    for (off, slot) in chunk.iter_mut().enumerate() {
+                        *slot = self.out_adj[lo + off].len() as u32;
+                    }
+                });
+                // Pass 2: each range owns a disjoint targets slice (row
+                // cuts mapped through the now-final offsets).
+                let ecuts: Vec<usize> = cuts.iter().map(|&r| offsets[r] as usize).collect();
+                let offsets_ref = &offsets;
+                pool.scope_chunks(&mut targets, &ecuts, |i, chunk| {
+                    self.fill_rows(chunk, cuts[i], cuts[i + 1], offsets_ref, prev);
+                });
+            }
+            _ => {
+                let mut run = 0u64;
+                for v in 0..n {
+                    run += self.in_adj[v].len() as u64;
+                    offsets[v + 1] = run;
+                    out_degree[v] = self.out_adj[v].len() as u32;
+                }
+                self.fill_rows(&mut targets, 0, n, &offsets, prev);
+            }
         }
-        let out_degree: Vec<u32> = (0..n).map(|v| self.out_adj[v].len() as u32).collect();
         Csr::from_parts(offsets, targets, out_degree)
+    }
+
+    /// Fill `chunk` — the targets slice for rows `lo..hi`, based at
+    /// `offsets[lo]` — copying runs of unchanged rows from `prev` in bulk
+    /// and re-reading dirty rows from the live adjacency.
+    fn fill_rows(
+        &self,
+        chunk: &mut [VertexIdx],
+        lo: usize,
+        hi: usize,
+        offsets: &[u64],
+        prev: Option<(&Csr, u64)>,
+    ) {
+        let base = offsets[lo] as usize;
+        let clean = |v: usize| match prev {
+            Some((p, pv)) => v < p.num_vertices() && self.row_version[v] <= pv,
+            None => false,
+        };
+        let mut v = lo;
+        while v < hi {
+            let dst_lo = offsets[v] as usize - base;
+            if clean(v) {
+                let mut w = v + 1;
+                while w < hi && clean(w) {
+                    w += 1;
+                }
+                let src = prev.unwrap().0.row_span(v as VertexIdx, w as VertexIdx);
+                debug_assert_eq!(src.len() as u64, offsets[w] - offsets[v], "clean run desync");
+                chunk[dst_lo..dst_lo + src.len()].copy_from_slice(src);
+                v = w;
+            } else {
+                let row = &self.in_adj[v];
+                chunk[dst_lo..dst_lo + row.len()].copy_from_slice(row);
+                v += 1;
+            }
+        }
     }
 
     /// Iterate over all edges as (src_idx, dst_idx).
@@ -297,6 +444,72 @@ mod tests {
             }
             assert_eq!(csr.out_degree(v) as usize, g.out_degree(v));
         }
+    }
+
+    #[test]
+    fn version_bumps_on_every_successful_mutation_only() {
+        let mut g = DynamicGraph::new();
+        assert_eq!(g.version(), 0);
+        g.add_vertex(1);
+        let v1 = g.version();
+        assert!(v1 > 0);
+        g.add_vertex(1); // no-op: already present
+        assert_eq!(g.version(), v1);
+        g.add_edge(1, 2).unwrap(); // creates 2, adds edge
+        let v2 = g.version();
+        assert!(v2 > v1);
+        assert!(g.add_edge(1, 2).is_err()); // duplicate: no bump
+        assert_eq!(g.version(), v2);
+        assert!(g.remove_edge(1, 9).is_err()); // unknown vertex: no bump
+        assert!(g.remove_edge(2, 1).is_err()); // unknown edge: no bump
+        assert_eq!(g.version(), v2);
+        g.remove_edge(1, 2).unwrap();
+        let v3 = g.version();
+        assert!(v3 > v2);
+        assert!(g.remove_vertex(9).is_err());
+        assert_eq!(g.version(), v3);
+        g.remove_vertex(2).unwrap();
+        assert!(g.version() > v3);
+    }
+
+    #[test]
+    fn parallel_snapshot_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let mut g = triangle();
+        g.add_vertex(99); // dangling + isolated row
+        g.add_edge(10, 30).unwrap();
+        let serial = g.snapshot();
+        for shards in [1usize, 2, 3, 4, 7, 100] {
+            assert_eq!(g.snapshot_with(Some(&pool), shards), serial, "shards={shards}");
+        }
+        // no pool ⇒ serial path regardless of the shard knob
+        assert_eq!(g.snapshot_with(None, 8), serial);
+        let empty = DynamicGraph::new();
+        assert_eq!(empty.snapshot_with(Some(&pool), 4), empty.snapshot());
+    }
+
+    #[test]
+    fn incremental_snapshot_matches_full_rebuild() {
+        let pool = ThreadPool::new(4);
+        let mut g = triangle();
+        let base = g.snapshot();
+        let v0 = g.version();
+        // no mutations: incremental rebuild reproduces the base snapshot
+        assert_eq!(g.snapshot_from(&base, v0, None, 1), base);
+        // interleaved adds/removes, new vertices, a vertex removal
+        g.add_edge(10, 30).unwrap();
+        g.add_edge(40, 20).unwrap();
+        g.remove_edge(20, 30).unwrap();
+        g.add_vertex(50);
+        g.remove_vertex(30).unwrap();
+        let fresh = g.snapshot();
+        assert_eq!(g.snapshot_from(&base, v0, None, 1), fresh);
+        assert_eq!(g.snapshot_from(&base, v0, Some(&pool), 3), fresh);
+        // chaining: incremental-of-incremental still matches
+        let mid = g.snapshot_from(&base, v0, None, 1);
+        let v1 = g.version();
+        g.add_edge(50, 10).unwrap();
+        assert_eq!(g.snapshot_from(&mid, v1, None, 1), g.snapshot());
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //! [`dynamic::DynamicGraph`] is the mutable store the stream applies
 //! updates to; [`csr::Csr`] is the frozen snapshot the PageRank kernels
 //! consume (pull-based, so we store *in*-edges CSR plus an out-degree
-//! array).
+//! array); [`snapshot::SnapshotCache`] is the version-keyed incremental
+//! + parallel pipeline between the two.
 
 pub mod csr;
 pub mod dynamic;
 pub mod generate;
 pub mod io;
+pub mod snapshot;
 pub mod traversal;
 
 /// Vertex identifier as seen by users (sparse, stable across updates).

@@ -187,7 +187,11 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         .opt("beta", "PageRank damping factor", Some("0.85"))
         .opt("seed", "stream sampling seed", Some("7"))
         .opt("workers", "parallel combination replays", Some("8"))
-        .opt("parallelism", "PageRank shards (1 = serial; multiplies --workers)", Some("1"))
+        .opt(
+            "parallelism",
+            "PageRank shards (1 = serial, 0 = auto; clamped so workers*shards <= cores)",
+            Some("1"),
+        )
         .opt("out", "results directory", Some("results"))
         .flag("help", "show usage");
     let p = cmd.parse(args)?;
@@ -223,7 +227,11 @@ fn cmd_figures(args: &[String]) -> Result<()> {
         .opt("beta", "PageRank damping factor", Some("0.85"))
         .opt("seed", "stream sampling seed", Some("7"))
         .opt("workers", "parallel combination replays", Some("8"))
-        .opt("parallelism", "PageRank shards (1 = serial; multiplies --workers)", Some("1"))
+        .opt(
+            "parallelism",
+            "PageRank shards (1 = serial, 0 = auto; clamped so workers*shards <= cores)",
+            Some("1"),
+        )
         .opt("out", "results directory", Some("results"))
         .flag("all", "run every dataset (Figs. 3-30)")
         .flag("table1", "print Table 1 (datasets) and exit")

@@ -114,8 +114,12 @@ impl SummarizedExecutor {
     /// Run the summarized computation, choosing the backend; when the
     /// sparse executor is picked and a pool is supplied (and
     /// `cfg.parallelism != 1`), the run is sharded across the pool via
-    /// [`run_summarized_parallel`]. The dense path is untouched — it
-    /// already batches its work into one kernel call per fused chunk.
+    /// [`run_summarized_parallel`]. The pool is the engine's single
+    /// worker pool — the same one the snapshot pipeline builds CSRs on,
+    /// possibly shared across many engines by the experiment harness
+    /// (sharding is a pure scheduling choice, so sharing changes no
+    /// numbers). The dense path is untouched — it already batches its
+    /// work into one kernel call per fused chunk.
     pub fn execute_pooled(
         &mut self,
         s: &SummaryGraph,

@@ -4,6 +4,14 @@
 //! The coordinator uses it for parallel experiment grids and for the query
 //! server's worker side. Jobs are `FnOnce` closures; [`ThreadPool::scope_map`]
 //! gives a rayon-like parallel map with panic propagation.
+//!
+//! The pool is `Sync` (the submission side is a mutex-guarded sender), so a
+//! single `Arc<ThreadPool>` can be shared by many engines — the experiment
+//! harness hands one pool to every combination replay instead of letting
+//! each engine spawn its own (the `--workers 8 --parallelism 8`
+//! oversubscription fix). Sharing note: callers of the scoped helpers block
+//! until their own jobs finish, so the pool must never be entered from one
+//! of its *own* workers (outer grid pool and inner shard pool are distinct).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -17,9 +25,16 @@ enum Msg {
     Shutdown,
 }
 
+/// Available hardware parallelism, defaulting to 4 when undetectable.
+pub fn available_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
 /// A fixed pool of worker threads consuming a shared job queue.
 pub struct ThreadPool {
-    tx: mpsc::Sender<Msg>,
+    /// Mutex-guarded so `&ThreadPool` can submit from any thread (std's
+    /// `mpsc::Sender` alone is not `Sync` on every supported toolchain).
+    tx: Mutex<mpsc::Sender<Msg>>,
     handles: Vec<thread::JoinHandle<()>>,
     size: usize,
 }
@@ -50,13 +65,12 @@ impl ThreadPool {
                     .expect("failed to spawn worker"),
             );
         }
-        Self { tx, handles, size }
+        Self { tx: Mutex::new(tx), handles, size }
     }
 
     /// Pool sized to available parallelism.
     pub fn with_default_size() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n)
+        Self::new(available_parallelism())
     }
 
     /// Number of workers.
@@ -64,9 +78,14 @@ impl ThreadPool {
         self.size
     }
 
+    /// Enqueue one message (lock held only for the send itself).
+    fn send(&self, msg: Msg) {
+        self.tx.lock().expect("pool sender poisoned").send(msg).expect("pool shut down");
+    }
+
     /// Fire-and-forget job submission.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool shut down");
+        self.send(Msg::Run(Box::new(job)));
     }
 
     /// Scoped parallel execution over disjoint mutable chunks of a slice
@@ -123,7 +142,7 @@ impl ThreadPool {
             // its execution. This is the standard scoped-pool erasure.
             let job: Job =
                 unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) };
-            self.tx.send(Msg::Run(job)).expect("pool shut down");
+            self.send(Msg::Run(job));
         }
         drop(rtx);
         drain_results(&rrx, k)
@@ -180,8 +199,10 @@ fn drain_results<R>(rrx: &mpsc::Receiver<(usize, thread::Result<R>)>, n: usize) 
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Msg::Shutdown);
+        if let Ok(tx) = self.tx.lock() {
+            for _ in 0..self.handles.len() {
+                let _ = tx.send(Msg::Shutdown);
+            }
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -328,6 +349,49 @@ mod tests {
         // Pool must still be usable after a contained panic.
         let ok = pool.scope_chunks(&mut data, &[0, 4, 8], |_, chunk| chunk.len());
         assert_eq!(ok, vec![4, 4]);
+    }
+
+    #[test]
+    fn pool_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ThreadPool>();
+    }
+
+    #[test]
+    fn one_pool_shared_across_threads_serves_concurrent_scopes() {
+        // Two OS threads (neither a pool worker) drive scoped dispatches
+        // on the SAME pool concurrently — the shared-inner-pool shape the
+        // experiment harness uses. Callers are never workers, so there is
+        // no nesting deadlock; results must stay per-caller correct.
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut joins = Vec::new();
+        for t in 0..2usize {
+            let pool = Arc::clone(&pool);
+            joins.push(thread::spawn(move || {
+                let mut total = 0u64;
+                for round in 0..20usize {
+                    let mut data = vec![0u64; 64];
+                    let cuts = [0usize, 16, 32, 64];
+                    let sums = pool.scope_chunks(&mut data, &cuts, |i, chunk| {
+                        for (off, x) in chunk.iter_mut().enumerate() {
+                            *x = (t * 100_000 + round * 1000 + i * 100 + off) as u64;
+                        }
+                        chunk.iter().sum::<u64>()
+                    });
+                    for (i, w) in cuts.windows(2).enumerate() {
+                        let expect: u64 = (0..(w[1] - w[0]))
+                            .map(|off| (t * 100_000 + round * 1000 + i * 100 + off) as u64)
+                            .sum();
+                        assert_eq!(sums[i], expect, "thread {t} round {round} chunk {i}");
+                    }
+                    total += sums.iter().sum::<u64>();
+                }
+                total
+            }));
+        }
+        for j in joins {
+            assert!(j.join().unwrap() > 0);
+        }
     }
 
     #[test]

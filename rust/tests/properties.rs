@@ -5,7 +5,9 @@
 use std::collections::HashMap;
 
 use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::graph::csr::Csr;
 use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::snapshot::{SnapshotBuild, SnapshotCache};
 use veilgraph::metrics::ranking::top_k_ids;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::pagerank::power::{PageRank, PageRankConfig};
@@ -44,6 +46,123 @@ fn prop_snapshot_consistency() {
                 assert!(dg.out_neighbors(s).contains(&v));
             }
         }
+    });
+}
+
+/// The version-cached incremental snapshot pipeline is indistinguishable
+/// from a fresh full rebuild after ANY interleaving of edge/vertex
+/// adds and removes, at any shard count — and an unmutated graph is a
+/// pure cache hit (the identical allocation comes back).
+#[test]
+fn prop_incremental_snapshot_matches_full_rebuild() {
+    let pool = ThreadPool::new(4);
+    forall(40, 0xC1, |g| {
+        let mut dg = random_graph(g, 50, 200);
+        let mut cache = SnapshotCache::new();
+        for _round in 0..g.usize(1..6) {
+            for _ in 0..g.usize(0..25) {
+                let (u, v) = (g.u64(0..60), g.u64(0..60));
+                match g.usize(0..10) {
+                    0..=5 => {
+                        let _ = dg.add_edge(u, v);
+                    }
+                    6..=7 => {
+                        let _ = dg.remove_edge(u, v);
+                    }
+                    8 => {
+                        dg.add_vertex(u);
+                    }
+                    _ => {
+                        let _ = dg.remove_vertex(u);
+                    }
+                }
+            }
+            let fresh = dg.snapshot();
+            let shards = g.usize(1..8);
+            let (cached, _build) = cache.get(&dg, Some(&pool), shards);
+            assert_eq!(*cached, fresh);
+            let (again, build) = cache.get(&dg, Some(&pool), shards);
+            assert_eq!(build, SnapshotBuild::CacheHit);
+            assert!(std::sync::Arc::ptr_eq(&cached, &again));
+        }
+    });
+}
+
+/// Parallel snapshot construction == serial for k ∈ {1, 2, 4, 7} — on
+/// random graphs, the empty graph and an all-dangling (edge-free) graph;
+/// same guarantee for the parallel counting-sort `Csr::from_edges_pooled`.
+#[test]
+fn prop_parallel_snapshot_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(40, 0xC2, |g| {
+        let dg = random_graph(g, 80, 400);
+        let serial = dg.snapshot();
+        let dense: Vec<(u32, u32)> = dg.edges().collect();
+        let serial_ce = Csr::from_edges(dg.num_vertices(), &dense);
+        for k in [1usize, 2, 4, 7] {
+            assert_eq!(dg.snapshot_with(Some(&pool), k), serial, "k={k}");
+            let par_ce = Csr::from_edges_pooled(dg.num_vertices(), &dense, Some(&pool), k);
+            assert_eq!(par_ce, serial_ce, "k={k}");
+        }
+    });
+    for n in [0usize, 7] {
+        let mut dg = DynamicGraph::new();
+        for v in 0..n as u64 {
+            dg.add_vertex(v);
+        }
+        let serial = dg.snapshot();
+        for k in [1usize, 2, 4, 7] {
+            assert_eq!(dg.snapshot_with(Some(&pool), k), serial, "|V|={n} k={k}");
+            assert_eq!(Csr::from_edges_pooled(n, &[], Some(&pool), k), serial, "|V|={n} k={k}");
+        }
+    }
+}
+
+/// Every mutating `DynamicGraph` method bumps the topology version (and
+/// therefore invalidates `SnapshotCache`); failed and no-op calls leave
+/// both untouched.
+#[test]
+fn prop_every_mutation_invalidates_cache() {
+    fn assert_invalidated(cache: &mut SnapshotCache, dg: &DynamicGraph, what: &str) {
+        let (got, build) = cache.get(dg, None, 1);
+        assert_ne!(build, SnapshotBuild::CacheHit, "{what} must invalidate");
+        assert_eq!(*got, dg.snapshot(), "{what} rebuild mismatch");
+    }
+    forall(60, 0xC3, |g| {
+        let mut dg = random_graph(g, 30, 120);
+        let mut cache = SnapshotCache::new();
+        let _ = cache.get(&dg, None, 1);
+        // ids ≥ 100 cannot exist yet (random_graph draws from 0..30)
+        let (u, v) = (g.u64(100..150), g.u64(150..200));
+
+        let v0 = dg.version();
+        dg.add_vertex(u);
+        assert!(dg.version() > v0, "add_vertex (new)");
+        assert_invalidated(&mut cache, &dg, "add_vertex");
+
+        let v1 = dg.version();
+        dg.add_vertex(u); // no-op: id exists
+        assert_eq!(dg.version(), v1);
+        dg.add_edge(u, v).unwrap();
+        assert!(dg.version() > v1, "add_edge");
+        assert_invalidated(&mut cache, &dg, "add_edge");
+
+        let v2 = dg.version();
+        assert!(dg.add_edge(u, v).is_err()); // duplicate
+        assert!(dg.remove_edge(v, u).is_err()); // unknown edge
+        assert!(dg.remove_vertex(999).is_err()); // unknown vertex
+        assert_eq!(dg.version(), v2, "failed ops must not bump");
+        let (_, build) = cache.get(&dg, None, 1);
+        assert_eq!(build, SnapshotBuild::CacheHit, "failed ops keep the cache");
+
+        dg.remove_edge(u, v).unwrap();
+        assert!(dg.version() > v2, "remove_edge");
+        assert_invalidated(&mut cache, &dg, "remove_edge");
+
+        let v3 = dg.version();
+        dg.remove_vertex(u).unwrap();
+        assert!(dg.version() > v3, "remove_vertex");
+        assert_invalidated(&mut cache, &dg, "remove_vertex");
     });
 }
 
