@@ -68,10 +68,13 @@ fn main() {
     let csr = graph.snapshot();
     let exact_runner = PageRank::new(cfg);
     let full = exact_runner.run(&csr);
-    // hot set: the 1500 highest-degree vertices (a realistic K shape)
+    // hot set: the 1500 highest-degree vertices (a realistic K shape);
+    // tiers must be index-sorted (HotSet's invariant), so re-sort after
+    // the degree-based selection.
     let mut by_deg: Vec<u32> = (0..graph.num_vertices() as u32).collect();
     by_deg.sort_by_key(|&v| std::cmp::Reverse(graph.degree(v)));
-    let k_set: Vec<u32> = by_deg[..1500].to_vec();
+    let mut k_set: Vec<u32> = by_deg[..1500].to_vec();
+    k_set.sort_unstable();
     let mut hot = vec![false; graph.num_vertices()];
     for &v in &k_set {
         hot[v as usize] = true;

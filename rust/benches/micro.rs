@@ -1,9 +1,10 @@
 //! `cargo bench --bench micro` — hot-path micro-benchmarks (§Perf):
 //! exact PageRank iteration, snapshot pipeline (serial / parallel /
-//! cached / incremental), hot-set selection, summary construction,
-//! densification, sparse summarized run, XLA execute round-trip, RBO,
-//! top-k. Results feed EXPERIMENTS.md §Perf and the CI `bench` job's
-//! `BENCH_2.json` perf-trajectory artifact (results/micro_bench.json).
+//! cached / incremental), hot-set selection and summary construction
+//! (serial vs sharded, scratch-recycling), densification, sparse
+//! summarized run, XLA execute round-trip, RBO, top-k. Results feed
+//! EXPERIMENTS.md §Perf and the CI `bench` job's `BENCH_3.json`
+//! perf-trajectory artifact (results/micro_bench.json).
 
 use std::collections::HashMap;
 
@@ -19,8 +20,9 @@ use veilgraph::pagerank::summarized::run_summarized;
 use veilgraph::runtime::artifact::Variant;
 use veilgraph::runtime::client::XlaRuntime;
 use veilgraph::summary::bigvertex::SummaryGraph;
-use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
+use veilgraph::summary::hot::{compute_hot_set, compute_hot_set_pooled, HotSet, HotSetInputs};
 use veilgraph::summary::params::SummaryParams;
+use veilgraph::summary::scratch::SummaryScratch;
 use veilgraph::util::json::Json;
 use veilgraph::util::rng::Xoshiro256pp;
 use veilgraph::util::threadpool::ThreadPool;
@@ -142,10 +144,58 @@ fn main() {
         hot.k_n.len(),
         hot.k_delta.len()
     );
-    b.bench("hot_set_800_touched", || compute_hot_set(&inputs, &params));
+    let hot_serial_t =
+        b.bench("hot_set_800_touched", || compute_hot_set(&inputs, &params)).median_secs();
+    // Sharded + scratch-recycling twin: one long-lived workspace, zero
+    // O(|V|) allocations per call after the first (the engine shape).
+    let mut scratch = SummaryScratch::new();
+    let mut hot_speedup_at_4 = 0.0f64;
+    for shards in [2usize, 4, 8] {
+        let name = format!("hot_set_800_touched_par{shards}");
+        let t = b
+            .bench(&name, || {
+                let hs =
+                    compute_hot_set_pooled(&inputs, &params, &mut scratch, Some(&pool), shards);
+                let k = hs.len();
+                scratch.recycle_hot(hs);
+                k
+            })
+            .median_secs();
+        let speedup = hot_serial_t / t;
+        if shards == 4 {
+            hot_speedup_at_4 = speedup;
+        }
+        println!("  ({name}: {speedup:.2}x vs serial)");
+    }
+    println!("  (hot-set speedup at 4 shards: {hot_speedup_at_4:.2}x)\n");
 
     // -- summary build + executors --------------------------------------
-    b.bench("summary_build", || SummaryGraph::build(&graph, &hot, &full.ranks, 1.0));
+    let sb_serial_t = b
+        .bench("summary_build", || SummaryGraph::build(&graph, &hot, &full.ranks, 1.0))
+        .median_secs();
+    let mut sb_speedup_at_4 = 0.0f64;
+    for shards in [2usize, 4, 8] {
+        let name = format!("summary_build_par{shards}");
+        let t = b
+            .bench(&name, || {
+                SummaryGraph::build_pooled(
+                    &graph,
+                    &hot,
+                    &full.ranks,
+                    1.0,
+                    &mut scratch,
+                    Some(&pool),
+                    shards,
+                )
+            })
+            .median_secs();
+        let speedup = sb_serial_t / t;
+        if shards == 4 {
+            sb_speedup_at_4 = speedup;
+        }
+        println!("  ({name}: {speedup:.2}x vs serial)");
+    }
+    println!("  (summary-build speedup at 4 shards: {sb_speedup_at_4:.2}x)\n");
     let summary = SummaryGraph::build(&graph, &hot, &full.ranks, 1.0);
     println!(
         "  (summary: |K|={} |E_K|={} |E_B|={})\n",
@@ -220,7 +270,7 @@ fn main() {
     println!("CSV written to results/micro_bench.csv");
 
     // Machine-readable perf trajectory — the CI bench job uploads this
-    // as BENCH_2.json so speedups are tracked across PRs.
+    // as BENCH_3.json so speedups are tracked across PRs.
     let mut benches = std::collections::BTreeMap::new();
     for r in b.results() {
         benches.insert(
@@ -247,6 +297,8 @@ fn main() {
             Json::obj(vec![
                 ("pagerank_10iter_par4_vs_serial", Json::Num(speedup_at_4)),
                 ("snapshot_par4_vs_serial", Json::Num(snap_speedup_at_4)),
+                ("hot_set_par4_vs_serial", Json::Num(hot_speedup_at_4)),
+                ("summary_build_par4_vs_serial", Json::Num(sb_speedup_at_4)),
             ]),
         ),
         ("benches", Json::Obj(benches)),

@@ -33,15 +33,33 @@ use crate::graph::VertexId;
 use crate::metrics::ranking::top_k_ids;
 use crate::metrics::registry::MetricsRegistry;
 use crate::pagerank::power::{PageRank, PageRankConfig};
-use crate::pagerank::summarized::merge_ranks;
+use crate::pagerank::summarized::merge_ranks_into;
 use crate::runtime::executor::SummarizedExecutor;
 use crate::stream::buffer::UpdateBuffer;
 use crate::stream::event::{EdgeOp, UpdateEvent};
 use crate::summary::bigvertex::SummaryGraph;
-use crate::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
+use crate::summary::hot::{compute_hot_set_pooled, HotSetInputs};
 use crate::summary::params::SummaryParams;
+use crate::summary::scratch::{ScratchStats, SummaryScratch};
 use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
+
+/// Summary-pipeline counters (see [`Engine::summary_stats`]) — the
+/// summarized twin of [`SnapshotStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SummaryStats {
+    /// Summarized builds served (hot-set selection + summary construction).
+    pub builds: u64,
+    /// |K| of the most recent build.
+    pub last_hot_vertices: usize,
+    /// |E_K| of the most recent build.
+    pub last_internal_edges: usize,
+    /// |E_B| of the most recent build.
+    pub last_boundary_edges: usize,
+    /// Scratch growth/reuse counters — steady-state queries on a
+    /// same-size graph must only ever bump `reused`.
+    pub scratch: ScratchStats,
+}
 
 /// A served query: the ranking plus execution metadata.
 #[derive(Clone, Debug)]
@@ -235,6 +253,8 @@ impl EngineBuilder {
             executor,
             pool,
             snapshot: SnapshotCache::new(),
+            scratch: SummaryScratch::new(),
+            summary_totals: SummaryStats::default(),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
             ranks: ckpt.ranks,
@@ -269,6 +289,8 @@ impl EngineBuilder {
             executor,
             pool,
             snapshot: SnapshotCache::new(),
+            scratch: SummaryScratch::new(),
+            summary_totals: SummaryStats::default(),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
             ranks: Vec::new(),
@@ -301,6 +323,14 @@ pub struct Engine {
     /// [`crate::graph::snapshot`]): repeat queries on an unchanged graph
     /// skip the freeze step entirely.
     snapshot: SnapshotCache,
+    /// Reusable workspace for the summarized pipeline: hot bitmap, BFS
+    /// visit state and the epoch-stamped dense→local / inverse-degree
+    /// maps. After the first summarized query the pipeline performs no
+    /// O(|V|) allocations on a same-size graph (see
+    /// [`Engine::summary_stats`]).
+    scratch: SummaryScratch,
+    /// Cumulative summary-pipeline counters (builds + last sizes).
+    summary_totals: SummaryStats,
     udf: Box<dyn UdfSuite>,
     metrics: MetricsRegistry,
     /// Current full rank vector (dense index order).
@@ -382,7 +412,7 @@ impl Engine {
                 self.queries_since_exact += 1;
             }
             Action::ComputeApproximate => {
-                let (summary, hot) = self.build_summary();
+                let summary = self.build_summary();
                 exec.summary_vertices = summary.num_vertices();
                 exec.summary_edges = summary.num_edges();
                 if summary.num_vertices() > 0 {
@@ -391,13 +421,13 @@ impl Engine {
                         self.executor.execute_pooled(&summary, &self.pr_config, pool)?;
                     exec.backend = Some(backend);
                     exec.iterations = res.iterations;
-                    self.extend_ranks_for_new_vertices();
+                    let sw_merge = Stopwatch::start();
                     let default = self.pr_config.init_rank(self.graph.num_vertices());
-                    self.ranks = merge_ranks(&self.ranks, &summary, &res.ranks, default);
+                    merge_ranks_into(&mut self.ranks, &summary, &res.ranks, default);
+                    self.metrics.time("summary_merge_secs", sw_merge.secs());
                 } else {
                     self.extend_ranks_for_new_vertices();
                 }
-                let _ = hot;
                 self.carry_prev_degree.clear();
                 self.carry_new_vertices.clear();
                 self.queries_since_exact += 1;
@@ -493,18 +523,49 @@ impl Engine {
         res.iterations
     }
 
-    /// Build the hot set + summary graph for the current carry state.
-    fn build_summary(&self) -> (SummaryGraph, HotSet) {
+    /// Build the hot set + summary graph for the current carry state —
+    /// both stages sharded over the engine pool and drawing all O(|V|)
+    /// working state from the engine's [`SummaryScratch`]. The hot
+    /// bitmap is recycled before returning; stage timings and |K| /
+    /// |E_K| / |E_B| gauges land in the metrics registry.
+    fn build_summary(&mut self) -> SummaryGraph {
+        let shards = match self.pool.as_deref() {
+            Some(pool) => self.pr_config.effective_shards(pool),
+            None => 1,
+        };
+        let pool = self.pool.as_deref();
+        let sw = Stopwatch::start();
         let inputs = HotSetInputs {
             graph: &self.graph,
             prev_degree: &self.carry_prev_degree,
             new_vertices: &self.carry_new_vertices,
             prev_ranks: &self.ranks,
         };
-        let hot = compute_hot_set(&inputs, &self.params);
+        let hot = compute_hot_set_pooled(&inputs, &self.params, &mut self.scratch, pool, shards);
+        let hot_secs = sw.secs();
+        let sw = Stopwatch::start();
         let default = self.pr_config.init_rank(self.graph.num_vertices());
-        let summary = SummaryGraph::build(&self.graph, &hot, &self.ranks, default);
-        (summary, hot)
+        let summary = SummaryGraph::build_pooled(
+            &self.graph,
+            &hot,
+            &self.ranks,
+            default,
+            &mut self.scratch,
+            pool,
+            shards,
+        );
+        let build_secs = sw.secs();
+        self.scratch.recycle_hot(hot);
+        self.metrics.time("summary_hot_set_secs", hot_secs);
+        self.metrics.time("summary_build_secs", build_secs);
+        self.metrics.set("last_hot_set_size", summary.num_vertices() as f64);
+        self.metrics.set("last_summary_internal_edges", summary.num_internal_edges() as f64);
+        self.metrics.set("last_summary_boundary_edges", summary.num_boundary_edges as f64);
+        self.summary_totals.builds += 1;
+        self.summary_totals.last_hot_vertices = summary.num_vertices();
+        self.summary_totals.last_internal_edges = summary.num_internal_edges();
+        self.summary_totals.last_boundary_edges = summary.num_boundary_edges;
+        summary
     }
 
     /// Grow the rank vector with teleport-level defaults when the graph
@@ -547,6 +608,13 @@ impl Engine {
     /// Snapshot-pipeline counters (hits / incremental / full builds).
     pub fn snapshot_stats(&self) -> SnapshotStats {
         self.snapshot.stats()
+    }
+
+    /// Summary-pipeline counters: builds served, the last build's |K| /
+    /// |E_K| / |E_B|, and the scratch growth/reuse evidence that
+    /// steady-state summarized queries allocate nothing O(|V|)-sized.
+    pub fn summary_stats(&self) -> SummaryStats {
+        SummaryStats { scratch: self.scratch.stats(), ..self.summary_totals }
     }
 
     /// Number of queries served.
@@ -850,6 +918,63 @@ mod tests {
         assert_eq!((s.full, s.incremental, s.hits), (1, 1, 2));
         assert_eq!(e.metrics().counter("snapshot_builds_incremental"), 1);
         assert_eq!(e.metrics().counter("snapshot_builds_full"), 1);
+    }
+
+    #[test]
+    fn summary_metrics_and_stats_surface() {
+        let mut e = EngineBuilder::new()
+            .params(SummaryParams::new(0.1, 1, 9.0))
+            .build_from_edges(ring(12))
+            .unwrap();
+        assert_eq!(e.summary_stats().builds, 0, "initial exact run builds no summary");
+        e.ingest(EdgeOp::add(0, 6));
+        let r = e.query().unwrap();
+        assert_eq!(r.action, Action::ComputeApproximate);
+        assert!(r.exec.summary_vertices > 0);
+        let s = e.summary_stats();
+        assert_eq!(s.builds, 1);
+        assert_eq!(s.last_hot_vertices, r.exec.summary_vertices);
+        assert_eq!(s.last_internal_edges + s.last_boundary_edges, r.exec.summary_edges);
+        assert!(e.metrics().timing("summary_hot_set_secs").is_some());
+        assert!(e.metrics().timing("summary_build_secs").is_some());
+        assert!(e.metrics().timing("summary_merge_secs").is_some());
+        assert_eq!(e.metrics().gauge("last_hot_set_size"), Some(s.last_hot_vertices as f64));
+        assert_eq!(
+            e.metrics().gauge("last_summary_internal_edges"),
+            Some(s.last_internal_edges as f64)
+        );
+        assert_eq!(
+            e.metrics().gauge("last_summary_boundary_edges"),
+            Some(s.last_boundary_edges as f64)
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_is_allocation_free_after_first_summarized_query() {
+        let mut e = EngineBuilder::new()
+            .params(SummaryParams::new(0.1, 1, 0.5))
+            .build_from_edges(ring(16))
+            .unwrap();
+        // Query 1 with updates among EXISTING vertices sizes the scratch.
+        e.ingest(EdgeOp::add(0, 8));
+        let _ = e.query().unwrap();
+        let after_first = e.summary_stats().scratch;
+        assert!(after_first.grown > 0, "first query must size the scratch");
+        // Steady state: more mutations + queries over the same vertex
+        // set reuse every buffer — `grown` must not move.
+        for i in 0..4u64 {
+            e.ingest(EdgeOp::add(i + 1, (i + 9) % 16));
+            let _ = e.query().unwrap();
+        }
+        // A query on an unchanged graph (empty hot set) reuses too.
+        let _ = e.query().unwrap();
+        let s = e.summary_stats().scratch;
+        assert_eq!(s.grown, after_first.grown, "steady state must not allocate");
+        assert!(s.reused > after_first.reused);
+        // New vertices grow the graph — and only then may the scratch grow.
+        e.ingest(EdgeOp::add(100, 0));
+        let _ = e.query().unwrap();
+        assert!(e.summary_stats().scratch.grown > after_first.grown);
     }
 
     #[test]

@@ -5,11 +5,28 @@
 //! Both reduce to a multi-source BFS with per-frontier-vertex depth
 //! budgets, implemented here over the [`DynamicGraph`] adjacency (both
 //! edge directions — update locality propagates along either).
+//!
+//! Each walk has two implementations sharing one semantics: the original
+//! queue-based serial loop ([`bfs_multi`]/[`bfs_budgeted`]) and a
+//! level-synchronous pooled twin ([`bfs_multi_pooled`]/
+//! [`bfs_budgeted_pooled`]) that shards each frontier across the
+//! engine's [`ThreadPool`] and reuses a caller-owned [`BfsScratch`]
+//! instead of allocating O(|V|) visit state per call. The pooled twins
+//! reach exactly the serial vertex set at exactly the serial depths for
+//! every shard count: level barriers make the claimed *set* per level
+//! schedule-independent, and a per-level sort makes the *order* so.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
 
+use crate::graph::csr::balanced_cuts;
 use crate::graph::dynamic::DynamicGraph;
 use crate::graph::VertexIdx;
+use crate::util::threadpool::ThreadPool;
+
+/// Below this frontier size a level is expanded inline — dispatch
+/// overhead would swamp the per-vertex work.
+const MIN_PARALLEL_FRONTIER: usize = 256;
 
 /// Which adjacency to walk during expansion.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -116,6 +133,251 @@ pub fn bfs_budgeted(
     out
 }
 
+/// Reusable visit state for the pooled BFS twins.
+///
+/// `depth[v] == u32::MAX` ⇔ unreached ([`bfs_multi_pooled`]);
+/// `remaining[v] == 0` ⇔ untouched ([`bfs_budgeted_pooled`]). Both
+/// arrays are restored by a *dirty-list* walk over the (small) reached
+/// set when a traversal returns, so a recycled scratch costs O(|reached|)
+/// per call instead of an O(|V|) allocation + clear.
+#[derive(Debug, Default)]
+pub struct BfsScratch {
+    depth: Vec<AtomicU32>,
+    remaining: Vec<AtomicU32>,
+}
+
+impl BfsScratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow both arrays to cover `n` vertices (never shrinks); returns
+    /// whether any allocation happened.
+    pub fn ensure(&mut self, n: usize) -> bool {
+        let grew = self.depth.len() < n;
+        if grew {
+            self.depth.resize_with(n, || AtomicU32::new(u32::MAX));
+            self.remaining.resize_with(n, || AtomicU32::new(0));
+        }
+        grew
+    }
+}
+
+/// How many neighbors `v` exposes in direction `dir` (shard weight for
+/// frontier balancing).
+fn neighbor_count(g: &DynamicGraph, v: VertexIdx, dir: Direction) -> usize {
+    match dir {
+        Direction::Out => g.out_degree(v),
+        Direction::In => g.in_degree(v),
+        Direction::Both => g.degree(v),
+    }
+}
+
+/// Degree-balanced cut points over a frontier (the expansion work per
+/// frontier vertex is its neighbor count, not 1).
+fn frontier_cuts(g: &DynamicGraph, front: &[VertexIdx], dir: Direction, k: usize) -> Vec<usize> {
+    balanced_cuts(front.len(), k, |i| neighbor_count(g, front[i], dir) as u64)
+}
+
+/// Claim every unreached neighbor of `frontier` at depth `d`, returning
+/// the new frontier sorted by vertex index. Claims go through a CAS on
+/// the shared depth array: the level barrier makes the claimed set
+/// schedule-independent (a vertex is claimed at level `d` iff it was
+/// unreached after level `d - 1` and is adjacent to the frontier), and
+/// the sort fixes the order. Relaxed ordering suffices — CAS uniqueness
+/// does not need fences, and `scope_chunks` joins before any read.
+fn expand_level(
+    g: &DynamicGraph,
+    frontier: &[VertexIdx],
+    dir: Direction,
+    d: u32,
+    depth: &[AtomicU32],
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) -> Vec<VertexIdx> {
+    let claim = |v: VertexIdx, out: &mut Vec<VertexIdx>| {
+        if depth[v as usize]
+            .compare_exchange(u32::MAX, d, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            out.push(v);
+        }
+    };
+    let fshards = frontier.len().div_ceil(MIN_PARALLEL_FRONTIER).clamp(1, shards.max(1));
+    let mut next = match pool {
+        Some(pool) if fshards > 1 => {
+            let cuts = frontier_cuts(g, frontier, dir, fshards);
+            let slots = pool.scope_slots(fshards, |i| {
+                let mut local = Vec::new();
+                for &v in &frontier[cuts[i]..cuts[i + 1]] {
+                    push_neighbors(g, v, dir, |w| claim(w, &mut local));
+                }
+                local
+            });
+            slots.concat()
+        }
+        _ => {
+            let mut local = Vec::new();
+            for &v in frontier {
+                push_neighbors(g, v, dir, |w| claim(w, &mut local));
+            }
+            local
+        }
+    };
+    next.sort_unstable();
+    next
+}
+
+/// Frontier-parallel twin of [`bfs_multi`]: level-synchronous expansion
+/// over `shards` degree-balanced frontier cuts dispatched on `pool`
+/// (inline when the pool is absent or a frontier is small). Reaches the
+/// identical `(vertex, depth)` set as the serial walk for every shard
+/// count; vertices are reported grouped by depth — seeds first (input
+/// order, duplicates dropped), then each level ascending by index — so
+/// the output is deterministic and shard-count-independent. Visit state
+/// lives in `scratch` and is dirty-reset before returning.
+pub fn bfs_multi_pooled(
+    g: &DynamicGraph,
+    seeds: &[VertexIdx],
+    max_depth: u32,
+    dir: Direction,
+    scratch: &mut BfsScratch,
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) -> Vec<(VertexIdx, u32)> {
+    scratch.ensure(g.num_vertices());
+    let depth = &scratch.depth;
+    let mut out: Vec<(VertexIdx, u32)> = Vec::new();
+    let mut frontier: Vec<VertexIdx> = Vec::new();
+    for &s in seeds {
+        if depth[s as usize].swap(0, Ordering::Relaxed) == u32::MAX {
+            out.push((s, 0));
+            frontier.push(s);
+        }
+    }
+    let mut d = 0u32;
+    while !frontier.is_empty() && d < max_depth {
+        let next = expand_level(g, &frontier, dir, d + 1, depth, pool, shards);
+        for &w in &next {
+            out.push((w, d + 1));
+        }
+        frontier = next;
+        d += 1;
+    }
+    for &(v, _) in &out {
+        depth[v as usize].store(u32::MAX, Ordering::Relaxed);
+    }
+    out
+}
+
+/// One budget-relaxation round: every frontier vertex re-reads its
+/// (possibly just-improved) remaining budget and `fetch_max`es `r - 1`
+/// into each neighbor. Returns `(improved, newly_touched)`: vertices
+/// whose budget rose this round (sorted + deduped — the next frontier)
+/// and vertices touched for the first time (`old == 0`, claimed exactly
+/// once globally by atomicity).
+fn relax_level(
+    g: &DynamicGraph,
+    frontier: &[VertexIdx],
+    dir: Direction,
+    remaining: &[AtomicU32],
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) -> (Vec<VertexIdx>, Vec<VertexIdx>) {
+    let relax = |v: VertexIdx, improved: &mut Vec<VertexIdx>, newly: &mut Vec<VertexIdx>| {
+        let r = remaining[v as usize].load(Ordering::Relaxed);
+        if r <= 1 {
+            return; // no budget left to expand
+        }
+        push_neighbors(g, v, dir, |w| {
+            let old = remaining[w as usize].fetch_max(r - 1, Ordering::Relaxed);
+            if old == 0 {
+                newly.push(w);
+            }
+            if old < r - 1 {
+                improved.push(w);
+            }
+        });
+    };
+    let fshards = frontier.len().div_ceil(MIN_PARALLEL_FRONTIER).clamp(1, shards.max(1));
+    let (mut improved, newly) = match pool {
+        Some(pool) if fshards > 1 => {
+            let cuts = frontier_cuts(g, frontier, dir, fshards);
+            let slots = pool.scope_slots(fshards, |i| {
+                let mut improved = Vec::new();
+                let mut newly = Vec::new();
+                for &v in &frontier[cuts[i]..cuts[i + 1]] {
+                    relax(v, &mut improved, &mut newly);
+                }
+                (improved, newly)
+            });
+            let mut improved = Vec::new();
+            let mut newly = Vec::new();
+            for (imp, tch) in slots {
+                improved.extend(imp);
+                newly.extend(tch);
+            }
+            (improved, newly)
+        }
+        _ => {
+            let mut improved = Vec::new();
+            let mut newly = Vec::new();
+            for &v in frontier {
+                relax(v, &mut improved, &mut newly);
+            }
+            (improved, newly)
+        }
+    };
+    improved.sort_unstable();
+    improved.dedup();
+    (improved, newly)
+}
+
+/// Frontier-parallel twin of [`bfs_budgeted`]: monotone best-budget
+/// relaxation in level-synchronous rounds over `pool`. The fixed point
+/// of the max-relaxation is unique regardless of schedule, so the
+/// returned vertex set — every vertex whose final remaining budget is
+/// positive, ascending by index — is **identical to the serial
+/// [`bfs_budgeted`] output** for every shard count. Touched entries are
+/// dirty-reset before returning (no O(|V|) scan: first-touch claims are
+/// collected during relaxation).
+pub fn bfs_budgeted_pooled(
+    g: &DynamicGraph,
+    seeds: &[(VertexIdx, u32)],
+    dir: Direction,
+    scratch: &mut BfsScratch,
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) -> Vec<VertexIdx> {
+    scratch.ensure(g.num_vertices());
+    let remaining = &scratch.remaining;
+    let mut touched: Vec<VertexIdx> = Vec::new();
+    let mut frontier: Vec<VertexIdx> = Vec::new();
+    for &(s, b) in seeds {
+        let r = b.saturating_add(1);
+        let old = remaining[s as usize].fetch_max(r, Ordering::Relaxed);
+        if old == 0 {
+            touched.push(s);
+        }
+        if old < r {
+            frontier.push(s);
+        }
+    }
+    frontier.sort_unstable();
+    frontier.dedup();
+    while !frontier.is_empty() {
+        let (next, newly) = relax_level(g, &frontier, dir, remaining, pool, shards);
+        touched.extend_from_slice(&newly);
+        frontier = next;
+    }
+    touched.sort_unstable();
+    for &v in &touched {
+        remaining[v as usize].store(0, Ordering::Relaxed);
+    }
+    touched
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +465,126 @@ mod tests {
         let budgeted: std::collections::BTreeSet<u32> =
             bfs_budgeted(&g, &[(0, 2), (5, 2)], Direction::Both).into_iter().collect();
         assert_eq!(uniform, budgeted);
+    }
+
+    /// A tangled graph with hubs, a chain tail and isolated vertices.
+    fn tangled() -> DynamicGraph {
+        let mut edges = Vec::new();
+        for v in 1..30u64 {
+            edges.push((0, v)); // hub out
+            if v % 3 == 0 {
+                edges.push((v, 0)); // some back-edges
+            }
+            if v + 1 < 30 && v % 4 != 0 {
+                edges.push((v, v + 1));
+            }
+        }
+        let (mut g, _) = DynamicGraph::from_edges(edges);
+        g.add_vertex(100); // isolated
+        g.add_vertex(101);
+        g
+    }
+
+    fn sorted_pairs(mut v: Vec<(VertexIdx, u32)>) -> Vec<(VertexIdx, u32)> {
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn pooled_multi_matches_serial_for_every_shard_count() {
+        let g = tangled();
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let mut scratch = BfsScratch::new();
+        for dir in [Direction::Out, Direction::In, Direction::Both] {
+            for depth in [0u32, 1, 2, 5] {
+                let seeds = [2u32, 7, 7, 19];
+                let serial = sorted_pairs(bfs_multi(&g, &seeds, depth, dir));
+                for shards in [1usize, 2, 4, 7] {
+                    let pooled = bfs_multi_pooled(
+                        &g,
+                        &seeds,
+                        depth,
+                        dir,
+                        &mut scratch,
+                        Some(&pool),
+                        shards,
+                    );
+                    assert_eq!(sorted_pairs(pooled), serial, "dir={dir:?} d={depth} k={shards}");
+                }
+                // No pool ⇒ inline path, same answer.
+                let inline = bfs_multi_pooled(&g, &seeds, depth, dir, &mut scratch, None, 1);
+                assert_eq!(sorted_pairs(inline), serial);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_multi_reports_levels_in_deterministic_order() {
+        let g = tangled();
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let mut scratch = BfsScratch::new();
+        let out = bfs_multi_pooled(&g, &[0, 5], 3, Direction::Both, &mut scratch, None, 1);
+        // Depths ascend; within a level (past the seeds) indices ascend.
+        let mut prev: Option<(u32, VertexIdx)> = None;
+        for &(v, d) in &out {
+            if let Some((pd, pv)) = prev {
+                assert!(d >= pd, "depths must be non-decreasing");
+                if d == pd && d > 0 {
+                    assert!(v > pv, "within-level order must ascend");
+                }
+            }
+            prev = Some((d, v));
+        }
+        // The exact output vector is shard-count-independent.
+        for shards in [2usize, 4, 7] {
+            let p = Some(&pool);
+            let again = bfs_multi_pooled(&g, &[0, 5], 3, Direction::Both, &mut scratch, p, shards);
+            assert_eq!(again, out, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn pooled_budgeted_matches_serial_bit_for_bit() {
+        let g = tangled();
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let mut scratch = BfsScratch::new();
+        let seeds = [(0u32, 2u32), (9, 0), (9, 4), (25, 1)];
+        for dir in [Direction::Out, Direction::In, Direction::Both] {
+            let serial = bfs_budgeted(&g, &seeds, dir);
+            for shards in [1usize, 2, 4, 7] {
+                let pooled =
+                    bfs_budgeted_pooled(&g, &seeds, dir, &mut scratch, Some(&pool), shards);
+                assert_eq!(pooled, serial, "dir={dir:?} k={shards}");
+            }
+            let inline = bfs_budgeted_pooled(&g, &seeds, dir, &mut scratch, None, 1);
+            assert_eq!(inline, serial);
+        }
+    }
+
+    #[test]
+    fn scratch_dirty_reset_makes_reuse_exact() {
+        // Back-to-back walks over ONE scratch must match fresh-scratch
+        // runs — a leaked depth/budget entry would poison the second.
+        let g = tangled();
+        let mut scratch = BfsScratch::new();
+        let a1 = bfs_multi_pooled(&g, &[0], 2, Direction::Out, &mut scratch, None, 1);
+        let b1 = bfs_budgeted_pooled(&g, &[(3, 3)], Direction::Both, &mut scratch, None, 1);
+        let a2 = bfs_multi_pooled(&g, &[0], 2, Direction::Out, &mut scratch, None, 1);
+        let b2 = bfs_budgeted_pooled(&g, &[(3, 3)], Direction::Both, &mut scratch, None, 1);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        let mut fresh = BfsScratch::new();
+        assert_eq!(a2, bfs_multi_pooled(&g, &[0], 2, Direction::Out, &mut fresh, None, 1));
+        assert_eq!(b2, bfs_budgeted_pooled(&g, &[(3, 3)], Direction::Both, &mut fresh, None, 1));
+    }
+
+    #[test]
+    fn pooled_walks_handle_empty_graph_and_empty_seeds() {
+        let g = DynamicGraph::new();
+        let mut scratch = BfsScratch::new();
+        assert!(bfs_multi_pooled(&g, &[], 3, Direction::Both, &mut scratch, None, 1).is_empty());
+        assert!(bfs_budgeted_pooled(&g, &[], Direction::Both, &mut scratch, None, 1).is_empty());
+        let g = tangled();
+        assert!(bfs_multi_pooled(&g, &[], 3, Direction::Both, &mut scratch, None, 1).is_empty());
     }
 }

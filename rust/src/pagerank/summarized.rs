@@ -115,23 +115,37 @@ pub fn run_summarized_parallel(
     SummarizedResult { ranks, iterations, last_delta }
 }
 
-/// Merge summarized ranks back into the full rank vector: hot vertices
-/// take their recomputed scores, everything else keeps its previous rank
-/// (“outside vertices are not worth recomputing” — §3). Returns the
-/// updated full vector, growing it with `(1-β)/n` defaults if the graph
-/// gained vertices since `prev`.
+/// Merge summarized ranks back into the full rank vector **in place**:
+/// hot vertices take their recomputed scores, everything else keeps its
+/// previous rank (“outside vertices are not worth recomputing” — §3).
+/// `ranks` is truncated/grown to the summary's full |V| (new vertices
+/// get the `(1-β)/n` default) and then the |K| hot entries are
+/// overwritten — no fresh |V| vector per query; the engine updates its
+/// long-lived rank vector with exactly O(|K|) writes in the steady
+/// state.
+pub fn merge_ranks_into(
+    ranks: &mut Vec<f64>,
+    s: &SummaryGraph,
+    summarized: &[f64],
+    default_rank: f64,
+) {
+    ranks.truncate(s.full_n);
+    ranks.resize(s.full_n, default_rank);
+    for (li, &v) in s.vertices.iter().enumerate() {
+        ranks[v as usize] = summarized[li];
+    }
+}
+
+/// Allocating wrapper over [`merge_ranks_into`] — returns the updated
+/// full vector, leaving `prev` untouched.
 pub fn merge_ranks(
     prev: &[f64],
     s: &SummaryGraph,
     summarized: &[f64],
     default_rank: f64,
 ) -> Vec<f64> {
-    let mut out = Vec::with_capacity(s.full_n);
-    out.extend_from_slice(&prev[..prev.len().min(s.full_n)]);
-    out.resize(s.full_n, default_rank);
-    for (li, &v) in s.vertices.iter().enumerate() {
-        out[v as usize] = summarized[li];
-    }
+    let mut out = prev.to_vec();
+    merge_ranks_into(&mut out, s, summarized, default_rank);
     out
 }
 
@@ -228,6 +242,30 @@ mod tests {
         let s = SummaryGraph::build(&g, &hs, &prev, 0.0);
         let merged = merge_ranks(&prev, &s, &[0.9], 0.1);
         assert_eq!(merged, vec![0.3, 0.9, 0.4]);
+    }
+
+    #[test]
+    fn merge_into_matches_allocating_merge() {
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1), (1, 2), (2, 0), (2, 3)]);
+        let mut hot = vec![false; 4];
+        hot[0] = true;
+        hot[2] = true;
+        let hs = HotSet { k_r: vec![0, 2], k_n: vec![], k_delta: vec![], hot };
+        let prev = vec![0.1, 0.2, 0.3, 0.4];
+        let s = SummaryGraph::build(&g, &hs, &prev, 0.0);
+        let summarized = vec![0.7, 0.9];
+        let out = merge_ranks(&prev, &s, &summarized, 0.05);
+        let mut in_place = prev.clone();
+        merge_ranks_into(&mut in_place, &s, &summarized, 0.05);
+        assert_eq!(in_place, out);
+        assert_eq!(in_place, vec![0.7, 0.2, 0.9, 0.4]);
+        // A longer-than-|V| previous vector truncates either way.
+        let long = vec![0.5; 9];
+        let out = merge_ranks(&long, &s, &summarized, 0.05);
+        let mut in_place = long.clone();
+        merge_ranks_into(&mut in_place, &s, &summarized, 0.05);
+        assert_eq!(in_place, out);
+        assert_eq!(in_place.len(), 4);
     }
 
     #[test]

@@ -15,13 +15,40 @@
 //! Edges *into* `B` are discarded entirely (the rank of `B` is
 //! irrelevant), which is what makes the summarized computation `O(|K|)`.
 
+use crate::graph::csr::balanced_cuts;
 use crate::graph::dynamic::DynamicGraph;
 use crate::graph::VertexIdx;
 use crate::summary::hot::HotSet;
+use crate::summary::scratch::SummaryScratch;
+use crate::util::threadpool::ThreadPool;
+
+/// Per-row aggregates from the counting pass of the parallel build.
+#[derive(Clone, Copy, Default)]
+struct RowAgg {
+    /// Internal (E_K) in-edges of this row.
+    internal: u32,
+    /// Boundary contribution `b_z`, accumulated in in-neighbor order.
+    b: f64,
+    /// Warm-start rank.
+    r0: f64,
+}
+
+/// `1 / d_out(w)` as f64 (0 for dangling) — the uncached twin of
+/// [`SummaryScratch::inv_out`]; both yield the same bits, so serial
+/// (memoized) and sharded (inline) builds agree exactly.
+#[inline]
+fn inv_out_of(g: &DynamicGraph, w: VertexIdx) -> f64 {
+    let d = g.out_degree(w);
+    if d == 0 {
+        0.0
+    } else {
+        1.0 / d as f64
+    }
+}
 
 /// The summarized problem, ready for either executor (sparse rust-native
 /// or dense-padded XLA).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SummaryGraph {
     /// Hot vertices in dense-graph index space, sorted; position = local
     /// index.
@@ -50,52 +77,164 @@ impl SummaryGraph {
     /// index `i`; vertices beyond its length (new vertices) warm-start at
     /// `default_rank` (the PageRank variant's init value — see
     /// [`crate::pagerank::power::PageRankConfig::init_rank`]).
+    ///
+    /// Convenience wrapper over [`Self::build_pooled`] with a throwaway
+    /// scratch and no pool; the engine calls the pooled variant with its
+    /// long-lived workspace.
     pub fn build(
         g: &DynamicGraph,
         hot: &HotSet,
         prev_ranks: &[f64],
         default_rank: f64,
     ) -> SummaryGraph {
+        let mut scratch = SummaryScratch::new();
+        Self::build_pooled(g, hot, prev_ranks, default_rank, &mut scratch, None, 1)
+    }
+
+    /// Build the summary graph, reusing `scratch` for all O(|V|) working
+    /// state and sharding the construction over `pool` when `shards > 1`.
+    ///
+    /// The parallel form is a two-pass degree-balanced build over
+    /// [`balanced_cuts`] row ranges of the hot-vertex list: pass 1 walks
+    /// each range's in-neighbors once, producing per-row internal-edge
+    /// counts, boundary sums `b_z` and warm starts; a serial O(|K|)
+    /// prefix sum turns the counts into `in_offsets`; pass 2 fills
+    /// disjoint `in_edges` slices in the same in-neighbor order the
+    /// serial path uses. Per-source inverse out-degrees are computed
+    /// once (epoch-memoized serially, inline in the shards — same bits)
+    /// instead of one division per edge, and `b_s` reduces over `b` in
+    /// local-index order. Output is bit-identical to [`Self::build`] for
+    /// every shard count.
+    pub fn build_pooled(
+        g: &DynamicGraph,
+        hot: &HotSet,
+        prev_ranks: &[f64],
+        default_rank: f64,
+        scratch: &mut SummaryScratch,
+        pool: Option<&ThreadPool>,
+        shards: usize,
+    ) -> SummaryGraph {
         let vertices = hot.all();
         let k = vertices.len();
         let full_n = g.num_vertices();
-
-        // dense graph index -> local index
-        let mut local_of = vec![u32::MAX; full_n];
+        scratch.prepare_build(full_n);
         for (li, &v) in vertices.iter().enumerate() {
-            local_of[v as usize] = li as u32;
+            scratch.set_local(v, li as u32);
         }
-
         let rank_of = |v: VertexIdx| prev_ranks.get(v as usize).copied().unwrap_or(default_rank);
+        let shards = shards.clamp(1, k.max(1));
+        match pool {
+            Some(pool) if shards > 1 => {
+                Self::fill_pooled(g, vertices, &rank_of, scratch, pool, shards, full_n)
+            }
+            _ => Self::fill_serial(g, vertices, &rank_of, scratch, full_n),
+        }
+    }
 
+    /// Single-pass serial fill (the original build shape, now reading
+    /// the scratch's epoch-stamped maps instead of a fresh |V| table).
+    fn fill_serial(
+        g: &DynamicGraph,
+        vertices: Vec<VertexIdx>,
+        rank_of: &impl Fn(VertexIdx) -> f64,
+        scratch: &mut SummaryScratch,
+        full_n: usize,
+    ) -> SummaryGraph {
+        let k = vertices.len();
         let mut in_offsets = Vec::with_capacity(k + 1);
         in_offsets.push(0u32);
         let mut in_edges: Vec<(u32, f32)> = Vec::new();
         let mut b = vec![0.0f64; k];
         let mut r0 = Vec::with_capacity(k);
         let mut num_boundary_edges = 0usize;
-        let mut b_s = 0.0f64;
-
         for (li, &z) in vertices.iter().enumerate() {
             r0.push(rank_of(z));
             for &w in g.in_neighbors(z) {
-                let d_out = g.out_degree(w);
-                debug_assert!(d_out > 0, "in-neighbor must have an out-edge");
-                let wl = local_of[w as usize];
-                if wl != u32::MAX {
-                    // internal edge (E_K): weight 1/d_out in the FULL graph
-                    in_edges.push((wl, 1.0 / d_out as f32));
-                } else {
-                    // boundary edge (E_B): frozen contribution of w
-                    let val = rank_of(w) / d_out as f64;
-                    b[li] += val;
-                    b_s += val;
-                    num_boundary_edges += 1;
+                debug_assert!(g.out_degree(w) > 0, "in-neighbor must have an out-edge");
+                match scratch.local_get(w) {
+                    Some(wl) => {
+                        // internal edge (E_K): weight 1/d_out in the FULL graph
+                        in_edges.push((wl, scratch.inv_out(g, w) as f32));
+                    }
+                    None => {
+                        // boundary edge (E_B): frozen contribution of w
+                        b[li] += rank_of(w) * scratch.inv_out(g, w);
+                        num_boundary_edges += 1;
+                    }
                 }
             }
             in_offsets.push(in_edges.len() as u32);
         }
+        let b_s: f64 = b.iter().sum();
+        SummaryGraph { vertices, in_offsets, in_edges, b, r0, num_boundary_edges, b_s, full_n }
+    }
 
+    /// Two-pass sharded fill (see [`Self::build_pooled`]).
+    fn fill_pooled(
+        g: &DynamicGraph,
+        vertices: Vec<VertexIdx>,
+        rank_of: &(impl Fn(VertexIdx) -> f64 + Sync),
+        scratch: &mut SummaryScratch,
+        pool: &ThreadPool,
+        shards: usize,
+        full_n: usize,
+    ) -> SummaryGraph {
+        let k = vertices.len();
+        let cuts = balanced_cuts(k, shards, |li| g.in_degree(vertices[li]) as u64);
+        let local = scratch.local_view();
+        let vertices_ref = &vertices;
+
+        // Pass 1: per-row aggregates over disjoint row ranges.
+        let mut rows: Vec<RowAgg> = vec![RowAgg::default(); k];
+        let cuts_ref = &cuts;
+        let boundary_counts = pool.scope_chunks(&mut rows, &cuts, |i, chunk| {
+            let lo = cuts_ref[i];
+            let mut boundary = 0usize;
+            for (off, row) in chunk.iter_mut().enumerate() {
+                let z = vertices_ref[lo + off];
+                row.r0 = rank_of(z);
+                for &w in g.in_neighbors(z) {
+                    debug_assert!(g.out_degree(w) > 0, "in-neighbor must have an out-edge");
+                    if local.get(w).is_some() {
+                        row.internal += 1;
+                    } else {
+                        row.b += rank_of(w) * inv_out_of(g, w);
+                        boundary += 1;
+                    }
+                }
+            }
+            boundary
+        });
+        let num_boundary_edges: usize = boundary_counts.iter().sum();
+
+        // Serial O(|K|) prefix sum of the internal-edge counts.
+        let mut in_offsets = Vec::with_capacity(k + 1);
+        in_offsets.push(0u32);
+        for row in &rows {
+            in_offsets.push(in_offsets.last().unwrap() + row.internal);
+        }
+        let total = *in_offsets.last().unwrap() as usize;
+
+        // Pass 2: each range owns a disjoint in_edges slice; rows fill in
+        // in-neighbor order — the serial order.
+        let mut in_edges: Vec<(u32, f32)> = vec![(0, 0.0); total];
+        let ecuts: Vec<usize> = cuts.iter().map(|&r| in_offsets[r] as usize).collect();
+        pool.scope_chunks(&mut in_edges, &ecuts, |i, chunk| {
+            let mut cursor = 0usize;
+            for &z in &vertices_ref[cuts_ref[i]..cuts_ref[i + 1]] {
+                for &w in g.in_neighbors(z) {
+                    if let Some(wl) = local.get(w) {
+                        chunk[cursor] = (wl, inv_out_of(g, w) as f32);
+                        cursor += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(cursor, chunk.len(), "fill must cover its slice exactly");
+        });
+
+        let b: Vec<f64> = rows.iter().map(|r| r.b).collect();
+        let r0: Vec<f64> = rows.iter().map(|r| r.r0).collect();
+        let b_s: f64 = b.iter().sum();
         SummaryGraph { vertices, in_offsets, in_edges, b, r0, num_boundary_edges, b_s, full_n }
     }
 

@@ -21,18 +21,35 @@
 //!    from v until the contribution drops below 10% of its score”) and
 //!    the reference implementation's breadth-first expansion. Budgets are
 //!    clamped to [`MAX_DELTA_RADIUS`] to bound worst-case work.
+//!
+//! [`compute_hot_set_pooled`] is the engine's entry point: every stage
+//! shards over the engine's pool and borrows its O(|V|) working state
+//! from a reusable [`SummaryScratch`]; [`compute_hot_set`] is the
+//! serial, self-contained wrapper with identical output.
 
 use std::collections::HashMap;
 
 use crate::graph::dynamic::DynamicGraph;
-use crate::graph::traversal::{bfs_budgeted, bfs_multi, Direction};
+use crate::graph::traversal::{bfs_budgeted_pooled, bfs_multi_pooled, Direction};
 use crate::graph::{VertexId, VertexIdx};
 use crate::summary::params::SummaryParams;
+use crate::summary::scratch::SummaryScratch;
+use crate::util::threadpool::ThreadPool;
 
 /// Safety clamp on the per-vertex Δ-expansion radius.
 pub const MAX_DELTA_RADIUS: u32 = 8;
 
+/// Below this many touched vertices the `K_r` scan runs inline — the
+/// per-entry predicate is two loads and a compare.
+const MIN_PARALLEL_KR: usize = 1024;
+
 /// The selected hot set with per-tier membership (for figures/ablation).
+///
+/// Invariant: every tier is ascending by dense index and the tiers are
+/// mutually disjoint — the shape [`compute_hot_set`] produces.
+/// Hand-built instances should sort their tiers so [`HotSet::all`]
+/// stays a linear merge (unsorted tiers still merge correctly via its
+/// fallback sort, at the old O(|K| log |K|) cost).
 #[derive(Clone, Debug, Default)]
 pub struct HotSet {
     /// Vertices from the update-ratio threshold (Eq. 2).
@@ -46,12 +63,39 @@ pub struct HotSet {
 }
 
 impl HotSet {
-    /// All hot vertices (`K`), sorted.
+    /// All hot vertices (`K`), sorted ascending. The tiers are each
+    /// sorted and mutually disjoint (the shape [`compute_hot_set`]
+    /// produces), so the union is a linear three-way merge — no
+    /// re-collect-and-sort on the once-per-build call path.
     pub fn all(&self) -> Vec<VertexIdx> {
-        let mut v: Vec<VertexIdx> =
-            self.k_r.iter().chain(&self.k_n).chain(&self.k_delta).copied().collect();
-        v.sort_unstable();
-        v
+        let mut out = Vec::with_capacity(self.len());
+        let (mut a, mut b, mut c) = (0usize, 0usize, 0usize);
+        loop {
+            let x = self.k_r.get(a);
+            let y = self.k_n.get(b);
+            let z = self.k_delta.get(c);
+            let m = match [x, y, z].into_iter().flatten().min() {
+                Some(&m) => m,
+                None => break,
+            };
+            if x == Some(&m) {
+                a += 1;
+            } else if y == Some(&m) {
+                b += 1;
+            } else {
+                c += 1;
+            }
+            out.push(m);
+        }
+        // Each merge step consumes exactly one tier element and pushes
+        // it, so `out` is always a permutation of the tiers' union even
+        // if a hand-built HotSet violated the sortedness invariant —
+        // one O(|K|) check (plus a fallback sort only on violation)
+        // keeps the old sort-always contract in release builds.
+        if !out.windows(2).all(|w| w[0] <= w[1]) {
+            out.sort_unstable();
+        }
+        out
     }
 
     /// |K|.
@@ -106,27 +150,101 @@ pub fn delta_radius(params: &SummaryParams, mean_deg: f64, score: f64, degree: u
 }
 
 /// Compute `K = K_r ∪ K_n ∪ K_Δ` for one measurement point.
+///
+/// Convenience wrapper over [`compute_hot_set_pooled`] with a throwaway
+/// scratch and no pool — the output is identical to the pooled variant
+/// at every shard count.
 pub fn compute_hot_set(inputs: &HotSetInputs<'_>, params: &SummaryParams) -> HotSet {
+    let mut scratch = SummaryScratch::new();
+    compute_hot_set_pooled(inputs, params, &mut scratch, None, 1)
+}
+
+/// Eq. 2 candidates from the degree baseline. The per-entry predicate is
+/// pure, so large touched sets shard across the pool; the returned set
+/// is schedule-independent (order is not — callers sort).
+fn kr_candidates(
+    g: &DynamicGraph,
+    prev_degree: &HashMap<VertexId, usize>,
+    params: &SummaryParams,
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) -> Vec<VertexIdx> {
+    let crossed = |idx: VertexIdx, d_prev: usize| -> bool {
+        let d_now = g.degree(idx);
+        if d_prev == 0 {
+            // Degree was zero: any growth is an infinite ratio.
+            d_now > 0
+        } else {
+            let ratio = d_now as f64 / d_prev as f64;
+            (ratio - 1.0).abs() > params.r
+        }
+    };
+    match pool {
+        Some(pool) if shards > 1 && prev_degree.len() >= MIN_PARALLEL_KR => {
+            let entries: Vec<(VertexIdx, usize)> = prev_degree
+                .iter()
+                .filter_map(|(&id, &d)| g.index(id).map(|idx| (idx, d)))
+                .collect();
+            if entries.is_empty() {
+                // Every touched id has left the graph — nothing to scan.
+                return Vec::new();
+            }
+            let k = shards.min(entries.len());
+            let ecuts: Vec<usize> = (0..=k).map(|i| i * entries.len() / k).collect();
+            let slots = pool.scope_slots(k, |i| {
+                let mut out = Vec::new();
+                for &(idx, d_prev) in &entries[ecuts[i]..ecuts[i + 1]] {
+                    if crossed(idx, d_prev) {
+                        out.push(idx);
+                    }
+                }
+                out
+            });
+            slots.concat()
+        }
+        _ => {
+            let mut out = Vec::new();
+            for (&id, &d_prev) in prev_degree {
+                if let Some(idx) = g.index(id) {
+                    if crossed(idx, d_prev) {
+                        out.push(idx);
+                    }
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Pooled twin of [`compute_hot_set`]: the `K_r` scan, the `K_n` uniform
+/// expansion and the `K_Δ` budgeted expansion all shard across `pool`
+/// (`shards` many cuts; serial when the pool is absent or `shards <= 1`),
+/// and all O(|V|) working state — the hot bitmap and the BFS visit
+/// arrays — comes from `scratch` instead of fresh allocations. The
+/// result is bit-identical to the serial wrapper for every shard count:
+/// tier membership is schedule-independent (level-synchronous claims,
+/// monotone budget relaxation, a pure `K_r` predicate) and every tier is
+/// sorted. Recycle the result's bitmap with
+/// [`SummaryScratch::recycle_hot`] once the query is served.
+pub fn compute_hot_set_pooled(
+    inputs: &HotSetInputs<'_>,
+    params: &SummaryParams,
+    scratch: &mut SummaryScratch,
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) -> HotSet {
     let g = inputs.graph;
     let nv = g.num_vertices();
-    let mut hot = vec![false; nv];
+    let shards = shards.max(1);
+    scratch.prepare_traversal(nv);
+    let mut hot = scratch.take_hot(nv);
 
     // ---- Eq. 2: K_r --------------------------------------------------
     let mut k_r: Vec<VertexIdx> = Vec::new();
-    for (&id, &d_prev) in inputs.prev_degree {
-        if let Some(idx) = g.index(id) {
-            let d_now = g.degree(idx);
-            let include = if d_prev == 0 {
-                // Degree was zero: any growth is an infinite ratio.
-                d_now > 0
-            } else {
-                let ratio = d_now as f64 / d_prev as f64;
-                (ratio - 1.0).abs() > params.r
-            };
-            if include && !hot[idx as usize] {
-                hot[idx as usize] = true;
-                k_r.push(idx);
-            }
+    for idx in kr_candidates(g, inputs.prev_degree, params, pool, shards) {
+        if !hot[idx as usize] {
+            hot[idx as usize] = true;
+            k_r.push(idx);
         }
     }
     for &id in inputs.new_vertices {
@@ -142,7 +260,9 @@ pub fn compute_hot_set(inputs: &HotSetInputs<'_>, params: &SummaryParams) -> Hot
     // ---- Eq. 3: K_n --------------------------------------------------
     let mut k_n: Vec<VertexIdx> = Vec::new();
     if params.n > 0 && !k_r.is_empty() {
-        for (v, depth) in bfs_multi(g, &k_r, params.n, Direction::Both) {
+        let reached =
+            bfs_multi_pooled(g, &k_r, params.n, Direction::Both, scratch.bfs_mut(), pool, shards);
+        for (v, depth) in reached {
             if depth > 0 && !hot[v as usize] {
                 hot[v as usize] = true;
                 k_n.push(v);
@@ -164,12 +284,16 @@ pub fn compute_hot_set(inputs: &HotSetInputs<'_>, params: &SummaryParams) -> Hot
     }
     let mut k_delta: Vec<VertexIdx> = Vec::new();
     if !seeds.is_empty() {
-        for v in bfs_budgeted(g, &seeds, Direction::Both) {
+        let reached =
+            bfs_budgeted_pooled(g, &seeds, Direction::Both, scratch.bfs_mut(), pool, shards);
+        for v in reached {
             if !hot[v as usize] {
                 hot[v as usize] = true;
                 k_delta.push(v);
             }
         }
+        // Already ascending (the budgeted walk reports sorted indices);
+        // kept as a sort for belt-and-suspenders parity with the tiers.
         k_delta.sort_unstable();
     }
 
@@ -286,6 +410,16 @@ mod tests {
         let all = hs.all();
         let set: std::collections::HashSet<_> = all.iter().collect();
         assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn all_merges_sorted_tiers_and_tolerates_unsorted_ones() {
+        let hs = HotSet { k_r: vec![0, 4], k_n: vec![2], k_delta: vec![1, 5], hot: vec![] };
+        assert_eq!(hs.all(), vec![0, 1, 2, 4, 5]);
+        // Hand-built tiers that violate the sortedness invariant fall
+        // back to the old sort-always behavior instead of mis-merging.
+        let unsorted = HotSet { k_r: vec![5, 2], k_n: vec![], k_delta: vec![4, 0], hot: vec![] };
+        assert_eq!(unsorted.all(), vec![0, 2, 4, 5]);
     }
 
     #[test]

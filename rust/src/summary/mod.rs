@@ -1,6 +1,9 @@
 //! The paper's core contribution: hot-vertex selection `(r, n, Δ)` and
-//! big-vertex summary-graph construction.
+//! big-vertex summary-graph construction, plus the engine-owned
+//! [`scratch::SummaryScratch`] workspace that keeps the whole summarized
+//! pipeline free of per-query O(|V|) allocations.
 
 pub mod bigvertex;
 pub mod hot;
 pub mod params;
+pub mod scratch;

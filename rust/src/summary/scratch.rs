@@ -1,0 +1,258 @@
+//! Reusable workspace for the summarized-query pipeline.
+//!
+//! Every stage of the summarized path used to allocate (and clear)
+//! O(|V|)-sized scratch per query: the hot-membership bitmap, the BFS
+//! depth/budget arrays, and the dense→local index map. The engine now
+//! owns ONE [`SummaryScratch`] and reuses it across queries, three
+//! mechanisms keeping the steady state free of O(|V|) work:
+//!
+//! * **Epoch stamping** — the `local_of` and `inv_out` maps pair every
+//!   entry with the epoch that wrote it; bumping the epoch invalidates
+//!   all entries in O(1) instead of an O(|V|) clear.
+//! * **Dirty-list resets** — the BFS arrays ([`BfsScratch`]) are
+//!   restored by walking the (small) reached set, not the whole array.
+//! * **Bitmap recycling** — the hot bitmap returns to the scratch after
+//!   each query and is scrubbed via the tier lists (O(|K|)).
+//!
+//! [`SummaryScratch::stats`] counts growth vs pure-reuse acquisitions so
+//! tests and the engine's metrics can assert that a steady-state
+//! summarized query allocates nothing proportional to |V|.
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::traversal::BfsScratch;
+use crate::graph::VertexIdx;
+use crate::summary::hot::HotSet;
+
+/// Growth/reuse counters over scratch acquisitions
+/// ([`SummaryScratch::prepare_traversal`]/[`SummaryScratch::prepare_build`]/
+/// [`SummaryScratch::take_hot`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// Acquisitions that had to grow a buffer (first query, or the graph
+    /// gained vertices since the last one).
+    pub grown: u64,
+    /// Acquisitions served entirely from recycled buffers.
+    pub reused: u64,
+}
+
+/// The engine-owned workspace shared by hot-set selection
+/// ([`crate::summary::hot::compute_hot_set_pooled`]) and summary
+/// construction ([`crate::summary::bigvertex::SummaryGraph::build_pooled`]).
+#[derive(Debug, Default)]
+pub struct SummaryScratch {
+    /// Current epoch; stamped entries from older epochs are stale.
+    epoch: u64,
+    local_epoch: Vec<u64>,
+    local_of: Vec<u32>,
+    inv_epoch: Vec<u64>,
+    inv_out: Vec<f64>,
+    bfs: BfsScratch,
+    hot: Option<Vec<bool>>,
+    stats: ScratchStats,
+}
+
+/// Read-only dense→local view for sharded build closures (no `&mut`
+/// aliasing of the scratch inside `scope_chunks` jobs).
+pub struct LocalView<'a> {
+    epoch: u64,
+    stamps: &'a [u64],
+    local: &'a [u32],
+}
+
+impl LocalView<'_> {
+    /// Local summary index of dense vertex `v`, if `v` is hot this epoch.
+    #[inline]
+    pub fn get(&self, v: VertexIdx) -> Option<u32> {
+        let i = v as usize;
+        (self.stamps[i] == self.epoch).then_some(self.local[i])
+    }
+}
+
+impl SummaryScratch {
+    /// Empty scratch; every buffer grows on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size the BFS visit arrays for a traversal stage over `n` vertices
+    /// (the stamped maps are untouched — a hot-set pass never reads
+    /// them, so a throwaway scratch stays as lean as the pre-scratch
+    /// code). Records a growth or pure-reuse event in [`Self::stats`].
+    pub fn prepare_traversal(&mut self, n: usize) {
+        let grew = self.bfs.ensure(n);
+        self.note(grew);
+    }
+
+    /// Start a summary-build stage over `n` vertices: bumps the epoch
+    /// (O(1) invalidation of the stamped `local_of`/`inv_out` maps) and
+    /// grows them if smaller than `n` (the BFS arrays are untouched).
+    /// Records a growth or pure-reuse event in [`Self::stats`].
+    pub fn prepare_build(&mut self, n: usize) {
+        self.epoch += 1;
+        let mut grew = false;
+        if self.local_of.len() < n {
+            self.local_epoch.resize(n, 0);
+            self.local_of.resize(n, 0);
+            self.inv_epoch.resize(n, 0);
+            self.inv_out.resize(n, 0.0);
+            grew = true;
+        }
+        self.note(grew);
+    }
+
+    fn note(&mut self, grew: bool) {
+        if grew {
+            self.stats.grown += 1;
+        } else {
+            self.stats.reused += 1;
+        }
+    }
+
+    /// Growth/reuse counters (monotonic over the scratch's lifetime).
+    pub fn stats(&self) -> ScratchStats {
+        self.stats
+    }
+
+    /// The BFS visit-state component (for the traversal twins).
+    pub fn bfs_mut(&mut self) -> &mut BfsScratch {
+        &mut self.bfs
+    }
+
+    /// Borrow the recycled hot bitmap sized to exactly `n`, all-false.
+    /// Return it with [`Self::recycle_hot`] once the query is served; if
+    /// it is never returned the next call simply allocates afresh (and
+    /// counts as a growth event).
+    pub fn take_hot(&mut self, n: usize) -> Vec<bool> {
+        let taken = self.hot.take();
+        let grew = match &taken {
+            Some(h) => h.capacity() < n,
+            None => true,
+        };
+        self.note(grew);
+        let mut hot = taken.unwrap_or_default();
+        debug_assert!(hot.iter().all(|&b| !b), "recycled bitmap must come back clean");
+        hot.resize(n, false);
+        hot
+    }
+
+    /// Return the hot bitmap, scrubbing exactly the bits the tiers set
+    /// (O(|K|), not O(|V|)). Consumes the hot set — the engine is done
+    /// with it once the summary is built.
+    pub fn recycle_hot(&mut self, hs: HotSet) {
+        let HotSet { k_r, k_n, k_delta, mut hot } = hs;
+        for &v in k_r.iter().chain(&k_n).chain(&k_delta) {
+            if let Some(slot) = hot.get_mut(v as usize) {
+                *slot = false;
+            }
+        }
+        debug_assert!(hot.iter().all(|&b| !b), "tier lists must cover every set bit");
+        self.hot = Some(hot);
+    }
+
+    /// Stamp dense vertex `v` as local summary index `li` for this epoch.
+    #[inline]
+    pub fn set_local(&mut self, v: VertexIdx, li: u32) {
+        self.local_epoch[v as usize] = self.epoch;
+        self.local_of[v as usize] = li;
+    }
+
+    /// Local index of `v` if stamped this epoch.
+    #[inline]
+    pub fn local_get(&self, v: VertexIdx) -> Option<u32> {
+        let i = v as usize;
+        (self.local_epoch[i] == self.epoch).then_some(self.local_of[i])
+    }
+
+    /// Shareable view over the local map for parallel fills.
+    pub fn local_view(&self) -> LocalView<'_> {
+        LocalView { epoch: self.epoch, stamps: &self.local_epoch, local: &self.local_of }
+    }
+
+    /// Memoized `1 / d_out(w)` (0 for dangling `w`), computed at most
+    /// once per vertex per epoch — the summary build divides once per
+    /// *source*, not once per edge. The f64 value rounded to f32 equals
+    /// direct f32 division (f64→f32 double rounding is exact for
+    /// division), so memoized and inline weights are bit-identical.
+    #[inline]
+    pub fn inv_out(&mut self, g: &DynamicGraph, w: VertexIdx) -> f64 {
+        let i = w as usize;
+        if self.inv_epoch[i] != self.epoch {
+            self.inv_epoch[i] = self.epoch;
+            let d = g.out_degree(w);
+            self.inv_out[i] = if d == 0 { 0.0 } else { 1.0 / d as f64 };
+        }
+        self.inv_out[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hs(k_r: Vec<VertexIdx>, hot: Vec<bool>) -> HotSet {
+        HotSet { k_r, k_n: vec![], k_delta: vec![], hot }
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_local_map() {
+        let mut s = SummaryScratch::new();
+        s.prepare_build(8);
+        s.set_local(3, 0);
+        assert_eq!(s.local_get(3), Some(0));
+        assert_eq!(s.local_get(4), None);
+        s.prepare_build(8);
+        assert_eq!(s.local_get(3), None, "old epoch must be invisible");
+        let view = s.local_view();
+        assert_eq!(view.get(3), None);
+    }
+
+    #[test]
+    fn inv_out_memoizes_per_epoch() {
+        let (g, _) = DynamicGraph::from_edges(vec![(0u64, 1), (0, 2), (2, 1)]);
+        let mut s = SummaryScratch::new();
+        s.prepare_build(g.num_vertices());
+        let i0 = g.index(0).unwrap();
+        assert_eq!(s.inv_out(&g, i0), 0.5);
+        assert_eq!(s.inv_out(&g, i0), 0.5);
+        let i1 = g.index(1).unwrap();
+        assert_eq!(s.inv_out(&g, i1), 0.0, "dangling source");
+    }
+
+    #[test]
+    fn hot_bitmap_recycles_clean() {
+        let mut s = SummaryScratch::new();
+        let mut hot = s.take_hot(6);
+        assert_eq!(hot.len(), 6);
+        hot[1] = true;
+        hot[4] = true;
+        s.recycle_hot(hs(vec![1, 4], hot));
+        let again = s.take_hot(6);
+        assert!(again.iter().all(|&b| !b));
+        // Sizes down and back up to whatever the caller asks for.
+        s.recycle_hot(hs(vec![], again));
+        assert_eq!(s.take_hot(3).len(), 3);
+    }
+
+    #[test]
+    fn stats_count_growth_then_reuse() {
+        let mut s = SummaryScratch::new();
+        // First query: every acquisition grows (BFS arrays, bitmap, maps).
+        s.prepare_traversal(10);
+        let hot = s.take_hot(10);
+        s.prepare_build(10);
+        s.recycle_hot(hs(vec![], hot));
+        assert_eq!(s.stats(), ScratchStats { grown: 3, reused: 0 });
+        // Steady state: a same-size query never grows again.
+        s.prepare_traversal(10);
+        let hot = s.take_hot(10);
+        s.prepare_build(10);
+        s.recycle_hot(hs(vec![], hot));
+        assert_eq!(s.stats(), ScratchStats { grown: 3, reused: 3 });
+        // The graph grew: every buffer must re-size once.
+        s.prepare_traversal(12);
+        let hot = s.take_hot(12);
+        s.prepare_build(12);
+        s.recycle_hot(hs(vec![], hot));
+        assert_eq!(s.stats(), ScratchStats { grown: 6, reused: 3 });
+    }
+}

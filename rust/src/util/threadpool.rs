@@ -148,6 +148,28 @@ impl ThreadPool {
         drain_results(&rrx, k)
     }
 
+    /// One owned output per shard: runs `f(i)` for `i in 0..k` across the
+    /// pool and returns the results in shard order (`k == 0` yields an
+    /// empty vec, `k == 1` runs inline). Sugar over [`Self::scope_chunks`]
+    /// for sharded jobs that each *produce* private data — per-shard
+    /// candidate lists, frontier segments, buckets — instead of writing
+    /// disjoint pieces of one shared slice.
+    pub fn scope_slots<R, F>(&self, k: usize, f: F) -> Vec<R>
+    where
+        R: Send + Default,
+        F: Fn(usize) -> R + Sync,
+    {
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut slots: Vec<R> = (0..k).map(|_| R::default()).collect();
+        let cuts: Vec<usize> = (0..=k).collect();
+        self.scope_chunks(&mut slots, &cuts, |i, chunk| {
+            chunk[0] = f(i);
+        });
+        slots
+    }
+
     /// Parallel map: applies `f` to every item, preserving order.
     ///
     /// Panics in `f` are captured and re-raised on the calling thread after
@@ -392,6 +414,17 @@ mod tests {
         for j in joins {
             assert!(j.join().unwrap() > 0);
         }
+    }
+
+    #[test]
+    fn scope_slots_returns_per_shard_outputs_in_order() {
+        let pool = ThreadPool::new(3);
+        let out: Vec<Vec<usize>> = pool.scope_slots(5, |i| vec![i, i * 10]);
+        assert_eq!(out, vec![vec![0, 0], vec![1, 10], vec![2, 20], vec![3, 30], vec![4, 40]]);
+        let empty: Vec<Vec<usize>> = pool.scope_slots(0, |_| Vec::new());
+        assert!(empty.is_empty());
+        let one: Vec<u64> = pool.scope_slots(1, |i| i as u64 + 7);
+        assert_eq!(one, vec![7]);
     }
 
     #[test]

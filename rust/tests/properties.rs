@@ -15,8 +15,9 @@ use veilgraph::pagerank::summarized::{merge_ranks, run_summarized};
 use veilgraph::stream::buffer::UpdateBuffer;
 use veilgraph::stream::event::EdgeOp;
 use veilgraph::summary::bigvertex::SummaryGraph;
-use veilgraph::summary::hot::{compute_hot_set, HotSet, HotSetInputs};
+use veilgraph::summary::hot::{compute_hot_set, compute_hot_set_pooled, HotSet, HotSetInputs};
 use veilgraph::summary::params::SummaryParams;
+use veilgraph::summary::scratch::SummaryScratch;
 use veilgraph::testing::vprop::{forall, Gen};
 use veilgraph::util::threadpool::ThreadPool;
 
@@ -247,6 +248,218 @@ fn prop_hot_set_structure() {
                 assert!(applied.new_vertices.contains(&id));
             }
         }
+    });
+}
+
+fn assert_hot_sets_equal(a: &HotSet, b: &HotSet, what: &str) {
+    assert_eq!(a.k_r, b.k_r, "{what}: k_r");
+    assert_eq!(a.k_n, b.k_n, "{what}: k_n");
+    assert_eq!(a.k_delta, b.k_delta, "{what}: k_delta");
+    assert_eq!(a.hot, b.hot, "{what}: bitmap");
+}
+
+/// Parallel hot-set selection == serial for shards ∈ {1, 2, 4, 7}:
+/// identical tiers and bitmap on random update batches — plus the empty
+/// graph, an all-hot graph, and an all-dangling (edge-free) graph.
+#[test]
+fn prop_parallel_hot_set_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(30, 0xD1, |g| {
+        let mut scratch = SummaryScratch::new();
+        let mut dg = random_graph(g, 60, 250);
+        let mut buf = UpdateBuffer::new();
+        for _ in 0..g.usize(1..25) {
+            let (u, v) = (g.u64(0..80), g.u64(0..80));
+            if u != v {
+                buf.register(EdgeOp::add(u, v));
+            }
+        }
+        let applied = buf.apply(&mut dg).unwrap();
+        let ranks: Vec<f64> = (0..dg.num_vertices()).map(|_| g.f64(0.0..2.0)).collect();
+        let params = random_params(g);
+        let inputs = HotSetInputs {
+            graph: &dg,
+            prev_degree: &applied.prev_degree,
+            new_vertices: &applied.new_vertices,
+            prev_ranks: &ranks,
+        };
+        let serial = compute_hot_set(&inputs, &params);
+        for shards in [1usize, 2, 4, 7] {
+            let par = compute_hot_set_pooled(&inputs, &params, &mut scratch, Some(&pool), shards);
+            assert_hot_sets_equal(&par, &serial, &format!("shards={shards}"));
+            scratch.recycle_hot(par);
+        }
+    });
+    // Edge cases the random corpus cannot hit: the empty graph, a graph
+    // where EVERY vertex is hot, and an all-dangling (edge-free) graph.
+    let mut scratch = SummaryScratch::new();
+    let empty = DynamicGraph::new();
+    let all_hot = DynamicGraph::from_edges((0..12u64).map(|i| (i, (i + 1) % 12))).0;
+    let all_prev: HashMap<u64, usize> = (0..12u64).map(|id| (id, 0)).collect();
+    let mut dangling = DynamicGraph::new();
+    for v in 0..9u64 {
+        dangling.add_vertex(v);
+    }
+    let dangling_new: Vec<u64> = (0..9).collect();
+    let none_prev = HashMap::new();
+    let no_new: Vec<u64> = Vec::new();
+    let ranks = vec![0.5; 12];
+    let cases: Vec<(&DynamicGraph, &HashMap<u64, usize>, &[u64], &str)> = vec![
+        (&empty, &none_prev, no_new.as_slice(), "empty"),
+        (&all_hot, &all_prev, no_new.as_slice(), "all-hot"),
+        (&dangling, &none_prev, dangling_new.as_slice(), "all-dangling"),
+    ];
+    for (dg, prev, newv, what) in cases {
+        let inputs = HotSetInputs {
+            graph: dg,
+            prev_degree: prev,
+            new_vertices: newv,
+            prev_ranks: &ranks,
+        };
+        let params = SummaryParams::new(0.1, 2, 0.1);
+        let serial = compute_hot_set(&inputs, &params);
+        if what == "all-hot" {
+            assert_eq!(serial.len(), dg.num_vertices(), "every vertex must be hot");
+        }
+        for shards in [1usize, 2, 4, 7] {
+            let par = compute_hot_set_pooled(&inputs, &params, &mut scratch, Some(&pool), shards);
+            assert_hot_sets_equal(&par, &serial, &format!("{what} shards={shards}"));
+            scratch.recycle_hot(par);
+        }
+    }
+}
+
+/// Parallel `SummaryGraph::build_pooled` == serial build bit-for-bit
+/// (vertices, offsets, edges, `b`, `r0`, `b_s`) for shards ∈ {1, 2, 4,
+/// 7} across hot densities 0 / partial / all, plus an all-dangling
+/// graph.
+#[test]
+fn prop_parallel_summary_build_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(30, 0xD2, |g| {
+        let mut scratch = SummaryScratch::new();
+        let dg = random_graph(g, 60, 300);
+        let n = dg.num_vertices();
+        let ranks: Vec<f64> = (0..n).map(|_| g.f64(0.01..1.5)).collect();
+        for density in [0.0f64, 0.4, 1.0] {
+            let mut hot = vec![false; n];
+            let mut k_r = Vec::new();
+            for v in 0..n as u32 {
+                if density == 1.0 || (density > 0.0 && g.bool(density)) {
+                    hot[v as usize] = true;
+                    k_r.push(v);
+                }
+            }
+            let hs = HotSet { k_r, k_n: vec![], k_delta: vec![], hot };
+            let serial = SummaryGraph::build(&dg, &hs, &ranks, 1.0);
+            for shards in [1usize, 2, 4, 7] {
+                let par = SummaryGraph::build_pooled(
+                    &dg,
+                    &hs,
+                    &ranks,
+                    1.0,
+                    &mut scratch,
+                    Some(&pool),
+                    shards,
+                );
+                assert_eq!(par, serial, "density={density} shards={shards}");
+            }
+        }
+    });
+    // All-dangling graph: every hot row is edge-free, b stays zero.
+    let mut scratch = SummaryScratch::new();
+    let mut dg = DynamicGraph::new();
+    for v in 0..9u64 {
+        dg.add_vertex(v);
+    }
+    let n = dg.num_vertices();
+    let hs = HotSet {
+        k_r: (0..n as u32).collect(),
+        k_n: vec![],
+        k_delta: vec![],
+        hot: vec![true; n],
+    };
+    let ranks = vec![0.3; n];
+    let serial = SummaryGraph::build(&dg, &hs, &ranks, 1.0);
+    assert_eq!(serial.num_edges(), 0);
+    for shards in [1usize, 2, 4, 7] {
+        let par =
+            SummaryGraph::build_pooled(&dg, &hs, &ranks, 1.0, &mut scratch, Some(&pool), shards);
+        assert_eq!(par, serial, "all-dangling shards={shards}");
+    }
+}
+
+/// One scratch reused across an interleaved mutate/build sequence
+/// produces exactly what fresh construction does — stale epoch stamps,
+/// leaked BFS state or a dirty bitmap would all surface as a mismatch —
+/// and the scratch never re-grows once sized for the largest graph seen.
+#[test]
+fn prop_scratch_reuse_matches_fresh() {
+    let pool = ThreadPool::new(4);
+    forall(20, 0xD3, |g| {
+        let mut dg = random_graph(g, 50, 200);
+        let mut scratch = SummaryScratch::new();
+        for _round in 0..g.usize(2..6) {
+            let mut buf = UpdateBuffer::new();
+            for _ in 0..g.usize(1..15) {
+                let (u, v) = (g.u64(0..60), g.u64(0..60));
+                if u == v {
+                    continue;
+                }
+                if g.bool(0.8) {
+                    buf.register(EdgeOp::add(u, v));
+                } else {
+                    buf.register(EdgeOp::remove(u, v));
+                }
+            }
+            let applied = buf.apply(&mut dg).unwrap();
+            let ranks: Vec<f64> = (0..dg.num_vertices()).map(|_| g.f64(0.0..2.0)).collect();
+            let params = random_params(g);
+            let inputs = HotSetInputs {
+                graph: &dg,
+                prev_degree: &applied.prev_degree,
+                new_vertices: &applied.new_vertices,
+                prev_ranks: &ranks,
+            };
+            let shards = g.usize(1..8);
+            let reused =
+                compute_hot_set_pooled(&inputs, &params, &mut scratch, Some(&pool), shards);
+            let fresh = compute_hot_set(&inputs, &params);
+            assert_hot_sets_equal(&reused, &fresh, "reused scratch");
+            let s_reused = SummaryGraph::build_pooled(
+                &dg,
+                &reused,
+                &ranks,
+                1.0,
+                &mut scratch,
+                Some(&pool),
+                shards,
+            );
+            let s_fresh = SummaryGraph::build(&dg, &reused, &ranks, 1.0);
+            assert_eq!(s_reused, s_fresh, "reused-scratch build");
+            scratch.recycle_hot(reused);
+        }
+        // Steady state: one more pass over the (now unchanging) graph
+        // must be pure reuse — the rounds above already sized every
+        // buffer for the current |V|, so any growth here means the
+        // scratch re-allocates O(|V|) state per query.
+        let before = scratch.stats();
+        let none = HashMap::new();
+        let ranks: Vec<f64> = (0..dg.num_vertices()).map(|_| g.f64(0.0..2.0)).collect();
+        let inputs = HotSetInputs {
+            graph: &dg,
+            prev_degree: &none,
+            new_vertices: &[],
+            prev_ranks: &ranks,
+        };
+        let params = random_params(g);
+        let hs = compute_hot_set_pooled(&inputs, &params, &mut scratch, Some(&pool), 4);
+        let summary = SummaryGraph::build_pooled(&dg, &hs, &ranks, 1.0, &mut scratch, None, 1);
+        scratch.recycle_hot(hs);
+        let after = scratch.stats();
+        assert_eq!(after.grown, before.grown, "steady-state pass must not grow the scratch");
+        assert_eq!(after.reused, before.reused + 3, "all three acquisitions must reuse");
+        assert_eq!(summary.full_n, dg.num_vertices());
     });
 }
 
