@@ -19,7 +19,7 @@
 use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::policies::{AlwaysApproximate, AlwaysExact};
 use veilgraph::experiments::datasets::dataset_by_name;
-use veilgraph::metrics::ranking::{rbo_depth_for_density, top_k_ids};
+use veilgraph::metrics::ranking::rbo_depth_for_density;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::pagerank::power::PageRankConfig;
 use veilgraph::runtime::executor::Backend;
@@ -116,11 +116,7 @@ fn main() -> veilgraph::error::Result<()> {
         if matches!(ra.exec.backend, Some(Backend::XlaDense { .. })) {
             xla_queries += 1;
         }
-        let rbo = rbo_ext(
-            &top_k_ids(&ra.ids, &ra.ranks, depth),
-            &top_k_ids(&re.ids, &re.ranks, depth),
-            0.99,
-        );
+        let rbo = rbo_ext(&ra.top_ids(depth), &re.top_ids(depth), 0.99);
         rows.push((ra, re, rbo));
         let (ra, re, rbo) = rows.last().unwrap();
         if rows.len() % 10 == 0 || rows.len() == 1 {
@@ -128,7 +124,7 @@ fn main() -> veilgraph::error::Result<()> {
                 "q{:>2}: |K|={:>5}/{:<6} backend={} approx={:>7.2}ms exact={:>8.2}ms speedup={:>5.1}x rbo={:.4}",
                 ra.query_id,
                 ra.exec.summary_vertices,
-                ra.ids.len(),
+                ra.ids().len(),
                 ra.exec
                     .backend
                     .map(|b| b.to_string())
@@ -213,7 +209,7 @@ engine-served XLA query: |K|={} backend={} in {:.2}ms",
     let rbo_final = rows.last().unwrap().2;
     let vr_avg: f64 = rows
         .iter()
-        .map(|(a, _, _)| a.exec.summary_vertices as f64 / a.ids.len() as f64)
+        .map(|(a, _, _)| a.exec.summary_vertices as f64 / a.ids().len() as f64)
         .sum::<f64>()
         / qn;
     let reduction = 100.0 * (1.0 - approx_total / exact_total);

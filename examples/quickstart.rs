@@ -35,8 +35,8 @@ fn main() -> veilgraph::error::Result<()> {
             result.query_id,
             result.action,
             result.exec.summary_vertices,
-            result.ids.len(),
-            100.0 * result.exec.summary_vertices as f64 / result.ids.len() as f64,
+            result.ids().len(),
+            100.0 * result.exec.summary_vertices as f64 / result.ids().len() as f64,
             result.exec.summary_edges,
             result.exec.elapsed_secs * 1e3,
         );

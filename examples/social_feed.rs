@@ -1,7 +1,9 @@
 //! Social-feed serving: concurrent producers push follow-edges into the
 //! threaded query server while clients query influencer rankings —
-//! exercising the server, the bounded ingestion queue and backpressure
-//! counters (Fig. 2's deployment shape).
+//! exercising the server, the bounded ingestion queue, backpressure
+//! counters (Fig. 2's deployment shape) and the read/write split: a
+//! board-reader thread serves top-k lookups from the published snapshot
+//! the whole time, without ever entering the engine queue.
 //!
 //!     cargo run --release --example social_feed
 
@@ -58,7 +60,7 @@ fn main() -> veilgraph::error::Result<()> {
                 println!(
                     "query {:>2}: |V|={:>6} |K|={:>5} action={} {:.1}ms  top-3 {:?}",
                     q + 1,
-                    r.ids.len(),
+                    r.ids().len(),
                     r.exec.summary_vertices,
                     r.action,
                     r.exec.elapsed_secs * 1e3,
@@ -69,12 +71,32 @@ fn main() -> veilgraph::error::Result<()> {
         })
     };
 
+    // 1 board-reader thread: lock-free top-3 reads off the published
+    // snapshot while the writer is busy — the read path at work.
+    let board = {
+        let reader = server.reader();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let t = std::thread::spawn(move || {
+            let mut reads = 0u64;
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                let _board = reader.top(3);
+                reads += 1;
+            }
+            reads
+        });
+        (t, stop)
+    };
+
     for p in producers {
         p.join().unwrap();
     }
     let lat = client.join().unwrap();
+    board.1.store(true, std::sync::atomic::Ordering::Relaxed);
+    let reads = board.0.join().unwrap();
     let stats = server.stats()?;
     println!("\nserved {} queries while ingesting ~24k ops from 4 threads", lat.len());
+    println!("board reader served {reads} top-3 lookups off-queue meanwhile");
     println!(
         "mean query latency {:.1}ms; engine metrics:\n{}",
         lat.iter().sum::<f64>() / lat.len() as f64 * 1e3,

@@ -13,7 +13,6 @@ use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::policies::{SlaPolicy, SlaTier};
 use veilgraph::coordinator::udf::Action;
 use veilgraph::graph::generate;
-use veilgraph::metrics::ranking::top_k_ids;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::stream::source::{chunked_events, split_stream};
 use veilgraph::summary::params::SummaryParams;
@@ -56,12 +55,11 @@ fn main() -> veilgraph::error::Result<()> {
         }
         let mut rbo_avg = 0.0;
         if gold_rankings.is_empty() {
-            gold_rankings =
-                results.iter().map(|r| top_k_ids(&r.ids, &r.ranks, 1_000)).collect();
+            gold_rankings = results.iter().map(|r| r.top_ids(1_000)).collect();
             rbo_avg = 1.0;
         } else {
             for (r, gold) in results.iter().zip(&gold_rankings) {
-                rbo_avg += rbo_ext(&top_k_ids(&r.ids, &r.ranks, 1_000), gold, 0.99);
+                rbo_avg += rbo_ext(&r.top_ids(1_000), gold, 0.99);
             }
             rbo_avg /= results.len() as f64;
         }

@@ -18,7 +18,6 @@ use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::policies::{AlwaysApproximate, AlwaysExact};
 use veilgraph::graph::dynamic::DynamicGraph;
 use veilgraph::graph::generate;
-use veilgraph::metrics::ranking::top_k_ids;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::pagerank::power::{PageRank, PageRankConfig};
 use veilgraph::pagerank::summarized::run_summarized;
@@ -138,11 +137,7 @@ fn main() {
         let mut rbo = 0.0;
         let mut k_avg = 0.0;
         for (a, e) in ra.iter().zip(&re) {
-            rbo += rbo_ext(
-                &top_k_ids(&a.ids, &a.ranks, 1000),
-                &top_k_ids(&e.ids, &e.ranks, 1000),
-                0.99,
-            );
+            rbo += rbo_ext(&a.top_ids(1000), &e.top_ids(1000), 0.99);
             k_avg += a.exec.summary_vertices as f64;
         }
         println!(

@@ -3,8 +3,9 @@
 //! cached / incremental), hot-set selection and summary construction
 //! (serial vs sharded, scratch-recycling), densification, sparse
 //! summarized run, XLA execute round-trip, RBO, top-k. Results feed
-//! EXPERIMENTS.md §Perf and the CI `bench` job's `BENCH_3.json`
-//! perf-trajectory artifact (results/micro_bench.json).
+//! EXPERIMENTS.md §Perf and — merged with the serving bench — the CI
+//! `bench` job's `BENCH_4.json` perf-trajectory artifact
+//! (results/micro_bench.json).
 
 use std::collections::HashMap;
 
@@ -269,8 +270,9 @@ fn main() {
     std::fs::write("results/micro_bench.csv", b.to_csv()).expect("write csv");
     println!("CSV written to results/micro_bench.csv");
 
-    // Machine-readable perf trajectory — the CI bench job uploads this
-    // as BENCH_3.json so speedups are tracked across PRs.
+    // Machine-readable perf trajectory — the serving bench merges this
+    // into bench_4.json, which the CI bench job uploads as BENCH_4.json
+    // so speedups are tracked across PRs.
     let mut benches = std::collections::BTreeMap::new();
     for r in b.results() {
         benches.insert(

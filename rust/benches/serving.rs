@@ -1,0 +1,160 @@
+//! `cargo bench --bench serving` — serving-throughput benchmark for the
+//! read/write split: N concurrent readers × 1 writer, read-queries/sec
+//! with reads serialized through the engine command queue (the old
+//! architecture) vs reads off the published snapshot (the split).
+//!
+//! Emits `results/serving_bench.json` and — when the micro bench ran
+//! first (CI does) — merges its numbers into `results/bench_4.json`, the
+//! BENCH_4 perf-trajectory artifact (superset of the BENCH_3 schema plus
+//! the `serve_readers4_vs_single` throughput ratio).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::ServerHandle;
+use veilgraph::graph::generate;
+use veilgraph::stream::backpressure::OverflowPolicy;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::json::Json;
+
+const READ_K: usize = 100;
+const MEASURE_SECS: f64 = 1.5;
+
+/// Fresh vertex ids across every mode, so each mode's mutations are real
+/// (a repeated id range would be skipped as duplicates and flatten the
+/// writer load for later modes).
+static NEXT_VERTEX: AtomicU64 = AtomicU64::new(1_000_000);
+
+/// Read-queries/sec with `readers` concurrent reader threads and one
+/// writer continuously ingesting + recomputing. `split == false` sends
+/// every read through the engine command queue (each read is a full
+/// engine query); `split == true` serves reads from the published
+/// snapshot.
+fn throughput(handle: &Arc<ServerHandle>, readers: usize, split: bool) -> f64 {
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicU64::new(0));
+
+    // 1 writer: a steady mutation + recompute load.
+    let writer = {
+        let h = Arc::clone(handle);
+        let stop2 = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                for _ in 0..64 {
+                    let next = NEXT_VERTEX.fetch_add(1, Ordering::Relaxed);
+                    let _ = h.ingest(EdgeOp::add(next, next % 50_000));
+                }
+                let _ = h.query();
+            }
+        })
+    };
+
+    let mut threads = Vec::new();
+    for _ in 0..readers {
+        let h = Arc::clone(handle);
+        let stop2 = Arc::clone(&stop);
+        let total2 = Arc::clone(&total);
+        threads.push(std::thread::spawn(move || {
+            let reader = h.reader();
+            let mut count = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                if split {
+                    let top = reader.top(READ_K);
+                    assert!(!top.is_empty());
+                } else {
+                    let top = h.query().expect("queued read").top(READ_K);
+                    assert!(!top.is_empty());
+                }
+                count += 1;
+            }
+            total2.fetch_add(count, Ordering::Relaxed);
+        }));
+    }
+
+    let t0 = Instant::now();
+    std::thread::sleep(Duration::from_secs_f64(MEASURE_SECS));
+    stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    writer.join().unwrap();
+    total.load(Ordering::Relaxed) as f64 / elapsed
+}
+
+fn main() {
+    let edges = generate::copying_web(50_000, 10, 0.7, 42);
+    let engine = EngineBuilder::new()
+        .params(SummaryParams::new(0.2, 1, 0.1))
+        .build_from_edges(edges)
+        .expect("build engine");
+    let n = engine.graph().num_vertices();
+    let m = engine.graph().num_edges();
+    println!("workload: copying-web |V|={n} |E|={m}, read = top-{READ_K}\n");
+    let handle = Arc::new(ServerHandle::spawn(engine, 1 << 16, OverflowPolicy::Block));
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut qps = |label: &str, readers: usize, split: bool| {
+        let v = throughput(&handle, readers, split);
+        println!("{label:<24} {v:>12.0} reads/sec");
+        results.push((label.to_string(), v));
+        v
+    };
+    let queue1 = qps("serve_queue_readers1", 1, false);
+    let queue4 = qps("serve_queue_readers4", 4, false);
+    let split1 = qps("serve_split_readers1", 1, true);
+    let split4 = qps("serve_split_readers4", 4, true);
+    let ratio = split4 / queue1;
+    println!("\nserve_readers4_vs_single (4 split readers vs serialized reads): {ratio:.1}x");
+    let _ = (queue4, split1);
+
+    // ---- machine-readable artifact -----------------------------------
+    std::fs::create_dir_all("results").ok();
+    let serving = Json::obj(vec![
+        ("readers", Json::Num(4.0)),
+        ("read_top_k", Json::Num(READ_K as f64)),
+        ("measure_secs", Json::Num(MEASURE_SECS)),
+        (
+            "reads_per_sec",
+            Json::Obj(
+                results
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("results/serving_bench.json", serving.to_string_pretty())
+        .expect("write serving json");
+    println!("JSON written to results/serving_bench.json");
+
+    // BENCH_4 = BENCH_3 schema (the micro bench's output) + serving.
+    let mut doc = std::fs::read_to_string("results/micro_bench.json")
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .unwrap_or_else(|| Json::obj(Vec::new()));
+    if let Json::Obj(map) = &mut doc {
+        match map.get_mut("speedups") {
+            Some(Json::Obj(speedups)) => {
+                speedups.insert("serve_readers4_vs_single".into(), Json::Num(ratio));
+            }
+            _ => {
+                map.insert(
+                    "speedups".into(),
+                    Json::obj(vec![("serve_readers4_vs_single", Json::Num(ratio))]),
+                );
+            }
+        }
+        map.insert("serving".into(), serving);
+    }
+    std::fs::write("results/bench_4.json", doc.to_string_pretty()).expect("write bench_4 json");
+    println!("JSON written to results/bench_4.json");
+
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!("all bench threads joined"),
+    }
+}

@@ -25,12 +25,14 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::coordinator::serving::{
+    RankSnapshot, SnapshotPublisher, SnapshotReader, DEFAULT_PUBLISHED_TOP_K,
+};
 use crate::coordinator::udf::{Action, DefaultSuite, ExecStats, QueryContext, UdfSuite};
 use crate::error::{Error, Result};
 use crate::graph::dynamic::DynamicGraph;
 use crate::graph::snapshot::{SnapshotBuild, SnapshotCache, SnapshotStats};
 use crate::graph::VertexId;
-use crate::metrics::ranking::top_k_ids;
 use crate::metrics::registry::MetricsRegistry;
 use crate::pagerank::power::{PageRank, PageRankConfig};
 use crate::pagerank::summarized::merge_ranks_into;
@@ -61,33 +63,49 @@ pub struct SummaryStats {
     pub scratch: ScratchStats,
 }
 
-/// A served query: the ranking plus execution metadata.
+/// A served query: execution metadata plus the published ranking. The
+/// ranking itself is the engine's immutable [`RankSnapshot`], shared by
+/// `Arc` — serving a query no longer clones O(|V|) `ids`/`ranks`, and
+/// consecutive queries that leave the ranking untouched share one
+/// allocation.
 #[derive(Clone, Debug)]
 pub struct QueryResult {
     /// Measurement point `t` (1-based; 0 is the initial computation).
     pub query_id: u64,
     /// How the query was served.
     pub action: Action,
-    /// Vertex ids in dense order, aligned with `ranks`.
-    pub ids: Vec<VertexId>,
-    /// PageRank scores (full graph).
-    pub ranks: Vec<f64>,
     /// Execution statistics.
     pub exec: ExecStats,
+    /// The ranking this query observed (the engine's published snapshot
+    /// as of this measurement point).
+    pub snapshot: Arc<RankSnapshot>,
 }
 
 impl QueryResult {
-    /// Top-k `(vertex, score)` pairs, descending.
+    /// Vertex ids in dense order, aligned with [`Self::ranks`].
+    pub fn ids(&self) -> &[VertexId] {
+        &self.snapshot.ids
+    }
+
+    /// PageRank scores (full graph).
+    pub fn ranks(&self) -> &[f64] {
+        &self.snapshot.ranks
+    }
+
+    /// Top-k `(vertex, score)` pairs, descending (ties: ascending id).
+    /// `k` at or below the snapshot's precomputed top-K cap is O(k).
     pub fn top(&self, k: usize) -> Vec<(VertexId, f64)> {
-        let ids = top_k_ids(&self.ids, &self.ranks, k);
-        let pos: HashMap<VertexId, usize> =
-            self.ids.iter().enumerate().map(|(i, &v)| (v, i)).collect();
-        ids.into_iter().map(|v| (v, self.ranks[pos[&v]])).collect()
+        self.snapshot.top(k)
     }
 
     /// Top-k ids only (for RBO comparisons).
     pub fn top_ids(&self, k: usize) -> Vec<VertexId> {
-        top_k_ids(&self.ids, &self.ranks, k)
+        self.snapshot.top_ids(k)
+    }
+
+    /// Rank of one vertex by external id.
+    pub fn rank_of(&self, id: VertexId) -> Option<f64> {
+        self.snapshot.rank_of(id)
     }
 }
 
@@ -105,6 +123,7 @@ pub struct EngineBuilder {
     artifacts_dir: Option<std::path::PathBuf>,
     warmup: bool,
     max_xla_k: Option<usize>,
+    published_top_k: usize,
     udf: Box<dyn UdfSuite>,
 }
 
@@ -136,6 +155,7 @@ impl EngineBuilder {
             artifacts_dir: None,
             warmup: false,
             max_xla_k: None,
+            published_top_k: DEFAULT_PUBLISHED_TOP_K,
             udf: Box::new(DefaultSuite),
         }
     }
@@ -210,6 +230,14 @@ impl EngineBuilder {
         self
     }
 
+    /// How many top entries every published [`RankSnapshot`] pre-ranks
+    /// (default [`DEFAULT_PUBLISHED_TOP_K`]). Read-path `top(k)` with
+    /// `k ≤` this cap is an O(k) copy; larger `k` re-selects on demand.
+    pub fn published_top_k(mut self, k: usize) -> Self {
+        self.published_top_k = k;
+        self
+    }
+
     /// Install a custom UDF suite.
     pub fn udf(mut self, udf: Box<dyn UdfSuite>) -> Self {
         self.udf = udf;
@@ -245,7 +273,7 @@ impl EngineBuilder {
             executor.warmup()?;
         }
         self.udf.on_start();
-        Ok(Engine {
+        let mut engine = Engine {
             graph: ckpt.graph,
             buffer: UpdateBuffer::new(),
             params: self.params,
@@ -257,13 +285,19 @@ impl EngineBuilder {
             summary_totals: SummaryStats::default(),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
+            published: SnapshotPublisher::new(),
+            published_top_k: self.published_top_k,
             ranks: ckpt.ranks,
             carry_prev_degree: HashMap::new(),
             carry_new_vertices: Vec::new(),
             query_count: ckpt.query_count,
             queries_since_exact: 0,
             stopped: false,
-        })
+        };
+        // Re-publish the restored ranking so readers can serve before the
+        // first post-restore query.
+        engine.publish_now(engine.query_count, Action::ComputeExact, ExecStats::default());
+        Ok(engine)
     }
 
     /// Build from an existing graph.
@@ -293,6 +327,8 @@ impl EngineBuilder {
             summary_totals: SummaryStats::default(),
             udf: self.udf,
             metrics: MetricsRegistry::new(),
+            published: SnapshotPublisher::new(),
+            published_top_k: self.published_top_k,
             ranks: Vec::new(),
             carry_prev_degree: HashMap::new(),
             carry_new_vertices: Vec::new(),
@@ -301,8 +337,13 @@ impl EngineBuilder {
             stopped: false,
         };
         // Initial complete execution (measurement point 0).
-        let (_, secs) = crate::util::timer::timed(|| engine.compute_exact());
+        let (iters, secs) = crate::util::timer::timed(|| engine.compute_exact());
         engine.metrics.time("initial_exact_secs", secs);
+        engine.publish_now(
+            0,
+            Action::ComputeExact,
+            ExecStats { elapsed_secs: secs, iterations: iters, ..Default::default() },
+        );
         Ok(engine)
     }
 }
@@ -333,6 +374,13 @@ pub struct Engine {
     summary_totals: SummaryStats,
     udf: Box<dyn UdfSuite>,
     metrics: MetricsRegistry,
+    /// Read/write split (see [`crate::coordinator::serving`]): after each
+    /// recompute the engine publishes an immutable `Arc<RankSnapshot>`
+    /// here; any number of [`SnapshotReader`]s serve `top`/`rank`/`stats`
+    /// from it without entering the engine.
+    published: SnapshotPublisher,
+    /// Top-K entries pre-ranked per published snapshot.
+    published_top_k: usize,
     /// Current full rank vector (dense index order).
     ranks: Vec<f64>,
     /// `d_{t-1}` accumulated across applies since the last recompute —
@@ -406,6 +454,8 @@ impl Engine {
             summary_edges: 0,
             iterations: 0,
         };
+        let ranks_len_before = self.ranks.len();
+        let mut ranks_dirty = false;
         match action {
             Action::RepeatLast => {
                 self.extend_ranks_for_new_vertices();
@@ -425,6 +475,7 @@ impl Engine {
                     let default = self.pr_config.init_rank(self.graph.num_vertices());
                     merge_ranks_into(&mut self.ranks, &summary, &res.ranks, default);
                     self.metrics.time("summary_merge_secs", sw_merge.secs());
+                    ranks_dirty = true;
                 } else {
                     self.extend_ranks_for_new_vertices();
                 }
@@ -437,8 +488,10 @@ impl Engine {
                 self.carry_prev_degree.clear();
                 self.carry_new_vertices.clear();
                 self.queries_since_exact = 0;
+                ranks_dirty = true;
             }
         }
+        ranks_dirty |= self.ranks.len() != ranks_len_before;
         exec.elapsed_secs = sw.secs();
 
         // Metrics + OnQueryResult
@@ -454,13 +507,8 @@ impl Engine {
         self.metrics.set("last_summary_edges", exec.summary_edges as f64);
         self.udf.on_query_result(&ctx, action, &exec);
 
-        Ok(QueryResult {
-            query_id,
-            action,
-            ids: self.graph.ids().to_vec(),
-            ranks: self.ranks.clone(),
-            exec,
-        })
+        let snapshot = self.publish_result(query_id, action, &exec, ranks_dirty);
+        Ok(QueryResult { query_id, action, exec, snapshot })
     }
 
     /// Consume a prepared event stream, returning one result per query.
@@ -577,6 +625,43 @@ impl Engine {
         }
     }
 
+    /// Unconditionally freeze the current ranking into a new published
+    /// snapshot (one O(|V|) copy + O(n log n) index build, then atomic
+    /// swap).
+    fn publish_now(&mut self, query_id: u64, action: Action, exec: ExecStats) -> Arc<RankSnapshot> {
+        let version = self.published.latest().version + 1;
+        let snap = Arc::new(RankSnapshot::new(
+            version,
+            self.graph.version(),
+            query_id,
+            action,
+            exec,
+            self.graph.ids().to_vec(),
+            self.ranks.clone(),
+            self.published_top_k,
+            self.metrics.to_json(),
+        ));
+        self.published.publish(Arc::clone(&snap));
+        snap
+    }
+
+    /// Publish after a query — or, when neither the ranking nor the graph
+    /// moved (repeat-last / empty-summary queries), hand back the already
+    /// published snapshot so the whole query is allocation-free.
+    fn publish_result(
+        &mut self,
+        query_id: u64,
+        action: Action,
+        exec: &ExecStats,
+        ranks_dirty: bool,
+    ) -> Arc<RankSnapshot> {
+        let latest = self.published.latest();
+        if latest.version > 0 && !ranks_dirty && latest.graph_version == self.graph.version() {
+            return latest;
+        }
+        self.publish_now(query_id, action, exec.clone())
+    }
+
     // ---- accessors -----------------------------------------------------
 
     /// The current graph.
@@ -587,6 +672,24 @@ impl Engine {
     /// The current full rank vector (dense index order).
     pub fn ranks(&self) -> &[f64] {
         &self.ranks
+    }
+
+    /// The latest published snapshot (equals [`Self::ranks`] at the same
+    /// version — the read path's view of this engine).
+    pub fn latest_snapshot(&self) -> Arc<RankSnapshot> {
+        self.published.latest()
+    }
+
+    /// A read-only handle onto this engine's published snapshots,
+    /// cloneable across any number of reader threads. Readers never
+    /// block on (or wait for) the engine.
+    pub fn reader(&self) -> SnapshotReader {
+        self.published.reader()
+    }
+
+    /// Top-K entries pre-ranked per published snapshot.
+    pub fn published_top_k(&self) -> usize {
+        self.published_top_k
     }
 
     /// Engine metrics.
@@ -677,7 +780,7 @@ mod tests {
         let r = e.query().unwrap();
         assert_eq!(r.action, Action::ComputeApproximate);
         assert_eq!(r.exec.summary_vertices, 0, "no updates ⇒ empty hot set");
-        assert_eq!(r.ranks, before);
+        assert_eq!(r.ranks(), &before[..]);
     }
 
     #[test]
@@ -716,9 +819,9 @@ mod tests {
         e.ingest(EdgeOp::add(100, 0));
         e.ingest(EdgeOp::add(101, 100));
         let r = e.query().unwrap();
-        assert_eq!(r.ids.len(), 7);
-        assert_eq!(r.ranks.len(), 7);
-        assert!(r.ranks.iter().all(|&x| x > 0.0));
+        assert_eq!(r.ids().len(), 7);
+        assert_eq!(r.ranks().len(), 7);
+        assert!(r.ranks().iter().all(|&x| x > 0.0));
     }
 
     #[test]
@@ -826,7 +929,7 @@ mod tests {
         let a = resumed.query().unwrap();
         let b = e.query().unwrap();
         assert_eq!(a.query_id, b.query_id);
-        assert_eq!(a.ranks, b.ranks);
+        assert_eq!(a.ranks(), b.ranks());
         let _ = r1;
         std::fs::remove_file(&p).ok();
     }
@@ -878,7 +981,7 @@ mod tests {
             let rs = serial.query().unwrap();
             let rp = parallel.query().unwrap();
             assert_eq!(rs.action, rp.action, "round {round}");
-            assert_close(&rs.ranks, &rp.ranks, &format!("round {round}"));
+            assert_close(rs.ranks(), rp.ranks(), &format!("round {round}"));
         }
         // Exact recomputation (warm-started) also goes through the pool.
         let mut exact_parallel = EngineBuilder::new()
@@ -896,7 +999,7 @@ mod tests {
         exact_serial.ingest(EdgeOp::add(3, 141));
         let a = exact_parallel.query().unwrap();
         let b = exact_serial.query().unwrap();
-        assert_close(&a.ranks, &b.ranks, "warm-started exact");
+        assert_close(a.ranks(), b.ranks(), "warm-started exact");
     }
 
     #[test]
@@ -1003,7 +1106,7 @@ mod tests {
             let a = shared.query().unwrap();
             let b = owned.query().unwrap();
             assert_eq!(a.action, b.action);
-            assert_eq!(a.ranks, b.ranks, "query {i}");
+            assert_eq!(a.ranks(), b.ranks(), "query {i}");
         }
         // a serial-config engine may still carry a shared pool: snapshot
         // and executors stay serial (shards resolve to 1)
@@ -1046,5 +1149,74 @@ mod tests {
         assert_eq!(top.len(), 2);
         assert!(top[0].1 >= top[1].1);
         assert_eq!(top[0].0, 1, "vertex 1 receives from everyone");
+    }
+
+    #[test]
+    fn noop_queries_share_the_published_snapshot() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+        let initial = e.latest_snapshot();
+        assert_eq!(initial.version, 1, "initial exact run publishes version 1");
+        assert_eq!(initial.ranks, e.ranks());
+        // Queries that leave ranking and graph untouched reuse the Arc —
+        // zero O(|V|) clones per served query.
+        let r1 = e.query().unwrap();
+        let r2 = e.query().unwrap();
+        assert!(Arc::ptr_eq(&r1.snapshot, &initial));
+        assert!(Arc::ptr_eq(&r1.snapshot, &r2.snapshot));
+        assert_eq!(e.latest_snapshot().version, 1);
+        // A mutation forces a fresh publish with a bumped version.
+        e.ingest(EdgeOp::add(0, 5));
+        let r3 = e.query().unwrap();
+        assert!(!Arc::ptr_eq(&r3.snapshot, &r2.snapshot));
+        assert_eq!(r3.snapshot.version, 2);
+        assert_eq!(r3.snapshot.graph_version, e.graph().version());
+        assert_eq!(r3.snapshot.query_id, r3.query_id);
+        assert_eq!(r3.snapshot.ranks, e.ranks());
+    }
+
+    #[test]
+    fn published_top_k_precomputation_and_fallback_agree() {
+        let base = crate::graph::generate::barabasi_albert(120, 3, 0.4, 11);
+        let mut e = EngineBuilder::new()
+            .published_top_k(5)
+            .build_from_edges(base.iter().copied())
+            .unwrap();
+        e.ingest(EdgeOp::add(0, 60));
+        let r = e.query().unwrap();
+        assert_eq!(r.snapshot.top_k_cap(), 5);
+        let full = crate::metrics::ranking::top_k_ids(r.ids(), r.ranks(), 30);
+        assert_eq!(r.top_ids(3), &full[..3], "precomputed path");
+        assert_eq!(r.top_ids(30), full, "fallback path");
+        let (v, score) = r.top(1)[0];
+        assert_eq!(r.rank_of(v), Some(score));
+        assert_eq!(r.rank_of(u64::MAX), None);
+    }
+
+    #[test]
+    fn reader_serves_current_snapshot_without_engine_access() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(8)).unwrap();
+        let reader = e.reader();
+        assert_eq!(reader.version(), 1);
+        e.ingest(EdgeOp::add(0, 4));
+        let r = e.query().unwrap();
+        assert_eq!(reader.version(), r.snapshot.version);
+        assert_eq!(reader.top(3), r.top(3));
+        assert_eq!(reader.rank(0), r.rank_of(0));
+        let stats = reader.read_stats();
+        assert_eq!((stats.top, stats.rank), (1, 1));
+    }
+
+    #[test]
+    fn checkpoint_restore_publishes_for_readers() {
+        let p = std::env::temp_dir().join(format!("vg-engine-ckpt3-{}", std::process::id()));
+        let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        let _ = e.query().unwrap();
+        e.save_checkpoint(&p).unwrap();
+        let resumed = EngineBuilder::new().build_from_checkpoint(&p).unwrap();
+        let snap = resumed.latest_snapshot();
+        assert_eq!(snap.ranks, resumed.ranks());
+        assert_eq!(snap.query_id, resumed.query_count());
+        assert!(snap.version > 0);
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -1,9 +1,11 @@
 //! L3 coordinator: the Alg.-1 engine, the five-UDF API, built-in serving
-//! policies, and the threaded query server.
+//! policies, the read/write-split snapshot layer, and the threaded query
+//! server.
 
 pub mod adaptive;
 pub mod checkpoint;
 pub mod engine;
 pub mod policies;
 pub mod server;
+pub mod serving;
 pub mod udf;

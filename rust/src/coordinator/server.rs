@@ -1,25 +1,37 @@
-//! Threaded query server: the “GraphBolt module” of Fig. 2.
+//! Threaded query server: the “GraphBolt module” of Fig. 2, read/write
+//! split.
 //!
-//! Producers (stream sources, clients) talk to a single engine thread
-//! through a bounded command queue (backpressure per
-//! [`crate::stream::backpressure`]); query responses come back over
-//! per-request channels. A JSON line protocol over TCP is layered on top
-//! for out-of-process clients (`veilgraph serve`).
+//! The *write path* is unchanged: producers (stream sources, clients)
+//! talk to a single engine thread through a bounded command queue
+//! (backpressure per [`crate::stream::backpressure`]); mutations and
+//! recompute-triggering queries serialize there. The *read path* is new:
+//! every [`ServerHandle`] carries a
+//! [`SnapshotReader`](crate::coordinator::serving::SnapshotReader) onto
+//! the engine's published [`RankSnapshot`]s, so `top` / `rank` / `stats`
+//! requests are answered without entering the command queue — a slow
+//! recompute in progress never blocks a read.
+//!
+//! A JSON line protocol over TCP is layered on top for out-of-process
+//! clients (`veilgraph serve`); [`serve_listener`] runs an acceptor plus
+//! one thread per connection (capped), so any number of clients are
+//! served simultaneously.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::coordinator::engine::{Engine, QueryResult};
+use crate::coordinator::serving::{ReadKind, SnapshotReader};
 use crate::error::{Error, Result};
 use crate::stream::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::stream::event::EdgeOp;
 use crate::util::json::Json;
 
-/// Commands accepted by the engine thread.
+/// Commands accepted by the engine thread (the write path).
 enum Command {
     Op(EdgeOp),
     Query(Sender<Result<QueryResult>>),
@@ -27,16 +39,18 @@ enum Command {
     Shutdown,
 }
 
-/// Handle to a running engine thread.
+/// Handle to a running engine thread plus the lock-free read path.
 pub struct ServerHandle {
     queue: Arc<BoundedQueue<Command>>,
     worker: Option<JoinHandle<()>>,
     running: Arc<AtomicBool>,
+    reader: SnapshotReader,
 }
 
 impl ServerHandle {
     /// Spawn the engine thread with a command queue of `queue_capacity`.
     pub fn spawn(mut engine: Engine, queue_capacity: usize, policy: OverflowPolicy) -> Self {
+        let reader = engine.reader();
         let queue = Arc::new(BoundedQueue::new(queue_capacity, policy));
         let running = Arc::new(AtomicBool::new(true));
         let q2 = Arc::clone(&queue);
@@ -60,7 +74,7 @@ impl ServerHandle {
                 r2.store(false, Ordering::SeqCst);
             })
             .expect("spawn engine thread");
-        Self { queue, worker: Some(worker), running }
+        Self { queue, worker: Some(worker), running, reader }
     }
 
     /// Enqueue a graph operation (non-blocking result; backpressure policy
@@ -69,18 +83,26 @@ impl ServerHandle {
         self.queue.push(Command::Op(op))
     }
 
-    /// Serve a query synchronously.
+    /// Serve a query synchronously (write path: applies pending updates
+    /// and may recompute).
     pub fn query(&self) -> Result<QueryResult> {
         let (tx, rx) = channel();
         self.queue.push(Command::Query(tx))?;
         rx.recv().map_err(|_| Error::Engine("engine thread gone".into()))?
     }
 
-    /// Engine metrics snapshot.
+    /// Live engine metrics snapshot (write path: round-trips through the
+    /// command queue; see [`Self::reader`] for the off-queue variant).
     pub fn stats(&self) -> Result<Json> {
         let (tx, rx) = channel();
         self.queue.push(Command::Stats(tx))?;
         rx.recv().map_err(|_| Error::Engine("engine thread gone".into()))
+    }
+
+    /// The read path: a cloneable handle answering `top`/`rank`/`stats`
+    /// from the latest published snapshot without entering the queue.
+    pub fn reader(&self) -> SnapshotReader {
+        self.reader.clone()
     }
 
     /// True while the engine thread is alive.
@@ -88,10 +110,17 @@ impl ServerHandle {
         self.running.load(Ordering::SeqCst)
     }
 
-    /// Stop the engine and join the thread.
-    pub fn shutdown(mut self) {
+    /// Ask the engine thread to stop without joining it (used by the
+    /// concurrent TCP front end, which holds the handle in an `Arc`; the
+    /// final drop joins).
+    pub fn request_shutdown(&self) {
         let _ = self.queue.push(Command::Shutdown);
         self.queue.close();
+    }
+
+    /// Stop the engine and join the thread.
+    pub fn shutdown(mut self) {
+        self.request_shutdown();
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
@@ -100,8 +129,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        let _ = self.queue.push(Command::Shutdown);
-        self.queue.close();
+        self.request_shutdown();
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
@@ -110,12 +138,18 @@ impl Drop for ServerHandle {
 
 /// JSON line protocol: one request object per line, one response per line.
 ///
-/// Requests:
+/// Write-path requests (serialized through the engine queue):
 /// * `{"op":"add","src":1,"dst":2}`      → `{"ok":true}`
 /// * `{"op":"remove","src":1,"dst":2}`   → `{"ok":true}`
+/// * `{"op":"add_vertex","id":7}`        → `{"ok":true}`
+/// * `{"op":"remove_vertex","id":7}`     → `{"ok":true}`
 /// * `{"op":"query","top":10}`           → `{"ok":true,"action":…,"top":[[id,score],…]}`
-/// * `{"op":"stats"}`                    → `{"ok":true,"stats":{…}}`
 /// * `{"op":"shutdown"}`                 → `{"ok":true}` and closes.
+///
+/// Read-path requests (served off the published snapshot, never queued):
+/// * `{"op":"top","k":10}`     → `{"ok":true,"version":…,"top":[[id,score],…]}`
+/// * `{"op":"rank","id":7}`    → `{"ok":true,"version":…,"rank":…}`
+/// * `{"op":"stats"}`          → `{"ok":true,"stats":{"serving":…,"engine":…}}`
 pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
     let fail = |msg: String| {
         (Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))]), false)
@@ -135,6 +169,21 @@ pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
                 _ => return fail("add/remove need numeric src and dst".into()),
             };
             let e = if op == "add" { EdgeOp::add(src, dst) } else { EdgeOp::remove(src, dst) };
+            match handle.ingest(e) {
+                Ok(()) => (Json::obj(vec![("ok", Json::Bool(true))]), false),
+                Err(e) => fail(e.to_string()),
+            }
+        }
+        "add_vertex" | "remove_vertex" => {
+            let id = match req.get("id").and_then(Json::as_u64) {
+                Some(id) => id,
+                None => return fail("add_vertex/remove_vertex need a numeric id".into()),
+            };
+            let e = if op == "add_vertex" {
+                EdgeOp::AddVertex(id)
+            } else {
+                EdgeOp::RemoveVertex(id)
+            };
             match handle.ingest(e) {
                 Ok(()) => (Json::obj(vec![("ok", Json::Bool(true))]), false),
                 Err(e) => fail(e.to_string()),
@@ -166,48 +215,191 @@ pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
                 Err(e) => fail(e.to_string()),
             }
         }
-        "stats" => match handle.stats() {
-            Ok(stats) => {
-                (Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)]), false)
-            }
-            Err(e) => fail(e.to_string()),
-        },
+        // Read-path fast path: answered from the published snapshot.
+        "top" => {
+            let k = req
+                .get("k")
+                .or_else(|| req.get("top"))
+                .and_then(Json::as_u64)
+                .unwrap_or(10) as usize;
+            let snap = handle.reader.latest_for(ReadKind::Top);
+            let pairs = snap
+                .top(k)
+                .into_iter()
+                .map(|(id, score)| Json::Arr(vec![Json::Num(id as f64), Json::Num(score)]))
+                .collect();
+            (
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("version", Json::Num(snap.version as f64)),
+                    ("query_id", Json::Num(snap.query_id as f64)),
+                    ("action", Json::Str(snap.action.to_string())),
+                    ("top", Json::Arr(pairs)),
+                ]),
+                false,
+            )
+        }
+        "rank" => {
+            let id = match req.get("id").and_then(Json::as_u64) {
+                Some(id) => id,
+                None => return fail("rank needs a numeric id".into()),
+            };
+            let snap = handle.reader.latest_for(ReadKind::Rank);
+            let rank = snap.rank_of(id).map(Json::Num).unwrap_or(Json::Null);
+            (
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("version", Json::Num(snap.version as f64)),
+                    ("id", Json::Num(id as f64)),
+                    ("rank", rank),
+                ]),
+                false,
+            )
+        }
+        "stats" => {
+            let stats = handle.reader.stats_json();
+            (Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)]), false)
+        }
         "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
         other => fail(format!("unknown op {other:?}")),
     }
 }
 
-/// Serve the line protocol over TCP until a client sends `shutdown`.
-/// Returns the bound address after start (useful with port 0 in tests).
-pub fn serve_tcp(handle: ServerHandle, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    crate::log_info!("listening on {}", listener.local_addr()?);
-    let mut shutdown = false;
-    while !shutdown {
-        let (stream, peer) = listener.accept()?;
-        crate::log_debug!("client {peer}");
-        shutdown = serve_connection(&handle, stream)?;
+/// Tuning knobs for the concurrent TCP front end.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Simultaneous client connections; excess clients are rejected with
+    /// one error line and closed. Clamped to ≥ 1 so the server always
+    /// admits the client that could send `shutdown`.
+    pub max_connections: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { max_connections: 64 }
     }
-    handle.shutdown();
+}
+
+/// Serve the line protocol over TCP until a client sends `shutdown`
+/// (default [`ServeOptions`]).
+pub fn serve_tcp(handle: ServerHandle, addr: &str) -> Result<()> {
+    serve_tcp_with(handle, addr, ServeOptions::default())
+}
+
+/// [`serve_tcp`] with explicit options.
+pub fn serve_tcp_with(handle: ServerHandle, addr: &str, opts: ServeOptions) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    serve_listener(handle, listener, opts)
+}
+
+/// Concurrent TCP front end over a pre-bound listener (bind to port 0 in
+/// tests and read `listener.local_addr()` first): an acceptor thread plus
+/// one thread per connection, capped at `opts.max_connections`. Read-only
+/// ops never enter the engine queue, so clients issuing `top`/`rank`/
+/// `stats` are served even while a recompute is in flight for another
+/// client. Returns once a client sends `shutdown` and all connection
+/// threads have drained.
+pub fn serve_listener(
+    handle: ServerHandle,
+    listener: TcpListener,
+    opts: ServeOptions,
+) -> Result<()> {
+    let local = listener.local_addr()?;
+    crate::log_info!("listening on {local}");
+    // Self-connect target for waking the acceptor: a wildcard bind
+    // (0.0.0.0 / ::) is not a connectable destination everywhere, so
+    // route the wake through loopback on the bound port.
+    let wake = if local.ip().is_unspecified() {
+        std::net::SocketAddr::new(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST), local.port())
+    } else {
+        local
+    };
+    let max_connections = opts.max_connections.max(1);
+    let handle = Arc::new(handle);
+    let stop = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        let (stream, peer) = listener.accept()?;
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Reap finished connection threads so the vec stays bounded.
+        conns.retain(|h| !h.is_finished());
+        if active.load(Ordering::SeqCst) >= max_connections {
+            let mut s = stream;
+            let reject = Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str("server at connection capacity".into())),
+            ]);
+            let _ = s.write_all(reject.to_string_compact().as_bytes());
+            let _ = s.write_all(b"\n");
+            crate::log_warn!("rejected {peer}: at connection capacity");
+            continue;
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        let h2 = Arc::clone(&handle);
+        let stop2 = Arc::clone(&stop);
+        let active2 = Arc::clone(&active);
+        let t = std::thread::Builder::new()
+            .name("veilgraph-conn".into())
+            .spawn(move || {
+                crate::log_debug!("client {peer}");
+                let shutdown = serve_connection(&h2, stream, &stop2).unwrap_or(false);
+                active2.fetch_sub(1, Ordering::SeqCst);
+                if shutdown {
+                    stop2.store(true, Ordering::SeqCst);
+                    // Wake the acceptor blocked in accept().
+                    let _ = TcpStream::connect(wake);
+                }
+            })
+            .expect("spawn connection thread");
+        conns.push(t);
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    // Last drop of the Arc joins the engine thread (ServerHandle::drop).
+    drop(handle);
     Ok(())
 }
 
-fn serve_connection(handle: &ServerHandle, stream: TcpStream) -> Result<bool> {
+/// Serve one client connection until EOF, a `shutdown` request, or the
+/// server-wide stop flag (polled via a read timeout so lingering clients
+/// cannot pin a stopping server). Returns whether this client requested
+/// shutdown.
+fn serve_connection(handle: &ServerHandle, stream: TcpStream, stop: &AtomicBool) -> Result<bool> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(false);
         }
-        let (resp, shutdown) = handle_request(handle, &line);
-        writer.write_all(resp.to_string_compact().as_bytes())?;
-        writer.write_all(b"\n")?;
-        if shutdown {
-            return Ok(true);
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(false), // EOF — client hung up
+            Ok(_) => {
+                if !line.trim().is_empty() {
+                    let (resp, shutdown) = handle_request(handle, line.trim());
+                    writer.write_all(resp.to_string_compact().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    if shutdown {
+                        return Ok(true);
+                    }
+                }
+                line.clear();
+            }
+            // Timeout (or interrupt) mid-wait: partial bytes stay in
+            // `line`; check the stop flag and keep reading.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
         }
     }
-    Ok(false)
 }
 
 #[cfg(test)]
@@ -227,7 +419,7 @@ mod tests {
         h.ingest(EdgeOp::add(0, 10)).unwrap();
         let r = h.query().unwrap();
         assert_eq!(r.query_id, 1);
-        assert!(!r.ranks.is_empty());
+        assert!(!r.ranks().is_empty());
         h.shutdown();
     }
 
@@ -260,7 +452,7 @@ mod tests {
             j.join().unwrap();
         }
         let r = h.query().unwrap();
-        assert_eq!(r.ids.len(), 20 + 100, "20 ring + 100 new sources");
+        assert_eq!(r.ids().len(), 20 + 100, "20 ring + 100 new sources");
     }
 
     #[test]
@@ -276,6 +468,49 @@ mod tests {
         assert!(resp.get("stats").is_some());
         let (_, stop) = handle_request(&h, r#"{"op":"shutdown"}"#);
         assert!(stop);
+        h.shutdown();
+    }
+
+    #[test]
+    fn line_protocol_vertex_ops() {
+        let h = handle();
+        let (resp, _) = handle_request(&h, r#"{"op":"add_vertex","id":77}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = handle_request(&h, r#"{"op":"remove_vertex","id":3}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let r = h.query().unwrap();
+        assert!(r.ids().contains(&77), "added vertex is ranked");
+        assert!(r.rank_of(77).is_some());
+        // no further mutations ⇒ the next query reuses the snapshot
+        assert_eq!(h.query().unwrap().snapshot.version, r.snapshot.version);
+        let (resp, _) = handle_request(&h, r#"{"op":"add_vertex"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        h.shutdown();
+    }
+
+    #[test]
+    fn line_protocol_top_and_rank_are_off_queue() {
+        let h = handle();
+        let _ = h.query().unwrap(); // publish a post-update snapshot
+        let before = h.reader().read_stats();
+        let (resp, _) = handle_request(&h, r#"{"op":"top","k":4}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 4);
+        assert!(resp.get("version").unwrap().as_u64().unwrap() >= 1);
+        let (resp, _) = handle_request(&h, r#"{"op":"rank","id":0}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert!(resp.get("rank").unwrap().as_f64().is_some());
+        let (resp, _) = handle_request(&h, r#"{"op":"rank","id":999999}"#);
+        assert_eq!(resp.get("rank"), Some(&Json::Null));
+        let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
+        let serving = resp.get("stats").unwrap().get("serving").unwrap();
+        assert!(serving.get("reads_top").unwrap().as_u64().unwrap() >= 1);
+        // engine saw zero extra commands: all three ops hit the snapshot
+        let after = h.reader().read_stats();
+        assert_eq!(after.rank, before.rank + 2);
+        let live = h.stats().unwrap();
+        let queries = live.get("counters").unwrap().get("queries").unwrap().as_u64();
+        assert_eq!(queries, Some(1), "read ops must not round-trip through the engine");
         h.shutdown();
     }
 
@@ -300,7 +535,8 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            serve_connection(&h, stream).unwrap();
+            let stop = AtomicBool::new(false);
+            serve_connection(&h, stream, &stop).unwrap();
             h.shutdown();
         });
         let mut client = TcpStream::connect(addr).unwrap();

@@ -1,0 +1,395 @@
+//! Read/write-split serving: immutable published rank snapshots.
+//!
+//! VeilGraph's model (Fig. 2, Alg. 1) separates the update stream from
+//! query answering. The engine thread is the single *writer*: it ingests
+//! mutations, recomputes ranks, and after every recompute publishes an
+//! immutable, versioned [`RankSnapshot`] behind an `Arc`. Any number of
+//! *readers* ([`SnapshotReader`], cloneable across threads) answer
+//! `top` / `rank` / `stats` requests from the latest published snapshot
+//! without ever entering the engine command queue — the standard
+//! read/write split of streaming graph systems (Besta et al., *Practice
+//! of Streaming Processing of Dynamic Graphs*), and the way
+//! approximate-PageRank servers amortize one recompute across many cheap
+//! reads (FrogWild!).
+//!
+//! Synchronization budget: the snapshot slot is a pointer-sized
+//! `RwLock<Arc<..>>` held only for the load/store of the `Arc` itself —
+//! a reader's critical section is one refcount increment, and the writer
+//! swap is O(1) *after* the recompute finished. A reader therefore never
+//! waits on a recompute in progress, no matter how slow the writer is.
+//! Snapshots are immutable once published, so torn reads are impossible
+//! by construction: version, ids, ranks and the top-K index travel in
+//! one allocation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::coordinator::udf::{Action, ExecStats};
+use crate::graph::VertexId;
+use crate::metrics::ranking::top_k_indices;
+use crate::util::json::Json;
+
+/// How many top entries each published snapshot pre-ranks. `top(k)` with
+/// `k` at or below this cap is an O(k) copy off the snapshot; larger `k`
+/// falls back to an O(n + k log k) selection (still off-queue). Tunable
+/// per engine via
+/// [`crate::coordinator::engine::EngineBuilder::published_top_k`].
+pub const DEFAULT_PUBLISHED_TOP_K: usize = 128;
+
+/// One immutable published ranking: everything a read-only client can ask
+/// for, frozen at a measurement point. Shared as `Arc<RankSnapshot>`; no
+/// per-query O(|V|) clones anywhere on the read path.
+#[derive(Clone, Debug)]
+pub struct RankSnapshot {
+    /// Publish counter: 0 for the placeholder before the initial
+    /// computation, then strictly increasing per published recompute.
+    pub version: u64,
+    /// [`crate::graph::dynamic::DynamicGraph::version`] at publish time.
+    pub graph_version: u64,
+    /// Measurement point that produced this ranking (0 = initial).
+    pub query_id: u64,
+    /// How the ranking was produced.
+    pub action: Action,
+    /// Execution statistics of the producing query.
+    pub exec: ExecStats,
+    /// Vertex ids in dense order, aligned with `ranks`.
+    pub ids: Vec<VertexId>,
+    /// PageRank scores (full graph).
+    pub ranks: Vec<f64>,
+    /// Engine metrics as of publish time (serves off-queue `stats`).
+    pub engine_metrics: Json,
+    /// Dense positions of the top `top_k_cap` entries, pre-sorted by
+    /// (score desc, id asc) — the deterministic tie-break used everywhere.
+    top_index: Vec<u32>,
+    /// Dense positions sorted by vertex id — O(log n) `rank_of` lookups.
+    by_id: Vec<u32>,
+}
+
+impl RankSnapshot {
+    /// The placeholder published before the initial computation.
+    pub fn empty() -> Self {
+        Self {
+            version: 0,
+            graph_version: 0,
+            query_id: 0,
+            action: Action::RepeatLast,
+            exec: ExecStats::default(),
+            ids: Vec::new(),
+            ranks: Vec::new(),
+            engine_metrics: Json::Null,
+            top_index: Vec::new(),
+            by_id: Vec::new(),
+        }
+    }
+
+    /// Freeze a ranking, precomputing the deterministic top-K index and
+    /// the id-order permutation. O(n log n) once per publish — never on
+    /// the read path.
+    pub fn new(
+        version: u64,
+        graph_version: u64,
+        query_id: u64,
+        action: Action,
+        exec: ExecStats,
+        ids: Vec<VertexId>,
+        ranks: Vec<f64>,
+        top_k_cap: usize,
+        engine_metrics: Json,
+    ) -> Self {
+        assert_eq!(ids.len(), ranks.len());
+        let top_index: Vec<u32> =
+            top_k_indices(&ids, &ranks, top_k_cap).into_iter().map(|i| i as u32).collect();
+        let mut by_id: Vec<u32> = (0..ids.len() as u32).collect();
+        by_id.sort_unstable_by_key(|&i| ids[i as usize]);
+        Self {
+            version,
+            graph_version,
+            query_id,
+            action,
+            exec,
+            ids,
+            ranks,
+            engine_metrics,
+            top_index,
+            by_id,
+        }
+    }
+
+    /// Number of ranked vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// How many entries the precomputed top-K index holds.
+    pub fn top_k_cap(&self) -> usize {
+        self.top_index.len()
+    }
+
+    /// Top-k `(vertex, score)` pairs, descending (ties: ascending id).
+    /// `k ≤ top_k_cap()` is an O(k) copy of the precomputed index; larger
+    /// `k` re-selects in O(n + k log k) — identical ordering either way.
+    pub fn top(&self, k: usize) -> Vec<(VertexId, f64)> {
+        let k = k.min(self.ids.len());
+        if k <= self.top_index.len() {
+            self.top_index[..k]
+                .iter()
+                .map(|&i| (self.ids[i as usize], self.ranks[i as usize]))
+                .collect()
+        } else {
+            top_k_indices(&self.ids, &self.ranks, k)
+                .into_iter()
+                .map(|i| (self.ids[i], self.ranks[i]))
+                .collect()
+        }
+    }
+
+    /// Top-k ids only (for RBO comparisons).
+    pub fn top_ids(&self, k: usize) -> Vec<VertexId> {
+        self.top(k).into_iter().map(|(v, _)| v).collect()
+    }
+
+    /// Rank of one vertex by external id — O(log n) binary search, no
+    /// maps built per query.
+    pub fn rank_of(&self, id: VertexId) -> Option<f64> {
+        self.by_id
+            .binary_search_by(|&i| self.ids[i as usize].cmp(&id))
+            .ok()
+            .map(|pos| self.ranks[self.by_id[pos] as usize])
+    }
+}
+
+/// Cumulative read-path counters (shared by every reader handle).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReadStats {
+    /// `top(k)` requests served off-snapshot.
+    pub top: u64,
+    /// `rank_of` requests served off-snapshot.
+    pub rank: u64,
+    /// `stats` requests served off-snapshot.
+    pub stats: u64,
+}
+
+/// Which read-path request a counted snapshot fetch serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadKind {
+    /// A top-k ranking request.
+    Top,
+    /// A single-vertex rank lookup.
+    Rank,
+    /// A serving-stats request.
+    Stats,
+}
+
+/// State shared between the one publisher and all readers.
+struct Shared {
+    latest: RwLock<Arc<RankSnapshot>>,
+    reads_top: AtomicU64,
+    reads_rank: AtomicU64,
+    reads_stats: AtomicU64,
+}
+
+/// Writer-side handle: owned by the engine, swaps the published snapshot
+/// after each recompute.
+pub struct SnapshotPublisher {
+    shared: Arc<Shared>,
+}
+
+impl Default for SnapshotPublisher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotPublisher {
+    /// Start with the version-0 placeholder.
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                latest: RwLock::new(Arc::new(RankSnapshot::empty())),
+                reads_top: AtomicU64::new(0),
+                reads_rank: AtomicU64::new(0),
+                reads_stats: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Atomically replace the published snapshot (an `Arc` store; readers
+    /// holding the previous snapshot keep it alive until they drop it).
+    pub fn publish(&self, snapshot: Arc<RankSnapshot>) {
+        *self.shared.latest.write().unwrap() = snapshot;
+    }
+
+    /// The latest published snapshot.
+    pub fn latest(&self) -> Arc<RankSnapshot> {
+        Arc::clone(&self.shared.latest.read().unwrap())
+    }
+
+    /// A read-only handle, cloneable across any number of reader threads.
+    pub fn reader(&self) -> SnapshotReader {
+        SnapshotReader { shared: Arc::clone(&self.shared) }
+    }
+}
+
+/// Reader-side handle: answers `top` / `rank` / `stats` from the latest
+/// published snapshot without touching the engine or its command queue.
+#[derive(Clone)]
+pub struct SnapshotReader {
+    shared: Arc<Shared>,
+}
+
+impl SnapshotReader {
+    /// The latest published snapshot.
+    pub fn latest(&self) -> Arc<RankSnapshot> {
+        Arc::clone(&self.shared.latest.read().unwrap())
+    }
+
+    /// The latest published snapshot, counted as a served read of `kind`
+    /// — front ends that need snapshot metadata alongside the ranking
+    /// use this so one request is one snapshot load (internally
+    /// consistent response) and one counter bump.
+    pub fn latest_for(&self, kind: ReadKind) -> Arc<RankSnapshot> {
+        let counter = match kind {
+            ReadKind::Top => &self.shared.reads_top,
+            ReadKind::Rank => &self.shared.reads_rank,
+            ReadKind::Stats => &self.shared.reads_stats,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        self.latest()
+    }
+
+    /// Version of the latest published snapshot.
+    pub fn version(&self) -> u64 {
+        self.latest().version
+    }
+
+    /// Top-k off the latest snapshot (counted).
+    pub fn top(&self, k: usize) -> Vec<(VertexId, f64)> {
+        self.latest_for(ReadKind::Top).top(k)
+    }
+
+    /// One vertex's rank off the latest snapshot (counted).
+    pub fn rank(&self, id: VertexId) -> Option<f64> {
+        self.latest_for(ReadKind::Rank).rank_of(id)
+    }
+
+    /// Read-path counters so far.
+    pub fn read_stats(&self) -> ReadStats {
+        ReadStats {
+            top: self.shared.reads_top.load(Ordering::Relaxed),
+            rank: self.shared.reads_rank.load(Ordering::Relaxed),
+            stats: self.shared.reads_stats.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Off-queue `stats` payload: serving-layer state plus the engine
+    /// metrics captured at the last publish (counted).
+    pub fn stats_json(&self) -> Json {
+        let s = self.latest_for(ReadKind::Stats);
+        let r = self.read_stats();
+        Json::obj(vec![
+            (
+                "serving",
+                Json::obj(vec![
+                    ("version", Json::Num(s.version as f64)),
+                    ("graph_version", Json::Num(s.graph_version as f64)),
+                    ("query_id", Json::Num(s.query_id as f64)),
+                    ("action", Json::Str(s.action.to_string())),
+                    ("vertices", Json::Num(s.num_vertices() as f64)),
+                    ("published_top_k", Json::Num(s.top_k_cap() as f64)),
+                    ("reads_top", Json::Num(r.top as f64)),
+                    ("reads_rank", Json::Num(r.rank as f64)),
+                    ("reads_stats", Json::Num(r.stats as f64)),
+                ]),
+            ),
+            ("engine", s.engine_metrics.clone()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ranking::top_k_ids;
+
+    fn snap(version: u64, ids: Vec<VertexId>, ranks: Vec<f64>, cap: usize) -> RankSnapshot {
+        RankSnapshot::new(
+            version,
+            version,
+            version,
+            Action::ComputeExact,
+            ExecStats::default(),
+            ids,
+            ranks,
+            cap,
+            Json::Null,
+        )
+    }
+
+    #[test]
+    fn precomputed_top_matches_full_selection() {
+        let ids: Vec<u64> = vec![30, 10, 20, 40, 50];
+        let ranks = vec![0.5, 0.9, 0.9, 0.1, 0.7];
+        let s = snap(1, ids.clone(), ranks.clone(), 3);
+        assert_eq!(s.top_k_cap(), 3);
+        for k in 0..=5 {
+            assert_eq!(s.top_ids(k), top_k_ids(&ids, &ranks, k), "k={k}");
+        }
+        // pairs carry the matching scores
+        assert_eq!(s.top(2), vec![(10, 0.9), (20, 0.9)]);
+    }
+
+    #[test]
+    fn rank_of_finds_every_vertex_and_only_those() {
+        let ids: Vec<u64> = vec![7, 3, 99, 12];
+        let ranks = vec![1.0, 2.0, 3.0, 4.0];
+        let s = snap(1, ids.clone(), ranks.clone(), 2);
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(s.rank_of(id), Some(ranks[i]));
+        }
+        assert_eq!(s.rank_of(5), None);
+        assert_eq!(s.rank_of(1000), None);
+    }
+
+    #[test]
+    fn publisher_swaps_and_readers_observe() {
+        let p = SnapshotPublisher::new();
+        let r = p.reader();
+        assert_eq!(r.version(), 0);
+        assert!(r.top(5).is_empty());
+        assert_eq!(r.rank(0), None);
+        p.publish(Arc::new(snap(1, vec![1, 2], vec![0.4, 0.6], 2)));
+        assert_eq!(r.version(), 1);
+        assert_eq!(r.top(1), vec![(2, 0.6)]);
+        assert_eq!(r.rank(1), Some(0.4));
+        let held = r.latest();
+        p.publish(Arc::new(snap(2, vec![1, 2], vec![0.6, 0.4], 2)));
+        // the old snapshot stays alive and unchanged for its holder
+        assert_eq!(held.version, 1);
+        assert_eq!(held.top(1), vec![(2, 0.6)]);
+        assert_eq!(r.latest().version, 2);
+    }
+
+    #[test]
+    fn read_counters_accumulate_across_clones() {
+        let p = SnapshotPublisher::new();
+        let r1 = p.reader();
+        let r2 = r1.clone();
+        let _ = r1.top(3);
+        let _ = r2.top(3);
+        let _ = r2.rank(0);
+        let _ = r1.stats_json();
+        let s = r2.read_stats();
+        assert_eq!((s.top, s.rank, s.stats), (2, 1, 1));
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let p = SnapshotPublisher::new();
+        p.publish(Arc::new(snap(3, vec![5], vec![1.0], 1)));
+        let j = p.reader().stats_json();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("version").unwrap().as_u64(), Some(3));
+        assert_eq!(serving.get("vertices").unwrap().as_u64(), Some(1));
+        assert!(j.get("engine").is_some());
+    }
+}

@@ -52,7 +52,7 @@ pub struct QueryContext {
 }
 
 /// Per-query execution statistics handed to `OnQueryResult` (§4 item 4).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     /// Wall time serving the query (seconds).
     pub elapsed_secs: f64,

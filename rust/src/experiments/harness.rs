@@ -14,7 +14,7 @@ use std::sync::Arc;
 use crate::coordinator::engine::EngineBuilder;
 use crate::coordinator::policies::{AlwaysApproximate, AlwaysExact};
 use crate::error::Result;
-use crate::metrics::ranking::{rbo_depth_for_density, top_k_ids};
+use crate::metrics::ranking::rbo_depth_for_density;
 use crate::metrics::rbo::rbo_ext;
 use crate::pagerank::power::PageRankConfig;
 use crate::stream::event::UpdateEvent;
@@ -227,7 +227,7 @@ fn run_ground_truth(
             UpdateEvent::Query => {
                 let r = engine.query()?;
                 gt.exact_secs.push(r.exec.elapsed_secs);
-                gt.top_ids.push(top_k_ids(&r.ids, &r.ranks, rbo_depth));
+                gt.top_ids.push(r.top_ids(rbo_depth));
                 gt.full_vertices.push(engine.graph().num_vertices());
                 gt.full_edges.push(engine.graph().num_edges());
             }
@@ -261,7 +261,7 @@ fn run_combination(
             UpdateEvent::Op(op) => engine.ingest(*op),
             UpdateEvent::Query => {
                 let r = engine.query()?;
-                let approx_top = top_k_ids(&r.ids, &r.ranks, rbo_depth);
+                let approx_top = r.top_ids(rbo_depth);
                 rows.push(SeriesRow {
                     query: q + 1,
                     summary_vertices: r.exec.summary_vertices,

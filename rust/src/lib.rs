@@ -53,6 +53,7 @@ pub mod util;
 /// Convenience re-exports of the most commonly used public items.
 pub mod prelude {
     pub use crate::coordinator::engine::{Engine, EngineBuilder, QueryResult};
+    pub use crate::coordinator::serving::{RankSnapshot, SnapshotReader};
     pub use crate::coordinator::udf::{Action, UdfSuite};
     pub use crate::error::{Error, Result};
     pub use crate::graph::csr::Csr;

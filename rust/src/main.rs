@@ -8,7 +8,7 @@
 //! * `info`       — artifact/platform diagnostics.
 
 use veilgraph::coordinator::engine::EngineBuilder;
-use veilgraph::coordinator::server::{serve_tcp, ServerHandle};
+use veilgraph::coordinator::server::{serve_tcp_with, ServeOptions, ServerHandle};
 use veilgraph::error::{Error, Result};
 use veilgraph::experiments::datasets::{all_datasets, dataset_by_name, table1};
 use veilgraph::experiments::figures::{figure_by_number, figures_for_dataset, render_figure};
@@ -83,6 +83,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("artifacts", "artifacts dir for the XLA backend", Some("artifacts"))
         .opt("queue", "ingestion queue capacity", Some("65536"))
         .opt("parallelism", "PageRank shards (1 = serial, 0 = one per core)", Some("1"))
+        .opt("max-conns", "simultaneous TCP client connections", Some("64"))
+        .opt("top-k", "top entries pre-ranked per published snapshot", Some("128"))
         .flag("no-xla", "force the sparse executor")
         .flag("help", "show usage");
     let p = cmd.parse(args)?;
@@ -93,7 +95,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let edges = initial_edges(&p)?;
     let mut builder = EngineBuilder::new()
         .params(params_from(&p)?)
-        .parallelism(p.req_parse::<usize>("parallelism")?);
+        .parallelism(p.req_parse::<usize>("parallelism")?)
+        .published_top_k(p.req_parse::<usize>("top-k")?);
     if !p.flag("no-xla") {
         let dir = p.get("artifacts").unwrap();
         if std::path::Path::new(dir).join("manifest.json").is_file() {
@@ -110,7 +113,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         engine.has_xla()
     );
     let handle = ServerHandle::spawn(engine, p.req_parse::<usize>("queue")?, OverflowPolicy::Block);
-    serve_tcp(handle, p.get("addr").unwrap())
+    let opts = ServeOptions { max_connections: p.req_parse::<usize>("max-conns")? };
+    serve_tcp_with(handle, p.get("addr").unwrap(), opts)
 }
 
 fn initial_edges(p: &veilgraph::util::cli::Parsed) -> Result<Vec<(u64, u64)>> {

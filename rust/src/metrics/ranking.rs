@@ -6,9 +6,12 @@
 
 use crate::graph::VertexId;
 
-/// Extract the top-k vertex ids by score, descending; ties break by
-/// ascending id so rankings are deterministic.
-pub fn top_k_ids(ids: &[VertexId], scores: &[f64], k: usize) -> Vec<VertexId> {
+/// Dense positions of the top-k entries by score, descending; ties break
+/// by ascending id so rankings are deterministic. This is the selection
+/// primitive behind [`top_k_ids`] and the published-snapshot top-K index
+/// ([`crate::coordinator::serving::RankSnapshot`]) — O(n + k log k), no
+/// auxiliary maps.
+pub fn top_k_indices(ids: &[VertexId], scores: &[f64], k: usize) -> Vec<usize> {
     assert_eq!(ids.len(), scores.len());
     let mut order: Vec<usize> = (0..ids.len()).collect();
     let k = k.min(ids.len());
@@ -19,9 +22,15 @@ pub fn top_k_ids(ids: &[VertexId], scores: &[f64], k: usize) -> Vec<VertexId> {
     order.select_nth_unstable_by(k - 1, |&a, &b| {
         scores[b].partial_cmp(&scores[a]).unwrap().then(ids[a].cmp(&ids[b]))
     });
-    let mut head: Vec<usize> = order[..k].to_vec();
-    head.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(ids[a].cmp(&ids[b])));
-    head.into_iter().map(|i| ids[i]).collect()
+    order.truncate(k);
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(ids[a].cmp(&ids[b])));
+    order
+}
+
+/// Extract the top-k vertex ids by score, descending; ties break by
+/// ascending id so rankings are deterministic.
+pub fn top_k_ids(ids: &[VertexId], scores: &[f64], k: usize) -> Vec<VertexId> {
+    top_k_indices(ids, scores, k).into_iter().map(|i| ids[i]).collect()
 }
 
 /// The paper's RBO truncation depth as a function of update density
@@ -72,6 +81,15 @@ mod tests {
         order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
         let want: Vec<u64> = order[..50].iter().map(|&i| ids[i]).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn top_k_indices_agree_with_ids() {
+        let ids = [10u64, 20, 30, 40];
+        let scores = [0.1, 0.9, 0.9, 0.5];
+        assert_eq!(top_k_indices(&ids, &scores, 3), vec![1, 2, 3]);
+        let got = top_k_indices(&ids, &scores, 2).into_iter().map(|i| ids[i]).collect::<Vec<_>>();
+        assert_eq!(got, top_k_ids(&ids, &scores, 2));
     }
 
     #[test]

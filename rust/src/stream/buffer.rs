@@ -71,11 +71,34 @@ pub struct AppliedUpdates {
     pub skipped: usize,
 }
 
+/// Per-kind pending-operation counters, maintained incrementally so
+/// [`UpdateBuffer::statistics`] is O(1) per query instead of rescanning
+/// every pending op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct PendingCounts {
+    add_edges: usize,
+    remove_edges: usize,
+    add_vertices: usize,
+    remove_vertices: usize,
+}
+
+impl PendingCounts {
+    fn bump(&mut self, op: &EdgeOp) {
+        match op {
+            EdgeOp::AddEdge(..) => self.add_edges += 1,
+            EdgeOp::RemoveEdge(..) => self.remove_edges += 1,
+            EdgeOp::AddVertex(..) => self.add_vertices += 1,
+            EdgeOp::RemoveVertex(..) => self.remove_vertices += 1,
+        }
+    }
+}
+
 /// The pending-update buffer.
 #[derive(Clone, Debug, Default)]
 pub struct UpdateBuffer {
     ops: Vec<EdgeOp>,
     touched: std::collections::HashSet<VertexId>,
+    counts: PendingCounts,
 }
 
 impl UpdateBuffer {
@@ -95,6 +118,7 @@ impl UpdateBuffer {
                 self.touched.insert(u);
             }
         }
+        self.counts.bump(&op);
         self.ops.push(op);
     }
 
@@ -113,23 +137,27 @@ impl UpdateBuffer {
         &self.ops
     }
 
-    /// Statistics snapshot against the current (pre-apply) graph.
+    /// Discard all pending operations without applying them (load
+    /// shedding at the buffer level).
+    pub fn clear(&mut self) {
+        self.ops.clear();
+        self.touched.clear();
+        self.counts = PendingCounts::default();
+    }
+
+    /// Statistics snapshot against the current (pre-apply) graph — O(1):
+    /// the per-kind counters are maintained by `register`/`apply`/`clear`
+    /// rather than recounted per query.
     pub fn statistics(&self, g: &DynamicGraph) -> UpdateStatistics {
-        let mut s = UpdateStatistics {
+        UpdateStatistics {
+            pending_add_edges: self.counts.add_edges,
+            pending_remove_edges: self.counts.remove_edges,
+            pending_add_vertices: self.counts.add_vertices,
+            pending_remove_vertices: self.counts.remove_vertices,
+            touched_vertices: self.touched.len(),
             total_vertices: g.num_vertices(),
             total_edges: g.num_edges(),
-            touched_vertices: self.touched.len(),
-            ..Default::default()
-        };
-        for op in &self.ops {
-            match op {
-                EdgeOp::AddEdge(..) => s.pending_add_edges += 1,
-                EdgeOp::RemoveEdge(..) => s.pending_remove_edges += 1,
-                EdgeOp::AddVertex(..) => s.pending_add_vertices += 1,
-                EdgeOp::RemoveVertex(..) => s.pending_remove_vertices += 1,
-            }
         }
-        s
     }
 
     /// Apply all pending updates to `g` (Alg. 1 `ApplyUpdates`), capturing
@@ -165,6 +193,7 @@ impl UpdateBuffer {
             }
         }
         self.touched.clear();
+        self.counts = PendingCounts::default();
         Ok(out)
     }
 }
@@ -239,5 +268,83 @@ mod tests {
         let s = buf.statistics(&g);
         assert_eq!(s.pending_total(), 0);
         assert_eq!(s.touched_vertices, 0);
+    }
+
+    #[test]
+    fn clear_discards_pending_without_applying() {
+        let (mut g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(2, 3));
+        buf.register(EdgeOp::AddVertex(9));
+        buf.clear();
+        assert!(buf.is_empty());
+        let s = buf.statistics(&g);
+        assert_eq!(s.pending_total(), 0);
+        assert_eq!(s.touched_vertices, 0);
+        let out = buf.apply(&mut g).unwrap();
+        assert_eq!(out.applied + out.skipped, 0);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    /// Recount from scratch — the oracle the incremental counters must
+    /// match at every point of an interleaved register/apply/clear run.
+    fn rescan(buf: &UpdateBuffer, g: &DynamicGraph) -> UpdateStatistics {
+        let mut s = UpdateStatistics {
+            total_vertices: g.num_vertices(),
+            total_edges: g.num_edges(),
+            ..Default::default()
+        };
+        let mut touched = std::collections::HashSet::new();
+        for op in buf.pending() {
+            match op {
+                EdgeOp::AddEdge(u, v) => {
+                    s.pending_add_edges += 1;
+                    touched.insert(*u);
+                    touched.insert(*v);
+                }
+                EdgeOp::RemoveEdge(u, v) => {
+                    s.pending_remove_edges += 1;
+                    touched.insert(*u);
+                    touched.insert(*v);
+                }
+                EdgeOp::AddVertex(u) => {
+                    s.pending_add_vertices += 1;
+                    touched.insert(*u);
+                }
+                EdgeOp::RemoveVertex(u) => {
+                    s.pending_remove_vertices += 1;
+                    touched.insert(*u);
+                }
+            }
+        }
+        s.touched_vertices = touched.len();
+        s
+    }
+
+    #[test]
+    fn incremental_counters_match_rescan_under_interleaving() {
+        use crate::util::rng::Xoshiro256pp;
+        let (mut g, _) = DynamicGraph::from_edges(vec![(0, 1), (1, 2), (2, 0)]);
+        let mut buf = UpdateBuffer::new();
+        let mut rng = Xoshiro256pp::new(0xBEEF);
+        for step in 0..400u32 {
+            match rng.next_below(20) {
+                0..=9 => {
+                    let (u, v) = (rng.next_below(30), rng.next_below(30));
+                    buf.register(if rng.next_below(4) == 0 {
+                        EdgeOp::remove(u, v)
+                    } else {
+                        EdgeOp::add(u, v)
+                    });
+                }
+                10..=13 => buf.register(EdgeOp::AddVertex(rng.next_below(40))),
+                14..=15 => buf.register(EdgeOp::RemoveVertex(rng.next_below(40))),
+                16..=17 => {
+                    buf.apply(&mut g).unwrap();
+                }
+                _ => buf.clear(),
+            }
+            assert_eq!(buf.statistics(&g), rescan(&buf, &g), "step {step}");
+        }
     }
 }

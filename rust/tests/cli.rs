@@ -101,6 +101,80 @@ fn figures_requires_a_selection() {
     assert!(stderr.contains("--fig") || stderr.contains("--all"));
 }
 
+/// Full protocol run against the real binary: `serve` on an ephemeral
+/// port, two clients connected at once, vertex ops (`add_vertex` /
+/// `remove_vertex`), the `top` fast path, `rank`, `stats`, and a clean
+/// shutdown.
+#[test]
+fn serve_speaks_the_line_protocol_with_concurrent_clients() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::process::Stdio;
+    use veilgraph::util::json::Json;
+
+    let mut child = bin()
+        .args(["serve", "--addr", "127.0.0.1:0", "--no-xla", "--queue", "1024"])
+        .env("VEILGRAPH_LOG", "info")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    // The listening line goes to stderr via the logger.
+    let stderr = child.stderr.take().unwrap();
+    let mut err_lines = BufReader::new(stderr).lines();
+    let addr = loop {
+        let line = err_lines.next().expect("serve exited before listening").unwrap();
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.trim().to_string();
+        }
+    };
+
+    let send = |c: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str| -> Json {
+        c.write_all(req.as_bytes()).unwrap();
+        c.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+    };
+    let mut c1 = TcpStream::connect(&addr).unwrap();
+    let mut r1 = BufReader::new(c1.try_clone().unwrap());
+    let mut c2 = TcpStream::connect(&addr).unwrap(); // simultaneous client
+    let mut r2 = BufReader::new(c2.try_clone().unwrap());
+
+    // Build a tiny graph over the wire: vertex ops + edges.
+    let resp = send(&mut c1, &mut r1, r#"{"op":"add_vertex","id":50}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    for req in [
+        r#"{"op":"add","src":1,"dst":2}"#,
+        r#"{"op":"add","src":2,"dst":3}"#,
+        r#"{"op":"add","src":3,"dst":1}"#,
+        r#"{"op":"add","src":50,"dst":1}"#,
+    ] {
+        assert_eq!(send(&mut c1, &mut r1, req).get("ok").unwrap().as_bool(), Some(true));
+    }
+    let resp = send(&mut c1, &mut r1, r#"{"op":"remove_vertex","id":50}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    let resp = send(&mut c1, &mut r1, r#"{"op":"query","top":3}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
+
+    // Client 2 reads off the published snapshot while client 1 is live.
+    let resp = send(&mut c2, &mut r2, r#"{"op":"top","k":2}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 2);
+    let resp = send(&mut c2, &mut r2, r#"{"op":"rank","id":1}"#);
+    assert!(resp.get("rank").unwrap().as_f64().is_some(), "vertex 1 is ranked");
+    let resp = send(&mut c2, &mut r2, r#"{"op":"rank","id":999}"#);
+    assert_eq!(resp.get("rank"), Some(&Json::Null), "unknown vertex has no rank");
+    let resp = send(&mut c2, &mut r2, r#"{"op":"stats"}"#);
+    assert!(resp.get("stats").unwrap().get("serving").is_some());
+
+    let resp = send(&mut c2, &mut r2, r#"{"op":"shutdown"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    let status = child.wait().expect("serve exits after shutdown");
+    assert!(status.success(), "serve exit status {status:?}");
+}
+
 #[test]
 fn info_reports_artifacts_when_present() {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -7,7 +7,6 @@ use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::policies::{AlwaysExact, ChangeRatioPolicy, SlaPolicy, SlaTier};
 use veilgraph::coordinator::udf::Action;
 use veilgraph::graph::generate;
-use veilgraph::metrics::ranking::top_k_ids;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::pagerank::power::PageRankConfig;
 use veilgraph::stream::event::{EdgeOp, UpdateEvent};
@@ -45,13 +44,9 @@ fn paper_protocol_keeps_rbo_high_with_small_summaries() {
     let mut rbo_sum = 0.0;
     let mut vr_sum = 0.0;
     for (a, e) in ra.iter().zip(&re) {
-        let rbo = rbo_ext(
-            &top_k_ids(&a.ids, &a.ranks, 500),
-            &top_k_ids(&e.ids, &e.ranks, 500),
-            0.99,
-        );
+        let rbo = rbo_ext(&a.top_ids(500), &e.top_ids(500), 0.99);
         rbo_sum += rbo;
-        vr_sum += a.exec.summary_vertices as f64 / a.ids.len() as f64;
+        vr_sum += a.exec.summary_vertices as f64 / a.ids().len() as f64;
     }
     let rbo_avg = rbo_sum / 10.0;
     let vr_avg = vr_sum / 10.0;
@@ -101,7 +96,7 @@ fn vertex_removal_keeps_engine_consistent() {
     e.ingest(EdgeOp::RemoveVertex(2));
     let r = e.query().unwrap();
     assert_eq!(e.graph().num_edges(), 2); // 0->1 and 3->0 survive
-    assert_eq!(r.ranks.len(), 4);
+    assert_eq!(r.ranks().len(), 4);
     // another query still works
     let _ = e.query().unwrap();
 }
@@ -162,7 +157,7 @@ fn malformed_stream_operations_are_tolerated() {
     e.ingest(EdgeOp::add(2, 0)); // legitimate
     let r = e.query().unwrap();
     assert_eq!(e.graph().num_edges(), 3);
-    assert!(r.ranks.iter().all(|&x| x.is_finite()));
+    assert!(r.ranks().iter().all(|&x| x.is_finite()));
 }
 
 /// A long stream with interleaved empty queries: query count, metrics and
@@ -210,10 +205,6 @@ fn rbo_decays_gracefully_not_catastrophically() {
         .unwrap();
     let ra = approx.run_stream(events.clone()).unwrap();
     let re = exact.run_stream(events).unwrap();
-    let last_rbo = rbo_ext(
-        &top_k_ids(&ra[19].ids, &ra[19].ranks, 500),
-        &top_k_ids(&re[19].ids, &re[19].ranks, 500),
-        0.99,
-    );
+    let last_rbo = rbo_ext(&ra[19].top_ids(500), &re[19].top_ids(500), 0.99);
     assert!(last_rbo > 0.9, "RBO after 20 queries {last_rbo}");
 }

@@ -717,9 +717,54 @@ fn prop_engine_rank_vector_integrity() {
                 }
             }
             let r = engine.query().unwrap();
-            assert_eq!(r.ranks.len(), engine.graph().num_vertices());
-            assert_eq!(r.ids.len(), r.ranks.len());
-            assert!(r.ranks.iter().all(|&x| x.is_finite() && x >= 0.0));
+            assert_eq!(r.ranks().len(), engine.graph().num_vertices());
+            assert_eq!(r.ids().len(), r.ranks().len());
+            assert!(r.ranks().iter().all(|&x| x.is_finite() && x >= 0.0));
+        }
+    });
+}
+
+/// Read/write-split invariant: after every query, the published snapshot
+/// IS the engine's current ranking — same ranks, same ids, same graph
+/// version — and its precomputed top-K index matches a fresh selection
+/// over that snapshot's own data.
+#[test]
+fn prop_published_snapshot_matches_engine_state() {
+    forall(20, 0xA9, |g| {
+        let base = g.edges(25, 70);
+        let cap = g.usize(1..20);
+        let mut engine = EngineBuilder::new()
+            .params(random_params(g))
+            .published_top_k(cap)
+            .build_from_edges(base)
+            .unwrap();
+        let mut last_version = engine.latest_snapshot().version;
+        for _ in 0..g.usize(1..6) {
+            for _ in 0..g.usize(0..12) {
+                let (u, v) = (g.u64(0..40), g.u64(0..40));
+                if u == v {
+                    continue;
+                }
+                match g.usize(0..10) {
+                    0 => engine.ingest(EdgeOp::remove(u, v)),
+                    1 => engine.ingest(EdgeOp::AddVertex(u)),
+                    _ => engine.ingest(EdgeOp::add(u, v)),
+                }
+            }
+            let r = engine.query().unwrap();
+            let snap = engine.latest_snapshot();
+            assert!(std::sync::Arc::ptr_eq(&r.snapshot, &snap), "query returns the published Arc");
+            assert_eq!(snap.ranks, engine.ranks(), "published ranks == engine ranks");
+            assert_eq!(snap.ids, engine.graph().ids(), "published ids == graph ids");
+            assert_eq!(snap.graph_version, engine.graph().version());
+            assert!(snap.version >= last_version, "versions never move backwards");
+            last_version = snap.version;
+            let k = snap.top_k_cap();
+            assert_eq!(
+                snap.top_ids(k),
+                top_k_ids(&snap.ids, &snap.ranks, k),
+                "precomputed top-K index == fresh deterministic selection"
+            );
         }
     });
 }

@@ -1,0 +1,255 @@
+//! Read/write-split serving: concurrency acceptance tests.
+//!
+//! * A blocked writer (recompute in progress) must never block snapshot
+//!   readers.
+//! * Readers hammering the snapshot slot while the writer publishes must
+//!   never observe a torn snapshot (version / ids / ranks / top-K index
+//!   mutually inconsistent).
+//! * The TCP front end must serve ≥ 2 simultaneous clients and enforce
+//!   its connection cap.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::{serve_listener, ServeOptions, ServerHandle};
+use veilgraph::coordinator::udf::{Action, QueryContext, UdfSuite};
+use veilgraph::metrics::ranking::top_k_ids;
+use veilgraph::stream::backpressure::OverflowPolicy;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::util::json::Json;
+
+fn ring(n: u64) -> Vec<(u64, u64)> {
+    (0..n).map(|i| (i, (i + 1) % n)).collect()
+}
+
+/// A UDF whose `on_query` parks until released — a deterministic stand-in
+/// for an arbitrarily slow recompute holding the engine thread.
+struct GatedSuite {
+    entered: Arc<AtomicBool>,
+    release: Arc<AtomicBool>,
+}
+
+impl UdfSuite for GatedSuite {
+    fn on_query(&mut self, _ctx: &QueryContext) -> Action {
+        self.entered.store(true, Ordering::SeqCst);
+        while !self.release.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Action::ComputeApproximate
+    }
+}
+
+/// Acceptance: read-only top-k requests are served from the published
+/// snapshot while the writer is provably stuck inside a query — no
+/// timing assumptions, the writer is gated on an atomic the test flips.
+#[test]
+fn blocked_writer_does_not_block_snapshot_readers() {
+    let entered = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let engine = EngineBuilder::new()
+        .udf(Box::new(GatedSuite {
+            entered: Arc::clone(&entered),
+            release: Arc::clone(&release),
+        }))
+        .build_from_edges(ring(30))
+        .unwrap();
+    let h = Arc::new(ServerHandle::spawn(engine, 64, OverflowPolicy::Block));
+    let reader = h.reader();
+    let baseline = reader.latest();
+    assert_eq!(baseline.version, 1);
+
+    // Writer: one query that will park inside on_query.
+    h.ingest(EdgeOp::add(0, 15)).unwrap();
+    let writer_done = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let h2 = Arc::clone(&h);
+        let done = Arc::clone(&writer_done);
+        std::thread::spawn(move || {
+            let r = h2.query().unwrap();
+            done.store(true, Ordering::SeqCst);
+            r
+        })
+    };
+    while !entered.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // The writer is inside the engine. Reads must all complete now.
+    for _ in 0..500 {
+        let top = reader.top(10);
+        assert_eq!(top.len(), 10);
+        assert_eq!(reader.latest().version, 1, "nothing published mid-query");
+        assert!(reader.rank(0).is_some());
+    }
+    let _ = reader.stats_json();
+    assert!(
+        !writer_done.load(Ordering::SeqCst),
+        "writer must still be blocked after 500 reads — reads bypassed the queue"
+    );
+
+    release.store(true, Ordering::SeqCst);
+    let r = writer.join().unwrap();
+    assert_eq!(r.snapshot.version, 2, "released writer publishes the recompute");
+    assert_eq!(reader.latest().version, 2);
+    match Arc::try_unwrap(h) {
+        Ok(h) => h.shutdown(),
+        Err(_) => panic!("handle clones outlived the test"),
+    }
+}
+
+/// Readers racing a continuously publishing writer never observe a torn
+/// snapshot: every observed snapshot is internally consistent (lengths,
+/// top-K index vs a fresh selection over its own data, id lookups), and
+/// versions are monotone per reader.
+#[test]
+fn readers_never_observe_a_torn_snapshot() {
+    let engine = EngineBuilder::new()
+        .published_top_k(16)
+        .build_from_edges(ring(40))
+        .unwrap();
+    let h = Arc::new(ServerHandle::spawn(engine, 4096, OverflowPolicy::Block));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let mut readers = Vec::new();
+    for _ in 0..4 {
+        let reader = h.reader();
+        let done2 = Arc::clone(&done);
+        readers.push(std::thread::spawn(move || {
+            let mut last_version = 0u64;
+            let mut observed = 0u64;
+            while !done2.load(Ordering::SeqCst) {
+                let s = reader.latest();
+                assert_eq!(s.ids.len(), s.ranks.len(), "ids and ranks travel together");
+                assert!(s.version >= last_version, "version went backwards");
+                last_version = s.version;
+                let k = s.top_k_cap();
+                assert_eq!(
+                    s.top_ids(k),
+                    top_k_ids(&s.ids, &s.ranks, k),
+                    "top-K index inconsistent with its own ids/ranks at v{}",
+                    s.version
+                );
+                for (v, score) in s.top(4) {
+                    assert_eq!(s.rank_of(v), Some(score), "rank_of disagrees with top");
+                }
+                observed += 1;
+            }
+            observed
+        }));
+    }
+
+    // Writer: 30 rounds of mutate + query (each publishes a new version).
+    for round in 0..30u64 {
+        for i in 0..8u64 {
+            h.ingest(EdgeOp::add(100 + round * 8 + i, (i * 7 + round) % 40)).unwrap();
+        }
+        let _ = h.query().unwrap();
+    }
+    done.store(true, Ordering::SeqCst);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "reader made progress");
+    }
+    assert_eq!(h.reader().latest().version, 31, "30 mutated queries after the initial publish");
+    match Arc::try_unwrap(h) {
+        Ok(h) => h.shutdown(),
+        Err(_) => panic!("handle clones outlived the test"),
+    }
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+}
+
+/// The concurrent TCP front end serves two simultaneous clients: both
+/// stay connected the whole time, and each gets responses while the
+/// other's connection is open (the serial server would park client 2
+/// until client 1 disconnected).
+#[test]
+fn tcp_server_handles_two_simultaneous_clients() {
+    let engine = EngineBuilder::new().build_from_edges(ring(20)).unwrap();
+    let h = ServerHandle::spawn(engine, 256, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(h, listener, ServeOptions { max_connections: 8 }).unwrap();
+    });
+
+    let mut c1 = TcpStream::connect(addr).unwrap();
+    let mut c2 = TcpStream::connect(addr).unwrap();
+    c1.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r1 = BufReader::new(c1.try_clone().unwrap());
+    let mut r2 = BufReader::new(c2.try_clone().unwrap());
+
+    // Interleave requests across the two live connections.
+    send_line(&mut c1, r#"{"op":"top","k":3}"#);
+    let resp = read_json_line(&mut r1);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
+
+    send_line(&mut c2, r#"{"op":"top","k":5}"#);
+    let resp = read_json_line(&mut r2);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "c2 served while c1 is connected");
+    assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 5);
+
+    send_line(&mut c1, r#"{"op":"add","src":0,"dst":10}"#);
+    assert_eq!(read_json_line(&mut r1).get("ok").unwrap().as_bool(), Some(true));
+    send_line(&mut c1, r#"{"op":"query","top":2}"#);
+    let q = read_json_line(&mut r1);
+    assert_eq!(q.get("ok").unwrap().as_bool(), Some(true));
+
+    send_line(&mut c2, r#"{"op":"stats"}"#);
+    let stats = read_json_line(&mut r2);
+    let serving = stats.get("stats").unwrap().get("serving").unwrap();
+    assert!(serving.get("version").unwrap().as_u64().unwrap() >= 2, "c2 sees c1's recompute");
+
+    // c2 shuts the server down while c1 is still connected.
+    send_line(&mut c2, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r2).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
+
+/// Clients beyond the connection cap get one error line and a closed
+/// stream; clients within the cap are unaffected.
+#[test]
+fn tcp_server_enforces_connection_cap() {
+    let engine = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+    let h = ServerHandle::spawn(engine, 64, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(h, listener, ServeOptions { max_connections: 1 }).unwrap();
+    });
+
+    let mut c1 = TcpStream::connect(addr).unwrap();
+    c1.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r1 = BufReader::new(c1.try_clone().unwrap());
+    // Round-trip on c1 proves it is accepted and registered.
+    send_line(&mut c1, r#"{"op":"top","k":1}"#);
+    assert_eq!(read_json_line(&mut r1).get("ok").unwrap().as_bool(), Some(true));
+
+    // c2 is over the cap: one error line, then EOF.
+    let c2 = TcpStream::connect(addr).unwrap();
+    c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r2 = BufReader::new(c2);
+    let reject = read_json_line(&mut r2);
+    assert_eq!(reject.get("ok").unwrap().as_bool(), Some(false));
+    assert!(reject.get("error").unwrap().as_str().unwrap().contains("capacity"));
+    let mut rest = String::new();
+    assert_eq!(r2.read_line(&mut rest).unwrap(), 0, "rejected stream is closed");
+
+    send_line(&mut c1, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r1).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
