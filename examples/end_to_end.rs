@@ -23,7 +23,7 @@ use veilgraph::metrics::ranking::rbo_depth_for_density;
 use veilgraph::metrics::rbo::rbo_ext;
 use veilgraph::pagerank::power::PageRankConfig;
 use veilgraph::runtime::executor::Backend;
-use veilgraph::stream::event::UpdateEvent;
+use veilgraph::stream::event::{EdgeOp, UpdateEvent};
 use veilgraph::stream::source::{chunked_events, split_stream, update_density};
 use veilgraph::summary::params::SummaryParams;
 use veilgraph::util::timer::Stopwatch;
@@ -85,15 +85,17 @@ fn main() -> veilgraph::error::Result<()> {
 
     // ---- 4. replay -------------------------------------------------------
     let mut rows = Vec::new();
-    let mut approx_events = events.clone().into_iter();
-    let mut exact_events = events.into_iter();
+    let mut events = events.into_iter();
     let mut xla_queries = 0usize;
     loop {
-        // step both engines to the next query boundary
+        // step to the next query boundary, shipping each op run into
+        // BOTH engines as one coalescible batch (the write path's wire
+        // shape) — one event cursor drives the pair
         let mut query_now = false;
-        for ev in approx_events.by_ref() {
+        let mut batch: Vec<EdgeOp> = Vec::new();
+        for ev in events.by_ref() {
             match ev {
-                UpdateEvent::Op(op) => approx.ingest(op),
+                UpdateEvent::Op(op) => batch.push(op),
                 UpdateEvent::Query => {
                     query_now = true;
                     break;
@@ -101,12 +103,9 @@ fn main() -> veilgraph::error::Result<()> {
                 UpdateEvent::Stop => break,
             }
         }
-        for ev in exact_events.by_ref() {
-            match ev {
-                UpdateEvent::Op(op) => exact.ingest(op),
-                UpdateEvent::Query => break,
-                UpdateEvent::Stop => break,
-            }
+        if !batch.is_empty() {
+            approx.ingest_batch(batch.iter().copied());
+            exact.ingest_batch(batch);
         }
         if !query_now {
             break;

@@ -23,11 +23,14 @@ fn main() -> veilgraph::error::Result<()> {
     println!("initial exact PageRank done (measurement point 0)\n");
 
     // Stream three batches of updates, querying after each (Alg. 1).
+    // `ingest_batch` registers each batch in one call; the apply step
+    // coalesces it (duplicates collapse, add+remove pairs cancel) before
+    // mutating the graph row-by-row.
     for batch in 0..3u64 {
-        for i in 0..25u64 {
-            // new vertices attaching to the old core
-            engine.ingest(EdgeOp::add(2_000 + batch * 100 + i, i * 7 % 500));
-        }
+        // new vertices attaching to the old core
+        let ops: Vec<EdgeOp> =
+            (0..25u64).map(|i| EdgeOp::add(2_000 + batch * 100 + i, i * 7 % 500)).collect();
+        engine.ingest_batch(ops);
         let result = engine.query()?;
         println!(
             "query {}: action={}, |K|={} of {} vertices ({:.1}%), \

@@ -28,20 +28,29 @@ fn main() -> veilgraph::error::Result<()> {
         .build_from_edges(base)?;
     let server = Arc::new(ServerHandle::spawn(engine, 8_192, OverflowPolicy::Block));
 
-    // 4 producer threads: new users following existing accounts, plus
-    // some unfollows.
+    // 4 producer threads: new users following existing accounts. Each
+    // producer ships its follows as atomic 64-op batches — one queue
+    // slot per batch instead of one per follow (the wire `batch` op in
+    // miniature).
     let producers: Vec<_> = (0..4u64)
         .map(|t| {
             let s = Arc::clone(&server);
             std::thread::spawn(move || {
                 let mut rng = Xoshiro256pp::new(1000 + t);
+                let mut batch: Vec<EdgeOp> = Vec::with_capacity(64);
                 for i in 0..2_000u64 {
                     let new_user = 100_000 + t * 10_000 + i;
                     // follow 1-3 popular accounts (low ids are oldest/hubs)
                     for _ in 0..rng.range(1, 4) {
                         let target = rng.next_below(n0 / 10);
-                        let _ = s.ingest(EdgeOp::add(new_user, target));
+                        batch.push(EdgeOp::add(new_user, target));
                     }
+                    if batch.len() >= 64 {
+                        let _ = s.ingest_batch(std::mem::take(&mut batch));
+                    }
+                }
+                if !batch.is_empty() {
+                    let _ = s.ingest_batch(batch);
                 }
             })
         })

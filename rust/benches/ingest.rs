@@ -1,0 +1,209 @@
+//! `cargo bench --bench ingest` — write-path benchmark for the batched
+//! ingestion pipeline.
+//!
+//! Two measurements:
+//! * **Wire**: a TCP client registering N edges as one request per op
+//!   (one round-trip each) vs `{"op":"batch","ops":[…]}` lines of 512
+//!   ops (one round-trip per 512). The `ingest_batch_vs_per_op` ratio is
+//!   the headline: what a client gains by batching its writes.
+//! * **Apply**: draining a pending buffer into the graph op-by-op
+//!   (`UpdateBuffer::apply`) vs coalesce + grouped `apply_batch`, on a
+//!   duplicate-free stream (coalescing off — pure grouped-apply cost)
+//!   and a duplicate/cancel-heavy stream (coalescing on).
+//!
+//! Emits `results/ingest_bench.json` and — when the serving bench ran
+//! first (CI does) — merges `results/bench_4.json` into
+//! `results/bench_5.json`, the BENCH_5 perf-trajectory artifact
+//! (superset of the BENCH_4 schema plus the ingest speedups).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::{serve_listener, ServeOptions, ServerHandle};
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::generate;
+use veilgraph::stream::backpressure::OverflowPolicy;
+use veilgraph::stream::buffer::UpdateBuffer;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::util::json::Json;
+
+const WIRE_OPS: usize = 2_000;
+const WIRE_BATCH: usize = 512;
+const APPLY_OPS: usize = 40_000;
+const APPLY_ROUNDS: usize = 5;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// One request per line, one response per line — the client pays a full
+/// round-trip per call, exactly like a driver without batch support.
+fn wire_per_op(c: &mut TcpStream, r: &mut BufReader<TcpStream>, base: u64, n: usize) -> f64 {
+    let mut line = String::new();
+    let t0 = Instant::now();
+    for i in 0..n as u64 {
+        let req = format!("{{\"op\":\"add\",\"src\":{},\"dst\":{}}}\n", base + i, i % 10_000);
+        c.write_all(req.as_bytes()).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("true"), "write rejected: {line}");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// The same op count shipped as `batch` lines of `WIRE_BATCH` ops.
+fn wire_batched(c: &mut TcpStream, r: &mut BufReader<TcpStream>, base: u64, n: usize) -> f64 {
+    let mut line = String::new();
+    let t0 = Instant::now();
+    let mut i = 0u64;
+    while (i as usize) < n {
+        let take = WIRE_BATCH.min(n - i as usize) as u64;
+        let ops: Vec<String> = (i..i + take)
+            .map(|j| format!("{{\"op\":\"add\",\"src\":{},\"dst\":{}}}", base + j, j % 10_000))
+            .collect();
+        let req = format!("{{\"op\":\"batch\",\"ops\":[{}]}}\n", ops.join(","));
+        c.write_all(req.as_bytes()).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("true"), "batch rejected: {line}");
+        i += take;
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Op-by-op reference drain vs coalesce + grouped apply, median of
+/// `APPLY_ROUNDS` runs each. Returns (seq_secs, batch_secs, effective).
+fn apply_pair(base: &DynamicGraph, ops: &[EdgeOp]) -> (f64, f64, usize) {
+    let mut seq_times = Vec::new();
+    let mut batch_times = Vec::new();
+    let mut effective = 0;
+    for _ in 0..APPLY_ROUNDS {
+        let mut g = base.clone();
+        let mut buf = UpdateBuffer::new();
+        buf.register_batch(ops.iter().copied());
+        let t0 = Instant::now();
+        buf.apply(&mut g).unwrap();
+        seq_times.push(t0.elapsed().as_secs_f64());
+
+        let mut g = base.clone();
+        let mut buf = UpdateBuffer::new();
+        buf.register_batch(ops.iter().copied());
+        let t0 = Instant::now();
+        let batch = buf.take_batch(&g);
+        g.apply_batch(batch.ops(), None, 1);
+        batch_times.push(t0.elapsed().as_secs_f64());
+        effective = batch.effective_ops();
+    }
+    (median(seq_times), median(batch_times), effective)
+}
+
+fn main() {
+    // ---- wire: per-op vs batched writes over TCP ----------------------
+    let engine = EngineBuilder::new()
+        .build_from_edges(generate::copying_web(10_000, 8, 0.7, 42))
+        .expect("build engine");
+    let handle = ServerHandle::spawn(engine, 1 << 16, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(handle, listener, ServeOptions::default()).unwrap();
+    });
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+    // Warm up the connection and allocator off the clock.
+    wire_per_op(&mut c, &mut r, 500_000, 100);
+    let per_op_secs = wire_per_op(&mut c, &mut r, 1_000_000, WIRE_OPS);
+    let batch_secs = wire_batched(&mut c, &mut r, 2_000_000, WIRE_OPS);
+    let wire_speedup = per_op_secs / batch_secs;
+    println!("wire: {WIRE_OPS} ops per-op {per_op_secs:.4}s, x{WIRE_BATCH} {batch_secs:.4}s");
+    println!("ingest_batch_vs_per_op: {wire_speedup:.1}x");
+    c.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    server.join().unwrap();
+
+    // ---- apply: op-by-op vs coalesce + grouped batch ------------------
+    let (base, _) = DynamicGraph::from_edges(generate::copying_web(20_000, 10, 0.7, 7));
+    // Coalescing off: every op is a distinct effective add.
+    let unique: Vec<EdgeOp> =
+        (0..APPLY_OPS as u64).map(|i| EdgeOp::add(100_000 + i, i % 20_000)).collect();
+    let (squ, sbu, eff_u) = apply_pair(&base, &unique);
+    // Coalescing on: 4 raw edge ops per pair collapse to 1 surviving add
+    // (+1 synthesized AddVertex, each src is fresh) — ~2x coalescing.
+    let mut heavy: Vec<EdgeOp> = Vec::with_capacity(APPLY_OPS);
+    for i in 0..(APPLY_OPS / 4) as u64 {
+        let (u, v) = (300_000 + i, i % 20_000);
+        heavy.push(EdgeOp::add(u, v));
+        heavy.push(EdgeOp::remove(u, v));
+        heavy.push(EdgeOp::add(u, v));
+        heavy.push(EdgeOp::add(u, v));
+    }
+    let (sqh, sbh, eff_h) = apply_pair(&base, &heavy);
+    let apply_speedup_unique = squ / sbu;
+    let apply_speedup_heavy = sqh / sbh;
+    let (su, sh) = (apply_speedup_unique, apply_speedup_heavy);
+    println!("apply unique:    seq {squ:.4}s vs batch {sbu:.4}s ({su:.2}x), eff {eff_u}");
+    println!("apply coalesced: seq {sqh:.4}s vs batch {sbh:.4}s ({sh:.2}x), eff {eff_h}");
+
+    // ---- machine-readable artifact ------------------------------------
+    std::fs::create_dir_all("results").ok();
+    let ingest = Json::obj(vec![
+        (
+            "wire",
+            Json::obj(vec![
+                ("ops", Json::Num(WIRE_OPS as f64)),
+                ("batch_size", Json::Num(WIRE_BATCH as f64)),
+                ("per_op_secs", Json::Num(per_op_secs)),
+                ("batch_secs", Json::Num(batch_secs)),
+            ]),
+        ),
+        (
+            "apply",
+            Json::obj(vec![
+                ("ops", Json::Num(APPLY_OPS as f64)),
+                ("seq_secs_unique", Json::Num(squ)),
+                ("batch_secs_unique", Json::Num(sbu)),
+                ("effective_unique", Json::Num(eff_u as f64)),
+                ("seq_secs_coalesced", Json::Num(sqh)),
+                ("batch_secs_coalesced", Json::Num(sbh)),
+                ("effective_coalesced", Json::Num(eff_h as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("results/ingest_bench.json", ingest.to_string_pretty())
+        .expect("write ingest json");
+    println!("JSON written to results/ingest_bench.json");
+
+    // BENCH_5 = BENCH_4 schema (micro + serving) + the ingest ratios.
+    let mut doc = std::fs::read_to_string("results/bench_4.json")
+        .or_else(|_| std::fs::read_to_string("results/micro_bench.json"))
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .unwrap_or_else(|| Json::obj(Vec::new()));
+    if let Json::Obj(map) = &mut doc {
+        let ratios = [
+            ("ingest_batch_vs_per_op", wire_speedup),
+            ("ingest_apply_batch_vs_seq", apply_speedup_unique),
+            ("ingest_apply_coalesced_vs_seq", apply_speedup_heavy),
+        ];
+        match map.get_mut("speedups") {
+            Some(Json::Obj(speedups)) => {
+                for (k, v) in ratios {
+                    speedups.insert(k.into(), Json::Num(v));
+                }
+            }
+            _ => {
+                map.insert(
+                    "speedups".into(),
+                    Json::obj(ratios.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
+                );
+            }
+        }
+        map.insert("ingest".into(), ingest);
+    }
+    std::fs::write("results/bench_5.json", doc.to_string_pretty()).expect("write bench_5 json");
+    println!("JSON written to results/bench_5.json");
+}

@@ -144,6 +144,9 @@ mod tests {
             num_vertices: total,
             num_edges: total * 3,
             queries_since_exact: 0,
+            snapshot_age_queries: 0,
+            snapshot_age_secs: 0.0,
+            updates_since_refresh: 0,
         }
     }
 

@@ -22,7 +22,7 @@
 //! ([`crate::coordinator::server`]) wraps it behind a queue for
 //! concurrent producers.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::coordinator::serving::{
@@ -292,6 +292,9 @@ impl EngineBuilder {
             carry_new_vertices: Vec::new(),
             query_count: ckpt.query_count,
             queries_since_exact: 0,
+            last_publish: std::time::Instant::now(),
+            queries_since_publish: 0,
+            updates_since_refresh: 0,
             stopped: false,
         };
         // Re-publish the restored ranking so readers can serve before the
@@ -334,6 +337,9 @@ impl EngineBuilder {
             carry_new_vertices: Vec::new(),
             query_count: 0,
             queries_since_exact: 0,
+            last_publish: std::time::Instant::now(),
+            queries_since_publish: 0,
+            updates_since_refresh: 0,
             stopped: false,
         };
         // Initial complete execution (measurement point 0).
@@ -390,6 +396,15 @@ pub struct Engine {
     carry_new_vertices: Vec<VertexId>,
     query_count: u64,
     queries_since_exact: u64,
+    /// When the engine last published a fresh snapshot (staleness anchor;
+    /// mirrors `RankSnapshot::published_at` of the latest publish).
+    last_publish: std::time::Instant,
+    /// Queries served since that publish (the snapshot-age-in-queries
+    /// gauge staleness policies escalate on).
+    queries_since_publish: u64,
+    /// Effective (coalesced) updates applied since the ranking was last
+    /// recomputed — the accumulated-error proxy for staleness policies.
+    updates_since_refresh: u64,
     stopped: bool,
 }
 
@@ -400,11 +415,62 @@ impl Engine {
         self.metrics.inc("ops_ingested", 1);
     }
 
-    /// Ingest a batch.
+    /// Ingest a batch of operations in one step: one buffer registration
+    /// pass and one metrics update for the whole batch. The ops coalesce
+    /// with everything else pending when the next query applies updates.
+    pub fn ingest_batch(&mut self, ops: impl IntoIterator<Item = EdgeOp>) {
+        let n = self.buffer.register_batch(ops);
+        self.metrics.inc("ops_ingested", n as u64);
+        self.metrics.inc("batches_ingested", 1);
+    }
+
+    /// Ingest a batch (alias of [`Self::ingest_batch`] — routed through
+    /// the batch path, not a per-op `register` loop).
     pub fn ingest_many(&mut self, ops: impl IntoIterator<Item = EdgeOp>) {
-        for op in ops {
-            self.ingest(op);
+        self.ingest_batch(ops);
+    }
+
+    /// The batch-aware ApplyUpdates step: drain + coalesce the pending
+    /// buffer, capture the degree baseline for the hot set, then apply
+    /// the effective ops grouped by row. Surfaces
+    /// `ingest_{coalesce,apply}_secs` timings and raw/effective gauges.
+    fn apply_pending_batch(&mut self) {
+        let sw = Stopwatch::start();
+        let batch = self.buffer.take_batch(&self.graph);
+        self.metrics.time("ingest_coalesce_secs", sw.secs());
+        // Keep the EARLIEST previous degree per vertex across applies
+        // (`d_{t-1}` must survive repeat-last queries to the next
+        // measurement point). Membership goes through a hash set so a
+        // large new-vertex batch stays linear, not O(touched x carried).
+        let mut known_new: HashSet<VertexId> = self.carry_new_vertices.iter().copied().collect();
+        for &id in batch.touched() {
+            match self.graph.index(id) {
+                Some(idx) => {
+                    if !self.carry_prev_degree.contains_key(&id) && !known_new.contains(&id) {
+                        let d = self.graph.degree(idx);
+                        self.carry_prev_degree.insert(id, d);
+                    }
+                }
+                None => {
+                    if known_new.insert(id) {
+                        self.carry_new_vertices.push(id);
+                    }
+                }
+            }
         }
+        let shards = match self.pool.as_deref() {
+            Some(pool) => self.pr_config.effective_shards(pool),
+            None => 1,
+        };
+        let sw = Stopwatch::start();
+        let res = self.graph.apply_batch(batch.ops(), self.pool.as_deref(), shards);
+        self.metrics.time("ingest_apply_secs", sw.secs());
+        self.metrics.inc("applies", 1);
+        self.metrics.inc("batch_raw_ops", batch.raw_ops as u64);
+        self.metrics.inc("batch_effective_ops", batch.effective_ops() as u64);
+        self.metrics.set("last_batch_raw_ops", batch.raw_ops as f64);
+        self.metrics.set("last_batch_effective_ops", batch.effective_ops() as f64);
+        self.updates_since_refresh += res.applied as u64;
     }
 
     /// Serve one query (Alg. 1 lines 6–20).
@@ -417,32 +483,24 @@ impl Engine {
         let query_id = self.query_count;
         let stats = self.buffer.statistics(&self.graph);
 
-        // BeforeUpdates → ApplyUpdates
+        // BeforeUpdates → ApplyUpdates (batched: coalesce, then apply)
         let update = self.udf.before_updates(self.buffer.pending(), &stats);
         if update && !self.buffer.is_empty() {
-            let applied = self.buffer.apply(&mut self.graph)?;
-            // Keep the EARLIEST previous degree per vertex across applies.
-            for (id, d) in applied.prev_degree {
-                if !self.carry_prev_degree.contains_key(&id)
-                    && !self.carry_new_vertices.contains(&id)
-                {
-                    self.carry_prev_degree.insert(id, d);
-                }
-            }
-            for id in applied.new_vertices {
-                if !self.carry_new_vertices.contains(&id) {
-                    self.carry_new_vertices.push(id);
-                }
-            }
-            self.metrics.inc("applies", 1);
+            self.apply_pending_batch();
         }
 
+        let snapshot_age_secs = self.last_publish.elapsed().as_secs_f64();
+        self.metrics.set("snapshot_age_secs", snapshot_age_secs);
+        self.metrics.set("snapshot_age_queries", self.queries_since_publish as f64);
         let ctx = QueryContext {
             query_id,
             stats,
             num_vertices: self.graph.num_vertices(),
             num_edges: self.graph.num_edges(),
             queries_since_exact: self.queries_since_exact,
+            snapshot_age_queries: self.queries_since_publish,
+            snapshot_age_secs,
+            updates_since_refresh: self.updates_since_refresh,
         };
 
         // OnQuery → dispatch
@@ -455,7 +513,10 @@ impl Engine {
             iterations: 0,
         };
         let ranks_len_before = self.ranks.len();
-        let mut ranks_dirty = false;
+        // A recompute actually produced new scores (vs. merely extending
+        // the vector for new vertices) — drives both the publish decision
+        // and the staleness bookkeeping.
+        let mut ranks_refreshed = false;
         match action {
             Action::RepeatLast => {
                 self.extend_ranks_for_new_vertices();
@@ -475,23 +536,31 @@ impl Engine {
                     let default = self.pr_config.init_rank(self.graph.num_vertices());
                     merge_ranks_into(&mut self.ranks, &summary, &res.ranks, default);
                     self.metrics.time("summary_merge_secs", sw_merge.secs());
-                    ranks_dirty = true;
+                    ranks_refreshed = true;
                 } else {
                     self.extend_ranks_for_new_vertices();
                 }
-                self.carry_prev_degree.clear();
-                self.carry_new_vertices.clear();
+                // An empty-summary "approximation" corrected nothing —
+                // then keep the `d_{t-1}` baselines and the accumulated-
+                // updates signal, or sub-threshold drift could never
+                // accumulate into a future hot set / exact refresh.
+                if ranks_refreshed {
+                    self.carry_prev_degree.clear();
+                    self.carry_new_vertices.clear();
+                    self.updates_since_refresh = 0;
+                }
                 self.queries_since_exact += 1;
             }
             Action::ComputeExact => {
                 exec.iterations = self.compute_exact();
                 self.carry_prev_degree.clear();
                 self.carry_new_vertices.clear();
+                self.updates_since_refresh = 0;
                 self.queries_since_exact = 0;
-                ranks_dirty = true;
+                ranks_refreshed = true;
             }
         }
-        ranks_dirty |= self.ranks.len() != ranks_len_before;
+        let ranks_grew = self.ranks.len() != ranks_len_before;
         exec.elapsed_secs = sw.secs();
 
         // Metrics + OnQueryResult
@@ -507,24 +576,57 @@ impl Engine {
         self.metrics.set("last_summary_edges", exec.summary_edges as f64);
         self.udf.on_query_result(&ctx, action, &exec);
 
-        let snapshot = self.publish_result(query_id, action, &exec, ranks_dirty);
+        // Count this query against the published snapshot's age; a fresh
+        // publish below resets the counter.
+        self.queries_since_publish += 1;
+        let snapshot = self.publish_result(query_id, action, &exec, ranks_refreshed, ranks_grew);
         Ok(QueryResult { query_id, action, exec, snapshot })
     }
 
     /// Consume a prepared event stream, returning one result per query.
+    /// Runs of consecutive ops ride the batch path: they are registered
+    /// as one [`Self::ingest_batch`] per run and coalesced at the next
+    /// query's apply step.
     pub fn run_stream(
         &mut self,
         events: impl IntoIterator<Item = UpdateEvent>,
     ) -> Result<Vec<QueryResult>> {
         let mut out = Vec::new();
+        self.run_stream_with(events, |_, r| {
+            out.push(r);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// [`Self::run_stream`] with a per-query callback instead of a
+    /// collected vec — the one batching loop the replay harness and the
+    /// collecting variant both ride (op runs → `ingest_batch` → query).
+    /// The callback sees the engine (post-query) alongside each result.
+    /// Trailing ops after the last query stay buffered, as before.
+    pub fn run_stream_with(
+        &mut self,
+        events: impl IntoIterator<Item = UpdateEvent>,
+        mut on_result: impl FnMut(&Engine, QueryResult) -> Result<()>,
+    ) -> Result<()> {
+        let mut pending: Vec<EdgeOp> = Vec::new();
         for ev in events {
             match ev {
-                UpdateEvent::Op(op) => self.ingest(op),
-                UpdateEvent::Query => out.push(self.query()?),
+                UpdateEvent::Op(op) => pending.push(op),
+                UpdateEvent::Query => {
+                    if !pending.is_empty() {
+                        self.ingest_batch(std::mem::take(&mut pending));
+                    }
+                    let r = self.query()?;
+                    on_result(self, r)?;
+                }
                 UpdateEvent::Stop => break,
             }
         }
-        Ok(out)
+        if !pending.is_empty() {
+            self.ingest_batch(pending);
+        }
+        Ok(())
     }
 
     /// Stop the engine (Alg. 1 `OnStop`); further queries error.
@@ -625,12 +727,27 @@ impl Engine {
         }
     }
 
-    /// Unconditionally freeze the current ranking into a new published
+    /// Freeze the current ranking into a freshly produced published
     /// snapshot (one O(|V|) copy + O(n log n) index build, then atomic
-    /// swap).
+    /// swap) and reset the staleness anchors.
     fn publish_now(&mut self, query_id: u64, action: Action, exec: ExecStats) -> Arc<RankSnapshot> {
+        self.publish_snapshot(query_id, action, exec, None)
+    }
+
+    /// The one publish path. `carry_age_from` distinguishes a genuine
+    /// recompute (None: the ranking is fresh, staleness anchors reset)
+    /// from a republish forced by topology alone (Some: the served ranks
+    /// are as old as they ever were, so the new snapshot inherits the
+    /// previous age anchor and the age gauges keep growing).
+    fn publish_snapshot(
+        &mut self,
+        query_id: u64,
+        action: Action,
+        exec: ExecStats,
+        carry_age_from: Option<std::time::Instant>,
+    ) -> Arc<RankSnapshot> {
         let version = self.published.latest().version + 1;
-        let snap = Arc::new(RankSnapshot::new(
+        let mut snap = RankSnapshot::new(
             version,
             self.graph.version(),
             query_id,
@@ -640,7 +757,14 @@ impl Engine {
             self.ranks.clone(),
             self.published_top_k,
             self.metrics.to_json(),
-        ));
+        );
+        if let Some(at) = carry_age_from {
+            snap.published_at = at;
+        } else {
+            self.queries_since_publish = 0;
+        }
+        self.last_publish = snap.published_at;
+        let snap = Arc::new(snap);
         self.published.publish(Arc::clone(&snap));
         snap
     }
@@ -653,13 +777,29 @@ impl Engine {
         query_id: u64,
         action: Action,
         exec: &ExecStats,
-        ranks_dirty: bool,
+        ranks_refreshed: bool,
+        ranks_grew: bool,
     ) -> Arc<RankSnapshot> {
         let latest = self.published.latest();
-        if latest.version > 0 && !ranks_dirty && latest.graph_version == self.graph.version() {
+        if latest.version > 0
+            && !ranks_refreshed
+            && !ranks_grew
+            && latest.graph_version == self.graph.version()
+        {
             return latest;
         }
-        self.publish_now(query_id, action, exec.clone())
+        // Republished-but-stale ranks (repeat-last after an applied batch,
+        // or a rank vector merely extended for new vertices: readers must
+        // see the new topology, but no recompute happened) keep their age
+        // anchor — otherwise a steady update trickle would pin the
+        // staleness gauges at zero and starve `StalenessPolicy`'s age
+        // escalation.
+        let carry = if !ranks_refreshed && latest.version > 0 {
+            Some(latest.published_at)
+        } else {
+            None
+        };
+        self.publish_snapshot(query_id, action, exec.clone(), carry)
     }
 
     // ---- accessors -----------------------------------------------------
@@ -1218,5 +1358,157 @@ mod tests {
         assert_eq!(snap.query_id, resumed.query_count());
         assert!(snap.version > 0);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn batch_ingest_matches_per_op_ingest() {
+        let base = crate::graph::generate::barabasi_albert(150, 3, 0.3, 9);
+        let mut a = EngineBuilder::new().build_from_edges(base.iter().copied()).unwrap();
+        let mut b = EngineBuilder::new().build_from_edges(base.iter().copied()).unwrap();
+        let ops: Vec<EdgeOp> = (0..40u64)
+            .map(|i| {
+                if i % 4 == 3 {
+                    EdgeOp::remove(i % 10, (i + 1) % 10)
+                } else {
+                    EdgeOp::add(200 + i, i % 50)
+                }
+            })
+            .collect();
+        for op in ops.clone() {
+            a.ingest(op);
+        }
+        b.ingest_batch(ops);
+        let ra = a.query().unwrap();
+        let rb = b.query().unwrap();
+        assert_eq!(ra.action, rb.action);
+        assert_eq!(ra.ranks(), rb.ranks());
+        assert_eq!(a.graph().num_edges(), b.graph().num_edges());
+        assert_eq!(b.metrics().counter("batches_ingested"), 1);
+        assert_eq!(b.metrics().counter("ops_ingested"), 40);
+    }
+
+    #[test]
+    fn batch_apply_surfaces_coalescing_metrics() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+        e.ingest(EdgeOp::add(0, 5));
+        e.ingest(EdgeOp::add(0, 5)); // duplicate: collapses
+        e.ingest(EdgeOp::add(7, 3));
+        e.ingest(EdgeOp::remove(7, 3)); // cancels outright (7, 3 both exist)
+        let _ = e.query().unwrap();
+        assert_eq!(e.metrics().counter("batch_raw_ops"), 4);
+        assert_eq!(e.metrics().counter("batch_effective_ops"), 1, "only add(0,5) survives");
+        assert_eq!(e.metrics().gauge("last_batch_raw_ops"), Some(4.0));
+        assert_eq!(e.metrics().gauge("last_batch_effective_ops"), Some(1.0));
+        assert!(e.metrics().timing("ingest_coalesce_secs").is_some());
+        assert!(e.metrics().timing("ingest_apply_secs").is_some());
+        assert!(e.graph().has_edge(0, 5));
+        assert!(!e.graph().has_edge(7, 3));
+    }
+
+    #[test]
+    fn staleness_context_tracks_age_and_updates() {
+        let log = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        struct Capture(std::sync::Arc<std::sync::Mutex<Vec<(u64, f64, u64)>>>);
+        impl UdfSuite for Capture {
+            fn on_query(&mut self, ctx: &QueryContext) -> Action {
+                self.0.lock().unwrap().push((
+                    ctx.snapshot_age_queries,
+                    ctx.snapshot_age_secs,
+                    ctx.updates_since_refresh,
+                ));
+                if ctx.updates_since_refresh > 0 {
+                    Action::ComputeApproximate
+                } else {
+                    Action::RepeatLast
+                }
+            }
+        }
+        let mut e = EngineBuilder::new()
+            .udf(Box::new(Capture(Arc::clone(&log))))
+            .build_from_edges(ring(12))
+            .unwrap();
+        let _ = e.query().unwrap(); // repeat-last: no publish, snapshot ages
+        let _ = e.query().unwrap();
+        e.ingest(EdgeOp::add(0, 6));
+        let _ = e.query().unwrap(); // approximate: publishes, resets the age
+        let _ = e.query().unwrap();
+        let v: Vec<(u64, f64, u64)> = log.lock().unwrap().clone();
+        assert_eq!(v[0].0, 0, "initial publish just happened");
+        assert_eq!(v[1].0, 1, "one repeat-last query aged the snapshot");
+        assert_eq!((v[2].0, v[2].2), (2, 1), "applied batch counts toward staleness");
+        assert_eq!((v[3].0, v[3].2), (0, 0), "approximate publish reset age and updates");
+        assert!(v.iter().all(|x| x.1 >= 0.0));
+        assert!(e.metrics().gauge("snapshot_age_queries").is_some());
+        assert!(e.metrics().gauge("snapshot_age_secs").is_some());
+    }
+
+    #[test]
+    fn stale_republish_keeps_the_age_anchor() {
+        // A repeat-last query right after an applied batch republishes
+        // (readers must see the new topology) but the ranking was NOT
+        // recomputed — the staleness anchors must keep growing, or a
+        // steady update trickle would pin the age gauges at zero.
+        struct AlwaysRepeat;
+        impl UdfSuite for AlwaysRepeat {
+            fn on_query(&mut self, _: &QueryContext) -> Action {
+                Action::RepeatLast
+            }
+        }
+        let mut e = EngineBuilder::new()
+            .udf(Box::new(AlwaysRepeat))
+            .build_from_edges(ring(10))
+            .unwrap();
+        let t0 = e.latest_snapshot().published_at;
+        e.ingest(EdgeOp::add(0, 5)); // existing vertices: ranks length stays
+        let r1 = e.query().unwrap();
+        assert_eq!(r1.snapshot.version, 2, "topology moved: fresh snapshot version");
+        assert_eq!(r1.snapshot.published_at, t0, "stale ranking keeps its age anchor");
+        e.ingest(EdgeOp::add(1, 6));
+        let r2 = e.query().unwrap();
+        assert_eq!(r2.snapshot.published_at, t0, "anchor survives repeated republishes");
+        // A NEW vertex extends the rank vector — a publish, not a
+        // recompute: the anchor must survive that too.
+        e.ingest(EdgeOp::add(50, 0));
+        let r3 = e.query().unwrap();
+        assert_eq!(r3.ranks().len(), 11);
+        assert!(r3.snapshot.version > r2.snapshot.version, "extension republishes");
+        assert_eq!(r3.snapshot.published_at, t0, "extension is not a recompute");
+        let _ = e.query().unwrap();
+        // Gauge set at query start: three republishing queries, no reset.
+        assert_eq!(e.metrics().gauge("snapshot_age_queries"), Some(3.0));
+    }
+
+    #[test]
+    fn empty_summary_approximate_keeps_accumulating_staleness() {
+        // Sub-threshold updates (degree deltas below r = 0.99) produce an
+        // empty hot set: the "approximation" corrects nothing, so the
+        // accumulated-updates staleness signal must keep growing instead
+        // of being zeroed by the no-op recompute.
+        let log = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        struct Cap(std::sync::Arc<std::sync::Mutex<Vec<u64>>>);
+        impl UdfSuite for Cap {
+            fn on_query(&mut self, ctx: &QueryContext) -> Action {
+                self.0.lock().unwrap().push(ctx.updates_since_refresh);
+                Action::ComputeApproximate
+            }
+        }
+        let mut e = EngineBuilder::new()
+            .params(SummaryParams::new(0.99, 0, 0.001))
+            .udf(Box::new(Cap(Arc::clone(&log))))
+            .build_from_edges(ring(20))
+            .unwrap();
+        for i in 0..3u64 {
+            e.ingest(EdgeOp::add(i, i + 10));
+            let r = e.query().unwrap();
+            assert_eq!(r.exec.summary_vertices, 0, "sub-threshold update stays cold");
+        }
+        assert_eq!(*log.lock().unwrap(), vec![1, 2, 3], "updates accumulate across no-ops");
+        // The d_{t-1} baselines survive the no-op recomputes too: vertex
+        // 0's kept baseline is its original degree 2, so one more edge
+        // (degree 4) is a 100% cumulative change — it finally goes hot.
+        e.ingest(EdgeOp::add(0, 11));
+        let r = e.query().unwrap();
+        assert!(r.exec.summary_vertices > 0, "accumulated drift crosses the threshold");
+        assert_eq!(*log.lock().unwrap().last().unwrap(), 4);
     }
 }

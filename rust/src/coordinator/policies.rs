@@ -133,6 +133,99 @@ impl UdfSuite for SlaPolicy {
     }
 }
 
+/// Staleness-driven serving policy (the GraphGuess-style trigger: decide
+/// *when* accumulated error warrants correction, not just how to serve).
+///
+/// Escalates `RepeatLast → ComputeApproximate → ComputeExact` as the
+/// published snapshot's age (in queries served and wall seconds — the
+/// engine's snapshot-age gauges) and the effective updates accumulated
+/// since the last recompute grow. With zero accumulated updates the
+/// cached result is exact for the applied graph, so the policy always
+/// repeats it regardless of age.
+///
+/// Escalation is monotone: growing any staleness signal never de-escalates
+/// the action (property-tested), which the constructor guarantees by
+/// requiring every approximate threshold ≤ its exact counterpart.
+#[derive(Clone, Copy, Debug)]
+pub struct StalenessPolicy {
+    /// Accumulated effective updates at which repeating stops being
+    /// acceptable.
+    pub approx_after_updates: u64,
+    /// Accumulated effective updates at which only exact will do.
+    pub exact_after_updates: u64,
+    /// Snapshot age in queries at which repeating stops being acceptable.
+    pub approx_after_queries: u64,
+    /// Snapshot age in queries at which only exact will do.
+    pub exact_after_queries: u64,
+    /// Snapshot age in seconds at which repeating stops being acceptable.
+    pub approx_after_secs: f64,
+    /// Snapshot age in seconds at which only exact will do.
+    pub exact_after_secs: f64,
+}
+
+impl Default for StalenessPolicy {
+    /// Any update makes the cached answer stale enough to approximate;
+    /// exact refreshes kick in once 10k effective updates, 64 queries or
+    /// 120 s accumulate on one snapshot.
+    fn default() -> Self {
+        Self::new(1, 10_000, 8, 64, 5.0, 120.0)
+    }
+}
+
+impl StalenessPolicy {
+    /// Construct; every `approx_after_*` must be ≤ its `exact_after_*`
+    /// counterpart (this is what makes escalation monotone).
+    pub fn new(
+        approx_after_updates: u64,
+        exact_after_updates: u64,
+        approx_after_queries: u64,
+        exact_after_queries: u64,
+        approx_after_secs: f64,
+        exact_after_secs: f64,
+    ) -> Self {
+        assert!(approx_after_updates <= exact_after_updates);
+        assert!(approx_after_queries <= exact_after_queries);
+        assert!(approx_after_secs <= exact_after_secs);
+        Self {
+            approx_after_updates,
+            exact_after_updates,
+            approx_after_queries,
+            exact_after_queries,
+            approx_after_secs,
+            exact_after_secs,
+        }
+    }
+
+    /// The pure escalation rule over the three staleness signals
+    /// (exposed for property tests).
+    pub fn decide(&self, updates: u64, age_queries: u64, age_secs: f64) -> Action {
+        if updates == 0 {
+            // Nothing accumulated: the cached ranking is exact for the
+            // applied graph, whatever its age.
+            return Action::RepeatLast;
+        }
+        if updates >= self.exact_after_updates
+            || age_queries >= self.exact_after_queries
+            || age_secs >= self.exact_after_secs
+        {
+            return Action::ComputeExact;
+        }
+        if updates >= self.approx_after_updates
+            || age_queries >= self.approx_after_queries
+            || age_secs >= self.approx_after_secs
+        {
+            return Action::ComputeApproximate;
+        }
+        Action::RepeatLast
+    }
+}
+
+impl UdfSuite for StalenessPolicy {
+    fn on_query(&mut self, ctx: &QueryContext) -> Action {
+        self.decide(ctx.updates_since_refresh, ctx.snapshot_age_queries, ctx.snapshot_age_secs)
+    }
+}
+
 /// Postpone applying updates until at least `min_pending` operations have
 /// accumulated (a `BeforeUpdates` batching rule); composes with an inner
 /// `OnQuery` policy.
@@ -219,6 +312,9 @@ mod tests {
             num_vertices: total,
             num_edges: total * 4,
             queries_since_exact: since_exact,
+            snapshot_age_queries: 0,
+            snapshot_age_secs: 0.0,
+            updates_since_refresh: 0,
         }
     }
 
@@ -248,6 +344,26 @@ mod tests {
         let mut bronze = SlaPolicy { tier: SlaTier::Bronze };
         assert_eq!(bronze.on_query(&ctx(0, 100_000, 0)), Action::RepeatLast);
         assert_eq!(bronze.on_query(&ctx(5_000, 100_000, 0)), Action::ComputeApproximate);
+    }
+
+    #[test]
+    fn staleness_policy_escalates_and_repeats_when_clean() {
+        let mut p = StalenessPolicy::new(1, 100, 4, 16, 1.0, 30.0);
+        // No accumulated updates: always repeat, however old the snapshot.
+        assert_eq!(p.decide(0, 1_000, 1e6), Action::RepeatLast);
+        // One update: approximate; crossing any exact threshold: exact.
+        assert_eq!(p.decide(1, 0, 0.0), Action::ComputeApproximate);
+        assert_eq!(p.decide(100, 0, 0.0), Action::ComputeExact);
+        assert_eq!(p.decide(1, 16, 0.0), Action::ComputeExact);
+        assert_eq!(p.decide(1, 0, 30.0), Action::ComputeExact);
+        // Below the approximate thresholds entirely: repeat.
+        let lazy = StalenessPolicy::new(10, 100, 4, 16, 1.0, 30.0);
+        assert_eq!(lazy.decide(3, 0, 0.0), Action::RepeatLast);
+        // The UDF wiring reads the context's staleness fields.
+        let mut c = ctx(5, 100, 0);
+        c.updates_since_refresh = 1;
+        c.snapshot_age_queries = 20;
+        assert_eq!(p.on_query(&c), Action::ComputeExact);
     }
 
     #[test]

@@ -1,28 +1,34 @@
 //! Threaded query server: the “GraphBolt module” of Fig. 2, read/write
 //! split.
 //!
-//! The *write path* is unchanged: producers (stream sources, clients)
-//! talk to a single engine thread through a bounded command queue
-//! (backpressure per [`crate::stream::backpressure`]); mutations and
-//! recompute-triggering queries serialize there. The *read path* is new:
-//! every [`ServerHandle`] carries a
+//! The *write path*: producers (stream sources, clients) talk to a
+//! single engine thread through a bounded command queue (backpressure
+//! per [`crate::stream::backpressure`]); mutations and
+//! recompute-triggering queries serialize there. Writes travel batched:
+//! [`ServerHandle::ingest_batch`] (and the line protocol's `batch` op)
+//! registers a whole pre-validated op vector in one queue slot, so a
+//! client pays one round-trip per batch instead of one per edge, and the
+//! batch is all-or-nothing with respect to other producers. The *read
+//! path*: every [`ServerHandle`] carries a
 //! [`SnapshotReader`](crate::coordinator::serving::SnapshotReader) onto
 //! the engine's published [`RankSnapshot`]s, so `top` / `rank` / `stats`
 //! requests are answered without entering the command queue — a slow
-//! recompute in progress never blocks a read.
+//! recompute in progress never blocks a read. Because those reads see no
+//! queue backpressure, [`ServeOptions::rate_limit`] can cap them per
+//! connection ([`RateLimiter`], token bucket).
 //!
 //! A JSON line protocol over TCP is layered on top for out-of-process
 //! clients (`veilgraph serve`); [`serve_listener`] runs an acceptor plus
 //! one thread per connection (capped), so any number of clients are
 //! served simultaneously.
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::{Engine, QueryResult};
 use crate::coordinator::serving::{ReadKind, SnapshotReader};
@@ -34,6 +40,10 @@ use crate::util::json::Json;
 /// Commands accepted by the engine thread (the write path).
 enum Command {
     Op(EdgeOp),
+    /// A pre-validated batch: registered contiguously (one queue slot,
+    /// one engine call), so it is all-or-nothing with respect to other
+    /// producers.
+    Batch(Vec<EdgeOp>),
     Query(Sender<Result<QueryResult>>),
     Stats(Sender<Json>),
     Shutdown,
@@ -61,6 +71,7 @@ impl ServerHandle {
                 while let Some(cmd) = q2.pop() {
                     match cmd {
                         Command::Op(op) => engine.ingest(op),
+                        Command::Batch(ops) => engine.ingest_batch(ops),
                         Command::Query(reply) => {
                             let _ = reply.send(engine.query());
                         }
@@ -81,6 +92,13 @@ impl ServerHandle {
     /// applies).
     pub fn ingest(&self, op: EdgeOp) -> Result<()> {
         self.queue.push(Command::Op(op))
+    }
+
+    /// Enqueue a whole batch atomically: one queue slot, registered in
+    /// one engine call — concurrent producers can never interleave into
+    /// the middle of it, and a full queue rejects it as a unit.
+    pub fn ingest_batch(&self, ops: Vec<EdgeOp>) -> Result<()> {
+        self.queue.push(Command::Batch(ops))
     }
 
     /// Serve a query synchronously (write path: applies pending updates
@@ -136,6 +154,86 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Upper bound on ops per wire `batch` request. A batch occupies ONE
+/// engine-queue slot regardless of size, so without a cap a fast writer
+/// pipelining huge batches could buffer `queue_capacity x batch_size`
+/// ops before backpressure engages; with the cap, queued memory stays
+/// bounded. Clients with more ops send more batch lines.
+pub const MAX_WIRE_BATCH_OPS: usize = 4096;
+
+/// Upper bound on one request line's bytes, enforced WHILE reading (a
+/// `Read::take` per read call), so an oversized line is rejected after
+/// buffering at most this much — not parsed, not fully read. Without
+/// it the batch-op cap is hollow: a multi-gigabyte `batch` line would
+/// be buffered and JSON-parsed before the op-count check ran. Sized so
+/// a full `MAX_WIRE_BATCH_OPS` batch of maximal ops fits comfortably.
+pub const MAX_WIRE_LINE_BYTES: usize = 1 << 20;
+
+/// Per-connection token-bucket limiter over the read-path ops
+/// (`top`/`rank`/`stats` — the requests that bypass the engine queue and
+/// therefore see no backpressure). `rate` is ops/sec with a one-second
+/// burst allowance; `rate <= 0` disables limiting.
+pub struct RateLimiter {
+    rate: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl RateLimiter {
+    /// A limiter admitting `rate` reads/sec (0 = unlimited).
+    pub fn new(rate: f64) -> Self {
+        Self { rate, tokens: rate.max(1.0), last: Instant::now() }
+    }
+
+    /// Take one token; false means the caller should reject the request.
+    pub fn admit(&mut self) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let now = Instant::now();
+        let refill = now.duration_since(self.last).as_secs_f64() * self.rate;
+        self.tokens = (self.tokens + refill).min(self.rate.max(1.0));
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The off-queue read ops — the one classification both the rate-limit
+/// guard and the dispatch below consult, so a new read op cannot be
+/// added to one and silently bypass the other.
+fn is_read_op(op: &str) -> bool {
+    matches!(op, "top" | "rank" | "stats")
+}
+
+/// Parse one write op object (shared by the single-op requests and the
+/// elements of a `batch`).
+fn parse_write_op(op: &str, req: &Json) -> std::result::Result<EdgeOp, String> {
+    match op {
+        "add" | "remove" => {
+            match (req.get("src").and_then(Json::as_u64), req.get("dst").and_then(Json::as_u64)) {
+                (Some(s), Some(d)) => {
+                    Ok(if op == "add" { EdgeOp::add(s, d) } else { EdgeOp::remove(s, d) })
+                }
+                _ => Err("add/remove need numeric src and dst".into()),
+            }
+        }
+        "add_vertex" | "remove_vertex" => match req.get("id").and_then(Json::as_u64) {
+            Some(id) => Ok(if op == "add_vertex" {
+                EdgeOp::AddVertex(id)
+            } else {
+                EdgeOp::RemoveVertex(id)
+            }),
+            None => Err("add_vertex/remove_vertex need a numeric id".into()),
+        },
+        other => Err(format!("unknown write op {other:?}")),
+    }
+}
+
 /// JSON line protocol: one request object per line, one response per line.
 ///
 /// Write-path requests (serialized through the engine queue):
@@ -143,14 +241,31 @@ impl Drop for ServerHandle {
 /// * `{"op":"remove","src":1,"dst":2}`   → `{"ok":true}`
 /// * `{"op":"add_vertex","id":7}`        → `{"ok":true}`
 /// * `{"op":"remove_vertex","id":7}`     → `{"ok":true}`
+/// * `{"op":"batch","ops":[{"op":"add","src":1,"dst":2},…]}`
+///   → `{"ok":true,"registered":N}` — applied atomically: every element
+///   is validated first and one malformed (or cap-exceeding, see
+///   [`MAX_WIRE_BATCH_OPS`]) element rejects the whole batch with
+///   nothing registered; the batch occupies one engine-queue slot, so
+///   clients pay one round-trip for N edges instead of N.
 /// * `{"op":"query","top":10}`           → `{"ok":true,"action":…,"top":[[id,score],…]}`
 /// * `{"op":"shutdown"}`                 → `{"ok":true}` and closes.
 ///
-/// Read-path requests (served off the published snapshot, never queued):
+/// Read-path requests (served off the published snapshot, never queued;
+/// subject to the per-connection `--rate-limit`):
 /// * `{"op":"top","k":10}`     → `{"ok":true,"version":…,"top":[[id,score],…]}`
 /// * `{"op":"rank","id":7}`    → `{"ok":true,"version":…,"rank":…}`
 /// * `{"op":"stats"}`          → `{"ok":true,"stats":{"serving":…,"engine":…}}`
 pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
+    handle_request_limited(handle, line, None)
+}
+
+/// [`handle_request`] with an optional per-connection read limiter (what
+/// [`serve_listener`] uses; `None` = unlimited).
+pub fn handle_request_limited(
+    handle: &ServerHandle,
+    line: &str,
+    mut limiter: Option<&mut RateLimiter>,
+) -> (Json, bool) {
     let fail = |msg: String| {
         (Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))]), false)
     };
@@ -159,33 +274,51 @@ pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
         Err(e) => return fail(e.to_string()),
     };
     let op = req.get("op").and_then(Json::as_str).unwrap_or("");
-    match op {
-        "add" | "remove" => {
-            let (src, dst) = match (
-                req.get("src").and_then(Json::as_u64),
-                req.get("dst").and_then(Json::as_u64),
-            ) {
-                (Some(s), Some(d)) => (s, d),
-                _ => return fail("add/remove need numeric src and dst".into()),
-            };
-            let e = if op == "add" { EdgeOp::add(src, dst) } else { EdgeOp::remove(src, dst) };
-            match handle.ingest(e) {
-                Ok(()) => (Json::obj(vec![("ok", Json::Bool(true))]), false),
-                Err(e) => fail(e.to_string()),
+    if is_read_op(op) {
+        if let Some(l) = limiter.as_deref_mut() {
+            if !l.admit() {
+                return fail("read rate limit exceeded".into());
             }
         }
-        "add_vertex" | "remove_vertex" => {
-            let id = match req.get("id").and_then(Json::as_u64) {
-                Some(id) => id,
-                None => return fail("add_vertex/remove_vertex need a numeric id".into()),
-            };
-            let e = if op == "add_vertex" {
-                EdgeOp::AddVertex(id)
-            } else {
-                EdgeOp::RemoveVertex(id)
-            };
-            match handle.ingest(e) {
+    }
+    match op {
+        "add" | "remove" | "add_vertex" | "remove_vertex" => match parse_write_op(op, &req) {
+            Ok(e) => match handle.ingest(e) {
                 Ok(()) => (Json::obj(vec![("ok", Json::Bool(true))]), false),
+                Err(e) => fail(e.to_string()),
+            },
+            Err(msg) => fail(msg),
+        },
+        "batch" => {
+            let items = match req.get("ops").and_then(Json::as_arr) {
+                Some(items) => items,
+                None => return fail("batch needs an ops array".into()),
+            };
+            if items.len() > MAX_WIRE_BATCH_OPS {
+                return fail(format!(
+                    "batch of {} ops exceeds the {MAX_WIRE_BATCH_OPS}-op cap; split it",
+                    items.len()
+                ));
+            }
+            // Validate everything before registering anything: a batch is
+            // all-or-nothing.
+            let mut ops = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                let kind = item.get("op").and_then(Json::as_str).unwrap_or("");
+                match parse_write_op(kind, item) {
+                    Ok(e) => ops.push(e),
+                    Err(msg) => return fail(format!("batch op {i}: {msg}; nothing registered")),
+                }
+            }
+            let n = ops.len();
+            match handle.ingest_batch(ops) {
+                Ok(()) => (
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("registered", Json::Num(n as f64)),
+                    ]),
+                    false,
+                ),
                 Err(e) => fail(e.to_string()),
             }
         }
@@ -272,11 +405,15 @@ pub struct ServeOptions {
     /// one error line and closed. Clamped to ≥ 1 so the server always
     /// admits the client that could send `shutdown`.
     pub max_connections: usize,
+    /// Per-connection read-path rate limit in ops/sec (`top`/`rank`/
+    /// `stats`; one-second burst allowance). Over-limit requests get an
+    /// error line, the connection stays open. 0 = unlimited.
+    pub rate_limit: f64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_connections: 64 }
+        Self { max_connections: 64, rate_limit: 0.0 }
     }
 }
 
@@ -345,7 +482,7 @@ pub fn serve_listener(
             .name("veilgraph-conn".into())
             .spawn(move || {
                 crate::log_debug!("client {peer}");
-                let shutdown = serve_connection(&h2, stream, &stop2).unwrap_or(false);
+                let shutdown = serve_connection(&h2, stream, &stop2, &opts).unwrap_or(false);
                 active2.fetch_sub(1, Ordering::SeqCst);
                 if shutdown {
                     stop2.store(true, Ordering::SeqCst);
@@ -368,25 +505,57 @@ pub fn serve_listener(
 /// server-wide stop flag (polled via a read timeout so lingering clients
 /// cannot pin a stopping server). Returns whether this client requested
 /// shutdown.
-fn serve_connection(handle: &ServerHandle, stream: TcpStream, stop: &AtomicBool) -> Result<bool> {
+fn serve_connection(
+    handle: &ServerHandle,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    opts: &ServeOptions,
+) -> Result<bool> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    let mut limiter = RateLimiter::new(opts.rate_limit);
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(false);
         }
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(false), // EOF — client hung up
-            Ok(_) => {
+        // Hard-capped read: `take` bounds how much one request line can
+        // buffer, so an oversized line is dropped, never parsed.
+        let cap = (MAX_WIRE_LINE_BYTES + 1 - line.len().min(MAX_WIRE_LINE_BYTES)) as u64;
+        match (&mut reader).take(cap).read_line(&mut line) {
+            Ok(0) if line.trim().is_empty() => return Ok(false), // EOF — client hung up
+            Ok(n) => {
+                if line.len() > MAX_WIRE_LINE_BYTES {
+                    let reject = Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        (
+                            "error",
+                            Json::Str(format!(
+                                "request line exceeds {MAX_WIRE_LINE_BYTES} bytes"
+                            )),
+                        ),
+                    ]);
+                    writer.write_all(reject.to_string_compact().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    return Ok(false); // cannot resync mid-line: drop the client
+                }
+                if !line.ends_with('\n') && n > 0 {
+                    // Cap-bounded partial read of a still-incomplete
+                    // line: keep accumulating.
+                    continue;
+                }
                 if !line.trim().is_empty() {
-                    let (resp, shutdown) = handle_request(handle, line.trim());
+                    let (resp, shutdown) =
+                        handle_request_limited(handle, line.trim(), Some(&mut limiter));
                     writer.write_all(resp.to_string_compact().as_bytes())?;
                     writer.write_all(b"\n")?;
                     if shutdown {
                         return Ok(true);
                     }
+                }
+                if n == 0 {
+                    return Ok(false); // EOF after a final unterminated line
                 }
                 line.clear();
             }
@@ -528,6 +697,98 @@ mod tests {
     }
 
     #[test]
+    fn line_protocol_batch_registers_all_ops_in_one_request() {
+        let h = handle();
+        let line = r#"{"op":"batch","ops":[
+            {"op":"add","src":100,"dst":0},
+            {"op":"add","src":101,"dst":1},
+            {"op":"add_vertex","id":102},
+            {"op":"remove","src":0,"dst":1}
+        ]}"#
+        .replace('\n', "");
+        let (resp, stop) = handle_request(&h, &line);
+        assert!(!stop);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("registered").unwrap().as_u64(), Some(4));
+        let r = h.query().unwrap();
+        assert!(r.ids().contains(&100) && r.ids().contains(&101) && r.ids().contains(&102));
+        let g = h.query().unwrap();
+        assert!(g.rank_of(102).is_some());
+        h.shutdown();
+    }
+
+    #[test]
+    fn line_protocol_batch_is_all_or_nothing() {
+        let h = handle();
+        // Second element is malformed: nothing from the batch registers.
+        let line = r#"{"op":"batch","ops":[{"op":"add","src":30,"dst":0},{"op":"add","src":31}]}"#;
+        let (resp, _) = handle_request(&h, line);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("batch op 1"), "error names the bad element: {err}");
+        let r = h.query().unwrap();
+        assert!(!r.ids().contains(&30), "no partial registration");
+        // Non-array ops and bare batches fail cleanly too.
+        let (resp, _) = handle_request(&h, r#"{"op":"batch"}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        h.shutdown();
+    }
+
+    #[test]
+    fn line_protocol_batch_enforces_the_size_cap() {
+        let h = handle();
+        let ops: Vec<String> = (0..MAX_WIRE_BATCH_OPS as u64 + 1)
+            .map(|i| format!(r#"{{"op":"add","src":{},"dst":{}}}"#, 10_000 + i, i % 20))
+            .collect();
+        let line = format!(r#"{{"op":"batch","ops":[{}]}}"#, ops.join(","));
+        let (resp, _) = handle_request(&h, &line);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("cap"), "rejection names the cap: {err}");
+        let r = h.query().unwrap();
+        assert!(!r.ids().contains(&10_000), "nothing registered past the cap");
+        h.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_line_is_rejected_and_dropped() {
+        use std::io::{BufRead, BufReader, Write};
+        let h = handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let stop = AtomicBool::new(false);
+            let _ = serve_connection(&h, stream, &stop, &ServeOptions::default());
+            h.shutdown();
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let huge = vec![b'x'; MAX_WIRE_LINE_BYTES + 64];
+        client.write_all(&huge).unwrap();
+        let mut r = BufReader::new(client.try_clone().unwrap());
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("bytes"));
+        let mut rest = String::new();
+        assert_eq!(r.read_line(&mut rest).unwrap(), 0, "oversized client is dropped");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn rate_limiter_admits_burst_then_rejects() {
+        let mut l = RateLimiter::new(3.0);
+        let admitted = (0..50).filter(|_| l.admit()).count();
+        assert!(admitted >= 3, "burst capacity admits the first requests");
+        assert!(admitted < 50, "sustained flood is limited");
+        // rate 0 = off
+        let mut off = RateLimiter::new(0.0);
+        assert!((0..1000).all(|_| off.admit()));
+    }
+
+    #[test]
     fn tcp_server_end_to_end() {
         use std::io::{BufRead, BufReader, Write};
         let h = handle();
@@ -536,7 +797,7 @@ mod tests {
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             let stop = AtomicBool::new(false);
-            serve_connection(&h, stream, &stop).unwrap();
+            serve_connection(&h, stream, &stop, &ServeOptions::default()).unwrap();
             h.shutdown();
         });
         let mut client = TcpStream::connect(addr).unwrap();

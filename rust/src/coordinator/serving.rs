@@ -23,6 +23,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 use crate::coordinator::udf::{Action, ExecStats};
 use crate::graph::VertexId;
@@ -58,6 +59,11 @@ pub struct RankSnapshot {
     pub ranks: Vec<f64>,
     /// Engine metrics as of publish time (serves off-queue `stats`).
     pub engine_metrics: Json,
+    /// When this snapshot was produced — the staleness anchor behind
+    /// [`Self::age_secs`] and the `age_secs` gauge in
+    /// [`SnapshotReader::stats_json`], so SLA clients can see result
+    /// freshness, not just the version counter.
+    pub published_at: Instant,
     /// Dense positions of the top `top_k_cap` entries, pre-sorted by
     /// (score desc, id asc) — the deterministic tie-break used everywhere.
     top_index: Vec<u32>,
@@ -77,6 +83,7 @@ impl RankSnapshot {
             ids: Vec::new(),
             ranks: Vec::new(),
             engine_metrics: Json::Null,
+            published_at: Instant::now(),
             top_index: Vec::new(),
             by_id: Vec::new(),
         }
@@ -110,6 +117,7 @@ impl RankSnapshot {
             ids,
             ranks,
             engine_metrics,
+            published_at: Instant::now(),
             top_index,
             by_id,
         }
@@ -118,6 +126,12 @@ impl RankSnapshot {
     /// Number of ranked vertices.
     pub fn num_vertices(&self) -> usize {
         self.ids.len()
+    }
+
+    /// Wall seconds since this snapshot was produced — the snapshot-age
+    /// (staleness) gauge.
+    pub fn age_secs(&self) -> f64 {
+        self.published_at.elapsed().as_secs_f64()
     }
 
     /// How many entries the precomputed top-K index holds.
@@ -296,6 +310,7 @@ impl SnapshotReader {
                     ("action", Json::Str(s.action.to_string())),
                     ("vertices", Json::Num(s.num_vertices() as f64)),
                     ("published_top_k", Json::Num(s.top_k_cap() as f64)),
+                    ("age_secs", Json::Num(s.age_secs())),
                     ("reads_top", Json::Num(r.top as f64)),
                     ("reads_rank", Json::Num(r.rank as f64)),
                     ("reads_stats", Json::Num(r.stats as f64)),
@@ -390,6 +405,18 @@ mod tests {
         let serving = j.get("serving").unwrap();
         assert_eq!(serving.get("version").unwrap().as_u64(), Some(3));
         assert_eq!(serving.get("vertices").unwrap().as_u64(), Some(1));
+        assert!(serving.get("age_secs").unwrap().as_f64().unwrap() >= 0.0);
         assert!(j.get("engine").is_some());
+    }
+
+    #[test]
+    fn snapshot_age_grows_monotonically() {
+        let s = snap(1, vec![1], vec![1.0], 1);
+        let a = s.age_secs();
+        assert!(a >= 0.0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let b = s.age_secs();
+        assert!(b >= a, "age must not go backwards: {a} -> {b}");
+        assert!(b >= 0.005, "5ms must register in the gauge");
     }
 }

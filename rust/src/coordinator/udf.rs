@@ -49,6 +49,16 @@ pub struct QueryContext {
     pub num_edges: usize,
     /// Queries since the last exact computation.
     pub queries_since_exact: u64,
+    /// Queries served since the engine last published a fresh
+    /// [`crate::coordinator::serving::RankSnapshot`] (staleness in
+    /// queries).
+    pub snapshot_age_queries: u64,
+    /// Wall seconds since that snapshot was produced (staleness in time).
+    pub snapshot_age_secs: f64,
+    /// Effective (coalesced) updates applied since the ranking was last
+    /// recomputed — includes the batch this query just applied. The
+    /// accumulated-error signal staleness policies escalate on.
+    pub updates_since_refresh: u64,
 }
 
 /// Per-query execution statistics handed to `OnQueryResult` (§4 item 4).
@@ -115,6 +125,9 @@ mod tests {
             num_vertices: 10,
             num_edges: 20,
             queries_since_exact: 1,
+            snapshot_age_queries: 0,
+            snapshot_age_secs: 0.0,
+            updates_since_refresh: 0,
         };
         assert_eq!(s.on_query(&ctx), Action::ComputeApproximate);
         s.on_stop();

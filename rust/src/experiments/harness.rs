@@ -221,19 +221,15 @@ fn run_ground_truth(
         full_vertices: Vec::new(),
         full_edges: Vec::new(),
     };
-    for ev in events {
-        match ev {
-            UpdateEvent::Op(op) => engine.ingest(*op),
-            UpdateEvent::Query => {
-                let r = engine.query()?;
-                gt.exact_secs.push(r.exec.elapsed_secs);
-                gt.top_ids.push(r.top_ids(rbo_depth));
-                gt.full_vertices.push(engine.graph().num_vertices());
-                gt.full_edges.push(engine.graph().num_edges());
-            }
-            UpdateEvent::Stop => break,
-        }
-    }
+    // Batch path: one `ingest_batch` per op run (the wire shape clients
+    // use), coalesced at the apply step before each query.
+    engine.run_stream_with(events.iter().cloned(), |eng, r| {
+        gt.exact_secs.push(r.exec.elapsed_secs);
+        gt.top_ids.push(r.top_ids(rbo_depth));
+        gt.full_vertices.push(eng.graph().num_vertices());
+        gt.full_edges.push(eng.graph().num_edges());
+        Ok(())
+    })?;
     Ok(gt)
 }
 
@@ -256,27 +252,21 @@ fn run_combination(
     let mut engine = builder.build_from_edges(initial.iter().copied())?;
     let mut rows = Vec::new();
     let mut q = 0usize;
-    for ev in events {
-        match ev {
-            UpdateEvent::Op(op) => engine.ingest(*op),
-            UpdateEvent::Query => {
-                let r = engine.query()?;
-                let approx_top = r.top_ids(rbo_depth);
-                rows.push(SeriesRow {
-                    query: q + 1,
-                    summary_vertices: r.exec.summary_vertices,
-                    summary_edges: r.exec.summary_edges,
-                    full_vertices: gt.full_vertices[q],
-                    full_edges: gt.full_edges[q],
-                    rbo: rbo_ext(&approx_top, &gt.top_ids[q], RBO_P),
-                    approx_secs: r.exec.elapsed_secs,
-                    exact_secs: gt.exact_secs[q],
-                });
-                q += 1;
-            }
-            UpdateEvent::Stop => break,
-        }
-    }
+    engine.run_stream_with(events.iter().cloned(), |_, r| {
+        let approx_top = r.top_ids(rbo_depth);
+        rows.push(SeriesRow {
+            query: q + 1,
+            summary_vertices: r.exec.summary_vertices,
+            summary_edges: r.exec.summary_edges,
+            full_vertices: gt.full_vertices[q],
+            full_edges: gt.full_edges[q],
+            rbo: rbo_ext(&approx_top, &gt.top_ids[q], RBO_P),
+            approx_secs: r.exec.elapsed_secs,
+            exact_secs: gt.exact_secs[q],
+        });
+        q += 1;
+        Ok(())
+    })?;
     Ok(CombinationResult { params, rows })
 }
 

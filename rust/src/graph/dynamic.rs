@@ -12,12 +12,158 @@
 //! * Removal keeps the vertex slot (ids stay stable, as in the paper's
 //!   model where a vertex's history matters across measurement points).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::error::{Error, Result};
 use crate::graph::csr::{balanced_cuts, Csr};
 use crate::graph::{VertexId, VertexIdx};
+use crate::stream::event::EdgeOp;
 use crate::util::threadpool::ThreadPool;
+
+/// Effective edge ops a segment needs before [`DynamicGraph::apply_batch`]
+/// dispatches its grouped row merges over the pool — below this, scoped
+/// dispatch costs more than the row work.
+const BATCH_PARALLEL_MIN_OPS: usize = 1024;
+
+/// Outcome of [`DynamicGraph::apply_batch`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchApply {
+    /// Effective mutations performed (edge adds/removes, vertex
+    /// inserts/removals).
+    pub applied: usize,
+    /// No-op operations (unknown-vertex removals; non-zero beyond that
+    /// only when a conflicting input routed through the fallback).
+    pub skipped: usize,
+    /// Edges inserted.
+    pub edges_added: usize,
+    /// Edges deleted.
+    pub edges_removed: usize,
+    /// Vertex slots created (explicit `v+` plus edge endpoints).
+    pub vertices_added: usize,
+    /// True when the input was not a coalesced (conflict-free) op list
+    /// and the sequential path replayed it instead.
+    pub fallback: bool,
+}
+
+/// One row's grouped edge ops: targets to drop and targets to append, in
+/// op order. `add_before_remove` records an ordering the grouped merge
+/// cannot honor (an add of a pair that the same segment removes LATER —
+/// the merge always removes first), set at grouping time since the two
+/// lists alone lose the interleaving.
+#[derive(Clone, Debug, Default)]
+struct RowOps {
+    adds: Vec<VertexIdx>,
+    removes: Vec<VertexIdx>,
+    add_before_remove: bool,
+}
+
+/// Per-row op count past which validation and merge switch from linear
+/// scans to hashed membership — keeps remove-heavy rows (dismantling a
+/// hub's fan-in) off the O(ops x degree) cliff.
+const ROW_OPS_HASH_MIN: usize = 16;
+
+/// A coalesced batch touches each (src, dst) pair at most as
+/// {remove, then add}: removes must target present edges, adds absent
+/// ones (unless the same segment removes them first), no duplicates
+/// either way. Violations route the segment to the sequential fallback.
+fn row_merge_valid(row: &[VertexIdx], rops: &RowOps) -> bool {
+    if rops.add_before_remove {
+        return false; // the merge would re-add an edge the raw order drops
+    }
+    if rops.removes.len() + rops.adds.len() >= ROW_OPS_HASH_MIN {
+        return row_merge_valid_hashed(row, rops);
+    }
+    for (i, r) in rops.removes.iter().enumerate() {
+        if rops.removes[..i].contains(r) || !row.contains(r) {
+            return false;
+        }
+    }
+    for (i, a) in rops.adds.iter().enumerate() {
+        if rops.adds[..i].contains(a) {
+            return false;
+        }
+        if row.contains(a) && !rops.removes.contains(a) {
+            return false;
+        }
+    }
+    true
+}
+
+/// [`row_merge_valid`] with hashed membership: O(ops + degree) instead
+/// of O(ops x degree) for rows carrying many ops.
+fn row_merge_valid_hashed(row: &[VertexIdx], rops: &RowOps) -> bool {
+    let row_set: HashSet<VertexIdx> = row.iter().copied().collect();
+    let mut removes = HashSet::with_capacity(rops.removes.len());
+    for &r in &rops.removes {
+        if !removes.insert(r) || !row_set.contains(&r) {
+            return false;
+        }
+    }
+    let mut adds = HashSet::with_capacity(rops.adds.len());
+    for &a in &rops.adds {
+        if !adds.insert(a) {
+            return false;
+        }
+        if row_set.contains(&a) && !removes.contains(&a) {
+            return false;
+        }
+    }
+    true
+}
+
+/// One row's batched edit: order-preserving drop of the removed targets,
+/// then append the adds in op order — bit-identical to applying the
+/// row's ops one by one (removal is order-preserving, insertion appends).
+fn merge_row(row: &mut Vec<VertexIdx>, rops: &RowOps) {
+    if rops.removes.len() >= ROW_OPS_HASH_MIN {
+        let removes: HashSet<VertexIdx> = rops.removes.iter().copied().collect();
+        row.retain(|x| !removes.contains(x));
+    } else if !rops.removes.is_empty() {
+        row.retain(|x| !rops.removes.contains(x));
+    }
+    row.extend_from_slice(&rops.adds);
+}
+
+/// Apply grouped row edits, one mutation per touched row. Rows are
+/// disjoint, so large batches shard over the pool: op-count-balanced cuts
+/// over the touched-row list, mapped to slice cuts over the adjacency
+/// table (every shard owns a contiguous row range).
+fn merge_rows(
+    adj: &mut [Vec<VertexIdx>],
+    rows: &[(VertexIdx, RowOps)],
+    pool: Option<&ThreadPool>,
+    shards: usize,
+) {
+    let k = shards.clamp(1, rows.len().max(1));
+    match pool {
+        Some(pool) if k > 1 && !rows.is_empty() => {
+            let row_cuts = balanced_cuts(rows.len(), k, |i| {
+                (rows[i].1.adds.len() + rows[i].1.removes.len()) as u64
+            });
+            let mut cuts = Vec::with_capacity(row_cuts.len());
+            for (j, &rc) in row_cuts.iter().enumerate() {
+                cuts.push(if j == 0 {
+                    0
+                } else if rc == rows.len() {
+                    adj.len()
+                } else {
+                    rows[rc].0 as usize
+                });
+            }
+            pool.scope_chunks(adj, &cuts, |i, chunk| {
+                let lo = cuts[i];
+                for (r, rops) in &rows[row_cuts[i]..row_cuts[i + 1]] {
+                    merge_row(&mut chunk[*r as usize - lo], rops);
+                }
+            });
+        }
+        _ => {
+            for (r, rops) in rows {
+                merge_row(&mut adj[*r as usize], rops);
+            }
+        }
+    }
+}
 
 /// A growable directed graph with stable dense indices.
 #[derive(Clone, Debug, Default)]
@@ -122,16 +268,19 @@ impl DynamicGraph {
         Ok(())
     }
 
-    /// Remove a directed edge.
+    /// Remove a directed edge. Order-preserving (`Vec::remove`, not
+    /// `swap_remove`): batch coalescing relies on "surviving neighbors
+    /// keep their relative order, net-new neighbors append" to replay a
+    /// coalesced op list bit-identically to the raw op sequence.
     pub fn remove_edge(&mut self, src: VertexId, dst: VertexId) -> Result<()> {
         let s = self.index(src).ok_or(Error::UnknownVertex(src))?;
         let d = self.index(dst).ok_or(Error::UnknownVertex(dst))?;
         let out = &mut self.out_adj[s as usize];
         let pos = out.iter().position(|&x| x == d).ok_or(Error::UnknownEdge(src, dst))?;
-        out.swap_remove(pos);
+        out.remove(pos);
         let inn = &mut self.in_adj[d as usize];
         let pos = inn.iter().position(|&x| x == s).expect("in/out adjacency desync");
-        inn.swap_remove(pos);
+        inn.remove(pos);
         self.m -= 1;
         self.version += 1;
         self.row_version[d as usize] = self.version;
@@ -164,6 +313,202 @@ impl DynamicGraph {
         self.in_adj[v as usize].clear();
         self.row_version[v as usize] = self.version;
         Ok(())
+    }
+
+    /// Apply a batch of *effective* operations (the output of
+    /// [`crate::stream::buffer::UpdateBuffer::take_batch`]) — the write
+    /// path's grouped twin of op-by-op `add_edge`/`remove_edge`.
+    ///
+    /// Ops are grouped by row so every touched adjacency row is mutated
+    /// exactly once, and the whole segment pays **one** topology version
+    /// bump plus one per-row stamp pass (op-by-op pays one bump per op).
+    /// Large segments shard the row merges over `pool`. The final graph
+    /// state is bit-identical to applying `ops` sequentially.
+    ///
+    /// `RemoveVertex` ops are sequence points: the edge runs around them
+    /// are batch-applied, the removals themselves run through
+    /// [`Self::remove_vertex`] (with its own version bump).
+    ///
+    /// Inputs that are not conflict-free (duplicate pairs, adds of
+    /// present edges, removes of absent ones) are detected before any
+    /// row is mutated and replayed through the sequential path instead
+    /// (`fallback` is set; counts still come out right).
+    pub fn apply_batch(
+        &mut self,
+        ops: &[EdgeOp],
+        pool: Option<&ThreadPool>,
+        shards: usize,
+    ) -> BatchApply {
+        let mut out = BatchApply::default();
+        let mut seg = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            if let EdgeOp::RemoveVertex(u) = *op {
+                self.apply_edge_segment(&ops[seg..i], pool, shards, &mut out);
+                if self.remove_vertex(u).is_ok() {
+                    out.applied += 1;
+                } else {
+                    out.skipped += 1;
+                }
+                seg = i + 1;
+            }
+        }
+        self.apply_edge_segment(&ops[seg..], pool, shards, &mut out);
+        out
+    }
+
+    /// Apply one vertex-removal-free run of a batch: create vertices in
+    /// first-mention order, group edge ops by row, validate, then merge
+    /// every touched row once under a single version bump.
+    fn apply_edge_segment(
+        &mut self,
+        ops: &[EdgeOp],
+        pool: Option<&ThreadPool>,
+        shards: usize,
+        out: &mut BatchApply,
+    ) {
+        if ops.is_empty() {
+            return;
+        }
+        // Pass 0: vertex creation in first-mention order (mirrors
+        // `add_edge`/`add_vertex` creating on first sight) and dense
+        // index resolution. No version bumps yet.
+        let mut created: Vec<VertexIdx> = Vec::new();
+        let mut resolved: Vec<(VertexIdx, VertexIdx, bool)> = Vec::with_capacity(ops.len());
+        let mut unknown_removes = 0usize;
+        for op in ops {
+            match *op {
+                EdgeOp::AddVertex(u) => {
+                    let before = created.len();
+                    self.ensure_vertex(u, &mut created);
+                    if created.len() > before {
+                        out.applied += 1;
+                    } else {
+                        out.skipped += 1;
+                    }
+                }
+                EdgeOp::AddEdge(u, v) => {
+                    let s = self.ensure_vertex(u, &mut created);
+                    let d = self.ensure_vertex(v, &mut created);
+                    resolved.push((s, d, true));
+                }
+                EdgeOp::RemoveEdge(u, v) => match (self.index(u), self.index(v)) {
+                    (Some(s), Some(d)) => resolved.push((s, d, false)),
+                    _ => unknown_removes += 1,
+                },
+                EdgeOp::RemoveVertex(_) => unreachable!("segments split at vertex removals"),
+            }
+        }
+        out.vertices_added += created.len();
+
+        // Group by row, preserving op order within each row.
+        let mut by_out: HashMap<VertexIdx, RowOps> = HashMap::new();
+        let mut by_in: HashMap<VertexIdx, RowOps> = HashMap::new();
+        // Pairs added so far in this segment — a remove AFTER an add of
+        // the same pair is an order the grouped merge (removes first,
+        // then appends) cannot reproduce, so it must route the row to
+        // the sequential fallback. Hashed: O(ops), not O(ops x row-ops).
+        let mut added_pairs: HashSet<(VertexIdx, VertexIdx)> = HashSet::new();
+        for &(s, d, is_add) in &resolved {
+            let o = by_out.entry(s).or_default();
+            if is_add {
+                o.adds.push(d);
+                added_pairs.insert((s, d));
+            } else {
+                if added_pairs.contains(&(s, d)) {
+                    o.add_before_remove = true;
+                }
+                o.removes.push(d);
+            }
+            let i = by_in.entry(d).or_default();
+            if is_add {
+                i.adds.push(s);
+            } else {
+                i.removes.push(s);
+            }
+        }
+        let mut out_rows: Vec<(VertexIdx, RowOps)> = by_out.into_iter().collect();
+        out_rows.sort_unstable_by_key(|&(r, _)| r);
+        let mut in_rows: Vec<(VertexIdx, RowOps)> = by_in.into_iter().collect();
+        in_rows.sort_unstable_by_key(|&(r, _)| r);
+
+        // Validate on the out side only — the in side mirrors it through
+        // the adjacency invariant.
+        let valid =
+            out_rows.iter().all(|(s, rops)| row_merge_valid(&self.out_adj[*s as usize], rops));
+        if !valid {
+            if !created.is_empty() {
+                self.version += 1;
+                let ver = self.version;
+                for &c in &created {
+                    self.row_version[c as usize] = ver;
+                }
+            }
+            for op in ops {
+                match *op {
+                    EdgeOp::AddEdge(u, v) => {
+                        if self.add_edge(u, v).is_ok() {
+                            out.applied += 1;
+                            out.edges_added += 1;
+                        } else {
+                            out.skipped += 1;
+                        }
+                    }
+                    EdgeOp::RemoveEdge(u, v) => {
+                        if self.remove_edge(u, v).is_ok() {
+                            out.applied += 1;
+                            out.edges_removed += 1;
+                        } else {
+                            out.skipped += 1;
+                        }
+                    }
+                    _ => {} // vertex inserts were handled (and counted) above
+                }
+            }
+            out.fallback = true;
+            return;
+        }
+
+        out.skipped += unknown_removes;
+        let adds: usize = out_rows.iter().map(|(_, r)| r.adds.len()).sum();
+        let removes: usize = out_rows.iter().map(|(_, r)| r.removes.len()).sum();
+        if adds + removes == 0 && created.is_empty() {
+            return;
+        }
+
+        // One topology version bump for the whole segment.
+        self.version += 1;
+        let ver = self.version;
+        let shards = if adds + removes >= BATCH_PARALLEL_MIN_OPS { shards } else { 1 };
+        merge_rows(&mut self.out_adj, &out_rows, pool, shards);
+        merge_rows(&mut self.in_adj, &in_rows, pool, shards);
+        // Stamp pass: rows whose in-adjacency changed, plus created rows.
+        for &(d, _) in &in_rows {
+            self.row_version[d as usize] = ver;
+        }
+        for &c in &created {
+            self.row_version[c as usize] = ver;
+        }
+        // Add before subtracting: `removes` alone may exceed `m - adds`.
+        self.m = self.m + adds - removes;
+        out.applied += adds + removes;
+        out.edges_added += adds;
+        out.edges_removed += removes;
+    }
+
+    /// Insert a vertex without bumping the topology version — batch
+    /// apply bumps once per segment and stamps created rows then.
+    fn ensure_vertex(&mut self, id: VertexId, created: &mut Vec<VertexIdx>) -> VertexIdx {
+        if let Some(&i) = self.index_of.get(&id) {
+            return i;
+        }
+        let idx = self.id_of.len() as VertexIdx;
+        self.index_of.insert(id, idx);
+        self.id_of.push(id);
+        self.out_adj.push(Vec::new());
+        self.in_adj.push(Vec::new());
+        self.row_version.push(0); // stamped at segment end
+        created.push(idx);
+        idx
     }
 
     /// True if the edge exists.
@@ -524,5 +869,179 @@ mod tests {
         let g = triangle();
         let es: Vec<_> = g.edges().collect();
         assert_eq!(es.len(), 3);
+    }
+
+    /// Sequentially apply ops through the public per-op API (the oracle
+    /// `apply_batch` must match bit-for-bit).
+    fn seq_apply(g: &mut DynamicGraph, ops: &[EdgeOp]) {
+        for op in ops {
+            match *op {
+                EdgeOp::AddEdge(u, v) => {
+                    let _ = g.add_edge(u, v);
+                }
+                EdgeOp::RemoveEdge(u, v) => {
+                    let _ = g.remove_edge(u, v);
+                }
+                EdgeOp::AddVertex(u) => {
+                    g.add_vertex(u);
+                }
+                EdgeOp::RemoveVertex(u) => {
+                    let _ = g.remove_vertex(u);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_batch_matches_sequential_and_bumps_once() {
+        let mut a = triangle();
+        let mut b = a.clone();
+        let v0 = a.version();
+        // An effective (conflict-free) op list: new vertices, appends, a
+        // removal, a re-establishment.
+        let ops = vec![
+            EdgeOp::AddVertex(77),
+            EdgeOp::remove(10, 20),
+            EdgeOp::add(40, 10),
+            EdgeOp::remove(20, 30),
+            EdgeOp::add(20, 30), // re-establish: moves to the append slot
+            EdgeOp::add(77, 40),
+        ];
+        let res = a.apply_batch(&ops, None, 1);
+        seq_apply(&mut b, &ops);
+        assert_eq!(a.ids(), b.ids());
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert!(!res.fallback);
+        assert_eq!(res.applied, 6);
+        assert_eq!((res.edges_added, res.edges_removed, res.vertices_added), (3, 2, 2));
+        assert_eq!(a.version(), v0 + 1, "one bump per pure-edge batch");
+    }
+
+    #[test]
+    fn apply_batch_incremental_snapshot_stays_correct() {
+        // The single stamp pass must keep `snapshot_from` exact: rows the
+        // batch left untouched bulk-copy, touched rows rebuild.
+        let mut g = triangle();
+        let base = g.snapshot();
+        let v0 = g.version();
+        let ops = vec![
+            EdgeOp::add(10, 30),
+            EdgeOp::remove(20, 30),
+            EdgeOp::add(50, 20),
+            EdgeOp::AddVertex(60),
+        ];
+        g.apply_batch(&ops, None, 1);
+        assert_eq!(g.snapshot_from(&base, v0, None, 1), g.snapshot());
+    }
+
+    #[test]
+    fn apply_batch_conflicting_input_falls_back() {
+        let mut a = triangle();
+        let mut b = a.clone();
+        // Duplicate add + remove-of-absent: not a coalesced list.
+        let ops = vec![EdgeOp::add(10, 20), EdgeOp::remove(10, 99), EdgeOp::add(10, 30)];
+        let res = a.apply_batch(&ops, None, 1);
+        seq_apply(&mut b, &ops);
+        assert!(res.fallback);
+        assert_eq!(res.applied, 1, "only add(10,30) lands");
+        assert_eq!(res.skipped, 2);
+        assert_eq!(a.snapshot(), b.snapshot());
+    }
+
+    #[test]
+    fn apply_batch_add_then_remove_of_present_edge_falls_back() {
+        // Raw order: duplicate add (skipped), then remove — the edge ends
+        // ABSENT. The grouped merge would remove-then-re-append it, so
+        // this ordering must route to the sequential fallback.
+        let mut a = triangle();
+        let mut b = a.clone();
+        let ops = vec![EdgeOp::add(10, 20), EdgeOp::remove(10, 20)];
+        let res = a.apply_batch(&ops, None, 1);
+        seq_apply(&mut b, &ops);
+        assert!(res.fallback);
+        assert!(!a.has_edge(10, 20), "raw order drops the edge");
+        assert_eq!(a.num_edges(), 2);
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!((res.applied, res.skipped), (1, 1));
+    }
+
+    #[test]
+    fn apply_batch_empty_and_noop_inputs_leave_version_alone() {
+        let mut g = triangle();
+        let v0 = g.version();
+        assert_eq!(g.apply_batch(&[], None, 1), BatchApply::default());
+        // Unknown-vertex removals are skipped without a bump.
+        let res = g.apply_batch(&[EdgeOp::remove(98, 99), EdgeOp::RemoveVertex(98)], None, 1);
+        assert_eq!((res.applied, res.skipped), (0, 2));
+        assert_eq!(g.version(), v0);
+    }
+
+    #[test]
+    fn apply_batch_vertex_removal_is_a_sequence_point() {
+        let mut a = triangle();
+        let mut b = a.clone();
+        let ops = vec![
+            EdgeOp::add(10, 30),
+            EdgeOp::RemoveVertex(20),
+            EdgeOp::add(20, 10), // slot survives, edge re-attaches
+        ];
+        a.apply_batch(&ops, None, 1);
+        seq_apply(&mut b, &ops);
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert!(a.has_edge(20, 10) && !a.has_edge(20, 30) && !a.has_edge(10, 20));
+    }
+
+    #[test]
+    fn apply_batch_hashed_row_merge_matches_sequential() {
+        // A hub losing many out-edges (hashed validation: the out row
+        // carries 40 ops) and many in-edges (hashed retain on the in
+        // row) at once — both sides cross ROW_OPS_HASH_MIN.
+        let hub = 9_999u64;
+        let (base, _) = DynamicGraph::from_edges(
+            (0..80u64).map(|i| (i, hub)).chain((0..80u64).map(|i| (hub, 1_000 + i))),
+        );
+        let mut ops: Vec<EdgeOp> = (0..40u64).map(|i| EdgeOp::remove(i * 2, hub)).collect();
+        ops.extend((0..40u64).map(|i| EdgeOp::remove(hub, 1_000 + i * 2)));
+        ops.push(EdgeOp::add(hub, 0));
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let res = a.apply_batch(&ops, None, 1);
+        seq_apply(&mut b, &ops);
+        assert!(!res.fallback);
+        assert_eq!((res.edges_added, res.edges_removed), (1, 80));
+        assert_eq!(a.snapshot(), b.snapshot());
+        // Hashed validation still rejects conflicts (a duplicate remove
+        // buried in a 21-op row).
+        let mut dup: Vec<EdgeOp> = (0..20u64).map(|i| EdgeOp::remove(hub, 1_000 + i)).collect();
+        dup.push(EdgeOp::remove(hub, 1_000));
+        let mut c = base.clone();
+        let mut d = base.clone();
+        let res = c.apply_batch(&dup, None, 1);
+        seq_apply(&mut d, &dup);
+        assert!(res.fallback);
+        assert_eq!(c.snapshot(), d.snapshot());
+    }
+
+    #[test]
+    fn apply_batch_parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        // A batch big enough to cross the parallel threshold: a fresh
+        // star plus removals against a pre-built graph.
+        let (base, _) = DynamicGraph::from_edges((0..600u64).map(|i| (i, (i + 1) % 600)));
+        let mut ops: Vec<EdgeOp> = (0..BATCH_PARALLEL_MIN_OPS as u64)
+            .map(|i| EdgeOp::add(1_000 + i, i % 600))
+            .collect();
+        for i in 0..200u64 {
+            ops.push(EdgeOp::remove(i * 3 % 600, (i * 3 + 1) % 600));
+        }
+        let mut serial = base.clone();
+        let rs = serial.apply_batch(&ops, None, 1);
+        for shards in [2usize, 4, 7] {
+            let mut par = base.clone();
+            let rp = par.apply_batch(&ops, Some(&pool), shards);
+            assert_eq!(rp, rs, "shards={shards}");
+            assert_eq!(par.snapshot(), serial.snapshot(), "shards={shards}");
+            assert_eq!(par.version(), serial.version(), "shards={shards}");
+        }
     }
 }

@@ -84,6 +84,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("queue", "ingestion queue capacity", Some("65536"))
         .opt("parallelism", "PageRank shards (1 = serial, 0 = one per core)", Some("1"))
         .opt("max-conns", "simultaneous TCP client connections", Some("64"))
+        .opt("rate-limit", "per-connection read ops/sec (0 = unlimited)", Some("0"))
         .opt("top-k", "top entries pre-ranked per published snapshot", Some("128"))
         .flag("no-xla", "force the sparse executor")
         .flag("help", "show usage");
@@ -113,7 +114,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         engine.has_xla()
     );
     let handle = ServerHandle::spawn(engine, p.req_parse::<usize>("queue")?, OverflowPolicy::Block);
-    let opts = ServeOptions { max_connections: p.req_parse::<usize>("max-conns")? };
+    let opts = ServeOptions {
+        max_connections: p.req_parse::<usize>("max-conns")?,
+        rate_limit: p.req_parse::<f64>("rate-limit")?,
+    };
     serve_tcp_with(handle, p.get("addr").unwrap(), opts)
 }
 

@@ -9,8 +9,17 @@
 //! The buffer also captures, at apply time, the *previous* degree
 //! `d_{t-1}(u)` of every touched vertex — exactly the quantity Eq. 2's
 //! update-ratio threshold needs at the next measurement point.
+//!
+//! Two apply paths exist. [`UpdateBuffer::apply`] is the sequential
+//! reference: one graph mutation per raw op. [`UpdateBuffer::take_batch`]
+//! is the batched write pipeline's coalescing stage: it drains the raw
+//! ops into an [`UpdateBatch`] of *effective* ops (duplicate adds
+//! collapse, add-then-remove pairs cancel, last-writer-wins per
+//! (src, dst)) that [`DynamicGraph::apply_batch`] applies with one row
+//! mutation per touched row and one version bump per batch — final state
+//! bit-identical to the sequential path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::error::Result;
 use crate::graph::dynamic::DynamicGraph;
@@ -34,6 +43,19 @@ pub struct UpdateStatistics {
     pub total_vertices: usize,
     /// Current total edges in the graph (pre-apply).
     pub total_edges: usize,
+    /// Coalescing *estimate* for the pending ops: distinct pending
+    /// (src, dst) pairs (last-writer-wins) plus pending vertex ops.
+    /// Graph-free and approximate in both directions — cancellations
+    /// against the live topology push the true effective count below
+    /// it, while synthesized endpoint creations and re-establish
+    /// remove+add pairs can push it slightly above. The exact numbers
+    /// land in [`Self::coalesced_raw_ops`] /
+    /// [`Self::coalesced_effective_ops`] once a batch is drained.
+    pub pending_effective_estimate: usize,
+    /// Cumulative raw ops drained through [`UpdateBuffer::take_batch`].
+    pub coalesced_raw_ops: usize,
+    /// Cumulative effective ops those batches kept after coalescing.
+    pub coalesced_effective_ops: usize,
 }
 
 impl UpdateStatistics {
@@ -97,8 +119,15 @@ impl PendingCounts {
 #[derive(Clone, Debug, Default)]
 pub struct UpdateBuffer {
     ops: Vec<EdgeOp>,
-    touched: std::collections::HashSet<VertexId>,
+    touched: HashSet<VertexId>,
     counts: PendingCounts,
+    /// Distinct (src, dst) pairs among pending edge ops — the O(1)
+    /// last-writer-wins coalescing estimate behind
+    /// [`UpdateStatistics::pending_effective_estimate`].
+    pairs: HashSet<(VertexId, VertexId)>,
+    /// Cumulative (raw, effective) op counts across every drained batch.
+    coalesced_raw: usize,
+    coalesced_effective: usize,
 }
 
 impl UpdateBuffer {
@@ -113,6 +142,7 @@ impl UpdateBuffer {
             EdgeOp::AddEdge(u, v) | EdgeOp::RemoveEdge(u, v) => {
                 self.touched.insert(u);
                 self.touched.insert(v);
+                self.pairs.insert((u, v));
             }
             EdgeOp::AddVertex(u) | EdgeOp::RemoveVertex(u) => {
                 self.touched.insert(u);
@@ -120,6 +150,21 @@ impl UpdateBuffer {
         }
         self.counts.bump(&op);
         self.ops.push(op);
+    }
+
+    /// Register a whole batch of operations in one call (the write-path
+    /// twin of [`crate::graph::dynamic::DynamicGraph::apply_batch`]):
+    /// reserves once and returns how many ops were buffered, so callers
+    /// pay one bookkeeping step per batch instead of one per op.
+    pub fn register_batch(&mut self, ops: impl IntoIterator<Item = EdgeOp>) -> usize {
+        let it = ops.into_iter();
+        let (lo, _) = it.size_hint();
+        self.ops.reserve(lo);
+        let before = self.ops.len();
+        for op in it {
+            self.register(op);
+        }
+        self.ops.len() - before
     }
 
     /// Number of pending operations.
@@ -142,7 +187,14 @@ impl UpdateBuffer {
     pub fn clear(&mut self) {
         self.ops.clear();
         self.touched.clear();
+        self.pairs.clear();
         self.counts = PendingCounts::default();
+    }
+
+    /// Cumulative (raw, effective) op counts across every batch drained
+    /// with [`Self::take_batch`].
+    pub fn coalesce_totals(&self) -> (usize, usize) {
+        (self.coalesced_raw, self.coalesced_effective)
     }
 
     /// Statistics snapshot against the current (pre-apply) graph — O(1):
@@ -157,6 +209,11 @@ impl UpdateBuffer {
             touched_vertices: self.touched.len(),
             total_vertices: g.num_vertices(),
             total_edges: g.num_edges(),
+            pending_effective_estimate: self.pairs.len()
+                + self.counts.add_vertices
+                + self.counts.remove_vertices,
+            coalesced_raw_ops: self.coalesced_raw,
+            coalesced_effective_ops: self.coalesced_effective,
         }
     }
 
@@ -193,8 +250,260 @@ impl UpdateBuffer {
             }
         }
         self.touched.clear();
+        self.pairs.clear();
         self.counts = PendingCounts::default();
         Ok(out)
+    }
+
+    /// Drain the pending ops into a coalesced [`UpdateBatch`] against the
+    /// current (pre-apply) graph. The batch's effective op list, applied
+    /// sequentially, is **bit-identical** to sequentially applying the
+    /// raw pending ops — including adjacency append order and vertex
+    /// creation (dense-index) order — while dropping every no-op:
+    ///
+    /// * duplicate adds collapse (the first establishing add survives);
+    /// * an add followed by a remove of the same edge cancels outright
+    ///   (but the vertices the add created are still created);
+    /// * per (src, dst), only the last-written state survives;
+    /// * removes of absent edges and re-inserts of existing vertices drop.
+    ///
+    /// `RemoveVertex` ops act as sequence points: edge ops coalesce
+    /// within the segments between them, and cross-segment edge presence
+    /// is tracked so later segments coalesce against the state the
+    /// earlier ones will have produced.
+    pub fn take_batch(&mut self, g: &DynamicGraph) -> UpdateBatch {
+        let raw = std::mem::take(&mut self.ops);
+        let mut touched: Vec<VertexId> = self.touched.drain().collect();
+        touched.sort_unstable();
+        self.pairs.clear();
+        self.counts = PendingCounts::default();
+        let mut batch = UpdateBatch { raw_ops: raw.len(), touched, ..Default::default() };
+
+        // Cross-segment state: `overlay` holds the post-segment presence
+        // of every pair the batch touched, stamped with the barrier
+        // epoch it was written at; `removed_at` the epoch a barrier last
+        // wiped each vertex. An overlay entry older than a wipe of
+        // either endpoint is dead — checked lazily at lookup, so a
+        // barrier costs O(1) instead of rescanning every overlay pair.
+        // `created` tracks the vertices this batch creates.
+        let mut overlay: HashMap<(VertexId, VertexId), (bool, u64)> = HashMap::new();
+        let mut removed_at: HashMap<VertexId, u64> = HashMap::new();
+        let mut epoch: u64 = 0;
+        let mut created: HashSet<VertexId> = HashSet::new();
+
+        // Current-segment state: per-pair simulation in first-touch order.
+        let mut pairs: HashMap<(VertexId, VertexId), PairSim> = HashMap::new();
+        let mut order: Vec<(VertexId, VertexId)> = Vec::new();
+        // Lazy per-source hashed neighbor sets: presence probes against a
+        // high-degree row hash once instead of scanning O(degree) per
+        // first-touched pair (the hub-dismantling batch shape).
+        let mut nbrs: HashMap<VertexId, HashSet<VertexId>> = HashMap::new();
+        // Emitted (raw position, op) entries; sorted once at the end.
+        let mut out: Vec<(usize, EdgeOp)> = Vec::new();
+
+        for (pos, op) in raw.iter().enumerate() {
+            match *op {
+                EdgeOp::AddVertex(u) => {
+                    if g.index(u).is_some() || created.contains(&u) {
+                        batch.collapsed += 1; // re-insert of an existing vertex: no-op
+                    } else {
+                        created.insert(u);
+                        out.push((pos, EdgeOp::AddVertex(u)));
+                    }
+                }
+                EdgeOp::AddEdge(u, v) | EdgeOp::RemoveEdge(u, v) => {
+                    let is_add = matches!(op, EdgeOp::AddEdge(..));
+                    if is_add {
+                        // `add_edge` creates missing endpoints before the
+                        // duplicate check, so creation order follows the
+                        // raw adds even when the edge op itself coalesces
+                        // away (the cancelling-pair case).
+                        for id in [u, v] {
+                            if g.index(id).is_none() && !created.contains(&id) {
+                                created.insert(id);
+                                out.push((pos, EdgeOp::AddVertex(id)));
+                            }
+                        }
+                    }
+                    let st = pairs.entry((u, v)).or_insert_with(|| {
+                        order.push((u, v));
+                        let wiped = removed_at
+                            .get(&u)
+                            .copied()
+                            .unwrap_or(0)
+                            .max(removed_at.get(&v).copied().unwrap_or(0));
+                        let p0 = match overlay.get(&(u, v)) {
+                            Some(&(present, at)) if at >= wiped => present,
+                            Some(_) => false, // wiped by a later barrier
+                            None if wiped > 0 => false,
+                            None => has_edge_cached(g, &mut nbrs, u, v),
+                        };
+                        PairSim { p0, present: p0, est: None, fr: None, had_add: false }
+                    });
+                    if is_add {
+                        st.had_add = true;
+                        if st.present {
+                            batch.collapsed += 1; // duplicate add
+                        } else {
+                            st.present = true;
+                            st.est = Some(pos);
+                        }
+                    } else if st.present {
+                        st.present = false;
+                        st.est = None;
+                        if st.fr.is_none() {
+                            st.fr = Some(pos);
+                        }
+                    } else {
+                        batch.collapsed += 1; // remove of an absent edge
+                    }
+                }
+                EdgeOp::RemoveVertex(u) => {
+                    if g.index(u).is_some() || created.contains(&u) {
+                        // A real barrier: flush the segment so the apply
+                        // step splits exactly here. (A removal of an
+                        // unknown vertex is a no-op in the raw sequence,
+                        // so edge ops coalesce straight through it.)
+                        let b = &mut batch;
+                        flush_segment(&mut pairs, &mut order, &mut out, &mut overlay, epoch, b);
+                        out.push((pos, EdgeOp::RemoveVertex(u)));
+                        epoch += 1;
+                        removed_at.insert(u, epoch);
+                    } else {
+                        batch.collapsed += 1; // unknown vertex: raw op errors
+                    }
+                }
+            }
+        }
+        flush_segment(&mut pairs, &mut order, &mut out, &mut overlay, epoch, &mut batch);
+
+        // Stable sort: emissions sharing a raw position (a pair's two
+        // endpoint creations) keep their emission order.
+        out.sort_by_key(|&(pos, _)| pos);
+        batch.ops = out.into_iter().map(|(_, op)| op).collect();
+        self.coalesced_raw += batch.raw_ops;
+        self.coalesced_effective += batch.ops.len();
+        batch
+    }
+}
+
+/// Source out-degree past which [`has_edge_cached`] hashes the row's
+/// neighbor set once instead of linearly scanning it per probe.
+const HAS_EDGE_HASH_MIN: usize = 64;
+
+/// Pre-batch edge-presence probe with a lazy per-source hash: low-degree
+/// rows use the ordinary linear `has_edge`, high-degree rows pay one
+/// O(degree) set build on first touch and O(1) per probe after.
+fn has_edge_cached(
+    g: &DynamicGraph,
+    cache: &mut HashMap<VertexId, HashSet<VertexId>>,
+    u: VertexId,
+    v: VertexId,
+) -> bool {
+    let s = match g.index(u) {
+        Some(s) => s,
+        None => return false,
+    };
+    if g.out_degree(s) < HAS_EDGE_HASH_MIN {
+        return g.has_edge(u, v);
+    }
+    cache
+        .entry(u)
+        .or_insert_with(|| g.out_neighbors(s).iter().map(|&d| g.id(d)).collect())
+        .contains(&v)
+}
+
+/// Per-(src, dst) simulation state for one coalescing segment.
+struct PairSim {
+    /// Presence at segment start.
+    p0: bool,
+    /// Simulated presence so far.
+    present: bool,
+    /// Position of the add that establishes the pair's final presence
+    /// (cleared by a later remove). Appends replayed in `est` order
+    /// reproduce the raw adjacency append order exactly.
+    est: Option<usize>,
+    /// Position of the first effective remove (where the surviving
+    /// removal of an initially-present edge is emitted).
+    fr: Option<usize>,
+    /// Whether any add was seen (distinguishes cancelled pairs from
+    /// pure no-op removes).
+    had_add: bool,
+}
+
+/// Emit one segment's surviving ops and roll its final presences into
+/// the cross-segment overlay, stamped with the current barrier `epoch`
+/// (entries older than a wipe of either endpoint are dead — see
+/// [`UpdateBuffer::take_batch`]).
+fn flush_segment(
+    pairs: &mut HashMap<(VertexId, VertexId), PairSim>,
+    order: &mut Vec<(VertexId, VertexId)>,
+    out: &mut Vec<(usize, EdgeOp)>,
+    overlay: &mut HashMap<(VertexId, VertexId), (bool, u64)>,
+    epoch: u64,
+    batch: &mut UpdateBatch,
+) {
+    for pair in order.drain(..) {
+        let st = &pairs[&pair];
+        if st.p0 && (st.est.is_some() || !st.present) {
+            // Initially present and either net-removed or re-established
+            // (remove-then-add moves the edge to the append position).
+            let fr = st.fr.expect("effective remove recorded");
+            out.push((fr, EdgeOp::RemoveEdge(pair.0, pair.1)));
+        }
+        if let Some(p) = st.est {
+            out.push((p, EdgeOp::AddEdge(pair.0, pair.1)));
+        }
+        if !st.p0 && !st.present && st.had_add {
+            batch.cancelled_pairs += 1;
+        }
+        overlay.insert(pair, (st.present, epoch));
+    }
+    pairs.clear();
+}
+
+/// A coalesced batch drained from the buffer: the effective operations
+/// whose sequential application is bit-identical to sequentially applying
+/// the raw pending operations, plus coalescing statistics. Feed
+/// [`Self::ops`] to [`DynamicGraph::apply_batch`] for the grouped,
+/// single-version-bump apply.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateBatch {
+    /// Effective operations in canonical (raw-position) order.
+    ops: Vec<EdgeOp>,
+    /// Distinct vertices the raw ops touched (sorted) — what the degree
+    /// baseline capture needs before the batch is applied.
+    touched: Vec<VertexId>,
+    /// Raw operations drained into this batch.
+    pub raw_ops: usize,
+    /// Raw operations dropped as no-ops (duplicate adds, removes of
+    /// absent edges, re-inserts of existing vertices, unknown-vertex
+    /// removals).
+    pub collapsed: usize,
+    /// Pairs whose adds and removes cancelled outright (the
+    /// add-then-remove case; their vertex creations are preserved).
+    pub cancelled_pairs: usize,
+}
+
+impl UpdateBatch {
+    /// The effective ops, in application order.
+    pub fn ops(&self) -> &[EdgeOp] {
+        &self.ops
+    }
+
+    /// Distinct vertices the raw ops touched (sorted).
+    pub fn touched(&self) -> &[VertexId] {
+        &self.touched
+    }
+
+    /// Number of effective ops kept after coalescing.
+    pub fn effective_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when coalescing left nothing to apply.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
     }
 }
 
@@ -289,23 +598,29 @@ mod tests {
     /// Recount from scratch — the oracle the incremental counters must
     /// match at every point of an interleaved register/apply/clear run.
     fn rescan(buf: &UpdateBuffer, g: &DynamicGraph) -> UpdateStatistics {
+        let (raw, effective) = buf.coalesce_totals();
         let mut s = UpdateStatistics {
             total_vertices: g.num_vertices(),
             total_edges: g.num_edges(),
+            coalesced_raw_ops: raw,
+            coalesced_effective_ops: effective,
             ..Default::default()
         };
         let mut touched = std::collections::HashSet::new();
+        let mut pairs = std::collections::HashSet::new();
         for op in buf.pending() {
             match op {
                 EdgeOp::AddEdge(u, v) => {
                     s.pending_add_edges += 1;
                     touched.insert(*u);
                     touched.insert(*v);
+                    pairs.insert((*u, *v));
                 }
                 EdgeOp::RemoveEdge(u, v) => {
                     s.pending_remove_edges += 1;
                     touched.insert(*u);
                     touched.insert(*v);
+                    pairs.insert((*u, *v));
                 }
                 EdgeOp::AddVertex(u) => {
                     s.pending_add_vertices += 1;
@@ -318,6 +633,8 @@ mod tests {
             }
         }
         s.touched_vertices = touched.len();
+        s.pending_effective_estimate =
+            pairs.len() + s.pending_add_vertices + s.pending_remove_vertices;
         s
     }
 
@@ -328,7 +645,7 @@ mod tests {
         let mut buf = UpdateBuffer::new();
         let mut rng = Xoshiro256pp::new(0xBEEF);
         for step in 0..400u32 {
-            match rng.next_below(20) {
+            match rng.next_below(22) {
                 0..=9 => {
                     let (u, v) = (rng.next_below(30), rng.next_below(30));
                     buf.register(if rng.next_below(4) == 0 {
@@ -342,9 +659,135 @@ mod tests {
                 16..=17 => {
                     buf.apply(&mut g).unwrap();
                 }
+                18..=19 => {
+                    let batch = buf.take_batch(&g);
+                    g.apply_batch(batch.ops(), None, 1);
+                }
                 _ => buf.clear(),
             }
             assert_eq!(buf.statistics(&g), rescan(&buf, &g), "step {step}");
         }
+    }
+
+    // ---- coalescing ----------------------------------------------------
+
+    /// Op-by-op oracle: sequentially applying a batch's effective ops
+    /// must leave the graph in exactly the state the raw ops would have.
+    fn seq_apply(g: &mut DynamicGraph, ops: &[EdgeOp]) -> (usize, usize) {
+        let (mut ok, mut skip) = (0, 0);
+        for op in ops {
+            let applied = match *op {
+                EdgeOp::AddEdge(u, v) => g.add_edge(u, v).is_ok(),
+                EdgeOp::RemoveEdge(u, v) => g.remove_edge(u, v).is_ok(),
+                EdgeOp::AddVertex(u) => {
+                    g.add_vertex(u);
+                    true
+                }
+                EdgeOp::RemoveVertex(u) => g.remove_vertex(u).is_ok(),
+            };
+            if applied {
+                ok += 1;
+            } else {
+                skip += 1;
+            }
+        }
+        (ok, skip)
+    }
+
+    fn assert_same_graph(a: &DynamicGraph, b: &DynamicGraph, what: &str) {
+        assert_eq!(a.ids(), b.ids(), "{what}: vertex order");
+        assert_eq!(a.num_edges(), b.num_edges(), "{what}: edge count");
+        assert_eq!(a.snapshot(), b.snapshot(), "{what}: snapshot");
+    }
+
+    #[test]
+    fn coalesce_collapses_duplicate_adds() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(2, 3));
+        buf.register(EdgeOp::add(2, 3)); // duplicate within the batch
+        buf.register(EdgeOp::add(1, 2)); // duplicate against the graph
+        let batch = buf.take_batch(&g);
+        assert_eq!(batch.raw_ops, 3);
+        assert_eq!(batch.effective_ops(), 2, "AddVertex(3) + add(2,3)");
+        assert_eq!(batch.collapsed, 2);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn coalesce_cancels_add_remove_but_keeps_vertices() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut buf = UpdateBuffer::new();
+        buf.register(EdgeOp::add(7, 8)); // both endpoints new
+        buf.register(EdgeOp::remove(7, 8)); // cancels the add
+        let batch = buf.take_batch(&g);
+        assert_eq!(batch.cancelled_pairs, 1);
+        assert_eq!(batch.ops(), &[EdgeOp::AddVertex(7), EdgeOp::AddVertex(8)]);
+        // Oracle: the raw sequence also leaves 7 and 8 as isolated slots.
+        let mut a = g.clone();
+        seq_apply(&mut a, batch.ops());
+        let mut b = g.clone();
+        seq_apply(&mut b, &[EdgeOp::add(7, 8), EdgeOp::remove(7, 8)]);
+        assert_same_graph(&a, &b, "cancelled pair");
+    }
+
+    #[test]
+    fn coalesce_last_writer_wins_per_pair() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2), (3, 4)]);
+        let mut buf = UpdateBuffer::new();
+        // (1,2): present → remove, add, remove ⇒ net remove
+        buf.register(EdgeOp::remove(1, 2));
+        buf.register(EdgeOp::add(1, 2));
+        buf.register(EdgeOp::remove(1, 2));
+        // (3,4): present → remove, add ⇒ re-established (moves to append slot)
+        buf.register(EdgeOp::remove(3, 4));
+        buf.register(EdgeOp::add(3, 4));
+        let batch = buf.take_batch(&g);
+        assert_eq!(batch.ops(), &[EdgeOp::remove(1, 2), EdgeOp::remove(3, 4), EdgeOp::add(3, 4)]);
+        let mut a = g.clone();
+        seq_apply(&mut a, batch.ops());
+        assert!(!a.has_edge(1, 2) && a.has_edge(3, 4));
+    }
+
+    #[test]
+    fn coalesce_treats_vertex_removal_as_sequence_point() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 3)]);
+        let raw = vec![
+            EdgeOp::add(2, 9),
+            EdgeOp::RemoveVertex(2), // wipes (1,2), (2,3), (2,9)
+            EdgeOp::add(2, 3),       // re-added after the barrier
+            EdgeOp::remove(1, 2),    // absent post-barrier: collapses
+        ];
+        let mut buf = UpdateBuffer::new();
+        for op in &raw {
+            buf.register(*op);
+        }
+        let batch = buf.take_batch(&g);
+        let mut a = g.clone();
+        seq_apply(&mut a, batch.ops());
+        let mut b = g.clone();
+        seq_apply(&mut b, &raw);
+        assert_same_graph(&a, &b, "barrier");
+        assert!(a.has_edge(2, 3) && !a.has_edge(1, 2) && !a.has_edge(2, 9));
+    }
+
+    #[test]
+    fn coalesced_sequential_apply_matches_raw_append_order() {
+        // The establishment-order rule: [add(a,x), remove(a,x), add(b,x),
+        // add(a,x)] must leave x's in-adjacency as [b, a], exactly as the
+        // raw sequence does.
+        let g = DynamicGraph::new();
+        let raw =
+            vec![EdgeOp::add(10, 5), EdgeOp::remove(10, 5), EdgeOp::add(11, 5), EdgeOp::add(10, 5)];
+        let mut buf = UpdateBuffer::new();
+        for op in &raw {
+            buf.register(*op);
+        }
+        let batch = buf.take_batch(&g);
+        let mut a = g.clone();
+        seq_apply(&mut a, batch.ops());
+        let mut b = g.clone();
+        seq_apply(&mut b, &raw);
+        assert_same_graph(&a, &b, "append order");
     }
 }

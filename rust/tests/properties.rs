@@ -5,6 +5,8 @@
 use std::collections::HashMap;
 
 use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::policies::StalenessPolicy;
+use veilgraph::coordinator::udf::Action;
 use veilgraph::graph::csr::Csr;
 use veilgraph::graph::dynamic::DynamicGraph;
 use veilgraph::graph::snapshot::{SnapshotBuild, SnapshotCache};
@@ -766,5 +768,138 @@ fn prop_published_snapshot_matches_engine_state() {
                 "precomputed top-K index == fresh deterministic selection"
             );
         }
+    });
+}
+
+/// The batched write pipeline end to end: coalesced-batch apply is
+/// behaviorally identical to op-by-op apply — final CSR (bit-for-bit,
+/// including adjacency append order), dense-index assignment, edge count
+/// and incremental-snapshot stamps — under arbitrary add/remove
+/// interleavings including duplicate adds, cancelling pairs, vertex
+/// inserts and vertex removals.
+#[test]
+fn prop_batched_apply_matches_op_by_op() {
+    forall(60, 0xB5, |g| {
+        let base = random_graph(g, 40, 150);
+        let mut seq = base.clone();
+        let mut bat = base.clone();
+        for round in 0..g.usize(1..4) {
+            // A raw sequence biased toward collisions, so duplicates and
+            // cancelling pairs actually occur.
+            let mut ops: Vec<EdgeOp> = Vec::new();
+            for _ in 0..g.usize(0..40) {
+                let (u, v) = (g.u64(0..50), g.u64(0..50));
+                match g.usize(0..12) {
+                    0..=5 => ops.push(EdgeOp::add(u, v)),
+                    6..=8 => ops.push(EdgeOp::remove(u, v)),
+                    9 => {
+                        ops.push(EdgeOp::add(u, v));
+                        ops.push(EdgeOp::remove(u, v)); // cancelling pair
+                    }
+                    10 => ops.push(EdgeOp::AddVertex(u)),
+                    _ => ops.push(EdgeOp::RemoveVertex(u)),
+                }
+            }
+            // Oracle: the sequential reference path.
+            let mut sbuf = UpdateBuffer::new();
+            for op in &ops {
+                sbuf.register(*op);
+            }
+            sbuf.apply(&mut seq).unwrap();
+            // Batch path: coalesce, then grouped apply.
+            let mut bbuf = UpdateBuffer::new();
+            bbuf.register_batch(ops.iter().copied());
+            let prev = bat.snapshot();
+            let pv = bat.version();
+            let batch = bbuf.take_batch(&bat);
+            // No effective-vs-raw inequality: coalescing drops no-ops but
+            // also synthesizes AddVertex ops for new edge endpoints, so a
+            // single raw add can become up to three effective ops.
+            let res = bat.apply_batch(batch.ops(), None, 1);
+            assert!(!res.fallback, "coalesced batches are conflict-free");
+            assert_eq!(res.skipped, 0, "coalescing drops every no-op up front");
+            // Behavioral identity with the sequential path.
+            assert_eq!(bat.ids(), seq.ids(), "dense index assignment (round {round})");
+            assert_eq!(bat.num_edges(), seq.num_edges(), "round {round}");
+            assert_eq!(bat.snapshot(), seq.snapshot(), "bit-identical CSR (round {round})");
+            // Version semantics: an all-no-op batch must not invalidate
+            // snapshot caches; effective batches must.
+            if res.applied == 0 {
+                assert_eq!(bat.version(), pv, "no-op batch bumped the version");
+            } else {
+                assert!(bat.version() > pv, "effective batch must bump the version");
+            }
+            // The single stamp pass keeps incremental rebuilds exact.
+            assert_eq!(bat.snapshot_from(&prev, pv, None, 1), bat.snapshot(), "round {round}");
+        }
+    });
+}
+
+/// `apply_batch` sharded over a pool == serial `apply_batch`, bit for
+/// bit, for shard counts {2, 4, 7} on batches large enough to cross the
+/// parallel-dispatch threshold.
+#[test]
+fn prop_batched_apply_parallel_matches_serial() {
+    let pool = ThreadPool::new(4);
+    forall(12, 0xB6, |g| {
+        let base = random_graph(g, 60, 400);
+        let mut ops: Vec<EdgeOp> = Vec::new();
+        for _ in 0..1_200 {
+            let (u, v) = (g.u64(0..300), g.u64(0..300));
+            ops.push(if g.bool(0.8) { EdgeOp::add(u, v) } else { EdgeOp::remove(u, v) });
+        }
+        let mut buf = UpdateBuffer::new();
+        buf.register_batch(ops.iter().copied());
+        let batch = buf.take_batch(&base);
+        let mut serial = base.clone();
+        let rs = serial.apply_batch(batch.ops(), None, 1);
+        for shards in [2usize, 4, 7] {
+            let mut par = base.clone();
+            let rp = par.apply_batch(batch.ops(), Some(&pool), shards);
+            assert_eq!(rp, rs, "shards={shards}");
+            assert_eq!(par.ids(), serial.ids(), "shards={shards}");
+            assert_eq!(par.version(), serial.version(), "shards={shards}");
+            assert_eq!(par.snapshot(), serial.snapshot(), "shards={shards}");
+        }
+    });
+}
+
+/// `StalenessPolicy` escalation is monotone: growing any staleness
+/// signal (accumulated effective updates, snapshot age in queries, age
+/// in seconds) never de-escalates the chosen action.
+#[test]
+fn prop_staleness_policy_escalation_is_monotone() {
+    fn severity(a: Action) -> u8 {
+        match a {
+            Action::RepeatLast => 0,
+            Action::ComputeApproximate => 1,
+            Action::ComputeExact => 2,
+        }
+    }
+    forall(200, 0xB7, |g| {
+        let au = g.u64(1..50);
+        let aq = g.u64(1..50);
+        let asecs = g.f64(0.1..20.0);
+        let p = StalenessPolicy::new(
+            au,
+            au + g.u64(0..100),
+            aq,
+            aq + g.u64(0..100),
+            asecs,
+            asecs + g.f64(0.0..100.0),
+        );
+        let updates = g.u64(0..120);
+        let queries = g.u64(0..120);
+        let secs = g.f64(0.0..60.0);
+        let base = p.decide(updates, queries, secs);
+        for (du, dq, ds) in [(1, 0, 0.0), (0, 1, 0.0), (0, 0, 1.5), (9, 4, 7.0)] {
+            let grown = p.decide(updates + du, queries + dq, secs + ds);
+            assert!(
+                severity(grown) >= severity(base),
+                "({updates},{queries},{secs:.2}) -> {base:?} but +({du},{dq},{ds:.2}) -> {grown:?}"
+            );
+        }
+        // Ceiling behavior: arbitrarily stale always resolves to exact.
+        assert_eq!(p.decide(u64::MAX, u64::MAX, f64::MAX), Action::ComputeExact);
     });
 }

@@ -182,7 +182,8 @@ fn tcp_server_handles_two_simultaneous_clients() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        serve_listener(h, listener, ServeOptions { max_connections: 8 }).unwrap();
+        serve_listener(h, listener, ServeOptions { max_connections: 8, ..Default::default() })
+            .unwrap();
     });
 
     let mut c1 = TcpStream::connect(addr).unwrap();
@@ -229,7 +230,8 @@ fn tcp_server_enforces_connection_cap() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        serve_listener(h, listener, ServeOptions { max_connections: 1 }).unwrap();
+        serve_listener(h, listener, ServeOptions { max_connections: 1, ..Default::default() })
+            .unwrap();
     });
 
     let mut c1 = TcpStream::connect(addr).unwrap();
@@ -251,5 +253,85 @@ fn tcp_server_enforces_connection_cap() {
 
     send_line(&mut c1, r#"{"op":"shutdown"}"#);
     assert_eq!(read_json_line(&mut r1).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
+
+/// A flood of read requests on one connection trips the per-connection
+/// rate limit: the burst is served, over-limit requests get an error
+/// line (connection stays open), and writes are unaffected.
+#[test]
+fn tcp_server_enforces_read_rate_limit() {
+    let engine = EngineBuilder::new().build_from_edges(ring(15)).unwrap();
+    let h = ServerHandle::spawn(engine, 256, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let opts = ServeOptions { max_connections: 4, rate_limit: 3.0 };
+        serve_listener(h, listener, opts).unwrap();
+    });
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+    // Pipeline 40 reads, then collect the 40 responses.
+    for _ in 0..40 {
+        send_line(&mut c, r#"{"op":"top","k":2}"#);
+    }
+    let (mut served, mut limited) = (0, 0);
+    for _ in 0..40 {
+        let resp = read_json_line(&mut r);
+        if resp.get("ok").unwrap().as_bool() == Some(true) {
+            served += 1;
+        } else {
+            let err = resp.get("error").unwrap().as_str().unwrap();
+            assert!(err.contains("rate limit"), "rejection names the limit: {err}");
+            limited += 1;
+        }
+    }
+    assert_eq!(served + limited, 40);
+    assert!(served >= 1, "the burst allowance serves the first reads");
+    assert!(limited >= 1, "a 40-read flood must trip a 3 ops/sec limit");
+    // Writes bypass the read limiter entirely.
+    send_line(&mut c, r#"{"op":"add","src":100,"dst":3}"#);
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
+
+    send_line(&mut c, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
+
+/// The wire `batch` op registers a whole update set in one round-trip
+/// and applies atomically with respect to the serving path: the next
+/// query observes either none or all of it (here: all).
+#[test]
+fn tcp_server_batch_write_roundtrip() {
+    let engine = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+    let h = ServerHandle::spawn(engine, 256, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_listener(h, listener, ServeOptions::default()).unwrap();
+    });
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+    let ops: Vec<String> = (0..32u64)
+        .map(|i| format!(r#"{{"op":"add","src":{},"dst":{}}}"#, 100 + i, i % 10))
+        .collect();
+    send_line(&mut c, &format!(r#"{{"op":"batch","ops":[{}]}}"#, ops.join(",")));
+    let resp = read_json_line(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("registered").unwrap().as_u64(), Some(32));
+
+    send_line(&mut c, r#"{"op":"query","top":3}"#);
+    let q = read_json_line(&mut r);
+    assert_eq!(q.get("ok").unwrap().as_bool(), Some(true));
+    send_line(&mut c, r#"{"op":"rank","id":131}"#);
+    let rank = read_json_line(&mut r);
+    assert!(rank.get("rank").unwrap().as_f64().is_some(), "batched vertex 131 is ranked");
+
+    send_line(&mut c, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
     server.join().unwrap();
 }
