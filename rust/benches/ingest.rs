@@ -13,15 +13,16 @@
 //!
 //! Emits `results/ingest_bench.json` and — when the serving bench ran
 //! first (CI does) — merges `results/bench_4.json` into
-//! `results/bench_5.json`, the BENCH_5 perf-trajectory artifact
-//! (superset of the BENCH_4 schema plus the ingest speedups).
+//! `results/bench_6.json`, the BENCH_6 perf-trajectory artifact
+//! (superset of the BENCH_5 schema: micro + serving + saturation +
+//! ingest speedups).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use veilgraph::coordinator::engine::EngineBuilder;
-use veilgraph::coordinator::server::{serve_listener, ServeOptions, ServerHandle};
+use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
 use veilgraph::graph::dynamic::DynamicGraph;
 use veilgraph::graph::generate;
 use veilgraph::stream::backpressure::OverflowPolicy;
@@ -109,7 +110,7 @@ fn main() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        serve_listener(handle, listener, ServeOptions::default()).unwrap();
+        serve(handle, listener, ServeOptions::new().workers(2)).unwrap();
     });
     let mut c = TcpStream::connect(addr).unwrap();
     let mut r = BufReader::new(c.try_clone().unwrap());
@@ -177,7 +178,8 @@ fn main() {
         .expect("write ingest json");
     println!("JSON written to results/ingest_bench.json");
 
-    // BENCH_5 = BENCH_4 schema (micro + serving) + the ingest ratios.
+    // BENCH_6 = BENCH_4 schema (micro + serving + saturation) + the
+    // ingest ratios — a superset of the BENCH_5 schema.
     let mut doc = std::fs::read_to_string("results/bench_4.json")
         .or_else(|_| std::fs::read_to_string("results/micro_bench.json"))
         .ok()
@@ -204,6 +206,6 @@ fn main() {
         }
         map.insert("ingest".into(), ingest);
     }
-    std::fs::write("results/bench_5.json", doc.to_string_pretty()).expect("write bench_5 json");
-    println!("JSON written to results/bench_5.json");
+    std::fs::write("results/bench_6.json", doc.to_string_pretty()).expect("write bench_6 json");
+    println!("JSON written to results/bench_6.json");
 }

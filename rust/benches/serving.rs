@@ -1,19 +1,28 @@
-//! `cargo bench --bench serving` — serving-throughput benchmark for the
-//! read/write split: N concurrent readers × 1 writer, read-queries/sec
-//! with reads serialized through the engine command queue (the old
-//! architecture) vs reads off the published snapshot (the split).
+//! `cargo bench --bench serving` — serving benchmarks for the read/write
+//! split and the readiness-loop front end.
+//!
+//! * **Throughput**: N concurrent readers × 1 writer, read-queries/sec
+//!   with reads serialized through the engine command queue (the old
+//!   architecture) vs reads off the published snapshot (the split).
+//! * **Saturation**: a wire-level scenario — a mostly-idle slow-client
+//!   swarm, a hot batch writer, and continuous off-thread recomputes —
+//!   measuring one fast client's read throughput and latency against the
+//!   same client on an idle server (`serve_saturated_vs_idle`,
+//!   `recompute_overlap_read_p99`).
 //!
 //! Emits `results/serving_bench.json` and — when the micro bench ran
-//! first (CI does) — merges its numbers into `results/bench_4.json`, the
-//! BENCH_4 perf-trajectory artifact (superset of the BENCH_3 schema plus
-//! the `serve_readers4_vs_single` throughput ratio).
+//! first (CI does) — merges its numbers into `results/bench_4.json`,
+//! which the ingest bench folds into the final BENCH_6 perf-trajectory
+//! artifact.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use veilgraph::coordinator::engine::EngineBuilder;
-use veilgraph::coordinator::server::ServerHandle;
+use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
 use veilgraph::graph::generate;
 use veilgraph::stream::backpressure::OverflowPolicy;
 use veilgraph::stream::event::EdgeOp;
@@ -22,6 +31,8 @@ use veilgraph::util::json::Json;
 
 const READ_K: usize = 100;
 const MEASURE_SECS: f64 = 1.5;
+const SWARM_CONNS: usize = 48;
+const SATURATION_MEASURE_SECS: f64 = 1.5;
 
 /// Fresh vertex ids across every mode, so each mode's mutations are real
 /// (a repeated id range would be skipped as duplicates and flatten the
@@ -85,6 +96,115 @@ fn throughput(handle: &Arc<ServerHandle>, readers: usize, split: bool) -> f64 {
     total.load(Ordering::Relaxed) as f64 / elapsed
 }
 
+fn percentile(mut xs: Vec<f64>, p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((xs.len() - 1) as f64 * p).round() as usize;
+    xs[idx]
+}
+
+fn wire_send(c: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> String {
+    c.write_all(req.as_bytes()).unwrap();
+    c.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line
+}
+
+/// Sequential wire reads (`top`) on one fresh connection for `secs`.
+/// Returns reads/sec plus every per-request round-trip latency.
+fn wire_read_rate(addr: std::net::SocketAddr, secs: f64) -> (f64, Vec<f64>) {
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+    let req = format!("{{\"op\":\"top\",\"k\":{READ_K}}}");
+    let mut lats = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        let q0 = Instant::now();
+        let line = wire_send(&mut c, &mut r, &req);
+        lats.push(q0.elapsed().as_secs_f64());
+        assert!(line.contains("\"ok\":true"), "read failed under load: {line}");
+    }
+    (lats.len() as f64 / t0.elapsed().as_secs_f64(), lats)
+}
+
+/// Wire-level saturation: `SWARM_CONNS` slow clients poking the server,
+/// one hot batch writer, and a query client forcing continuous
+/// off-thread recomputes — all against the readiness loop, while one
+/// fast client measures read throughput and latency. Returns
+/// (idle reads/sec, saturated reads/sec, saturated p99 latency secs).
+fn saturation(addr: std::net::SocketAddr) -> (f64, f64, f64) {
+    // Baseline: the fast client alone on an idle server.
+    let (idle_rps, _) = wire_read_rate(addr, 1.0);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut load = Vec::new();
+    // Slow swarm: mostly-idle connections that each read every ~100 ms.
+    for _ in 0..4 {
+        let stop2 = Arc::clone(&stop);
+        load.push(std::thread::spawn(move || {
+            let mut conns: Vec<(TcpStream, BufReader<TcpStream>)> = (0..SWARM_CONNS / 4)
+                .map(|_| {
+                    let c = TcpStream::connect(addr).unwrap();
+                    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                    let r = BufReader::new(c.try_clone().unwrap());
+                    (c, r)
+                })
+                .collect();
+            while !stop2.load(Ordering::Relaxed) {
+                for (c, r) in &mut conns {
+                    let line = wire_send(c, r, "{\"op\":\"rank\",\"id\":1}");
+                    assert!(line.contains("\"ok\":true"), "swarm read failed: {line}");
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }));
+    }
+    // Hot writer: 256-op batch lines back to back.
+    {
+        let stop2 = Arc::clone(&stop);
+        load.push(std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            while !stop2.load(Ordering::Relaxed) {
+                let base = NEXT_VERTEX.fetch_add(256, Ordering::Relaxed);
+                let ops: Vec<String> = (base..base + 256)
+                    .map(|i| format!("{{\"op\":\"add\",\"src\":{},\"dst\":{}}}", i, i % 50_000))
+                    .collect();
+                let req = format!("{{\"op\":\"batch\",\"ops\":[{}]}}", ops.join(","));
+                let line = wire_send(&mut c, &mut r, &req);
+                assert!(line.contains("\"ok\":"), "writer got no answer: {line}");
+            }
+        }));
+    }
+    // Query client: keeps a recompute in flight for most of the window.
+    {
+        let stop2 = Arc::clone(&stop);
+        load.push(std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            while !stop2.load(Ordering::Relaxed) {
+                let _ = wire_send(&mut c, &mut r, "{\"op\":\"query\",\"top\":10}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }));
+    }
+
+    // Let the load ramp, then measure the fast client under saturation.
+    std::thread::sleep(Duration::from_millis(200));
+    let (sat_rps, sat_lats) = wire_read_rate(addr, SATURATION_MEASURE_SECS);
+    stop.store(true, Ordering::Relaxed);
+    for t in load {
+        t.join().unwrap();
+    }
+    (idle_rps, sat_rps, percentile(sat_lats, 0.99))
+}
+
 fn main() {
     let edges = generate::copying_web(50_000, 10, 0.7, 42);
     let engine = EngineBuilder::new()
@@ -110,6 +230,33 @@ fn main() {
     let ratio = split4 / queue1;
     println!("\nserve_readers4_vs_single (4 split readers vs serialized reads): {ratio:.1}x");
     let _ = (queue4, split1);
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => unreachable!("all bench threads joined"),
+    }
+
+    // ---- saturation: readiness loop under a swarm + hot writer --------
+    let engine = EngineBuilder::new()
+        .params(SummaryParams::new(0.2, 1, 0.1))
+        .build_from_edges(generate::copying_web(50_000, 10, 0.7, 43))
+        .expect("build engine");
+    let h = ServerHandle::spawn(engine, 1 << 16, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve(h, listener, ServeOptions::new().workers(4).max_connections(256)).unwrap();
+    });
+    let (idle_rps, sat_rps, p99) = saturation(addr);
+    let sat_ratio = sat_rps / idle_rps;
+    println!("\nsaturation: idle {idle_rps:.0} reads/sec, saturated {sat_rps:.0} reads/sec");
+    println!("serve_saturated_vs_idle: {sat_ratio:.2}x");
+    println!("recompute_overlap_read_p99: {:.3} ms", p99 * 1e3);
+    {
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        wire_send(&mut c, &mut r, "{\"op\":\"shutdown\"}");
+    }
+    server.join().unwrap();
 
     // ---- machine-readable artifact -----------------------------------
     std::fs::create_dir_all("results").ok();
@@ -126,6 +273,17 @@ fn main() {
                     .collect(),
             ),
         ),
+        (
+            "saturation",
+            Json::obj(vec![
+                ("swarm_conns", Json::Num(SWARM_CONNS as f64)),
+                ("measure_secs", Json::Num(SATURATION_MEASURE_SECS)),
+                ("idle_reads_per_sec", Json::Num(idle_rps)),
+                ("saturated_reads_per_sec", Json::Num(sat_rps)),
+                ("serve_saturated_vs_idle", Json::Num(sat_ratio)),
+                ("recompute_overlap_read_p99", Json::Num(p99)),
+            ]),
+        ),
     ]);
     std::fs::write("results/serving_bench.json", serving.to_string_pretty())
         .expect("write serving json");
@@ -137,24 +295,26 @@ fn main() {
         .and_then(|s| Json::parse(&s).ok())
         .unwrap_or_else(|| Json::obj(Vec::new()));
     if let Json::Obj(map) = &mut doc {
+        let ratios = [
+            ("serve_readers4_vs_single", ratio),
+            ("serve_saturated_vs_idle", sat_ratio),
+        ];
         match map.get_mut("speedups") {
             Some(Json::Obj(speedups)) => {
-                speedups.insert("serve_readers4_vs_single".into(), Json::Num(ratio));
+                for (k, v) in ratios {
+                    speedups.insert(k.into(), Json::Num(v));
+                }
             }
             _ => {
                 map.insert(
                     "speedups".into(),
-                    Json::obj(vec![("serve_readers4_vs_single", Json::Num(ratio))]),
+                    Json::obj(ratios.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
                 );
             }
         }
+        map.insert("recompute_overlap_read_p99".into(), Json::Num(p99));
         map.insert("serving".into(), serving);
     }
     std::fs::write("results/bench_4.json", doc.to_string_pretty()).expect("write bench_4 json");
     println!("JSON written to results/bench_4.json");
-
-    match Arc::try_unwrap(handle) {
-        Ok(h) => h.shutdown(),
-        Err(_) => unreachable!("all bench threads joined"),
-    }
 }

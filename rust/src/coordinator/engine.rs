@@ -25,11 +25,13 @@
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
+use crate::coordinator::policies::StalenessPolicy;
 use crate::coordinator::serving::{
     RankSnapshot, SnapshotPublisher, SnapshotReader, DEFAULT_PUBLISHED_TOP_K,
 };
 use crate::coordinator::udf::{Action, DefaultSuite, ExecStats, QueryContext, UdfSuite};
 use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
 use crate::graph::dynamic::DynamicGraph;
 use crate::graph::snapshot::{SnapshotBuild, SnapshotCache, SnapshotStats};
 use crate::graph::VertexId;
@@ -106,6 +108,161 @@ impl QueryResult {
     /// Rank of one vertex by external id.
     pub fn rank_of(&self, id: VertexId) -> Option<f64> {
         self.snapshot.rank_of(id)
+    }
+}
+
+/// A wire query answered immediately from the published snapshot, plus
+/// the staleness decision that may have scheduled an off-thread
+/// recompute (see [`Engine::query_async`]).
+#[derive(Clone, Debug)]
+pub struct AsyncQueryResult {
+    /// Measurement point `t` (shared counter with [`Engine::query`]).
+    pub query_id: u64,
+    /// What the staleness policy decided (possibly degraded under queue
+    /// pressure); `RepeatLast` means no recompute was warranted.
+    pub decision: Action,
+    /// Whether a recompute job was actually handed to the caller — false
+    /// when one is already in flight even if `decision` escalated.
+    pub scheduled: bool,
+    /// The snapshot this query was answered from (post-absorb: pending
+    /// writes were applied and the topology republished first).
+    pub snapshot: Arc<RankSnapshot>,
+}
+
+/// Inputs for an approximate (summarized) recompute, cloned at the
+/// version fence.
+struct ApproxInputs {
+    graph: DynamicGraph,
+    params: SummaryParams,
+    prev_degree: HashMap<VertexId, usize>,
+    new_vertices: Vec<VertexId>,
+}
+
+/// A version-fenced recompute: everything PageRank needs, captured from
+/// the engine at scheduling time so the computation can run on any other
+/// thread while the engine keeps absorbing writes and publishing reads.
+/// Exact jobs freeze the topology as the engine's cached `Arc<Csr>`
+/// (zero-copy); approximate jobs clone the dynamic graph plus the carry
+/// state the hot-set selection needs.
+pub struct RecomputeJob {
+    decision: Action,
+    query_id: u64,
+    graph_version: u64,
+    /// `updates_since_refresh` this job accounts for — returned to the
+    /// engine if the job corrects nothing (empty summary).
+    accounted_updates: u64,
+    ids: Vec<VertexId>,
+    warm_ranks: Vec<f64>,
+    pr_config: PageRankConfig,
+    csr: Option<Arc<Csr>>,
+    approx: Option<ApproxInputs>,
+}
+
+/// The outcome of a [`RecomputeJob`], handed back to the engine thread
+/// via [`Engine::finish_recompute`].
+pub struct RecomputeResult {
+    /// Measurement point that scheduled the job.
+    pub query_id: u64,
+    /// Graph version the job was fenced at.
+    pub graph_version: u64,
+    /// How the ranking was recomputed.
+    pub action: Action,
+    /// Execution statistics (elapsed covers the whole off-thread run).
+    pub exec: ExecStats,
+    accounted_updates: u64,
+    refreshed: bool,
+    carry_back: Option<(HashMap<VertexId, usize>, Vec<VertexId>)>,
+    ids: Vec<VertexId>,
+    ranks: Vec<f64>,
+}
+
+impl RecomputeJob {
+    /// The accuracy tier this job computes.
+    pub fn decision(&self) -> Action {
+        self.decision
+    }
+
+    /// Graph version the job is fenced at.
+    pub fn graph_version(&self) -> u64 {
+        self.graph_version
+    }
+
+    /// Execute the recompute. Self-contained: runs serially on the
+    /// caller's thread with no access to the engine, its pool or its
+    /// scratch (the engine keeps using those concurrently).
+    pub fn run(self) -> RecomputeResult {
+        let sw = Stopwatch::start();
+        let mut exec = ExecStats::default();
+        let mut refreshed = true;
+        let mut carry_back = None;
+        let ranks = match (self.decision, self.approx) {
+            (Action::ComputeApproximate, Some(a)) => {
+                let mut scratch = SummaryScratch::new();
+                let inputs = HotSetInputs {
+                    graph: &a.graph,
+                    prev_degree: &a.prev_degree,
+                    new_vertices: &a.new_vertices,
+                    prev_ranks: &self.warm_ranks,
+                };
+                let hot = compute_hot_set_pooled(&inputs, &a.params, &mut scratch, None, 1);
+                let default = self.pr_config.init_rank(a.graph.num_vertices());
+                let summary = SummaryGraph::build_pooled(
+                    &a.graph,
+                    &hot,
+                    &self.warm_ranks,
+                    default,
+                    &mut scratch,
+                    None,
+                    1,
+                );
+                scratch.recycle_hot(hot);
+                exec.summary_vertices = summary.num_vertices();
+                exec.summary_edges = summary.num_edges();
+                let mut ranks = self.warm_ranks;
+                if summary.num_vertices() > 0 {
+                    let mut executor = SummarizedExecutor::sparse_only();
+                    match executor.execute_pooled(&summary, &self.pr_config, None) {
+                        Ok((res, backend)) => {
+                            exec.backend = Some(backend);
+                            exec.iterations = res.iterations;
+                            merge_ranks_into(&mut ranks, &summary, &res.ranks, default);
+                        }
+                        Err(_) => refreshed = false,
+                    }
+                } else {
+                    // Sub-threshold drift: the summary corrected nothing.
+                    refreshed = false;
+                }
+                if !refreshed {
+                    // Hand the carry state back so the accumulated-error
+                    // signal keeps counting toward a future refresh.
+                    carry_back = Some((a.prev_degree, a.new_vertices));
+                }
+                ranks
+            }
+            _ => {
+                let csr = self.csr.expect("exact recompute job carries a fenced CSR");
+                let pr = PageRank::new(self.pr_config);
+                let warm = self.pr_config.warm_start_exact
+                    && self.warm_ranks.len() == csr.num_vertices()
+                    && !self.warm_ranks.is_empty();
+                let res = if warm { pr.run_from(&csr, self.warm_ranks) } else { pr.run(&csr) };
+                exec.iterations = res.iterations;
+                res.ranks
+            }
+        };
+        exec.elapsed_secs = sw.secs();
+        RecomputeResult {
+            query_id: self.query_id,
+            graph_version: self.graph_version,
+            action: self.decision,
+            exec,
+            accounted_updates: self.accounted_updates,
+            refreshed,
+            carry_back,
+            ids: self.ids,
+            ranks,
+        }
     }
 }
 
@@ -413,6 +570,7 @@ impl Engine {
     pub fn ingest(&mut self, op: EdgeOp) {
         self.buffer.register(op);
         self.metrics.inc("ops_ingested", 1);
+        self.refresh_ingest_gauges();
     }
 
     /// Ingest a batch of operations in one step: one buffer registration
@@ -422,6 +580,20 @@ impl Engine {
         let n = self.buffer.register_batch(ops);
         self.metrics.inc("ops_ingested", n as u64);
         self.metrics.inc("batches_ingested", 1);
+        self.refresh_ingest_gauges();
+    }
+
+    /// Mirror the buffer's O(1) coalescing counters into the serving
+    /// layer's live gauges so the off-queue `stats` op sees write-path
+    /// pressure between publishes.
+    fn refresh_ingest_gauges(&self) {
+        use std::sync::atomic::Ordering;
+        let g = self.published.ingest_gauges();
+        let (raw, eff) = self.buffer.coalesce_totals();
+        g.coalesced_raw_ops.store(raw as u64, Ordering::Relaxed);
+        g.coalesced_effective_ops.store(eff as u64, Ordering::Relaxed);
+        g.pending_effective_estimate
+            .store(self.buffer.pending_effective_estimate() as u64, Ordering::Relaxed);
     }
 
     /// Ingest a batch (alias of [`Self::ingest_batch`] — routed through
@@ -471,6 +643,7 @@ impl Engine {
         self.metrics.set("last_batch_raw_ops", batch.raw_ops as f64);
         self.metrics.set("last_batch_effective_ops", batch.effective_ops() as f64);
         self.updates_since_refresh += res.applied as u64;
+        self.refresh_ingest_gauges();
     }
 
     /// Serve one query (Alg. 1 lines 6–20).
@@ -581,6 +754,176 @@ impl Engine {
         self.queries_since_publish += 1;
         let snapshot = self.publish_result(query_id, action, &exec, ranks_refreshed, ranks_grew);
         Ok(QueryResult { query_id, action, exec, snapshot })
+    }
+
+    /// The asynchronous serving path: absorb pending writes, answer from
+    /// the (republished) snapshot immediately, and — when the staleness
+    /// policy escalates — hand back a version-fenced [`RecomputeJob`] for
+    /// a worker thread to run instead of recomputing inline. The engine
+    /// thread therefore never blocks on PageRank: writes, recomputes and
+    /// reads all overlap, and `pressure` (engine-queue occupancy in
+    /// [0, 1]) degrades the decision down the accuracy ladder instead of
+    /// letting work queue unboundedly.
+    ///
+    /// `allow_schedule` is false while a recompute is already in flight:
+    /// the decision is still recorded (and served degraded) but no second
+    /// job is created.
+    pub fn query_async(
+        &mut self,
+        policy: &StalenessPolicy,
+        pressure: f64,
+        allow_schedule: bool,
+    ) -> Result<(AsyncQueryResult, Option<RecomputeJob>)> {
+        if self.stopped {
+            return Err(Error::Engine("engine is stopped".into()));
+        }
+        self.query_count += 1;
+        let query_id = self.query_count;
+        if !self.buffer.is_empty() {
+            self.apply_pending_batch();
+        }
+        let ranks_len_before = self.ranks.len();
+        self.extend_ranks_for_new_vertices();
+        let ranks_grew = self.ranks.len() != ranks_len_before;
+        let age_secs = self.last_publish.elapsed().as_secs_f64();
+        self.metrics.set("snapshot_age_secs", age_secs);
+        self.metrics.set("snapshot_age_queries", self.queries_since_publish as f64);
+        let decision = policy.decide_under_pressure(
+            self.updates_since_refresh,
+            self.queries_since_publish,
+            age_secs,
+            pressure,
+        );
+        self.metrics.inc("queries", 1);
+        self.metrics.inc("async_queries", 1);
+        self.metrics.inc(
+            match decision {
+                Action::RepeatLast => "decision_repeat-last",
+                Action::ComputeApproximate => "decision_approximate",
+                Action::ComputeExact => "decision_exact",
+            },
+            1,
+        );
+        self.queries_since_exact += 1;
+        self.queries_since_publish += 1;
+        let job = if allow_schedule && decision != Action::RepeatLast {
+            Some(self.begin_recompute(decision, query_id))
+        } else {
+            None
+        };
+        // The answer itself always repeats the published ranking (the
+        // recompute, if any, publishes later from the worker's result).
+        let exec = ExecStats::default();
+        let snapshot = self.publish_result(query_id, Action::RepeatLast, &exec, false, ranks_grew);
+        let scheduled = job.is_some();
+        Ok((AsyncQueryResult { query_id, decision, scheduled, snapshot }, job))
+    }
+
+    /// Integrate an off-thread recompute back into the engine and publish
+    /// it. Returns true when the fence held (the graph did not move while
+    /// the job ran) and the result was installed verbatim; on a fence
+    /// miss the fenced ranking is merged by vertex id into the live rank
+    /// vector — internally consistent, never regressing topology for
+    /// readers — and the post-fence drift keeps accumulating toward the
+    /// next refresh. Jobs that corrected nothing (empty summary) restore
+    /// the carry state they consumed and publish nothing.
+    pub fn finish_recompute(&mut self, res: RecomputeResult) -> bool {
+        self.metrics.inc("recomputes_offthread", 1);
+        self.metrics.time("recompute_offthread_secs", res.exec.elapsed_secs);
+        if !res.refreshed {
+            self.metrics.inc("recomputes_empty", 1);
+            if let Some((prev_degree, new_vertices)) = res.carry_back {
+                for (id, d) in prev_degree {
+                    self.carry_prev_degree.entry(id).or_insert(d);
+                }
+                let known: HashSet<VertexId> = self.carry_new_vertices.iter().copied().collect();
+                for v in new_vertices {
+                    if !known.contains(&v) {
+                        self.carry_new_vertices.push(v);
+                    }
+                }
+            }
+            self.updates_since_refresh += res.accounted_updates;
+            return false;
+        }
+        let fence_ok = res.graph_version == self.graph.version();
+        if fence_ok {
+            self.ranks = res.ranks;
+        } else {
+            self.metrics.inc("recompute_fence_misses", 1);
+            self.extend_ranks_for_new_vertices();
+            for (id, r) in res.ids.iter().zip(&res.ranks) {
+                if let Some(idx) = self.graph.index(*id) {
+                    self.ranks[idx as usize] = *r;
+                }
+            }
+        }
+        if res.action == Action::ComputeExact {
+            self.queries_since_exact = 0;
+        }
+        self.metrics.inc(
+            match res.action {
+                Action::ComputeApproximate => "action_approximate",
+                _ => "action_exact",
+            },
+            1,
+        );
+        self.metrics.set("last_summary_vertices", res.exec.summary_vertices as f64);
+        self.metrics.set("last_summary_edges", res.exec.summary_edges as f64);
+        self.publish_snapshot(res.query_id, res.action, res.exec, None);
+        fence_ok
+    }
+
+    /// Capture a version-fenced [`RecomputeJob`] for `decision`, taking
+    /// ownership of the staleness signals it accounts for: the carry
+    /// state moves into the job and `updates_since_refresh` resets, so
+    /// updates applied after this fence accumulate toward the *next*
+    /// recompute.
+    fn begin_recompute(&mut self, decision: Action, query_id: u64) -> RecomputeJob {
+        let accounted_updates = self.updates_since_refresh;
+        self.updates_since_refresh = 0;
+        let approx = if decision == Action::ComputeApproximate {
+            Some(ApproxInputs {
+                graph: self.graph.clone(),
+                params: self.params,
+                prev_degree: std::mem::take(&mut self.carry_prev_degree),
+                new_vertices: std::mem::take(&mut self.carry_new_vertices),
+            })
+        } else {
+            self.carry_prev_degree.clear();
+            self.carry_new_vertices.clear();
+            None
+        };
+        let csr = if decision == Action::ComputeExact {
+            let shards = match self.pool.as_deref() {
+                Some(pool) => self.pr_config.effective_shards(pool),
+                None => 1,
+            };
+            let (csr, build) = self.snapshot.get(&self.graph, self.pool.as_deref(), shards);
+            self.metrics.inc(
+                match build {
+                    SnapshotBuild::CacheHit => "snapshot_cache_hits",
+                    SnapshotBuild::Incremental => "snapshot_builds_incremental",
+                    SnapshotBuild::Full => "snapshot_builds_full",
+                },
+                1,
+            );
+            Some(csr)
+        } else {
+            None
+        };
+        self.metrics.inc("recomputes_scheduled", 1);
+        RecomputeJob {
+            decision,
+            query_id,
+            graph_version: self.graph.version(),
+            accounted_updates,
+            ids: self.graph.ids().to_vec(),
+            warm_ranks: self.ranks.clone(),
+            pr_config: self.pr_config,
+            csr,
+            approx,
+        }
     }
 
     /// Consume a prepared event stream, returning one result per query.
@@ -1510,5 +1853,94 @@ mod tests {
         let r = e.query().unwrap();
         assert!(r.exec.summary_vertices > 0, "accumulated drift crosses the threshold");
         assert_eq!(*log.lock().unwrap().last().unwrap(), 4);
+    }
+
+    #[test]
+    fn async_query_schedules_and_finishes_off_thread_recompute() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        let policy = StalenessPolicy::default();
+        // Clean snapshot: repeat-last, nothing scheduled.
+        let (a, job) = e.query_async(&policy, 0.0, true).unwrap();
+        assert_eq!(a.decision, Action::RepeatLast);
+        assert!(!a.scheduled && job.is_none());
+        // One update escalates; the reply is served from the absorbed
+        // (republished) snapshot while the job runs elsewhere.
+        e.ingest(EdgeOp::add(3, 7));
+        let (a, job) = e.query_async(&policy, 0.0, true).unwrap();
+        assert_ne!(a.decision, Action::RepeatLast);
+        assert!(a.scheduled);
+        assert_eq!(a.snapshot.graph_version, e.graph().version(), "reply sees the write");
+        let job = job.unwrap();
+        assert_eq!(job.graph_version(), e.graph().version());
+        let res = std::thread::spawn(move || job.run()).join().unwrap();
+        let before = e.latest_snapshot().version;
+        assert!(e.finish_recompute(res), "fence must hold on an unmutated graph");
+        let snap = e.latest_snapshot();
+        assert!(snap.version > before, "the recompute publishes");
+        assert_ne!(snap.action, Action::RepeatLast);
+        // The installed ranking matches what a synchronous engine computes.
+        let mut sync = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        sync.ingest(EdgeOp::add(3, 7));
+        let r = sync.query().unwrap();
+        for (id, rank) in snap.top(12) {
+            let expect = r.rank_of(id).unwrap();
+            assert!((rank - expect).abs() < 1e-9, "vertex {id}: {rank} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn fence_miss_merges_by_id_and_never_regresses_topology() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        let policy = StalenessPolicy::default();
+        e.ingest(EdgeOp::add(3, 7));
+        let (_, job) = e.query_async(&policy, 0.0, true).unwrap();
+        let job = job.unwrap();
+        // The graph moves past the fence while the job is "running";
+        // with a recompute in flight no second job is scheduled.
+        e.ingest(EdgeOp::AddVertex(99));
+        let (a2, job2) = e.query_async(&policy, 0.0, false).unwrap();
+        assert!(job2.is_none() && !a2.scheduled);
+        assert!(a2.snapshot.rank_of(99).is_some(), "absorb republished the new vertex");
+        let res = job.run();
+        assert!(!e.finish_recompute(res), "fence must miss");
+        assert_eq!(e.metrics().counter("recompute_fence_misses"), Some(1));
+        // The published result keeps the live topology: the fenced ranks
+        // were merged by id, not installed wholesale.
+        let snap = e.latest_snapshot();
+        assert!(snap.rank_of(99).is_some(), "topology never goes backwards for readers");
+        assert_eq!(snap.num_vertices(), e.graph().num_vertices());
+    }
+
+    #[test]
+    fn async_query_degrades_under_pressure_without_losing_staleness() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        let policy = StalenessPolicy::default();
+        e.ingest(EdgeOp::add(1, 5));
+        // Saturated queue: decision degrades to repeat-last, no job.
+        let (a, job) = e.query_async(&policy, 1.0, true).unwrap();
+        assert_eq!(a.decision, Action::RepeatLast);
+        assert!(job.is_none());
+        // Pressure clears: the preserved staleness signal schedules now.
+        let (a, job) = e.query_async(&policy, 0.0, true).unwrap();
+        assert!(a.scheduled && job.is_some());
+    }
+
+    #[test]
+    fn ingest_gauges_track_coalescing_over_the_reader() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+        let reader = e.reader();
+        // 3 raw ops on one pair collapse to 1 effective op.
+        e.ingest(EdgeOp::add(2, 7));
+        e.ingest(EdgeOp::remove(2, 7));
+        e.ingest(EdgeOp::add(2, 7));
+        let j = reader.stats_json();
+        let ingest = j.get("ingest").unwrap();
+        assert_eq!(ingest.get("pending_effective_estimate").unwrap().as_u64(), Some(1));
+        let _ = e.query().unwrap();
+        let j = reader.stats_json();
+        let ingest = j.get("ingest").unwrap();
+        assert_eq!(ingest.get("coalesced_raw_ops").unwrap().as_u64(), Some(3));
+        assert_eq!(ingest.get("coalesced_effective_ops").unwrap().as_u64(), Some(1));
+        assert_eq!(ingest.get("pending_effective_estimate").unwrap().as_u64(), Some(0));
     }
 }

@@ -8,8 +8,10 @@
 //! efficiency”) as [`SlaTier`].
 
 use crate::coordinator::udf::{Action, ExecStats, QueryContext, UdfSuite};
+use crate::error::{Error, Result};
 use crate::stream::buffer::UpdateStatistics;
 use crate::stream::event::EdgeOp;
+use crate::util::json::Json;
 
 /// Always recompute exactly (the ground-truth baseline of §5).
 #[derive(Clone, Copy, Debug, Default)]
@@ -218,6 +220,118 @@ impl StalenessPolicy {
         }
         Action::RepeatLast
     }
+
+    /// [`Self::decide`], tempered by queue pressure (`queue_len /
+    /// queue_capacity` of the engine command queue). Under pressure the
+    /// server sheds work by *downgrading* the accuracy ladder rather than
+    /// queueing unboundedly: at ≥ 50 % occupancy Exact degrades to
+    /// Approximate; at ≥ 100 % everything degrades to RepeatLast (the
+    /// published snapshot is served as-is). Staler answers under load is
+    /// exactly the accuracy-for-latency trade the paper argues for.
+    pub fn decide_under_pressure(
+        &self,
+        updates: u64,
+        age_queries: u64,
+        age_secs: f64,
+        pressure: f64,
+    ) -> Action {
+        let base = self.decide(updates, age_queries, age_secs);
+        if pressure >= 1.0 {
+            Action::RepeatLast
+        } else if pressure >= 0.5 && base == Action::ComputeExact {
+            Action::ComputeApproximate
+        } else {
+            base
+        }
+    }
+
+    /// Parse the CLI spec `repeatlast:AGE:UPD[,approx:AGE:UPD]`.
+    ///
+    /// Each segment bounds how long its accuracy tier may be served:
+    /// `repeatlast:AGE:UPD` repeats the published snapshot until it is
+    /// `AGE` seconds old or `UPD` effective updates have accumulated
+    /// (these become the approximate thresholds); `approx:AGE:UPD` serves
+    /// approximations until the same signals cross the exact thresholds.
+    /// Omitting the `approx` segment disables exact escalation. The
+    /// query-age thresholds are disabled by specs (wall age and update
+    /// volume are the wire-level signals).
+    pub fn parse_spec(spec: &str) -> Result<Self> {
+        let mut approx: Option<(f64, u64)> = None;
+        let mut exact: Option<(f64, u64)> = None;
+        for seg in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let parts: Vec<&str> = seg.trim().split(':').collect();
+            if parts.len() != 3 {
+                return Err(Error::Usage(format!(
+                    "bad policy segment {seg:?}; expected name:AGE_SECS:UPDATES"
+                )));
+            }
+            let age: f64 = parts[1]
+                .parse()
+                .map_err(|_| Error::Usage(format!("bad policy age {:?} in {seg:?}", parts[1])))?;
+            let upd: u64 = parts[2].parse().map_err(|_| {
+                Error::Usage(format!("bad policy update count {:?} in {seg:?}", parts[2]))
+            })?;
+            if !age.is_finite() || age < 0.0 {
+                return Err(Error::Usage(format!("policy age must be finite and ≥ 0 in {seg:?}")));
+            }
+            let slot = match parts[0].to_ascii_lowercase().as_str() {
+                "repeatlast" | "repeat-last" => &mut approx,
+                "approx" | "approximate" => &mut exact,
+                other => {
+                    return Err(Error::Usage(format!(
+                        "unknown policy tier {other:?}; expected repeatlast or approx"
+                    )))
+                }
+            };
+            if slot.replace((age, upd)).is_some() {
+                return Err(Error::Usage(format!("duplicate policy tier in {spec:?}")));
+            }
+        }
+        let (approx_secs, approx_upd) =
+            approx.ok_or_else(|| Error::Usage("policy spec needs a repeatlast segment".into()))?;
+        let (exact_secs, exact_upd) = exact.unwrap_or((f64::INFINITY, u64::MAX));
+        if approx_secs > exact_secs || approx_upd > exact_upd {
+            return Err(Error::Usage(
+                "repeatlast thresholds must not exceed approx thresholds".into(),
+            ));
+        }
+        Ok(Self {
+            approx_after_updates: approx_upd,
+            exact_after_updates: exact_upd,
+            approx_after_queries: u64::MAX,
+            exact_after_queries: u64::MAX,
+            approx_after_secs: approx_secs,
+            exact_after_secs: exact_secs,
+        })
+    }
+
+    /// Thresholds as JSON (surfaced by the wire `stats` op).
+    pub fn to_json(&self) -> Json {
+        let num_u64 = |v: u64| {
+            if v == u64::MAX {
+                Json::Null
+            } else {
+                Json::Num(v as f64)
+            }
+        };
+        let num_f64 = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("approx_after_updates", num_u64(self.approx_after_updates)),
+            ("exact_after_updates", num_u64(self.exact_after_updates)),
+            ("approx_after_queries", num_u64(self.approx_after_queries)),
+            ("exact_after_queries", num_u64(self.exact_after_queries)),
+            ("approx_after_secs", num_f64(self.approx_after_secs)),
+            ("exact_after_secs", num_f64(self.exact_after_secs)),
+        ])
+    }
+}
+
+impl std::str::FromStr for StalenessPolicy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse_spec(s)
+    }
 }
 
 impl UdfSuite for StalenessPolicy {
@@ -364,6 +478,58 @@ mod tests {
         c.updates_since_refresh = 1;
         c.snapshot_age_queries = 20;
         assert_eq!(p.on_query(&c), Action::ComputeExact);
+    }
+
+    #[test]
+    fn staleness_policy_parses_the_cli_spec() {
+        let p = StalenessPolicy::parse_spec("repeatlast:2:10,approx:30:5000").unwrap();
+        assert_eq!(p.approx_after_updates, 10);
+        assert_eq!(p.exact_after_updates, 5000);
+        assert_eq!(p.approx_after_secs, 2.0);
+        assert_eq!(p.exact_after_secs, 30.0);
+        // query-age thresholds are disabled by specs
+        assert_eq!(p.approx_after_queries, u64::MAX);
+        assert_eq!(p.decide(11, 0, 0.0), Action::ComputeApproximate);
+        assert_eq!(p.decide(11, 0, 31.0), Action::ComputeExact);
+
+        // approx segment is optional: exact escalation disabled
+        let p = "repeatlast:1:1".parse::<StalenessPolicy>().unwrap();
+        assert_eq!(p.decide(1_000_000, 0, 1e9), Action::ComputeApproximate);
+
+        for bad in [
+            "",
+            "approx:1:1",               // repeatlast segment required
+            "repeatlast:1",             // wrong arity
+            "repeatlast:x:1",           // bad age
+            "repeatlast:1:x",           // bad count
+            "fast:1:1",                 // unknown tier
+            "repeatlast:9:9,approx:1:1", // non-monotone
+            "repeatlast:1:1,repeatlast:2:2", // duplicate
+        ] {
+            assert!(StalenessPolicy::parse_spec(bad).is_err(), "spec {bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn staleness_policy_degrades_under_pressure() {
+        let p = StalenessPolicy::new(1, 100, 4, 16, 1.0, 30.0);
+        // Idle queue: the base decision stands.
+        assert_eq!(p.decide_under_pressure(100, 0, 0.0, 0.0), Action::ComputeExact);
+        // Half-full: exact degrades one rung to approximate.
+        assert_eq!(p.decide_under_pressure(100, 0, 0.0, 0.5), Action::ComputeApproximate);
+        assert_eq!(p.decide_under_pressure(1, 0, 0.0, 0.5), Action::ComputeApproximate);
+        // Saturated: everything degrades to repeating the snapshot.
+        assert_eq!(p.decide_under_pressure(100, 0, 0.0, 1.0), Action::RepeatLast);
+    }
+
+    #[test]
+    fn staleness_policy_json_reports_thresholds() {
+        let p = StalenessPolicy::parse_spec("repeatlast:2:10").unwrap();
+        let j = p.to_json();
+        assert_eq!(j.get("approx_after_updates").unwrap().as_u64(), Some(10));
+        // disabled thresholds render as null, not a magic number
+        assert!(matches!(j.get("exact_after_updates"), Some(Json::Null)));
+        assert!(matches!(j.get("exact_after_secs"), Some(Json::Null)));
     }
 
     #[test]

@@ -1,73 +1,218 @@
-//! Threaded query server: the “GraphBolt module” of Fig. 2, read/write
-//! split.
+//! Async readiness-loop server: three planes behind a versioned wire
+//! protocol.
 //!
-//! The *write path*: producers (stream sources, clients) talk to a
-//! single engine thread through a bounded command queue (backpressure
-//! per [`crate::stream::backpressure`]); mutations and
-//! recompute-triggering queries serialize there. Writes travel batched:
-//! [`ServerHandle::ingest_batch`] (and the line protocol's `batch` op)
-//! registers a whole pre-validated op vector in one queue slot, so a
-//! client pays one round-trip per batch instead of one per edge, and the
-//! batch is all-or-nothing with respect to other producers. The *read
-//! path*: every [`ServerHandle`] carries a
-//! [`SnapshotReader`](crate::coordinator::serving::SnapshotReader) onto
-//! the engine's published [`RankSnapshot`]s, so `top` / `rank` / `stats`
-//! requests are answered without entering the command queue — a slow
-//! recompute in progress never blocks a read. Because those reads see no
-//! queue backpressure, [`ServeOptions::rate_limit`] can cap them per
-//! connection ([`RateLimiter`], token bucket).
+//! The server splits Fig. 2's "GraphBolt module" into three planes that
+//! overlap freely:
 //!
-//! A JSON line protocol over TCP is layered on top for out-of-process
-//! clients (`veilgraph serve`); [`serve_listener`] runs an acceptor plus
-//! one thread per connection (capped), so any number of clients are
-//! served simultaneously.
+//! * **Ingest plane** — producers talk to a single engine thread through
+//!   a bounded command queue ([`crate::stream::backpressure`]); mutations
+//!   coalesce in the update buffer and apply in batches. The wire path
+//!   uses `try_push` only: a full queue never stalls a poll worker, it
+//!   surfaces as a structured `overload` error (or sheds under
+//!   `DropOldest`).
+//! * **Recompute plane** — the engine thread never runs PageRank. When
+//!   the staleness policy escalates, [`Engine::query_async`] hands back a
+//!   version-fenced [`RecomputeJob`]; a dedicated worker runs it and
+//!   returns the result through the command queue, where
+//!   [`Engine::finish_recompute`] installs (fence hit) or merges (fence
+//!   miss) it and publishes. At most one job is in flight; decisions
+//!   degrade down the accuracy ladder under queue pressure
+//!   ([`StalenessPolicy::decide_under_pressure`]).
+//! * **Read plane** — every [`ServerHandle`] carries a
+//!   [`SnapshotReader`] onto the published
+//!   [`RankSnapshot`](crate::coordinator::serving::RankSnapshot)s;
+//!   `top`/`rank`/`stats` never enter the queue, so a recompute or batch
+//!   apply in progress never blocks a read.
+//!
+//! The TCP front end ([`serve`]) is a nonblocking readiness loop: the
+//! calling thread accepts, a small fixed set of poll workers each own a
+//! slice of the connections and tick them through per-connection read/
+//! write buffers. Thousands of mostly-idle clients cost no threads —
+//! only a vector slot and two buffers each.
+//!
+//! All requests and responses speak wire protocol v1
+//! ([`WIRE_PROTOCOL_VERSION`]): responses carry `"v":1` and errors are
+//! structured objects `{"error":{"code":"...","msg":"..."}}` with stable
+//! codes (`rate_limited`, `conn_cap`, `bad_op`, `overload`, `shutdown`).
+//! Requests without a `"v"` field parse as v1.
 
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::engine::{Engine, QueryResult};
+use crate::coordinator::engine::{
+    AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeResult,
+};
+use crate::coordinator::policies::StalenessPolicy;
 use crate::coordinator::serving::{ReadKind, SnapshotReader};
+use crate::coordinator::udf::Action;
 use crate::error::{Error, Result};
 use crate::stream::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::stream::event::EdgeOp;
 use crate::util::json::Json;
 
-/// Commands accepted by the engine thread (the write path).
+/// The wire protocol version this server speaks. Responses carry it as
+/// `"v"`; requests may omit it (legacy clients parse as v1) but a present
+/// version must match.
+pub const WIRE_PROTOCOL_VERSION: u64 = 1;
+
+/// Commands accepted by the engine thread (the ingest plane).
 enum Command {
     Op(EdgeOp),
     /// A pre-validated batch: registered contiguously (one queue slot,
     /// one engine call), so it is all-or-nothing with respect to other
     /// producers.
     Batch(Vec<EdgeOp>),
+    /// Legacy synchronous query: applies updates and recomputes inline on
+    /// the engine thread. Library callers that want one authoritative
+    /// answer ([`ServerHandle::query`]) still use it; the wire path does
+    /// not.
     Query(Sender<Result<QueryResult>>),
+    /// Wire query: answered immediately from the published snapshot, with
+    /// any recompute handed to the off-thread worker.
+    WireQuery(Sender<Result<AsyncQueryResult>>),
+    /// A finished off-thread recompute coming home to be installed.
+    RecomputeDone(Box<RecomputeResult>),
     Stats(Sender<Json>),
     Shutdown,
 }
 
-/// Handle to a running engine thread plus the lock-free read path.
+/// Live counters for the wire front end, shared between the acceptor,
+/// the poll workers and the `stats` op.
+#[derive(Default)]
+pub struct WireStats {
+    /// Currently-open client connections.
+    pub connections: AtomicUsize,
+    /// Poll workers serving them (0 until [`serve`] starts).
+    pub workers: AtomicUsize,
+    /// Requests answered with the `overload` code.
+    pub overloads: AtomicU64,
+    /// Whether a recompute job is currently running off-thread.
+    pub recompute_in_flight: AtomicBool,
+    /// Last staleness decision taken by a wire query
+    /// (0 = none yet, 1 = repeat-last, 2 = approximate, 3 = exact).
+    last_decision: AtomicU8,
+}
+
+impl WireStats {
+    fn set_last_decision(&self, a: Action) {
+        let code = match a {
+            Action::RepeatLast => 1,
+            Action::ComputeApproximate => 2,
+            Action::ComputeExact => 3,
+        };
+        self.last_decision.store(code, Ordering::Relaxed);
+    }
+
+    /// The most recent wire-query staleness decision, if any query ran.
+    pub fn last_decision(&self) -> Option<Action> {
+        match self.last_decision.load(Ordering::Relaxed) {
+            1 => Some(Action::RepeatLast),
+            2 => Some(Action::ComputeApproximate),
+            3 => Some(Action::ComputeExact),
+            _ => None,
+        }
+    }
+}
+
+/// Test hook: a gate the recompute worker passes through *before* running
+/// each job. [`ServerHandle::hold_recompute`] parks the worker so tests
+/// can prove readers and writers stay live while a recompute is pinned
+/// mid-flight; [`ServerHandle::release_recompute`] lets it continue.
+struct RecomputeGate {
+    held: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl RecomputeGate {
+    fn new() -> Self {
+        Self { held: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn hold(&self) {
+        *self.held.lock().unwrap() = true;
+    }
+
+    fn release(&self) {
+        *self.held.lock().unwrap() = false;
+        self.cv.notify_all();
+    }
+
+    /// Wait until released; false means the server shut down while held.
+    fn wait_released(&self, queue: &BoundedQueue<Command>) -> bool {
+        let mut held = self.held.lock().unwrap();
+        while *held {
+            if queue.is_closed() {
+                return false;
+            }
+            let (g, _) = self.cv.wait_timeout(held, Duration::from_millis(20)).unwrap();
+            held = g;
+        }
+        true
+    }
+}
+
+/// Handle to a running engine thread + recompute worker, plus the
+/// lock-free read plane.
 pub struct ServerHandle {
     queue: Arc<BoundedQueue<Command>>,
     worker: Option<JoinHandle<()>>,
+    recompute: Option<JoinHandle<()>>,
     running: Arc<AtomicBool>,
     reader: SnapshotReader,
+    policy: StalenessPolicy,
+    wire: Arc<WireStats>,
+    gate: Arc<RecomputeGate>,
 }
 
 impl ServerHandle {
-    /// Spawn the engine thread with a command queue of `queue_capacity`.
-    pub fn spawn(mut engine: Engine, queue_capacity: usize, policy: OverflowPolicy) -> Self {
+    /// Spawn the engine thread and the recompute worker with the queue,
+    /// overflow and staleness knobs from `opts`.
+    pub fn spawn_with(mut engine: Engine, opts: &ServeOptions) -> Self {
         let reader = engine.reader();
-        let queue = Arc::new(BoundedQueue::new(queue_capacity, policy));
+        let queue = Arc::new(BoundedQueue::new(opts.queue_capacity, opts.overflow));
         let running = Arc::new(AtomicBool::new(true));
+        let wire = Arc::new(WireStats::default());
+        let gate = Arc::new(RecomputeGate::new());
+        let policy = opts.policy;
+
+        let (job_tx, job_rx) = channel::<RecomputeJob>();
+        let q_jobs = Arc::clone(&queue);
+        let gate2 = Arc::clone(&gate);
+        let recompute = std::thread::Builder::new()
+            .name("veilgraph-recompute".into())
+            .spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    if !gate2.wait_released(&q_jobs) {
+                        break;
+                    }
+                    let res = job.run();
+                    // Results ride the command queue ahead of capacity
+                    // (control plane, at most one outstanding): a full
+                    // queue must not be able to strand a finished
+                    // recompute.
+                    if q_jobs.force_push(Command::RecomputeDone(Box::new(res))).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn recompute thread");
+
         let q2 = Arc::clone(&queue);
         let r2 = Arc::clone(&running);
+        let w2 = Arc::clone(&wire);
         let worker = std::thread::Builder::new()
             .name("veilgraph-engine".into())
             .spawn(move || {
+                let cap = q2.capacity().max(1);
+                // At most one recompute job outstanding: while it runs,
+                // queries are still decided and answered (degraded) but
+                // no second job is created.
+                let mut in_flight = false;
                 while let Some(cmd) = q2.pop() {
                     match cmd {
                         Command::Op(op) => engine.ingest(op),
@@ -75,21 +220,68 @@ impl ServerHandle {
                         Command::Query(reply) => {
                             let _ = reply.send(engine.query());
                         }
+                        Command::WireQuery(reply) => {
+                            let pressure = q2.len() as f64 / cap as f64;
+                            match engine.query_async(&policy, pressure, !in_flight) {
+                                Ok((mut aq, job)) => {
+                                    if let Some(job) = job {
+                                        if job_tx.send(job).is_ok() {
+                                            in_flight = true;
+                                            w2.recompute_in_flight.store(true, Ordering::SeqCst);
+                                        } else {
+                                            aq.scheduled = false;
+                                        }
+                                    }
+                                    w2.set_last_decision(aq.decision);
+                                    let _ = reply.send(Ok(aq));
+                                }
+                                Err(e) => {
+                                    let _ = reply.send(Err(e));
+                                }
+                            }
+                        }
+                        Command::RecomputeDone(res) => {
+                            in_flight = false;
+                            w2.recompute_in_flight.store(false, Ordering::SeqCst);
+                            engine.finish_recompute(*res);
+                        }
                         Command::Stats(reply) => {
                             let _ = reply.send(engine.metrics().to_json());
                         }
                         Command::Shutdown => break,
                     }
                 }
+                // Dropping the job sender unblocks the recompute worker's
+                // recv so it can exit.
+                drop(job_tx);
                 engine.stop();
                 r2.store(false, Ordering::SeqCst);
             })
             .expect("spawn engine thread");
-        Self { queue, worker: Some(worker), running, reader }
+
+        Self {
+            queue,
+            worker: Some(worker),
+            recompute: Some(recompute),
+            running,
+            reader,
+            policy,
+            wire,
+            gate,
+        }
     }
 
-    /// Enqueue a graph operation (non-blocking result; backpressure policy
-    /// applies).
+    /// Spawn with a command queue of `queue_capacity` and default
+    /// staleness policy (compatibility wrapper over [`Self::spawn_with`]).
+    pub fn spawn(engine: Engine, queue_capacity: usize, policy: OverflowPolicy) -> Self {
+        Self::spawn_with(
+            engine,
+            &ServeOptions::new().queue_capacity(queue_capacity).overflow(policy),
+        )
+    }
+
+    /// Enqueue a graph operation (blocking backpressure per the overflow
+    /// policy — library producers that *want* to wait).
     pub fn ingest(&self, op: EdgeOp) -> Result<()> {
         self.queue.push(Command::Op(op))
     }
@@ -101,26 +293,98 @@ impl ServerHandle {
         self.queue.push(Command::Batch(ops))
     }
 
-    /// Serve a query synchronously (write path: applies pending updates
-    /// and may recompute).
+    /// Non-blocking ingest for the wire path: a full queue surfaces as
+    /// [`Error::Backpressure`] (the `overload` wire code) instead of
+    /// stalling the poll worker.
+    pub fn try_ingest(&self, op: EdgeOp) -> Result<()> {
+        self.queue.try_push(Command::Op(op))
+    }
+
+    /// Non-blocking batch ingest (see [`Self::try_ingest`]).
+    pub fn try_ingest_batch(&self, ops: Vec<EdgeOp>) -> Result<()> {
+        self.queue.try_push(Command::Batch(ops))
+    }
+
+    /// Serve a query synchronously (applies pending updates and may
+    /// recompute inline on the engine thread).
     pub fn query(&self) -> Result<QueryResult> {
         let (tx, rx) = channel();
         self.queue.push(Command::Query(tx))?;
         rx.recv().map_err(|_| Error::Engine("engine thread gone".into()))?
     }
 
-    /// Live engine metrics snapshot (write path: round-trips through the
-    /// command queue; see [`Self::reader`] for the off-queue variant).
+    /// Enqueue a wire query without blocking: the engine answers from the
+    /// published snapshot and schedules any recompute off-thread. Returns
+    /// the receiver the response will arrive on; a full queue surfaces as
+    /// [`Error::Backpressure`] so the caller can degrade.
+    pub fn query_wire(&self) -> Result<Receiver<Result<AsyncQueryResult>>> {
+        let (tx, rx) = channel();
+        self.queue.try_push(Command::WireQuery(tx))?;
+        Ok(rx)
+    }
+
+    /// Live engine metrics snapshot (round-trips through the command
+    /// queue; see [`Self::reader`] for the off-queue variant).
     pub fn stats(&self) -> Result<Json> {
         let (tx, rx) = channel();
         self.queue.push(Command::Stats(tx))?;
         rx.recv().map_err(|_| Error::Engine("engine thread gone".into()))
     }
 
-    /// The read path: a cloneable handle answering `top`/`rank`/`stats`
+    /// The read plane: a cloneable handle answering `top`/`rank`/`stats`
     /// from the latest published snapshot without entering the queue.
     pub fn reader(&self) -> SnapshotReader {
         self.reader.clone()
+    }
+
+    /// The staleness policy wire queries are decided under.
+    pub fn policy(&self) -> &StalenessPolicy {
+        &self.policy
+    }
+
+    /// Live wire front-end counters.
+    pub fn wire_stats(&self) -> &WireStats {
+        &self.wire
+    }
+
+    /// Test hook: park the recompute worker before its next job (readers
+    /// and writers must stay live while a recompute is pinned).
+    pub fn hold_recompute(&self) {
+        self.gate.hold();
+    }
+
+    /// Release a held recompute worker.
+    pub fn release_recompute(&self) {
+        self.gate.release();
+    }
+
+    /// The `server` section of the wire `stats` op: front-end gauges,
+    /// queue occupancy/shedding, and the active staleness policy with the
+    /// last escalation decision.
+    pub fn server_stats_json(&self) -> Json {
+        let qs = self.queue.stats();
+        let last = match self.wire.last_decision() {
+            Some(a) => Json::Str(a.to_string()),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("protocol_version", Json::Num(WIRE_PROTOCOL_VERSION as f64)),
+            ("connections", Json::Num(self.wire.connections.load(Ordering::SeqCst) as f64)),
+            ("workers", Json::Num(self.wire.workers.load(Ordering::SeqCst) as f64)),
+            ("queue_len", Json::Num(self.queue.len() as f64)),
+            ("queue_capacity", Json::Num(self.queue.capacity() as f64)),
+            ("queue_pushed", Json::Num(qs.pushed as f64)),
+            ("queue_popped", Json::Num(qs.popped as f64)),
+            ("queue_dropped", Json::Num(qs.dropped as f64)),
+            ("queue_rejected", Json::Num(qs.rejected as f64)),
+            ("overloads", Json::Num(self.wire.overloads.load(Ordering::SeqCst) as f64)),
+            (
+                "recompute_in_flight",
+                Json::Bool(self.wire.recompute_in_flight.load(Ordering::SeqCst)),
+            ),
+            ("policy", self.policy.to_json()),
+            ("last_decision", last),
+        ])
     }
 
     /// True while the engine thread is alive.
@@ -128,18 +392,26 @@ impl ServerHandle {
         self.running.load(Ordering::SeqCst)
     }
 
-    /// Ask the engine thread to stop without joining it (used by the
-    /// concurrent TCP front end, which holds the handle in an `Arc`; the
-    /// final drop joins).
+    /// Ask the engine thread to stop without joining it (used by the TCP
+    /// front end, which holds the handle in an `Arc`; the final drop
+    /// joins).
     pub fn request_shutdown(&self) {
-        let _ = self.queue.push(Command::Shutdown);
+        let _ = self.queue.force_push(Command::Shutdown);
         self.queue.close();
+        self.gate.release();
     }
 
-    /// Stop the engine and join the thread.
+    /// Stop the engine and join both threads.
     pub fn shutdown(mut self) {
         self.request_shutdown();
+        self.join();
+    }
+
+    fn join(&mut self) {
         if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.recompute.take() {
             let _ = h.join();
         }
     }
@@ -148,9 +420,7 @@ impl ServerHandle {
 impl Drop for ServerHandle {
     fn drop(&mut self) {
         self.request_shutdown();
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
+        self.join();
     }
 }
 
@@ -161,12 +431,12 @@ impl Drop for ServerHandle {
 /// bounded. Clients with more ops send more batch lines.
 pub const MAX_WIRE_BATCH_OPS: usize = 4096;
 
-/// Upper bound on one request line's bytes, enforced WHILE reading (a
-/// `Read::take` per read call), so an oversized line is rejected after
-/// buffering at most this much — not parsed, not fully read. Without
-/// it the batch-op cap is hollow: a multi-gigabyte `batch` line would
-/// be buffered and JSON-parsed before the op-count check ran. Sized so
-/// a full `MAX_WIRE_BATCH_OPS` batch of maximal ops fits comfortably.
+/// Upper bound on one request line's bytes, enforced WHILE buffering, so
+/// an oversized line is rejected after accumulating at most this much —
+/// not parsed, not fully read. Without it the batch-op cap is hollow: a
+/// multi-gigabyte `batch` line would be buffered and JSON-parsed before
+/// the op-count check ran. Sized so a full `MAX_WIRE_BATCH_OPS` batch of
+/// maximal ops fits comfortably.
 pub const MAX_WIRE_LINE_BYTES: usize = 1 << 20;
 
 /// Per-connection token-bucket limiter over the read-path ops
@@ -203,6 +473,73 @@ impl RateLimiter {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wire protocol v1
+// ---------------------------------------------------------------------------
+
+/// A v1 success response: `{"v":1,"ok":true,…fields}`.
+fn ok_response(fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![
+        ("v", Json::Num(WIRE_PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(true)),
+    ];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+/// A v1 error response:
+/// `{"v":1,"ok":false,"error":{"code":"…","msg":"…"}}`. The codes are
+/// stable protocol surface: `rate_limited`, `conn_cap`, `bad_op`,
+/// `overload`, `shutdown`.
+pub fn err_response(code: &str, msg: &str) -> Json {
+    err_response_with(code, msg, Vec::new())
+}
+
+/// [`err_response`] carrying extra top-level fields (e.g. the degraded
+/// snapshot answer alongside an `overload` error).
+fn err_response_with(code: &str, msg: &str, extra: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![
+        ("v", Json::Num(WIRE_PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(code.into())),
+                ("msg", Json::Str(msg.into())),
+            ]),
+        ),
+    ];
+    all.extend(extra);
+    Json::obj(all)
+}
+
+/// Map an internal error onto its stable wire code.
+fn error_code(e: &Error) -> &'static str {
+    match e {
+        Error::Backpressure(_) => "overload",
+        Error::Engine(msg)
+            if msg.contains("closed") || msg.contains("stopped") || msg.contains("gone") =>
+        {
+            "shutdown"
+        }
+        _ => "bad_op",
+    }
+}
+
+fn error_json(e: &Error) -> Json {
+    err_response(error_code(e), &e.to_string())
+}
+
+/// Render a top-k ranking as the wire's `[[id,score],…]` array.
+fn top_pairs(pairs: Vec<(u64, f64)>) -> Json {
+    Json::Arr(
+        pairs
+            .into_iter()
+            .map(|(id, score)| Json::Arr(vec![Json::Num(id as f64), Json::Num(score)]))
+            .collect(),
+    )
+}
+
 /// The off-queue read ops — the one classification both the rate-limit
 /// guard and the dispatch below consult, so a new read op cannot be
 /// added to one and silently bypass the other.
@@ -234,68 +571,129 @@ fn parse_write_op(op: &str, req: &Json) -> std::result::Result<EdgeOp, String> {
     }
 }
 
-/// JSON line protocol: one request object per line, one response per line.
+/// Outcome of dispatching one request line: either a finished response
+/// (plus whether it asked the server to shut down), or a wire query in
+/// flight whose response will arrive on the receiver.
+enum Reply {
+    Done(Json, bool),
+    Pending(Receiver<Result<AsyncQueryResult>>, usize),
+}
+
+/// Render a completed wire query. The answer always serves the published
+/// snapshot; `action` reports the staleness decision and `scheduled`
+/// whether a recompute was handed off-thread.
+fn wire_query_response(res: Result<AsyncQueryResult>, k: usize) -> Json {
+    match res {
+        Ok(aq) => {
+            let snap = &aq.snapshot;
+            ok_response(vec![
+                ("query_id", Json::Num(aq.query_id as f64)),
+                ("version", Json::Num(snap.version as f64)),
+                ("action", Json::Str(aq.decision.to_string())),
+                ("scheduled", Json::Bool(aq.scheduled)),
+                ("age_secs", Json::Num(snap.age_secs())),
+                ("top", top_pairs(snap.top(k))),
+            ])
+        }
+        Err(e) => error_json(&e),
+    }
+}
+
+/// JSON line protocol (v1): one request object per line, one response per
+/// line. Responses carry `"v":1`; errors are
+/// `{"error":{"code":…,"msg":…}}`.
 ///
-/// Write-path requests (serialized through the engine queue):
-/// * `{"op":"add","src":1,"dst":2}`      → `{"ok":true}`
-/// * `{"op":"remove","src":1,"dst":2}`   → `{"ok":true}`
-/// * `{"op":"add_vertex","id":7}`        → `{"ok":true}`
-/// * `{"op":"remove_vertex","id":7}`     → `{"ok":true}`
-/// * `{"op":"batch","ops":[{"op":"add","src":1,"dst":2},…]}`
-///   → `{"ok":true,"registered":N}` — applied atomically: every element
-///   is validated first and one malformed (or cap-exceeding, see
-///   [`MAX_WIRE_BATCH_OPS`]) element rejects the whole batch with
-///   nothing registered; the batch occupies one engine-queue slot, so
-///   clients pay one round-trip for N edges instead of N.
-/// * `{"op":"query","top":10}`           → `{"ok":true,"action":…,"top":[[id,score],…]}`
-/// * `{"op":"shutdown"}`                 → `{"ok":true}` and closes.
+/// Write-path requests (non-blocking; a full queue answers `overload`):
+/// * `{"op":"add","src":1,"dst":2}`      → `{"v":1,"ok":true}`
+/// * `{"op":"remove","src":1,"dst":2}`   → `{"v":1,"ok":true}`
+/// * `{"op":"add_vertex","id":7}`        → `{"v":1,"ok":true}`
+/// * `{"op":"remove_vertex","id":7}`     → `{"v":1,"ok":true}`
+/// * `{"op":"batch","ops":[…]}`          → `{"v":1,"ok":true,"registered":N}`
+///   — applied atomically: every element is validated first and one
+///   malformed (or cap-exceeding, see [`MAX_WIRE_BATCH_OPS`]) element
+///   rejects the whole batch with nothing registered.
+/// * `{"op":"query","top":10}` → `{"v":1,"ok":true,"action":…,
+///   "scheduled":…,"top":[[id,score],…]}` — served from the published
+///   snapshot; any recompute the staleness policy demands runs
+///   off-thread and publishes later. Under queue pressure the response
+///   is an `overload` error that still carries the (stale but valid)
+///   snapshot answer.
+/// * `{"op":"shutdown"}`                 → `{"v":1,"ok":true}` and closes.
 ///
 /// Read-path requests (served off the published snapshot, never queued;
 /// subject to the per-connection `--rate-limit`):
-/// * `{"op":"top","k":10}`     → `{"ok":true,"version":…,"top":[[id,score],…]}`
-/// * `{"op":"rank","id":7}`    → `{"ok":true,"version":…,"rank":…}`
-/// * `{"op":"stats"}`          → `{"ok":true,"stats":{"serving":…,"engine":…}}`
+/// * `{"op":"top","k":10}`  → `{"v":1,"ok":true,"version":…,"top":…}`
+/// * `{"op":"rank","id":7}` → `{"v":1,"ok":true,"version":…,"rank":…}`
+/// * `{"op":"stats"}`       → `{"v":1,"ok":true,"stats":{"serving":…,
+///   "ingest":…,"engine":…,"server":…}}`
 pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
     handle_request_limited(handle, line, None)
 }
 
 /// [`handle_request`] with an optional per-connection read limiter (what
-/// [`serve_listener`] uses; `None` = unlimited).
+/// the poll workers use; `None` = unlimited). Blocks on an in-flight
+/// wire query — the readiness loop itself uses [`dispatch`] and polls.
 pub fn handle_request_limited(
     handle: &ServerHandle,
     line: &str,
     mut limiter: Option<&mut RateLimiter>,
 ) -> (Json, bool) {
-    let fail = |msg: String| {
-        (Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))]), false)
-    };
-    let req = match Json::parse(line) {
-        Ok(v) => v,
-        Err(e) => return fail(e.to_string()),
-    };
-    let op = req.get("op").and_then(Json::as_str).unwrap_or("");
-    if is_read_op(op) {
-        if let Some(l) = limiter.as_deref_mut() {
-            if !l.admit() {
-                return fail("read rate limit exceeded".into());
-            }
+    let mut off = RateLimiter::new(0.0);
+    let l = limiter.as_deref_mut().unwrap_or(&mut off);
+    match dispatch(handle, line, l) {
+        Reply::Done(resp, stop) => (resp, stop),
+        Reply::Pending(rx, k) => {
+            let res =
+                rx.recv().unwrap_or_else(|_| Err(Error::Engine("engine thread gone".into())));
+            (wire_query_response(res, k), false)
         }
     }
+}
+
+/// Dispatch one request line without ever blocking: writes go through
+/// `try_push`, queries return [`Reply::Pending`], reads hit the snapshot.
+fn dispatch(handle: &ServerHandle, line: &str, limiter: &mut RateLimiter) -> Reply {
+    let bad = |msg: String| Reply::Done(err_response("bad_op", &msg), false);
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return bad(e.to_string()),
+    };
+    // Version negotiation: absent = v1 (legacy clients), present must
+    // match.
+    if let Some(v) = req.get("v") {
+        if v.as_u64() != Some(WIRE_PROTOCOL_VERSION) {
+            return bad(format!(
+                "unsupported protocol version {}; this server speaks v{WIRE_PROTOCOL_VERSION}",
+                v.to_string_compact()
+            ));
+        }
+    }
+    let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+    if is_read_op(op) && !limiter.admit() {
+        return Reply::Done(err_response("rate_limited", "read rate limit exceeded"), false);
+    }
+    // Count overloads where they surface, not at every error site.
+    let wire_err = |e: Error| {
+        if matches!(e, Error::Backpressure(_)) {
+            handle.wire.overloads.fetch_add(1, Ordering::SeqCst);
+        }
+        Reply::Done(error_json(&e), false)
+    };
     match op {
         "add" | "remove" | "add_vertex" | "remove_vertex" => match parse_write_op(op, &req) {
-            Ok(e) => match handle.ingest(e) {
-                Ok(()) => (Json::obj(vec![("ok", Json::Bool(true))]), false),
-                Err(e) => fail(e.to_string()),
+            Ok(e) => match handle.try_ingest(e) {
+                Ok(()) => Reply::Done(ok_response(Vec::new()), false),
+                Err(e) => wire_err(e),
             },
-            Err(msg) => fail(msg),
+            Err(msg) => bad(msg),
         },
         "batch" => {
             let items = match req.get("ops").and_then(Json::as_arr) {
                 Some(items) => items,
-                None => return fail("batch needs an ops array".into()),
+                None => return bad("batch needs an ops array".into()),
             };
             if items.len() > MAX_WIRE_BATCH_OPS {
-                return fail(format!(
+                return bad(format!(
                     "batch of {} ops exceeds the {MAX_WIRE_BATCH_OPS}-op cap; split it",
                     items.len()
                 ));
@@ -307,45 +705,44 @@ pub fn handle_request_limited(
                 let kind = item.get("op").and_then(Json::as_str).unwrap_or("");
                 match parse_write_op(kind, item) {
                     Ok(e) => ops.push(e),
-                    Err(msg) => return fail(format!("batch op {i}: {msg}; nothing registered")),
+                    Err(msg) => return bad(format!("batch op {i}: {msg}; nothing registered")),
                 }
             }
             let n = ops.len();
-            match handle.ingest_batch(ops) {
-                Ok(()) => (
-                    Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("registered", Json::Num(n as f64)),
-                    ]),
+            match handle.try_ingest_batch(ops) {
+                Ok(()) => Reply::Done(
+                    ok_response(vec![("registered", Json::Num(n as f64))]),
                     false,
                 ),
-                Err(e) => fail(e.to_string()),
+                Err(e) => wire_err(e),
             }
         }
         "query" => {
-            let top = req.get("top").and_then(Json::as_u64).unwrap_or(10) as usize;
-            match handle.query() {
-                Ok(res) => {
-                    let pairs = res
-                        .top(top)
-                        .into_iter()
-                        .map(|(id, score)| {
-                            Json::Arr(vec![Json::Num(id as f64), Json::Num(score)])
-                        })
-                        .collect();
-                    (
-                        Json::obj(vec![
-                            ("ok", Json::Bool(true)),
-                            ("query_id", Json::Num(res.query_id as f64)),
-                            ("action", Json::Str(res.action.to_string())),
-                            ("elapsed_secs", Json::Num(res.exec.elapsed_secs)),
-                            ("summary_vertices", Json::Num(res.exec.summary_vertices as f64)),
-                            ("top", Json::Arr(pairs)),
-                        ]),
+            let k = req.get("top").and_then(Json::as_u64).unwrap_or(10) as usize;
+            match handle.query_wire() {
+                Ok(rx) => Reply::Pending(rx, k),
+                Err(Error::Backpressure(_)) => {
+                    handle.wire.overloads.fetch_add(1, Ordering::SeqCst);
+                    // Degrade instead of queueing: answer from the
+                    // published snapshot, flagged as overload. The reply
+                    // is stale but internally consistent.
+                    let snap = handle.reader.latest_for(ReadKind::Top);
+                    Reply::Done(
+                        err_response_with(
+                            "overload",
+                            "engine queue at capacity; serving the published snapshot",
+                            vec![
+                                ("version", Json::Num(snap.version as f64)),
+                                ("query_id", Json::Num(snap.query_id as f64)),
+                                ("action", Json::Str(snap.action.to_string())),
+                                ("age_secs", Json::Num(snap.age_secs())),
+                                ("top", top_pairs(snap.top(k))),
+                            ],
+                        ),
                         false,
                     )
                 }
-                Err(e) => fail(e.to_string()),
+                Err(e) => wire_err(e),
             }
         }
         // Read-path fast path: answered from the published snapshot.
@@ -356,18 +753,12 @@ pub fn handle_request_limited(
                 .and_then(Json::as_u64)
                 .unwrap_or(10) as usize;
             let snap = handle.reader.latest_for(ReadKind::Top);
-            let pairs = snap
-                .top(k)
-                .into_iter()
-                .map(|(id, score)| Json::Arr(vec![Json::Num(id as f64), Json::Num(score)]))
-                .collect();
-            (
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
+            Reply::Done(
+                ok_response(vec![
                     ("version", Json::Num(snap.version as f64)),
                     ("query_id", Json::Num(snap.query_id as f64)),
                     ("action", Json::Str(snap.action.to_string())),
-                    ("top", Json::Arr(pairs)),
+                    ("top", top_pairs(snap.top(k))),
                 ]),
                 false,
             )
@@ -375,13 +766,12 @@ pub fn handle_request_limited(
         "rank" => {
             let id = match req.get("id").and_then(Json::as_u64) {
                 Some(id) => id,
-                None => return fail("rank needs a numeric id".into()),
+                None => return bad("rank needs a numeric id".into()),
             };
             let snap = handle.reader.latest_for(ReadKind::Rank);
             let rank = snap.rank_of(id).map(Json::Num).unwrap_or(Json::Null);
-            (
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
+            Reply::Done(
+                ok_response(vec![
                     ("version", Json::Num(snap.version as f64)),
                     ("id", Json::Num(id as f64)),
                     ("rank", rank),
@@ -390,30 +780,97 @@ pub fn handle_request_limited(
             )
         }
         "stats" => {
-            let stats = handle.reader.stats_json();
-            (Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)]), false)
+            let stats = match handle.reader.stats_json() {
+                Json::Obj(mut fields) => {
+                    fields.insert("server".into(), handle.server_stats_json());
+                    Json::Obj(fields)
+                }
+                other => other,
+            };
+            Reply::Done(ok_response(vec![("stats", stats)]), false)
         }
-        "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
-        other => fail(format!("unknown op {other:?}")),
+        "shutdown" => Reply::Done(ok_response(Vec::new()), true),
+        other => bad(format!("unknown op {other:?}")),
     }
 }
 
-/// Tuning knobs for the concurrent TCP front end.
+// ---------------------------------------------------------------------------
+// The readiness loop
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs for the server: queue/policy knobs consumed by
+/// [`ServerHandle::spawn_with`], front-end knobs by [`serve`]. Fluent
+/// builder; construct with [`ServeOptions::new`].
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
-    /// Simultaneous client connections; excess clients are rejected with
-    /// one error line and closed. Clamped to ≥ 1 so the server always
-    /// admits the client that could send `shutdown`.
-    pub max_connections: usize,
-    /// Per-connection read-path rate limit in ops/sec (`top`/`rank`/
-    /// `stats`; one-second burst allowance). Over-limit requests get an
-    /// error line, the connection stays open. 0 = unlimited.
-    pub rate_limit: f64,
+    max_connections: usize,
+    rate_limit: f64,
+    workers: usize,
+    queue_capacity: usize,
+    overflow: OverflowPolicy,
+    policy: StalenessPolicy,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_connections: 64, rate_limit: 0.0 }
+        Self {
+            max_connections: 4096,
+            rate_limit: 0.0,
+            workers: 4,
+            queue_capacity: 1 << 16,
+            overflow: OverflowPolicy::Block,
+            policy: StalenessPolicy::default(),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Defaults: 4096 connections, no rate limit, 4 poll workers, a
+    /// 65536-slot `Block` queue, default staleness policy.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Simultaneous client connections; excess clients are rejected with
+    /// one `conn_cap` error line and closed. Clamped to ≥ 1 so the
+    /// server always admits the client that could send `shutdown`.
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n.max(1);
+        self
+    }
+
+    /// Per-connection read-path rate limit in ops/sec (`top`/`rank`/
+    /// `stats`; one-second burst allowance). Over-limit requests get a
+    /// `rate_limited` error line, the connection stays open. 0 =
+    /// unlimited.
+    pub fn rate_limit(mut self, r: f64) -> Self {
+        self.rate_limit = r;
+        self
+    }
+
+    /// Poll workers ticking the connections (≥ 1). A small fixed set
+    /// serves any number of mostly-idle clients.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Engine command queue slots (≥ 1).
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.queue_capacity = n.max(1);
+        self
+    }
+
+    /// What a full engine queue does to blocking producers.
+    pub fn overflow(mut self, p: OverflowPolicy) -> Self {
+        self.overflow = p;
+        self
+    }
+
+    /// Staleness policy wire queries are decided under.
+    pub fn policy(mut self, p: StalenessPolicy) -> Self {
+        self.policy = p;
+        self
     }
 }
 
@@ -426,160 +883,330 @@ pub fn serve_tcp(handle: ServerHandle, addr: &str) -> Result<()> {
 /// [`serve_tcp`] with explicit options.
 pub fn serve_tcp_with(handle: ServerHandle, addr: &str, opts: ServeOptions) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    serve_listener(handle, listener, opts)
+    serve(handle, listener, opts)
 }
 
-/// Concurrent TCP front end over a pre-bound listener (bind to port 0 in
-/// tests and read `listener.local_addr()` first): an acceptor thread plus
-/// one thread per connection, capped at `opts.max_connections`. Read-only
-/// ops never enter the engine queue, so clients issuing `top`/`rank`/
-/// `stats` are served even while a recompute is in flight for another
-/// client. Returns once a client sends `shutdown` and all connection
-/// threads have drained.
-pub fn serve_listener(
-    handle: ServerHandle,
-    listener: TcpListener,
-    opts: ServeOptions,
-) -> Result<()> {
-    let local = listener.local_addr()?;
-    crate::log_info!("listening on {local}");
-    // Self-connect target for waking the acceptor: a wildcard bind
-    // (0.0.0.0 / ::) is not a connectable destination everywhere, so
-    // route the wake through loopback on the bound port.
-    let wake = if local.ip().is_unspecified() {
-        std::net::SocketAddr::new(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST), local.port())
-    } else {
-        local
-    };
-    let max_connections = opts.max_connections.max(1);
-    let handle = Arc::new(handle);
-    let stop = Arc::new(AtomicBool::new(false));
-    let active = Arc::new(AtomicUsize::new(0));
-    let mut conns: Vec<JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::SeqCst) {
-        let (stream, peer) = listener.accept()?;
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        // Reap finished connection threads so the vec stays bounded.
-        conns.retain(|h| !h.is_finished());
-        if active.load(Ordering::SeqCst) >= max_connections {
-            let mut s = stream;
-            let reject = Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str("server at connection capacity".into())),
-            ]);
-            let _ = s.write_all(reject.to_string_compact().as_bytes());
-            let _ = s.write_all(b"\n");
-            crate::log_warn!("rejected {peer}: at connection capacity");
-            continue;
-        }
-        active.fetch_add(1, Ordering::SeqCst);
-        let h2 = Arc::clone(&handle);
-        let stop2 = Arc::clone(&stop);
-        let active2 = Arc::clone(&active);
-        let t = std::thread::Builder::new()
-            .name("veilgraph-conn".into())
-            .spawn(move || {
-                crate::log_debug!("client {peer}");
-                let shutdown = serve_connection(&h2, stream, &stop2, &opts).unwrap_or(false);
-                active2.fetch_sub(1, Ordering::SeqCst);
-                if shutdown {
-                    stop2.store(true, Ordering::SeqCst);
-                    // Wake the acceptor blocked in accept().
-                    let _ = TcpStream::connect(wake);
-                }
-            })
-            .expect("spawn connection thread");
-        conns.push(t);
-    }
-    for c in conns {
-        let _ = c.join();
-    }
-    // Last drop of the Arc joins the engine thread (ServerHandle::drop).
-    drop(handle);
-    Ok(())
-}
-
-/// Serve one client connection until EOF, a `shutdown` request, or the
-/// server-wide stop flag (polled via a read timeout so lingering clients
-/// cannot pin a stopping server). Returns whether this client requested
-/// shutdown.
-fn serve_connection(
-    handle: &ServerHandle,
+/// One connection owned by a poll worker: the socket plus its read/write
+/// buffers and per-connection protocol state. Idle connections cost
+/// exactly this struct — no thread.
+struct Conn {
     stream: TcpStream,
-    stop: &AtomicBool,
-    opts: &ServeOptions,
-) -> Result<bool> {
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    let mut limiter = RateLimiter::new(opts.rate_limit);
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(false);
+    /// Bytes read but not yet consumed as complete lines.
+    buf: Vec<u8>,
+    /// Response bytes not yet written to the socket.
+    out: Vec<u8>,
+    limiter: RateLimiter,
+    /// An in-flight wire query: no further requests are read until it
+    /// answers, so pipelined responses keep request order.
+    pending: Option<(Receiver<Result<AsyncQueryResult>>, usize)>,
+    /// Close once `out` drains (EOF, protocol violation, or shutdown).
+    close_after_flush: bool,
+}
+
+/// What one tick did with a connection.
+enum Tick {
+    /// Bytes moved or a request was dispatched — poll again immediately.
+    Progress,
+    Idle,
+    Close,
+}
+
+enum Flush {
+    Progress,
+    Idle,
+    Closed,
+}
+
+/// Write as much of `out` as the socket accepts right now.
+fn flush_out(c: &mut Conn) -> Flush {
+    let mut wrote = 0usize;
+    while wrote < c.out.len() {
+        match c.stream.write(&c.out[wrote..]) {
+            Ok(0) => return Flush::Closed,
+            Ok(n) => wrote += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::Interrupted) => break,
+            Err(_) => return Flush::Closed,
         }
-        // Hard-capped read: `take` bounds how much one request line can
-        // buffer, so an oversized line is dropped, never parsed.
-        let cap = (MAX_WIRE_LINE_BYTES + 1 - line.len().min(MAX_WIRE_LINE_BYTES)) as u64;
-        match (&mut reader).take(cap).read_line(&mut line) {
-            Ok(0) if line.trim().is_empty() => return Ok(false), // EOF — client hung up
-            Ok(n) => {
-                if line.len() > MAX_WIRE_LINE_BYTES {
-                    let reject = Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        (
-                            "error",
-                            Json::Str(format!(
-                                "request line exceeds {MAX_WIRE_LINE_BYTES} bytes"
-                            )),
-                        ),
-                    ]);
-                    writer.write_all(reject.to_string_compact().as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    return Ok(false); // cannot resync mid-line: drop the client
+    }
+    if wrote > 0 {
+        c.out.drain(..wrote);
+        Flush::Progress
+    } else {
+        Flush::Idle
+    }
+}
+
+fn queue_line(c: &mut Conn, resp: &Json) {
+    c.out.extend_from_slice(resp.to_string_compact().as_bytes());
+    c.out.push(b'\n');
+}
+
+/// Reject an over-long request line and schedule the connection for
+/// close (mid-line there is no way to resync).
+fn reject_oversize(c: &mut Conn) {
+    queue_line(
+        c,
+        &err_response("bad_op", &format!("request line exceeds {MAX_WIRE_LINE_BYTES} bytes")),
+    );
+    c.buf.clear();
+    c.close_after_flush = true;
+}
+
+/// Advance one connection: flush pending output, complete an in-flight
+/// query, read what the socket has, dispatch complete lines, flush
+/// again. Never blocks.
+fn tick_conn(
+    handle: &ServerHandle,
+    c: &mut Conn,
+    scratch: &mut [u8],
+    stop: &AtomicBool,
+) -> Tick {
+    let mut progressed = false;
+    match flush_out(c) {
+        Flush::Closed => return Tick::Close,
+        Flush::Progress => progressed = true,
+        Flush::Idle => {}
+    }
+    // An in-flight wire query: deliver its answer when ready; until then
+    // this connection reads nothing more (natural per-connection flow
+    // control, and responses stay in request order).
+    if let Some((rx, k)) = c.pending.take() {
+        match rx.try_recv() {
+            Ok(res) => {
+                queue_line(c, &wire_query_response(res, k));
+                progressed = true;
+            }
+            Err(TryRecvError::Empty) => {
+                c.pending = Some((rx, k));
+                return if progressed { Tick::Progress } else { Tick::Idle };
+            }
+            Err(TryRecvError::Disconnected) => {
+                queue_line(c, &err_response("shutdown", "engine thread gone"));
+                c.close_after_flush = true;
+            }
+        }
+    }
+    if c.close_after_flush {
+        let _ = flush_out(c);
+        return if c.out.is_empty() { Tick::Close } else { Tick::Progress };
+    }
+    match c.stream.read(scratch) {
+        Ok(0) => {
+            // EOF: the client hung up. Flush whatever is queued, then go.
+            if c.out.is_empty() {
+                return Tick::Close;
+            }
+            c.close_after_flush = true;
+            return Tick::Progress;
+        }
+        Ok(n) => {
+            c.buf.extend_from_slice(&scratch[..n]);
+            progressed = true;
+        }
+        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::Interrupted) => {}
+        Err(_) => return Tick::Close,
+    }
+    loop {
+        match c.buf.iter().position(|&b| b == b'\n') {
+            Some(pos) if pos > MAX_WIRE_LINE_BYTES => {
+                reject_oversize(c);
+                break;
+            }
+            None => {
+                if c.buf.len() > MAX_WIRE_LINE_BYTES {
+                    reject_oversize(c);
                 }
-                if !line.ends_with('\n') && n > 0 {
-                    // Cap-bounded partial read of a still-incomplete
-                    // line: keep accumulating.
+                break;
+            }
+            Some(pos) => {
+                let line: Vec<u8> = c.buf.drain(..=pos).collect();
+                let text = String::from_utf8_lossy(&line[..pos]);
+                let text = text.trim();
+                if text.is_empty() {
                     continue;
                 }
-                if !line.trim().is_empty() {
-                    let (resp, shutdown) =
-                        handle_request_limited(handle, line.trim(), Some(&mut limiter));
-                    writer.write_all(resp.to_string_compact().as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    if shutdown {
-                        return Ok(true);
+                progressed = true;
+                match dispatch(handle, text, &mut c.limiter) {
+                    Reply::Done(resp, shutdown) => {
+                        queue_line(c, &resp);
+                        if shutdown {
+                            c.close_after_flush = true;
+                            stop.store(true, Ordering::SeqCst);
+                            break;
+                        }
+                    }
+                    Reply::Pending(rx, k) => {
+                        c.pending = Some((rx, k));
+                        break;
                     }
                 }
-                if n == 0 {
-                    return Ok(false); // EOF after a final unterminated line
-                }
-                line.clear();
             }
-            // Timeout (or interrupt) mid-wait: partial bytes stay in
-            // `line`; check the stop flag and keep reading.
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
-                ) => {}
-            Err(e) => return Err(e.into()),
         }
     }
+    match flush_out(c) {
+        Flush::Closed => return Tick::Close,
+        Flush::Progress => progressed = true,
+        Flush::Idle => {}
+    }
+    if c.close_after_flush && c.out.is_empty() {
+        return Tick::Close;
+    }
+    if progressed {
+        Tick::Progress
+    } else {
+        Tick::Idle
+    }
+}
+
+/// One poll worker: owns a slice of the connections, ticks each in turn,
+/// sleeps briefly only when a full sweep made no progress.
+fn poll_worker(
+    handle: Arc<ServerHandle>,
+    inject: Arc<Mutex<Vec<TcpStream>>>,
+    stop: Arc<AtomicBool>,
+    rate_limit: f64,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = vec![0u8; 16 * 1024];
+    while !stop.load(Ordering::SeqCst) {
+        {
+            let mut inj = inject.lock().unwrap();
+            for stream in inj.drain(..) {
+                conns.push(Conn {
+                    stream,
+                    buf: Vec::new(),
+                    out: Vec::new(),
+                    limiter: RateLimiter::new(rate_limit),
+                    pending: None,
+                    close_after_flush: false,
+                });
+            }
+        }
+        let mut progressed = false;
+        let mut i = 0;
+        while i < conns.len() {
+            match tick_conn(&handle, &mut conns[i], &mut scratch, &stop) {
+                Tick::Close => {
+                    drop(conns.swap_remove(i));
+                    handle.wire.connections.fetch_sub(1, Ordering::SeqCst);
+                }
+                Tick::Progress => {
+                    progressed = true;
+                    i += 1;
+                }
+                Tick::Idle => i += 1,
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    // Stopping: flush queued responses best-effort (bounded), then drop.
+    for mut c in conns {
+        let _ = c.stream.set_nonblocking(false);
+        let _ = c.stream.set_write_timeout(Some(Duration::from_millis(200)));
+        if !c.out.is_empty() {
+            let _ = c.stream.write_all(&c.out);
+        }
+        handle.wire.connections.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Nonblocking TCP front end over a pre-bound listener (bind to port 0
+/// in tests and read `listener.local_addr()` first): the calling thread
+/// accepts, `opts.workers` poll threads tick the connections through
+/// per-connection buffers. Read ops never enter the engine queue and
+/// wire queries never block a worker, so thousands of mostly-idle
+/// clients are served by this small fixed thread set even while a
+/// recompute runs. Returns once a client sends `shutdown`.
+pub fn serve(handle: ServerHandle, listener: TcpListener, opts: ServeOptions) -> Result<()> {
+    let local = listener.local_addr()?;
+    crate::log_info!("listening on {local}");
+    listener.set_nonblocking(true)?;
+    let workers = opts.workers.max(1);
+    let max_connections = opts.max_connections.max(1);
+    let handle = Arc::new(handle);
+    handle.wire.workers.store(workers, Ordering::SeqCst);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut injects: Vec<Arc<Mutex<Vec<TcpStream>>>> = Vec::with_capacity(workers);
+    let mut threads: Vec<JoinHandle<()>> = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let inject = Arc::new(Mutex::new(Vec::new()));
+        injects.push(Arc::clone(&inject));
+        let h2 = Arc::clone(&handle);
+        let stop2 = Arc::clone(&stop);
+        let rate = opts.rate_limit;
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("veilgraph-poll-{w}"))
+                .spawn(move || poll_worker(h2, inject, stop2, rate))
+                .expect("spawn poll worker"),
+        );
+    }
+    let mut next = 0usize;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if handle.wire.connections.load(Ordering::SeqCst) >= max_connections {
+                    let mut s = stream;
+                    let _ = s.set_nonblocking(false);
+                    let _ = s.set_write_timeout(Some(Duration::from_millis(200)));
+                    let reject = err_response("conn_cap", "server at connection capacity");
+                    let _ = s.write_all(reject.to_string_compact().as_bytes());
+                    let _ = s.write_all(b"\n");
+                    crate::log_warn!("rejected {peer}: at connection capacity");
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                crate::log_debug!("client {peer}");
+                handle.wire.connections.fetch_add(1, Ordering::SeqCst);
+                injects[next % workers].lock().unwrap().push(stream);
+                next += 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                stop.store(true, Ordering::SeqCst);
+                for t in threads {
+                    let _ = t.join();
+                }
+                return Err(e.into());
+            }
+        }
+    }
+    for t in threads {
+        let _ = t.join();
+    }
+    handle.request_shutdown();
+    // Last Arc: join the engine + recompute threads before returning.
+    if let Ok(h) = Arc::try_unwrap(handle) {
+        h.shutdown();
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::engine::EngineBuilder;
+    use std::io::{BufRead, BufReader};
 
     fn handle() -> ServerHandle {
         let edges: Vec<(u64, u64)> = (0..20).map(|i| (i, (i + 1) % 20)).collect();
         let engine = EngineBuilder::new().build_from_edges(edges).unwrap();
         ServerHandle::spawn(engine, 64, OverflowPolicy::Block)
+    }
+
+    fn err_code(resp: &Json) -> &str {
+        resp.get("error").unwrap().get("code").unwrap().as_str().unwrap()
+    }
+
+    fn err_msg(resp: &Json) -> &str {
+        resp.get("error").unwrap().get("msg").unwrap().as_str().unwrap()
     }
 
     #[test]
@@ -630,13 +1257,43 @@ mod tests {
         let (resp, stop) = handle_request(&h, r#"{"op":"add","src":3,"dst":9}"#);
         assert!(!stop);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("v").unwrap().as_u64(), Some(WIRE_PROTOCOL_VERSION));
         let (resp, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
+        // One effective update pending: the policy escalates and the
+        // recompute is handed off-thread.
+        assert_eq!(resp.get("action").unwrap().as_str(), Some("approximate"));
+        assert_eq!(resp.get("scheduled").unwrap().as_bool(), Some(true));
         let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
         assert!(resp.get("stats").is_some());
         let (_, stop) = handle_request(&h, r#"{"op":"shutdown"}"#);
         assert!(stop);
+        h.shutdown();
+    }
+
+    #[test]
+    fn wire_query_publishes_off_thread() {
+        let h = handle();
+        let v0 = h.reader().latest().version;
+        let (resp, _) = handle_request(&h, r#"{"op":"add","src":5,"dst":12}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":2}"#);
+        assert_eq!(resp.get("scheduled").unwrap().as_bool(), Some(true));
+        // The recompute publishes asynchronously. The wire reply itself
+        // may republish a repeat-last snapshot (the graph moved), so wait
+        // specifically for a recompute-published one.
+        let reader = h.reader();
+        let mut refreshed = false;
+        for _ in 0..500 {
+            let s = reader.latest();
+            if s.version > v0 && s.action != Action::RepeatLast {
+                refreshed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(refreshed, "off-thread recompute must publish a fresh snapshot");
         h.shutdown();
     }
 
@@ -654,6 +1311,7 @@ mod tests {
         assert_eq!(h.query().unwrap().snapshot.version, r.snapshot.version);
         let (resp, _) = handle_request(&h, r#"{"op":"add_vertex"}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(err_code(&resp), "bad_op");
         h.shutdown();
     }
 
@@ -674,7 +1332,12 @@ mod tests {
         let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
         let serving = resp.get("stats").unwrap().get("serving").unwrap();
         assert!(serving.get("reads_top").unwrap().as_u64().unwrap() >= 1);
-        // engine saw zero extra commands: all three ops hit the snapshot
+        // The server section rides along with the snapshot stats.
+        let server = resp.get("stats").unwrap().get("server").unwrap();
+        assert_eq!(server.get("protocol_version").unwrap().as_u64(), Some(1));
+        assert!(server.get("queue_capacity").unwrap().as_u64().unwrap() >= 1);
+        assert!(server.get("policy").unwrap().get("approx_after_updates").is_some());
+        // engine saw zero extra commands: all the ops hit the snapshot
         let after = h.reader().read_stats();
         assert_eq!(after.rank, before.rank + 2);
         let live = h.stats().unwrap();
@@ -689,11 +1352,63 @@ mod tests {
         let (resp, stop) = handle_request(&h, "not json");
         assert!(!stop);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(err_code(&resp), "bad_op");
         let (resp, _) = handle_request(&h, r#"{"op":"add","src":1}"#);
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(err_code(&resp), "bad_op");
         let (resp, _) = handle_request(&h, r#"{"op":"fly"}"#);
-        assert!(resp.get("error").unwrap().as_str().unwrap().contains("fly"));
+        assert!(err_msg(&resp).contains("fly"));
         h.shutdown();
+    }
+
+    #[test]
+    fn versioned_requests_negotiate() {
+        let h = handle();
+        // Explicit v1 is accepted.
+        let (resp, _) = handle_request(&h, r#"{"v":1,"op":"top","k":2}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        // Future versions are refused with a stable code.
+        let (resp, _) = handle_request(&h, r#"{"v":2,"op":"top","k":2}"#);
+        assert_eq!(err_code(&resp), "bad_op");
+        assert!(err_msg(&resp).contains("version"));
+        // Non-numeric versions too.
+        let (resp, _) = handle_request(&h, r#"{"v":"two","op":"top"}"#);
+        assert_eq!(err_code(&resp), "bad_op");
+        h.shutdown();
+    }
+
+    #[test]
+    fn stopped_handle_answers_with_shutdown_code() {
+        let h = handle();
+        h.request_shutdown();
+        // Give the engine thread a moment to drain and exit.
+        for _ in 0..200 {
+            if !h.is_running() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (resp, _) = handle_request(&h, r#"{"op":"add","src":1,"dst":2}"#);
+        assert_eq!(err_code(&resp), "shutdown");
+        let (resp, _) = handle_request(&h, r#"{"op":"query"}"#);
+        assert_eq!(err_code(&resp), "shutdown");
+    }
+
+    #[test]
+    fn serve_options_builder_clamps() {
+        let o = ServeOptions::new()
+            .max_connections(0)
+            .workers(0)
+            .queue_capacity(0)
+            .rate_limit(2.5)
+            .overflow(OverflowPolicy::Reject);
+        assert_eq!(o.max_connections, 1);
+        assert_eq!(o.workers, 1);
+        assert_eq!(o.queue_capacity, 1);
+        assert_eq!(o.rate_limit, 2.5);
+        assert_eq!(o.overflow, OverflowPolicy::Reject);
+        let d = ServeOptions::default();
+        assert_eq!(d.max_connections, 4096);
+        assert_eq!(d.workers, 4);
     }
 
     #[test]
@@ -724,7 +1439,7 @@ mod tests {
         let line = r#"{"op":"batch","ops":[{"op":"add","src":30,"dst":0},{"op":"add","src":31}]}"#;
         let (resp, _) = handle_request(&h, line);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
-        let err = resp.get("error").unwrap().as_str().unwrap();
+        let err = err_msg(&resp);
         assert!(err.contains("batch op 1"), "error names the bad element: {err}");
         let r = h.query().unwrap();
         assert!(!r.ids().contains(&30), "no partial registration");
@@ -743,7 +1458,7 @@ mod tests {
         let line = format!(r#"{{"op":"batch","ops":[{}]}}"#, ops.join(","));
         let (resp, _) = handle_request(&h, &line);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
-        let err = resp.get("error").unwrap().as_str().unwrap();
+        let err = err_msg(&resp);
         assert!(err.contains("cap"), "rejection names the cap: {err}");
         let r = h.query().unwrap();
         assert!(!r.ids().contains(&10_000), "nothing registered past the cap");
@@ -752,16 +1467,11 @@ mod tests {
 
     #[test]
     fn oversized_request_line_is_rejected_and_dropped() {
-        use std::io::{BufRead, BufReader, Write};
         let h = handle();
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            let stop = AtomicBool::new(false);
-            let _ = serve_connection(&h, stream, &stop, &ServeOptions::default());
-            h.shutdown();
-        });
+        let opts = ServeOptions::new().workers(1);
+        let server = std::thread::spawn(move || serve(h, listener, opts).unwrap());
         let mut client = TcpStream::connect(addr).unwrap();
         client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         let huge = vec![b'x'; MAX_WIRE_LINE_BYTES + 64];
@@ -771,9 +1481,14 @@ mod tests {
         r.read_line(&mut resp).unwrap();
         let j = Json::parse(resp.trim()).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
-        assert!(j.get("error").unwrap().as_str().unwrap().contains("bytes"));
+        assert_eq!(err_code(&j), "bad_op");
+        assert!(err_msg(&j).contains("bytes"));
         let mut rest = String::new();
         assert_eq!(r.read_line(&mut rest).unwrap(), 0, "oversized client is dropped");
+        // A fresh client can still stop the server: the violation cost
+        // one connection, not the process.
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        c2.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
         server.join().unwrap();
     }
 
@@ -790,27 +1505,25 @@ mod tests {
 
     #[test]
     fn tcp_server_end_to_end() {
-        use std::io::{BufRead, BufReader, Write};
         let h = handle();
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            let stop = AtomicBool::new(false);
-            serve_connection(&h, stream, &stop, &ServeOptions::default()).unwrap();
-            h.shutdown();
-        });
+        let opts = ServeOptions::new().workers(2);
+        let server = std::thread::spawn(move || serve(h, listener, opts).unwrap());
         let mut client = TcpStream::connect(addr).unwrap();
-        client
-            .write_all(
-                b"{\"op\":\"add\",\"src\":1,\"dst\":15}\n{\"op\":\"query\",\"top\":2}\n{\"op\":\"shutdown\"}\n",
-            )
-            .unwrap();
+        let script = concat!(
+            "{\"op\":\"add\",\"src\":1,\"dst\":15}\n",
+            "{\"op\":\"query\",\"top\":2}\n",
+            "{\"op\":\"shutdown\"}\n"
+        );
+        client.write_all(script.as_bytes()).unwrap();
         let reader = BufReader::new(client.try_clone().unwrap());
         let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
         assert_eq!(lines.len(), 3);
         let q = Json::parse(&lines[1]).unwrap();
         assert_eq!(q.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(q.get("v").unwrap().as_u64(), Some(1));
+        assert_eq!(q.get("top").unwrap().as_arr().unwrap().len(), 2);
         server.join().unwrap();
     }
 }

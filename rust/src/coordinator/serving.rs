@@ -194,12 +194,48 @@ pub enum ReadKind {
     Stats,
 }
 
+/// Live write-path coalescing gauges, published by the engine thread as
+/// it ingests and applies batches and read lock-free by every
+/// [`SnapshotReader`]. Unlike the snapshot's frozen `engine_metrics`,
+/// these stay current between publishes, so the wire `stats` op can show
+/// queue pressure and coalescing effectiveness in real time.
+#[derive(Debug, Default)]
+pub struct IngestGauges {
+    /// Raw ops drained from the update buffer so far (cumulative).
+    pub coalesced_raw_ops: AtomicU64,
+    /// Effective ops those drains collapsed to (cumulative).
+    pub coalesced_effective_ops: AtomicU64,
+    /// O(1) estimate of effective ops currently pending in the buffer.
+    pub pending_effective_estimate: AtomicU64,
+}
+
+impl IngestGauges {
+    /// Current values as a JSON object (the `stats` op's `ingest` section).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "coalesced_raw_ops",
+                Json::Num(self.coalesced_raw_ops.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "coalesced_effective_ops",
+                Json::Num(self.coalesced_effective_ops.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "pending_effective_estimate",
+                Json::Num(self.pending_effective_estimate.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
 /// State shared between the one publisher and all readers.
 struct Shared {
     latest: RwLock<Arc<RankSnapshot>>,
     reads_top: AtomicU64,
     reads_rank: AtomicU64,
     reads_stats: AtomicU64,
+    ingest: IngestGauges,
 }
 
 /// Writer-side handle: owned by the engine, swaps the published snapshot
@@ -223,8 +259,15 @@ impl SnapshotPublisher {
                 reads_top: AtomicU64::new(0),
                 reads_rank: AtomicU64::new(0),
                 reads_stats: AtomicU64::new(0),
+                ingest: IngestGauges::default(),
             }),
         }
+    }
+
+    /// The live write-path gauges; the engine updates these as it
+    /// coalesces and applies batches.
+    pub fn ingest_gauges(&self) -> &IngestGauges {
+        &self.shared.ingest
     }
 
     /// Atomically replace the published snapshot (an `Arc` store; readers
@@ -316,6 +359,7 @@ impl SnapshotReader {
                     ("reads_stats", Json::Num(r.stats as f64)),
                 ]),
             ),
+            ("ingest", self.shared.ingest.to_json()),
             ("engine", s.engine_metrics.clone()),
         ])
     }
@@ -407,6 +451,23 @@ mod tests {
         assert_eq!(serving.get("vertices").unwrap().as_u64(), Some(1));
         assert!(serving.get("age_secs").unwrap().as_f64().unwrap() >= 0.0);
         assert!(j.get("engine").is_some());
+        let ingest = j.get("ingest").unwrap();
+        assert_eq!(ingest.get("coalesced_raw_ops").unwrap().as_u64(), Some(0));
+        assert_eq!(ingest.get("pending_effective_estimate").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn ingest_gauges_flow_from_publisher_to_readers() {
+        let p = SnapshotPublisher::new();
+        let r = p.reader();
+        p.ingest_gauges().coalesced_raw_ops.store(40, Ordering::Relaxed);
+        p.ingest_gauges().coalesced_effective_ops.store(12, Ordering::Relaxed);
+        p.ingest_gauges().pending_effective_estimate.store(3, Ordering::Relaxed);
+        let ingest = r.stats_json();
+        let ingest = ingest.get("ingest").unwrap();
+        assert_eq!(ingest.get("coalesced_raw_ops").unwrap().as_u64(), Some(40));
+        assert_eq!(ingest.get("coalesced_effective_ops").unwrap().as_u64(), Some(12));
+        assert_eq!(ingest.get("pending_effective_estimate").unwrap().as_u64(), Some(3));
     }
 
     #[test]

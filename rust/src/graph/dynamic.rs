@@ -871,25 +871,10 @@ mod tests {
         assert_eq!(es.len(), 3);
     }
 
-    /// Sequentially apply ops through the public per-op API (the oracle
-    /// `apply_batch` must match bit-for-bit).
+    /// Sequentially apply ops through the public per-op API (the shared
+    /// oracle `apply_batch` must match bit-for-bit).
     fn seq_apply(g: &mut DynamicGraph, ops: &[EdgeOp]) {
-        for op in ops {
-            match *op {
-                EdgeOp::AddEdge(u, v) => {
-                    let _ = g.add_edge(u, v);
-                }
-                EdgeOp::RemoveEdge(u, v) => {
-                    let _ = g.remove_edge(u, v);
-                }
-                EdgeOp::AddVertex(u) => {
-                    g.add_vertex(u);
-                }
-                EdgeOp::RemoveVertex(u) => {
-                    let _ = g.remove_vertex(u);
-                }
-            }
-        }
+        let _ = crate::testing::oracle::seq_apply(g, ops);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! * `info`       — artifact/platform diagnostics.
 
 use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::policies::StalenessPolicy;
 use veilgraph::coordinator::server::{serve_tcp_with, ServeOptions, ServerHandle};
 use veilgraph::error::{Error, Result};
 use veilgraph::experiments::datasets::{all_datasets, dataset_by_name, table1};
@@ -82,8 +83,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("delta", "vertex-specific extension Δ", Some("0.1"))
         .opt("artifacts", "artifacts dir for the XLA backend", Some("artifacts"))
         .opt("queue", "ingestion queue capacity", Some("65536"))
+        .opt(
+            "overflow",
+            "full-queue policy for blocking producers: block, drop-oldest, reject",
+            Some("block"),
+        )
+        .opt(
+            "policy",
+            "staleness spec `repeatlast:AGE:UPD[,approx:AGE:UPD]` \
+             (age in seconds, UPD in effective updates; default: engine default)",
+            None,
+        )
         .opt("parallelism", "PageRank shards (1 = serial, 0 = one per core)", Some("1"))
-        .opt("max-conns", "simultaneous TCP client connections", Some("64"))
+        .opt("workers", "poll workers ticking the connections", Some("4"))
+        .opt("max-conns", "simultaneous TCP client connections", Some("4096"))
         .opt("rate-limit", "per-connection read ops/sec (0 = unlimited)", Some("0"))
         .opt("top-k", "top entries pre-ranked per published snapshot", Some("128"))
         .flag("no-xla", "force the sparse executor")
@@ -113,11 +126,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         engine.graph().num_edges(),
         engine.has_xla()
     );
-    let handle = ServerHandle::spawn(engine, p.req_parse::<usize>("queue")?, OverflowPolicy::Block);
-    let opts = ServeOptions {
-        max_connections: p.req_parse::<usize>("max-conns")?,
-        rate_limit: p.req_parse::<f64>("rate-limit")?,
-    };
+    let mut opts = ServeOptions::new()
+        .queue_capacity(p.req_parse::<usize>("queue")?)
+        .overflow(p.req_parse::<OverflowPolicy>("overflow")?)
+        .workers(p.req_parse::<usize>("workers")?)
+        .max_connections(p.req_parse::<usize>("max-conns")?)
+        .rate_limit(p.req_parse::<f64>("rate-limit")?);
+    if let Some(policy) = p.get_parse::<StalenessPolicy>("policy")? {
+        opts = opts.policy(policy);
+    }
+    let handle = ServerHandle::spawn_with(engine, &opts);
     serve_tcp_with(handle, p.get("addr").unwrap(), opts)
 }
 

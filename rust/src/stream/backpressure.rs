@@ -22,6 +22,21 @@ pub enum OverflowPolicy {
     Reject,
 }
 
+impl std::str::FromStr for OverflowPolicy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Ok(Self::Block),
+            "drop-oldest" | "dropoldest" => Ok(Self::DropOldest),
+            "reject" => Ok(Self::Reject),
+            other => Err(Error::Usage(format!(
+                "unknown overflow policy {other:?}; expected block, drop-oldest, or reject"
+            ))),
+        }
+    }
+}
+
 /// Counters describing shedding behaviour.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueueStats {
@@ -112,6 +127,53 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Push that never blocks the caller, for producers that must stay
+    /// responsive (the readiness loop's poll workers). `DropOldest`
+    /// sheds the queue head to make room; `Block` and `Reject` both
+    /// surface a full queue as [`Error::Backpressure`] so the caller can
+    /// degrade instead of stalling.
+    pub fn try_push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::Engine("queue closed".into()));
+        }
+        while g.q.len() >= self.capacity {
+            match self.policy {
+                OverflowPolicy::DropOldest => {
+                    g.q.pop_front();
+                    g.stats.dropped += 1;
+                }
+                OverflowPolicy::Block | OverflowPolicy::Reject => {
+                    g.stats.rejected += 1;
+                    let n = g.q.len();
+                    return Err(Error::Backpressure(n));
+                }
+            }
+        }
+        g.q.push_back(item);
+        g.stats.pushed += 1;
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue bypassing the capacity check. For critical control
+    /// messages (at most a handful outstanding at once) that must be
+    /// neither shed nor allowed to block their producer — e.g. handing a
+    /// finished recompute back to the engine thread. Fails only on a
+    /// closed queue.
+    pub fn force_push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::Engine("queue closed".into()));
+        }
+        g.q.push_back(item);
+        g.stats.pushed += 1;
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
@@ -135,6 +197,16 @@ impl<T> BoundedQueue<T> {
     /// Current length.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()
+    }
+
+    /// Configured capacity (slots).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Whether [`Self::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
     }
 
     /// True if empty.
@@ -209,6 +281,41 @@ mod tests {
         q.close();
         assert_eq!(h.join().unwrap(), None);
         assert!(q.push(1).is_err());
+    }
+
+    #[test]
+    fn try_push_never_blocks() {
+        // Block policy: full queue surfaces Backpressure instead of waiting.
+        let q = BoundedQueue::new(1, OverflowPolicy::Block);
+        q.try_push(1).unwrap();
+        let e = q.try_push(2).unwrap_err();
+        assert!(matches!(e, Error::Backpressure(1)));
+        assert_eq!(q.stats().rejected, 1);
+        // DropOldest policy: head is shed, push succeeds.
+        let q = BoundedQueue::new(1, OverflowPolicy::DropOldest);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.stats().dropped, 1);
+    }
+
+    #[test]
+    fn capacity_and_closed_are_observable() {
+        let q = BoundedQueue::<u32>::new(7, OverflowPolicy::Block);
+        assert_eq!(q.capacity(), 7);
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.try_push(1).is_err());
+    }
+
+    #[test]
+    fn overflow_policy_parses_from_str() {
+        assert_eq!("block".parse::<OverflowPolicy>().unwrap(), OverflowPolicy::Block);
+        assert_eq!("drop-oldest".parse::<OverflowPolicy>().unwrap(), OverflowPolicy::DropOldest);
+        assert_eq!("DropOldest".parse::<OverflowPolicy>().unwrap(), OverflowPolicy::DropOldest);
+        assert_eq!("reject".parse::<OverflowPolicy>().unwrap(), OverflowPolicy::Reject);
+        assert!("spill".parse::<OverflowPolicy>().is_err());
     }
 
     #[test]

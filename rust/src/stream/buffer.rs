@@ -197,6 +197,14 @@ impl UpdateBuffer {
         (self.coalesced_raw, self.coalesced_effective)
     }
 
+    /// O(1) upper bound on the effective ops currently pending (distinct
+    /// touched pairs plus vertex ops) — the graph-free slice of
+    /// [`Self::statistics`], cheap enough to refresh a live gauge on
+    /// every ingest.
+    pub fn pending_effective_estimate(&self) -> usize {
+        self.pairs.len() + self.counts.add_vertices + self.counts.remove_vertices
+    }
+
     /// Statistics snapshot against the current (pre-apply) graph — O(1):
     /// the per-kind counters are maintained by `register`/`apply`/`clear`
     /// rather than recounted per query.
@@ -671,28 +679,10 @@ mod tests {
 
     // ---- coalescing ----------------------------------------------------
 
-    /// Op-by-op oracle: sequentially applying a batch's effective ops
-    /// must leave the graph in exactly the state the raw ops would have.
-    fn seq_apply(g: &mut DynamicGraph, ops: &[EdgeOp]) -> (usize, usize) {
-        let (mut ok, mut skip) = (0, 0);
-        for op in ops {
-            let applied = match *op {
-                EdgeOp::AddEdge(u, v) => g.add_edge(u, v).is_ok(),
-                EdgeOp::RemoveEdge(u, v) => g.remove_edge(u, v).is_ok(),
-                EdgeOp::AddVertex(u) => {
-                    g.add_vertex(u);
-                    true
-                }
-                EdgeOp::RemoveVertex(u) => g.remove_vertex(u).is_ok(),
-            };
-            if applied {
-                ok += 1;
-            } else {
-                skip += 1;
-            }
-        }
-        (ok, skip)
-    }
+    // Op-by-op oracle: sequentially applying a batch's effective ops
+    // must leave the graph in exactly the state the raw ops would have
+    // (shared reference path in crate::testing::oracle).
+    use crate::testing::oracle::seq_apply;
 
     fn assert_same_graph(a: &DynamicGraph, b: &DynamicGraph, what: &str) {
         assert_eq!(a.ids(), b.ids(), "{what}: vertex order");

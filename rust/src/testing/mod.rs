@@ -1,4 +1,6 @@
-//! Test-support substrates, including the `vprop` mini property-testing
-//! framework (proptest substitute; see DESIGN.md §Substitutions).
+//! Test-support substrates: the `vprop` mini property-testing framework
+//! (proptest substitute; see DESIGN.md §Substitutions) and the shared
+//! sequential-apply oracle batch paths are verified against.
 
+pub mod oracle;
 pub mod vprop;

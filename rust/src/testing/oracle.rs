@@ -1,0 +1,54 @@
+//! Sequential reference application of raw op streams.
+//!
+//! The one oracle every batch path is measured against: ops applied one
+//! at a time through the public per-op API, in order, skipping the ones
+//! the graph rejects (missing endpoints, unknown edges). `apply_batch`,
+//! the update buffer's coalescer and the engine's batched ingest must
+//! all leave a graph bit-identical to this reference — the property and
+//! unit suites previously each carried their own copy of it, which is
+//! exactly how oracle drift starts.
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::stream::event::EdgeOp;
+
+/// Apply `ops` sequentially through the per-op API. Returns
+/// `(applied, skipped)`; callers that only want the end state ignore it.
+pub fn seq_apply(g: &mut DynamicGraph, ops: &[EdgeOp]) -> (usize, usize) {
+    let (mut applied, mut skipped) = (0, 0);
+    for op in ops {
+        let ok = match *op {
+            EdgeOp::AddEdge(u, v) => g.add_edge(u, v).is_ok(),
+            EdgeOp::RemoveEdge(u, v) => g.remove_edge(u, v).is_ok(),
+            EdgeOp::AddVertex(u) => {
+                g.add_vertex(u);
+                true
+            }
+            EdgeOp::RemoveVertex(u) => g.remove_vertex(u).is_ok(),
+        };
+        if ok {
+            applied += 1;
+        } else {
+            skipped += 1;
+        }
+    }
+    (applied, skipped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_counts_applied_and_skipped() {
+        let (mut g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let ops = vec![
+            EdgeOp::add(1, 3),         // applied; endpoint 3 auto-vivified
+            EdgeOp::remove(9, 9),      // skipped: unknown edge
+            EdgeOp::AddVertex(7),      // applied
+            EdgeOp::RemoveVertex(100), // skipped: unknown vertex
+        ];
+        let (applied, skipped) = seq_apply(&mut g, &ops);
+        assert_eq!((applied, skipped), (2, 2));
+        assert!(g.index(7).is_some() && g.index(3).is_some());
+    }
+}

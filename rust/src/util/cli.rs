@@ -40,19 +40,28 @@ impl Parsed {
         self.flags.get(name).copied().unwrap_or(false)
     }
 
-    /// Typed accessor with parse error reporting.
-    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+    /// Typed accessor with parse error reporting. The target type's own
+    /// parse error rides along, so rich parsers (policy specs, overflow
+    /// policies) surface *why* the value was rejected, not just that it
+    /// was.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
         match self.get(name) {
             None => Ok(None),
             Some(s) => s
                 .parse::<T>()
                 .map(Some)
-                .map_err(|_| Error::Usage(format!("invalid value for --{name}: {s:?}"))),
+                .map_err(|e| Error::Usage(format!("invalid value for --{name}: {s:?} ({e})"))),
         }
     }
 
     /// Typed accessor with a required default already set in the spec.
-    pub fn req_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+    pub fn req_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
         self.get_parse::<T>(name)?
             .ok_or_else(|| Error::Usage(format!("missing required --{name}")))
     }
@@ -211,7 +220,9 @@ mod tests {
     fn bad_typed_value_reports_option() {
         let p = cmd().parse(&argv(&["--count", "zebra"])).unwrap();
         let e = p.req_parse::<u32>("count").unwrap_err();
-        assert!(e.to_string().contains("count"));
+        let msg = e.to_string();
+        assert!(msg.contains("count"));
+        assert!(msg.contains("digit"), "inner parse error rides along: {msg}");
     }
 
     #[test]

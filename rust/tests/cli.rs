@@ -102,9 +102,10 @@ fn figures_requires_a_selection() {
 }
 
 /// Full protocol run against the real binary: `serve` on an ephemeral
-/// port, two clients connected at once, vertex ops (`add_vertex` /
-/// `remove_vertex`), the `top` fast path, `rank`, `stats`, and a clean
-/// shutdown.
+/// port with the staleness/overflow/worker flags set, two clients
+/// connected at once, vertex ops (`add_vertex` / `remove_vertex`), the
+/// `top` fast path, `rank`, `stats` (reflecting the parsed policy), a
+/// typed v1 error, and a clean shutdown.
 #[test]
 fn serve_speaks_the_line_protocol_with_concurrent_clients() {
     use std::io::{BufRead, BufReader, Write};
@@ -113,7 +114,20 @@ fn serve_speaks_the_line_protocol_with_concurrent_clients() {
     use veilgraph::util::json::Json;
 
     let mut child = bin()
-        .args(["serve", "--addr", "127.0.0.1:0", "--no-xla", "--queue", "1024"])
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--no-xla",
+            "--queue",
+            "1024",
+            "--overflow",
+            "reject",
+            "--workers",
+            "2",
+            "--policy",
+            "repeatlast:300:50,approx:600:500",
+        ])
         .env("VEILGRAPH_LOG", "info")
         .stdout(Stdio::piped())
         .stderr(Stdio::piped())
@@ -155,6 +169,7 @@ fn serve_speaks_the_line_protocol_with_concurrent_clients() {
     let resp = send(&mut c1, &mut r1, r#"{"op":"remove_vertex","id":50}"#);
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
     let resp = send(&mut c1, &mut r1, r#"{"op":"query","top":3}"#);
+    assert_eq!(resp.get("v").unwrap().as_u64(), Some(1), "responses carry the protocol version");
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
     assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
 
@@ -168,6 +183,21 @@ fn serve_speaks_the_line_protocol_with_concurrent_clients() {
     assert_eq!(resp.get("rank"), Some(&Json::Null), "unknown vertex has no rank");
     let resp = send(&mut c2, &mut r2, r#"{"op":"stats"}"#);
     assert!(resp.get("stats").unwrap().get("serving").is_some());
+    let server = resp.get("stats").unwrap().get("server").unwrap();
+    assert_eq!(server.get("protocol_version").unwrap().as_u64(), Some(1));
+    assert_eq!(server.get("workers").unwrap().as_u64(), Some(2), "--workers reaches the loop");
+    let policy = server.get("policy").unwrap();
+    assert_eq!(policy.get("approx_after_updates").unwrap().as_u64(), Some(50));
+    assert_eq!(policy.get("exact_after_updates").unwrap().as_u64(), Some(500));
+
+    // Unknown ops answer a typed v1 error and leave the connection open.
+    let resp = send(&mut c2, &mut r2, r#"{"op":"nope"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        resp.get("error").unwrap().get("code").unwrap().as_str(),
+        Some("bad_op"),
+        "errors carry stable codes"
+    );
 
     let resp = send(&mut c2, &mut r2, r#"{"op":"shutdown"}"#);
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));

@@ -800,12 +800,8 @@ fn prop_batched_apply_matches_op_by_op() {
                     _ => ops.push(EdgeOp::RemoveVertex(u)),
                 }
             }
-            // Oracle: the sequential reference path.
-            let mut sbuf = UpdateBuffer::new();
-            for op in &ops {
-                sbuf.register(*op);
-            }
-            sbuf.apply(&mut seq).unwrap();
+            // Oracle: the shared sequential reference path.
+            veilgraph::testing::oracle::seq_apply(&mut seq, &ops);
             // Batch path: coalesce, then grouped apply.
             let mut bbuf = UpdateBuffer::new();
             bbuf.register_batch(ops.iter().copied());

@@ -5,17 +5,23 @@
 //! * Readers hammering the snapshot slot while the writer publishes must
 //!   never observe a torn snapshot (version / ids / ranks / top-K index
 //!   mutually inconsistent).
-//! * The TCP front end must serve ≥ 2 simultaneous clients and enforce
-//!   its connection cap.
+//! * The readiness-loop TCP front end must serve simultaneous clients,
+//!   enforce its connection cap and read rate limit with typed v1 error
+//!   codes, and hold a large mostly-idle swarm on a small fixed worker
+//!   set.
+//! * Under queue pressure the wire path degrades (structured `overload`
+//!   errors carrying a stale-but-valid snapshot answer) instead of
+//!   queueing unboundedly; a recompute pinned mid-flight blocks neither
+//!   readers nor writers.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use veilgraph::coordinator::engine::EngineBuilder;
-use veilgraph::coordinator::server::{serve_listener, ServeOptions, ServerHandle};
+use veilgraph::coordinator::server::{handle_request, serve, ServeOptions, ServerHandle};
 use veilgraph::coordinator::udf::{Action, QueryContext, UdfSuite};
 use veilgraph::metrics::ranking::top_k_ids;
 use veilgraph::stream::backpressure::OverflowPolicy;
@@ -24,6 +30,13 @@ use veilgraph::util::json::Json;
 
 fn ring(n: u64) -> Vec<(u64, u64)> {
     (0..n).map(|i| (i, (i + 1) % n)).collect()
+}
+
+fn err_code(resp: &Json) -> &str {
+    resp.get("error")
+        .and_then(|e| e.get("code"))
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("no error.code in {resp:?}"))
 }
 
 /// A UDF whose `on_query` parks until released — a deterministic stand-in
@@ -160,6 +173,118 @@ fn readers_never_observe_a_torn_snapshot() {
     }
 }
 
+/// Queue pressure degrades instead of queueing: with the engine thread
+/// provably parked and a tiny reject-on-full queue saturated, wire writes
+/// answer a structured `overload` error, wire queries answer `overload`
+/// carrying the stale-but-valid published snapshot, and the queue depth
+/// stays bounded at its capacity.
+#[test]
+fn overload_degrades_with_code_and_stale_snapshot() {
+    let entered = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let engine = EngineBuilder::new()
+        .udf(Box::new(GatedSuite {
+            entered: Arc::clone(&entered),
+            release: Arc::clone(&release),
+        }))
+        .build_from_edges(ring(12))
+        .unwrap();
+    let h = Arc::new(ServerHandle::spawn(engine, 2, OverflowPolicy::Reject));
+    let v0 = h.reader().latest().version;
+
+    // Park the engine thread inside a sync query.
+    let writer = {
+        let h2 = Arc::clone(&h);
+        std::thread::spawn(move || h2.query())
+    };
+    while !entered.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Saturate the 2-slot queue behind the parked engine.
+    h.try_ingest(EdgeOp::add(0, 5)).unwrap();
+    h.try_ingest(EdgeOp::add(1, 6)).unwrap();
+
+    // A wire write now degrades to a typed error, not a blocked worker.
+    let (resp, _) = handle_request(&h, r#"{"op":"add","src":2,"dst":7}"#);
+    assert_eq!(resp.get("v").unwrap().as_u64(), Some(1));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(err_code(&resp), "overload");
+
+    // A wire query degrades to the published snapshot instead of
+    // queueing: flagged overload, but the answer is still a valid (stale)
+    // ranking.
+    let (q, _) = handle_request(&h, r#"{"op":"query","top":4}"#);
+    assert_eq!(err_code(&q), "overload");
+    assert_eq!(q.get("version").unwrap().as_u64(), Some(v0), "served the stale snapshot");
+    assert_eq!(q.get("top").unwrap().as_arr().unwrap().len(), 4);
+
+    // Off-queue reads still round-trip, count the sheds, and show the
+    // queue bounded at capacity.
+    let (stats, _) = handle_request(&h, r#"{"op":"stats"}"#);
+    let server = stats.get("stats").unwrap().get("server").unwrap();
+    assert!(server.get("overloads").unwrap().as_u64().unwrap() >= 2, "both sheds counted");
+    assert!(server.get("queue_len").unwrap().as_u64().unwrap() <= 2, "queue depth stays bounded");
+    assert_eq!(server.get("queue_capacity").unwrap().as_u64(), Some(2));
+
+    release.store(true, Ordering::SeqCst);
+    writer.join().unwrap().unwrap();
+    match Arc::try_unwrap(h) {
+        Ok(h) => h.shutdown(),
+        Err(_) => panic!("handle clones outlived the test"),
+    }
+}
+
+/// A recompute pinned mid-flight on the worker blocks neither readers
+/// nor writers: ingest and wire queries keep round-tripping (at most one
+/// job in flight, so they answer unscheduled), stats report the job, and
+/// releasing the worker publishes a real ranking.
+#[test]
+fn held_recompute_blocks_neither_readers_nor_writers() {
+    let engine = EngineBuilder::new().build_from_edges(ring(25)).unwrap();
+    let h = ServerHandle::spawn(engine, 256, OverflowPolicy::Block);
+    let reader = h.reader();
+    let v0 = reader.latest().version;
+    h.hold_recompute();
+
+    // Mutate, then a wire query: the staleness policy schedules a
+    // recompute, which the gate now pins on the worker thread.
+    h.ingest(EdgeOp::add(0, 12)).unwrap();
+    let (q, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
+    assert_eq!(q.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(q.get("scheduled").unwrap().as_bool(), Some(true), "policy handed a job off-thread");
+
+    // While the recompute is held: reads, writes and further queries all
+    // complete.
+    for i in 0..50u64 {
+        assert_eq!(reader.top(5).len(), 5);
+        h.ingest(EdgeOp::add(200 + i, i % 25)).unwrap();
+    }
+    let (q2, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
+    assert_eq!(q2.get("ok").unwrap().as_bool(), Some(true), "queries answer while a job is pinned");
+    assert_eq!(
+        q2.get("scheduled").unwrap().as_bool(),
+        Some(false),
+        "at most one recompute in flight"
+    );
+    let (stats, _) = handle_request(&h, r#"{"op":"stats"}"#);
+    let server = stats.get("stats").unwrap().get("server").unwrap();
+    assert_eq!(server.get("recompute_in_flight").unwrap().as_bool(), Some(true));
+
+    // Release: the pinned job finishes off-thread and publishes.
+    h.release_recompute();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = reader.latest();
+        if s.version > v0 && s.action != Action::RepeatLast {
+            break;
+        }
+        assert!(Instant::now() < deadline, "recompute never published after release");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    h.shutdown();
+}
+
 fn send_line(stream: &mut TcpStream, line: &str) {
     stream.write_all(line.as_bytes()).unwrap();
     stream.write_all(b"\n").unwrap();
@@ -171,8 +296,8 @@ fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
     Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
 }
 
-/// The concurrent TCP front end serves two simultaneous clients: both
-/// stay connected the whole time, and each gets responses while the
+/// The readiness-loop TCP front end serves two simultaneous clients:
+/// both stay connected the whole time, and each gets responses while the
 /// other's connection is open (the serial server would park client 2
 /// until client 1 disconnected).
 #[test]
@@ -182,8 +307,7 @@ fn tcp_server_handles_two_simultaneous_clients() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        serve_listener(h, listener, ServeOptions { max_connections: 8, ..Default::default() })
-            .unwrap();
+        serve(h, listener, ServeOptions::new().max_connections(8).workers(2)).unwrap();
     });
 
     let mut c1 = TcpStream::connect(addr).unwrap();
@@ -196,10 +320,12 @@ fn tcp_server_handles_two_simultaneous_clients() {
     // Interleave requests across the two live connections.
     send_line(&mut c1, r#"{"op":"top","k":3}"#);
     let resp = read_json_line(&mut r1);
+    assert_eq!(resp.get("v").unwrap().as_u64(), Some(1), "responses are versioned");
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
     assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
 
-    send_line(&mut c2, r#"{"op":"top","k":5}"#);
+    // An explicitly versioned request negotiates cleanly over the wire.
+    send_line(&mut c2, r#"{"v":1,"op":"top","k":5}"#);
     let resp = read_json_line(&mut r2);
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "c2 served while c1 is connected");
     assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 5);
@@ -213,7 +339,9 @@ fn tcp_server_handles_two_simultaneous_clients() {
     send_line(&mut c2, r#"{"op":"stats"}"#);
     let stats = read_json_line(&mut r2);
     let serving = stats.get("stats").unwrap().get("serving").unwrap();
-    assert!(serving.get("version").unwrap().as_u64().unwrap() >= 2, "c2 sees c1's recompute");
+    assert!(serving.get("version").unwrap().as_u64().unwrap() >= 2, "c2 sees c1's republish");
+    let server_stats = stats.get("stats").unwrap().get("server").unwrap();
+    assert_eq!(server_stats.get("connections").unwrap().as_u64(), Some(2));
 
     // c2 shuts the server down while c1 is still connected.
     send_line(&mut c2, r#"{"op":"shutdown"}"#);
@@ -221,8 +349,8 @@ fn tcp_server_handles_two_simultaneous_clients() {
     server.join().unwrap();
 }
 
-/// Clients beyond the connection cap get one error line and a closed
-/// stream; clients within the cap are unaffected.
+/// Clients beyond the connection cap get one `conn_cap` error line and a
+/// closed stream; clients within the cap are unaffected.
 #[test]
 fn tcp_server_enforces_connection_cap() {
     let engine = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
@@ -230,8 +358,7 @@ fn tcp_server_enforces_connection_cap() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        serve_listener(h, listener, ServeOptions { max_connections: 1, ..Default::default() })
-            .unwrap();
+        serve(h, listener, ServeOptions::new().max_connections(1).workers(1)).unwrap();
     });
 
     let mut c1 = TcpStream::connect(addr).unwrap();
@@ -241,13 +368,13 @@ fn tcp_server_enforces_connection_cap() {
     send_line(&mut c1, r#"{"op":"top","k":1}"#);
     assert_eq!(read_json_line(&mut r1).get("ok").unwrap().as_bool(), Some(true));
 
-    // c2 is over the cap: one error line, then EOF.
+    // c2 is over the cap: one typed error line, then EOF.
     let c2 = TcpStream::connect(addr).unwrap();
     c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
     let mut r2 = BufReader::new(c2);
     let reject = read_json_line(&mut r2);
     assert_eq!(reject.get("ok").unwrap().as_bool(), Some(false));
-    assert!(reject.get("error").unwrap().as_str().unwrap().contains("capacity"));
+    assert_eq!(err_code(&reject), "conn_cap");
     let mut rest = String::new();
     assert_eq!(r2.read_line(&mut rest).unwrap(), 0, "rejected stream is closed");
 
@@ -257,8 +384,9 @@ fn tcp_server_enforces_connection_cap() {
 }
 
 /// A flood of read requests on one connection trips the per-connection
-/// rate limit: the burst is served, over-limit requests get an error
-/// line (connection stays open), and writes are unaffected.
+/// rate limit: the burst is served, over-limit requests get a
+/// `rate_limited` error line (connection stays open), and writes are
+/// unaffected.
 #[test]
 fn tcp_server_enforces_read_rate_limit() {
     let engine = EngineBuilder::new().build_from_edges(ring(15)).unwrap();
@@ -266,8 +394,8 @@ fn tcp_server_enforces_read_rate_limit() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        let opts = ServeOptions { max_connections: 4, rate_limit: 3.0 };
-        serve_listener(h, listener, opts).unwrap();
+        let opts = ServeOptions::new().max_connections(4).rate_limit(3.0).workers(1);
+        serve(h, listener, opts).unwrap();
     });
 
     let mut c = TcpStream::connect(addr).unwrap();
@@ -283,8 +411,7 @@ fn tcp_server_enforces_read_rate_limit() {
         if resp.get("ok").unwrap().as_bool() == Some(true) {
             served += 1;
         } else {
-            let err = resp.get("error").unwrap().as_str().unwrap();
-            assert!(err.contains("rate limit"), "rejection names the limit: {err}");
+            assert_eq!(err_code(&resp), "rate_limited");
             limited += 1;
         }
     }
@@ -310,7 +437,7 @@ fn tcp_server_batch_write_roundtrip() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        serve_listener(h, listener, ServeOptions::default()).unwrap();
+        serve(h, listener, ServeOptions::new()).unwrap();
     });
 
     let mut c = TcpStream::connect(addr).unwrap();
@@ -333,5 +460,77 @@ fn tcp_server_batch_write_roundtrip() {
 
     send_line(&mut c, r#"{"op":"shutdown"}"#);
     assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
+
+/// Soft fd limit for this process, so the swarm test scales to the
+/// sandbox it runs in instead of dying on EMFILE.
+fn fd_budget() -> usize {
+    let limits = std::fs::read_to_string("/proc/self/limits").unwrap_or_default();
+    for line in limits.lines() {
+        if line.starts_with("Max open files") {
+            if let Some(n) = line.split_whitespace().nth(3).and_then(|t| t.parse().ok()) {
+                return n;
+            }
+        }
+    }
+    1024
+}
+
+/// A mostly-idle swarm (as many connections as the fd budget allows, up
+/// to 2000) is held open and served by at most 8 poll threads: every
+/// sampled idle client still round-trips promptly, and the server's own
+/// stats report the full swarm against the small worker set.
+#[test]
+fn idle_swarm_is_served_by_a_small_worker_set() {
+    let engine = EngineBuilder::new().build_from_edges(ring(10)).unwrap();
+    let h = ServerHandle::spawn(engine, 1024, OverflowPolicy::Block);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve(h, listener, ServeOptions::new().max_connections(4096).workers(8)).unwrap();
+    });
+
+    // 2 fds per connection (client + server end), with headroom for the
+    // process's own files.
+    let swarm = (fd_budget().saturating_sub(128) / 2).clamp(64, 2000);
+    let mut conns = Vec::with_capacity(swarm);
+    for i in 0..swarm {
+        let c = TcpStream::connect(addr)
+            .unwrap_or_else(|e| panic!("connect {i}/{swarm} failed: {e}"));
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        conns.push(c);
+    }
+
+    // Accepts are FIFO, so a round-trip on the LAST connection proves
+    // the whole swarm is registered.
+    let mut last = conns.last().unwrap().try_clone().unwrap();
+    let mut rl = BufReader::new(last.try_clone().unwrap());
+    send_line(&mut last, r#"{"op":"top","k":1}"#);
+    assert_eq!(read_json_line(&mut rl).get("ok").unwrap().as_bool(), Some(true));
+
+    // Sampled idle clients wake up and are served promptly while the
+    // rest of the swarm sits connected.
+    for i in (0..swarm).step_by(97) {
+        let mut c = conns[i].try_clone().unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        send_line(&mut c, r#"{"op":"rank","id":3}"#);
+        let resp = read_json_line(&mut r);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "idle client {i} served");
+    }
+
+    send_line(&mut last, r#"{"op":"stats"}"#);
+    let stats = read_json_line(&mut rl);
+    let server_stats = stats.get("stats").unwrap().get("server").unwrap();
+    let connected = server_stats.get("connections").unwrap().as_u64().unwrap() as usize;
+    assert!(connected >= swarm, "all {swarm} clients held open (server saw {connected})");
+    assert!(
+        server_stats.get("workers").unwrap().as_u64().unwrap() <= 8,
+        "swarm served by a small fixed poll-thread set"
+    );
+
+    send_line(&mut last, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut rl).get("ok").unwrap().as_bool(), Some(true));
+    drop(conns);
     server.join().unwrap();
 }
