@@ -1,0 +1,151 @@
+//! TRENDING FEED — standing queries driving a live "what's hot" ticker.
+//!
+//! The serving story so far was pull: clients poll `top` against the
+//! published snapshot. This example inverts it with protocol v2's push
+//! plane: a feed client registers one standing `topk` subscription and
+//! then just reads its socket — every time the engine publishes a
+//! snapshot whose top-K membership changed, a push frame arrives with
+//! exactly who entered and who left. Combined with a sliding window on
+//! the write path, "trending" falls out for free: an item stops being
+//! reinforced, its edges expire as generated `RemoveEdge` batches, its
+//! rank sinks, and the subscription reports it leaving the chart.
+//!
+//!     cargo run --release --example trending_feed
+//!
+//! Wire traffic (one JSON object per line):
+//!
+//!     → {"v":2,"id":1,"op":"subscribe","what":"topk","k":5}
+//!     ← {"v":2,"ok":true,"id":1,"sub":1}
+//!     ← {"v":2,"sub":1,"notify":{"kind":"topk","k":5,"version":7,
+//!        "entered":[40012],"left":[17]}}          (pushed, not polled)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::{serve_shared, ServeOptions, ServerHandle};
+use veilgraph::graph::generate;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::summary::params::SummaryParams;
+use veilgraph::util::json::Json;
+
+const CHART_K: usize = 5;
+/// Stories: vertices that user-interaction edges point at. A burst of
+/// edges into a story is "engagement"; the 2-second window means
+/// engagement stops counting 2s after it happened.
+const STORIES: std::ops::Range<u64> = 100_000..100_008;
+
+fn send(c: &mut TcpStream, line: &str) {
+    c.write_all(line.as_bytes()).unwrap();
+    c.write_all(b"\n").unwrap();
+}
+
+fn main() -> veilgraph::error::Result<()> {
+    // A background web graph plus eight initially-cold story vertices.
+    let mut edges = generate::copying_web(20_000, 8, 0.7, 42);
+    for s in STORIES {
+        edges.push((s, s % 20_000));
+    }
+    let engine = EngineBuilder::new()
+        .params(SummaryParams::new(0.2, 1, 0.1))
+        .build_from_edges(edges)?;
+
+    // The push plane needs nothing special server-side — subscriptions
+    // hang off the publisher. The 2-second sliding window is the only
+    // serving knob this example turns on.
+    let opts = ServeOptions::new().workers(2).window_secs(2.0);
+    let h = Arc::new(ServerHandle::spawn_with(engine, &opts));
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let server = {
+        let h2 = Arc::clone(&h);
+        let o = ServeOptions::new().workers(2).window_secs(2.0);
+        std::thread::spawn(move || serve_shared(h2, listener, o).unwrap())
+    };
+
+    // ---- the feed client: subscribe once, then only read ---------------
+    let done = Arc::new(AtomicBool::new(false));
+    let feed = {
+        let done2 = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            let sub = format!(r#"{{"v":2,"id":1,"op":"subscribe","what":"topk","k":{CHART_K}}}"#);
+            send(&mut c, &sub);
+            let t0 = Instant::now();
+            let mut line = String::new();
+            while !done2.load(Ordering::Relaxed) {
+                line.clear();
+                if r.read_line(&mut line).is_err() || line.is_empty() {
+                    continue; // timeout tick: check the stop flag
+                }
+                let frame = Json::parse(line.trim()).unwrap();
+                let Some(body) = frame.get("notify") else {
+                    continue; // the subscribe ack
+                };
+                let names = |key: &str| -> Vec<u64> {
+                    body.get(key)
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_u64)
+                        .collect()
+                };
+                println!(
+                    "[{:>6.2}s] chart v{:<4} in: {:?} out: {:?}",
+                    t0.elapsed().as_secs_f64(),
+                    body.get("version").and_then(Json::as_u64).unwrap_or(0),
+                    names("entered"),
+                    names("left"),
+                );
+            }
+        })
+    };
+
+    // ---- the world: engagement bursts, then silence ---------------------
+    // Each story gets a burst of inbound edges (readers linking to it),
+    // then the stream moves on. While a burst is inside the window the
+    // story climbs; once its edges expire it falls back off the chart —
+    // without anyone sending a RemoveEdge.
+    let mut writer = TcpStream::connect(addr)?;
+    writer.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut wr = BufReader::new(writer.try_clone()?);
+    let mut ack = String::new();
+    for (round, story) in STORIES.enumerate() {
+        let ops: Vec<String> = (0..400u64)
+            .map(|i| {
+                let reader = 200_000 + round as u64 * 400 + i;
+                format!(r#"{{"op":"add","src":{reader},"dst":{story}}}"#)
+            })
+            .collect();
+        send(&mut writer, &format!(r#"{{"op":"batch","ops":[{}]}}"#, ops.join(",")));
+        ack.clear();
+        wr.read_line(&mut ack)?;
+        // A query drives the staleness decision; the recompute runs
+        // off-thread and its publish is what fires the push frames.
+        send(&mut writer, r#"{"v":2,"id":9,"op":"query","top":5}"#);
+        ack.clear();
+        wr.read_line(&mut ack)?;
+        std::thread::sleep(Duration::from_millis(700));
+    }
+    // Keep querying with no new engagement: the window drains the bursts
+    // and the chart resets to the background graph's steady state.
+    for _ in 0..6 {
+        send(&mut writer, r#"{"v":2,"id":9,"op":"query","top":5}"#);
+        ack.clear();
+        wr.read_line(&mut ack)?;
+        std::thread::sleep(Duration::from_millis(500));
+    }
+
+    done.store(true, Ordering::Relaxed);
+    feed.join().unwrap();
+    send(&mut writer, r#"{"op":"shutdown"}"#);
+    ack.clear();
+    wr.read_line(&mut ack)?;
+    server.join().unwrap();
+    Ok(())
+}

@@ -13,9 +13,9 @@
 //!
 //! Emits `results/ingest_bench.json` and — when the serving bench ran
 //! first (CI does) — merges `results/bench_4.json` into
-//! `results/bench_6.json`, the BENCH_6 perf-trajectory artifact
-//! (superset of the BENCH_5 schema: micro + serving + saturation +
-//! ingest speedups).
+//! `results/bench_7.json`, the BENCH_7 perf-trajectory artifact
+//! (superset of the BENCH_6 schema: micro + serving + saturation +
+//! subscriptions + ingest speedups).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -178,8 +178,9 @@ fn main() {
         .expect("write ingest json");
     println!("JSON written to results/ingest_bench.json");
 
-    // BENCH_6 = BENCH_4 schema (micro + serving + saturation) + the
-    // ingest ratios — a superset of the BENCH_5 schema.
+    // BENCH_7 = BENCH_4 schema (micro + serving + saturation +
+    // subscriptions) + the ingest ratios — a superset of the BENCH_6
+    // schema.
     let mut doc = std::fs::read_to_string("results/bench_4.json")
         .or_else(|_| std::fs::read_to_string("results/micro_bench.json"))
         .ok()
@@ -206,6 +207,6 @@ fn main() {
         }
         map.insert("ingest".into(), ingest);
     }
-    std::fs::write("results/bench_6.json", doc.to_string_pretty()).expect("write bench_6 json");
-    println!("JSON written to results/bench_6.json");
+    std::fs::write("results/bench_7.json", doc.to_string_pretty()).expect("write bench_7 json");
+    println!("JSON written to results/bench_7.json");
 }

@@ -10,9 +10,13 @@
 //!   same client on an idle server (`serve_saturated_vs_idle`,
 //!   `recompute_overlap_read_p99`).
 //!
+//! * **Push plane**: publish cost with N standing subscriptions
+//!   registered, worst-case diffs where every publish flips top-K, rank
+//!   and hot-set membership (`publish_subs{1,64,1024}`).
+//!
 //! Emits `results/serving_bench.json` and — when the micro bench ran
 //! first (CI does) — merges its numbers into `results/bench_4.json`,
-//! which the ingest bench folds into the final BENCH_6 perf-trajectory
+//! which the ingest bench folds into the final BENCH_7 perf-trajectory
 //! artifact.
 
 use std::io::{BufRead, BufReader, Write};
@@ -23,6 +27,9 @@ use std::time::{Duration, Instant};
 
 use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
+use veilgraph::coordinator::serving::{RankSnapshot, SnapshotPublisher};
+use veilgraph::coordinator::subscription::{Mailbox, Subscription};
+use veilgraph::coordinator::udf::{Action, ExecStats};
 use veilgraph::graph::generate;
 use veilgraph::stream::backpressure::OverflowPolicy;
 use veilgraph::stream::event::EdgeOp;
@@ -205,6 +212,71 @@ fn saturation(addr: std::net::SocketAddr) -> (f64, f64, f64) {
     (idle_rps, sat_rps, percentile(sat_lats, 0.99))
 }
 
+const SUB_VERTICES: usize = 10_000;
+const SUB_PUBLISHES: usize = 500;
+
+/// Publish cost with `n_subs` standing subscriptions registered against
+/// the push plane. Two pre-built snapshots alternate so every publish
+/// flips top-K membership, rank crossings and hot-set membership — the
+/// worst case where every subscription has a diff to evaluate and most
+/// fire. The timing includes draining the mailboxes, which is what the
+/// poll loop pays per publish. Returns nanoseconds per publish.
+fn publish_with_subs(n_subs: usize) -> f64 {
+    let n = SUB_VERTICES;
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let snap = |version: u64, flip: bool| {
+        let ranks: Vec<f64> = (0..n)
+            .map(|i| if flip { (i + 1) as f64 / n as f64 } else { (n - i) as f64 / n as f64 })
+            .collect();
+        let hot: Vec<u64> =
+            (0..1_000).map(|i| 2 * i + u64::from(flip)).collect();
+        let mut s = RankSnapshot::new(
+            version,
+            version,
+            version,
+            Action::ComputeApproximate,
+            ExecStats::default(),
+            ids.clone(),
+            ranks,
+            128,
+            Json::Null,
+        );
+        s.set_hot_set(hot);
+        Arc::new(s)
+    };
+    let a = snap(1, false);
+    let b = snap(2, true);
+
+    let publisher = SnapshotPublisher::new();
+    let mut mailboxes = Vec::new();
+    for j in 0..n_subs {
+        let mb = Mailbox::new();
+        let spec = match j % 3 {
+            0 => Subscription::TopK { k: 10 },
+            1 => Subscription::RankThreshold { id: (j % n) as u64, tau: 0.5 },
+            _ => Subscription::HotSet { id: (j % 2_000) as u64 },
+        };
+        publisher.subscriptions().subscribe(spec, &mb);
+        mailboxes.push(mb);
+    }
+
+    // Warm up the diff path (first publish transitions from the empty
+    // snapshot, which is not the steady state being measured).
+    publisher.publish(Arc::clone(&a));
+    for mb in &mailboxes {
+        mb.drain();
+    }
+
+    let t0 = Instant::now();
+    for i in 0..SUB_PUBLISHES {
+        publisher.publish(Arc::clone(if i % 2 == 0 { &b } else { &a }));
+        for mb in &mailboxes {
+            mb.drain();
+        }
+    }
+    t0.elapsed().as_nanos() as f64 / SUB_PUBLISHES as f64
+}
+
 fn main() {
     let edges = generate::copying_web(50_000, 10, 0.7, 42);
     let engine = EngineBuilder::new()
@@ -258,6 +330,16 @@ fn main() {
     }
     server.join().unwrap();
 
+    // ---- push plane: publish cost vs registered subscriptions --------
+    println!();
+    let sub_counts = [1usize, 64, 1024];
+    let mut sub_results: Vec<(usize, f64)> = Vec::new();
+    for &n_subs in &sub_counts {
+        let ns = publish_with_subs(n_subs);
+        println!("publish_subs{n_subs:<5} {ns:>12.0} ns/publish (diff + mailbox drain)");
+        sub_results.push((n_subs, ns));
+    }
+
     // ---- machine-readable artifact -----------------------------------
     std::fs::create_dir_all("results").ok();
     let serving = Json::obj(vec![
@@ -272,6 +354,22 @@ fn main() {
                     .map(|(k, v)| (k.clone(), Json::Num(*v)))
                     .collect(),
             ),
+        ),
+        (
+            "subscriptions",
+            Json::obj(vec![
+                ("vertices", Json::Num(SUB_VERTICES as f64)),
+                ("publishes", Json::Num(SUB_PUBLISHES as f64)),
+                (
+                    "ns_per_publish",
+                    Json::Obj(
+                        sub_results
+                            .iter()
+                            .map(|&(n_subs, ns)| (format!("subs{n_subs}"), Json::Num(ns)))
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
         (
             "saturation",

@@ -174,6 +174,19 @@ pub struct RecomputeResult {
     carry_back: Option<(HashMap<VertexId, usize>, Vec<VertexId>)>,
     ids: Vec<VertexId>,
     ranks: Vec<f64>,
+    /// The hot set |K| the job selected (external ids; empty for exact
+    /// runs) — installed as the engine's hot set and published with the
+    /// snapshot so hot-set standing queries can diff membership.
+    hot_set: Vec<VertexId>,
+}
+
+impl RecomputeResult {
+    /// Whether the job actually produced a refreshed ranking (an empty
+    /// summary or failed executor corrects nothing and publishes
+    /// nothing).
+    pub fn refreshed(&self) -> bool {
+        self.refreshed
+    }
 }
 
 impl RecomputeJob {
@@ -195,6 +208,7 @@ impl RecomputeJob {
         let mut exec = ExecStats::default();
         let mut refreshed = true;
         let mut carry_back = None;
+        let mut hot_set: Vec<VertexId> = Vec::new();
         let ranks = match (self.decision, self.approx) {
             (Action::ComputeApproximate, Some(a)) => {
                 let mut scratch = SummaryScratch::new();
@@ -215,6 +229,7 @@ impl RecomputeJob {
                     None,
                     1,
                 );
+                hot_set = hot.all().into_iter().map(|i| a.graph.id(i)).collect();
                 scratch.recycle_hot(hot);
                 exec.summary_vertices = summary.num_vertices();
                 exec.summary_edges = summary.num_edges();
@@ -262,6 +277,7 @@ impl RecomputeJob {
             carry_back,
             ids: self.ids,
             ranks,
+            hot_set,
         }
     }
 }
@@ -445,6 +461,7 @@ impl EngineBuilder {
             published: SnapshotPublisher::new(),
             published_top_k: self.published_top_k,
             ranks: ckpt.ranks,
+            last_hot_set: Vec::new(),
             carry_prev_degree: HashMap::new(),
             carry_new_vertices: Vec::new(),
             query_count: ckpt.query_count,
@@ -490,6 +507,7 @@ impl EngineBuilder {
             published: SnapshotPublisher::new(),
             published_top_k: self.published_top_k,
             ranks: Vec::new(),
+            last_hot_set: Vec::new(),
             carry_prev_degree: HashMap::new(),
             carry_new_vertices: Vec::new(),
             query_count: 0,
@@ -546,6 +564,10 @@ pub struct Engine {
     published_top_k: usize,
     /// Current full rank vector (dense index order).
     ranks: Vec<f64>,
+    /// Hot set |K| from the most recent approximate run (external ids;
+    /// cleared by exact runs, which refresh every vertex). Published with
+    /// each snapshot so hot-set standing queries can diff membership.
+    last_hot_set: Vec<VertexId>,
     /// `d_{t-1}` accumulated across applies since the last recompute —
     /// if a query repeats the cached answer after applying updates, the
     /// degree baseline must survive to the next measurement point.
@@ -726,6 +748,7 @@ impl Engine {
             }
             Action::ComputeExact => {
                 exec.iterations = self.compute_exact();
+                self.last_hot_set.clear();
                 self.carry_prev_degree.clear();
                 self.carry_new_vertices.clear();
                 self.updates_since_refresh = 0;
@@ -847,6 +870,7 @@ impl Engine {
             return false;
         }
         let fence_ok = res.graph_version == self.graph.version();
+        self.last_hot_set = res.hot_set;
         if fence_ok {
             self.ranks = res.ranks;
         } else {
@@ -1048,6 +1072,9 @@ impl Engine {
             shards,
         );
         let build_secs = sw.secs();
+        let hot_ids: Vec<VertexId> =
+            hot.all().into_iter().map(|i| self.graph.id(i)).collect();
+        self.last_hot_set = hot_ids;
         self.scratch.recycle_hot(hot);
         self.metrics.time("summary_hot_set_secs", hot_secs);
         self.metrics.time("summary_build_secs", build_secs);
@@ -1101,6 +1128,7 @@ impl Engine {
             self.published_top_k,
             self.metrics.to_json(),
         );
+        snap.set_hot_set(self.last_hot_set.clone());
         if let Some(at) = carry_age_from {
             snap.published_at = at;
         } else {

@@ -6,6 +6,8 @@ pub mod adaptive;
 pub mod checkpoint;
 pub mod engine;
 pub mod policies;
+pub mod protocol;
 pub mod server;
 pub mod serving;
+pub mod subscription;
 pub mod udf;

@@ -1,0 +1,395 @@
+//! The typed wire protocol: one `Request`/`Response` enum pair shared by
+//! the TCP line protocol, library callers and the subscription plane.
+//!
+//! Before this module the protocol existed only as string plumbing
+//! inside the server's dispatch loop — every op hand-parsed its own
+//! fields and hand-assembled its own response object. Now parsing
+//! (`Envelope::parse` + `Request::parse`) and rendering
+//! ([`Response::to_json`]) are data-first: dispatch is one `match` over
+//! [`Request`], and anything that can answer a request — the readiness
+//! loop, [`handle_request`](crate::coordinator::server::handle_request),
+//! tests — speaks the same types.
+//!
+//! Two protocol versions share the wire:
+//!
+//! * **v1** (requests with `"v":1` or no `"v"` at all): strictly
+//!   in-order request/response. A pending wire query pauses the
+//!   connection's reads, so pipelined responses keep request order.
+//! * **v2** (`"v":2`): every request may carry an `"id"` (any JSON
+//!   value), every response echoes it, and responses may arrive out of
+//!   order — the readiness loop keeps reading while wire queries are in
+//!   flight. Push notifications from standing queries
+//!   ([`crate::coordinator::subscription`]) are frames of their own,
+//!   tagged `{"v":2,"sub":<id>,"notify":{...}}`, and only exist on v2
+//!   connections.
+//!
+//! Version negotiation is per-request: a v1 and a v2 client can share a
+//! server, and one client may mix versions line by line (each response
+//! echoes the version of the request it answers).
+
+use crate::coordinator::subscription::Subscription;
+use crate::coordinator::udf::Action;
+use crate::error::Error;
+use crate::graph::VertexId;
+use crate::stream::event::EdgeOp;
+use crate::util::json::Json;
+
+/// Newest protocol version this server speaks (and the version the
+/// `stats` server section reports).
+pub const WIRE_PROTOCOL_VERSION: u64 = 2;
+
+/// The legacy in-order protocol; requests without a `"v"` field parse
+/// as v1.
+pub const WIRE_PROTOCOL_V1: u64 = 1;
+
+/// Upper bound on ops per wire `batch` request. A batch occupies ONE
+/// engine-queue slot regardless of size, so without a cap a fast writer
+/// pipelining huge batches could buffer `queue_capacity x batch_size`
+/// ops before backpressure engages; with the cap, queued memory stays
+/// bounded. Clients with more ops send more batch lines.
+pub const MAX_WIRE_BATCH_OPS: usize = 4096;
+
+/// Per-request protocol framing: the negotiated version plus the
+/// client's request id (v2 only), echoed verbatim on the response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    pub version: u64,
+    pub id: Option<Json>,
+}
+
+impl Envelope {
+    /// The legacy framing (v1, no id) — what server-originated lines
+    /// that answer no particular request use.
+    pub fn v1() -> Envelope {
+        Envelope { version: WIRE_PROTOCOL_V1, id: None }
+    }
+
+    /// Negotiate the request's framing. Absent `"v"` parses as v1;
+    /// versions other than 1 and 2 (or non-numeric ones) are refused.
+    /// The `"id"` field is v2 surface and ignored on v1 requests.
+    pub fn parse(req: &Json) -> Result<Envelope, String> {
+        let version = match req.get("v") {
+            None => WIRE_PROTOCOL_V1,
+            Some(v) => match v.as_u64() {
+                Some(n) if n == WIRE_PROTOCOL_V1 || n == WIRE_PROTOCOL_VERSION => n,
+                _ => {
+                    return Err(format!(
+                        "unsupported protocol version {}; this server speaks \
+                         v{WIRE_PROTOCOL_V1} and v{WIRE_PROTOCOL_VERSION}",
+                        v.to_string_compact()
+                    ))
+                }
+            },
+        };
+        let id = if version >= WIRE_PROTOCOL_VERSION { req.get("id").cloned() } else { None };
+        Ok(Envelope { version, id })
+    }
+
+    /// True for requests under out-of-order (v2) semantics.
+    pub fn is_v2(&self) -> bool {
+        self.version >= WIRE_PROTOCOL_VERSION
+    }
+}
+
+/// Every operation a client can ask of the server, parsed from one
+/// request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// A single graph mutation (`add`/`remove`/`add_vertex`/
+    /// `remove_vertex`), registered through the bounded engine queue.
+    Write(EdgeOp),
+    /// A pre-validated all-or-nothing batch of mutations (one queue
+    /// slot).
+    Batch(Vec<EdgeOp>),
+    /// A wire query: answered from the published snapshot, recompute
+    /// scheduled off-thread per the staleness policy.
+    Query { k: usize },
+    /// Read the top-`k` ranking off the published snapshot (never
+    /// queued).
+    Top { k: usize },
+    /// Read one vertex's rank off the published snapshot.
+    Rank { id: VertexId },
+    /// Serving + engine + server gauges.
+    Stats,
+    /// Register a standing query (v2 connections only).
+    Subscribe(Subscription),
+    /// Drop a standing query owned by this connection.
+    Unsubscribe { sub: u64 },
+    /// Stop the server.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse the `"op"` surface of one request object.
+    pub fn parse(req: &Json) -> Result<Request, String> {
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+        match op {
+            "add" | "remove" | "add_vertex" | "remove_vertex" => {
+                parse_write_op(op, req).map(Request::Write)
+            }
+            "batch" => {
+                let items =
+                    req.get("ops").and_then(Json::as_arr).ok_or("batch needs an ops array")?;
+                if items.len() > MAX_WIRE_BATCH_OPS {
+                    return Err(format!(
+                        "batch of {} ops exceeds the {MAX_WIRE_BATCH_OPS}-op cap; split it",
+                        items.len()
+                    ));
+                }
+                // Validate everything before registering anything: a
+                // batch is all-or-nothing.
+                let mut ops = Vec::with_capacity(items.len());
+                for (i, item) in items.iter().enumerate() {
+                    let kind = item.get("op").and_then(Json::as_str).unwrap_or("");
+                    match parse_write_op(kind, item) {
+                        Ok(e) => ops.push(e),
+                        Err(msg) => return Err(format!("batch op {i}: {msg}; nothing registered")),
+                    }
+                }
+                Ok(Request::Batch(ops))
+            }
+            "query" => {
+                let k = req.get("top").and_then(Json::as_u64).unwrap_or(10) as usize;
+                Ok(Request::Query { k })
+            }
+            "top" => {
+                let k = req
+                    .get("k")
+                    .or_else(|| req.get("top"))
+                    .and_then(Json::as_u64)
+                    .unwrap_or(10) as usize;
+                Ok(Request::Top { k })
+            }
+            "rank" => match req.get("id").and_then(Json::as_u64) {
+                Some(id) => Ok(Request::Rank { id }),
+                None => Err("rank needs a numeric id".into()),
+            },
+            "stats" => Ok(Request::Stats),
+            "subscribe" => Subscription::parse(req).map(Request::Subscribe),
+            "unsubscribe" => match req.get("sub").and_then(Json::as_u64) {
+                Some(sub) => Ok(Request::Unsubscribe { sub }),
+                None => Err("unsubscribe needs a numeric sub id".into()),
+            },
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    /// The off-queue read ops — the one classification both the
+    /// rate-limit guard and dispatch consult, so a new read op cannot be
+    /// added to one and silently bypass the other.
+    pub fn is_read(&self) -> bool {
+        matches!(self, Request::Top { .. } | Request::Rank { .. } | Request::Stats)
+    }
+}
+
+/// Parse one write op object (shared by the single-op requests and the
+/// elements of a `batch`).
+fn parse_write_op(op: &str, req: &Json) -> Result<EdgeOp, String> {
+    match op {
+        "add" | "remove" => {
+            match (req.get("src").and_then(Json::as_u64), req.get("dst").and_then(Json::as_u64)) {
+                (Some(s), Some(d)) => {
+                    Ok(if op == "add" { EdgeOp::add(s, d) } else { EdgeOp::remove(s, d) })
+                }
+                _ => Err("add/remove need numeric src and dst".into()),
+            }
+        }
+        "add_vertex" | "remove_vertex" => match req.get("id").and_then(Json::as_u64) {
+            Some(id) => Ok(if op == "add_vertex" {
+                EdgeOp::AddVertex(id)
+            } else {
+                EdgeOp::RemoveVertex(id)
+            }),
+            None => Err("add_vertex/remove_vertex need a numeric id".into()),
+        },
+        other => Err(format!("unknown write op {other:?}")),
+    }
+}
+
+/// Every answer the server gives, rendered against the [`Envelope`] of
+/// the request it answers (so the response carries the request's
+/// protocol version and echoes its id).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// A write (or shutdown) acknowledged.
+    Ok,
+    /// A batch registered whole.
+    Registered { n: usize },
+    /// A wire query answered from the published snapshot; `action` is
+    /// the staleness decision, `scheduled` whether a recompute was
+    /// handed off-thread.
+    Query {
+        query_id: u64,
+        version: u64,
+        action: Action,
+        scheduled: bool,
+        age_secs: f64,
+        top: Vec<(VertexId, f64)>,
+    },
+    /// The `top` read.
+    Top { version: u64, query_id: u64, action: Action, top: Vec<(VertexId, f64)> },
+    /// The `rank` read (`None` = vertex unknown, rendered as null).
+    Rank { version: u64, id: VertexId, rank: Option<f64> },
+    /// The assembled `stats` sections.
+    Stats(Json),
+    /// A standing query registered.
+    Subscribed { sub: u64 },
+    /// A standing query dropped.
+    Unsubscribed { sub: u64 },
+    /// A structured error. The codes are stable protocol surface:
+    /// `rate_limited`, `conn_cap`, `bad_op`, `overload`, `shutdown`.
+    /// `extra` carries additional top-level fields (e.g. the degraded
+    /// snapshot answer alongside an `overload`).
+    Error { code: String, msg: String, extra: Vec<(String, Json)> },
+}
+
+impl Response {
+    /// A plain error with no extra payload.
+    pub fn error(code: &str, msg: &str) -> Response {
+        Response::Error { code: code.into(), msg: msg.into(), extra: Vec::new() }
+    }
+
+    /// Map an internal error onto its stable wire code.
+    pub fn from_error(e: &Error) -> Response {
+        Response::error(error_code(e), &e.to_string())
+    }
+
+    /// Render one response line: `{"v":<req version>,"ok":…,…}` plus
+    /// the echoed `"id"` when the request carried one.
+    pub fn to_json(&self, env: &Envelope) -> Json {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("v".to_string(), Json::Num(env.version as f64));
+        map.insert("ok".to_string(), Json::Bool(!matches!(self, Response::Error { .. })));
+        if let Some(id) = &env.id {
+            map.insert("id".to_string(), id.clone());
+        }
+        match self {
+            Response::Ok => {}
+            Response::Registered { n } => {
+                map.insert("registered".into(), Json::Num(*n as f64));
+            }
+            Response::Query { query_id, version, action, scheduled, age_secs, top } => {
+                map.insert("query_id".into(), Json::Num(*query_id as f64));
+                map.insert("version".into(), Json::Num(*version as f64));
+                map.insert("action".into(), Json::Str(action.to_string()));
+                map.insert("scheduled".into(), Json::Bool(*scheduled));
+                map.insert("age_secs".into(), Json::Num(*age_secs));
+                map.insert("top".into(), top_pairs(top));
+            }
+            Response::Top { version, query_id, action, top } => {
+                map.insert("version".into(), Json::Num(*version as f64));
+                map.insert("query_id".into(), Json::Num(*query_id as f64));
+                map.insert("action".into(), Json::Str(action.to_string()));
+                map.insert("top".into(), top_pairs(top));
+            }
+            Response::Rank { version, id, rank } => {
+                map.insert("version".into(), Json::Num(*version as f64));
+                map.insert("id".into(), Json::Num(*id as f64));
+                map.insert("rank".into(), rank.map(Json::Num).unwrap_or(Json::Null));
+            }
+            Response::Stats(stats) => {
+                map.insert("stats".into(), stats.clone());
+            }
+            Response::Subscribed { sub } | Response::Unsubscribed { sub } => {
+                map.insert("sub".into(), Json::Num(*sub as f64));
+            }
+            Response::Error { code, msg, extra } => {
+                map.insert(
+                    "error".into(),
+                    Json::obj(vec![
+                        ("code", Json::Str(code.clone())),
+                        ("msg", Json::Str(msg.clone())),
+                    ]),
+                );
+                for (key, value) in extra {
+                    map.insert(key.clone(), value.clone());
+                }
+            }
+        }
+        Json::Obj(map)
+    }
+}
+
+/// Map an internal error onto its stable wire code.
+pub fn error_code(e: &Error) -> &'static str {
+    match e {
+        Error::Backpressure(_) => "overload",
+        Error::Engine(msg)
+            if msg.contains("closed") || msg.contains("stopped") || msg.contains("gone") =>
+        {
+            "shutdown"
+        }
+        _ => "bad_op",
+    }
+}
+
+/// Render a top-k ranking as the wire's `[[id,score],…]` array.
+fn top_pairs(pairs: &[(u64, f64)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|&(id, score)| Json::Arr(vec![Json::Num(id as f64), Json::Num(score)]))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_negotiates_versions() {
+        let p = |s: &str| Envelope::parse(&Json::parse(s).unwrap());
+        assert_eq!(p(r#"{"op":"top"}"#), Ok(Envelope::v1()));
+        assert_eq!(p(r#"{"v":1,"op":"top"}"#), Ok(Envelope::v1()));
+        assert_eq!(
+            p(r#"{"v":2,"id":7,"op":"top"}"#),
+            Ok(Envelope { version: 2, id: Some(Json::Num(7.0)) })
+        );
+        // v1 requests have no id surface.
+        assert_eq!(p(r#"{"v":1,"id":7,"op":"top"}"#), Ok(Envelope::v1()));
+        // Ids can be any JSON value, echoed verbatim.
+        assert_eq!(
+            p(r#"{"v":2,"id":"abc","op":"top"}"#).unwrap().id,
+            Some(Json::Str("abc".into()))
+        );
+        assert!(p(r#"{"v":3,"op":"top"}"#).is_err());
+        assert!(p(r#"{"v":"two","op":"top"}"#).is_err());
+    }
+
+    #[test]
+    fn requests_parse_into_typed_ops() {
+        let p = |s: &str| Request::parse(&Json::parse(s).unwrap());
+        assert_eq!(p(r#"{"op":"add","src":1,"dst":2}"#), Ok(Request::Write(EdgeOp::add(1, 2))));
+        assert_eq!(p(r#"{"op":"query","top":3}"#), Ok(Request::Query { k: 3 }));
+        assert_eq!(p(r#"{"op":"top","k":4}"#), Ok(Request::Top { k: 4 }));
+        assert_eq!(p(r#"{"op":"top","top":4}"#), Ok(Request::Top { k: 4 }));
+        assert_eq!(p(r#"{"op":"rank","id":9}"#), Ok(Request::Rank { id: 9 }));
+        assert_eq!(p(r#"{"op":"unsubscribe","sub":3}"#), Ok(Request::Unsubscribe { sub: 3 }));
+        assert!(p(r#"{"op":"rank"}"#).is_err());
+        assert!(p(r#"{"op":"fly"}"#).is_err());
+        assert!(p(r#"{"op":"batch"}"#).is_err());
+        assert!(Request::parse(&Json::parse(r#"{"op":"top"}"#).unwrap()).unwrap().is_read());
+        assert!(!p(r#"{"op":"query"}"#).unwrap().is_read());
+    }
+
+    #[test]
+    fn responses_echo_the_request_envelope() {
+        let v2 = Envelope { version: 2, id: Some(Json::Num(42.0)) };
+        let j = Response::Ok.to_json(&v2);
+        assert_eq!(j.get("v").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(42));
+        // v1 responses carry no id key at all.
+        let j1 = Response::Ok.to_json(&Envelope::v1());
+        assert_eq!(j1.get("v").and_then(Json::as_u64), Some(1));
+        assert!(j1.get("id").is_none());
+        let err = Response::error("bad_op", "nope").to_json(&Envelope::v1());
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            err.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("bad_op")
+        );
+    }
+}

@@ -1,7 +1,7 @@
-//! Async readiness-loop server: three planes behind a versioned wire
+//! Async readiness-loop server: four planes behind a versioned wire
 //! protocol.
 //!
-//! The server splits Fig. 2's "GraphBolt module" into three planes that
+//! The server splits Fig. 2's "GraphBolt module" into four planes that
 //! overlap freely:
 //!
 //! * **Ingest plane** — producers talk to a single engine thread through
@@ -23,6 +23,12 @@
 //!   [`RankSnapshot`](crate::coordinator::serving::RankSnapshot)s;
 //!   `top`/`rank`/`stats` never enter the queue, so a recompute or batch
 //!   apply in progress never blocks a read.
+//! * **Push plane** — standing queries
+//!   ([`crate::coordinator::subscription`]) registered over wire
+//!   protocol v2 are diffed against every published snapshot; fired
+//!   notifications land in per-connection mailboxes the readiness loop
+//!   drains into the out-buffers as `{"v":2,"sub":N,"notify":{...}}`
+//!   frames.
 //!
 //! The TCP front end ([`serve`]) is a nonblocking readiness loop: the
 //! calling thread accepts, a small fixed set of poll workers each own a
@@ -30,12 +36,23 @@
 //! write buffers. Thousands of mostly-idle clients cost no threads —
 //! only a vector slot and two buffers each.
 //!
-//! All requests and responses speak wire protocol v1
-//! ([`WIRE_PROTOCOL_VERSION`]): responses carry `"v":1` and errors are
-//! structured objects `{"error":{"code":"...","msg":"..."}}` with stable
-//! codes (`rate_limited`, `conn_cap`, `bad_op`, `overload`, `shutdown`).
-//! Requests without a `"v"` field parse as v1.
+//! Requests and responses speak the typed protocol of
+//! [`crate::coordinator::protocol`]: v1 (`"v":1` or no `"v"`) keeps
+//! strict in-order request/response semantics; v2 (`"v":2`) requests may
+//! carry an `"id"` echoed on the response, and responses may arrive out
+//! of order because the loop keeps reading while wire queries are in
+//! flight. Errors are structured objects
+//! `{"error":{"code":"...","msg":"..."}}` with stable codes
+//! (`rate_limited`, `conn_cap`, `bad_op`, `overload`, `shutdown`).
+//!
+//! Two optional standing workloads ride the engine thread:
+//! [`ServeOptions::window_secs`] bounds edge lifetime by generating
+//! expiry `RemoveEdge` batches through the normal write pipeline
+//! ([`crate::stream::window`]), and [`ServeOptions::communities`] keeps
+//! streaming label propagation warm so `subscribe community` standing
+//! queries can fire.
 
+use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -44,21 +61,25 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::community::streaming::StreamingCommunities;
 use crate::coordinator::engine::{
     AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeResult,
 };
 use crate::coordinator::policies::StalenessPolicy;
+use crate::coordinator::protocol::{Envelope, Request, Response};
 use crate::coordinator::serving::{ReadKind, SnapshotReader};
+use crate::coordinator::subscription::{Mailbox, SubscriptionRegistry};
 use crate::coordinator::udf::Action;
 use crate::error::{Error, Result};
+use crate::graph::VertexId;
 use crate::stream::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::stream::event::EdgeOp;
+use crate::stream::window::SlidingWindow;
 use crate::util::json::Json;
 
-/// The wire protocol version this server speaks. Responses carry it as
-/// `"v"`; requests may omit it (legacy clients parse as v1) but a present
-/// version must match.
-pub const WIRE_PROTOCOL_VERSION: u64 = 1;
+pub use crate::coordinator::protocol::{
+    MAX_WIRE_BATCH_OPS, WIRE_PROTOCOL_V1, WIRE_PROTOCOL_VERSION,
+};
 
 /// Commands accepted by the engine thread (the ingest plane).
 enum Command {
@@ -78,6 +99,9 @@ enum Command {
     /// A finished off-thread recompute coming home to be installed.
     RecomputeDone(Box<RecomputeResult>),
     Stats(Sender<Json>),
+    /// A timer pulse from the window ticker: wakes the engine thread so
+    /// sliding-window expiry runs even when no client traffic arrives.
+    Tick,
     Shutdown,
 }
 
@@ -93,6 +117,13 @@ pub struct WireStats {
     pub overloads: AtomicU64,
     /// Whether a recompute job is currently running off-thread.
     pub recompute_in_flight: AtomicBool,
+    /// Off-thread recomputes whose version fence missed (the graph moved
+    /// while the job ran; the result was merged by id, not installed).
+    pub recompute_fence_misses: AtomicU64,
+    /// Edges expired out of the sliding window so far.
+    pub window_expired: AtomicU64,
+    /// Unexpired admits currently tracked by the sliding window.
+    pub window_tracked: AtomicU64,
     /// Last staleness decision taken by a wire query
     /// (0 = none yet, 1 = repeat-last, 2 = approximate, 3 = exact).
     last_decision: AtomicU8,
@@ -162,6 +193,9 @@ pub struct ServerHandle {
     queue: Arc<BoundedQueue<Command>>,
     worker: Option<JoinHandle<()>>,
     recompute: Option<JoinHandle<()>>,
+    /// The window ticker (only when `window_secs > 0`): pulses
+    /// [`Command::Tick`] so expiry runs on an idle server.
+    ticker: Option<JoinHandle<()>>,
     running: Arc<AtomicBool>,
     reader: SnapshotReader,
     policy: StalenessPolicy,
@@ -202,9 +236,12 @@ impl ServerHandle {
             })
             .expect("spawn recompute thread");
 
+        let window_nanos = (opts.window_secs.max(0.0) * 1e9) as u64;
+        let communities_on = opts.communities;
         let q2 = Arc::clone(&queue);
         let r2 = Arc::clone(&running);
         let w2 = Arc::clone(&wire);
+        let reader2 = reader.clone();
         let worker = std::thread::Builder::new()
             .name("veilgraph-engine".into())
             .spawn(move || {
@@ -213,12 +250,69 @@ impl ServerHandle {
                 // queries are still decided and answered (degraded) but
                 // no second job is created.
                 let mut in_flight = false;
+                // The window's logical clock: wall nanoseconds since the
+                // engine thread started.
+                let epoch = Instant::now();
+                let mut window =
+                    if window_nanos > 0 { Some(SlidingWindow::new(window_nanos)) } else { None };
+                // The second standing-analytics workload: streaming label
+                // propagation, seeded from the engine's graph and kept in
+                // step with every mutation (including window expiries).
+                let mut communities = if communities_on {
+                    let g = engine.graph();
+                    let edges: Vec<(VertexId, VertexId)> =
+                        g.edges().map(|(s, d)| (g.id(s), g.id(d))).collect();
+                    match StreamingCommunities::new(edges, engine.params(), 30) {
+                        Ok(c) => Some(c),
+                        Err(e) => {
+                            crate::log_warn!("community workload disabled: {e}");
+                            None
+                        }
+                    }
+                } else {
+                    None
+                };
+                let mut community_prev: HashMap<VertexId, u32> = match &communities {
+                    Some(c) => {
+                        c.graph().ids().iter().copied().zip(c.labels().iter().copied()).collect()
+                    }
+                    None => HashMap::new(),
+                };
+                let mut community_dirty = false;
                 while let Some(cmd) = q2.pop() {
+                    // Publish points: commands after which a fresh
+                    // snapshot may have appeared, so the community
+                    // workload refreshes its labels for standing queries.
+                    let mut publish_point = false;
                     match cmd {
-                        Command::Op(op) => engine.ingest(op),
-                        Command::Batch(ops) => engine.ingest_batch(ops),
+                        Command::Op(op) => {
+                            if let Some(w) = window.as_mut() {
+                                w.admit(&op, epoch.elapsed().as_nanos() as u64);
+                            }
+                            if let Some(c) = communities.as_mut() {
+                                c.ingest(op);
+                                community_dirty = true;
+                            }
+                            engine.ingest(op);
+                        }
+                        Command::Batch(ops) => {
+                            if window.is_some() || communities.is_some() {
+                                let now = epoch.elapsed().as_nanos() as u64;
+                                for op in &ops {
+                                    if let Some(w) = window.as_mut() {
+                                        w.admit(op, now);
+                                    }
+                                    if let Some(c) = communities.as_mut() {
+                                        c.ingest(*op);
+                                        community_dirty = true;
+                                    }
+                                }
+                            }
+                            engine.ingest_batch(ops);
+                        }
                         Command::Query(reply) => {
                             let _ = reply.send(engine.query());
+                            publish_point = true;
                         }
                         Command::WireQuery(reply) => {
                             let pressure = q2.len() as f64 / cap as f64;
@@ -239,16 +333,67 @@ impl ServerHandle {
                                     let _ = reply.send(Err(e));
                                 }
                             }
+                            publish_point = true;
                         }
                         Command::RecomputeDone(res) => {
                             in_flight = false;
                             w2.recompute_in_flight.store(false, Ordering::SeqCst);
-                            engine.finish_recompute(*res);
+                            let refreshed = res.refreshed();
+                            if !engine.finish_recompute(*res) && refreshed {
+                                w2.recompute_fence_misses.fetch_add(1, Ordering::SeqCst);
+                            }
+                            publish_point = true;
                         }
                         Command::Stats(reply) => {
                             let _ = reply.send(engine.metrics().to_json());
                         }
+                        Command::Tick => {}
                         Command::Shutdown => break,
+                    }
+                    // Sliding-window expiry runs after every command
+                    // (ticks included): expired edges leave as one
+                    // ordinary RemoveEdge batch through the coalescer.
+                    if let Some(w) = window.as_mut() {
+                        let expired = w.expire_due(epoch.elapsed().as_nanos() as u64);
+                        if !expired.is_empty() {
+                            w2.window_expired.fetch_add(expired.len() as u64, Ordering::SeqCst);
+                            if let Some(c) = communities.as_mut() {
+                                for op in &expired {
+                                    c.ingest(*op);
+                                }
+                                community_dirty = true;
+                            }
+                            engine.ingest_batch(expired);
+                        }
+                        w2.window_tracked.store(w.tracked() as u64, Ordering::SeqCst);
+                    }
+                    // Community standing queries: refresh labels at
+                    // publish points, but only when someone is listening
+                    // and the graph moved since the last refresh.
+                    if publish_point
+                        && community_dirty
+                        && reader2.subscriptions().has_community_subs()
+                    {
+                        if let Some(c) = communities.as_mut() {
+                            match c.query(Action::ComputeApproximate) {
+                                Ok(res) => {
+                                    let g = c.graph();
+                                    reader2.subscriptions().notify_community(res.query_id, |id| {
+                                        let now =
+                                            g.index(id).map(|i| res.labels[i as usize]);
+                                        (community_prev.get(&id).copied(), now)
+                                    });
+                                    community_prev = g
+                                        .ids()
+                                        .iter()
+                                        .copied()
+                                        .zip(res.labels.iter().copied())
+                                        .collect();
+                                }
+                                Err(e) => crate::log_warn!("community refresh failed: {e}"),
+                            }
+                            community_dirty = false;
+                        }
                     }
                 }
                 // Dropping the job sender unblocks the recompute worker's
@@ -259,10 +404,32 @@ impl ServerHandle {
             })
             .expect("spawn engine thread");
 
+        // The ticker keeps expiry moving on an idle server; force_push
+        // fails once the queue closes, which is its exit signal.
+        let ticker = if window_nanos > 0 {
+            let q3 = Arc::clone(&queue);
+            let interval =
+                Duration::from_nanos((window_nanos / 4).clamp(10_000_000, 250_000_000));
+            Some(
+                std::thread::Builder::new()
+                    .name("veilgraph-window".into())
+                    .spawn(move || loop {
+                        std::thread::sleep(interval);
+                        if q3.force_push(Command::Tick).is_err() {
+                            break;
+                        }
+                    })
+                    .expect("spawn window ticker"),
+            )
+        } else {
+            None
+        };
+
         Self {
             queue,
             worker: Some(worker),
             recompute: Some(recompute),
+            ticker,
             running,
             reader,
             policy,
@@ -347,6 +514,12 @@ impl ServerHandle {
         &self.wire
     }
 
+    /// The standing-query registry: register, drop and inspect
+    /// subscriptions evaluated at every snapshot publish.
+    pub fn subscriptions(&self) -> &SubscriptionRegistry {
+        self.reader.subscriptions()
+    }
+
     /// Test hook: park the recompute worker before its next job (readers
     /// and writers must stay live while a recompute is pinned).
     pub fn hold_recompute(&self) {
@@ -363,6 +536,7 @@ impl ServerHandle {
     /// last escalation decision.
     pub fn server_stats_json(&self) -> Json {
         let qs = self.queue.stats();
+        let subs = self.reader.subscriptions();
         let last = match self.wire.last_decision() {
             Some(a) => Json::Str(a.to_string()),
             None => Json::Null,
@@ -382,6 +556,21 @@ impl ServerHandle {
                 "recompute_in_flight",
                 Json::Bool(self.wire.recompute_in_flight.load(Ordering::SeqCst)),
             ),
+            (
+                "recompute_fence_misses",
+                Json::Num(self.wire.recompute_fence_misses.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "window_expired",
+                Json::Num(self.wire.window_expired.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "window_tracked",
+                Json::Num(self.wire.window_tracked.load(Ordering::SeqCst) as f64),
+            ),
+            ("subscriptions", Json::Num(subs.len() as f64)),
+            ("notifications_sent", Json::Num(subs.notifications_sent() as f64)),
+            ("notifications_dropped", Json::Num(subs.notifications_dropped() as f64)),
             ("policy", self.policy.to_json()),
             ("last_decision", last),
         ])
@@ -414,6 +603,9 @@ impl ServerHandle {
         if let Some(h) = self.recompute.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.ticker.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -423,13 +615,6 @@ impl Drop for ServerHandle {
         self.join();
     }
 }
-
-/// Upper bound on ops per wire `batch` request. A batch occupies ONE
-/// engine-queue slot regardless of size, so without a cap a fast writer
-/// pipelining huge batches could buffer `queue_capacity x batch_size`
-/// ops before backpressure engages; with the cap, queued memory stays
-/// bounded. Clients with more ops send more batch lines.
-pub const MAX_WIRE_BATCH_OPS: usize = 4096;
 
 /// Upper bound on one request line's bytes, enforced WHILE buffering, so
 /// an oversized line is rejected after accumulating at most this much —
@@ -474,133 +659,66 @@ impl RateLimiter {
 }
 
 // ---------------------------------------------------------------------------
-// Wire protocol v1
+// Wire dispatch (typed protocol; see crate::coordinator::protocol)
 // ---------------------------------------------------------------------------
 
-/// A v1 success response: `{"v":1,"ok":true,…fields}`.
-fn ok_response(fields: Vec<(&str, Json)>) -> Json {
-    let mut all = vec![
-        ("v", Json::Num(WIRE_PROTOCOL_VERSION as f64)),
-        ("ok", Json::Bool(true)),
-    ];
-    all.extend(fields);
-    Json::obj(all)
-}
-
-/// A v1 error response:
-/// `{"v":1,"ok":false,"error":{"code":"…","msg":"…"}}`. The codes are
-/// stable protocol surface: `rate_limited`, `conn_cap`, `bad_op`,
+/// A v1-framed error line for server-originated failures that answer no
+/// particular request (`conn_cap` rejects, oversized lines). The codes
+/// are stable protocol surface: `rate_limited`, `conn_cap`, `bad_op`,
 /// `overload`, `shutdown`.
 pub fn err_response(code: &str, msg: &str) -> Json {
-    err_response_with(code, msg, Vec::new())
+    Response::error(code, msg).to_json(&Envelope::v1())
 }
 
-/// [`err_response`] carrying extra top-level fields (e.g. the degraded
-/// snapshot answer alongside an `overload` error).
-fn err_response_with(code: &str, msg: &str, extra: Vec<(&str, Json)>) -> Json {
-    let mut all = vec![
-        ("v", Json::Num(WIRE_PROTOCOL_VERSION as f64)),
-        ("ok", Json::Bool(false)),
-        (
-            "error",
-            Json::obj(vec![
-                ("code", Json::Str(code.into())),
-                ("msg", Json::Str(msg.into())),
-            ]),
-        ),
-    ];
-    all.extend(extra);
-    Json::obj(all)
+/// Per-connection subscription state threaded into [`dispatch`]: the
+/// mailbox push frames are delivered through, plus the subscription ids
+/// this connection owns (dropped automatically when it closes).
+struct ConnSubs {
+    mailbox: Arc<Mailbox>,
+    ids: Vec<u64>,
 }
 
-/// Map an internal error onto its stable wire code.
-fn error_code(e: &Error) -> &'static str {
-    match e {
-        Error::Backpressure(_) => "overload",
-        Error::Engine(msg)
-            if msg.contains("closed") || msg.contains("stopped") || msg.contains("gone") =>
-        {
-            "shutdown"
-        }
-        _ => "bad_op",
-    }
-}
-
-fn error_json(e: &Error) -> Json {
-    err_response(error_code(e), &e.to_string())
-}
-
-/// Render a top-k ranking as the wire's `[[id,score],…]` array.
-fn top_pairs(pairs: Vec<(u64, f64)>) -> Json {
-    Json::Arr(
-        pairs
-            .into_iter()
-            .map(|(id, score)| Json::Arr(vec![Json::Num(id as f64), Json::Num(score)]))
-            .collect(),
-    )
-}
-
-/// The off-queue read ops — the one classification both the rate-limit
-/// guard and the dispatch below consult, so a new read op cannot be
-/// added to one and silently bypass the other.
-fn is_read_op(op: &str) -> bool {
-    matches!(op, "top" | "rank" | "stats")
-}
-
-/// Parse one write op object (shared by the single-op requests and the
-/// elements of a `batch`).
-fn parse_write_op(op: &str, req: &Json) -> std::result::Result<EdgeOp, String> {
-    match op {
-        "add" | "remove" => {
-            match (req.get("src").and_then(Json::as_u64), req.get("dst").and_then(Json::as_u64)) {
-                (Some(s), Some(d)) => {
-                    Ok(if op == "add" { EdgeOp::add(s, d) } else { EdgeOp::remove(s, d) })
-                }
-                _ => Err("add/remove need numeric src and dst".into()),
-            }
-        }
-        "add_vertex" | "remove_vertex" => match req.get("id").and_then(Json::as_u64) {
-            Some(id) => Ok(if op == "add_vertex" {
-                EdgeOp::AddVertex(id)
-            } else {
-                EdgeOp::RemoveVertex(id)
-            }),
-            None => Err("add_vertex/remove_vertex need a numeric id".into()),
-        },
-        other => Err(format!("unknown write op {other:?}")),
-    }
+/// A wire query in flight: the receiver its answer arrives on, the
+/// requested `k`, and the envelope the response renders under (v2
+/// answers echo the request id and may interleave with later responses).
+struct PendingQuery {
+    rx: Receiver<Result<AsyncQueryResult>>,
+    k: usize,
+    env: Envelope,
 }
 
 /// Outcome of dispatching one request line: either a finished response
 /// (plus whether it asked the server to shut down), or a wire query in
-/// flight whose response will arrive on the receiver.
+/// flight.
 enum Reply {
     Done(Json, bool),
-    Pending(Receiver<Result<AsyncQueryResult>>, usize),
+    Pending(PendingQuery),
 }
 
 /// Render a completed wire query. The answer always serves the published
 /// snapshot; `action` reports the staleness decision and `scheduled`
 /// whether a recompute was handed off-thread.
-fn wire_query_response(res: Result<AsyncQueryResult>, k: usize) -> Json {
-    match res {
+fn wire_query_response(res: Result<AsyncQueryResult>, k: usize, env: &Envelope) -> Json {
+    let resp = match res {
         Ok(aq) => {
             let snap = &aq.snapshot;
-            ok_response(vec![
-                ("query_id", Json::Num(aq.query_id as f64)),
-                ("version", Json::Num(snap.version as f64)),
-                ("action", Json::Str(aq.decision.to_string())),
-                ("scheduled", Json::Bool(aq.scheduled)),
-                ("age_secs", Json::Num(snap.age_secs())),
-                ("top", top_pairs(snap.top(k))),
-            ])
+            Response::Query {
+                query_id: aq.query_id,
+                version: snap.version,
+                action: aq.decision,
+                scheduled: aq.scheduled,
+                age_secs: snap.age_secs(),
+                top: snap.top(k),
+            }
         }
-        Err(e) => error_json(&e),
-    }
+        Err(e) => Response::from_error(&e),
+    };
+    resp.to_json(env)
 }
 
-/// JSON line protocol (v1): one request object per line, one response per
-/// line. Responses carry `"v":1`; errors are
+/// JSON line protocol: one request object per line, one response per
+/// line. Responses echo the request's version (`"v":1` by default,
+/// `"v":2` when asked) and its `"id"` (v2 only); errors are
 /// `{"error":{"code":…,"msg":…}}`.
 ///
 /// Write-path requests (non-blocking; a full queue answers `overload`):
@@ -626,6 +744,17 @@ fn wire_query_response(res: Result<AsyncQueryResult>, k: usize) -> Json {
 /// * `{"op":"rank","id":7}` → `{"v":1,"ok":true,"version":…,"rank":…}`
 /// * `{"op":"stats"}`       → `{"v":1,"ok":true,"stats":{"serving":…,
 ///   "ingest":…,"engine":…,"server":…}}`
+///
+/// v2 surface (requests carrying `"v":2`): any request may add an
+/// `"id"`, echoed verbatim; pipelined v2 queries are answered out of
+/// order as they complete (v1 queries still pause the connection's
+/// reads); and standing queries become available on wire connections:
+/// * `{"v":2,"op":"subscribe","what":"topk","k":10}` → `{"v":2,"ok":true,
+///   "sub":N}`, then push frames `{"v":2,"sub":N,"notify":{…}}` whenever
+///   the watched condition fires at a snapshot publish. `what` is one of
+///   `topk`, `rank` (`id` + `tau`), `hotset` (`id`), `community` (`id`;
+///   needs the `--communities` workload).
+/// * `{"v":2,"op":"unsubscribe","sub":N}` → `{"v":2,"ok":true,"sub":N}`.
 pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
     handle_request_limited(handle, line, None)
 }
@@ -633,6 +762,7 @@ pub fn handle_request(handle: &ServerHandle, line: &str) -> (Json, bool) {
 /// [`handle_request`] with an optional per-connection read limiter (what
 /// the poll workers use; `None` = unlimited). Blocks on an in-flight
 /// wire query — the readiness loop itself uses [`dispatch`] and polls.
+/// Subscriptions need a wire connection's mailbox and are rejected here.
 pub fn handle_request_limited(
     handle: &ServerHandle,
     line: &str,
@@ -640,146 +770,123 @@ pub fn handle_request_limited(
 ) -> (Json, bool) {
     let mut off = RateLimiter::new(0.0);
     let l = limiter.as_deref_mut().unwrap_or(&mut off);
-    match dispatch(handle, line, l) {
+    match dispatch(handle, line, l, None) {
         Reply::Done(resp, stop) => (resp, stop),
-        Reply::Pending(rx, k) => {
+        Reply::Pending(pq) => {
             let res =
-                rx.recv().unwrap_or_else(|_| Err(Error::Engine("engine thread gone".into())));
-            (wire_query_response(res, k), false)
+                pq.rx.recv().unwrap_or_else(|_| Err(Error::Engine("engine thread gone".into())));
+            (wire_query_response(res, pq.k, &pq.env), false)
         }
     }
 }
 
 /// Dispatch one request line without ever blocking: writes go through
-/// `try_push`, queries return [`Reply::Pending`], reads hit the snapshot.
-fn dispatch(handle: &ServerHandle, line: &str, limiter: &mut RateLimiter) -> Reply {
-    let bad = |msg: String| Reply::Done(err_response("bad_op", &msg), false);
+/// `try_push`, queries return [`Reply::Pending`], reads hit the
+/// snapshot, subscriptions register against `conn`'s mailbox.
+fn dispatch(
+    handle: &ServerHandle,
+    line: &str,
+    limiter: &mut RateLimiter,
+    mut conn: Option<&mut ConnSubs>,
+) -> Reply {
     let req = match Json::parse(line) {
         Ok(v) => v,
-        Err(e) => return bad(e.to_string()),
-    };
-    // Version negotiation: absent = v1 (legacy clients), present must
-    // match.
-    if let Some(v) = req.get("v") {
-        if v.as_u64() != Some(WIRE_PROTOCOL_VERSION) {
-            return bad(format!(
-                "unsupported protocol version {}; this server speaks v{WIRE_PROTOCOL_VERSION}",
-                v.to_string_compact()
-            ));
+        Err(e) => {
+            return Reply::Done(
+                Response::error("bad_op", &e.to_string()).to_json(&Envelope::v1()),
+                false,
+            )
         }
-    }
-    let op = req.get("op").and_then(Json::as_str).unwrap_or("");
-    if is_read_op(op) && !limiter.admit() {
-        return Reply::Done(err_response("rate_limited", "read rate limit exceeded"), false);
+    };
+    let env = match Envelope::parse(&req) {
+        Ok(env) => env,
+        Err(msg) => {
+            return Reply::Done(Response::error("bad_op", &msg).to_json(&Envelope::v1()), false)
+        }
+    };
+    let done = |resp: Response, env: &Envelope| Reply::Done(resp.to_json(env), false);
+    let request = match Request::parse(&req) {
+        Ok(r) => r,
+        Err(msg) => return done(Response::error("bad_op", &msg), &env),
+    };
+    if request.is_read() && !limiter.admit() {
+        return done(Response::error("rate_limited", "read rate limit exceeded"), &env);
     }
     // Count overloads where they surface, not at every error site.
-    let wire_err = |e: Error| {
+    let wire_err = |e: Error, env: &Envelope| {
         if matches!(e, Error::Backpressure(_)) {
             handle.wire.overloads.fetch_add(1, Ordering::SeqCst);
         }
-        Reply::Done(error_json(&e), false)
+        Reply::Done(Response::from_error(&e).to_json(env), false)
     };
-    match op {
-        "add" | "remove" | "add_vertex" | "remove_vertex" => match parse_write_op(op, &req) {
-            Ok(e) => match handle.try_ingest(e) {
-                Ok(()) => Reply::Done(ok_response(Vec::new()), false),
-                Err(e) => wire_err(e),
-            },
-            Err(msg) => bad(msg),
+    match request {
+        Request::Write(op) => match handle.try_ingest(op) {
+            Ok(()) => done(Response::Ok, &env),
+            Err(e) => wire_err(e, &env),
         },
-        "batch" => {
-            let items = match req.get("ops").and_then(Json::as_arr) {
-                Some(items) => items,
-                None => return bad("batch needs an ops array".into()),
-            };
-            if items.len() > MAX_WIRE_BATCH_OPS {
-                return bad(format!(
-                    "batch of {} ops exceeds the {MAX_WIRE_BATCH_OPS}-op cap; split it",
-                    items.len()
-                ));
-            }
-            // Validate everything before registering anything: a batch is
-            // all-or-nothing.
-            let mut ops = Vec::with_capacity(items.len());
-            for (i, item) in items.iter().enumerate() {
-                let kind = item.get("op").and_then(Json::as_str).unwrap_or("");
-                match parse_write_op(kind, item) {
-                    Ok(e) => ops.push(e),
-                    Err(msg) => return bad(format!("batch op {i}: {msg}; nothing registered")),
-                }
-            }
+        Request::Batch(ops) => {
             let n = ops.len();
             match handle.try_ingest_batch(ops) {
-                Ok(()) => Reply::Done(
-                    ok_response(vec![("registered", Json::Num(n as f64))]),
-                    false,
-                ),
-                Err(e) => wire_err(e),
+                Ok(()) => done(Response::Registered { n }, &env),
+                Err(e) => wire_err(e, &env),
             }
         }
-        "query" => {
-            let k = req.get("top").and_then(Json::as_u64).unwrap_or(10) as usize;
-            match handle.query_wire() {
-                Ok(rx) => Reply::Pending(rx, k),
-                Err(Error::Backpressure(_)) => {
-                    handle.wire.overloads.fetch_add(1, Ordering::SeqCst);
-                    // Degrade instead of queueing: answer from the
-                    // published snapshot, flagged as overload. The reply
-                    // is stale but internally consistent.
-                    let snap = handle.reader.latest_for(ReadKind::Top);
-                    Reply::Done(
-                        err_response_with(
-                            "overload",
-                            "engine queue at capacity; serving the published snapshot",
-                            vec![
-                                ("version", Json::Num(snap.version as f64)),
-                                ("query_id", Json::Num(snap.query_id as f64)),
-                                ("action", Json::Str(snap.action.to_string())),
-                                ("age_secs", Json::Num(snap.age_secs())),
-                                ("top", top_pairs(snap.top(k))),
-                            ],
-                        ),
-                        false,
-                    )
-                }
-                Err(e) => wire_err(e),
+        Request::Query { k } => match handle.query_wire() {
+            Ok(rx) => Reply::Pending(PendingQuery { rx, k, env }),
+            Err(Error::Backpressure(_)) => {
+                handle.wire.overloads.fetch_add(1, Ordering::SeqCst);
+                // Degrade instead of queueing: answer from the published
+                // snapshot, flagged as overload. The reply is stale but
+                // internally consistent.
+                let snap = handle.reader.latest_for(ReadKind::Top);
+                done(
+                    Response::Error {
+                        code: "overload".into(),
+                        msg: "engine queue at capacity; serving the published snapshot".into(),
+                        extra: vec![
+                            ("version".into(), Json::Num(snap.version as f64)),
+                            ("query_id".into(), Json::Num(snap.query_id as f64)),
+                            ("action".into(), Json::Str(snap.action.to_string())),
+                            ("age_secs".into(), Json::Num(snap.age_secs())),
+                            (
+                                "top".into(),
+                                Json::Arr(
+                                    snap.top(k)
+                                        .into_iter()
+                                        .map(|(id, score)| {
+                                            Json::Arr(vec![
+                                                Json::Num(id as f64),
+                                                Json::Num(score),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ],
+                    },
+                    &env,
+                )
             }
-        }
+            Err(e) => wire_err(e, &env),
+        },
         // Read-path fast path: answered from the published snapshot.
-        "top" => {
-            let k = req
-                .get("k")
-                .or_else(|| req.get("top"))
-                .and_then(Json::as_u64)
-                .unwrap_or(10) as usize;
+        Request::Top { k } => {
             let snap = handle.reader.latest_for(ReadKind::Top);
-            Reply::Done(
-                ok_response(vec![
-                    ("version", Json::Num(snap.version as f64)),
-                    ("query_id", Json::Num(snap.query_id as f64)),
-                    ("action", Json::Str(snap.action.to_string())),
-                    ("top", top_pairs(snap.top(k))),
-                ]),
-                false,
+            done(
+                Response::Top {
+                    version: snap.version,
+                    query_id: snap.query_id,
+                    action: snap.action,
+                    top: snap.top(k),
+                },
+                &env,
             )
         }
-        "rank" => {
-            let id = match req.get("id").and_then(Json::as_u64) {
-                Some(id) => id,
-                None => return bad("rank needs a numeric id".into()),
-            };
+        Request::Rank { id } => {
             let snap = handle.reader.latest_for(ReadKind::Rank);
-            let rank = snap.rank_of(id).map(Json::Num).unwrap_or(Json::Null);
-            Reply::Done(
-                ok_response(vec![
-                    ("version", Json::Num(snap.version as f64)),
-                    ("id", Json::Num(id as f64)),
-                    ("rank", rank),
-                ]),
-                false,
-            )
+            done(Response::Rank { version: snap.version, id, rank: snap.rank_of(id) }, &env)
         }
-        "stats" => {
+        Request::Stats => {
             let stats = match handle.reader.stats_json() {
                 Json::Obj(mut fields) => {
                     fields.insert("server".into(), handle.server_stats_json());
@@ -787,10 +894,45 @@ fn dispatch(handle: &ServerHandle, line: &str, limiter: &mut RateLimiter) -> Rep
                 }
                 other => other,
             };
-            Reply::Done(ok_response(vec![("stats", stats)]), false)
+            done(Response::Stats(stats), &env)
         }
-        "shutdown" => Reply::Done(ok_response(Vec::new()), true),
-        other => bad(format!("unknown op {other:?}")),
+        Request::Subscribe(spec) => {
+            if !env.is_v2() {
+                return done(
+                    Response::error("bad_op", "subscriptions require protocol v2 (send \"v\":2)"),
+                    &env,
+                );
+            }
+            match conn.as_deref_mut() {
+                Some(subs) => {
+                    let sub = handle.reader.subscriptions().subscribe(spec, &subs.mailbox);
+                    subs.ids.push(sub);
+                    done(Response::Subscribed { sub }, &env)
+                }
+                None => {
+                    done(Response::error("bad_op", "subscriptions need a wire connection"), &env)
+                }
+            }
+        }
+        Request::Unsubscribe { sub } => {
+            // Connections may drop only their own subscriptions.
+            let owned = match conn.as_deref_mut() {
+                Some(subs) => match subs.ids.iter().position(|&x| x == sub) {
+                    Some(i) => {
+                        subs.ids.swap_remove(i);
+                        true
+                    }
+                    None => false,
+                },
+                None => false,
+            };
+            if owned && handle.reader.subscriptions().unsubscribe(sub) {
+                done(Response::Unsubscribed { sub }, &env)
+            } else {
+                done(Response::error("bad_op", "unknown subscription id"), &env)
+            }
+        }
+        Request::Shutdown => Reply::Done(Response::Ok.to_json(&env), true),
     }
 }
 
@@ -809,6 +951,8 @@ pub struct ServeOptions {
     queue_capacity: usize,
     overflow: OverflowPolicy,
     policy: StalenessPolicy,
+    window_secs: f64,
+    communities: bool,
 }
 
 impl Default for ServeOptions {
@@ -820,13 +964,16 @@ impl Default for ServeOptions {
             queue_capacity: 1 << 16,
             overflow: OverflowPolicy::Block,
             policy: StalenessPolicy::default(),
+            window_secs: 0.0,
+            communities: false,
         }
     }
 }
 
 impl ServeOptions {
     /// Defaults: 4096 connections, no rate limit, 4 poll workers, a
-    /// 65536-slot `Block` queue, default staleness policy.
+    /// 65536-slot `Block` queue, default staleness policy, no sliding
+    /// window, no community workload.
     pub fn new() -> Self {
         Self::default()
     }
@@ -872,6 +1019,21 @@ impl ServeOptions {
         self.policy = p;
         self
     }
+
+    /// Sliding-window width in seconds: edges older than this are
+    /// expired as server-generated `RemoveEdge` batches through the
+    /// ordinary write pipeline. 0 (the default) keeps every edge.
+    pub fn window_secs(mut self, secs: f64) -> Self {
+        self.window_secs = secs.max(0.0);
+        self
+    }
+
+    /// Run streaming label propagation beside PageRank as a second
+    /// standing-analytics workload, feeding `community` subscriptions.
+    pub fn communities(mut self, on: bool) -> Self {
+        self.communities = on;
+        self
+    }
 }
 
 /// Serve the line protocol over TCP until a client sends `shutdown`
@@ -886,6 +1048,11 @@ pub fn serve_tcp_with(handle: ServerHandle, addr: &str, opts: ServeOptions) -> R
     serve(handle, listener, opts)
 }
 
+/// In-flight v2 queries one connection may pipeline before the server
+/// stops reading from it (per-connection flow control; v1 connections
+/// pause at one).
+pub const MAX_PIPELINED_QUERIES: usize = 1024;
+
 /// One connection owned by a poll worker: the socket plus its read/write
 /// buffers and per-connection protocol state. Idle connections cost
 /// exactly this struct — no thread.
@@ -896,9 +1063,16 @@ struct Conn {
     /// Response bytes not yet written to the socket.
     out: Vec<u8>,
     limiter: RateLimiter,
-    /// An in-flight wire query: no further requests are read until it
-    /// answers, so pipelined responses keep request order.
-    pending: Option<(Receiver<Result<AsyncQueryResult>>, usize)>,
+    /// An in-flight v1 wire query: no further requests are read until it
+    /// answers, so v1 pipelined responses keep request order.
+    pending: Option<PendingQuery>,
+    /// In-flight v2 wire queries: reads continue and each answer is
+    /// written (with its echoed id) as it completes, in completion
+    /// order.
+    pending_v2: Vec<PendingQuery>,
+    /// Subscriptions owned by this connection and the mailbox their push
+    /// frames arrive through.
+    subs: ConnSubs,
     /// Close once `out` drains (EOF, protocol violation, or shutdown).
     close_after_flush: bool,
 }
@@ -952,9 +1126,9 @@ fn reject_oversize(c: &mut Conn) {
     c.close_after_flush = true;
 }
 
-/// Advance one connection: flush pending output, complete an in-flight
-/// query, read what the socket has, dispatch complete lines, flush
-/// again. Never blocks.
+/// Advance one connection: flush pending output, drain push frames,
+/// complete in-flight queries, read what the socket has, dispatch
+/// complete lines, flush again. Never blocks.
 fn tick_conn(
     handle: &ServerHandle,
     c: &mut Conn,
@@ -967,21 +1141,53 @@ fn tick_conn(
         Flush::Progress => progressed = true,
         Flush::Idle => {}
     }
-    // An in-flight wire query: deliver its answer when ready; until then
-    // this connection reads nothing more (natural per-connection flow
-    // control, and responses stay in request order).
-    if let Some((rx, k)) = c.pending.take() {
-        match rx.try_recv() {
+    // Push plane: subscription notifications queued since the last tick.
+    if !c.subs.mailbox.is_empty() {
+        for frame in c.subs.mailbox.drain() {
+            queue_line(c, &frame);
+        }
+        progressed = true;
+    }
+    // In-flight v2 queries answer out of order, as they complete; each
+    // response carries its echoed id so the client can match them up.
+    let mut i = 0;
+    while i < c.pending_v2.len() {
+        match c.pending_v2[i].rx.try_recv() {
             Ok(res) => {
-                queue_line(c, &wire_query_response(res, k));
+                let pq = c.pending_v2.swap_remove(i);
+                queue_line(c, &wire_query_response(res, pq.k, &pq.env));
+                progressed = true;
+            }
+            Err(TryRecvError::Empty) => i += 1,
+            Err(TryRecvError::Disconnected) => {
+                let pq = c.pending_v2.swap_remove(i);
+                queue_line(
+                    c,
+                    &Response::error("shutdown", "engine thread gone").to_json(&pq.env),
+                );
+                c.close_after_flush = true;
+            }
+        }
+    }
+    // An in-flight v1 wire query: deliver its answer when ready; until
+    // then this connection reads nothing more (natural per-connection
+    // flow control, and v1 responses stay in request order).
+    if let Some(pq) = c.pending.take() {
+        match pq.rx.try_recv() {
+            Ok(res) => {
+                queue_line(c, &wire_query_response(res, pq.k, &pq.env));
                 progressed = true;
             }
             Err(TryRecvError::Empty) => {
-                c.pending = Some((rx, k));
+                c.pending = Some(pq);
+                let _ = flush_out(c);
                 return if progressed { Tick::Progress } else { Tick::Idle };
             }
             Err(TryRecvError::Disconnected) => {
-                queue_line(c, &err_response("shutdown", "engine thread gone"));
+                queue_line(
+                    c,
+                    &Response::error("shutdown", "engine thread gone").to_json(&pq.env),
+                );
                 c.close_after_flush = true;
             }
         }
@@ -1007,6 +1213,9 @@ fn tick_conn(
         Err(_) => return Tick::Close,
     }
     loop {
+        if c.pending_v2.len() >= MAX_PIPELINED_QUERIES {
+            break;
+        }
         match c.buf.iter().position(|&b| b == b'\n') {
             Some(pos) if pos > MAX_WIRE_LINE_BYTES => {
                 reject_oversize(c);
@@ -1026,7 +1235,7 @@ fn tick_conn(
                     continue;
                 }
                 progressed = true;
-                match dispatch(handle, text, &mut c.limiter) {
+                match dispatch(handle, text, &mut c.limiter, Some(&mut c.subs)) {
                     Reply::Done(resp, shutdown) => {
                         queue_line(c, &resp);
                         if shutdown {
@@ -1035,8 +1244,17 @@ fn tick_conn(
                             break;
                         }
                     }
-                    Reply::Pending(rx, k) => {
-                        c.pending = Some((rx, k));
+                    // A v2 query joins the pipelined set and reading
+                    // continues (up to the cap); a v1 query pauses
+                    // reads until it answers.
+                    Reply::Pending(pq) if pq.env.is_v2() => {
+                        c.pending_v2.push(pq);
+                        if c.pending_v2.len() >= MAX_PIPELINED_QUERIES {
+                            break;
+                        }
+                    }
+                    Reply::Pending(pq) => {
+                        c.pending = Some(pq);
                         break;
                     }
                 }
@@ -1078,6 +1296,8 @@ fn poll_worker(
                     out: Vec::new(),
                     limiter: RateLimiter::new(rate_limit),
                     pending: None,
+                    pending_v2: Vec::new(),
+                    subs: ConnSubs { mailbox: Mailbox::new(), ids: Vec::new() },
                     close_after_flush: false,
                 });
             }
@@ -1087,7 +1307,14 @@ fn poll_worker(
         while i < conns.len() {
             match tick_conn(&handle, &mut conns[i], &mut scratch, &stop) {
                 Tick::Close => {
-                    drop(conns.swap_remove(i));
+                    let c = conns.swap_remove(i);
+                    // A closing connection takes its subscriptions with
+                    // it; the registry also self-prunes via the weak
+                    // mailbox, this just frees the slots eagerly.
+                    for id in &c.subs.ids {
+                        handle.reader.subscriptions().unsubscribe(*id);
+                    }
+                    drop(c);
                     handle.wire.connections.fetch_sub(1, Ordering::SeqCst);
                 }
                 Tick::Progress => {
@@ -1108,6 +1335,9 @@ fn poll_worker(
         if !c.out.is_empty() {
             let _ = c.stream.write_all(&c.out);
         }
+        for id in &c.subs.ids {
+            handle.reader.subscriptions().unsubscribe(*id);
+        }
         handle.wire.connections.fetch_sub(1, Ordering::SeqCst);
     }
 }
@@ -1120,12 +1350,22 @@ fn poll_worker(
 /// clients are served by this small fixed thread set even while a
 /// recompute runs. Returns once a client sends `shutdown`.
 pub fn serve(handle: ServerHandle, listener: TcpListener, opts: ServeOptions) -> Result<()> {
+    serve_shared(Arc::new(handle), listener, opts)
+}
+
+/// [`serve`] over a pre-shared handle, for callers (tests, embedding
+/// hosts) that keep their own `Arc<ServerHandle>` to drive the engine
+/// directly while the front end runs.
+pub fn serve_shared(
+    handle: Arc<ServerHandle>,
+    listener: TcpListener,
+    opts: ServeOptions,
+) -> Result<()> {
     let local = listener.local_addr()?;
     crate::log_info!("listening on {local}");
     listener.set_nonblocking(true)?;
     let workers = opts.workers.max(1);
     let max_connections = opts.max_connections.max(1);
-    let handle = Arc::new(handle);
     handle.wire.workers.store(workers, Ordering::SeqCst);
     let stop = Arc::new(AtomicBool::new(false));
     let mut injects: Vec<Arc<Mutex<Vec<TcpStream>>>> = Vec::with_capacity(workers);
@@ -1257,7 +1497,7 @@ mod tests {
         let (resp, stop) = handle_request(&h, r#"{"op":"add","src":3,"dst":9}"#);
         assert!(!stop);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
-        assert_eq!(resp.get("v").unwrap().as_u64(), Some(WIRE_PROTOCOL_VERSION));
+        assert_eq!(resp.get("v").unwrap().as_u64(), Some(WIRE_PROTOCOL_V1));
         let (resp, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
@@ -1334,7 +1574,7 @@ mod tests {
         assert!(serving.get("reads_top").unwrap().as_u64().unwrap() >= 1);
         // The server section rides along with the snapshot stats.
         let server = resp.get("stats").unwrap().get("server").unwrap();
-        assert_eq!(server.get("protocol_version").unwrap().as_u64(), Some(1));
+        assert_eq!(server.get("protocol_version").unwrap().as_u64(), Some(2));
         assert!(server.get("queue_capacity").unwrap().as_u64().unwrap() >= 1);
         assert!(server.get("policy").unwrap().get("approx_after_updates").is_some());
         // engine saw zero extra commands: all the ops hit the snapshot
@@ -1363,15 +1603,43 @@ mod tests {
     #[test]
     fn versioned_requests_negotiate() {
         let h = handle();
-        // Explicit v1 is accepted.
+        // Explicit v1 is accepted and answered in v1 framing.
         let (resp, _) = handle_request(&h, r#"{"v":1,"op":"top","k":2}"#);
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("v").unwrap().as_u64(), Some(1));
+        // v2 is accepted and echoes the request id.
+        let (resp, _) = handle_request(&h, r#"{"v":2,"id":17,"op":"top","k":2}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("v").unwrap().as_u64(), Some(2));
+        assert_eq!(resp.get("id").unwrap().as_u64(), Some(17));
+        // v1 requests have no id surface.
+        let (resp, _) = handle_request(&h, r#"{"v":1,"id":17,"op":"top","k":2}"#);
+        assert!(resp.get("id").is_none());
         // Future versions are refused with a stable code.
-        let (resp, _) = handle_request(&h, r#"{"v":2,"op":"top","k":2}"#);
+        let (resp, _) = handle_request(&h, r#"{"v":3,"op":"top","k":2}"#);
         assert_eq!(err_code(&resp), "bad_op");
         assert!(err_msg(&resp).contains("version"));
         // Non-numeric versions too.
         let (resp, _) = handle_request(&h, r#"{"v":"two","op":"top"}"#);
+        assert_eq!(err_code(&resp), "bad_op");
+        h.shutdown();
+    }
+
+    #[test]
+    fn subscriptions_need_v2_and_a_wire_connection() {
+        let h = handle();
+        // v1 subscribe: refused before anything registers.
+        let (resp, _) = handle_request(&h, r#"{"op":"subscribe","what":"topk","k":3}"#);
+        assert_eq!(err_code(&resp), "bad_op");
+        assert!(err_msg(&resp).contains("v2"), "{}", err_msg(&resp));
+        // v2 subscribe without a wire connection (handle_request passes
+        // no mailbox): also refused.
+        let (resp, _) = handle_request(&h, r#"{"v":2,"op":"subscribe","what":"topk","k":3}"#);
+        assert_eq!(err_code(&resp), "bad_op");
+        assert!(err_msg(&resp).contains("connection"), "{}", err_msg(&resp));
+        assert!(h.reader().subscriptions().is_empty());
+        // Unknown unsubscribe ids are errors, not silent successes.
+        let (resp, _) = handle_request(&h, r#"{"v":2,"op":"unsubscribe","sub":99}"#);
         assert_eq!(err_code(&resp), "bad_op");
         h.shutdown();
     }
@@ -1400,15 +1668,21 @@ mod tests {
             .workers(0)
             .queue_capacity(0)
             .rate_limit(2.5)
-            .overflow(OverflowPolicy::Reject);
+            .overflow(OverflowPolicy::Reject)
+            .window_secs(-3.0)
+            .communities(true);
         assert_eq!(o.max_connections, 1);
         assert_eq!(o.workers, 1);
         assert_eq!(o.queue_capacity, 1);
         assert_eq!(o.rate_limit, 2.5);
         assert_eq!(o.overflow, OverflowPolicy::Reject);
+        assert_eq!(o.window_secs, 0.0, "negative windows clamp to unbounded");
+        assert!(o.communities);
         let d = ServeOptions::default();
         assert_eq!(d.max_connections, 4096);
         assert_eq!(d.workers, 4);
+        assert_eq!(d.window_secs, 0.0);
+        assert!(!d.communities);
     }
 
     #[test]

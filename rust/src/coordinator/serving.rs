@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
+use crate::coordinator::subscription::SubscriptionRegistry;
 use crate::coordinator::udf::{Action, ExecStats};
 use crate::graph::VertexId;
 use crate::metrics::ranking::top_k_indices;
@@ -69,6 +70,11 @@ pub struct RankSnapshot {
     top_index: Vec<u32>,
     /// Dense positions sorted by vertex id — O(log n) `rank_of` lookups.
     by_id: Vec<u32>,
+    /// The engine's hot set |K| at the recompute that produced this
+    /// ranking, as sorted external ids (empty after an exact run, where
+    /// no summary was built). Lets hot-set standing queries diff
+    /// membership between consecutive snapshots in O(log |K|).
+    hot: Vec<VertexId>,
 }
 
 impl RankSnapshot {
@@ -86,6 +92,7 @@ impl RankSnapshot {
             published_at: Instant::now(),
             top_index: Vec::new(),
             by_id: Vec::new(),
+            hot: Vec::new(),
         }
     }
 
@@ -120,7 +127,27 @@ impl RankSnapshot {
             published_at: Instant::now(),
             top_index,
             by_id,
+            hot: Vec::new(),
         }
+    }
+
+    /// Attach the hot-set membership the producing recompute used
+    /// (called by the engine before publishing; sorted + deduped here so
+    /// [`Self::is_hot`] can binary-search).
+    pub fn set_hot_set(&mut self, mut hot: Vec<VertexId>) {
+        hot.sort_unstable();
+        hot.dedup();
+        self.hot = hot;
+    }
+
+    /// The hot set |K| behind this snapshot, as sorted external ids.
+    pub fn hot_set(&self) -> &[VertexId] {
+        &self.hot
+    }
+
+    /// Whether `id` was in the hot set at this snapshot's recompute.
+    pub fn is_hot(&self, id: VertexId) -> bool {
+        self.hot.binary_search(&id).is_ok()
     }
 
     /// Number of ranked vertices.
@@ -236,6 +263,8 @@ struct Shared {
     reads_rank: AtomicU64,
     reads_stats: AtomicU64,
     ingest: IngestGauges,
+    /// Standing queries (the push plane), evaluated on every publish.
+    subs: SubscriptionRegistry,
 }
 
 /// Writer-side handle: owned by the engine, swaps the published snapshot
@@ -260,6 +289,7 @@ impl SnapshotPublisher {
                 reads_rank: AtomicU64::new(0),
                 reads_stats: AtomicU64::new(0),
                 ingest: IngestGauges::default(),
+                subs: SubscriptionRegistry::default(),
             }),
         }
     }
@@ -271,9 +301,22 @@ impl SnapshotPublisher {
     }
 
     /// Atomically replace the published snapshot (an `Arc` store; readers
-    /// holding the previous snapshot keep it alive until they drop it).
+    /// holding the previous snapshot keep it alive until they drop it),
+    /// then evaluate every standing query against the transition. The
+    /// diff runs *outside* the lock — readers are never blocked on
+    /// notification fan-out — and costs one atomic load when nothing is
+    /// subscribed.
     pub fn publish(&self, snapshot: Arc<RankSnapshot>) {
-        *self.shared.latest.write().unwrap() = snapshot;
+        let prev = {
+            let mut slot = self.shared.latest.write().unwrap();
+            std::mem::replace(&mut *slot, Arc::clone(&snapshot))
+        };
+        self.shared.subs.notify_publish(&prev, &snapshot);
+    }
+
+    /// The standing-query registry this publisher notifies.
+    pub fn subscriptions(&self) -> &SubscriptionRegistry {
+        &self.shared.subs
     }
 
     /// The latest published snapshot.
@@ -298,6 +341,13 @@ impl SnapshotReader {
     /// The latest published snapshot.
     pub fn latest(&self) -> Arc<RankSnapshot> {
         Arc::clone(&self.shared.latest.read().unwrap())
+    }
+
+    /// The standing-query registry shared with the publish path. Wire
+    /// connections register subscriptions here; the engine's publishes
+    /// evaluate them.
+    pub fn subscriptions(&self) -> &SubscriptionRegistry {
+        &self.shared.subs
     }
 
     /// The latest published snapshot, counted as a served read of `kind`

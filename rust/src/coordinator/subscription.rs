@@ -1,0 +1,542 @@
+//! Standing queries: the push plane.
+//!
+//! Everything before this module is request/response — a client polls
+//! and the server answers from the latest published [`RankSnapshot`].
+//! A *standing* query inverts that: the client registers interest once
+//! ("notify me when the top-K set changes", "when vertex v's rank
+//! crosses τ", "when v enters or leaves the hot set", "when v changes
+//! community") and the server pushes a notification whenever the
+//! condition fires.
+//!
+//! Evaluation rides the existing publish path: every time the engine
+//! publishes a new snapshot, [`SubscriptionRegistry::notify_publish`]
+//! diffs it against the previous one, per subscription. The diff is
+//! cheap by construction — top-K membership comes from the snapshot's
+//! precomputed deterministic top-K index (O(K log n)), rank lookups are
+//! O(log n) binary searches, and hot-set membership is a binary search
+//! over the sorted hot-vertex list the engine now attaches at publish
+//! time. Community-change subscriptions are driven separately by the
+//! server's streaming label-propagation workload via
+//! [`SubscriptionRegistry::notify_community`].
+//!
+//! Delivery is decoupled from evaluation: each wire connection owns a
+//! bounded [`Mailbox`]; the registry holds only a [`Weak`] reference to
+//! it, so a vanished connection never blocks the publish path and is
+//! pruned on the next notify sweep. The readiness loop drains mailboxes
+//! into per-connection out-buffers and writes lines tagged
+//! `{"v":2,"sub":<id>,"notify":{...}}` — push frames exist only in wire
+//! protocol v2, where responses already carry ids and may interleave.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::coordinator::serving::RankSnapshot;
+use crate::graph::VertexId;
+use crate::util::json::Json;
+
+/// Per-connection notification queue depth. A subscriber that stops
+/// reading keeps only the newest `MAX_MAILBOX_DEPTH` notifications —
+/// old ones are dropped (counted) rather than growing without bound or
+/// back-pressuring the publish path.
+pub const MAX_MAILBOX_DEPTH: usize = 1024;
+
+/// A bounded, drop-oldest queue of rendered notification lines, shared
+/// between the publish path (producer) and one wire connection's
+/// readiness loop (consumer).
+pub struct Mailbox {
+    inner: Mutex<MailboxInner>,
+}
+
+struct MailboxInner {
+    queue: VecDeque<Json>,
+    dropped: u64,
+}
+
+impl Mailbox {
+    /// A fresh mailbox. Returns an `Arc` because the registry keeps a
+    /// `Weak` handle to the same allocation.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<Mailbox> {
+        Arc::new(Mailbox {
+            inner: Mutex::new(MailboxInner { queue: VecDeque::new(), dropped: 0 }),
+        })
+    }
+
+    /// Enqueue a rendered notification; returns `true` if an old entry
+    /// was evicted to make room.
+    fn push(&self, line: Json) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let mut evicted = false;
+        if g.queue.len() >= MAX_MAILBOX_DEPTH {
+            g.queue.pop_front();
+            g.dropped += 1;
+            evicted = true;
+        }
+        g.queue.push_back(line);
+        evicted
+    }
+
+    /// Take every queued notification, oldest first.
+    pub fn drain(&self) -> Vec<Json> {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.drain(..).collect()
+    }
+
+    /// Queued (undelivered) notifications.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Notifications evicted because the consumer fell behind.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+}
+
+/// What a standing query watches. Parsed from the wire `subscribe` op.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Subscription {
+    /// Fire when the top-`k` vertex *set* changes between consecutive
+    /// published snapshots (entries/exits, not internal reordering).
+    TopK { k: usize },
+    /// Fire when `id`'s rank crosses `tau` in either direction.
+    RankThreshold { id: VertexId, tau: f64 },
+    /// Fire when `id` enters or leaves the engine's hot set |K|.
+    HotSet { id: VertexId },
+    /// Fire when `id`'s community label changes (streaming label
+    /// propagation; requires the server's `--communities` workload).
+    Community { id: VertexId },
+}
+
+impl Subscription {
+    /// Parse the wire shape: `{"op":"subscribe","what":"topk","k":10}`,
+    /// `{"what":"rank","id":7,"tau":0.002}`, `{"what":"hotset","id":7}`
+    /// or `{"what":"community","id":7}`.
+    pub fn parse(req: &Json) -> Result<Subscription, String> {
+        let what = req.get("what").and_then(Json::as_str).unwrap_or("");
+        match what {
+            "topk" => {
+                let k = req.get("k").and_then(Json::as_u64).unwrap_or(10) as usize;
+                if k == 0 {
+                    return Err("subscribe topk needs k >= 1".into());
+                }
+                Ok(Subscription::TopK { k })
+            }
+            "rank" => {
+                let id = req
+                    .get("id")
+                    .and_then(Json::as_u64)
+                    .ok_or("subscribe rank needs a numeric id")?;
+                let tau = req
+                    .get("tau")
+                    .and_then(Json::as_f64)
+                    .ok_or("subscribe rank needs a numeric tau")?;
+                Ok(Subscription::RankThreshold { id, tau })
+            }
+            "hotset" => {
+                let id = req
+                    .get("id")
+                    .and_then(Json::as_u64)
+                    .ok_or("subscribe hotset needs a numeric id")?;
+                Ok(Subscription::HotSet { id })
+            }
+            "community" => {
+                let id = req
+                    .get("id")
+                    .and_then(Json::as_u64)
+                    .ok_or("subscribe community needs a numeric id")?;
+                Ok(Subscription::Community { id })
+            }
+            other => Err(format!(
+                "unknown subscription {other:?} (expected topk, rank, hotset or community)"
+            )),
+        }
+    }
+}
+
+/// A fired standing query, ready to render as a push frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Notification {
+    /// The top-`k` set changed: `entered` in new-rank order, `left` in
+    /// old-rank order.
+    TopK { k: usize, version: u64, entered: Vec<VertexId>, left: Vec<VertexId> },
+    /// `id`'s rank crossed `tau`; `up` is the crossing direction and
+    /// `rank` the new value.
+    RankThreshold { id: VertexId, tau: f64, rank: f64, up: bool, version: u64 },
+    /// `id` entered (`entered == true`) or left the hot set.
+    HotSet { id: VertexId, entered: bool, version: u64 },
+    /// `id` moved to community `label`.
+    Community { id: VertexId, label: u32, version: u64 },
+}
+
+impl Notification {
+    /// The published-snapshot (or community query) version the event
+    /// was observed at.
+    pub fn version(&self) -> u64 {
+        match self {
+            Notification::TopK { version, .. }
+            | Notification::RankThreshold { version, .. }
+            | Notification::HotSet { version, .. }
+            | Notification::Community { version, .. } => *version,
+        }
+    }
+
+    /// Render the v2 push frame `{"v":2,"sub":N,"notify":{...}}`.
+    pub fn to_json(&self, sub: u64) -> Json {
+        let ids = |xs: &[VertexId]| Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect());
+        let body = match self {
+            Notification::TopK { k, version, entered, left } => Json::obj(vec![
+                ("kind", Json::Str("topk".into())),
+                ("k", Json::Num(*k as f64)),
+                ("version", Json::Num(*version as f64)),
+                ("entered", ids(entered)),
+                ("left", ids(left)),
+            ]),
+            Notification::RankThreshold { id, tau, rank, up, version } => Json::obj(vec![
+                ("kind", Json::Str("rank".into())),
+                ("id", Json::Num(*id as f64)),
+                ("tau", Json::Num(*tau)),
+                ("rank", Json::Num(*rank)),
+                ("direction", Json::Str(if *up { "up" } else { "down" }.into())),
+                ("version", Json::Num(*version as f64)),
+            ]),
+            Notification::HotSet { id, entered, version } => Json::obj(vec![
+                ("kind", Json::Str("hotset".into())),
+                ("id", Json::Num(*id as f64)),
+                ("event", Json::Str(if *entered { "entered" } else { "left" }.into())),
+                ("version", Json::Num(*version as f64)),
+            ]),
+            Notification::Community { id, label, version } => Json::obj(vec![
+                ("kind", Json::Str("community".into())),
+                ("id", Json::Num(*id as f64)),
+                ("label", Json::Num(*label as f64)),
+                ("version", Json::Num(*version as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("v", Json::Num(2.0)),
+            ("sub", Json::Num(sub as f64)),
+            ("notify", body),
+        ])
+    }
+}
+
+/// Diff one snapshot-driven subscription between two consecutive
+/// published snapshots. Pure — the property tests compare this against
+/// brute-force recomputation. `Community` subscriptions are not
+/// snapshot-driven and never fire here.
+pub fn diff(spec: &Subscription, prev: &RankSnapshot, next: &RankSnapshot) -> Option<Notification> {
+    match *spec {
+        Subscription::TopK { k } => {
+            let before = prev.top_ids(k);
+            let after = next.top_ids(k);
+            let entered: Vec<VertexId> =
+                after.iter().copied().filter(|v| !before.contains(v)).collect();
+            let left: Vec<VertexId> =
+                before.iter().copied().filter(|v| !after.contains(v)).collect();
+            if entered.is_empty() && left.is_empty() {
+                None
+            } else {
+                Some(Notification::TopK { k, version: next.version, entered, left })
+            }
+        }
+        Subscription::RankThreshold { id, tau } => {
+            let was_above = prev.rank_of(id).unwrap_or(0.0) > tau;
+            let rank = next.rank_of(id).unwrap_or(0.0);
+            let is_above = rank > tau;
+            if was_above == is_above {
+                None
+            } else {
+                Some(Notification::RankThreshold {
+                    id,
+                    tau,
+                    rank,
+                    up: is_above,
+                    version: next.version,
+                })
+            }
+        }
+        Subscription::HotSet { id } => {
+            let was_hot = prev.is_hot(id);
+            let is_hot = next.is_hot(id);
+            if was_hot == is_hot {
+                None
+            } else {
+                Some(Notification::HotSet { id, entered: is_hot, version: next.version })
+            }
+        }
+        Subscription::Community { .. } => None,
+    }
+}
+
+struct ActiveSub {
+    id: u64,
+    spec: Subscription,
+    mailbox: Weak<Mailbox>,
+}
+
+/// All live standing queries, shared between the publish path (which
+/// evaluates them) and the wire server (which registers them and drains
+/// the mailboxes). One registry per engine, owned by the serving
+/// `Shared` state so every `SnapshotReader` clone sees the same one.
+#[derive(Default)]
+pub struct SubscriptionRegistry {
+    subs: Mutex<Vec<ActiveSub>>,
+    next_id: AtomicU64,
+    /// Live count mirrored outside the lock so the publish fast path
+    /// (no subscribers — the overwhelmingly common case) is one load.
+    live: AtomicUsize,
+    sent: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SubscriptionRegistry {
+    /// Register a standing query delivering into `mailbox`; returns the
+    /// subscription id echoed in every push frame.
+    pub fn subscribe(&self, spec: Subscription, mailbox: &Arc<Mailbox>) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut g = self.subs.lock().unwrap();
+        g.push(ActiveSub { id, spec, mailbox: Arc::downgrade(mailbox) });
+        self.live.store(g.len(), Ordering::SeqCst);
+        id
+    }
+
+    /// Drop a subscription; `false` if the id was unknown.
+    pub fn unsubscribe(&self, id: u64) -> bool {
+        let mut g = self.subs.lock().unwrap();
+        let before = g.len();
+        g.retain(|s| s.id != id);
+        let removed = g.len() != before;
+        self.live.store(g.len(), Ordering::SeqCst);
+        removed
+    }
+
+    /// Live subscriptions (including ones whose connection has vanished
+    /// but has not been pruned yet).
+    pub fn len(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// True when nothing is subscribed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total notifications enqueued since startup.
+    pub fn notifications_sent(&self) -> u64 {
+        self.sent.load(Ordering::SeqCst)
+    }
+
+    /// Notifications evicted from full mailboxes (slow consumers).
+    pub fn notifications_dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+
+    /// Whether any community-change subscription is live — the server
+    /// skips the label-propagation refresh entirely when none is.
+    pub fn has_community_subs(&self) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        let g = self.subs.lock().unwrap();
+        g.iter().any(|s| matches!(s.spec, Subscription::Community { .. }))
+    }
+
+    /// Evaluate every snapshot-driven subscription against a publish
+    /// transition. Runs on the engine thread right after the new
+    /// snapshot is swapped in; cost is O(subs · K log n), zero when no
+    /// one is subscribed.
+    pub fn notify_publish(&self, prev: &RankSnapshot, next: &RankSnapshot) {
+        if self.live.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut g = self.subs.lock().unwrap();
+        g.retain(|s| {
+            let Some(mb) = s.mailbox.upgrade() else { return false };
+            if let Some(event) = diff(&s.spec, prev, next) {
+                if mb.push(event.to_json(s.id)) {
+                    self.dropped.fetch_add(1, Ordering::SeqCst);
+                }
+                self.sent.fetch_add(1, Ordering::SeqCst);
+            }
+            true
+        });
+        self.live.store(g.len(), Ordering::SeqCst);
+    }
+
+    /// Evaluate community-change subscriptions after a label-propagation
+    /// refresh. `labels(id)` returns the (previous, current) label of a
+    /// vertex; an event fires when both exist and differ, or when the
+    /// vertex gained its first label.
+    pub fn notify_community(
+        &self,
+        version: u64,
+        labels: impl Fn(VertexId) -> (Option<u32>, Option<u32>),
+    ) {
+        if self.live.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut g = self.subs.lock().unwrap();
+        g.retain(|s| {
+            let Some(mb) = s.mailbox.upgrade() else { return false };
+            if let Subscription::Community { id } = s.spec {
+                let (before, now) = labels(id);
+                if let Some(label) = now {
+                    if before != now {
+                        let event = Notification::Community { id, label, version };
+                        if mb.push(event.to_json(s.id)) {
+                            self.dropped.fetch_add(1, Ordering::SeqCst);
+                        }
+                        self.sent.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            true
+        });
+        self.live.store(g.len(), Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::udf::{Action, ExecStats};
+
+    fn snap(version: u64, ids: Vec<u64>, ranks: Vec<f64>, hot: Vec<u64>) -> RankSnapshot {
+        let mut s = RankSnapshot::new(
+            version,
+            version,
+            version,
+            Action::ComputeExact,
+            ExecStats::default(),
+            ids,
+            ranks,
+            8,
+            Json::Null,
+        );
+        s.set_hot_set(hot);
+        s
+    }
+
+    #[test]
+    fn topk_diff_reports_entries_and_exits() {
+        let a = snap(1, vec![0, 1, 2, 3], vec![0.4, 0.3, 0.2, 0.1], vec![]);
+        let b = snap(2, vec![0, 1, 2, 3], vec![0.1, 0.3, 0.2, 0.4], vec![]);
+        let got = diff(&Subscription::TopK { k: 2 }, &a, &b).unwrap();
+        assert_eq!(
+            got,
+            Notification::TopK { k: 2, version: 2, entered: vec![3], left: vec![0] }
+        );
+        assert!(diff(&Subscription::TopK { k: 4 }, &a, &b).is_none());
+    }
+
+    #[test]
+    fn threshold_fires_on_crossings_only() {
+        let a = snap(1, vec![0, 1], vec![0.1, 0.9], vec![]);
+        let b = snap(2, vec![0, 1], vec![0.6, 0.9], vec![]);
+        let spec = Subscription::RankThreshold { id: 0, tau: 0.5 };
+        let got = diff(&spec, &a, &b).unwrap();
+        assert_eq!(
+            got,
+            Notification::RankThreshold { id: 0, tau: 0.5, rank: 0.6, up: true, version: 2 }
+        );
+        // No crossing: both sides above.
+        assert!(diff(&spec, &b, &b).is_none());
+        // Unknown vertex counts as rank 0 (below any positive tau).
+        assert!(diff(&Subscription::RankThreshold { id: 9, tau: 0.5 }, &a, &b).is_none());
+    }
+
+    #[test]
+    fn hot_set_diff_uses_published_membership() {
+        let a = snap(1, vec![0, 1], vec![0.5, 0.5], vec![1]);
+        let b = snap(2, vec![0, 1], vec![0.5, 0.5], vec![0]);
+        assert_eq!(
+            diff(&Subscription::HotSet { id: 0 }, &a, &b).unwrap(),
+            Notification::HotSet { id: 0, entered: true, version: 2 }
+        );
+        assert_eq!(
+            diff(&Subscription::HotSet { id: 1 }, &a, &b).unwrap(),
+            Notification::HotSet { id: 1, entered: false, version: 2 }
+        );
+    }
+
+    #[test]
+    fn registry_routes_to_mailboxes_and_prunes_dead_ones() {
+        let reg = SubscriptionRegistry::default();
+        let mb = Mailbox::new();
+        let sub = reg.subscribe(Subscription::TopK { k: 1 }, &mb);
+        let gone = Mailbox::new();
+        reg.subscribe(Subscription::TopK { k: 1 }, &gone);
+        drop(gone);
+        assert_eq!(reg.len(), 2);
+
+        let a = snap(1, vec![0, 1], vec![0.9, 0.1], vec![]);
+        let b = snap(2, vec![0, 1], vec![0.1, 0.9], vec![]);
+        reg.notify_publish(&a, &b);
+        // Dead mailbox pruned, live one got exactly one frame.
+        assert_eq!(reg.len(), 1);
+        let lines = mb.drain();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].get("sub").and_then(Json::as_u64), Some(sub));
+        assert_eq!(lines[0].get("v").and_then(Json::as_u64), Some(2));
+        let body = lines[0].get("notify").unwrap();
+        assert_eq!(body.get("kind").and_then(Json::as_str), Some("topk"));
+        assert_eq!(reg.notifications_sent(), 1);
+
+        assert!(reg.unsubscribe(sub));
+        assert!(!reg.unsubscribe(sub));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn mailbox_drops_oldest_beyond_depth() {
+        let mb = Mailbox::new();
+        for i in 0..(MAX_MAILBOX_DEPTH + 3) {
+            mb.push(Json::Num(i as f64));
+        }
+        assert_eq!(mb.len(), MAX_MAILBOX_DEPTH);
+        assert_eq!(mb.dropped(), 3);
+        let lines = mb.drain();
+        assert_eq!(lines[0], Json::Num(3.0));
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn community_notifications_fire_on_label_changes() {
+        let reg = SubscriptionRegistry::default();
+        let mb = Mailbox::new();
+        let sub = reg.subscribe(Subscription::Community { id: 4 }, &mb);
+        assert!(reg.has_community_subs());
+        reg.notify_community(7, |id| if id == 4 { (Some(1), Some(2)) } else { (None, None) });
+        reg.notify_community(8, |_| (Some(2), Some(2)));
+        let lines = mb.drain();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].get("sub").and_then(Json::as_u64), Some(sub));
+        let body = lines[0].get("notify").unwrap();
+        assert_eq!(body.get("kind").and_then(Json::as_str), Some("community"));
+        assert_eq!(body.get("label").and_then(Json::as_u64), Some(2));
+        assert_eq!(body.get("version").and_then(Json::as_u64), Some(7));
+    }
+
+    #[test]
+    fn parse_covers_every_subscription_shape() {
+        let p = |s: &str| Subscription::parse(&Json::parse(s).unwrap());
+        assert_eq!(p(r#"{"what":"topk","k":3}"#), Ok(Subscription::TopK { k: 3 }));
+        assert_eq!(p(r#"{"what":"topk"}"#), Ok(Subscription::TopK { k: 10 }));
+        assert_eq!(
+            p(r#"{"what":"rank","id":7,"tau":0.25}"#),
+            Ok(Subscription::RankThreshold { id: 7, tau: 0.25 })
+        );
+        assert_eq!(p(r#"{"what":"hotset","id":7}"#), Ok(Subscription::HotSet { id: 7 }));
+        assert_eq!(p(r#"{"what":"community","id":7}"#), Ok(Subscription::Community { id: 7 }));
+        assert!(p(r#"{"what":"rank","id":7}"#).is_err());
+        assert!(p(r#"{"what":"nope"}"#).is_err());
+        assert!(p(r#"{"op":"subscribe"}"#).is_err());
+    }
+}

@@ -53,7 +53,11 @@ pub mod util;
 /// Convenience re-exports of the most commonly used public items.
 pub mod prelude {
     pub use crate::coordinator::engine::{Engine, EngineBuilder, QueryResult};
+    pub use crate::coordinator::protocol::{Envelope, Request, Response};
     pub use crate::coordinator::serving::{RankSnapshot, SnapshotReader};
+    pub use crate::coordinator::subscription::{
+        Mailbox, Notification, Subscription, SubscriptionRegistry,
+    };
     pub use crate::coordinator::udf::{Action, UdfSuite};
     pub use crate::error::{Error, Result};
     pub use crate::graph::csr::Csr;
@@ -61,5 +65,6 @@ pub mod prelude {
     pub use crate::pagerank::power::{PageRank, PageRankConfig};
     pub use crate::runtime::executor::{Backend, SummarizedExecutor};
     pub use crate::stream::event::{EdgeOp, UpdateEvent};
+    pub use crate::stream::window::SlidingWindow;
     pub use crate::summary::params::SummaryParams;
 }

@@ -99,6 +99,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("max-conns", "simultaneous TCP client connections", Some("4096"))
         .opt("rate-limit", "per-connection read ops/sec (0 = unlimited)", Some("0"))
         .opt("top-k", "top entries pre-ranked per published snapshot", Some("128"))
+        .opt(
+            "window",
+            "sliding window in seconds: edges expire via generated RemoveEdge \
+             batches (0 = unbounded)",
+            Some("0"),
+        )
+        .flag("communities", "run streaming label propagation as a second standing workload")
         .flag("no-xla", "force the sparse executor")
         .flag("help", "show usage");
     let p = cmd.parse(args)?;
@@ -131,7 +138,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .overflow(p.req_parse::<OverflowPolicy>("overflow")?)
         .workers(p.req_parse::<usize>("workers")?)
         .max_connections(p.req_parse::<usize>("max-conns")?)
-        .rate_limit(p.req_parse::<f64>("rate-limit")?);
+        .rate_limit(p.req_parse::<f64>("rate-limit")?)
+        .window_secs(p.req_parse::<f64>("window")?)
+        .communities(p.flag("communities"));
     if let Some(policy) = p.get_parse::<StalenessPolicy>("policy")? {
         opts = opts.policy(policy);
     }

@@ -8,3 +8,4 @@ pub mod event;
 pub mod source;
 pub mod synthetic;
 pub mod trace;
+pub mod window;

@@ -1,0 +1,231 @@
+//! Sliding-window edge retention: expiry as generated `RemoveEdge` ops.
+//!
+//! A windowed streaming graph keeps only the edges admitted in the last
+//! `W` time units. Rather than teaching the graph (or the coalescer, or
+//! the recompute planes) about time, the window is a *stage in front of
+//! the write pipeline*: it watches admitted ops, remembers when each
+//! edge will fall out of the window, and on every tick emits ordinary
+//! [`EdgeOp::RemoveEdge`] ops for the expired ones. Those flow through
+//! the existing `UpdateBuffer` coalescer like any client write — so
+//! expiry is batched, replay-exact, and staleness-accounted for free,
+//! and the rest of the system stays timestamp-free.
+//!
+//! Time is a caller-supplied logical clock in nanoseconds (the server
+//! passes wall time since its epoch; tests pass small integers), which
+//! keeps the semantics deterministic and property-testable.
+//!
+//! Re-adds and explicit removes interact through a per-edge
+//! `(count, stamp)` state: each admit increments `count` and enqueues an
+//! expiry entry stamped with the current `stamp`; an explicit client
+//! `RemoveEdge` (or `RemoveVertex` touching the edge) bumps `stamp` and
+//! zeroes `count`, instantly orphaning every queued entry for that edge
+//! so a stale expiry can never remove a re-added edge. Generations come
+//! from one monotone counter, so a recycled map slot can never collide
+//! with an old entry's stamp. An expiry fires an actual `RemoveEdge`
+//! only on the `count` 1 → 0 transition — the edge's *last* unexpired
+//! admit leaving the window.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::graph::VertexId;
+use crate::stream::event::EdgeOp;
+
+/// One queued expiry: the admit that created it falls out of the window
+/// at `deadline`.
+struct Entry {
+    deadline: u64,
+    src: VertexId,
+    dst: VertexId,
+    stamp: u64,
+}
+
+/// Live admit-state for one edge.
+struct EdgeState {
+    /// Unexpired admits since the last explicit remove.
+    count: u64,
+    /// Stamp queued entries must match to still be live.
+    stamp: u64,
+}
+
+/// The window stage. Not thread-safe by design — it lives on the engine
+/// worker thread, in front of the ingest path.
+pub struct SlidingWindow {
+    window_nanos: u64,
+    /// Expiry queue, in admit order (deadlines are monotone because the
+    /// caller's clock is).
+    entries: VecDeque<Entry>,
+    live: HashMap<(VertexId, VertexId), EdgeState>,
+    next_stamp: u64,
+}
+
+impl SlidingWindow {
+    /// A window retaining edges for `window_nanos` logical nanoseconds.
+    pub fn new(window_nanos: u64) -> SlidingWindow {
+        assert!(window_nanos > 0, "a zero-width window would expire every edge instantly");
+        SlidingWindow {
+            window_nanos,
+            entries: VecDeque::new(),
+            live: HashMap::new(),
+            next_stamp: 0,
+        }
+    }
+
+    /// The configured width.
+    pub fn window_nanos(&self) -> u64 {
+        self.window_nanos
+    }
+
+    /// Observe one client op at logical time `now` (called *before* the
+    /// op is handed to the engine). Expiry-generated removes must NOT be
+    /// admitted back — they already settled their own bookkeeping.
+    pub fn admit(&mut self, op: &EdgeOp, now: u64) {
+        match *op {
+            EdgeOp::AddEdge(src, dst) => {
+                let next_stamp = &mut self.next_stamp;
+                let st = self.live.entry((src, dst)).or_insert_with(|| {
+                    let stamp = *next_stamp;
+                    *next_stamp += 1;
+                    EdgeState { count: 0, stamp }
+                });
+                st.count += 1;
+                self.entries.push_back(Entry {
+                    deadline: now.saturating_add(self.window_nanos),
+                    src,
+                    dst,
+                    stamp: st.stamp,
+                });
+            }
+            EdgeOp::RemoveEdge(src, dst) => {
+                if let Some(st) = self.live.get_mut(&(src, dst)) {
+                    st.count = 0;
+                    st.stamp = self.next_stamp;
+                    self.next_stamp += 1;
+                }
+            }
+            EdgeOp::RemoveVertex(id) => {
+                // The graph drops every incident edge; orphan their
+                // queued expiries the same way an explicit remove would.
+                for (&(src, dst), st) in self.live.iter_mut() {
+                    if src == id || dst == id {
+                        st.count = 0;
+                        st.stamp = self.next_stamp;
+                        self.next_stamp += 1;
+                    }
+                }
+            }
+            EdgeOp::AddVertex(_) => {}
+        }
+    }
+
+    /// Pop every admit whose deadline has passed and return the
+    /// `RemoveEdge` ops for edges whose last unexpired admit just left
+    /// the window. Feed these to the ingest path as a batch.
+    pub fn expire_due(&mut self, now: u64) -> Vec<EdgeOp> {
+        let mut out = Vec::new();
+        loop {
+            match self.entries.front() {
+                Some(e) if e.deadline <= now => {}
+                _ => break,
+            }
+            let e = self.entries.pop_front().unwrap();
+            let key = (e.src, e.dst);
+            if let Some(st) = self.live.get_mut(&key) {
+                if st.stamp == e.stamp {
+                    // Matching queued entries never outnumber `count`.
+                    st.count -= 1;
+                    if st.count == 0 {
+                        self.live.remove(&key);
+                        out.push(EdgeOp::remove(e.src, e.dst));
+                    }
+                } else if st.count == 0 {
+                    // Orphaned by an explicit remove and never re-added:
+                    // reclaim the slot.
+                    self.live.remove(&key);
+                }
+            }
+        }
+        out
+    }
+
+    /// When the earliest queued admit expires, if any — what a ticker
+    /// needs to pace itself.
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.entries.front().map(|e| e.deadline)
+    }
+
+    /// Queued expiry entries (one per unexpired admit).
+    pub fn tracked(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is in the window.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_expire_after_the_window() {
+        let mut w = SlidingWindow::new(10);
+        w.admit(&EdgeOp::add(1, 2), 0);
+        w.admit(&EdgeOp::add(3, 4), 5);
+        assert!(w.expire_due(9).is_empty());
+        assert_eq!(w.expire_due(10), vec![EdgeOp::remove(1, 2)]);
+        assert_eq!(w.expire_due(15), vec![EdgeOp::remove(3, 4)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn readd_refreshes_the_deadline() {
+        let mut w = SlidingWindow::new(10);
+        w.admit(&EdgeOp::add(1, 2), 0);
+        w.admit(&EdgeOp::add(1, 2), 8);
+        // First admit expires but the edge is still within the window of
+        // the second: no remove yet.
+        assert!(w.expire_due(10).is_empty());
+        assert_eq!(w.expire_due(18), vec![EdgeOp::remove(1, 2)]);
+    }
+
+    #[test]
+    fn explicit_remove_orphans_queued_expiries() {
+        let mut w = SlidingWindow::new(10);
+        w.admit(&EdgeOp::add(1, 2), 0);
+        w.admit(&EdgeOp::remove(1, 2), 3);
+        // Re-added after the remove: the orphaned entry from t=0 must
+        // not expire the new incarnation at t=10.
+        w.admit(&EdgeOp::add(1, 2), 5);
+        assert!(w.expire_due(10).is_empty());
+        assert_eq!(w.expire_due(15), vec![EdgeOp::remove(1, 2)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn remove_vertex_orphans_incident_edges() {
+        let mut w = SlidingWindow::new(10);
+        w.admit(&EdgeOp::add(1, 2), 0);
+        w.admit(&EdgeOp::add(3, 1), 0);
+        w.admit(&EdgeOp::add(4, 5), 0);
+        w.admit(&EdgeOp::RemoveVertex(1), 2);
+        // Only the untouched edge still expires.
+        assert_eq!(w.expire_due(10), vec![EdgeOp::remove(4, 5)]);
+    }
+
+    #[test]
+    fn reclaimed_slots_do_not_resurrect_old_generations() {
+        let mut w = SlidingWindow::new(10);
+        w.admit(&EdgeOp::add(1, 2), 0);
+        w.admit(&EdgeOp::add(1, 2), 1);
+        w.admit(&EdgeOp::remove(1, 2), 2);
+        // First orphaned entry reclaims the slot at t=10…
+        assert!(w.expire_due(10).is_empty());
+        // …and a fresh add gets a fresh generation the second orphaned
+        // entry (t=1 admit, due t=11) cannot match.
+        w.admit(&EdgeOp::add(1, 2), 10);
+        assert!(w.expire_due(11).is_empty());
+        assert_eq!(w.expire_due(20), vec![EdgeOp::remove(1, 2)]);
+    }
+}

@@ -1,0 +1,445 @@
+//! Standing queries, wire protocol v2 and windowed graphs: acceptance.
+//!
+//! * Push-plane correctness: the notifications a subscription mailbox
+//!   receives across a sequence of publishes must exactly match a
+//!   brute-force diff of the consecutive `RankSnapshot`s, for arbitrary
+//!   interleavings of rank movement, hot-set churn and top-K turnover.
+//! * Protocol v2: a pipelining client gets its responses out of order
+//!   (each tagged with the echoed request id) while a v1 client on the
+//!   same server keeps strict in-order semantics.
+//! * Subscriptions ride real TCP connections: a `subscribe` over v2
+//!   yields push frames when the watched condition fires at publish.
+//! * Sliding-window expiry is equivalent to a manually-maintained
+//!   `RemoveEdge` stream, checked through the sequential oracle.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use veilgraph::coordinator::engine::EngineBuilder;
+use veilgraph::coordinator::server::{serve_shared, ServeOptions, ServerHandle};
+use veilgraph::coordinator::serving::{RankSnapshot, SnapshotPublisher};
+use veilgraph::coordinator::subscription::{Mailbox, Notification, Subscription};
+use veilgraph::coordinator::udf::{Action, ExecStats, QueryContext, UdfSuite};
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::stream::window::SlidingWindow;
+use veilgraph::testing::oracle::seq_apply;
+use veilgraph::testing::vprop::{forall, Gen};
+use veilgraph::util::json::Json;
+
+fn ring(n: u64) -> Vec<(u64, u64)> {
+    (0..n).map(|i| (i, (i + 1) % n)).collect()
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Push-plane correctness against a brute-force model
+// ---------------------------------------------------------------------------
+
+/// The model's view of one published snapshot: parallel id/rank arrays
+/// plus the hot set, all recomputed from scratch per transition.
+#[derive(Clone, Default)]
+struct ModelState {
+    ids: Vec<u64>,
+    ranks: Vec<f64>,
+    hot: Vec<u64>,
+}
+
+impl ModelState {
+    fn rank_of(&self, id: u64) -> f64 {
+        self.ids.iter().position(|&v| v == id).map(|i| self.ranks[i]).unwrap_or(0.0)
+    }
+
+    /// Top-k ids by rank, descending. Ranks are generated distinct, so
+    /// the order is unambiguous without knowing the snapshot's
+    /// tie-break.
+    fn top(&self, k: usize) -> Vec<u64> {
+        let mut idx: Vec<usize> = (0..self.ids.len()).collect();
+        idx.sort_by(|&a, &b| self.ranks[b].partial_cmp(&self.ranks[a]).unwrap());
+        idx.into_iter().take(k).map(|i| self.ids[i]).collect()
+    }
+}
+
+/// Brute-force re-derivation of what one subscription should fire on a
+/// `prev -> next` publish transition, independent of the library's diff.
+fn brute_diff(
+    spec: &Subscription,
+    prev: &ModelState,
+    next: &ModelState,
+    version: u64,
+) -> Option<Notification> {
+    match *spec {
+        Subscription::TopK { k } => {
+            let before = prev.top(k);
+            let after = next.top(k);
+            let entered: Vec<u64> =
+                after.iter().copied().filter(|v| !before.contains(v)).collect();
+            let left: Vec<u64> =
+                before.iter().copied().filter(|v| !after.contains(v)).collect();
+            if entered.is_empty() && left.is_empty() {
+                None
+            } else {
+                Some(Notification::TopK { k, version, entered, left })
+            }
+        }
+        Subscription::RankThreshold { id, tau } => {
+            let was = prev.rank_of(id) > tau;
+            let rank = next.rank_of(id);
+            let is = rank > tau;
+            if was == is {
+                None
+            } else {
+                Some(Notification::RankThreshold { id, tau, rank, up: is, version })
+            }
+        }
+        Subscription::HotSet { id } => {
+            let was = prev.hot.contains(&id);
+            let is = next.hot.contains(&id);
+            if was == is {
+                None
+            } else {
+                Some(Notification::HotSet { id, entered: is, version })
+            }
+        }
+        Subscription::Community { .. } => None,
+    }
+}
+
+fn model_snapshot(state: &ModelState, version: u64) -> Arc<RankSnapshot> {
+    let mut s = RankSnapshot::new(
+        version,
+        version,
+        version,
+        Action::ComputeExact,
+        ExecStats::default(),
+        state.ids.clone(),
+        state.ranks.clone(),
+        state.ids.len().max(1),
+        Json::Null,
+    );
+    s.set_hot_set(state.hot.clone());
+    Arc::new(s)
+}
+
+/// Acceptance (property): for arbitrary subscription mixes and arbitrary
+/// snapshot sequences, the frames in the mailbox after each publish are
+/// exactly the brute-force diffs, in registration order.
+#[test]
+fn notifications_match_bruteforce_snapshot_diffs() {
+    forall(40, 0x57A4D, |g: &mut Gen| {
+        let n = g.usize(3..12);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let publisher = SnapshotPublisher::new();
+        let mb = Mailbox::new();
+        let mut specs: Vec<(u64, Subscription)> = Vec::new();
+        for _ in 0..g.usize(1..6) {
+            let spec = match g.usize(0..3) {
+                0 => Subscription::TopK { k: g.usize(1..n + 1) },
+                1 => Subscription::RankThreshold {
+                    id: g.u64(0..n as u64 + 2),
+                    tau: g.f64(0.0..1.0),
+                },
+                _ => Subscription::HotSet { id: g.u64(0..n as u64 + 2) },
+            };
+            let sub = publisher.subscriptions().subscribe(spec, &mb);
+            specs.push((sub, spec));
+        }
+
+        // The publisher starts on the empty snapshot: the first publish
+        // transitions from "no vertices at all", which the model covers
+        // with its Default state.
+        let mut prev = ModelState::default();
+        for round in 0..g.usize(2..8) {
+            let version = round as u64 + 1;
+            // Distinct ranks via a shuffled fixed value set: no ties, so
+            // the model's top-k needs no tie-break knowledge.
+            let mut ranks: Vec<f64> =
+                (0..n).map(|i| (i + 1) as f64 / (n + 1) as f64).collect();
+            for i in (1..n).rev() {
+                ranks.swap(i, g.usize(0..i + 1));
+            }
+            let hot: Vec<u64> =
+                ids.iter().copied().filter(|_| g.bool(0.4)).collect();
+            let next = ModelState { ids: ids.clone(), ranks, hot };
+
+            let expected: Vec<Json> = specs
+                .iter()
+                .filter_map(|(sub, spec)| {
+                    brute_diff(spec, &prev, &next, version).map(|ev| ev.to_json(*sub))
+                })
+                .collect();
+            publisher.publish(model_snapshot(&next, version));
+            assert_eq!(
+                mb.drain(),
+                expected,
+                "publish v{version} fired the wrong notification set"
+            );
+            prev = next;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol v2 over TCP
+// ---------------------------------------------------------------------------
+
+/// A UDF whose `on_query` parks until released: pins the engine thread
+/// inside a synchronous query so wire queries provably queue behind it.
+struct ParkSuite {
+    entered: Arc<AtomicBool>,
+    release: Arc<AtomicBool>,
+}
+
+impl UdfSuite for ParkSuite {
+    fn on_query(&mut self, _ctx: &QueryContext) -> Action {
+        self.entered.store(true, Ordering::SeqCst);
+        while !self.release.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Action::ComputeApproximate
+    }
+}
+
+/// Acceptance: with the engine thread provably parked, a pipelining v2
+/// client gets the off-queue read answered *before* its earlier wire
+/// query (out-of-order, matched by id), while a v1 client on the same
+/// server still gets strict request-order responses.
+#[test]
+fn v2_pipelines_out_of_order_while_v1_stays_in_order() {
+    let entered = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let engine = EngineBuilder::new()
+        .udf(Box::new(ParkSuite {
+            entered: Arc::clone(&entered),
+            release: Arc::clone(&release),
+        }))
+        .build_from_edges(ring(20))
+        .unwrap();
+    let h = Arc::new(ServerHandle::spawn_with(engine, &ServeOptions::new()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let h2 = Arc::clone(&h);
+        std::thread::spawn(move || {
+            serve_shared(h2, listener, ServeOptions::new().workers(2)).unwrap()
+        })
+    };
+
+    // Park the engine thread inside a synchronous query.
+    h.ingest(EdgeOp::add(0, 7)).unwrap();
+    let parked = {
+        let h2 = Arc::clone(&h);
+        std::thread::spawn(move || h2.query().unwrap())
+    };
+    while !entered.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // v2 client: wire query (stuck behind the parked engine) then an
+    // off-queue read. The read's answer must arrive first.
+    let mut v2 = TcpStream::connect(addr).unwrap();
+    v2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut r2 = BufReader::new(v2.try_clone().unwrap());
+    send_line(&mut v2, r#"{"v":2,"id":101,"op":"query","top":3}"#);
+    send_line(&mut v2, r#"{"v":2,"id":202,"op":"top","k":3}"#);
+    let first = read_json_line(&mut r2);
+    assert_eq!(first.get("id").unwrap().as_u64(), Some(202), "read overtakes the wire query");
+    assert_eq!(first.get("v").unwrap().as_u64(), Some(2));
+    assert_eq!(first.get("top").unwrap().as_arr().unwrap().len(), 3);
+
+    // v1 client on the same server: a pending query pauses its reads, so
+    // responses keep request order even though the top could answer now.
+    let mut v1 = TcpStream::connect(addr).unwrap();
+    v1.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut r1 = BufReader::new(v1.try_clone().unwrap());
+    send_line(&mut v1, r#"{"op":"query","top":2}"#);
+    send_line(&mut v1, r#"{"op":"top","k":2}"#);
+
+    release.store(true, Ordering::SeqCst);
+    parked.join().unwrap();
+
+    // v2's second response is the completed query, tagged with its id.
+    let second = read_json_line(&mut r2);
+    assert_eq!(second.get("id").unwrap().as_u64(), Some(101));
+    assert!(second.get("action").is_some(), "wire query response carries the decision");
+
+    // v1's responses come back strictly in request order: query first
+    // (it has action/scheduled), then the read.
+    let first_v1 = read_json_line(&mut r1);
+    assert_eq!(first_v1.get("v").unwrap().as_u64(), Some(1));
+    assert!(first_v1.get("id").is_none(), "v1 has no id surface");
+    assert!(first_v1.get("scheduled").is_some(), "v1 response order is request order");
+    let second_v1 = read_json_line(&mut r1);
+    assert_eq!(second_v1.get("top").unwrap().as_arr().unwrap().len(), 2);
+
+    send_line(&mut v1, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r1).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
+
+/// Acceptance: a v2 TCP client registers a standing rank-threshold query
+/// and receives a push frame when a later publish crosses it. v1
+/// connections are refused the subscribe op.
+#[test]
+fn tcp_subscription_pushes_on_rank_crossing() {
+    let engine = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+    let h = Arc::new(ServerHandle::spawn_with(engine, &ServeOptions::new()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let h2 = Arc::clone(&h);
+        std::thread::spawn(move || {
+            serve_shared(h2, listener, ServeOptions::new().workers(1)).unwrap()
+        })
+    };
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+
+    // v1 subscribe is a typed refusal.
+    send_line(&mut c, r#"{"op":"subscribe","what":"rank","id":500,"tau":1e-12}"#);
+    let resp = read_json_line(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+
+    // v2 subscribe: vertex 500 does not exist yet, so its rank is 0 and
+    // any positive rank after it joins the graph crosses tau upward.
+    // (No request "id" here — the subscription target uses that key.)
+    send_line(&mut c, r#"{"v":2,"op":"subscribe","what":"rank","id":500,"tau":1e-12}"#);
+    let ack = read_json_line(&mut r);
+    assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+    let sub = ack.get("sub").unwrap().as_u64().unwrap();
+    assert_eq!(h.subscriptions().len(), 1);
+
+    send_line(&mut c, r#"{"op":"add","src":500,"dst":0}"#);
+    send_line(&mut c, r#"{"v":2,"id":2,"op":"query","top":2}"#);
+
+    // Reads now interleave: two request responses plus (once the
+    // recompute publishes) the push frame. Scan until the frame shows.
+    let mut notify = None;
+    for _ in 0..50 {
+        let line = read_json_line(&mut r);
+        if line.get("notify").is_some() {
+            notify = Some(line);
+            break;
+        }
+    }
+    let frame = notify.expect("rank-crossing push frame never arrived");
+    assert_eq!(frame.get("v").unwrap().as_u64(), Some(2));
+    assert_eq!(frame.get("sub").unwrap().as_u64(), Some(sub));
+    let body = frame.get("notify").unwrap();
+    assert_eq!(body.get("kind").and_then(Json::as_str), Some("rank"));
+    assert_eq!(body.get("id").and_then(Json::as_u64), Some(500));
+    assert_eq!(body.get("direction").and_then(Json::as_str), Some("up"));
+
+    // Unsubscribe echoes the id; a second unsubscribe is unknown.
+    send_line(&mut c, &format!(r#"{{"v":2,"op":"unsubscribe","sub":{sub}}}"#));
+    let resp = read_json_line(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    send_line(&mut c, &format!(r#"{{"v":2,"op":"unsubscribe","sub":{sub}}}"#));
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(false));
+    assert!(h.subscriptions().is_empty());
+
+    send_line(&mut c, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Sliding window vs manual-removal oracle
+// ---------------------------------------------------------------------------
+
+fn edge_set(g: &DynamicGraph) -> Vec<(u64, u64)> {
+    let mut es: Vec<(u64, u64)> = g.edges().map(|(s, d)| (g.id(s), g.id(d))).collect();
+    es.sort_unstable();
+    es
+}
+
+fn remove_pairs(ops: &[EdgeOp]) -> Vec<(u64, u64)> {
+    let mut pairs: Vec<(u64, u64)> = ops
+        .iter()
+        .map(|op| match *op {
+            EdgeOp::RemoveEdge(s, d) => (s, d),
+            ref other => panic!("window emitted a non-remove op {other:?}"),
+        })
+        .collect();
+    pairs.sort_unstable();
+    pairs
+}
+
+/// Acceptance (property): the window's generated expiries equal an
+/// independent model's at every tick, and feeding "client ops + window
+/// expiries" through the sequential oracle leaves a graph identical to
+/// "client ops + the model's manual RemoveEdge stream".
+#[test]
+fn windowed_expiry_matches_manual_remove_oracle() {
+    forall(50, 0xD00F, |g: &mut Gen| {
+        let verts = g.u64(2..7);
+        let window = g.u64(3..20);
+        let horizon = g.u64(10..40);
+        let mut w = SlidingWindow::new(window);
+        // Independent model: per edge, the multiset of unexpired admit
+        // deadlines; an explicit remove clears it. A manual RemoveEdge is
+        // due the tick the last deadline passes.
+        let mut model: std::collections::HashMap<(u64, u64), Vec<u64>> =
+            std::collections::HashMap::new();
+        let mut windowed: Vec<EdgeOp> = Vec::new();
+        let mut manual: Vec<EdgeOp> = Vec::new();
+
+        for t in 0..=horizon {
+            for _ in 0..g.usize(0..3) {
+                let (s, d) = (g.u64(0..verts), g.u64(0..verts));
+                if s == d {
+                    continue;
+                }
+                let op = if g.bool(0.75) { EdgeOp::add(s, d) } else { EdgeOp::remove(s, d) };
+                w.admit(&op, t);
+                match op {
+                    EdgeOp::AddEdge(..) => {
+                        model.entry((s, d)).or_default().push(t + window);
+                    }
+                    _ => {
+                        model.remove(&(s, d));
+                    }
+                }
+                windowed.push(op);
+                manual.push(op);
+            }
+            let expired = w.expire_due(t);
+            let mut due: Vec<(u64, u64)> = Vec::new();
+            model.retain(|&key, deadlines| {
+                let had = !deadlines.is_empty();
+                deadlines.retain(|&dl| dl > t);
+                if had && deadlines.is_empty() {
+                    due.push(key);
+                    false
+                } else {
+                    !deadlines.is_empty()
+                }
+            });
+            due.sort_unstable();
+            assert_eq!(remove_pairs(&expired), due, "tick {t}: wrong expiry set");
+            windowed.extend(expired);
+            manual.extend(due.into_iter().map(|(s, d)| EdgeOp::remove(s, d)));
+        }
+
+        let (mut ga, _) = DynamicGraph::from_edges(Vec::<(u64, u64)>::new());
+        let (mut gb, _) = DynamicGraph::from_edges(Vec::<(u64, u64)>::new());
+        seq_apply(&mut ga, &windowed);
+        seq_apply(&mut gb, &manual);
+        assert_eq!(edge_set(&ga), edge_set(&gb), "windowed and manual graphs diverged");
+    });
+}
