@@ -11,18 +11,30 @@
 //!   duplicate-free stream (coalescing off — pure grouped-apply cost)
 //!   and a duplicate/cancel-heavy stream (coalescing on).
 //!
+//! Two durability measurements ride along:
+//! * **WAL overhead** (`ingest_wal_batch_vs_none`): the same ingest +
+//!   flush loop against no WAL, a WAL under `none` sync (buffered
+//!   appends) and a WAL under `batch` sync (fsync per batch) — the
+//!   per-batch price of crash safety.
+//! * **Recovery replay** (`recovery_replay_100k`): 100k WAL'd ops
+//!   replayed through the ordinary batch path on restart, reported as
+//!   replay ops/sec.
+//!
 //! Emits `results/ingest_bench.json` and — when the serving bench ran
 //! first (CI does) — merges `results/bench_4.json` into
-//! `results/bench_7.json`, the BENCH_7 perf-trajectory artifact
-//! (superset of the BENCH_6 schema: micro + serving + saturation +
-//! subscriptions + ingest speedups).
+//! `results/bench_8.json`, the BENCH_8 perf-trajectory artifact
+//! (superset of the BENCH_7 schema: micro + serving + saturation +
+//! subscriptions + ingest speedups + durability).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::time::Instant;
 
+use veilgraph::coordinator::checkpoint::DurabilityConfig;
 use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
+use veilgraph::coordinator::wal::SyncPolicy;
 use veilgraph::graph::dynamic::DynamicGraph;
 use veilgraph::graph::generate;
 use veilgraph::stream::backpressure::OverflowPolicy;
@@ -34,6 +46,10 @@ const WIRE_OPS: usize = 2_000;
 const WIRE_BATCH: usize = 512;
 const APPLY_OPS: usize = 40_000;
 const APPLY_ROUNDS: usize = 5;
+const WAL_BATCHES: usize = 200;
+const WAL_OPS_PER_BATCH: usize = 64;
+const REPLAY_OPS: usize = 100_000;
+const REPLAY_BATCH: usize = 512;
 
 fn median(mut xs: Vec<f64>) -> f64 {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -101,6 +117,71 @@ fn apply_pair(base: &DynamicGraph, ops: &[EdgeOp]) -> (f64, f64, usize) {
     (median(seq_times), median(batch_times), effective)
 }
 
+fn bench_dir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("vg-bench-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// `WAL_BATCHES` batches of `WAL_OPS_PER_BATCH` fresh adds through
+/// ingest + flush, optionally behind a WAL under `sync`. Returns the
+/// wall-clock seconds for the whole loop.
+fn durable_ingest(sync: Option<SyncPolicy>) -> f64 {
+    let initial = generate::copying_web(5_000, 8, 0.7, 11);
+    let dir = bench_dir("wal");
+    let mut engine = match sync {
+        Some(policy) => {
+            let cfg = DurabilityConfig::new(&dir).sync(policy).checkpoint_every(1_000_000);
+            EngineBuilder::new().durability(cfg).build_durable(initial).unwrap().0
+        }
+        None => EngineBuilder::new().build_from_edges(initial).unwrap(),
+    };
+    let t0 = Instant::now();
+    for b in 0..WAL_BATCHES as u64 {
+        let base = 1_000_000 + b * WAL_OPS_PER_BATCH as u64;
+        engine.ingest_batch(
+            (0..WAL_OPS_PER_BATCH as u64).map(|i| EdgeOp::add(base + i, (base + i) % 5_000)),
+        );
+        engine.flush_pending();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    drop(engine);
+    let _ = std::fs::remove_dir_all(&dir);
+    secs
+}
+
+/// Write `REPLAY_OPS` ops into the WAL (no checkpoint), drop the
+/// engine, then time a cold `build_durable` that replays the whole log
+/// through the batch path. Returns (recovery_secs, replayed_batches,
+/// replayed_ops).
+fn recovery_replay() -> (f64, usize, usize) {
+    let dir = bench_dir("replay");
+    let initial = ring_edges(64);
+    let cfg = || DurabilityConfig::new(&dir).sync(SyncPolicy::None).checkpoint_every(1_000_000);
+    let (mut engine, _) =
+        EngineBuilder::new().durability(cfg()).build_durable(initial.clone()).unwrap();
+    let mut i = 0u64;
+    while (i as usize) < REPLAY_OPS {
+        let take = REPLAY_BATCH.min(REPLAY_OPS - i as usize) as u64;
+        engine.ingest_batch((i..i + take).map(|j| EdgeOp::add(2_000_000 + j, j % 50_000)));
+        engine.flush_pending();
+        i += take;
+    }
+    drop(engine);
+    let t0 = Instant::now();
+    let (engine, report) =
+        EngineBuilder::new().durability(cfg()).build_durable(initial).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(engine.graph().num_vertices() > 64, "replay actually rebuilt the stream");
+    drop(engine);
+    let _ = std::fs::remove_dir_all(&dir);
+    (secs, report.replayed_batches, report.replayed_ops)
+}
+
+fn ring_edges(n: u64) -> Vec<(u64, u64)> {
+    (0..n).map(|i| (i, (i + 1) % n)).collect()
+}
+
 fn main() {
     // ---- wire: per-op vs batched writes over TCP ----------------------
     let engine = EngineBuilder::new()
@@ -149,6 +230,25 @@ fn main() {
     println!("apply unique:    seq {squ:.4}s vs batch {sbu:.4}s ({su:.2}x), eff {eff_u}");
     println!("apply coalesced: seq {sqh:.4}s vs batch {sbh:.4}s ({sh:.2}x), eff {eff_h}");
 
+    // ---- durability: WAL overhead + recovery replay -------------------
+    let wal_ops = WAL_BATCHES * WAL_OPS_PER_BATCH;
+    let plain_secs = durable_ingest(None);
+    let wal_none_secs = durable_ingest(Some(SyncPolicy::None));
+    let wal_batch_secs = durable_ingest(Some(SyncPolicy::Batch));
+    let none_x = wal_none_secs / plain_secs;
+    let batch_x = wal_batch_secs / plain_secs;
+    println!(
+        "ingest_wal_batch_vs_none: {wal_ops} ops plain {plain_secs:.4}s, \
+         wal(none) {wal_none_secs:.4}s ({none_x:.2}x), \
+         wal(batch) {wal_batch_secs:.4}s ({batch_x:.2}x)"
+    );
+    let (replay_secs, replay_batches, replay_ops) = recovery_replay();
+    let replay_rate = replay_ops as f64 / replay_secs.max(1e-9);
+    println!(
+        "recovery_replay_100k: {replay_ops} ops / {replay_batches} batches \
+         in {replay_secs:.4}s ({replay_rate:.0} ops/s)"
+    );
+
     // ---- machine-readable artifact ------------------------------------
     std::fs::create_dir_all("results").ok();
     let ingest = Json::obj(vec![
@@ -178,9 +278,8 @@ fn main() {
         .expect("write ingest json");
     println!("JSON written to results/ingest_bench.json");
 
-    // BENCH_7 = BENCH_4 schema (micro + serving + saturation +
-    // subscriptions) + the ingest ratios — a superset of the BENCH_6
-    // schema.
+    // BENCH_8 = BENCH_7 schema (micro + serving + saturation +
+    // subscriptions + ingest) + the durability section.
     let mut doc = std::fs::read_to_string("results/bench_4.json")
         .or_else(|_| std::fs::read_to_string("results/micro_bench.json"))
         .ok()
@@ -206,7 +305,33 @@ fn main() {
             }
         }
         map.insert("ingest".into(), ingest);
+        map.insert(
+            "durability".into(),
+            Json::obj(vec![
+                (
+                    "ingest_wal_batch_vs_none",
+                    Json::obj(vec![
+                        ("ops", Json::Num(wal_ops as f64)),
+                        ("batches", Json::Num(WAL_BATCHES as f64)),
+                        ("plain_secs", Json::Num(plain_secs)),
+                        ("wal_none_secs", Json::Num(wal_none_secs)),
+                        ("wal_batch_secs", Json::Num(wal_batch_secs)),
+                        ("wal_none_overhead_x", Json::Num(none_x)),
+                        ("wal_batch_overhead_x", Json::Num(batch_x)),
+                    ]),
+                ),
+                (
+                    "recovery_replay_100k",
+                    Json::obj(vec![
+                        ("ops", Json::Num(replay_ops as f64)),
+                        ("batches", Json::Num(replay_batches as f64)),
+                        ("recovery_secs", Json::Num(replay_secs)),
+                        ("replay_ops_per_sec", Json::Num(replay_rate)),
+                    ]),
+                ),
+            ]),
+        );
     }
-    std::fs::write("results/bench_7.json", doc.to_string_pretty()).expect("write bench_7 json");
-    println!("JSON written to results/bench_7.json");
+    std::fs::write("results/bench_8.json", doc.to_string_pretty()).expect("write bench_8 json");
+    println!("JSON written to results/bench_8.json");
 }

@@ -1,28 +1,160 @@
-//! Engine checkpointing: save/restore of the graph + rank state in a
-//! compact binary format, so a long-lived VeilGraph job can restart
-//! without replaying its whole stream (operational requirement for the
-//! serving deployment of Fig. 2; the paper's `OnStart`/`OnStop` UDFs are
-//! the natural hook points).
+//! Crash-consistent checkpoints and the recovery driver.
 //!
-//! Format (little-endian):
+//! A checkpoint is a versioned snapshot dump of everything the serving
+//! process would otherwise lose on a crash: the graph (dense vertex ids
+//! + CSR-ordered edges), the rank vector, the topology version, the WAL
+//! position it is consistent with, the sliding-window admission state
+//! and the durable subscription records. Checkpoints are written
+//! *off-thread* from a frozen clone captured on the engine thread
+//! ([`CheckpointJob`] runs on the recompute worker), so dumping a large
+//! graph never blocks ingest or reads.
+//!
+//! Recovery ([`recover`]) is snapshot + log: load the newest snapshot
+//! that verifies (falling back to older ones on corruption — the last
+//! [`DurabilityConfig::keep_snapshots`] dumps are retained), then
+//! replay the WAL tail (records with `seq >` the snapshot's WAL
+//! position) through the ordinary batch path, republish, and warm-start
+//! the first recompute from the recovered ranks — the paper's
+//! RepeatLast strategy made durable: a restarted server answers
+//! immediately with stale-but-valid ranks.
+//!
+//! Atomicity: a checkpoint is written to a temp file and renamed into
+//! place, so a crash mid-dump leaves the previous snapshot untouched.
+//! The trailing FNV-1a checksum (plus internal length/index
+//! validation) catches the remaining ways a snapshot can lie — torn
+//! renames on exotic filesystems, bit rot, or the fault injector's
+//! simulated mid-checkpoint crash, which deliberately bypasses the
+//! rename to exercise the fallback path.
+//!
+//! ## Format v2 (little-endian)
+//!
 //! ```text
-//! magic "VGCP" | u32 version | u64 n_vertices | u64 n_edges | u64 query_count
+//! magic "VGCP" | u32 version
+//! u64 n_vertices | u64 n_edges | u64 query_count | u64 graph_version
+//! u64 wal_seq | u8 clean_shutdown
 //! n_vertices × u64 vertex id          (dense order)
 //! n_edges    × (u32 src_idx, u32 dst_idx)
 //! n_vertices × f64 rank
+//! u8 has_window | window state        (see encode_window)
+//! u64 n_subs | durable sub records    (see encode_sub)
 //! u64 fnv1a-64 checksum of everything above
 //! ```
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
+use crate::coordinator::subscription::{DurableSubRecord, SubState, Subscription};
+use crate::coordinator::wal::{
+    DEFAULT_SEGMENT_MAX_BYTES, DurabilityStats, SyncPolicy, Wal, WalIo, WalRecord,
+};
 use crate::error::{Error, Result};
 use crate::graph::dynamic::DynamicGraph;
+use crate::stream::window::WindowState;
+use crate::testing::faults::{CrashPoint, FaultInjector};
 
 const MAGIC: &[u8; 4] = b"VGCP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A deserialized checkpoint.
+/// How a server configures its durability subsystem: where state
+/// lives, how eagerly the WAL syncs, and how often snapshots are cut.
+pub struct DurabilityConfig {
+    /// Directory holding WAL segments and checkpoint files.
+    pub dir: PathBuf,
+    /// WAL sync policy (`--durability none|batch|interval:MS`).
+    pub sync: SyncPolicy,
+    /// WAL segment rotation threshold.
+    pub segment_max_bytes: u64,
+    /// Cut a checkpoint every this many applied batches.
+    pub checkpoint_every: u64,
+    /// Snapshots retained for corruption fallback.
+    pub keep_snapshots: usize,
+    /// Fault injection (tests only; `None` in production).
+    pub faults: Option<Arc<FaultInjector>>,
+    /// WAL I/O layer override (tests only; `None` = real filesystem).
+    pub io: Option<Box<dyn WalIo>>,
+}
+
+impl DurabilityConfig {
+    /// Defaults: batch-sync WAL, 64 MiB segments, checkpoint every 64
+    /// batches, keep 3 snapshots, no faults.
+    pub fn new(dir: impl Into<PathBuf>) -> DurabilityConfig {
+        DurabilityConfig {
+            dir: dir.into(),
+            sync: SyncPolicy::Batch,
+            segment_max_bytes: DEFAULT_SEGMENT_MAX_BYTES,
+            checkpoint_every: 64,
+            keep_snapshots: 3,
+            faults: None,
+            io: None,
+        }
+    }
+
+    /// Set the WAL sync policy.
+    pub fn sync(mut self, policy: SyncPolicy) -> Self {
+        self.sync = policy;
+        self
+    }
+
+    /// Set the checkpoint cadence (applied batches between snapshots).
+    pub fn checkpoint_every(mut self, batches: u64) -> Self {
+        self.checkpoint_every = batches.max(1);
+        self
+    }
+
+    /// Set the WAL segment rotation threshold.
+    pub fn segment_max_bytes(mut self, bytes: u64) -> Self {
+        self.segment_max_bytes = bytes;
+        self
+    }
+
+    /// Set how many snapshots to retain.
+    pub fn keep_snapshots(mut self, keep: usize) -> Self {
+        self.keep_snapshots = keep.max(1);
+        self
+    }
+
+    /// Attach a fault injector (tests).
+    pub fn faults(mut self, inj: Arc<FaultInjector>) -> Self {
+        self.faults = Some(inj);
+        self
+    }
+
+    /// Substitute the WAL I/O layer (tests).
+    pub fn io(mut self, io: Box<dyn WalIo>) -> Self {
+        self.io = Some(io);
+        self
+    }
+}
+
+/// Everything one checkpoint captures. Built on the engine thread from
+/// cheap clones; serialized off-thread.
+#[derive(Clone, Debug)]
+pub struct CheckpointImage {
+    /// Frozen graph clone.
+    pub graph: DynamicGraph,
+    /// Rank vector aligned with the graph's dense order.
+    pub ranks: Vec<f64>,
+    /// Engine query counter.
+    pub query_count: u64,
+    /// Topology version at capture (restored so incremental-snapshot
+    /// stamps stay consistent across restarts).
+    pub graph_version: u64,
+    /// Last WAL sequence number applied to `graph` — recovery replays
+    /// strictly newer records.
+    pub wal_seq: u64,
+    /// True only for the final checkpoint of a graceful shutdown;
+    /// recovery from a clean image with no WAL tail replays nothing.
+    pub clean_shutdown: bool,
+    /// Sliding-window admission state, when the server runs windowed.
+    pub window: Option<WindowState>,
+    /// Durable subscription records.
+    pub durable_subs: Vec<DurableSubRecord>,
+}
+
+/// A deserialized legacy-shape checkpoint (graph + ranks + counter) —
+/// what [`load`] returns for callers that don't care about the
+/// durability extras.
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
     pub graph: DynamicGraph,
@@ -57,6 +189,9 @@ impl<W: Write> HashingWriter<W> {
         self.inner.write_all(bytes)?;
         Ok(())
     }
+    fn u8(&mut self, v: u8) -> Result<()> {
+        self.put(&[v])
+    }
     fn u32(&mut self, v: u32) -> Result<()> {
         self.put(&v.to_le_bytes())
     }
@@ -79,6 +214,11 @@ impl<R: Read> HashingReader<R> {
         self.hash.update(buf);
         Ok(())
     }
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.take(&mut b)?;
+        Ok(b[0])
+    }
     fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
         self.take(&mut b)?;
@@ -96,47 +236,212 @@ impl<R: Read> HashingReader<R> {
     }
 }
 
-/// Serialize graph + ranks + query counter to `path`.
-pub fn save(
-    path: impl AsRef<Path>,
-    graph: &DynamicGraph,
-    ranks: &[f64],
-    query_count: u64,
-) -> Result<()> {
-    if ranks.len() != graph.num_vertices() {
-        return Err(Error::Engine(format!(
-            "checkpoint: ranks {} != vertices {}",
-            ranks.len(),
-            graph.num_vertices()
-        )));
+fn encode_sub<W: Write>(w: &mut HashingWriter<W>, rec: &DurableSubRecord) -> Result<()> {
+    w.u32(rec.token.len() as u32)?;
+    w.put(rec.token.as_bytes())?;
+    match rec.spec {
+        Subscription::TopK { k } => {
+            w.u8(0)?;
+            w.u64(k as u64)?;
+        }
+        Subscription::RankThreshold { id, tau } => {
+            w.u8(1)?;
+            w.u64(id)?;
+            w.f64(tau)?;
+        }
+        Subscription::HotSet { id } => {
+            w.u8(2)?;
+            w.u64(id)?;
+        }
+        Subscription::Community { id } => {
+            w.u8(3)?;
+            w.u64(id)?;
+        }
     }
-    let f = std::fs::File::create(path)?;
-    let mut w = HashingWriter { inner: BufWriter::new(f), hash: Fnv::new() };
-    w.put(MAGIC)?;
-    w.u32(VERSION)?;
-    w.u64(graph.num_vertices() as u64)?;
-    w.u64(graph.num_edges() as u64)?;
-    w.u64(query_count)?;
-    for &id in graph.ids() {
-        w.u64(id)?;
+    w.u64(rec.last_version)?;
+    match &rec.state {
+        SubState::TopK(ids) => {
+            w.u8(0)?;
+            w.u64(ids.len() as u64)?;
+            for &id in ids {
+                w.u64(id)?;
+            }
+        }
+        SubState::Above(b) => {
+            w.u8(1)?;
+            w.u8(*b as u8)?;
+        }
+        SubState::Hot(b) => {
+            w.u8(2)?;
+            w.u8(*b as u8)?;
+        }
+        SubState::Label(l) => {
+            w.u8(3)?;
+            match l {
+                Some(label) => {
+                    w.u8(1)?;
+                    w.u32(*label)?;
+                }
+                None => w.u8(0)?,
+            }
+        }
     }
-    for (s, d) in graph.edges() {
-        w.u32(s)?;
-        w.u32(d)?;
-    }
-    for &r in ranks {
-        w.f64(r)?;
-    }
-    let digest = w.hash.0;
-    w.inner.write_all(&digest.to_le_bytes())?;
-    w.inner.flush()?;
     Ok(())
 }
 
-/// Load a checkpoint, verifying magic/version/checksum.
-pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+fn decode_sub<R: Read>(r: &mut HashingReader<R>) -> Result<DurableSubRecord> {
+    let bad = |what: &str| Error::Parse(format!("corrupt checkpoint: bad subscription {what}"));
+    let token_len = r.u32()? as usize;
+    if token_len > 4096 {
+        return Err(bad("token length"));
+    }
+    let mut token = vec![0u8; token_len];
+    r.take(&mut token)?;
+    let token = String::from_utf8(token).map_err(|_| bad("token bytes"))?;
+    let spec = match r.u8()? {
+        0 => Subscription::TopK { k: r.u64()? as usize },
+        1 => Subscription::RankThreshold { id: r.u64()?, tau: r.f64()? },
+        2 => Subscription::HotSet { id: r.u64()? },
+        3 => Subscription::Community { id: r.u64()? },
+        _ => return Err(bad("spec tag")),
+    };
+    let last_version = r.u64()?;
+    let state = match r.u8()? {
+        0 => {
+            let n = r.u64()? as usize;
+            if n > 1 << 24 {
+                return Err(bad("state length"));
+            }
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(r.u64()?);
+            }
+            SubState::TopK(ids)
+        }
+        1 => SubState::Above(r.u8()? != 0),
+        2 => SubState::Hot(r.u8()? != 0),
+        3 => {
+            if r.u8()? != 0 {
+                SubState::Label(Some(r.u32()?))
+            } else {
+                SubState::Label(None)
+            }
+        }
+        _ => return Err(bad("state tag")),
+    };
+    Ok(DurableSubRecord { token, spec, state, last_version })
+}
+
+fn encode_window<W: Write>(w: &mut HashingWriter<W>, ws: &WindowState) -> Result<()> {
+    w.u64(ws.window_nanos)?;
+    w.u64(ws.next_stamp)?;
+    w.u64(ws.live.len() as u64)?;
+    for &(src, dst, count, stamp) in &ws.live {
+        w.u64(src)?;
+        w.u64(dst)?;
+        w.u64(count)?;
+        w.u64(stamp)?;
+    }
+    w.u64(ws.entries.len() as u64)?;
+    for &(remaining, src, dst, stamp) in &ws.entries {
+        w.u64(remaining)?;
+        w.u64(src)?;
+        w.u64(dst)?;
+        w.u64(stamp)?;
+    }
+    Ok(())
+}
+
+fn decode_window<R: Read>(r: &mut HashingReader<R>) -> Result<WindowState> {
+    let window_nanos = r.u64()?;
+    let next_stamp = r.u64()?;
+    let n_live = r.u64()? as usize;
+    let mut live = Vec::with_capacity(n_live.min(1 << 20));
+    for _ in 0..n_live {
+        live.push((r.u64()?, r.u64()?, r.u64()?, r.u64()?));
+    }
+    let n_entries = r.u64()? as usize;
+    let mut entries = Vec::with_capacity(n_entries.min(1 << 20));
+    for _ in 0..n_entries {
+        entries.push((r.u64()?, r.u64()?, r.u64()?, r.u64()?));
+    }
+    Ok(WindowState { window_nanos, next_stamp, live, entries })
+}
+
+/// Serialize an image to its full on-disk byte form (checksum
+/// included).
+fn encode_image(image: &CheckpointImage) -> Result<Vec<u8>> {
+    if image.ranks.len() != image.graph.num_vertices() {
+        return Err(Error::Engine(format!(
+            "checkpoint: ranks {} != vertices {}",
+            image.ranks.len(),
+            image.graph.num_vertices()
+        )));
+    }
+    let mut w = HashingWriter { inner: Vec::new(), hash: Fnv::new() };
+    w.put(MAGIC)?;
+    w.u32(VERSION)?;
+    w.u64(image.graph.num_vertices() as u64)?;
+    w.u64(image.graph.num_edges() as u64)?;
+    w.u64(image.query_count)?;
+    w.u64(image.graph_version)?;
+    w.u64(image.wal_seq)?;
+    w.u8(image.clean_shutdown as u8)?;
+    for &id in image.graph.ids() {
+        w.u64(id)?;
+    }
+    for (s, d) in image.graph.edges() {
+        w.u32(s)?;
+        w.u32(d)?;
+    }
+    for &r in &image.ranks {
+        w.f64(r)?;
+    }
+    match &image.window {
+        Some(ws) => {
+            w.u8(1)?;
+            encode_window(&mut w, ws)?;
+        }
+        None => w.u8(0)?,
+    }
+    w.u64(image.durable_subs.len() as u64)?;
+    for rec in &image.durable_subs {
+        encode_sub(&mut w, rec)?;
+    }
+    let digest = w.hash.0;
+    let mut bytes = w.inner;
+    bytes.extend_from_slice(&digest.to_le_bytes());
+    Ok(bytes)
+}
+
+/// Write an image to `path` atomically (temp file + rename). With a
+/// fault injector arming [`CrashPoint::MidCheckpoint`], only half the
+/// bytes land — at the *final* path, as a non-atomic writer dying
+/// would leave them — and an error is returned; recovery must then
+/// fall back to the previous snapshot.
+pub fn write_image(
+    path: impl AsRef<Path>,
+    image: &CheckpointImage,
+    faults: Option<&FaultInjector>,
+) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = encode_image(image)?;
+    if let Some(inj) = faults {
+        if inj.take_crash(CrashPoint::MidCheckpoint) {
+            std::fs::write(path, &bytes[..bytes.len() / 2])?;
+            return Err(Error::Engine("injected crash: mid-checkpoint".into()));
+        }
+    }
+    let tmp = path.with_extension("vgcp.tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load and fully verify one checkpoint file.
+pub fn load_image(path: impl AsRef<Path>) -> Result<CheckpointImage> {
     let f = std::fs::File::open(path)?;
-    let mut r = HashingReader { inner: BufReader::new(f), hash: Fnv::new() };
+    let mut r = HashingReader { inner: std::io::BufReader::new(f), hash: Fnv::new() };
     let mut magic = [0u8; 4];
     r.take(&mut magic)?;
     if &magic != MAGIC {
@@ -149,7 +454,10 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     let n = r.u64()? as usize;
     let m = r.u64()? as usize;
     let query_count = r.u64()?;
-    let mut ids = Vec::with_capacity(n);
+    let graph_version = r.u64()?;
+    let wal_seq = r.u64()?;
+    let clean_shutdown = r.u8()? != 0;
+    let mut ids = Vec::with_capacity(n.min(1 << 24));
     for _ in 0..n {
         ids.push(r.u64()?);
     }
@@ -167,9 +475,18 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
             .add_edge(ids[s], ids[d])
             .map_err(|e| Error::Parse(format!("corrupt checkpoint: {e}")))?;
     }
-    let mut ranks = Vec::with_capacity(n);
+    let mut ranks = Vec::with_capacity(n.min(1 << 24));
     for _ in 0..n {
         ranks.push(r.f64()?);
+    }
+    let window = if r.u8()? != 0 { Some(decode_window(&mut r)?) } else { None };
+    let n_subs = r.u64()? as usize;
+    if n_subs > 1 << 20 {
+        return Err(Error::Parse("corrupt checkpoint: implausible subscription count".into()));
+    }
+    let mut durable_subs = Vec::with_capacity(n_subs);
+    for _ in 0..n_subs {
+        durable_subs.push(decode_sub(&mut r)?);
     }
     let expect = r.hash.0;
     let mut tail = [0u8; 8];
@@ -177,64 +494,430 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     if u64::from_le_bytes(tail) != expect {
         return Err(Error::Parse("checkpoint checksum mismatch".into()));
     }
-    Ok(Checkpoint { graph, ranks, query_count })
+    Ok(CheckpointImage {
+        graph,
+        ranks,
+        query_count,
+        graph_version,
+        wal_seq,
+        clean_shutdown,
+        window,
+        durable_subs,
+    })
+}
+
+/// Serialize graph + ranks + query counter to `path` (legacy-shape
+/// convenience; durability extras default to empty).
+pub fn save(
+    path: impl AsRef<Path>,
+    graph: &DynamicGraph,
+    ranks: &[f64],
+    query_count: u64,
+) -> Result<()> {
+    let image = CheckpointImage {
+        graph: graph.clone(),
+        ranks: ranks.to_vec(),
+        query_count,
+        graph_version: graph.version(),
+        wal_seq: 0,
+        clean_shutdown: true,
+        window: None,
+        durable_subs: Vec::new(),
+    };
+    write_image(path, &image, None)
+}
+
+/// Load a checkpoint, verifying magic/version/checksum (legacy shape).
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let image = load_image(path)?;
+    Ok(Checkpoint { graph: image.graph, ranks: image.ranks, query_count: image.query_count })
+}
+
+/// Where the snapshot covering WAL position `wal_seq` lives.
+pub fn snapshot_path(dir: &Path, wal_seq: u64) -> PathBuf {
+    dir.join(format!("ckpt-{wal_seq:020}.vgcp"))
+}
+
+/// All snapshot files in `dir`, sorted by WAL position ascending.
+fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(num) = name.strip_prefix("ckpt-").and_then(|n| n.strip_suffix(".vgcp")) {
+            if let Ok(seq) = num.parse::<u64>() {
+                out.push((seq, entry.path()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Delete all but the newest `keep` snapshots.
+fn prune_snapshots(dir: &Path, keep: usize) {
+    let snaps = list_snapshots(dir);
+    if snaps.len() > keep {
+        for (_, path) in &snaps[..snaps.len() - keep] {
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+/// One off-thread checkpoint dump: built on the engine thread, run on
+/// the recompute worker, result returned through the command queue.
+pub struct CheckpointJob {
+    /// Durability directory.
+    pub dir: PathBuf,
+    /// Snapshots to retain after this one lands.
+    pub keep: usize,
+    /// The frozen state to dump.
+    pub image: CheckpointImage,
+    /// Fault injection (tests).
+    pub faults: Option<Arc<FaultInjector>>,
+    /// Shared gauges to update.
+    pub stats: Arc<DurabilityStats>,
+}
+
+/// What a finished checkpoint job reports back to the engine thread.
+#[derive(Clone, Debug)]
+pub struct CheckpointOutcome {
+    /// Whether the snapshot landed (atomically) on disk.
+    pub ok: bool,
+    /// The WAL position the snapshot covers.
+    pub wal_seq: u64,
+    /// The failure, if any.
+    pub err: Option<String>,
+}
+
+impl CheckpointJob {
+    /// Dump the image, prune old snapshots on success, update gauges.
+    pub fn run(self) -> CheckpointOutcome {
+        let wal_seq = self.image.wal_seq;
+        let path = snapshot_path(&self.dir, wal_seq);
+        match write_image(&path, &self.image, self.faults.as_deref()) {
+            Ok(()) => {
+                prune_snapshots(&self.dir, self.keep);
+                self.stats.note_checkpoint(true, wal_seq);
+                CheckpointOutcome { ok: true, wal_seq, err: None }
+            }
+            Err(e) => {
+                self.stats.note_checkpoint(false, wal_seq);
+                CheckpointOutcome { ok: false, wal_seq, err: Some(e.to_string()) }
+            }
+        }
+    }
+}
+
+/// What [`recover`] found on disk.
+pub struct Recovered {
+    /// The newest snapshot that verified, if any.
+    pub image: Option<CheckpointImage>,
+    /// WAL records newer than the snapshot, in order — replay these
+    /// through the ordinary batch path.
+    pub tail: Vec<WalRecord>,
+    /// Where the reopened WAL should continue.
+    pub next_seq: u64,
+    /// Recovery accounting.
+    pub report: RecoveryReport,
+}
+
+/// Recovery accounting, printed by the CLI and surfaced in stats.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// WAL position of the loaded snapshot (None = no usable snapshot).
+    pub snapshot_loaded: Option<u64>,
+    /// Corrupt/unreadable snapshots skipped before one verified.
+    pub snapshots_skipped: usize,
+    /// WAL batches replayed.
+    pub replayed_batches: usize,
+    /// Effective ops inside those batches.
+    pub replayed_ops: usize,
+    /// A torn WAL tail was detected and discarded.
+    pub torn_tail_discarded: bool,
+    /// True when the previous run shut down cleanly (final checkpoint,
+    /// empty tail) — recovery then replays nothing.
+    pub clean_shutdown: bool,
+}
+
+/// Inspect a durability directory: newest valid snapshot (older ones
+/// tried on corruption) plus the WAL tail past it. Pure read — call
+/// before opening the WAL for append.
+pub fn recover(dir: &Path) -> Result<Recovered> {
+    let mut report = RecoveryReport::default();
+    let mut image = None;
+    let snaps = list_snapshots(dir);
+    for (seq, path) in snaps.iter().rev() {
+        match load_image(path) {
+            Ok(img) => {
+                report.snapshot_loaded = Some(*seq);
+                image = Some(img);
+                break;
+            }
+            Err(e) => {
+                eprintln!(
+                    "[veilgraph] skipping corrupt checkpoint {}: {e}",
+                    path.display()
+                );
+                report.snapshots_skipped += 1;
+            }
+        }
+    }
+    let scan = Wal::scan(dir)?;
+    report.torn_tail_discarded = scan.torn_tail_discarded;
+    let base_seq = image.as_ref().map(|i: &CheckpointImage| i.wal_seq).unwrap_or(0);
+    let tail: Vec<WalRecord> =
+        scan.records.into_iter().filter(|r| r.seq > base_seq).collect();
+    report.replayed_batches = tail.len();
+    report.replayed_ops = tail.iter().map(|r| r.ops.len()).sum();
+    report.clean_shutdown =
+        image.as_ref().map(|i| i.clean_shutdown).unwrap_or(false) && tail.is_empty();
+    let next_seq = scan.next_seq.max(base_seq + 1);
+    Ok(Recovered { image, tail, next_seq, report })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::generate;
+    use crate::stream::event::EdgeOp;
 
     fn tmp(name: &str) -> std::path::PathBuf {
-        std::env::temp_dir().join(format!("vg-ckpt-{name}-{}", std::process::id()))
+        std::env::temp_dir().join(format!(
+            "vg-ckpt-{name}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn image(g: &DynamicGraph, wal_seq: u64) -> CheckpointImage {
+        CheckpointImage {
+            graph: g.clone(),
+            ranks: (0..g.num_vertices()).map(|i| i as f64 * 0.01).collect(),
+            query_count: 42,
+            graph_version: g.version(),
+            wal_seq,
+            clean_shutdown: false,
+            window: Some(WindowState {
+                window_nanos: 1_000,
+                next_stamp: 9,
+                live: vec![(1, 2, 1, 3)],
+                entries: vec![(500, 1, 2, 3)],
+            }),
+            durable_subs: vec![
+                DurableSubRecord {
+                    token: "client-a".into(),
+                    spec: Subscription::TopK { k: 3 },
+                    state: SubState::TopK(vec![4, 7, 9]),
+                    last_version: 11,
+                },
+                DurableSubRecord {
+                    token: "client-b".into(),
+                    spec: Subscription::RankThreshold { id: 5, tau: 0.25 },
+                    state: SubState::Above(true),
+                    last_version: 12,
+                },
+                DurableSubRecord {
+                    token: "client-c".into(),
+                    spec: Subscription::Community { id: 8 },
+                    state: SubState::Label(Some(3)),
+                    last_version: 13,
+                },
+            ],
+        }
     }
 
     #[test]
     fn roundtrip_preserves_everything() {
         let edges = generate::barabasi_albert(200, 3, 0.5, 3);
         let (g, _) = DynamicGraph::from_edges(edges);
-        let ranks: Vec<f64> = (0..g.num_vertices()).map(|i| i as f64 * 0.01).collect();
         let p = tmp("roundtrip");
-        save(&p, &g, &ranks, 42).unwrap();
-        let c = load(&p).unwrap();
+        std::fs::create_dir_all(&p).unwrap();
+        let path = snapshot_path(&p, 7);
+        let img = image(&g, 7);
+        write_image(&path, &img, None).unwrap();
+        let c = load_image(&path).unwrap();
         assert_eq!(c.query_count, 42);
+        assert_eq!(c.graph_version, img.graph_version);
+        assert_eq!(c.wal_seq, 7);
+        assert!(!c.clean_shutdown);
         assert_eq!(c.graph.num_vertices(), g.num_vertices());
         assert_eq!(c.graph.num_edges(), g.num_edges());
-        assert_eq!(c.ranks, ranks);
+        assert_eq!(c.ranks, img.ranks);
         assert_eq!(c.graph.ids(), g.ids());
         for (s, d) in g.edges() {
             assert!(c.graph.has_edge(g.id(s), g.id(d)));
         }
-        std::fs::remove_file(&p).ok();
+        assert_eq!(c.window, img.window);
+        assert_eq!(c.durable_subs, img.durable_subs);
+        std::fs::remove_dir_all(&p).ok();
+    }
+
+    #[test]
+    fn legacy_save_load_shape_still_works() {
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 3)]);
+        let p = tmp("legacy");
+        std::fs::create_dir_all(&p).unwrap();
+        let path = p.join("ck.vgcp");
+        save(&path, &g, &[0.1, 0.2, 0.3], 5).unwrap();
+        let c = load(&path).unwrap();
+        assert_eq!(c.query_count, 5);
+        assert_eq!(c.ranks, vec![0.1, 0.2, 0.3]);
+        assert_eq!(c.graph.num_edges(), 2);
+        std::fs::remove_dir_all(&p).ok();
     }
 
     #[test]
     fn corruption_is_detected() {
         let (g, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 3)]);
         let p = tmp("corrupt");
-        save(&p, &g, &[0.1, 0.2, 0.3], 1).unwrap();
-        let mut bytes = std::fs::read(&p).unwrap();
+        std::fs::create_dir_all(&p).unwrap();
+        let path = p.join("ck.vgcp");
+        save(&path, &g, &[0.1, 0.2, 0.3], 1).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xFF;
-        std::fs::write(&p, &bytes).unwrap();
-        assert!(load(&p).is_err(), "flipped byte must fail checksum or parse");
-        std::fs::remove_file(&p).ok();
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err(), "flipped byte must fail checksum or parse");
+        std::fs::remove_dir_all(&p).ok();
     }
 
     #[test]
     fn wrong_magic_rejected() {
         let p = tmp("magic");
-        std::fs::write(&p, b"NOPE....xxxxxxxxxxxx").unwrap();
-        let e = load(&p).unwrap_err();
+        std::fs::create_dir_all(&p).unwrap();
+        let path = p.join("ck.vgcp");
+        std::fs::write(&path, b"NOPE....xxxxxxxxxxxx").unwrap();
+        let e = load(&path).unwrap_err();
         assert!(e.to_string().contains("not a VeilGraph checkpoint"));
-        std::fs::remove_file(&p).ok();
+        std::fs::remove_dir_all(&p).ok();
     }
 
     #[test]
     fn rank_length_mismatch_rejected_on_save() {
         let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
         let p = tmp("mismatch");
-        assert!(save(&p, &g, &[0.1], 0).is_err());
-        std::fs::remove_file(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        assert!(save(p.join("ck.vgcp"), &g, &[0.1], 0).is_err());
+        std::fs::remove_dir_all(&p).ok();
+    }
+
+    #[test]
+    fn recover_falls_back_to_older_snapshot_on_corruption() {
+        let dir = tmp("fallback");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (g1, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let (g2, _) = DynamicGraph::from_edges(vec![(1, 2), (2, 3)]);
+        let mut img1 = image(&g1, 3);
+        img1.ranks = vec![0.5, 0.5];
+        let mut img2 = image(&g2, 8);
+        img2.ranks = vec![0.3, 0.3, 0.4];
+        write_image(snapshot_path(&dir, 3), &img1, None).unwrap();
+        write_image(snapshot_path(&dir, 8), &img2, None).unwrap();
+        // Corrupt the newest.
+        let newest = snapshot_path(&dir, 8);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let len = bytes.len();
+        bytes[len - 3] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.report.snapshots_skipped, 1);
+        assert_eq!(rec.report.snapshot_loaded, Some(3));
+        assert_eq!(rec.image.unwrap().ranks, vec![0.5, 0.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mid_checkpoint_crash_leaves_recoverable_directory() {
+        use crate::testing::faults::FaultInjector;
+        let dir = tmp("midcrash");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let mut good = image(&g, 2);
+        good.ranks = vec![0.5, 0.5];
+        write_image(snapshot_path(&dir, 2), &good, None).unwrap();
+        // Second checkpoint dies halfway, through the injector.
+        let inj = FaultInjector::new();
+        inj.arm_crash(CrashPoint::MidCheckpoint);
+        let stats = DurabilityStats::new();
+        let job = CheckpointJob {
+            dir: dir.clone(),
+            keep: 3,
+            image: image(&g, 6),
+            faults: Some(std::sync::Arc::clone(&inj)),
+            stats: std::sync::Arc::clone(&stats),
+        };
+        let out = job.run();
+        assert!(!out.ok);
+        assert_eq!(inj.trips(), 1);
+        // The torn file exists at the final path, yet recovery lands on
+        // the older good snapshot.
+        assert!(snapshot_path(&dir, 6).exists());
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.report.snapshot_loaded, Some(2));
+        assert_eq!(rec.report.snapshots_skipped, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_job_prunes_old_snapshots() {
+        let dir = tmp("prune");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (g, _) = DynamicGraph::from_edges(vec![(1, 2)]);
+        let stats = DurabilityStats::new();
+        for seq in 1..=5u64 {
+            let mut img = image(&g, seq);
+            img.ranks = vec![0.5, 0.5];
+            let job = CheckpointJob {
+                dir: dir.clone(),
+                keep: 2,
+                image: img,
+                faults: None,
+                stats: std::sync::Arc::clone(&stats),
+            };
+            assert!(job.run().ok);
+        }
+        let snaps = list_snapshots(&dir);
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].0, 4);
+        assert_eq!(snaps[1].0, 5);
+        assert_eq!(stats.checkpoints_written(), 5);
+        assert_eq!(stats.last_checkpoint_seq(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_combines_snapshot_and_wal_tail() {
+        use crate::coordinator::wal::FsIo;
+        let dir = tmp("combine");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut wal = Wal::open(
+            &dir,
+            1,
+            SyncPolicy::Batch,
+            DEFAULT_SEGMENT_MAX_BYTES,
+            Box::new(FsIo),
+            DurabilityStats::new(),
+            None,
+        )
+        .unwrap();
+        for i in 0..4u64 {
+            wal.append_batch(&[EdgeOp::add(i, i + 1)]).unwrap();
+        }
+        drop(wal);
+        // Snapshot covers through seq 2; tail = seqs 3 and 4.
+        let (g, _) = DynamicGraph::from_edges(vec![(0, 1), (1, 2)]);
+        let mut img = image(&g, 2);
+        img.ranks = vec![0.3; g.num_vertices()];
+        write_image(snapshot_path(&dir, 2), &img, None).unwrap();
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.report.snapshot_loaded, Some(2));
+        assert_eq!(rec.report.replayed_batches, 2);
+        assert_eq!(rec.tail[0].seq, 3);
+        assert_eq!(rec.tail[1].seq, 4);
+        assert_eq!(rec.next_seq, 5);
+        assert!(!rec.report.clean_shutdown);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

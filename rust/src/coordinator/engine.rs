@@ -25,11 +25,15 @@
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
+use crate::coordinator::checkpoint::{
+    CheckpointImage, CheckpointJob, CheckpointOutcome, DurabilityConfig, RecoveryReport,
+};
 use crate::coordinator::policies::StalenessPolicy;
 use crate::coordinator::serving::{
     RankSnapshot, SnapshotPublisher, SnapshotReader, DEFAULT_PUBLISHED_TOP_K,
 };
 use crate::coordinator::udf::{Action, DefaultSuite, ExecStats, QueryContext, UdfSuite};
+use crate::coordinator::wal::{DurabilityStats, FsIo, Wal};
 use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
 use crate::graph::dynamic::DynamicGraph;
@@ -41,10 +45,12 @@ use crate::pagerank::summarized::merge_ranks_into;
 use crate::runtime::executor::SummarizedExecutor;
 use crate::stream::buffer::UpdateBuffer;
 use crate::stream::event::{EdgeOp, UpdateEvent};
+use crate::stream::window::WindowState;
 use crate::summary::bigvertex::SummaryGraph;
 use crate::summary::hot::{compute_hot_set_pooled, HotSetInputs};
 use crate::summary::params::SummaryParams;
 use crate::summary::scratch::{ScratchStats, SummaryScratch};
+use crate::testing::faults::{CrashPoint, FaultInjector};
 use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
 
@@ -298,6 +304,8 @@ pub struct EngineBuilder {
     max_xla_k: Option<usize>,
     published_top_k: usize,
     udf: Box<dyn UdfSuite>,
+    /// Set via [`Self::durability`]; consumed by [`Self::build_durable`].
+    durability: Option<DurabilityConfig>,
 }
 
 impl Default for EngineBuilder {
@@ -330,6 +338,7 @@ impl EngineBuilder {
             max_xla_k: None,
             published_top_k: DEFAULT_PUBLISHED_TOP_K,
             udf: Box::new(DefaultSuite),
+            durability: None,
         }
     }
 
@@ -431,10 +440,22 @@ impl EngineBuilder {
     /// Resume from a checkpoint written by [`Engine::save_checkpoint`]:
     /// restores the graph, the rank vector and the query counter without
     /// re-running the initial exact computation.
-    pub fn build_from_checkpoint(mut self, path: impl AsRef<std::path::Path>) -> Result<Engine> {
+    pub fn build_from_checkpoint(self, path: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let ckpt = crate::coordinator::checkpoint::load(path)?;
+        self.build_restored(ckpt.graph, ckpt.ranks, ckpt.query_count)
+    }
+
+    /// Build an engine around already-computed state (the restore path:
+    /// no initial exact run; the restored ranking is republished so
+    /// readers can serve before the first post-restore query).
+    fn build_restored(
+        mut self,
+        graph: DynamicGraph,
+        ranks: Vec<f64>,
+        query_count: u64,
+    ) -> Result<Engine> {
         self.resolve_parallelism();
         let pool = self.resolve_pool();
-        let ckpt = crate::coordinator::checkpoint::load(path)?;
         let mut executor = match &self.artifacts_dir {
             Some(dir) => SummarizedExecutor::with_artifacts(dir)?,
             None => SummarizedExecutor::sparse_only(),
@@ -447,7 +468,7 @@ impl EngineBuilder {
         }
         self.udf.on_start();
         let mut engine = Engine {
-            graph: ckpt.graph,
+            graph,
             buffer: UpdateBuffer::new(),
             params: self.params,
             pr_config: self.pr_config,
@@ -460,21 +481,113 @@ impl EngineBuilder {
             metrics: MetricsRegistry::new(),
             published: SnapshotPublisher::new(),
             published_top_k: self.published_top_k,
-            ranks: ckpt.ranks,
+            ranks,
             last_hot_set: Vec::new(),
             carry_prev_degree: HashMap::new(),
             carry_new_vertices: Vec::new(),
-            query_count: ckpt.query_count,
+            query_count,
             queries_since_exact: 0,
             last_publish: std::time::Instant::now(),
             queries_since_publish: 0,
             updates_since_refresh: 0,
             stopped: false,
+            wal: None,
+            durability: DurabilityStats::new(),
+            dur_dir: None,
+            dur_keep: 3,
+            dur_checkpoint_every: 64,
+            faults: None,
+            replaying: false,
+            applies_since_checkpoint: 0,
+            checkpoint_in_flight: false,
+            recovered_window: None,
         };
-        // Re-publish the restored ranking so readers can serve before the
-        // first post-restore query.
         engine.publish_now(engine.query_count, Action::ComputeExact, ExecStats::default());
         Ok(engine)
+    }
+
+    /// Configure durability: a write-ahead log plus periodic
+    /// crash-consistent checkpoints under `cfg.dir`. Consumed by
+    /// [`Self::build_durable`].
+    pub fn durability(mut self, cfg: DurabilityConfig) -> Self {
+        self.durability = Some(cfg);
+        self
+    }
+
+    /// Build with durability. If the configured directory holds state
+    /// from a previous run, recovery runs first: the newest valid
+    /// snapshot loads (older ones tried on corruption), the WAL tail
+    /// replays through the ordinary batch path, and the recovered
+    /// ranking republishes — `initial_edges` is only consulted when the
+    /// directory is empty. The first recompute then warm-starts from
+    /// the recovered ranks. Returns the engine and an accounting of
+    /// what recovery did.
+    pub fn build_durable(
+        mut self,
+        initial_edges: impl IntoIterator<Item = (VertexId, VertexId)>,
+    ) -> Result<(Engine, RecoveryReport)> {
+        let mut cfg = self.durability.take().ok_or_else(|| {
+            Error::Usage("build_durable requires .durability(DurabilityConfig)".into())
+        })?;
+        std::fs::create_dir_all(&cfg.dir)?;
+        let recovered = crate::coordinator::checkpoint::recover(&cfg.dir)?;
+        let report = recovered.report.clone();
+        let stats = DurabilityStats::new();
+        let mut window = None;
+        let mut durable_subs = Vec::new();
+        let mut engine = match recovered.image {
+            Some(mut image) => {
+                image.graph.set_version(image.graph_version);
+                window = image.window.take();
+                durable_subs = std::mem::take(&mut image.durable_subs);
+                self.build_restored(image.graph, image.ranks, image.query_count)?
+            }
+            None => self.build_from_edges(initial_edges)?,
+        };
+        if report.snapshot_loaded.is_some() || !recovered.tail.is_empty() {
+            stats.note_recovery(
+                report.replayed_batches as u64,
+                report.replayed_ops as u64,
+                report.torn_tail_discarded,
+                report.snapshots_skipped as u64,
+            );
+        }
+        engine.published.subscriptions().restore_durable(durable_subs);
+        engine.recovered_window = window;
+        // Replay the tail: each WAL record is one already-coalesced
+        // effective batch, re-applied through the same path that
+        // produced it — the recovered CSR and rank layout come out
+        // bit-identical to the pre-crash state.
+        engine.replaying = true;
+        for rec in &recovered.tail {
+            engine.ingest_batch(rec.ops.iter().copied());
+            engine.apply_pending_batch();
+        }
+        engine.replaying = false;
+        if !recovered.tail.is_empty() {
+            // Replayed batches may have grown the graph past the
+            // checkpointed rank vector; published snapshots carry one
+            // rank per vertex.
+            engine.extend_ranks_for_new_vertices();
+            engine.publish_now(engine.query_count, Action::ComputeExact, ExecStats::default());
+        }
+        let io = cfg.io.take().unwrap_or_else(|| Box::new(FsIo));
+        let wal = Wal::open(
+            cfg.dir.clone(),
+            recovered.next_seq,
+            cfg.sync,
+            cfg.segment_max_bytes,
+            io,
+            Arc::clone(&stats),
+            cfg.faults.clone(),
+        )?;
+        engine.wal = Some(wal);
+        engine.durability = stats;
+        engine.dur_dir = Some(cfg.dir);
+        engine.dur_keep = cfg.keep_snapshots;
+        engine.dur_checkpoint_every = cfg.checkpoint_every;
+        engine.faults = cfg.faults;
+        Ok((engine, report))
     }
 
     /// Build from an existing graph.
@@ -516,6 +629,16 @@ impl EngineBuilder {
             queries_since_publish: 0,
             updates_since_refresh: 0,
             stopped: false,
+            wal: None,
+            durability: DurabilityStats::new(),
+            dur_dir: None,
+            dur_keep: 3,
+            dur_checkpoint_every: 64,
+            faults: None,
+            replaying: false,
+            applies_since_checkpoint: 0,
+            checkpoint_in_flight: false,
+            recovered_window: None,
         };
         // Initial complete execution (measurement point 0).
         let (iters, secs) = crate::util::timer::timed(|| engine.compute_exact());
@@ -585,6 +708,30 @@ pub struct Engine {
     /// recomputed — the accumulated-error proxy for staleness policies.
     updates_since_refresh: u64,
     stopped: bool,
+    // ---- durability (inert when the engine runs without a data dir) ----
+    /// Write-ahead log; `Some` ⇔ durability configured.
+    wal: Option<Wal>,
+    /// Shared durability gauges (the wire `stats.durability` section);
+    /// always present, reporting `enabled: false` without a WAL.
+    durability: Arc<DurabilityStats>,
+    /// Durability directory (WAL segments + checkpoint files).
+    dur_dir: Option<std::path::PathBuf>,
+    /// Snapshots retained for corruption fallback.
+    dur_keep: usize,
+    /// Applied batches between checkpoints.
+    dur_checkpoint_every: u64,
+    /// Fault injection (tests; `None` in production).
+    faults: Option<Arc<FaultInjector>>,
+    /// True while recovery replays the WAL tail — replayed batches must
+    /// not be appended again.
+    replaying: bool,
+    /// Applied batches since the last checkpoint was cut.
+    applies_since_checkpoint: u64,
+    /// An off-thread checkpoint job is outstanding (at most one).
+    checkpoint_in_flight: bool,
+    /// Window admission state recovered from the loaded snapshot; the
+    /// server claims it via [`Engine::take_recovered_window`].
+    recovered_window: Option<WindowState>,
 }
 
 impl Engine {
@@ -632,6 +779,24 @@ impl Engine {
         let sw = Stopwatch::start();
         let batch = self.buffer.take_batch(&self.graph);
         self.metrics.time("ingest_coalesce_secs", sw.secs());
+        // Durability: the effective batch becomes a WAL record *before*
+        // it mutates the graph — crash recovery replays exactly these
+        // records back through this same path. Replayed batches skip
+        // the append (they are already in the log). I/O failures are
+        // absorbed inside the WAL (degradation, not errors); the only
+        // `Err` here is an injected crash point.
+        if !self.replaying && !batch.ops().is_empty() {
+            if let Some(wal) = self.wal.as_mut() {
+                if let Err(e) = wal.append_batch(batch.ops()) {
+                    // The record is durable, the in-memory apply never
+                    // happens, and the engine goes dead — exactly the
+                    // state a process killed here leaves behind.
+                    eprintln!("[veilgraph] {e}");
+                    self.stopped = true;
+                    return;
+                }
+            }
+        }
         // Keep the EARLIEST previous degree per vertex across applies
         // (`d_{t-1}` must survive repeat-last queries to the next
         // measurement point). Membership goes through a hash set so a
@@ -665,6 +830,9 @@ impl Engine {
         self.metrics.set("last_batch_raw_ops", batch.raw_ops as f64);
         self.metrics.set("last_batch_effective_ops", batch.effective_ops() as f64);
         self.updates_since_refresh += res.applied as u64;
+        if self.wal.is_some() && !self.replaying {
+            self.applies_since_checkpoint += 1;
+        }
         self.refresh_ingest_gauges();
     }
 
@@ -1116,6 +1284,18 @@ impl Engine {
         exec: ExecStats,
         carry_age_from: Option<std::time::Instant>,
     ) -> Arc<RankSnapshot> {
+        if let Some(inj) = self.faults.as_ref() {
+            if inj.take_crash(CrashPoint::PrePublish) {
+                // Injected crash: the recompute finished and the WAL
+                // holds every applied batch, but the publish never
+                // happens — readers keep the previous snapshot, exactly
+                // as after a real crash here. Recovery reconstructs the
+                // unpublished state from snapshot + tail replay.
+                eprintln!("[veilgraph] injected crash: pre-publish");
+                self.stopped = true;
+                return self.published.latest();
+            }
+        }
         let version = self.published.latest().version + 1;
         let mut snap = RankSnapshot::new(
             version,
@@ -1239,6 +1419,128 @@ impl Engine {
     /// Whether the XLA backend is attached.
     pub fn has_xla(&self) -> bool {
         self.executor.has_xla()
+    }
+
+    // ---- durability ----------------------------------------------------
+
+    /// Apply any pending (coalesced) updates now, without serving a
+    /// query — graceful shutdown and the ingest benches use this to
+    /// drive the WAL + apply path directly.
+    pub fn flush_pending(&mut self) {
+        if !self.buffer.is_empty() {
+            self.apply_pending_batch();
+        }
+    }
+
+    /// Shared durability gauges (always present; they report
+    /// `enabled: false` when the engine runs without a WAL).
+    pub fn durability_stats(&self) -> Arc<DurabilityStats> {
+        Arc::clone(&self.durability)
+    }
+
+    /// Whether this engine runs with a WAL and checkpoints.
+    pub fn durable(&self) -> bool {
+        self.dur_dir.is_some()
+    }
+
+    /// The window admission state recovered from the loaded checkpoint
+    /// (one-shot; the server claims it when rebuilding its window
+    /// stage under a fresh epoch).
+    pub fn take_recovered_window(&mut self) -> Option<WindowState> {
+        self.recovered_window.take()
+    }
+
+    /// Whether enough batches have applied since the last checkpoint to
+    /// cut a new one (and none is already in flight).
+    pub fn checkpoint_due(&self) -> bool {
+        self.dur_dir.is_some()
+            && !self.checkpoint_in_flight
+            && self.applies_since_checkpoint >= self.dur_checkpoint_every
+    }
+
+    /// Freeze the engine state into an off-thread [`CheckpointJob`].
+    /// `window` is the serving layer's admission state, exported by the
+    /// caller (the engine does not own the window stage). Returns
+    /// `None` without durability or while a checkpoint is in flight.
+    pub fn begin_checkpoint(&mut self, window: Option<WindowState>) -> Option<CheckpointJob> {
+        let dir = self.dur_dir.clone()?;
+        if self.checkpoint_in_flight {
+            return None;
+        }
+        self.checkpoint_in_flight = true;
+        self.applies_since_checkpoint = 0;
+        // Applies since the last recompute may have added vertices the
+        // rank vector does not cover yet; a snapshot must be internally
+        // consistent (one rank per vertex), so extend with the same
+        // teleport-level defaults a recompute would use.
+        self.extend_ranks_for_new_vertices();
+        Some(CheckpointJob {
+            dir,
+            keep: self.dur_keep,
+            image: self.capture_image(window, false),
+            faults: self.faults.clone(),
+            stats: Arc::clone(&self.durability),
+        })
+    }
+
+    /// Integrate a finished checkpoint: clear the in-flight flag and,
+    /// on success, drop WAL segments the snapshot made redundant.
+    pub fn finish_checkpoint(&mut self, outcome: CheckpointOutcome) {
+        self.checkpoint_in_flight = false;
+        if outcome.ok {
+            if let Some(wal) = self.wal.as_mut() {
+                wal.prune_up_to(outcome.wal_seq);
+            }
+        } else if let Some(e) = outcome.err {
+            eprintln!("[veilgraph] checkpoint failed: {e}");
+        }
+    }
+
+    /// Graceful-shutdown persistence: flush pending updates through the
+    /// WAL + apply path, fsync the log, then write a final checkpoint
+    /// marked clean, synchronously — recovery after this replays
+    /// nothing. No-op without durability.
+    pub fn shutdown_durable(&mut self, window: Option<WindowState>) {
+        let Some(dir) = self.dur_dir.clone() else { return };
+        self.flush_pending();
+        self.extend_ranks_for_new_vertices();
+        if let Some(wal) = self.wal.as_mut() {
+            if let Err(e) = wal.sync() {
+                eprintln!("[veilgraph] final wal sync failed: {e}");
+            }
+        }
+        let job = CheckpointJob {
+            dir,
+            keep: self.dur_keep,
+            image: self.capture_image(window, true),
+            faults: self.faults.clone(),
+            stats: Arc::clone(&self.durability),
+        };
+        let out = job.run();
+        if let Some(e) = out.err {
+            eprintln!("[veilgraph] final checkpoint failed: {e}");
+        }
+        if out.ok {
+            if let Some(wal) = self.wal.as_mut() {
+                wal.prune_up_to(out.wal_seq);
+            }
+        }
+        self.checkpoint_in_flight = false;
+    }
+
+    /// Freeze everything one checkpoint captures (cheap clones on the
+    /// engine thread; the dump itself runs off-thread).
+    fn capture_image(&self, window: Option<WindowState>, clean: bool) -> CheckpointImage {
+        CheckpointImage {
+            graph: self.graph.clone(),
+            ranks: self.ranks.clone(),
+            query_count: self.query_count,
+            graph_version: self.graph.version(),
+            wal_seq: self.wal.as_ref().map(|w| w.next_seq() - 1).unwrap_or(0),
+            clean_shutdown: clean,
+            window,
+            durable_subs: self.published.subscriptions().durable_records(),
+        }
     }
 
     /// Persist graph + ranks + query counter (see

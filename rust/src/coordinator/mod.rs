@@ -11,3 +11,4 @@ pub mod server;
 pub mod serving;
 pub mod subscription;
 pub mod udf;
+pub mod wal;

@@ -111,8 +111,11 @@ pub enum Request {
     Rank { id: VertexId },
     /// Serving + engine + server gauges.
     Stats,
-    /// Register a standing query (v2 connections only).
-    Subscribe(Subscription),
+    /// Register a standing query (v2 connections only). A `token`
+    /// makes the subscription durable: it survives restarts in the
+    /// server's checkpoints, and a re-subscribe under the same token
+    /// replays the diff missed while disconnected.
+    Subscribe { spec: Subscription, token: Option<String> },
     /// Drop a standing query owned by this connection.
     Unsubscribe { sub: u64 },
     /// Stop the server.
@@ -165,7 +168,10 @@ impl Request {
                 None => Err("rank needs a numeric id".into()),
             },
             "stats" => Ok(Request::Stats),
-            "subscribe" => Subscription::parse(req).map(Request::Subscribe),
+            "subscribe" => Subscription::parse(req).map(|spec| Request::Subscribe {
+                spec,
+                token: req.get("token").and_then(Json::as_str).map(str::to_string),
+            }),
             "unsubscribe" => match req.get("sub").and_then(Json::as_u64) {
                 Some(sub) => Ok(Request::Unsubscribe { sub }),
                 None => Err("unsubscribe needs a numeric sub id".into()),
@@ -233,8 +239,9 @@ pub enum Response {
     Rank { version: u64, id: VertexId, rank: Option<f64> },
     /// The assembled `stats` sections.
     Stats(Json),
-    /// A standing query registered.
-    Subscribed { sub: u64 },
+    /// A standing query registered. `replayed` is true when a durable
+    /// re-subscribe delivered the diff missed while disconnected.
+    Subscribed { sub: u64, replayed: bool },
     /// A standing query dropped.
     Unsubscribed { sub: u64 },
     /// A structured error. The codes are stable protocol surface:
@@ -291,7 +298,11 @@ impl Response {
             Response::Stats(stats) => {
                 map.insert("stats".into(), stats.clone());
             }
-            Response::Subscribed { sub } | Response::Unsubscribed { sub } => {
+            Response::Subscribed { sub, replayed } => {
+                map.insert("sub".into(), Json::Num(*sub as f64));
+                map.insert("replayed".into(), Json::Bool(*replayed));
+            }
+            Response::Unsubscribed { sub } => {
                 map.insert("sub".into(), Json::Num(*sub as f64));
             }
             Response::Error { code, msg, extra } => {

@@ -62,6 +62,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::community::streaming::StreamingCommunities;
+use crate::coordinator::checkpoint::{CheckpointJob, CheckpointOutcome};
 use crate::coordinator::engine::{
     AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeResult,
 };
@@ -70,6 +71,7 @@ use crate::coordinator::protocol::{Envelope, Request, Response};
 use crate::coordinator::serving::{ReadKind, SnapshotReader};
 use crate::coordinator::subscription::{Mailbox, SubscriptionRegistry};
 use crate::coordinator::udf::Action;
+use crate::coordinator::wal::DurabilityStats;
 use crate::error::{Error, Result};
 use crate::graph::VertexId;
 use crate::stream::backpressure::{BoundedQueue, OverflowPolicy};
@@ -98,11 +100,23 @@ enum Command {
     WireQuery(Sender<Result<AsyncQueryResult>>),
     /// A finished off-thread recompute coming home to be installed.
     RecomputeDone(Box<RecomputeResult>),
+    /// A finished off-thread checkpoint dump reporting back (clears the
+    /// in-flight flag; on success the WAL prunes covered segments).
+    CheckpointDone(CheckpointOutcome),
     Stats(Sender<Json>),
     /// A timer pulse from the window ticker: wakes the engine thread so
     /// sliding-window expiry runs even when no client traffic arrives.
     Tick,
     Shutdown,
+}
+
+/// Work shipped to the off-thread worker: version-fenced recomputes and
+/// checkpoint dumps share one thread — both are periodic, bounded-rate
+/// background work that must never block ingest or reads, and sharing
+/// keeps at most one heavy background task on the machine at a time.
+enum WorkerJob {
+    Recompute(RecomputeJob),
+    Checkpoint(CheckpointJob),
 }
 
 /// Live counters for the wire front end, shared between the acceptor,
@@ -201,6 +215,10 @@ pub struct ServerHandle {
     policy: StalenessPolicy,
     wire: Arc<WireStats>,
     gate: Arc<RecomputeGate>,
+    /// Durability gauges shared with the engine (the wire
+    /// `stats.durability` section; reports `enabled: false` when the
+    /// server runs without a data dir).
+    durability: Arc<DurabilityStats>,
 }
 
 impl ServerHandle {
@@ -208,29 +226,45 @@ impl ServerHandle {
     /// overflow and staleness knobs from `opts`.
     pub fn spawn_with(mut engine: Engine, opts: &ServeOptions) -> Self {
         let reader = engine.reader();
+        let durability = engine.durability_stats();
         let queue = Arc::new(BoundedQueue::new(opts.queue_capacity, opts.overflow));
         let running = Arc::new(AtomicBool::new(true));
         let wire = Arc::new(WireStats::default());
         let gate = Arc::new(RecomputeGate::new());
         let policy = opts.policy;
 
-        let (job_tx, job_rx) = channel::<RecomputeJob>();
+        let (job_tx, job_rx) = channel::<WorkerJob>();
         let q_jobs = Arc::clone(&queue);
         let gate2 = Arc::clone(&gate);
         let recompute = std::thread::Builder::new()
             .name("veilgraph-recompute".into())
             .spawn(move || {
                 while let Ok(job) = job_rx.recv() {
-                    if !gate2.wait_released(&q_jobs) {
-                        break;
-                    }
-                    let res = job.run();
                     // Results ride the command queue ahead of capacity
-                    // (control plane, at most one outstanding): a full
-                    // queue must not be able to strand a finished
-                    // recompute.
-                    if q_jobs.force_push(Command::RecomputeDone(Box::new(res))).is_err() {
-                        break;
+                    // (control plane, at most one outstanding per kind):
+                    // a full queue must not be able to strand a finished
+                    // job.
+                    match job {
+                        WorkerJob::Recompute(job) => {
+                            if !gate2.wait_released(&q_jobs) {
+                                break;
+                            }
+                            let res = job.run();
+                            if q_jobs
+                                .force_push(Command::RecomputeDone(Box::new(res)))
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        // Checkpoint dumps skip the test gate: holding a
+                        // recompute must not wedge durability.
+                        WorkerJob::Checkpoint(job) => {
+                            let out = job.run();
+                            if q_jobs.force_push(Command::CheckpointDone(out)).is_err() {
+                                break;
+                            }
+                        }
                     }
                 }
             })
@@ -253,8 +287,17 @@ impl ServerHandle {
                 // The window's logical clock: wall nanoseconds since the
                 // engine thread started.
                 let epoch = Instant::now();
-                let mut window =
-                    if window_nanos > 0 { Some(SlidingWindow::new(window_nanos)) } else { None };
+                // A recovered admission state restores under the fresh
+                // epoch (remaining lifetimes preserved); otherwise the
+                // window starts empty.
+                let mut window = if window_nanos > 0 {
+                    Some(match engine.take_recovered_window() {
+                        Some(ws) => SlidingWindow::restore(&ws, 0),
+                        None => SlidingWindow::new(window_nanos),
+                    })
+                } else {
+                    None
+                };
                 // The second standing-analytics workload: streaming label
                 // propagation, seeded from the engine's graph and kept in
                 // step with every mutation (including window expiries).
@@ -319,7 +362,7 @@ impl ServerHandle {
                             match engine.query_async(&policy, pressure, !in_flight) {
                                 Ok((mut aq, job)) => {
                                     if let Some(job) = job {
-                                        if job_tx.send(job).is_ok() {
+                                        if job_tx.send(WorkerJob::Recompute(job)).is_ok() {
                                             in_flight = true;
                                             w2.recompute_in_flight.store(true, Ordering::SeqCst);
                                         } else {
@@ -344,11 +387,24 @@ impl ServerHandle {
                             }
                             publish_point = true;
                         }
+                        Command::CheckpointDone(out) => {
+                            engine.finish_checkpoint(out);
+                        }
                         Command::Stats(reply) => {
                             let _ = reply.send(engine.metrics().to_json());
                         }
                         Command::Tick => {}
-                        Command::Shutdown => break,
+                        Command::Shutdown => {
+                            // Graceful shutdown: drain in-flight batches
+                            // through the WAL, fsync, and cut a final
+                            // checkpoint marked clean — restart after
+                            // this replays nothing.
+                            let ws = window
+                                .as_ref()
+                                .map(|w| w.export_state(epoch.elapsed().as_nanos() as u64));
+                            engine.shutdown_durable(ws);
+                            break;
+                        }
                     }
                     // Sliding-window expiry runs after every command
                     // (ticks included): expired edges leave as one
@@ -395,6 +451,18 @@ impl ServerHandle {
                             community_dirty = false;
                         }
                     }
+                    // Durability: cut a checkpoint every N applied
+                    // batches. The engine freezes a clone (cheap, on
+                    // this thread); the dump runs on the worker so a
+                    // large graph never blocks ingest.
+                    if engine.checkpoint_due() {
+                        let ws = window
+                            .as_ref()
+                            .map(|w| w.export_state(epoch.elapsed().as_nanos() as u64));
+                        if let Some(job) = engine.begin_checkpoint(ws) {
+                            let _ = job_tx.send(WorkerJob::Checkpoint(job));
+                        }
+                    }
                 }
                 // Dropping the job sender unblocks the recompute worker's
                 // recv so it can exit.
@@ -435,6 +503,7 @@ impl ServerHandle {
             policy,
             wire,
             gate,
+            durability,
         }
     }
 
@@ -514,6 +583,12 @@ impl ServerHandle {
         &self.wire
     }
 
+    /// Live durability gauges (WAL + checkpoint state; `enabled: false`
+    /// when the server runs without a data dir).
+    pub fn durability_stats(&self) -> &DurabilityStats {
+        &self.durability
+    }
+
     /// The standing-query registry: register, drop and inspect
     /// subscriptions evaluated at every snapshot publish.
     pub fn subscriptions(&self) -> &SubscriptionRegistry {
@@ -569,8 +644,11 @@ impl ServerHandle {
                 Json::Num(self.wire.window_tracked.load(Ordering::SeqCst) as f64),
             ),
             ("subscriptions", Json::Num(subs.len() as f64)),
+            ("durable_subscriptions", Json::Num(subs.durable_len() as f64)),
             ("notifications_sent", Json::Num(subs.notifications_sent() as f64)),
             ("notifications_dropped", Json::Num(subs.notifications_dropped() as f64)),
+            ("notifications_merged", Json::Num(subs.notifications_merged() as f64)),
+            ("sub_delivery", subs.delivery_counters_json()),
             ("policy", self.policy.to_json()),
             ("last_decision", last),
         ])
@@ -890,13 +968,14 @@ fn dispatch(
             let stats = match handle.reader.stats_json() {
                 Json::Obj(mut fields) => {
                     fields.insert("server".into(), handle.server_stats_json());
+                    fields.insert("durability".into(), handle.durability.to_json());
                     Json::Obj(fields)
                 }
                 other => other,
             };
             done(Response::Stats(stats), &env)
         }
-        Request::Subscribe(spec) => {
+        Request::Subscribe { spec, token } => {
             if !env.is_v2() {
                 return done(
                     Response::error("bad_op", "subscriptions require protocol v2 (send \"v\":2)"),
@@ -905,9 +984,20 @@ fn dispatch(
             }
             match conn.as_deref_mut() {
                 Some(subs) => {
-                    let sub = handle.reader.subscriptions().subscribe(spec, &subs.mailbox);
+                    let registry = handle.reader.subscriptions();
+                    let (sub, replayed) = match token.as_deref() {
+                        // Durable: the registry remembers this token's
+                        // last-notified state (checkpointed across
+                        // restarts) and replays the diff missed while
+                        // the client was away.
+                        Some(token) => {
+                            let snap = handle.reader.latest_for(ReadKind::Top);
+                            registry.subscribe_durable(spec, &subs.mailbox, token, &snap)
+                        }
+                        None => (registry.subscribe(spec, &subs.mailbox), false),
+                    };
                     subs.ids.push(sub);
-                    done(Response::Subscribed { sub }, &env)
+                    done(Response::Subscribed { sub, replayed }, &env)
                 }
                 None => {
                     done(Response::error("bad_op", "subscriptions need a wire connection"), &env)
@@ -1311,8 +1401,10 @@ fn poll_worker(
                     // A closing connection takes its subscriptions with
                     // it; the registry also self-prunes via the weak
                     // mailbox, this just frees the slots eagerly.
+                    // `disconnect` (not `unsubscribe`) so durable
+                    // records survive for a later re-subscribe.
                     for id in &c.subs.ids {
-                        handle.reader.subscriptions().unsubscribe(*id);
+                        handle.reader.subscriptions().disconnect(*id);
                     }
                     drop(c);
                     handle.wire.connections.fetch_sub(1, Ordering::SeqCst);
@@ -1336,7 +1428,7 @@ fn poll_worker(
             let _ = c.stream.write_all(&c.out);
         }
         for id in &c.subs.ids {
-            handle.reader.subscriptions().unsubscribe(*id);
+            handle.reader.subscriptions().disconnect(*id);
         }
         handle.wire.connections.fetch_sub(1, Ordering::SeqCst);
     }

@@ -27,7 +27,7 @@
 //! `{"v":2,"sub":<id>,"notify":{...}}` — push frames exist only in wire
 //! protocol v2, where responses already carry ids and may interleave.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
@@ -36,21 +36,45 @@ use crate::graph::VertexId;
 use crate::util::json::Json;
 
 /// Per-connection notification queue depth. A subscriber that stops
-/// reading keeps only the newest `MAX_MAILBOX_DEPTH` notifications —
-/// old ones are dropped (counted) rather than growing without bound or
-/// back-pressuring the publish path.
+/// reading keeps only `MAX_MAILBOX_DEPTH` queued frames: an overflowing
+/// push first tries to *merge* with the newest queued frame of the same
+/// subscription (composing the diffs so no transition is silently
+/// lost — see [`Mailbox::push_frame`]) and only evicts the oldest frame
+/// when no merge is possible. Never grows without bound, never
+/// back-pressures the publish path.
 pub const MAX_MAILBOX_DEPTH: usize = 1024;
 
-/// A bounded, drop-oldest queue of rendered notification lines, shared
-/// between the publish path (producer) and one wire connection's
-/// readiness loop (consumer).
+/// One queued notification: which subscription fired and what it saw.
+/// Frames stay structured in the queue (rendered to JSON only at drain
+/// time) so an overflowing mailbox can merge them semantically.
+struct Frame {
+    sub: u64,
+    note: Notification,
+}
+
+/// What happened to a pushed frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Queued normally (mailbox had room).
+    Queued,
+    /// Mailbox was full; the frame was composed into (or cancelled
+    /// against) the newest queued frame of the same subscription.
+    Merged,
+    /// Mailbox was full and no same-subscription frame could absorb it;
+    /// the oldest queued frame was evicted.
+    Dropped,
+}
+
+/// A bounded queue of notification frames, shared between the publish
+/// path (producer) and one wire connection's readiness loop (consumer).
 pub struct Mailbox {
     inner: Mutex<MailboxInner>,
 }
 
 struct MailboxInner {
-    queue: VecDeque<Json>,
+    queue: VecDeque<Frame>,
     dropped: u64,
+    merged: u64,
 }
 
 impl Mailbox {
@@ -59,28 +83,51 @@ impl Mailbox {
     #[allow(clippy::new_without_default)]
     pub fn new() -> Arc<Mailbox> {
         Arc::new(Mailbox {
-            inner: Mutex::new(MailboxInner { queue: VecDeque::new(), dropped: 0 }),
+            inner: Mutex::new(MailboxInner { queue: VecDeque::new(), dropped: 0, merged: 0 }),
         })
     }
 
-    /// Enqueue a rendered notification; returns `true` if an old entry
-    /// was evicted to make room.
-    fn push(&self, line: Json) -> bool {
+    /// Enqueue one notification frame. Below the depth cap this just
+    /// queues. At the cap, the newest queued frame of the same
+    /// subscription absorbs it — top-K diffs compose set-algebraically,
+    /// an up-crossing cancels a queued down-crossing, and so on — so a
+    /// slow reader sees one *net* transition instead of losing an
+    /// arbitrary prefix. Only when no same-subscription frame exists is
+    /// the oldest frame evicted.
+    pub fn push_frame(&self, sub: u64, note: Notification) -> PushOutcome {
         let mut g = self.inner.lock().unwrap();
-        let mut evicted = false;
         if g.queue.len() >= MAX_MAILBOX_DEPTH {
+            if let Some(pos) = g.queue.iter().rposition(|f| f.sub == sub) {
+                match compose(&g.queue[pos].note, &note) {
+                    Compose::Merged(m) => {
+                        g.queue[pos].note = m;
+                        g.merged += 1;
+                        return PushOutcome::Merged;
+                    }
+                    Compose::Cancelled => {
+                        // The two transitions undo each other: the
+                        // reader should see nothing at all.
+                        g.queue.remove(pos);
+                        g.merged += 1;
+                        return PushOutcome::Merged;
+                    }
+                    Compose::Incompatible => {}
+                }
+            }
             g.queue.pop_front();
             g.dropped += 1;
-            evicted = true;
+            g.queue.push_back(Frame { sub, note });
+            return PushOutcome::Dropped;
         }
-        g.queue.push_back(line);
-        evicted
+        g.queue.push_back(Frame { sub, note });
+        PushOutcome::Queued
     }
 
-    /// Take every queued notification, oldest first.
+    /// Take every queued notification as rendered push frames, oldest
+    /// first.
     pub fn drain(&self) -> Vec<Json> {
         let mut g = self.inner.lock().unwrap();
-        g.queue.drain(..).collect()
+        g.queue.drain(..).map(|f| f.note.to_json(f.sub)).collect()
     }
 
     /// Queued (undelivered) notifications.
@@ -93,9 +140,82 @@ impl Mailbox {
         self.len() == 0
     }
 
-    /// Notifications evicted because the consumer fell behind.
+    /// Notifications evicted because the consumer fell behind and no
+    /// merge was possible.
     pub fn dropped(&self) -> u64 {
         self.inner.lock().unwrap().dropped
+    }
+
+    /// Overflow pushes absorbed by merging instead of dropping.
+    pub fn merged(&self) -> u64 {
+        self.inner.lock().unwrap().merged
+    }
+}
+
+/// Result of composing two notifications of the same subscription.
+enum Compose {
+    /// Different kinds/parameters — cannot be combined.
+    Incompatible,
+    /// The newer transition exactly undoes the queued one.
+    Cancelled,
+    /// One notification carrying the net effect of both.
+    Merged(Notification),
+}
+
+/// Compose `older` (already queued) with `newer` (arriving) into the
+/// net transition a reader catching up now should observe. For top-K,
+/// with sets S0 → S1 → S2 and diffs (e1,l1), (e2,l2):
+/// net-entered = (e1 \ l2) ∪ (e2 \ l1) and net-left = (l1 \ e2) ∪
+/// (l2 \ e1); both empty means the set returned to where it started.
+fn compose(older: &Notification, newer: &Notification) -> Compose {
+    match (older, newer) {
+        (
+            Notification::TopK { k: k1, entered: e1, left: l1, .. },
+            Notification::TopK { k: k2, version, entered: e2, left: l2 },
+        ) if k1 == k2 => {
+            let mut entered: Vec<VertexId> =
+                e1.iter().copied().filter(|v| !l2.contains(v)).collect();
+            entered.extend(e2.iter().copied().filter(|v| !l1.contains(v) && !entered.contains(v)));
+            let mut left: Vec<VertexId> = l1.iter().copied().filter(|v| !e2.contains(v)).collect();
+            left.extend(l2.iter().copied().filter(|v| !e1.contains(v) && !left.contains(v)));
+            if entered.is_empty() && left.is_empty() {
+                Compose::Cancelled
+            } else {
+                Compose::Merged(Notification::TopK {
+                    k: *k1,
+                    version: *version,
+                    entered,
+                    left,
+                })
+            }
+        }
+        (
+            Notification::RankThreshold { id: i1, tau: t1, up: u1, .. },
+            Notification::RankThreshold { id: i2, tau: t2, up: u2, .. },
+        ) if i1 == i2 && t1 == t2 => {
+            if u1 != u2 {
+                Compose::Cancelled // crossed and crossed back
+            } else {
+                Compose::Merged(newer.clone())
+            }
+        }
+        (
+            Notification::HotSet { id: i1, entered: in1, .. },
+            Notification::HotSet { id: i2, entered: in2, .. },
+        ) if i1 == i2 => {
+            if in1 != in2 {
+                Compose::Cancelled // entered then left (or vice versa)
+            } else {
+                Compose::Merged(newer.clone())
+            }
+        }
+        (Notification::Community { id: i1, .. }, Notification::Community { id: i2, .. })
+            if i1 == i2 =>
+        {
+            // Labels supersede: only the newest assignment matters.
+            Compose::Merged(newer.clone())
+        }
+        _ => Compose::Incompatible,
     }
 }
 
@@ -275,10 +395,111 @@ pub fn diff(spec: &Subscription, prev: &RankSnapshot, next: &RankSnapshot) -> Op
     }
 }
 
+/// The observed condition of one subscription at a known version — the
+/// piece of state that must survive a restart for a reconnecting
+/// client to receive the diff it missed instead of starting blind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubState {
+    /// The top-K member set as last notified.
+    TopK(Vec<VertexId>),
+    /// Whether the watched rank was above τ.
+    Above(bool),
+    /// Whether the watched vertex was hot.
+    Hot(bool),
+    /// The watched vertex's last known community label (None until the
+    /// first label event — community state is event-driven, so replay
+    /// across restarts is best-effort).
+    Label(Option<u32>),
+}
+
+/// One durable subscription: `(client token, spec, observed state,
+/// last notified version)`. These are checkpointed and restored, so a
+/// v2 client that reconnects after a server restart and re-subscribes
+/// with the same token picks up exactly where it left off.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DurableSubRecord {
+    /// Client-chosen identity, stable across connections.
+    pub token: String,
+    /// What the subscription watches.
+    pub spec: Subscription,
+    /// The condition as of the last notification (or registration).
+    pub state: SubState,
+    /// Snapshot version the state was observed at.
+    pub last_version: u64,
+}
+
+/// Observe a subscription's current condition against a snapshot (the
+/// state a fresh durable record starts from).
+pub fn observe(spec: &Subscription, snap: &RankSnapshot) -> SubState {
+    match *spec {
+        Subscription::TopK { k } => SubState::TopK(snap.top_ids(k)),
+        Subscription::RankThreshold { id, tau } => {
+            SubState::Above(snap.rank_of(id).unwrap_or(0.0) > tau)
+        }
+        Subscription::HotSet { id } => SubState::Hot(snap.is_hot(id)),
+        Subscription::Community { .. } => SubState::Label(None),
+    }
+}
+
+/// Diff a checkpointed [`SubState`] against the current snapshot: the
+/// notification a re-subscribing client *missed* while away, or `None`
+/// if the condition is unchanged. The same transition rules as
+/// [`diff`], but anchored at recorded state instead of the previous
+/// snapshot.
+pub fn diff_from_state(
+    state: &SubState,
+    spec: &Subscription,
+    snap: &RankSnapshot,
+) -> Option<Notification> {
+    match (state, *spec) {
+        (SubState::TopK(before), Subscription::TopK { k }) => {
+            let after = snap.top_ids(k);
+            let entered: Vec<VertexId> =
+                after.iter().copied().filter(|v| !before.contains(v)).collect();
+            let left: Vec<VertexId> =
+                before.iter().copied().filter(|v| !after.contains(v)).collect();
+            if entered.is_empty() && left.is_empty() {
+                None
+            } else {
+                Some(Notification::TopK { k, version: snap.version, entered, left })
+            }
+        }
+        (SubState::Above(was), Subscription::RankThreshold { id, tau }) => {
+            let rank = snap.rank_of(id).unwrap_or(0.0);
+            let is_above = rank > tau;
+            if is_above == *was {
+                None
+            } else {
+                Some(Notification::RankThreshold {
+                    id,
+                    tau,
+                    rank,
+                    up: is_above,
+                    version: snap.version,
+                })
+            }
+        }
+        (SubState::Hot(was), Subscription::HotSet { id }) => {
+            let is_hot = snap.is_hot(id);
+            if is_hot == *was {
+                None
+            } else {
+                Some(Notification::HotSet { id, entered: is_hot, version: snap.version })
+            }
+        }
+        // Community labels are event-driven (no snapshot to compare
+        // against); a reconnecting client hears the next relabel.
+        _ => None,
+    }
+}
+
 struct ActiveSub {
     id: u64,
     spec: Subscription,
     mailbox: Weak<Mailbox>,
+    /// Present when the subscription is durable: the key into the
+    /// durable-record map kept in step with every fired notification.
+    token: Option<String>,
 }
 
 /// All live standing queries, shared between the publish path (which
@@ -294,27 +515,148 @@ pub struct SubscriptionRegistry {
     live: AtomicUsize,
     sent: AtomicU64,
     dropped: AtomicU64,
+    merged: AtomicU64,
+    /// Durable records by client token — checkpointed, restored on
+    /// recovery, kept in step with every fired notification. Locked
+    /// strictly *after* (never inside) `subs`.
+    durable: Mutex<HashMap<String, DurableSubRecord>>,
+    /// Per-subscription `(dropped, merged)` overflow counters, exposed
+    /// over the wire `stats` so a slow consumer can see which of its
+    /// subscriptions are losing or coalescing frames.
+    delivery: Mutex<HashMap<u64, (u64, u64)>>,
 }
 
 impl SubscriptionRegistry {
     /// Register a standing query delivering into `mailbox`; returns the
     /// subscription id echoed in every push frame.
     pub fn subscribe(&self, spec: Subscription, mailbox: &Arc<Mailbox>) -> u64 {
+        self.register(spec, mailbox, None)
+    }
+
+    /// Register a *durable* standing query identified by a
+    /// client-chosen token. If a checkpointed/previous record exists
+    /// for the token with the same spec, the notification the client
+    /// missed while disconnected (recorded state vs. `snap`) is pushed
+    /// into the mailbox immediately. Returns `(sub id, replayed)`.
+    pub fn subscribe_durable(
+        &self,
+        spec: Subscription,
+        mailbox: &Arc<Mailbox>,
+        token: &str,
+        snap: &RankSnapshot,
+    ) -> (u64, bool) {
+        let missed = {
+            let mut durable = self.durable.lock().unwrap();
+            let missed = match durable.get(token) {
+                Some(rec) if rec.spec == spec => diff_from_state(&rec.state, &spec, snap),
+                _ => None,
+            };
+            durable.insert(
+                token.to_string(),
+                DurableSubRecord {
+                    token: token.to_string(),
+                    spec,
+                    state: observe(&spec, snap),
+                    last_version: snap.version,
+                },
+            );
+            missed
+        };
+        let id = self.register(spec, mailbox, Some(token.to_string()));
+        let replayed = missed.is_some();
+        if let Some(event) = missed {
+            self.deliver(mailbox, id, event);
+        }
+        (id, replayed)
+    }
+
+    fn register(&self, spec: Subscription, mailbox: &Arc<Mailbox>, token: Option<String>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let mut g = self.subs.lock().unwrap();
-        g.push(ActiveSub { id, spec, mailbox: Arc::downgrade(mailbox) });
+        g.push(ActiveSub { id, spec, mailbox: Arc::downgrade(mailbox), token });
         self.live.store(g.len(), Ordering::SeqCst);
         id
     }
 
-    /// Drop a subscription; `false` if the id was unknown.
+    /// Push one frame and account for the outcome (global + per-sub).
+    fn deliver(&self, mailbox: &Mailbox, id: u64, event: Notification) {
+        match mailbox.push_frame(id, event) {
+            PushOutcome::Queued => {}
+            PushOutcome::Merged => {
+                self.merged.fetch_add(1, Ordering::SeqCst);
+                self.delivery.lock().unwrap().entry(id).or_insert((0, 0)).1 += 1;
+            }
+            PushOutcome::Dropped => {
+                self.dropped.fetch_add(1, Ordering::SeqCst);
+                self.delivery.lock().unwrap().entry(id).or_insert((0, 0)).0 += 1;
+            }
+        }
+        self.sent.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Drop a subscription; `false` if the id was unknown. Explicitly
+    /// unsubscribing a durable subscription also forgets its record —
+    /// the client said it is no longer interested (a *disconnect*, by
+    /// contrast, keeps the record for later re-subscribe).
     pub fn unsubscribe(&self, id: u64) -> bool {
-        let mut g = self.subs.lock().unwrap();
-        let before = g.len();
-        g.retain(|s| s.id != id);
-        let removed = g.len() != before;
-        self.live.store(g.len(), Ordering::SeqCst);
+        let (removed, token) = {
+            let mut g = self.subs.lock().unwrap();
+            let before = g.len();
+            let token = g.iter().find(|s| s.id == id).and_then(|s| s.token.clone());
+            g.retain(|s| s.id != id);
+            let removed = g.len() != before;
+            self.live.store(g.len(), Ordering::SeqCst);
+            (removed, token)
+        };
+        if let Some(token) = token {
+            self.durable.lock().unwrap().remove(&token);
+        }
+        if removed {
+            self.delivery.lock().unwrap().remove(&id);
+        }
         removed
+    }
+
+    /// Detach a subscription whose connection closed. Unlike
+    /// [`Self::unsubscribe`], a durable subscription's record survives:
+    /// the client can re-subscribe under its token and replay what it
+    /// missed.
+    pub fn disconnect(&self, id: u64) -> bool {
+        let removed = {
+            let mut g = self.subs.lock().unwrap();
+            let before = g.len();
+            g.retain(|s| s.id != id);
+            let removed = g.len() != before;
+            self.live.store(g.len(), Ordering::SeqCst);
+            removed
+        };
+        if removed {
+            self.delivery.lock().unwrap().remove(&id);
+        }
+        removed
+    }
+
+    /// Snapshot every durable record (for checkpointing), sorted by
+    /// token for deterministic bytes.
+    pub fn durable_records(&self) -> Vec<DurableSubRecord> {
+        let g = self.durable.lock().unwrap();
+        let mut out: Vec<DurableSubRecord> = g.values().cloned().collect();
+        out.sort_by(|a, b| a.token.cmp(&b.token));
+        out
+    }
+
+    /// Restore checkpointed durable records (recovery path; runs before
+    /// any client connects).
+    pub fn restore_durable(&self, records: Vec<DurableSubRecord>) {
+        let mut g = self.durable.lock().unwrap();
+        for rec in records {
+            g.insert(rec.token.clone(), rec);
+        }
+    }
+
+    /// Durable records currently held (live or awaiting re-subscribe).
+    pub fn durable_len(&self) -> usize {
+        self.durable.lock().unwrap().len()
     }
 
     /// Live subscriptions (including ones whose connection has vanished
@@ -338,6 +680,29 @@ impl SubscriptionRegistry {
         self.dropped.load(Ordering::SeqCst)
     }
 
+    /// Overflow notifications absorbed by merging frames.
+    pub fn notifications_merged(&self) -> u64 {
+        self.merged.load(Ordering::SeqCst)
+    }
+
+    /// Per-subscription overflow counters as a wire `stats` object:
+    /// `{"<sub id>": {"dropped": d, "merged": m}, ...}` (only
+    /// subscriptions that overflowed at least once appear).
+    pub fn delivery_counters_json(&self) -> Json {
+        let g = self.delivery.lock().unwrap();
+        let mut map = std::collections::BTreeMap::new();
+        for (&id, &(dropped, merged)) in g.iter() {
+            map.insert(
+                id.to_string(),
+                Json::obj(vec![
+                    ("dropped", Json::Num(dropped as f64)),
+                    ("merged", Json::Num(merged as f64)),
+                ]),
+            );
+        }
+        Json::Obj(map)
+    }
+
     /// Whether any community-change subscription is live — the server
     /// skips the label-propagation refresh entirely when none is.
     pub fn has_community_subs(&self) -> bool {
@@ -356,18 +721,32 @@ impl SubscriptionRegistry {
         if self.live.load(Ordering::SeqCst) == 0 {
             return;
         }
-        let mut g = self.subs.lock().unwrap();
-        g.retain(|s| {
-            let Some(mb) = s.mailbox.upgrade() else { return false };
-            if let Some(event) = diff(&s.spec, prev, next) {
-                if mb.push(event.to_json(s.id)) {
-                    self.dropped.fetch_add(1, Ordering::SeqCst);
+        // (token, new state) pairs for durable records, applied after
+        // the subs lock drops (lock order: subs, then durable).
+        let mut durable_updates: Vec<(String, SubState)> = Vec::new();
+        {
+            let mut g = self.subs.lock().unwrap();
+            g.retain(|s| {
+                let Some(mb) = s.mailbox.upgrade() else { return false };
+                if let Some(event) = diff(&s.spec, prev, next) {
+                    if let Some(token) = &s.token {
+                        durable_updates.push((token.clone(), observe(&s.spec, next)));
+                    }
+                    self.deliver(&mb, s.id, event);
                 }
-                self.sent.fetch_add(1, Ordering::SeqCst);
+                true
+            });
+            self.live.store(g.len(), Ordering::SeqCst);
+        }
+        if !durable_updates.is_empty() {
+            let mut durable = self.durable.lock().unwrap();
+            for (token, state) in durable_updates {
+                if let Some(rec) = durable.get_mut(&token) {
+                    rec.state = state;
+                    rec.last_version = next.version;
+                }
             }
-            true
-        });
-        self.live.store(g.len(), Ordering::SeqCst);
+        }
     }
 
     /// Evaluate community-change subscriptions after a label-propagation
@@ -382,24 +761,36 @@ impl SubscriptionRegistry {
         if self.live.load(Ordering::SeqCst) == 0 {
             return;
         }
-        let mut g = self.subs.lock().unwrap();
-        g.retain(|s| {
-            let Some(mb) = s.mailbox.upgrade() else { return false };
-            if let Subscription::Community { id } = s.spec {
-                let (before, now) = labels(id);
-                if let Some(label) = now {
-                    if before != now {
-                        let event = Notification::Community { id, label, version };
-                        if mb.push(event.to_json(s.id)) {
-                            self.dropped.fetch_add(1, Ordering::SeqCst);
+        let mut durable_updates: Vec<(String, SubState)> = Vec::new();
+        {
+            let mut g = self.subs.lock().unwrap();
+            g.retain(|s| {
+                let Some(mb) = s.mailbox.upgrade() else { return false };
+                if let Subscription::Community { id } = s.spec {
+                    let (before, now) = labels(id);
+                    if let Some(label) = now {
+                        if before != now {
+                            if let Some(token) = &s.token {
+                                durable_updates
+                                    .push((token.clone(), SubState::Label(Some(label))));
+                            }
+                            self.deliver(&mb, s.id, Notification::Community { id, label, version });
                         }
-                        self.sent.fetch_add(1, Ordering::SeqCst);
                     }
                 }
+                true
+            });
+            self.live.store(g.len(), Ordering::SeqCst);
+        }
+        if !durable_updates.is_empty() {
+            let mut durable = self.durable.lock().unwrap();
+            for (token, state) in durable_updates {
+                if let Some(rec) = durable.get_mut(&token) {
+                    rec.state = state;
+                    rec.last_version = version;
+                }
             }
-            true
-        });
-        self.live.store(g.len(), Ordering::SeqCst);
+        }
     }
 }
 
@@ -494,17 +885,133 @@ mod tests {
         assert!(reg.is_empty());
     }
 
+    fn hot_note(sub_version: u64, entered: bool) -> Notification {
+        Notification::HotSet { id: 1, entered, version: sub_version }
+    }
+
     #[test]
-    fn mailbox_drops_oldest_beyond_depth() {
+    fn mailbox_merges_same_sub_frames_at_depth() {
         let mb = Mailbox::new();
-        for i in 0..(MAX_MAILBOX_DEPTH + 3) {
-            mb.push(Json::Num(i as f64));
+        // Fill to the cap with distinct-sub top-K frames.
+        for i in 0..MAX_MAILBOX_DEPTH as u64 {
+            assert_eq!(
+                mb.push_frame(
+                    i,
+                    Notification::TopK { k: 2, version: i, entered: vec![i], left: vec![] }
+                ),
+                PushOutcome::Queued
+            );
         }
+        // Overflow push for sub 5 composes with its queued frame
+        // instead of evicting sub 0's.
+        let out = mb.push_frame(
+            5,
+            Notification::TopK { k: 2, version: 99, entered: vec![77], left: vec![5] },
+        );
+        assert_eq!(out, PushOutcome::Merged);
         assert_eq!(mb.len(), MAX_MAILBOX_DEPTH);
-        assert_eq!(mb.dropped(), 3);
+        assert_eq!(mb.merged(), 1);
+        assert_eq!(mb.dropped(), 0);
         let lines = mb.drain();
-        assert_eq!(lines[0], Json::Num(3.0));
-        assert!(mb.is_empty());
+        assert_eq!(lines.len(), MAX_MAILBOX_DEPTH, "nothing lost");
+        let sub5 = lines
+            .iter()
+            .find(|l| l.get("sub").and_then(Json::as_u64) == Some(5))
+            .unwrap()
+            .get("notify")
+            .unwrap()
+            .clone();
+        // Net diff: entered {5} then {entered 77, left 5} ⇒ entered 77.
+        assert_eq!(sub5.get("entered").unwrap().to_string_compact(), "[77]");
+        assert_eq!(sub5.get("left").unwrap().to_string_compact(), "[]");
+        assert_eq!(sub5.get("version").and_then(Json::as_u64), Some(99));
+    }
+
+    #[test]
+    fn mailbox_cancels_round_trip_transitions_at_depth() {
+        let mb = Mailbox::new();
+        for i in 0..MAX_MAILBOX_DEPTH as u64 {
+            mb.push_frame(i, hot_note(i, true));
+        }
+        // Sub 9's queued "entered" is exactly undone by "left".
+        assert_eq!(mb.push_frame(9, hot_note(100, false)), PushOutcome::Merged);
+        assert_eq!(mb.len(), MAX_MAILBOX_DEPTH - 1, "cancelled pair removed entirely");
+        assert!(mb.drain().iter().all(|l| l.get("sub").and_then(Json::as_u64) != Some(9)));
+    }
+
+    #[test]
+    fn mailbox_falls_back_to_evicting_oldest() {
+        let mb = Mailbox::new();
+        for i in 0..MAX_MAILBOX_DEPTH as u64 {
+            mb.push_frame(i, hot_note(i, true));
+        }
+        // A brand-new sub has nothing to merge with: oldest evicted.
+        let out = mb.push_frame(u64::MAX, hot_note(200, true));
+        assert_eq!(out, PushOutcome::Dropped);
+        assert_eq!(mb.len(), MAX_MAILBOX_DEPTH);
+        assert_eq!(mb.dropped(), 1);
+        let lines = mb.drain();
+        assert_eq!(lines[0].get("sub").and_then(Json::as_u64), Some(1), "sub 0 evicted");
+    }
+
+    #[test]
+    fn durable_subscribe_replays_the_missed_diff() {
+        let reg = SubscriptionRegistry::default();
+        let mb = Mailbox::new();
+        let a = snap(1, vec![0, 1], vec![0.9, 0.1], vec![]);
+        let (sub, replayed) =
+            reg.subscribe_durable(Subscription::TopK { k: 1 }, &mb, "client-7", &a);
+        assert!(!replayed, "fresh token has nothing to replay");
+        assert_eq!(reg.durable_len(), 1);
+
+        // Notify fires and keeps the durable record current.
+        let b = snap(2, vec![0, 1], vec![0.1, 0.9], vec![]);
+        reg.notify_publish(&a, &b);
+        assert_eq!(mb.drain().len(), 1);
+        let records = reg.durable_records();
+        assert_eq!(records[0].state, SubState::TopK(vec![1]));
+        assert_eq!(records[0].last_version, 2);
+
+        // Simulate disconnect + restart: a fresh registry restored from
+        // the checkpointed records.
+        let reg2 = SubscriptionRegistry::default();
+        reg2.restore_durable(records);
+        // The world moved on while the client was away.
+        let c = snap(5, vec![0, 1], vec![0.8, 0.2], vec![]);
+        let mb2 = Mailbox::new();
+        let (_, replayed) =
+            reg2.subscribe_durable(Subscription::TopK { k: 1 }, &mb2, "client-7", &c);
+        assert!(replayed);
+        let lines = mb2.drain();
+        assert_eq!(lines.len(), 1, "missed diff delivered immediately");
+        let body = lines[0].get("notify").unwrap();
+        assert_eq!(body.get("entered").unwrap().to_string_compact(), "[0]");
+        assert_eq!(body.get("left").unwrap().to_string_compact(), "[1]");
+
+        // A changed spec under the same token does NOT replay.
+        let mb3 = Mailbox::new();
+        let (_, replayed) =
+            reg2.subscribe_durable(Subscription::TopK { k: 2 }, &mb3, "client-7", &c);
+        assert!(!replayed);
+        assert!(mb3.is_empty());
+
+        // Explicit unsubscribe forgets the durable record.
+        assert!(reg.unsubscribe(sub));
+        assert_eq!(reg.durable_len(), 0);
+    }
+
+    #[test]
+    fn diff_from_state_matches_diff_semantics() {
+        let a = snap(1, vec![0, 1], vec![0.1, 0.9], vec![1]);
+        let b = snap(2, vec![0, 1], vec![0.6, 0.9], vec![0]);
+        let spec = Subscription::RankThreshold { id: 0, tau: 0.5 };
+        assert_eq!(diff_from_state(&observe(&spec, &a), &spec, &b), diff(&spec, &a, &b));
+        let spec = Subscription::HotSet { id: 0 };
+        assert_eq!(diff_from_state(&observe(&spec, &a), &spec, &b), diff(&spec, &a, &b));
+        let spec = Subscription::TopK { k: 1 };
+        assert_eq!(diff_from_state(&observe(&spec, &a), &spec, &b), diff(&spec, &a, &b));
+        // Unchanged state replays nothing.
+        assert_eq!(diff_from_state(&observe(&spec, &b), &spec, &b), None);
     }
 
     #[test]

@@ -1,0 +1,868 @@
+//! Write-ahead log of effective update batches.
+//!
+//! Every coalesced [`UpdateBatch`](crate::stream::buffer::UpdateBatch)
+//! leaving the PR-5 coalescer is appended here *before*
+//! `apply_batch` mutates the graph, so a crash between the append and
+//! the apply loses nothing: recovery replays the record through the
+//! ordinary batch path and lands on the identical state (the coalescer
+//! emits replay-exact effective ops — that property, tested since PR 5,
+//! is what makes the WAL unit a batch rather than a raw op).
+//!
+//! ## On-disk format (little-endian)
+//!
+//! The log is a sequence of segment files `wal-<first_seq>.log`:
+//!
+//! ```text
+//! segment header:  magic "VGWL" | u32 format version | u64 first_seq
+//! record:          u32 payload_len | u64 seq | payload | u64 fnv1a-64
+//! payload:         u32 n_ops | n_ops × (u8 tag, u64 a, u64 b)
+//! ```
+//!
+//! The checksum covers the record from `payload_len` through the
+//! payload, so a torn or truncated tail (short write, crash mid-append)
+//! fails verification and [`Wal::scan`] discards it — everything before
+//! the torn record replays normally. Sequence numbers are assigned
+//! monotonically across segments; a new segment is started whenever the
+//! current one exceeds the size cap, and on every open (an old torn
+//! tail can therefore never interleave with fresh records).
+//!
+//! ## Sync policy
+//!
+//! `--durability none|batch|interval:MS` maps to [`SyncPolicy`]:
+//! `none` never fsyncs (OS flush on close — fast, loses the OS cache on
+//! power failure), `batch` fsyncs after every appended batch (each
+//! acknowledged batch is durable), `interval:MS` fsyncs at most once
+//! per interval (bounded loss window).
+//!
+//! ## Degradation
+//!
+//! Disks fail while servers run. After
+//! [`MAX_CONSECUTIVE_FAILURES`] failed appends the WAL drops to
+//! in-memory mode: appends become no-ops, the server keeps serving, and
+//! the wire `stats.durability` section reports `durability_lost: true`
+//! so operators notice. Losing durability is a monitoring event, not a
+//! crash.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::stream::event::EdgeOp;
+use crate::testing::faults::{CrashPoint, FaultInjector};
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"VGWL";
+const FORMAT_VERSION: u32 = 1;
+
+/// Consecutive append failures tolerated before the WAL degrades to
+/// in-memory mode (a fresh success before the limit resets the count).
+pub const MAX_CONSECUTIVE_FAILURES: u32 = 3;
+
+/// Default segment rotation threshold.
+pub const DEFAULT_SEGMENT_MAX_BYTES: u64 = 64 * 1024 * 1024;
+
+/// When (if ever) appended records are fsynced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// Never fsync; rely on the OS cache.
+    None,
+    /// Fsync after every appended batch.
+    Batch,
+    /// Fsync at most once per this many milliseconds.
+    Interval(u64),
+}
+
+impl SyncPolicy {
+    /// The wire/CLI spelling (`none` / `batch` / `interval:MS`).
+    pub fn as_str(&self) -> String {
+        match self {
+            SyncPolicy::None => "none".into(),
+            SyncPolicy::Batch => "batch".into(),
+            SyncPolicy::Interval(ms) => format!("interval:{ms}"),
+        }
+    }
+}
+
+impl std::str::FromStr for SyncPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(SyncPolicy::None),
+            "batch" => Ok(SyncPolicy::Batch),
+            other => match other.strip_prefix("interval:") {
+                Some(ms) => match ms.parse::<u64>() {
+                    Ok(ms) if ms > 0 => Ok(SyncPolicy::Interval(ms)),
+                    _ => Err(format!("interval wants a positive millisecond count, got {ms:?}")),
+                },
+                None => Err(format!(
+                    "unknown sync policy {other:?}; expected none, batch or interval:MS"
+                )),
+            },
+        }
+    }
+}
+
+/// The write side of one segment file. Split out as a trait so the
+/// fault harness ([`crate::testing::faults::FaultyIo`]) can substitute
+/// an implementation with injectable short writes / fsync failures /
+/// disk-full.
+pub trait SegmentWriter: Send {
+    /// Append raw bytes (a faulty impl may land a prefix, then error).
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    /// Flush and fsync what has been written.
+    fn sync(&mut self) -> io::Result<()>;
+}
+
+/// Creates segment writers. Production uses [`FsIo`].
+pub trait WalIo: Send {
+    /// Create (truncating) a new segment file at `path`.
+    fn create_segment(&mut self, path: &Path) -> io::Result<Box<dyn SegmentWriter>>;
+}
+
+/// The real filesystem I/O layer.
+pub struct FsIo;
+
+impl WalIo for FsIo {
+    fn create_segment(&mut self, path: &Path) -> io::Result<Box<dyn SegmentWriter>> {
+        let file = std::fs::File::create(path)?;
+        Ok(Box::new(FsSegment { w: io::BufWriter::new(file) }))
+    }
+}
+
+struct FsSegment {
+    w: io::BufWriter<std::fs::File>,
+}
+
+impl SegmentWriter for FsSegment {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        io::Write::write_all(&mut self.w, buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        io::Write::flush(&mut self.w)?;
+        self.w.get_ref().sync_data()
+    }
+}
+
+/// One decoded WAL record: the batch's sequence number and its
+/// effective ops, exactly as appended.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub ops: Vec<EdgeOp>,
+}
+
+/// Result of scanning a WAL directory on open/recovery.
+#[derive(Clone, Debug, Default)]
+pub struct WalScan {
+    /// Every verified record, in sequence order.
+    pub records: Vec<WalRecord>,
+    /// The sequence number the next append should use.
+    pub next_seq: u64,
+    /// A torn/truncated tail was found (and discarded) in the newest
+    /// segment.
+    pub torn_tail_discarded: bool,
+    /// A checksum failure in a *non*-newest segment cut the scan short
+    /// (real corruption, not a crash artifact).
+    pub corrupt_segment: bool,
+}
+
+/// Shared durability gauges: written by the WAL / checkpoint jobs on
+/// their own threads, read lock-free by the wire `stats` path. One
+/// instance per engine, present (with `enabled:false`) even when
+/// durability is off so the stats section is always well-formed.
+#[derive(Debug, Default)]
+pub struct DurabilityStats {
+    /// 0 = disabled, 1 = none, 2 = batch, 3 = interval.
+    mode: AtomicU8,
+    interval_ms: AtomicU64,
+    wal_records: AtomicU64,
+    wal_bytes: AtomicU64,
+    wal_segments: AtomicU64,
+    wal_seq: AtomicU64,
+    wal_errors: AtomicU64,
+    lost: AtomicBool,
+    checkpoints_written: AtomicU64,
+    checkpoint_failures: AtomicU64,
+    last_checkpoint_seq: AtomicU64,
+    replayed_batches: AtomicU64,
+    replayed_ops: AtomicU64,
+    recovered: AtomicBool,
+    torn_tail_discarded: AtomicBool,
+    snapshots_skipped: AtomicU64,
+}
+
+impl DurabilityStats {
+    /// Fresh gauges, mode "disabled".
+    pub fn new() -> Arc<DurabilityStats> {
+        Arc::new(DurabilityStats::default())
+    }
+
+    /// Record the configured sync policy (flips `enabled` on).
+    pub fn set_mode(&self, policy: SyncPolicy) {
+        let (mode, ms) = match policy {
+            SyncPolicy::None => (1, 0),
+            SyncPolicy::Batch => (2, 0),
+            SyncPolicy::Interval(ms) => (3, ms),
+        };
+        self.mode.store(mode, Ordering::Relaxed);
+        self.interval_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Whether durability was configured at all.
+    pub fn enabled(&self) -> bool {
+        self.mode.load(Ordering::Relaxed) != 0
+    }
+
+    /// Whether the WAL degraded to in-memory mode.
+    pub fn durability_lost(&self) -> bool {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Record a recovery: how much the WAL tail replayed and what the
+    /// snapshot search skipped.
+    pub fn note_recovery(
+        &self,
+        replayed_batches: u64,
+        replayed_ops: u64,
+        torn_tail: bool,
+        snapshots_skipped: u64,
+    ) {
+        self.recovered.store(true, Ordering::Relaxed);
+        self.replayed_batches.store(replayed_batches, Ordering::Relaxed);
+        self.replayed_ops.store(replayed_ops, Ordering::Relaxed);
+        self.torn_tail_discarded.store(torn_tail, Ordering::Relaxed);
+        self.snapshots_skipped.store(snapshots_skipped, Ordering::Relaxed);
+    }
+
+    /// Record a finished checkpoint attempt.
+    pub fn note_checkpoint(&self, ok: bool, wal_seq: u64) {
+        if ok {
+            self.checkpoints_written.fetch_add(1, Ordering::Relaxed);
+            self.last_checkpoint_seq.store(wal_seq, Ordering::Relaxed);
+        } else {
+            self.checkpoint_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Last sequence number covered by a durable checkpoint.
+    pub fn last_checkpoint_seq(&self) -> u64 {
+        self.last_checkpoint_seq.load(Ordering::Relaxed)
+    }
+
+    /// Checkpoints successfully written this run.
+    pub fn checkpoints_written(&self) -> u64 {
+        self.checkpoints_written.load(Ordering::Relaxed)
+    }
+
+    /// The wire `stats.durability` section.
+    pub fn to_json(&self) -> Json {
+        let mode = self.mode.load(Ordering::Relaxed);
+        let sync = match mode {
+            0 => "off".to_string(),
+            1 => "none".to_string(),
+            2 => "batch".to_string(),
+            _ => format!("interval:{}", self.interval_ms.load(Ordering::Relaxed)),
+        };
+        Json::obj(vec![
+            ("enabled", Json::Bool(mode != 0)),
+            ("sync", Json::Str(sync)),
+            ("durability_lost", Json::Bool(self.lost.load(Ordering::Relaxed))),
+            ("wal_records", Json::Num(self.wal_records.load(Ordering::Relaxed) as f64)),
+            ("wal_bytes", Json::Num(self.wal_bytes.load(Ordering::Relaxed) as f64)),
+            ("wal_segments", Json::Num(self.wal_segments.load(Ordering::Relaxed) as f64)),
+            ("wal_seq", Json::Num(self.wal_seq.load(Ordering::Relaxed) as f64)),
+            ("wal_errors", Json::Num(self.wal_errors.load(Ordering::Relaxed) as f64)),
+            (
+                "checkpoints_written",
+                Json::Num(self.checkpoints_written.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "checkpoint_failures",
+                Json::Num(self.checkpoint_failures.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "last_checkpoint_seq",
+                Json::Num(self.last_checkpoint_seq.load(Ordering::Relaxed) as f64),
+            ),
+            ("recovered", Json::Bool(self.recovered.load(Ordering::Relaxed))),
+            ("replayed_batches", Json::Num(self.replayed_batches.load(Ordering::Relaxed) as f64)),
+            ("replayed_ops", Json::Num(self.replayed_ops.load(Ordering::Relaxed) as f64)),
+            (
+                "torn_tail_discarded",
+                Json::Bool(self.torn_tail_discarded.load(Ordering::Relaxed)),
+            ),
+            ("snapshots_skipped", Json::Num(self.snapshots_skipped.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// The append side of the log.
+pub struct Wal {
+    dir: PathBuf,
+    policy: SyncPolicy,
+    io: Box<dyn WalIo>,
+    seg: Option<Box<dyn SegmentWriter>>,
+    seg_bytes: u64,
+    seg_max_bytes: u64,
+    next_seq: u64,
+    last_sync: Instant,
+    consecutive_failures: u32,
+    lost: bool,
+    stats: Arc<DurabilityStats>,
+    faults: Option<Arc<FaultInjector>>,
+}
+
+impl Wal {
+    /// Open the log for appending, starting at `start_seq` (recovery
+    /// passes the scan's `next_seq`; a fresh log starts at 1). Always
+    /// begins a new segment, so a previously torn tail can never
+    /// interleave with fresh records.
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        start_seq: u64,
+        policy: SyncPolicy,
+        seg_max_bytes: u64,
+        mut io: Box<dyn WalIo>,
+        stats: Arc<DurabilityStats>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<Wal> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let start_seq = start_seq.max(1);
+        let seg = open_segment(&mut io, &dir, start_seq, &stats)?;
+        stats.set_mode(policy);
+        stats.wal_seq.store(start_seq - 1, Ordering::Relaxed);
+        Ok(Wal {
+            dir,
+            policy,
+            io,
+            seg: Some(seg),
+            seg_bytes: SEGMENT_HEADER_LEN as u64,
+            seg_max_bytes: seg_max_bytes.max(SEGMENT_HEADER_LEN as u64 + 1),
+            next_seq: start_seq,
+            last_sync: Instant::now(),
+            consecutive_failures: 0,
+            lost: false,
+            stats,
+            faults,
+        })
+    }
+
+    /// The sequence number the next append will be assigned.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Whether the log has degraded to in-memory mode.
+    pub fn is_lost(&self) -> bool {
+        self.lost
+    }
+
+    /// Append one effective batch, returning its sequence number. I/O
+    /// failures are absorbed: they count toward degradation rather than
+    /// erroring, so the write pipeline never stalls on a dying disk.
+    /// The only `Err` this returns is an injected crash (tests).
+    pub fn append_batch(&mut self, ops: &[EdgeOp]) -> Result<u64> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.stats.wal_seq.store(seq, Ordering::Relaxed);
+        if self.lost {
+            return Ok(seq);
+        }
+        let record = encode_record(seq, ops);
+        match self.write_record(seq, &record) {
+            Ok(()) => {
+                self.consecutive_failures = 0;
+                self.stats.wal_records.fetch_add(1, Ordering::Relaxed);
+                self.stats.wal_bytes.fetch_add(record.len() as u64, Ordering::Relaxed);
+                if let Some(f) = &self.faults {
+                    if f.take_crash(CrashPoint::PostWalAppend) {
+                        return Err(Error::Engine(
+                            "injected crash: post-wal-append".into(),
+                        ));
+                    }
+                }
+                Ok(seq)
+            }
+            Err(e) => {
+                self.note_failure(&e);
+                Ok(seq)
+            }
+        }
+    }
+
+    fn write_record(&mut self, seq: u64, record: &[u8]) -> io::Result<()> {
+        if self.seg_bytes + record.len() as u64 > self.seg_max_bytes {
+            self.rotate(seq)?;
+        }
+        let seg = self
+            .seg
+            .as_mut()
+            .ok_or_else(|| io::Error::other("wal segment unavailable"))?;
+        seg.write_all(record)?;
+        self.seg_bytes += record.len() as u64;
+        let due = match self.policy {
+            SyncPolicy::None => false,
+            SyncPolicy::Batch => true,
+            SyncPolicy::Interval(ms) => self.last_sync.elapsed().as_millis() as u64 >= ms,
+        };
+        if due {
+            seg.sync()?;
+            self.last_sync = Instant::now();
+        }
+        Ok(())
+    }
+
+    fn rotate(&mut self, first_seq: u64) -> io::Result<()> {
+        if let Some(seg) = self.seg.as_mut() {
+            // Never leave a segment behind with unflushed user-space
+            // buffers: rotation is a durability boundary.
+            seg.sync()?;
+        }
+        let seg = open_segment(&mut self.io, &self.dir, first_seq, &self.stats)
+            .map_err(|e| io::Error::other(e.to_string()))?;
+        self.seg = Some(seg);
+        self.seg_bytes = SEGMENT_HEADER_LEN as u64;
+        Ok(())
+    }
+
+    fn note_failure(&mut self, e: &io::Error) {
+        self.consecutive_failures += 1;
+        self.stats.wal_errors.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "[veilgraph] wal append failed ({}/{MAX_CONSECUTIVE_FAILURES}): {e}",
+            self.consecutive_failures
+        );
+        if self.consecutive_failures >= MAX_CONSECUTIVE_FAILURES {
+            eprintln!(
+                "[veilgraph] wal degraded to in-memory mode; durability lost until restart"
+            );
+            self.lost = true;
+            self.seg = None;
+            self.stats.lost.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Flush and fsync the current segment (shutdown, final checkpoint).
+    pub fn sync(&mut self) -> Result<()> {
+        if let Some(seg) = self.seg.as_mut() {
+            seg.sync().map_err(Error::Io)?;
+        }
+        Ok(())
+    }
+
+    /// Delete segments made redundant by a checkpoint at `seq`: a
+    /// segment is safe to drop when the *next* segment starts at or
+    /// before `seq + 1` (every record in it is then ≤ `seq`). The
+    /// segment currently being appended is never dropped.
+    pub fn prune_up_to(&mut self, seq: u64) {
+        let segs = match list_segments(&self.dir) {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        for pair in segs.windows(2) {
+            let (first, _) = &pair[0];
+            let (next_first, _) = &pair[1];
+            if *next_first <= seq.saturating_add(1) && *first < self.next_seq {
+                std::fs::remove_file(&pair[0].1).ok();
+            }
+        }
+    }
+
+    /// Scan a WAL directory: decode every verified record in sequence
+    /// order, discarding a torn tail in the newest segment (normal
+    /// crash artifact) and stopping at corruption anywhere else.
+    pub fn scan(dir: &Path) -> Result<WalScan> {
+        let mut out = WalScan { next_seq: 1, ..WalScan::default() };
+        let segs = match list_segments(dir) {
+            Ok(s) => s,
+            Err(_) => return Ok(out), // no directory yet: empty log
+        };
+        let last = segs.len().saturating_sub(1);
+        for (i, (first_seq, path)) in segs.iter().enumerate() {
+            let bytes = std::fs::read(path)?;
+            match scan_segment(&bytes, *first_seq, &mut out.records) {
+                SegmentEnd::Clean => {}
+                SegmentEnd::Torn => {
+                    if i == last {
+                        out.torn_tail_discarded = true;
+                    } else {
+                        out.corrupt_segment = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(last) = out.records.last() {
+            out.next_seq = last.seq + 1;
+        } else if let Some((first_seq, _)) = segs.last() {
+            // Segments exist but hold no verifiable records (e.g. all
+            // torn): resume past the highest segment start.
+            out.next_seq = *first_seq;
+        }
+        Ok(out)
+    }
+}
+
+const SEGMENT_HEADER_LEN: usize = 4 + 4 + 8;
+
+fn segment_path(dir: &Path, first_seq: u64) -> PathBuf {
+    dir.join(format!("wal-{first_seq:020}.log"))
+}
+
+fn open_segment(
+    io: &mut Box<dyn WalIo>,
+    dir: &Path,
+    first_seq: u64,
+    stats: &Arc<DurabilityStats>,
+) -> Result<Box<dyn SegmentWriter>> {
+    let mut header = Vec::with_capacity(SEGMENT_HEADER_LEN);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    header.extend_from_slice(&first_seq.to_le_bytes());
+    let mut seg = io.create_segment(&segment_path(dir, first_seq)).map_err(Error::Io)?;
+    seg.write_all(&header).map_err(Error::Io)?;
+    stats.wal_segments.fetch_add(1, Ordering::Relaxed);
+    Ok(seg)
+}
+
+/// All segment files in `dir`, sorted by their first sequence number.
+fn list_segments(dir: &Path) -> io::Result<Vec<(u64, PathBuf)>> {
+    let mut segs = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(num) = name.strip_prefix("wal-").and_then(|n| n.strip_suffix(".log")) {
+            if let Ok(first_seq) = num.parse::<u64>() {
+                segs.push((first_seq, entry.path()));
+            }
+        }
+    }
+    segs.sort();
+    Ok(segs)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn op_tag(op: &EdgeOp) -> (u8, u64, u64) {
+    match *op {
+        EdgeOp::AddEdge(u, v) => (0, u, v),
+        EdgeOp::RemoveEdge(u, v) => (1, u, v),
+        EdgeOp::AddVertex(u) => (2, u, 0),
+        EdgeOp::RemoveVertex(u) => (3, u, 0),
+    }
+}
+
+fn encode_record(seq: u64, ops: &[EdgeOp]) -> Vec<u8> {
+    let payload_len = 4 + ops.len() * 17;
+    let mut buf = Vec::with_capacity(4 + 8 + payload_len + 8);
+    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+    for op in ops {
+        let (tag, a, b) = op_tag(op);
+        buf.push(tag);
+        buf.extend_from_slice(&a.to_le_bytes());
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+    let digest = fnv1a(&buf);
+    buf.extend_from_slice(&digest.to_le_bytes());
+    buf
+}
+
+enum SegmentEnd {
+    Clean,
+    Torn,
+}
+
+/// Decode one segment's records into `out`; returns whether the
+/// segment ended cleanly or in a torn/invalid record.
+fn scan_segment(bytes: &[u8], first_seq: u64, out: &mut Vec<WalRecord>) -> SegmentEnd {
+    if bytes.len() < SEGMENT_HEADER_LEN
+        || &bytes[..4] != MAGIC
+        || u32::from_le_bytes(bytes[4..8].try_into().unwrap()) != FORMAT_VERSION
+        || u64::from_le_bytes(bytes[8..16].try_into().unwrap()) != first_seq
+    {
+        return SegmentEnd::Torn;
+    }
+    let mut pos = SEGMENT_HEADER_LEN;
+    let mut expect_seq = first_seq;
+    while pos < bytes.len() {
+        if pos + 12 > bytes.len() {
+            return SegmentEnd::Torn;
+        }
+        let payload_len =
+            u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let end = pos + 12 + payload_len;
+        if end + 8 > bytes.len() {
+            return SegmentEnd::Torn;
+        }
+        let digest = u64::from_le_bytes(bytes[end..end + 8].try_into().unwrap());
+        if fnv1a(&bytes[pos..end]) != digest {
+            return SegmentEnd::Torn;
+        }
+        let seq = u64::from_le_bytes(bytes[pos + 4..pos + 12].try_into().unwrap());
+        if seq != expect_seq {
+            return SegmentEnd::Torn;
+        }
+        match decode_ops(&bytes[pos + 12..end]) {
+            Some(ops) => out.push(WalRecord { seq, ops }),
+            None => return SegmentEnd::Torn,
+        }
+        expect_seq += 1;
+        pos = end + 8;
+    }
+    SegmentEnd::Clean
+}
+
+fn decode_ops(payload: &[u8]) -> Option<Vec<EdgeOp>> {
+    if payload.len() < 4 {
+        return None;
+    }
+    let n = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+    if payload.len() != 4 + n * 17 {
+        return None;
+    }
+    let mut ops = Vec::with_capacity(n);
+    let mut pos = 4;
+    for _ in 0..n {
+        let tag = payload[pos];
+        let a = u64::from_le_bytes(payload[pos + 1..pos + 9].try_into().unwrap());
+        let b = u64::from_le_bytes(payload[pos + 9..pos + 17].try_into().unwrap());
+        ops.push(match tag {
+            0 => EdgeOp::AddEdge(a, b),
+            1 => EdgeOp::RemoveEdge(a, b),
+            2 => EdgeOp::AddVertex(a),
+            3 => EdgeOp::RemoveVertex(a),
+            _ => return None,
+        });
+        pos += 17;
+    }
+    Some(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::faults::FaultyIo;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "vg-wal-{name}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn open(dir: &Path, start_seq: u64) -> Wal {
+        Wal::open(
+            dir,
+            start_seq,
+            SyncPolicy::Batch,
+            DEFAULT_SEGMENT_MAX_BYTES,
+            Box::new(FsIo),
+            DurabilityStats::new(),
+            None,
+        )
+        .unwrap()
+    }
+
+    fn ops(seed: u64) -> Vec<EdgeOp> {
+        vec![EdgeOp::add(seed, seed + 1), EdgeOp::remove(seed, seed + 2), EdgeOp::AddVertex(seed)]
+    }
+
+    #[test]
+    fn sync_policy_parses() {
+        assert_eq!("none".parse::<SyncPolicy>(), Ok(SyncPolicy::None));
+        assert_eq!("batch".parse::<SyncPolicy>(), Ok(SyncPolicy::Batch));
+        assert_eq!("interval:250".parse::<SyncPolicy>(), Ok(SyncPolicy::Interval(250)));
+        assert!("interval:0".parse::<SyncPolicy>().is_err());
+        assert!("interval:fast".parse::<SyncPolicy>().is_err());
+        assert!("sometimes".parse::<SyncPolicy>().is_err());
+        assert_eq!(SyncPolicy::Interval(250).as_str(), "interval:250");
+    }
+
+    #[test]
+    fn append_then_scan_roundtrips() {
+        let dir = tmp("roundtrip");
+        let mut wal = open(&dir, 1);
+        for i in 0..5u64 {
+            assert_eq!(wal.append_batch(&ops(i * 10)).unwrap(), i + 1);
+        }
+        drop(wal);
+        let scan = Wal::scan(&dir).unwrap();
+        assert_eq!(scan.records.len(), 5);
+        assert_eq!(scan.next_seq, 6);
+        assert!(!scan.torn_tail_discarded);
+        for (i, rec) in scan.records.iter().enumerate() {
+            assert_eq!(rec.seq, i as u64 + 1);
+            assert_eq!(rec.ops, ops(i as u64 * 10));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scan_of_missing_dir_is_empty() {
+        let scan = Wal::scan(&tmp("missing-never-created")).unwrap();
+        assert!(scan.records.is_empty());
+        assert_eq!(scan.next_seq, 1);
+    }
+
+    #[test]
+    fn torn_tail_is_discarded() {
+        let dir = tmp("torn");
+        let mut wal = open(&dir, 1);
+        for i in 0..3u64 {
+            wal.append_batch(&ops(i)).unwrap();
+        }
+        drop(wal);
+        // Truncate the single segment mid-record: keep the header and
+        // first two records, then half of the third.
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1);
+        let bytes = std::fs::read(&segs[0].1).unwrap();
+        let record_len = encode_record(1, &ops(0)).len();
+        let keep = SEGMENT_HEADER_LEN + 2 * record_len + record_len / 2;
+        std::fs::write(&segs[0].1, &bytes[..keep]).unwrap();
+        let scan = Wal::scan(&dir).unwrap();
+        assert_eq!(scan.records.len(), 2, "torn third record discarded");
+        assert!(scan.torn_tail_discarded);
+        assert_eq!(scan.next_seq, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_record_stops_scan() {
+        let dir = tmp("corrupt");
+        let mut wal = open(&dir, 1);
+        for i in 0..3u64 {
+            wal.append_batch(&ops(i)).unwrap();
+        }
+        drop(wal);
+        let segs = list_segments(&dir).unwrap();
+        let mut bytes = std::fs::read(&segs[0].1).unwrap();
+        // Flip a byte inside the second record's payload.
+        let record_len = encode_record(1, &ops(0)).len();
+        bytes[SEGMENT_HEADER_LEN + record_len + 20] ^= 0xFF;
+        std::fs::write(&segs[0].1, &bytes).unwrap();
+        let scan = Wal::scan(&dir).unwrap();
+        assert_eq!(scan.records.len(), 1, "scan stops at the corrupt record");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_starts_a_fresh_segment_and_continues_seq() {
+        let dir = tmp("reopen");
+        let mut wal = open(&dir, 1);
+        wal.append_batch(&ops(0)).unwrap();
+        wal.append_batch(&ops(1)).unwrap();
+        drop(wal);
+        let scan = Wal::scan(&dir).unwrap();
+        let mut wal = open(&dir, scan.next_seq);
+        assert_eq!(wal.append_batch(&ops(2)).unwrap(), 3);
+        drop(wal);
+        let scan = Wal::scan(&dir).unwrap();
+        assert_eq!(scan.records.len(), 3);
+        assert_eq!(list_segments(&dir).unwrap().len(), 2, "reopen rotated");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_and_pruning() {
+        let dir = tmp("rotate");
+        let stats = DurabilityStats::new();
+        let mut wal = Wal::open(
+            &dir,
+            1,
+            SyncPolicy::None,
+            // Tiny cap: every record rotates into its own segment.
+            (SEGMENT_HEADER_LEN + 1) as u64,
+            Box::new(FsIo),
+            Arc::clone(&stats),
+            None,
+        )
+        .unwrap();
+        for i in 0..4u64 {
+            wal.append_batch(&ops(i)).unwrap();
+        }
+        wal.sync().unwrap();
+        assert!(list_segments(&dir).unwrap().len() >= 4);
+        // A checkpoint at seq 3 makes every segment whose successor
+        // starts at ≤ 4 redundant.
+        wal.prune_up_to(3);
+        let remaining = list_segments(&dir).unwrap();
+        let scan = Wal::scan(&dir).unwrap();
+        assert!(remaining.len() < 4, "old segments pruned");
+        assert!(scan.records.iter().all(|r| r.seq >= 4 || r.seq > 3 || r.seq == 4));
+        assert_eq!(scan.records.last().unwrap().seq, 4, "newest record survives pruning");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disk_full_degrades_to_memory_mode_without_erroring() {
+        let dir = tmp("degrade");
+        let inj = FaultInjector::new();
+        let stats = DurabilityStats::new();
+        let mut wal = Wal::open(
+            &dir,
+            1,
+            SyncPolicy::Batch,
+            DEFAULT_SEGMENT_MAX_BYTES,
+            Box::new(FaultyIo::new(Arc::clone(&inj))),
+            Arc::clone(&stats),
+            Some(Arc::clone(&inj)),
+        )
+        .unwrap();
+        wal.append_batch(&ops(0)).unwrap();
+        inj.set_disk_budget(3); // next writes short-write then die
+        for i in 1..=MAX_CONSECUTIVE_FAILURES as u64 {
+            let seq = wal.append_batch(&ops(i)).unwrap();
+            assert_eq!(seq, i + 1, "appends keep assigning seqs through failures");
+        }
+        assert!(wal.is_lost());
+        assert!(stats.durability_lost());
+        // Further appends are absorbed no-ops.
+        wal.append_batch(&ops(99)).unwrap();
+        assert!(wal.sync().is_ok());
+        // The one durable record still scans (short-written garbage is
+        // a torn tail).
+        let scan = Wal::scan(&dir).unwrap();
+        assert_eq!(scan.records.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn post_wal_append_crash_point_fires_after_the_write() {
+        let dir = tmp("crashpoint");
+        let inj = FaultInjector::new();
+        let mut wal = Wal::open(
+            &dir,
+            1,
+            SyncPolicy::Batch,
+            DEFAULT_SEGMENT_MAX_BYTES,
+            Box::new(FsIo),
+            DurabilityStats::new(),
+            Some(Arc::clone(&inj)),
+        )
+        .unwrap();
+        inj.arm_crash(CrashPoint::PostWalAppend);
+        assert!(wal.append_batch(&ops(0)).is_err(), "armed point kills the append");
+        drop(wal);
+        let scan = Wal::scan(&dir).unwrap();
+        assert_eq!(scan.records.len(), 1, "the record was durable before the crash");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -225,6 +225,17 @@ impl DynamicGraph {
         self.version
     }
 
+    /// Force the topology version forward (recovery: a graph
+    /// reconstructed from a checkpoint must report the version the
+    /// checkpoint captured, not the mutation count of the rebuild).
+    /// Only ever raises — row stamps written during reconstruction stay
+    /// ≤ the version, keeping incremental snapshot builds correct.
+    pub fn set_version(&mut self, v: u64) {
+        if v > self.version {
+            self.version = v;
+        }
+    }
+
     /// Dense index for a user id, if present.
     pub fn index(&self, id: VertexId) -> Option<VertexIdx> {
         self.index_of.get(&id).copied()

@@ -52,8 +52,10 @@ pub mod util;
 
 /// Convenience re-exports of the most commonly used public items.
 pub mod prelude {
+    pub use crate::coordinator::checkpoint::{DurabilityConfig, RecoveryReport};
     pub use crate::coordinator::engine::{Engine, EngineBuilder, QueryResult};
     pub use crate::coordinator::protocol::{Envelope, Request, Response};
+    pub use crate::coordinator::wal::{DurabilityStats, SyncPolicy};
     pub use crate::coordinator::serving::{RankSnapshot, SnapshotReader};
     pub use crate::coordinator::subscription::{
         Mailbox, Notification, Subscription, SubscriptionRegistry,

@@ -7,9 +7,11 @@
 //! * `figures`    — regenerate paper figures (Table 1 + Figs. 3–30).
 //! * `info`       — artifact/platform diagnostics.
 
+use veilgraph::coordinator::checkpoint::DurabilityConfig;
 use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::policies::StalenessPolicy;
 use veilgraph::coordinator::server::{serve_tcp_with, ServeOptions, ServerHandle};
+use veilgraph::coordinator::wal::SyncPolicy;
 use veilgraph::error::{Error, Result};
 use veilgraph::experiments::datasets::{all_datasets, dataset_by_name, table1};
 use veilgraph::experiments::figures::{figure_by_number, figures_for_dataset, render_figure};
@@ -105,6 +107,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              batches (0 = unbounded)",
             Some("0"),
         )
+        .opt(
+            "data-dir",
+            "durability directory: WAL + crash-consistent checkpoints; \
+             restart recovers snapshot + log tail (default: in-memory only)",
+            None,
+        )
+        .opt(
+            "durability",
+            "WAL sync policy: none, batch, or interval:MS",
+            Some("batch"),
+        )
+        .opt("checkpoint-every", "applied batches between checkpoints", Some("64"))
         .flag("communities", "run streaming label propagation as a second standing workload")
         .flag("no-xla", "force the sparse executor")
         .flag("help", "show usage");
@@ -126,7 +140,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             eprintln!("note: {dir}/manifest.json missing — using sparse executor");
         }
     }
-    let engine = builder.build_from_edges(edges)?;
+    let engine = match p.get("data-dir") {
+        Some(dir) => {
+            let cfg = DurabilityConfig::new(dir)
+                .sync(p.req_parse::<SyncPolicy>("durability")?)
+                .checkpoint_every(p.req_parse::<u64>("checkpoint-every")?);
+            let (engine, report) = builder.durability(cfg).build_durable(edges)?;
+            match report.snapshot_loaded {
+                Some(seq) => println!(
+                    "recovered: checkpoint@{seq} + {} wal batches ({} ops){}{}{}",
+                    report.replayed_batches,
+                    report.replayed_ops,
+                    if report.clean_shutdown { " [clean shutdown]" } else { "" },
+                    if report.torn_tail_discarded { " [torn wal tail discarded]" } else { "" },
+                    if report.snapshots_skipped > 0 {
+                        format!(" [{} corrupt snapshot(s) skipped]", report.snapshots_skipped)
+                    } else {
+                        String::new()
+                    },
+                ),
+                None if report.replayed_batches > 0 => println!(
+                    "recovered: no checkpoint; replayed {} wal batches ({} ops)",
+                    report.replayed_batches, report.replayed_ops
+                ),
+                None => println!("durability on: fresh data dir {dir}"),
+            }
+            engine
+        }
+        None => builder.build_from_edges(edges)?,
+    };
     println!(
         "engine ready: |V|={}, |E|={}, xla={}",
         engine.graph().num_vertices(),

@@ -162,6 +162,67 @@ impl SlidingWindow {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Capture the admission state for a checkpoint, relative to the
+    /// caller's clock: queued deadlines are stored as *remaining*
+    /// nanoseconds so a restore under a fresh epoch (the recovered
+    /// server's clock restarts at zero) preserves each admit's
+    /// remaining lifetime rather than expiring everything instantly.
+    pub fn export_state(&self, now: u64) -> WindowState {
+        let mut live: Vec<(VertexId, VertexId, u64, u64)> = self
+            .live
+            .iter()
+            .map(|(&(src, dst), st)| (src, dst, st.count, st.stamp))
+            .collect();
+        live.sort_unstable(); // deterministic bytes for identical state
+        WindowState {
+            window_nanos: self.window_nanos,
+            next_stamp: self.next_stamp,
+            live,
+            entries: self
+                .entries
+                .iter()
+                .map(|e| (e.deadline.saturating_sub(now), e.src, e.dst, e.stamp))
+                .collect(),
+        }
+    }
+
+    /// Rebuild a window from checkpointed state under a new clock whose
+    /// current reading is `now`. Queue order (and thus deadline
+    /// monotonicity) is preserved because remaining times were captured
+    /// in queue order from a monotone clock.
+    pub fn restore(state: &WindowState, now: u64) -> SlidingWindow {
+        let mut w = SlidingWindow::new(state.window_nanos.max(1));
+        w.next_stamp = state.next_stamp;
+        for &(src, dst, count, stamp) in &state.live {
+            w.live.insert((src, dst), EdgeState { count, stamp });
+        }
+        for &(remaining, src, dst, stamp) in &state.entries {
+            w.entries.push_back(Entry {
+                deadline: now.saturating_add(remaining),
+                src,
+                dst,
+                stamp,
+            });
+        }
+        w
+    }
+}
+
+/// Checkpointable snapshot of a [`SlidingWindow`]'s admission state.
+/// Deadlines are relative (remaining nanoseconds at capture time); see
+/// [`SlidingWindow::export_state`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowState {
+    /// Configured width.
+    pub window_nanos: u64,
+    /// Monotone generation counter.
+    pub next_stamp: u64,
+    /// `(src, dst, count, stamp)` per live edge, sorted by key.
+    pub live: Vec<(VertexId, VertexId, u64, u64)>,
+    /// `(remaining_nanos, src, dst, stamp)` per queued admit, in queue
+    /// order.
+    pub entries: Vec<(u64, VertexId, VertexId, u64)>,
 }
 
 #[cfg(test)]
@@ -212,6 +273,40 @@ mod tests {
         w.admit(&EdgeOp::RemoveVertex(1), 2);
         // Only the untouched edge still expires.
         assert_eq!(w.expire_due(10), vec![EdgeOp::remove(4, 5)]);
+    }
+
+    #[test]
+    fn export_restore_preserves_remaining_lifetimes_under_a_new_epoch() {
+        let mut w = SlidingWindow::new(10);
+        w.admit(&EdgeOp::add(1, 2), 0);
+        w.admit(&EdgeOp::add(3, 4), 6);
+        w.admit(&EdgeOp::remove(3, 4), 7); // orphaned entry rides along
+        w.admit(&EdgeOp::add(3, 4), 8);
+        // Capture at t=9: (1,2) has 1ns left, (3,4) re-add has 9ns left.
+        let state = w.export_state(9);
+        // Restore under a clock that reads 100.
+        let mut r = SlidingWindow::restore(&state, 100);
+        assert_eq!(r.tracked(), w.tracked());
+        assert!(r.expire_due(100).is_empty());
+        assert_eq!(r.expire_due(101), vec![EdgeOp::remove(1, 2)]);
+        assert!(r.expire_due(108).is_empty(), "orphaned entry must not fire");
+        assert_eq!(r.expire_due(109), vec![EdgeOp::remove(3, 4)]);
+        assert!(r.is_empty());
+        // The original window behaves identically on its own clock.
+        assert_eq!(w.expire_due(10), vec![EdgeOp::remove(1, 2)]);
+        assert_eq!(w.expire_due(18), vec![EdgeOp::remove(3, 4)]);
+    }
+
+    #[test]
+    fn export_is_deterministic_for_identical_state() {
+        let build = || {
+            let mut w = SlidingWindow::new(5);
+            for i in 0..8u64 {
+                w.admit(&EdgeOp::add(i % 3, i % 5 + 10), i);
+            }
+            w
+        };
+        assert_eq!(build().export_state(8), build().export_state(8));
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Fault injection for the durability subsystem.
+//!
+//! Durability code is exactly the code that only matters when the
+//! process dies at the worst moment — which a passing happy-path test
+//! never exercises. This module gives the WAL and checkpoint writers an
+//! injectable failure surface so the recovery tests can *manufacture*
+//! the worst moments deterministically:
+//!
+//! * **Named crash points** ([`CrashPoint`]) — the writer consults the
+//!   injector at a handful of interesting instants (right after a WAL
+//!   record hits the disk, halfway through a checkpoint dump, just
+//!   before a snapshot publish) and, if that point is armed, aborts as
+//!   if the process had been killed there. What's on disk at that
+//!   instant is exactly what a real crash would leave.
+//! * **An injectable I/O layer** ([`FaultyIo`] implementing
+//!   [`WalIo`]) — simulates short writes, fsync failure and disk-full
+//!   by metering a byte budget: once the budget runs out, writes land
+//!   partially (a genuine torn tail on disk) and then error, which is
+//!   how ENOSPC actually behaves.
+//!
+//! Production code paths carry `Option<Arc<FaultInjector>>` and pass
+//! `None`; the injector costs nothing when absent.
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::wal::{SegmentWriter, WalIo};
+
+/// The named instants a crash can be injected at. Arming one makes the
+/// next pass through that point behave as if the process died there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Immediately after a WAL record is durably appended, before the
+    /// batch is applied to the graph. Recovery must replay the record.
+    PostWalAppend,
+    /// Halfway through writing a checkpoint file (the partial bytes are
+    /// left at the *final* path, as a non-atomic writer dying would).
+    /// Recovery must detect the corruption and fall back to the
+    /// previous snapshot.
+    MidCheckpoint,
+    /// Just before a recomputed snapshot is published. The WAL already
+    /// holds everything; recovery must reconstruct the unpublished
+    /// state from snapshot + tail replay.
+    PrePublish,
+}
+
+/// Shared fault state consulted by the WAL, the checkpoint writer and
+/// the engine's publish path. One injector can drive all of them.
+#[derive(Debug)]
+pub struct FaultInjector {
+    armed: Mutex<Option<CrashPoint>>,
+    trips: AtomicU64,
+    fail_fsync: AtomicBool,
+    /// Remaining writable bytes; `u64::MAX` means unlimited.
+    disk_budget: AtomicU64,
+    short_writes: AtomicU64,
+    fsync_failures: AtomicU64,
+}
+
+impl FaultInjector {
+    /// A fresh injector with every fault disabled.
+    pub fn new() -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            armed: Mutex::new(None),
+            trips: AtomicU64::new(0),
+            fail_fsync: AtomicBool::new(false),
+            disk_budget: AtomicU64::new(u64::MAX),
+            short_writes: AtomicU64::new(0),
+            fsync_failures: AtomicU64::new(0),
+        })
+    }
+
+    /// Arm one crash point. Only one can be armed at a time; arming
+    /// replaces any previous one.
+    pub fn arm_crash(&self, point: CrashPoint) {
+        *self.armed.lock().unwrap() = Some(point);
+    }
+
+    /// Consulted by the instrumented code paths: if `point` is armed,
+    /// disarm it, count the trip and return true (the caller then
+    /// aborts as if killed). One-shot so recovery runs through the same
+    /// code without re-crashing.
+    pub fn take_crash(&self, point: CrashPoint) -> bool {
+        let mut armed = self.armed.lock().unwrap();
+        if *armed == Some(point) {
+            *armed = None;
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// How many crash points have fired.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Make every subsequent `sync` fail (until turned off again).
+    pub fn set_fail_fsync(&self, on: bool) {
+        self.fail_fsync.store(on, Ordering::Relaxed);
+    }
+
+    /// Cap the total bytes the faulty I/O layer will write; the write
+    /// that crosses the cap lands partially and errors (disk-full).
+    pub fn set_disk_budget(&self, bytes: u64) {
+        self.disk_budget.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Injected short writes observed so far.
+    pub fn short_writes(&self) -> u64 {
+        self.short_writes.load(Ordering::Relaxed)
+    }
+
+    /// Injected fsync failures observed so far.
+    pub fn fsync_failures(&self) -> u64 {
+        self.fsync_failures.load(Ordering::Relaxed)
+    }
+
+    /// Grant up to `want` bytes from the disk budget.
+    fn take_disk(&self, want: usize) -> usize {
+        let want64 = want as u64;
+        let mut granted = want64;
+        let _ = self.disk_budget.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+            if cur == u64::MAX {
+                granted = want64;
+                None // unlimited: leave the sentinel in place
+            } else {
+                granted = cur.min(want64);
+                Some(cur - granted)
+            }
+        });
+        granted as usize
+    }
+
+    fn fsync_should_fail(&self) -> bool {
+        if self.fail_fsync.load(Ordering::Relaxed) {
+            self.fsync_failures.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// A [`WalIo`] implementation whose segments honor the injector's disk
+/// budget and fsync switch. Swap it in via
+/// [`DurabilityConfig::io`](crate::coordinator::checkpoint::DurabilityConfig).
+pub struct FaultyIo {
+    inj: Arc<FaultInjector>,
+}
+
+impl FaultyIo {
+    /// Wrap an injector as a WAL I/O layer.
+    pub fn new(inj: Arc<FaultInjector>) -> FaultyIo {
+        FaultyIo { inj }
+    }
+}
+
+impl WalIo for FaultyIo {
+    fn create_segment(&mut self, path: &Path) -> io::Result<Box<dyn SegmentWriter>> {
+        let file = File::create(path)?;
+        Ok(Box::new(FaultySegment { file, inj: Arc::clone(&self.inj) }))
+    }
+}
+
+/// One WAL segment under fault control: writes consume the byte budget
+/// (crossing it leaves a genuine short write on disk, then errors) and
+/// `sync` fails while the fsync switch is on.
+struct FaultySegment {
+    file: File,
+    inj: Arc<FaultInjector>,
+}
+
+impl SegmentWriter for FaultySegment {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        let granted = self.inj.take_disk(buf.len());
+        if granted < buf.len() {
+            if granted > 0 {
+                self.file.write_all(&buf[..granted])?;
+                let _ = self.file.flush();
+            }
+            self.inj.short_writes.fetch_add(1, Ordering::Relaxed);
+            return Err(io::Error::new(
+                io::ErrorKind::WriteZero,
+                format!("injected disk-full: wrote {granted} of {} bytes", buf.len()),
+            ));
+        }
+        self.file.write_all(buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        if self.inj.fsync_should_fail() {
+            return Err(io::Error::other("injected fsync failure"));
+        }
+        self.file.flush()?;
+        self.file.sync_data()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_points_are_one_shot() {
+        let inj = FaultInjector::new();
+        assert!(!inj.take_crash(CrashPoint::PostWalAppend), "unarmed never fires");
+        inj.arm_crash(CrashPoint::MidCheckpoint);
+        assert!(!inj.take_crash(CrashPoint::PostWalAppend), "wrong point stays armed");
+        assert!(inj.take_crash(CrashPoint::MidCheckpoint));
+        assert!(!inj.take_crash(CrashPoint::MidCheckpoint), "fires exactly once");
+        assert_eq!(inj.trips(), 1);
+    }
+
+    #[test]
+    fn disk_budget_meters_and_short_writes() {
+        let inj = FaultInjector::new();
+        assert_eq!(inj.take_disk(100), 100, "unlimited by default");
+        inj.set_disk_budget(10);
+        assert_eq!(inj.take_disk(4), 4);
+        assert_eq!(inj.take_disk(100), 6, "partial grant at the cliff");
+        assert_eq!(inj.take_disk(1), 0, "then nothing");
+    }
+
+    #[test]
+    fn faulty_segment_leaves_partial_bytes_then_errors() {
+        let dir = std::env::temp_dir()
+            .join(format!("vg-faults-{}-{:?}", std::process::id(), std::thread::current().id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.log");
+        let inj = FaultInjector::new();
+        inj.set_disk_budget(6);
+        let mut io_layer = FaultyIo::new(Arc::clone(&inj));
+        let mut seg = io_layer.create_segment(&path).unwrap();
+        seg.write_all(b"full").unwrap();
+        let err = seg.write_all(b"overflow").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WriteZero);
+        assert_eq!(inj.short_writes(), 1);
+        drop(seg);
+        let on_disk = std::fs::read(&path).unwrap();
+        assert_eq!(on_disk, b"fullov", "short write left a genuine torn tail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsync_switch_fails_sync_only() {
+        let dir = std::env::temp_dir()
+            .join(format!("vg-fsync-{}-{:?}", std::process::id(), std::thread::current().id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let inj = FaultInjector::new();
+        let mut io_layer = FaultyIo::new(Arc::clone(&inj));
+        let mut seg = io_layer.create_segment(&dir.join("seg.log")).unwrap();
+        seg.write_all(b"data").unwrap();
+        inj.set_fail_fsync(true);
+        assert!(seg.sync().is_err());
+        assert_eq!(inj.fsync_failures(), 1);
+        inj.set_fail_fsync(false);
+        assert!(seg.sync().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -2,5 +2,6 @@
 //! (proptest substitute; see DESIGN.md §Substitutions) and the shared
 //! sequential-apply oracle batch paths are verified against.
 
+pub mod faults;
 pub mod oracle;
 pub mod vprop;

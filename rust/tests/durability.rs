@@ -1,0 +1,574 @@
+//! Durable serving: crash recovery, torn-tail handling, snapshot
+//! fallback, fault-injected degradation and durable subscriptions.
+//!
+//! * Kill/restart (drop the engine, rebuild over the same data dir)
+//!   recovers a bit-identical graph and rank vector: snapshot load plus
+//!   WAL-tail replay through the ordinary batch path.
+//! * A clean shutdown writes a final checkpoint and recovery after it
+//!   replays nothing.
+//! * A torn WAL tail (partial final record, as a crash mid-write leaves
+//!   behind) is detected by checksum and cleanly discarded — recovery
+//!   keeps every complete record and never panics.
+//! * A corrupted newest snapshot falls back to the older one; the WAL
+//!   tail from there still reproduces the full pre-crash state.
+//! * Property: for arbitrary op streams with interleaved queries and
+//!   checkpoints, recovery equals both the pre-kill engine and the
+//!   sequential oracle.
+//! * Injected WAL write failures (disk-full) degrade a live server to
+//!   in-memory serving with `durability_lost` visible in wire `stats`
+//!   — the server keeps answering instead of crashing.
+//! * Durable subscriptions survive a disconnect; re-subscribing under
+//!   the same client token replays the missed diff.
+
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use veilgraph::coordinator::checkpoint::DurabilityConfig;
+use veilgraph::coordinator::engine::{Engine, EngineBuilder};
+use veilgraph::coordinator::server::{handle_request, serve_shared, ServeOptions, ServerHandle};
+use veilgraph::coordinator::wal::SyncPolicy;
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::testing::faults::{CrashPoint, FaultInjector, FaultyIo};
+use veilgraph::testing::oracle::seq_apply;
+use veilgraph::testing::vprop::{forall, Gen};
+use veilgraph::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+/// Unique per-test data directory, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(name: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!(
+            "vg-dur-{name}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&p);
+        TempDir(p)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn ring(n: u64) -> Vec<(u64, u64)> {
+    (0..n).map(|i| (i, (i + 1) % n)).collect()
+}
+
+/// Batch-synced config with explicit-only checkpoints (the tests cut
+/// them by hand where the scenario calls for one).
+fn cfg(dir: &Path) -> DurabilityConfig {
+    DurabilityConfig::new(dir).sync(SyncPolicy::Batch).checkpoint_every(1_000_000)
+}
+
+/// Graph identity: external ids in insertion order plus every edge as
+/// an external-id pair in adjacency order.
+fn graph_fp(g: &DynamicGraph) -> (Vec<u64>, Vec<(u64, u64)>) {
+    let ids = g.ids().to_vec();
+    let edges = g.edges().map(|(s, d)| (g.id(s), g.id(d))).collect();
+    (ids, edges)
+}
+
+/// Rank vector as raw bits — recovery claims *bit*-identity, not
+/// epsilon-closeness.
+fn rank_bits(e: &Engine) -> Vec<u64> {
+    e.ranks().iter().map(|r| r.to_bits()).collect()
+}
+
+/// Cut a checkpoint synchronously through the same job the server ships
+/// off-thread.
+fn checkpoint_now(e: &mut Engine) {
+    let job = e.begin_checkpoint(None).expect("durable engine yields a checkpoint job");
+    let out = job.run();
+    assert!(out.ok, "checkpoint failed: {:?}", out.err);
+    e.finish_checkpoint(out);
+}
+
+/// Newest file under `dir` matching `prefix` (by name order, which both
+/// WAL segments and snapshots make chronological via zero-padded seqs).
+fn newest_file(dir: &Path, prefix: &str) -> PathBuf {
+    let mut names: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with(prefix))
+                .unwrap_or(false)
+        })
+        .collect();
+    names.sort();
+    names.pop().unwrap_or_else(|| panic!("no {prefix}* under {dir:?}"))
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Kill / restart
+// ---------------------------------------------------------------------------
+
+/// Acceptance: dropping the engine mid-stream (the in-process stand-in
+/// for `kill -9`) and rebuilding over the same directory recovers a
+/// bit-identical graph and rank vector — the newest snapshot plus a
+/// two-record WAL-tail replay.
+#[test]
+fn kill_and_restart_recovers_bit_identical_state() {
+    let dir = TempDir::new("kill");
+    let (mut engine, report) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(ring(10))
+        .unwrap();
+    assert!(report.snapshot_loaded.is_none() && report.replayed_batches == 0);
+    assert!(engine.durable());
+
+    // A few effective batches over the existing vertices, then a query
+    // so the rank vector is fresh at the checkpoint.
+    for b in 0..5u64 {
+        engine.ingest_batch([
+            EdgeOp::add(b, (b + 3) % 10),
+            EdgeOp::remove(b, (b + 1) % 10),
+        ]);
+        engine.flush_pending();
+    }
+    engine.query().unwrap();
+    checkpoint_now(&mut engine);
+
+    // Two more batches land only in the WAL: the recovery tail.
+    engine.ingest_batch([EdgeOp::add(7, 2)]);
+    engine.flush_pending();
+    engine.ingest_batch([EdgeOp::add(8, 3)]);
+    engine.flush_pending();
+
+    let (pre_ids, pre_edges) = graph_fp(engine.graph());
+    let pre_ranks = rank_bits(&engine);
+    let pre_version = engine.graph().version();
+    drop(engine); // kill
+
+    let (rec, report) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(Vec::<(u64, u64)>::new())
+        .unwrap();
+    assert!(report.snapshot_loaded.is_some(), "snapshot found");
+    assert_eq!(report.replayed_batches, 2, "exactly the tail replays");
+    assert_eq!(report.replayed_ops, 2);
+    assert!(!report.clean_shutdown);
+    assert!(!report.torn_tail_discarded);
+
+    let (ids, edges) = graph_fp(rec.graph());
+    assert_eq!(ids, pre_ids, "vertex set + order recovered exactly");
+    assert_eq!(edges, pre_edges, "edge list recovered exactly");
+    assert_eq!(rank_bits(&rec), pre_ranks, "ranks recovered bit-identically");
+    assert_eq!(rec.graph().version(), pre_version, "topology version recovered");
+    assert!(rec.durability_stats().enabled());
+}
+
+/// Acceptance: graceful shutdown persists everything — recovery loads
+/// the final clean snapshot and replays nothing.
+#[test]
+fn clean_shutdown_replays_nothing() {
+    let dir = TempDir::new("clean");
+    let (mut engine, _) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(ring(8))
+        .unwrap();
+    engine.ingest_batch([EdgeOp::add(0, 4), EdgeOp::add(2, 6)]);
+    // Deliberately NOT flushed: shutdown must drain the in-flight batch
+    // through the WAL + apply path itself.
+    engine.shutdown_durable(None);
+    let (pre_ids, pre_edges) = graph_fp(engine.graph());
+    drop(engine);
+
+    let (rec, report) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(Vec::<(u64, u64)>::new())
+        .unwrap();
+    assert!(report.clean_shutdown, "final checkpoint is marked clean");
+    assert_eq!(report.replayed_batches, 0, "clean recovery replays nothing");
+    assert!(report.snapshot_loaded.is_some());
+    assert_eq!(graph_fp(rec.graph()), (pre_ids, pre_edges));
+}
+
+// ---------------------------------------------------------------------------
+// Corruption: torn WAL tail, corrupted snapshot
+// ---------------------------------------------------------------------------
+
+/// Acceptance: a crash mid-record leaves a torn tail; recovery discards
+/// exactly the incomplete record, keeps every complete one, and does
+/// not panic.
+#[test]
+fn torn_wal_tail_is_discarded_cleanly() {
+    let dir = TempDir::new("torn");
+    let (mut engine, _) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(ring(12))
+        .unwrap();
+    let chords =
+        [EdgeOp::add(0, 5), EdgeOp::add(1, 6), EdgeOp::add(2, 7)];
+    for op in chords {
+        engine.ingest_batch([op]);
+        engine.flush_pending();
+    }
+    drop(engine); // kill with 3 records on disk and no checkpoint
+
+    // Clip the last record's checksum: the torn tail a short write
+    // leaves behind.
+    let seg = newest_file(dir.path(), "wal-");
+    let bytes = fs::read(&seg).unwrap();
+    fs::write(&seg, &bytes[..bytes.len() - 4]).unwrap();
+
+    let (rec, report) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(ring(12))
+        .unwrap();
+    assert!(report.torn_tail_discarded, "checksum catches the partial record");
+    assert_eq!(report.replayed_batches, 2, "complete records all replay");
+
+    // End state == initial edges + the two surviving chords, per the
+    // sequential oracle.
+    let (mut oracle, _) = DynamicGraph::from_edges(ring(12));
+    seq_apply(&mut oracle, &chords[..2]);
+    assert_eq!(graph_fp(rec.graph()), graph_fp(&oracle));
+}
+
+/// Acceptance: recovery falls back to the previous snapshot when the
+/// newest is corrupt, then reaches the full pre-crash state through the
+/// longer WAL tail (segments are only pruned up to the *successful*
+/// snapshot's position).
+#[test]
+fn corrupt_snapshot_falls_back_to_older() {
+    let dir = TempDir::new("fallback");
+    let (mut engine, _) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(ring(8))
+        .unwrap();
+    let batches = [EdgeOp::add(0, 3), EdgeOp::add(1, 4), EdgeOp::add(2, 5)];
+    engine.ingest_batch([batches[0]]);
+    engine.flush_pending();
+    engine.query().unwrap();
+    checkpoint_now(&mut engine); // snapshot A @ wal seq 1
+    engine.ingest_batch([batches[1]]);
+    engine.flush_pending();
+    checkpoint_now(&mut engine); // snapshot B @ wal seq 2
+    engine.ingest_batch([batches[2]]);
+    engine.flush_pending();
+    let (pre_ids, pre_edges) = graph_fp(engine.graph());
+    drop(engine);
+
+    // Flip a byte in the middle of the newest snapshot.
+    let snap = newest_file(dir.path(), "ckpt-");
+    let mut bytes = fs::read(&snap).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    fs::write(&snap, &bytes).unwrap();
+
+    let (rec, report) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(Vec::<(u64, u64)>::new())
+        .unwrap();
+    assert_eq!(report.snapshots_skipped, 1, "corrupt snapshot B skipped");
+    assert!(report.snapshot_loaded.is_some(), "snapshot A verified");
+    assert_eq!(report.replayed_batches, 2, "tail from A covers batches 2+3");
+    assert_eq!(graph_fp(rec.graph()), (pre_ids, pre_edges));
+}
+
+// ---------------------------------------------------------------------------
+// Crash points
+// ---------------------------------------------------------------------------
+
+/// A crash injected immediately after the WAL append: the record is
+/// durable, the in-memory apply never happened — recovery must replay
+/// it, making the crash invisible in the recovered state.
+#[test]
+fn post_wal_append_crash_loses_nothing() {
+    let dir = TempDir::new("crashpoint");
+    let inj = FaultInjector::new();
+    let (mut engine, _) = EngineBuilder::new()
+        .durability(cfg(dir.path()).faults(Arc::clone(&inj)))
+        .build_durable(ring(6))
+        .unwrap();
+    inj.arm_crash(CrashPoint::PostWalAppend);
+    engine.ingest_batch([EdgeOp::add(0, 3)]);
+    engine.flush_pending(); // append lands, apply does not, engine dies
+    assert_eq!(inj.trips(), 1);
+    assert!(
+        !engine.graph().has_edge(0, 3),
+        "the crashed batch never mutated the in-memory graph"
+    );
+    assert!(engine.query().is_err(), "the engine is dead, as after a real crash");
+    drop(engine);
+
+    let (rec, report) = EngineBuilder::new()
+        .durability(cfg(dir.path()))
+        .build_durable(ring(6))
+        .unwrap();
+    assert_eq!(report.replayed_batches, 1, "the durable record replays");
+    assert!(rec.graph().has_edge(0, 3), "nothing acknowledged to the WAL is lost");
+}
+
+// ---------------------------------------------------------------------------
+// Property: recovery == pre-kill engine == sequential oracle
+// ---------------------------------------------------------------------------
+
+/// For arbitrary op streams (growth, removals, interleaved queries and
+/// checkpoints at random points), snapshot + WAL-tail replay leaves a
+/// graph bit-identical to the killed engine's, which in turn equals the
+/// sequential oracle over the raw stream.
+#[test]
+fn recovery_matches_seq_apply_oracle() {
+    forall(8, 0xD1CE, |g: &mut Gen| {
+        let dir = TempDir::new(&format!("prop-{:x}", g.case_seed));
+        let n = g.usize(4..9);
+        let mut initial = g.edges(n, 12);
+        initial.push((0, 1)); // never start empty
+        let (mut engine, _) = EngineBuilder::new()
+            .durability(cfg(dir.path()))
+            .build_durable(initial.clone())
+            .unwrap();
+
+        let mut all_ops: Vec<EdgeOp> = Vec::new();
+        for _ in 0..g.usize(1..4) {
+            let mut batch = Vec::new();
+            for _ in 0..g.usize(1..6) {
+                // Ids past `n` introduce brand-new vertices, so
+                // checkpoints exercise the rank-vector extension.
+                let src = g.u64(0..n as u64 + 3);
+                let dst = g.u64(0..n as u64 + 3);
+                if src == dst {
+                    continue;
+                }
+                batch.push(if g.bool(0.25) {
+                    EdgeOp::remove(src, dst)
+                } else {
+                    EdgeOp::add(src, dst)
+                });
+            }
+            all_ops.extend(batch.iter().copied());
+            engine.ingest_batch(batch);
+            engine.flush_pending();
+            if g.bool(0.4) {
+                engine.query().unwrap();
+            }
+            if g.bool(0.3) {
+                checkpoint_now(&mut engine);
+            }
+        }
+
+        let pre = graph_fp(engine.graph());
+        drop(engine); // kill
+
+        let (rec, _) = EngineBuilder::new()
+            .durability(cfg(dir.path()))
+            .build_durable(initial.clone())
+            .unwrap();
+        assert_eq!(graph_fp(rec.graph()), pre, "recovered graph == killed engine's");
+
+        let (mut oracle, _) = DynamicGraph::from_edges(initial);
+        seq_apply(&mut oracle, &all_ops);
+        assert_eq!(graph_fp(rec.graph()), graph_fp(&oracle), "recovered graph == oracle");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Degradation: WAL write failure on a live server
+// ---------------------------------------------------------------------------
+
+/// Acceptance: persistent WAL write failures (injected disk-full) do
+/// not crash the server — after the failure threshold it degrades to
+/// in-memory serving, flags `durability_lost` in wire `stats`, and
+/// keeps answering reads and writes.
+#[test]
+fn wal_write_failure_degrades_to_in_memory() {
+    let dir = TempDir::new("degrade");
+    let inj = FaultInjector::new();
+    // Exactly the 16-byte segment header fits; every record write hits
+    // injected ENOSPC.
+    inj.set_disk_budget(16);
+    let (engine, _) = EngineBuilder::new()
+        .durability(
+            cfg(dir.path())
+                .io(Box::new(FaultyIo::new(Arc::clone(&inj))))
+                .faults(Arc::clone(&inj)),
+        )
+        .build_durable(ring(8))
+        .unwrap();
+    let h = ServerHandle::spawn_with(engine, &ServeOptions::new());
+    assert!(!h.durability_stats().durability_lost());
+
+    // Each query drains the batched write path into the WAL; after
+    // MAX_CONSECUTIVE_FAILURES appends the log declares itself lost.
+    for i in 0..4u64 {
+        h.ingest(EdgeOp::add(i, i + 20)).unwrap();
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "the server keeps serving through WAL failures"
+        );
+    }
+    assert!(inj.short_writes() > 0, "the injected disk actually refused writes");
+    assert!(h.durability_stats().durability_lost());
+
+    // The loss is visible over the wire, and the server still answers.
+    let (stats, _) = handle_request(&h, r#"{"op":"stats"}"#);
+    let dur = stats.get("stats").unwrap().get("durability").unwrap();
+    assert_eq!(dur.get("durability_lost").and_then(Json::as_bool), Some(true));
+    assert_eq!(dur.get("enabled").and_then(Json::as_bool), Some(true));
+    assert!(dur.get("wal_errors").and_then(Json::as_u64).unwrap() >= 3);
+    let (resp, _) = handle_request(&h, r#"{"op":"top","k":3}"#);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    h.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Durable subscriptions across reconnects
+// ---------------------------------------------------------------------------
+
+/// Acceptance: a tokened subscription survives its connection. While
+/// the client is away the top-1 flips; re-subscribing under the same
+/// token acks `replayed: true` and delivers the missed diff instead of
+/// silently resetting the baseline.
+#[test]
+fn durable_subscription_replays_missed_diff_on_reconnect() {
+    // A star into vertex 0: the unambiguous initial top-1.
+    let star: Vec<(u64, u64)> = (1..=6).map(|i| (i, 0)).collect();
+    let engine = EngineBuilder::new().build_from_edges(star).unwrap();
+    let h = Arc::new(ServerHandle::spawn_with(engine, &ServeOptions::new()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let h2 = Arc::clone(&h);
+        std::thread::spawn(move || {
+            serve_shared(h2, listener, ServeOptions::new().workers(1)).unwrap()
+        })
+    };
+
+    // Control connection: drives updates while the subscriber is away.
+    let mut ctl = TcpStream::connect(addr).unwrap();
+    ctl.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut ctl_r = BufReader::new(ctl.try_clone().unwrap());
+
+    // Subscriber, take one: tokened top-1 subscription.
+    {
+        let mut sub = TcpStream::connect(addr).unwrap();
+        sub.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut sub_r = BufReader::new(sub.try_clone().unwrap());
+        send_line(&mut sub, r#"{"v":2,"op":"subscribe","what":"topk","k":1,"token":"cli-1"}"#);
+        let ack = read_json_line(&mut sub_r);
+        assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            ack.get("replayed").and_then(Json::as_bool),
+            Some(false),
+            "first registration has nothing to replay"
+        );
+    } // connection dropped — NOT unsubscribed
+
+    // The record outlives the connection.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !h.subscriptions().is_empty() {
+        assert!(Instant::now() < deadline, "closed connection never reaped");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(h.subscriptions().durable_len(), 1, "durable record survives the disconnect");
+
+    // While the subscriber is away, vertex 7 takes the top spot: six
+    // spoke in-links plus one from the old hub.
+    for i in 1..=6u64 {
+        send_line(&mut ctl, &format!(r#"{{"op":"add","src":{i},"dst":7}}"#));
+        assert_eq!(read_json_line(&mut ctl_r).get("ok").and_then(Json::as_bool), Some(true));
+    }
+    send_line(&mut ctl, r#"{"op":"add","src":0,"dst":7}"#);
+    assert_eq!(read_json_line(&mut ctl_r).get("ok").and_then(Json::as_bool), Some(true));
+    send_line(&mut ctl, r#"{"v":2,"id":9,"op":"query","top":1}"#);
+    let resp = read_json_line(&mut ctl_r);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+
+    // Wait until a snapshot ranking 7 on top is actually published (the
+    // recompute lands asynchronously).
+    let reader = h.reader();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let top = reader.top(1);
+        if top.first().map(|&(id, _)| id) == Some(7) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "vertex 7 never reached the top");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Subscriber, take two: same token, same spec. The ack flags the
+    // replay and the missed top-1 turnover arrives as a push frame.
+    let mut sub = TcpStream::connect(addr).unwrap();
+    sub.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut sub_r = BufReader::new(sub.try_clone().unwrap());
+    send_line(&mut sub, r#"{"v":2,"op":"subscribe","what":"topk","k":1,"token":"cli-1"}"#);
+    let mut replay_ack = None;
+    let mut frame = None;
+    for _ in 0..50 {
+        let line = read_json_line(&mut sub_r);
+        if line.get("notify").is_some() {
+            frame = Some(line);
+        } else {
+            replay_ack = Some(line);
+        }
+        if replay_ack.is_some() && frame.is_some() {
+            break;
+        }
+    }
+    let ack = replay_ack.expect("re-subscribe ack never arrived");
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(ack.get("replayed").and_then(Json::as_bool), Some(true));
+    let frame = frame.expect("missed-diff push frame never arrived");
+    let body = frame.get("notify").unwrap();
+    assert_eq!(body.get("kind").and_then(Json::as_str), Some("topk"));
+    let entered: Vec<u64> = body
+        .get("entered")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_u64)
+        .collect();
+    let left: Vec<u64> = body
+        .get("left")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_u64)
+        .collect();
+    assert_eq!(entered, vec![7], "the new top-1 replays as entered");
+    assert_eq!(left, vec![0], "the displaced hub replays as left");
+
+    // An explicit unsubscribe DOES remove the durable record.
+    let sub_id = ack.get("sub").and_then(Json::as_u64).unwrap();
+    send_line(&mut sub, &format!(r#"{{"v":2,"op":"unsubscribe","sub":{sub_id}}}"#));
+    assert_eq!(read_json_line(&mut sub_r).get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(h.subscriptions().durable_len(), 0);
+
+    send_line(&mut ctl, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut ctl_r).get("ok").and_then(Json::as_bool), Some(true));
+    server.join().unwrap();
+}
