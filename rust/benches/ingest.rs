@@ -22,9 +22,9 @@
 //!
 //! Emits `results/ingest_bench.json` and — when the serving bench ran
 //! first (CI does) — merges `results/bench_4.json` into
-//! `results/bench_8.json`, the BENCH_8 perf-trajectory artifact
-//! (superset of the BENCH_7 schema: micro + serving + saturation +
-//! subscriptions + ingest speedups + durability).
+//! `results/bench_9.json`, the BENCH_9 perf-trajectory artifact
+//! (superset of the BENCH_8 schema: micro + serving + saturation +
+//! subscriptions + sharded scale-out + ingest speedups + durability).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -278,8 +278,9 @@ fn main() {
         .expect("write ingest json");
     println!("JSON written to results/ingest_bench.json");
 
-    // BENCH_8 = BENCH_7 schema (micro + serving + saturation +
-    // subscriptions + ingest) + the durability section.
+    // BENCH_9 = BENCH_8 schema (micro + serving + saturation +
+    // subscriptions + ingest + durability) + the sharded scale-out
+    // ratios the serving bench folded into bench_4.json.
     let mut doc = std::fs::read_to_string("results/bench_4.json")
         .or_else(|_| std::fs::read_to_string("results/micro_bench.json"))
         .ok()
@@ -332,6 +333,6 @@ fn main() {
             ]),
         );
     }
-    std::fs::write("results/bench_8.json", doc.to_string_pretty()).expect("write bench_8 json");
-    println!("JSON written to results/bench_8.json");
+    std::fs::write("results/bench_9.json", doc.to_string_pretty()).expect("write bench_9 json");
+    println!("JSON written to results/bench_9.json");
 }

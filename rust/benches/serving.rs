@@ -14,9 +14,13 @@
 //!   registered, worst-case diffs where every publish flips top-K, rank
 //!   and hot-set membership (`publish_subs{1,64,1024}`).
 //!
+//! * **Sharded scale-out**: the same mixed mutation + recompute stream
+//!   absorbed by a 2- and a 4-shard cluster vs the single engine
+//!   (`sharded2_vs_single`, `sharded4_vs_single`).
+//!
 //! Emits `results/serving_bench.json` and — when the micro bench ran
 //! first (CI does) — merges its numbers into `results/bench_4.json`,
-//! which the ingest bench folds into the final BENCH_7 perf-trajectory
+//! which the ingest bench folds into the final BENCH_9 perf-trajectory
 //! artifact.
 
 use std::io::{BufRead, BufReader, Write};
@@ -28,6 +32,7 @@ use std::time::{Duration, Instant};
 use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
 use veilgraph::coordinator::serving::{RankSnapshot, SnapshotPublisher};
+use veilgraph::coordinator::sharded::ShardedEngineBuilder;
 use veilgraph::coordinator::subscription::{Mailbox, Subscription};
 use veilgraph::coordinator::udf::{Action, ExecStats};
 use veilgraph::graph::generate;
@@ -212,6 +217,68 @@ fn saturation(addr: std::net::SocketAddr) -> (f64, f64, f64) {
     (idle_rps, sat_rps, percentile(sat_lats, 0.99))
 }
 
+const SHARDED_TOTAL_OPS: usize = 1 << 18;
+const SHARDED_BATCH: usize = 4_096;
+
+/// Deterministic mixed mutation stream, identical for every mode:
+/// fresh-vertex adds against the 50k base id space with every fourth op
+/// removing the edge added two ops earlier, cut into
+/// [`SHARDED_BATCH`]-op batches.
+fn sharded_stream(total: usize) -> Vec<Vec<EdgeOp>> {
+    let mut out = Vec::new();
+    let mut batch = Vec::with_capacity(SHARDED_BATCH);
+    for i in 0..total as u64 {
+        batch.push(if i % 4 == 3 {
+            EdgeOp::remove(2_000_000 + i - 2, (i - 2).wrapping_mul(17) % 50_000)
+        } else {
+            EdgeOp::add(2_000_000 + i, i.wrapping_mul(17) % 50_000)
+        });
+        if batch.len() == SHARDED_BATCH {
+            out.push(std::mem::take(&mut batch));
+        }
+    }
+    if !batch.is_empty() {
+        out.push(batch);
+    }
+    out
+}
+
+/// Ops/sec absorbing the pre-generated stream batch by batch, with one
+/// blocking recompute mid-stream and one at the end. `shards == 1`
+/// drives the single engine through its adaptive query path; a cluster
+/// always runs the exact cross-shard boundary exchange (the
+/// conservative side of the comparison).
+fn sharded_absorb_rate(shards: usize, edges: Vec<(u64, u64)>, batches: &[Vec<EdgeOp>]) -> f64 {
+    let total: usize = batches.iter().map(Vec::len).sum();
+    let mid = batches.len() / 2;
+    if shards == 1 {
+        let mut e = EngineBuilder::new().build_from_edges(edges).expect("build engine");
+        let t0 = Instant::now();
+        for (i, b) in batches.iter().enumerate() {
+            e.ingest_batch(b.iter().copied());
+            e.flush_pending();
+            if i == mid {
+                e.query().expect("single query");
+            }
+        }
+        e.query().expect("single query");
+        total as f64 / t0.elapsed().as_secs_f64()
+    } else {
+        let mut e =
+            ShardedEngineBuilder::new(shards).build_from_edges(edges).expect("build cluster");
+        let t0 = Instant::now();
+        for (i, b) in batches.iter().enumerate() {
+            e.ingest_batch(b.iter().copied());
+            e.flush_pending();
+            if i == mid {
+                e.query().expect("cluster query");
+            }
+        }
+        e.query().expect("cluster query");
+        total as f64 / t0.elapsed().as_secs_f64()
+    }
+}
+
 const SUB_VERTICES: usize = 10_000;
 const SUB_PUBLISHES: usize = 500;
 
@@ -340,6 +407,19 @@ fn main() {
         sub_results.push((n_subs, ns));
     }
 
+    // ---- sharded scale-out: cluster vs single-engine absorb rate -----
+    println!();
+    let base_edges = generate::copying_web(50_000, 10, 0.7, 44);
+    let stream = sharded_stream(SHARDED_TOTAL_OPS);
+    let single_rate = sharded_absorb_rate(1, base_edges.clone(), &stream);
+    println!("sharded_absorb_single   {single_rate:>12.0} ops/sec");
+    let sharded2 = sharded_absorb_rate(2, base_edges.clone(), &stream);
+    let sharded4 = sharded_absorb_rate(4, base_edges, &stream);
+    let s2_ratio = sharded2 / single_rate;
+    let s4_ratio = sharded4 / single_rate;
+    println!("sharded_absorb_shards2  {sharded2:>12.0} ops/sec ({s2_ratio:.2}x vs single)");
+    println!("sharded_absorb_shards4  {sharded4:>12.0} ops/sec ({s4_ratio:.2}x vs single)");
+
     // ---- machine-readable artifact -----------------------------------
     std::fs::create_dir_all("results").ok();
     let serving = Json::obj(vec![
@@ -382,6 +462,18 @@ fn main() {
                 ("recompute_overlap_read_p99", Json::Num(p99)),
             ]),
         ),
+        (
+            "sharded",
+            Json::obj(vec![
+                ("total_ops", Json::Num(SHARDED_TOTAL_OPS as f64)),
+                ("batch_ops", Json::Num(SHARDED_BATCH as f64)),
+                ("single_ops_per_sec", Json::Num(single_rate)),
+                ("shards2_ops_per_sec", Json::Num(sharded2)),
+                ("shards4_ops_per_sec", Json::Num(sharded4)),
+                ("sharded2_vs_single", Json::Num(s2_ratio)),
+                ("sharded4_vs_single", Json::Num(s4_ratio)),
+            ]),
+        ),
     ]);
     std::fs::write("results/serving_bench.json", serving.to_string_pretty())
         .expect("write serving json");
@@ -396,6 +488,8 @@ fn main() {
         let ratios = [
             ("serve_readers4_vs_single", ratio),
             ("serve_saturated_vs_idle", sat_ratio),
+            ("sharded2_vs_single", s2_ratio),
+            ("sharded4_vs_single", s4_ratio),
         ];
         match map.get_mut("speedups") {
             Some(Json::Obj(speedups)) => {

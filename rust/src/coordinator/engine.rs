@@ -135,6 +135,26 @@ pub struct AsyncQueryResult {
     pub snapshot: Arc<RankSnapshot>,
 }
 
+/// How [`Engine::query_async`] may turn an escalated staleness decision
+/// into an off-thread recompute job. The server picks a mode per query
+/// from its outstanding-job bookkeeping (see
+/// [`crate::coordinator::server`]): `WhenDue` with no job in flight,
+/// `ExactOnly` to supersede a stale in-flight job, `Never` otherwise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Record the decision (and serve degraded) but never hand back a
+    /// job.
+    Never,
+    /// Schedule whenever the decision escalates past
+    /// [`Action::RepeatLast`].
+    WhenDue,
+    /// Schedule only a full-accuracy job. This is the supersession
+    /// guard: a replacement job is only worth cancelling its
+    /// predecessor for when it refreshes *every* vertex, so discarding
+    /// the superseded result loses nothing.
+    ExactOnly,
+}
+
 /// Inputs for an approximate (summarized) recompute, cloned at the
 /// version fence.
 struct ApproxInputs {
@@ -956,14 +976,16 @@ impl Engine {
     /// [0, 1]) degrades the decision down the accuracy ladder instead of
     /// letting work queue unboundedly.
     ///
-    /// `allow_schedule` is false while a recompute is already in flight:
-    /// the decision is still recorded (and served degraded) but no second
-    /// job is created.
+    /// `mode` gates job creation (see [`ScheduleMode`]): the server
+    /// passes `Never` while an up-to-date recompute is already in
+    /// flight — the decision is still recorded (and served degraded)
+    /// but no second job is created — and `ExactOnly` when a stale
+    /// in-flight job is worth superseding.
     pub fn query_async(
         &mut self,
         policy: &StalenessPolicy,
         pressure: f64,
-        allow_schedule: bool,
+        mode: ScheduleMode,
     ) -> Result<(AsyncQueryResult, Option<RecomputeJob>)> {
         if self.stopped {
             return Err(Error::Engine("engine is stopped".into()));
@@ -997,11 +1019,13 @@ impl Engine {
         );
         self.queries_since_exact += 1;
         self.queries_since_publish += 1;
-        let job = if allow_schedule && decision != Action::RepeatLast {
-            Some(self.begin_recompute(decision, query_id))
-        } else {
-            None
+        let may_schedule = match mode {
+            ScheduleMode::Never => false,
+            ScheduleMode::WhenDue => decision != Action::RepeatLast,
+            ScheduleMode::ExactOnly => decision == Action::ComputeExact,
         };
+        let job =
+            if may_schedule { Some(self.begin_recompute(decision, query_id)) } else { None };
         // The answer itself always repeats the published ranking (the
         // recompute, if any, publishes later from the worker's result).
         let exec = ExecStats::default();
@@ -2190,13 +2214,13 @@ mod tests {
         let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
         let policy = StalenessPolicy::default();
         // Clean snapshot: repeat-last, nothing scheduled.
-        let (a, job) = e.query_async(&policy, 0.0, true).unwrap();
+        let (a, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
         assert_eq!(a.decision, Action::RepeatLast);
         assert!(!a.scheduled && job.is_none());
         // One update escalates; the reply is served from the absorbed
         // (republished) snapshot while the job runs elsewhere.
         e.ingest(EdgeOp::add(3, 7));
-        let (a, job) = e.query_async(&policy, 0.0, true).unwrap();
+        let (a, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
         assert_ne!(a.decision, Action::RepeatLast);
         assert!(a.scheduled);
         assert_eq!(a.snapshot.graph_version, e.graph().version(), "reply sees the write");
@@ -2223,17 +2247,17 @@ mod tests {
         let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
         let policy = StalenessPolicy::default();
         e.ingest(EdgeOp::add(3, 7));
-        let (_, job) = e.query_async(&policy, 0.0, true).unwrap();
+        let (_, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
         let job = job.unwrap();
         // The graph moves past the fence while the job is "running";
         // with a recompute in flight no second job is scheduled.
         e.ingest(EdgeOp::AddVertex(99));
-        let (a2, job2) = e.query_async(&policy, 0.0, false).unwrap();
+        let (a2, job2) = e.query_async(&policy, 0.0, ScheduleMode::Never).unwrap();
         assert!(job2.is_none() && !a2.scheduled);
         assert!(a2.snapshot.rank_of(99).is_some(), "absorb republished the new vertex");
         let res = job.run();
         assert!(!e.finish_recompute(res), "fence must miss");
-        assert_eq!(e.metrics().counter("recompute_fence_misses"), Some(1));
+        assert_eq!(e.metrics().counter("recompute_fence_misses"), 1);
         // The published result keeps the live topology: the fenced ranks
         // were merged by id, not installed wholesale.
         let snap = e.latest_snapshot();
@@ -2247,11 +2271,11 @@ mod tests {
         let policy = StalenessPolicy::default();
         e.ingest(EdgeOp::add(1, 5));
         // Saturated queue: decision degrades to repeat-last, no job.
-        let (a, job) = e.query_async(&policy, 1.0, true).unwrap();
+        let (a, job) = e.query_async(&policy, 1.0, ScheduleMode::WhenDue).unwrap();
         assert_eq!(a.decision, Action::RepeatLast);
         assert!(job.is_none());
         // Pressure clears: the preserved staleness signal schedules now.
-        let (a, job) = e.query_async(&policy, 0.0, true).unwrap();
+        let (a, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
         assert!(a.scheduled && job.is_some());
     }
 

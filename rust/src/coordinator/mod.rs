@@ -9,6 +9,7 @@ pub mod policies;
 pub mod protocol;
 pub mod server;
 pub mod serving;
+pub mod sharded;
 pub mod subscription;
 pub mod udf;
 pub mod wal;

@@ -15,9 +15,13 @@
 //!   version-fenced [`RecomputeJob`]; a dedicated worker runs it and
 //!   returns the result through the command queue, where
 //!   [`Engine::finish_recompute`] installs (fence hit) or merges (fence
-//!   miss) it and publishes. At most one job is in flight; decisions
-//!   degrade down the accuracy ladder under queue pressure
-//!   ([`StalenessPolicy::decide_under_pressure`]).
+//!   miss) it and publishes. While a job runs, queries are still decided
+//!   and answered (degraded); if the graph has moved past the in-flight
+//!   job's fence, one *exact* successor may be scheduled to supersede it
+//!   — the stale result is then discarded on arrival (counted as
+//!   `recomputes_cancelled`) instead of fence-miss-merged under the
+//!   fresher one. Decisions degrade down the accuracy ladder under queue
+//!   pressure ([`StalenessPolicy::decide_under_pressure`]).
 //! * **Read plane** — every [`ServerHandle`] carries a
 //!   [`SnapshotReader`] onto the published
 //!   [`RankSnapshot`](crate::coordinator::serving::RankSnapshot)s;
@@ -51,8 +55,16 @@
 //! ([`crate::stream::window`]), and [`ServeOptions::communities`] keeps
 //! streaming label propagation warm so `subscribe community` standing
 //! queries can fire.
+//!
+//! [`ServerHandle::spawn_sharded`] runs the same loop over a
+//! [`ShardedEngine`] (`serve --shards N`): writes partition-route to
+//! owning shards inside the engine, `rank` reads route to the owning
+//! shard's published snapshot, `top` serves the k-way merged combined
+//! snapshot, and `stats` gains a per-shard section — the wire protocol
+//! is otherwise unchanged. Durability and the community workload are
+//! single-engine features and are disabled when sharded.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -64,19 +76,22 @@ use std::time::{Duration, Instant};
 use crate::community::streaming::StreamingCommunities;
 use crate::coordinator::checkpoint::{CheckpointJob, CheckpointOutcome};
 use crate::coordinator::engine::{
-    AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeResult,
+    AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeResult, ScheduleMode,
 };
 use crate::coordinator::policies::StalenessPolicy;
 use crate::coordinator::protocol::{Envelope, Request, Response};
 use crate::coordinator::serving::{ReadKind, SnapshotReader};
+use crate::coordinator::sharded::{ShardedEngine, ShardedRecomputeJob, ShardedRecomputeResult};
 use crate::coordinator::subscription::{Mailbox, SubscriptionRegistry};
 use crate::coordinator::udf::Action;
 use crate::coordinator::wal::DurabilityStats;
 use crate::error::{Error, Result};
+use crate::graph::partition::Partitioner;
 use crate::graph::VertexId;
 use crate::stream::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::stream::event::EdgeOp;
-use crate::stream::window::SlidingWindow;
+use crate::stream::window::{SlidingWindow, WindowState};
+use crate::summary::params::SummaryParams;
 use crate::util::json::Json;
 
 pub use crate::coordinator::protocol::{
@@ -98,8 +113,9 @@ enum Command {
     /// Wire query: answered immediately from the published snapshot, with
     /// any recompute handed to the off-thread worker.
     WireQuery(Sender<Result<AsyncQueryResult>>),
-    /// A finished off-thread recompute coming home to be installed.
-    RecomputeDone(Box<RecomputeResult>),
+    /// A finished off-thread recompute coming home to be installed (or
+    /// discarded, when a newer exact job superseded it while it ran).
+    RecomputeDone { seq: u64, res: EngineJobResult },
     /// A finished off-thread checkpoint dump reporting back (clears the
     /// in-flight flag; on success the WAL prunes covered segments).
     CheckpointDone(CheckpointOutcome),
@@ -115,8 +131,201 @@ enum Command {
 /// background work that must never block ingest or reads, and sharing
 /// keeps at most one heavy background task on the machine at a time.
 enum WorkerJob {
-    Recompute(RecomputeJob),
+    /// A recompute tagged with its scheduling sequence number, so the
+    /// engine loop can tell a superseded result from a current one.
+    Recompute { seq: u64, job: EngineJob },
     Checkpoint(CheckpointJob),
+}
+
+/// The engine behind the command loop: one process-local [`Engine`] or a
+/// [`ShardedEngine`] cluster behind one router. Both speak the same
+/// command vocabulary; durability and the community workload are
+/// single-engine features (the sharded arms are no-ops / `None`).
+enum EngineCore {
+    Single(Box<Engine>),
+    Sharded(Box<ShardedEngine>),
+}
+
+impl EngineCore {
+    fn ingest(&mut self, op: EdgeOp) {
+        match self {
+            EngineCore::Single(e) => e.ingest(op),
+            EngineCore::Sharded(e) => e.ingest(op),
+        }
+    }
+
+    fn ingest_batch(&mut self, ops: Vec<EdgeOp>) {
+        match self {
+            EngineCore::Single(e) => e.ingest_batch(ops),
+            EngineCore::Sharded(e) => e.ingest_batch(ops),
+        }
+    }
+
+    fn query(&mut self) -> Result<QueryResult> {
+        match self {
+            EngineCore::Single(e) => e.query(),
+            EngineCore::Sharded(e) => e.query(),
+        }
+    }
+
+    /// Apply pending coalesced updates now, so [`Self::version_token`]
+    /// reflects everything the next scheduled job would fence.
+    fn flush_pending(&mut self) {
+        match self {
+            EngineCore::Single(e) => e.flush_pending(),
+            EngineCore::Sharded(e) => e.flush_pending(),
+        }
+    }
+
+    fn query_async(
+        &mut self,
+        policy: &StalenessPolicy,
+        pressure: f64,
+        mode: ScheduleMode,
+    ) -> Result<(AsyncQueryResult, Option<EngineJob>)> {
+        match self {
+            EngineCore::Single(e) => {
+                let (aq, job) = e.query_async(policy, pressure, mode)?;
+                Ok((aq, job.map(EngineJob::Single)))
+            }
+            EngineCore::Sharded(e) => {
+                let (aq, job) = e.query_async(policy, pressure, mode)?;
+                Ok((aq, job.map(EngineJob::Sharded)))
+            }
+        }
+    }
+
+    /// Install (or fence-miss-merge) a finished recompute; true = fence
+    /// hit. A result from the other engine shape cannot arise (jobs are
+    /// created by this same core); it is absorbed as a hit.
+    fn finish_recompute(&mut self, res: EngineJobResult) -> bool {
+        match (self, res) {
+            (EngineCore::Single(e), EngineJobResult::Single(r)) => e.finish_recompute(*r),
+            (EngineCore::Sharded(e), EngineJobResult::Sharded(r)) => e.finish_recompute(*r),
+            _ => true,
+        }
+    }
+
+    /// A cheap monotone token over the served topology: the single
+    /// engine's graph version, or the sum of shard graph versions. The
+    /// supersession policy compares the token an in-flight job fenced
+    /// against the current one.
+    fn version_token(&self) -> u64 {
+        match self {
+            EngineCore::Single(e) => e.graph().version(),
+            EngineCore::Sharded(e) => e.version_token(),
+        }
+    }
+
+    fn metrics_json(&self) -> Json {
+        match self {
+            EngineCore::Single(e) => e.metrics().to_json(),
+            EngineCore::Sharded(e) => e.metrics().to_json(),
+        }
+    }
+
+    fn reader(&self) -> SnapshotReader {
+        match self {
+            EngineCore::Single(e) => e.reader(),
+            EngineCore::Sharded(e) => e.reader(),
+        }
+    }
+
+    fn durability_stats(&self) -> Arc<DurabilityStats> {
+        match self {
+            EngineCore::Single(e) => e.durability_stats(),
+            // Sharded serving is memory-only: a default (disabled) gauge
+            // set keeps the wire `stats.durability` section well-formed.
+            EngineCore::Sharded(_) => Arc::new(DurabilityStats::default()),
+        }
+    }
+
+    fn take_recovered_window(&mut self) -> Option<WindowState> {
+        match self {
+            EngineCore::Single(e) => e.take_recovered_window(),
+            EngineCore::Sharded(_) => None,
+        }
+    }
+
+    fn checkpoint_due(&self) -> bool {
+        match self {
+            EngineCore::Single(e) => e.checkpoint_due(),
+            EngineCore::Sharded(_) => false,
+        }
+    }
+
+    fn begin_checkpoint(&mut self, window: Option<WindowState>) -> Option<CheckpointJob> {
+        match self {
+            EngineCore::Single(e) => e.begin_checkpoint(window),
+            EngineCore::Sharded(_) => None,
+        }
+    }
+
+    fn finish_checkpoint(&mut self, outcome: CheckpointOutcome) {
+        if let EngineCore::Single(e) = self {
+            e.finish_checkpoint(outcome);
+        }
+    }
+
+    fn shutdown_durable(&mut self, window: Option<WindowState>) {
+        match self {
+            EngineCore::Single(e) => e.shutdown_durable(window),
+            EngineCore::Sharded(e) => e.stop(),
+        }
+    }
+
+    fn stop(&mut self) {
+        match self {
+            EngineCore::Single(e) => e.stop(),
+            EngineCore::Sharded(e) => e.stop(),
+        }
+    }
+
+    /// Edge list + summary params seeding the streaming-communities
+    /// workload; `None` when the engine shape does not support it (the
+    /// sharded cluster has no single co-resident edge list).
+    fn community_seed(&self) -> Option<(Vec<(VertexId, VertexId)>, SummaryParams)> {
+        match self {
+            EngineCore::Single(e) => {
+                let g = e.graph();
+                let edges = g.edges().map(|(s, d)| (g.id(s), g.id(d))).collect();
+                Some((edges, e.params()))
+            }
+            EngineCore::Sharded(_) => None,
+        }
+    }
+}
+
+/// A version-fenced recompute from either engine shape, run on the
+/// shared worker thread.
+enum EngineJob {
+    Single(RecomputeJob),
+    Sharded(ShardedRecomputeJob),
+}
+
+impl EngineJob {
+    fn run(self) -> EngineJobResult {
+        match self {
+            EngineJob::Single(j) => EngineJobResult::Single(Box::new(j.run())),
+            EngineJob::Sharded(j) => EngineJobResult::Sharded(Box::new(j.run())),
+        }
+    }
+}
+
+enum EngineJobResult {
+    Single(Box<RecomputeResult>),
+    Sharded(Box<ShardedRecomputeResult>),
+}
+
+impl EngineJobResult {
+    /// Whether the job refreshed every rank (an installable result, as
+    /// opposed to a repeat-last no-op).
+    fn refreshed(&self) -> bool {
+        match self {
+            EngineJobResult::Single(r) => r.refreshed(),
+            EngineJobResult::Sharded(r) => r.refreshed(),
+        }
+    }
 }
 
 /// Live counters for the wire front end, shared between the acceptor,
@@ -134,6 +343,9 @@ pub struct WireStats {
     /// Off-thread recomputes whose version fence missed (the graph moved
     /// while the job ran; the result was merged by id, not installed).
     pub recompute_fence_misses: AtomicU64,
+    /// Off-thread recomputes whose result was discarded because a newer
+    /// exact job superseded them while they ran.
+    pub recomputes_cancelled: AtomicU64,
     /// Edges expired out of the sliding window so far.
     pub window_expired: AtomicU64,
     /// Unexpired admits currently tracked by the sliding window.
@@ -201,6 +413,38 @@ impl RecomputeGate {
     }
 }
 
+/// The read plane's routing table for a sharded server: the partitioner
+/// plus one [`SnapshotReader`] per shard (owned-only snapshots), so
+/// `rank` lookups go straight to the owning shard without touching the
+/// combined merge.
+struct ShardSet {
+    parts: Partitioner,
+    readers: Vec<SnapshotReader>,
+}
+
+impl ShardSet {
+    /// The `shards` section of the wire `stats` op: per-shard snapshot
+    /// gauges in shard order.
+    fn stats_json(&self) -> Json {
+        Json::Arr(
+            self.readers
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let s = r.latest();
+                    Json::obj(vec![
+                        ("shard", Json::Num(i as f64)),
+                        ("vertices", Json::Num(s.num_vertices() as f64)),
+                        ("version", Json::Num(s.version as f64)),
+                        ("graph_version", Json::Num(s.graph_version as f64)),
+                        ("age_secs", Json::Num(s.age_secs())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
 /// Handle to a running engine thread + recompute worker, plus the
 /// lock-free read plane.
 pub struct ServerHandle {
@@ -219,12 +463,35 @@ pub struct ServerHandle {
     /// `stats.durability` section; reports `enabled: false` when the
     /// server runs without a data dir).
     durability: Arc<DurabilityStats>,
+    /// Present on sharded servers: the partition routing table the read
+    /// plane uses for `rank` and the per-shard `stats` section.
+    shards: Option<Arc<ShardSet>>,
 }
 
 impl ServerHandle {
     /// Spawn the engine thread and the recompute worker with the queue,
     /// overflow and staleness knobs from `opts`.
-    pub fn spawn_with(mut engine: Engine, opts: &ServeOptions) -> Self {
+    pub fn spawn_with(engine: Engine, opts: &ServeOptions) -> Self {
+        Self::spawn_core(EngineCore::Single(Box::new(engine)), None, opts)
+    }
+
+    /// Spawn the command loop over a sharded cluster
+    /// ([`crate::coordinator::sharded::ShardedEngine`], `serve --shards
+    /// N`): same queue, same wire protocol, with `rank` reads
+    /// partition-routed to the owning shard's snapshot and a per-shard
+    /// `stats` section. Durability and the community workload are
+    /// single-engine features and are unavailable in this mode.
+    pub fn spawn_sharded(engine: ShardedEngine, opts: &ServeOptions) -> Self {
+        let shards =
+            Arc::new(ShardSet { parts: engine.partitioner(), readers: engine.shard_readers() });
+        Self::spawn_core(EngineCore::Sharded(Box::new(engine)), Some(shards), opts)
+    }
+
+    fn spawn_core(
+        mut engine: EngineCore,
+        shards: Option<Arc<ShardSet>>,
+        opts: &ServeOptions,
+    ) -> Self {
         let reader = engine.reader();
         let durability = engine.durability_stats();
         let queue = Arc::new(BoundedQueue::new(opts.queue_capacity, opts.overflow));
@@ -245,15 +512,12 @@ impl ServerHandle {
                     // a full queue must not be able to strand a finished
                     // job.
                     match job {
-                        WorkerJob::Recompute(job) => {
+                        WorkerJob::Recompute { seq, job } => {
                             if !gate2.wait_released(&q_jobs) {
                                 break;
                             }
                             let res = job.run();
-                            if q_jobs
-                                .force_push(Command::RecomputeDone(Box::new(res)))
-                                .is_err()
-                            {
+                            if q_jobs.force_push(Command::RecomputeDone { seq, res }).is_err() {
                                 break;
                             }
                         }
@@ -280,10 +544,13 @@ impl ServerHandle {
             .name("veilgraph-engine".into())
             .spawn(move || {
                 let cap = q2.capacity().max(1);
-                // At most one recompute job outstanding: while it runs,
-                // queries are still decided and answered (degraded) but
-                // no second job is created.
-                let mut in_flight = false;
+                // Outstanding recompute jobs as (seq, fenced version
+                // token) in scheduling order. At most two exist: one
+                // running plus, when the graph moved past its fence, one
+                // exact successor that supersedes it — the superseded
+                // result is discarded when it comes home.
+                let mut outstanding: VecDeque<(u64, u64)> = VecDeque::new();
+                let mut next_seq: u64 = 0;
                 // The window's logical clock: wall nanoseconds since the
                 // engine thread started.
                 let epoch = Instant::now();
@@ -302,13 +569,20 @@ impl ServerHandle {
                 // propagation, seeded from the engine's graph and kept in
                 // step with every mutation (including window expiries).
                 let mut communities = if communities_on {
-                    let g = engine.graph();
-                    let edges: Vec<(VertexId, VertexId)> =
-                        g.edges().map(|(s, d)| (g.id(s), g.id(d))).collect();
-                    match StreamingCommunities::new(edges, engine.params(), 30) {
-                        Ok(c) => Some(c),
-                        Err(e) => {
-                            crate::log_warn!("community workload disabled: {e}");
+                    match engine.community_seed() {
+                        Some((edges, params)) => {
+                            match StreamingCommunities::new(edges, params, 30) {
+                                Ok(c) => Some(c),
+                                Err(e) => {
+                                    crate::log_warn!("community workload disabled: {e}");
+                                    None
+                                }
+                            }
+                        }
+                        None => {
+                            crate::log_warn!(
+                                "community workload disabled: unsupported on a sharded engine"
+                            );
                             None
                         }
                     }
@@ -359,11 +633,36 @@ impl ServerHandle {
                         }
                         Command::WireQuery(reply) => {
                             let pressure = q2.len() as f64 / cap as f64;
-                            match engine.query_async(&policy, pressure, !in_flight) {
+                            // Flush first so the token comparison sees
+                            // buffered-but-unapplied writes too (the
+                            // query would apply them anyway).
+                            engine.flush_pending();
+                            // Supersession policy: nothing in flight →
+                            // schedule whenever the policy escalates; one
+                            // job fenced behind the current topology →
+                            // only an exact job may supersede it; two
+                            // outstanding (or one still current) → never
+                            // stack more.
+                            let mode = if outstanding.is_empty() {
+                                ScheduleMode::WhenDue
+                            } else if outstanding.len() == 1
+                                && outstanding[0].1 != engine.version_token()
+                            {
+                                ScheduleMode::ExactOnly
+                            } else {
+                                ScheduleMode::Never
+                            };
+                            match engine.query_async(&policy, pressure, mode) {
                                 Ok((mut aq, job)) => {
                                     if let Some(job) = job {
-                                        if job_tx.send(WorkerJob::Recompute(job)).is_ok() {
-                                            in_flight = true;
+                                        let seq = next_seq;
+                                        next_seq += 1;
+                                        if job_tx.send(WorkerJob::Recompute { seq, job }).is_ok() {
+                                            // Token read *after*
+                                            // query_async: pending
+                                            // updates were applied, so
+                                            // this is what the job fenced.
+                                            outstanding.push_back((seq, engine.version_token()));
                                             w2.recompute_in_flight.store(true, Ordering::SeqCst);
                                         } else {
                                             aq.scheduled = false;
@@ -378,20 +677,30 @@ impl ServerHandle {
                             }
                             publish_point = true;
                         }
-                        Command::RecomputeDone(res) => {
-                            in_flight = false;
-                            w2.recompute_in_flight.store(false, Ordering::SeqCst);
-                            let refreshed = res.refreshed();
-                            if !engine.finish_recompute(*res) && refreshed {
-                                w2.recompute_fence_misses.fetch_add(1, Ordering::SeqCst);
+                        Command::RecomputeDone { seq, res } => {
+                            // Superseded: a newer exact job is already in
+                            // flight and covers strictly more of the
+                            // graph's history — discard this result
+                            // rather than fence-miss-merging stale ranks.
+                            let superseded = outstanding.front().map(|&(s, _)| s) == Some(seq)
+                                && outstanding.len() > 1;
+                            outstanding.retain(|&(s, _)| s != seq);
+                            w2.recompute_in_flight.store(!outstanding.is_empty(), Ordering::SeqCst);
+                            if superseded {
+                                w2.recomputes_cancelled.fetch_add(1, Ordering::SeqCst);
+                            } else {
+                                let refreshed = res.refreshed();
+                                if !engine.finish_recompute(res) && refreshed {
+                                    w2.recompute_fence_misses.fetch_add(1, Ordering::SeqCst);
+                                }
+                                publish_point = true;
                             }
-                            publish_point = true;
                         }
                         Command::CheckpointDone(out) => {
                             engine.finish_checkpoint(out);
                         }
                         Command::Stats(reply) => {
-                            let _ = reply.send(engine.metrics().to_json());
+                            let _ = reply.send(engine.metrics_json());
                         }
                         Command::Tick => {}
                         Command::Shutdown => {
@@ -504,6 +813,7 @@ impl ServerHandle {
             wire,
             gate,
             durability,
+            shards,
         }
     }
 
@@ -634,6 +944,10 @@ impl ServerHandle {
             (
                 "recompute_fence_misses",
                 Json::Num(self.wire.recompute_fence_misses.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "recomputes_cancelled",
+                Json::Num(self.wire.recomputes_cancelled.load(Ordering::SeqCst) as f64),
             ),
             (
                 "window_expired",
@@ -961,7 +1275,13 @@ fn dispatch(
             )
         }
         Request::Rank { id } => {
-            let snap = handle.reader.latest_for(ReadKind::Rank);
+            // Partition-routed read: on a sharded server the owning
+            // shard's (owned-only) snapshot answers directly; `top`
+            // stays on the combined k-way merge.
+            let snap = match &handle.shards {
+                Some(ss) => ss.readers[ss.parts.shard_of(id)].latest_for(ReadKind::Rank),
+                None => handle.reader.latest_for(ReadKind::Rank),
+            };
             done(Response::Rank { version: snap.version, id, rank: snap.rank_of(id) }, &env)
         }
         Request::Stats => {
@@ -969,6 +1289,9 @@ fn dispatch(
                 Json::Obj(mut fields) => {
                     fields.insert("server".into(), handle.server_stats_json());
                     fields.insert("durability".into(), handle.durability.to_json());
+                    if let Some(ss) = &handle.shards {
+                        fields.insert("shards".into(), ss.stats_json());
+                    }
                     Json::Obj(fields)
                 }
                 other => other,
@@ -1626,6 +1949,83 @@ mod tests {
             std::thread::sleep(Duration::from_millis(10));
         }
         assert!(refreshed, "off-thread recompute must publish a fresh snapshot");
+        h.shutdown();
+    }
+
+    #[test]
+    fn superseded_recompute_is_cancelled() {
+        let edges: Vec<(u64, u64)> = (0..20).map(|i| (i, (i + 1) % 20)).collect();
+        let engine = EngineBuilder::new().build_from_edges(edges).unwrap();
+        // Every update escalates straight to exact, so the second query
+        // schedules an exact successor that supersedes the pinned job.
+        let opts = ServeOptions::new()
+            .queue_capacity(64)
+            .policy(StalenessPolicy::new(1, 1, 8, 64, 5.0, 120.0));
+        let h = ServerHandle::spawn_with(engine, &opts);
+        h.hold_recompute();
+        // Job A: fenced on the topology including edge (100, 0), then
+        // pinned at the worker gate before it runs.
+        h.ingest(EdgeOp::add(100, 0)).unwrap();
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":1}"#);
+        assert_eq!(resp.get("scheduled").unwrap().as_bool(), Some(true));
+        // The graph moves past A's fence; the next query schedules the
+        // exact successor B.
+        h.ingest(EdgeOp::add(101, 0)).unwrap();
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":1}"#);
+        assert_eq!(resp.get("action").unwrap().as_str(), Some("exact"));
+        assert_eq!(resp.get("scheduled").unwrap().as_bool(), Some(true));
+        h.release_recompute();
+        // A comes home first and is discarded; B installs cleanly and
+        // publishes a snapshot covering both new vertices.
+        let mut cancelled = 0;
+        for _ in 0..500 {
+            cancelled = h.wire_stats().recomputes_cancelled.load(Ordering::SeqCst);
+            if cancelled == 1 && h.reader().latest().rank_of(101).is_some() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(cancelled, 1, "superseded job must be counted as cancelled");
+        assert_eq!(
+            h.wire_stats().recompute_fence_misses.load(Ordering::SeqCst),
+            0,
+            "the discarded job must not be fence-miss-merged"
+        );
+        let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
+        let server = resp.get("stats").unwrap().get("server").unwrap();
+        assert_eq!(server.get("recomputes_cancelled").unwrap().as_u64(), Some(1));
+        // B's installed snapshot ranks both new vertices.
+        let snap = h.reader().latest();
+        assert!(snap.rank_of(100).is_some() && snap.rank_of(101).is_some());
+        h.shutdown();
+    }
+
+    #[test]
+    fn sharded_handle_routes_rank_and_reports_shards() {
+        use crate::coordinator::sharded::ShardedEngineBuilder;
+        let edges: Vec<(u64, u64)> = (0..20).map(|i| (i, (i + 1) % 20)).collect();
+        let engine = ShardedEngineBuilder::new(3).build_from_edges(edges).unwrap();
+        let h = ServerHandle::spawn_sharded(engine, &ServeOptions::new());
+        // rank routes to the owning shard's owned-only snapshot.
+        let (resp, _) = handle_request(&h, r#"{"op":"rank","id":7}"#);
+        assert!(resp.get("rank").unwrap().as_f64().is_some());
+        let (resp, _) = handle_request(&h, r#"{"op":"rank","id":424242}"#);
+        assert_eq!(resp.get("rank"), Some(&Json::Null));
+        // stats grow a per-shard section alongside the usual ones.
+        let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
+        let stats = resp.get("stats").unwrap();
+        let shards = stats.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 3);
+        let total: u64 =
+            shards.iter().map(|s| s.get("vertices").unwrap().as_u64().unwrap()).sum();
+        assert_eq!(total, 20, "owned shard snapshots partition the vertex set");
+        assert!(stats.get("server").is_some() && stats.get("durability").is_some());
+        // The write + query surface is unchanged.
+        let (resp, _) = handle_request(&h, r#"{"op":"add","src":100,"dst":0}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":3}"#);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 3);
         h.shutdown();
     }
 

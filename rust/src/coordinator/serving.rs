@@ -131,6 +131,88 @@ impl RankSnapshot {
         }
     }
 
+    /// Freeze the union of per-shard snapshots into one combined
+    /// ranking, **reusing** each shard's precomputed deterministic top-K
+    /// index instead of re-selecting over the union: the global top-K is
+    /// a k-way merge of the per-shard indexes under the same
+    /// (score desc, id asc) order, valid to `top_k_cap` entries because
+    /// every globally-top entry is top-`cap` within its own shard (each
+    /// shard's index holds ≥ `min(cap, |shard|)` entries). Ids and ranks
+    /// concatenate in shard order; `ids` must be disjoint across shards
+    /// (each vertex owned by exactly one shard).
+    ///
+    /// `published_at` carries the staleness anchor forward on
+    /// topology-only republishes (`None` = a fresh recompute, anchored
+    /// now).
+    #[allow(clippy::too_many_arguments)]
+    pub fn merged(
+        version: u64,
+        graph_version: u64,
+        query_id: u64,
+        action: Action,
+        exec: ExecStats,
+        shards: &[&RankSnapshot],
+        top_k_cap: usize,
+        engine_metrics: Json,
+        published_at: Option<Instant>,
+    ) -> Self {
+        let n: usize = shards.iter().map(|s| s.ids.len()).sum();
+        let mut ids = Vec::with_capacity(n);
+        let mut ranks = Vec::with_capacity(n);
+        let mut offsets = Vec::with_capacity(shards.len());
+        let mut hot = Vec::new();
+        for s in shards {
+            offsets.push(ids.len() as u32);
+            ids.extend_from_slice(&s.ids);
+            ranks.extend_from_slice(&s.ranks);
+            hot.extend_from_slice(&s.hot);
+        }
+        // K-way merge over per-shard cursors: at every step take the
+        // (score desc, id asc)-smallest head — the shard indexes are
+        // each already sorted under that order.
+        let cap = top_k_cap.min(n);
+        let mut cursors = vec![0usize; shards.len()];
+        let mut top_index = Vec::with_capacity(cap);
+        while top_index.len() < cap {
+            let mut best: Option<(usize, f64, VertexId)> = None;
+            for (si, s) in shards.iter().enumerate() {
+                if let Some(&p) = s.top_index.get(cursors[si]) {
+                    let (score, id) = (s.ranks[p as usize], s.ids[p as usize]);
+                    let better = match best {
+                        None => true,
+                        Some((_, bs, bid)) => score > bs || (score == bs && id < bid),
+                    };
+                    if better {
+                        best = Some((si, score, id));
+                    }
+                }
+            }
+            let Some((si, _, _)) = best else {
+                break; // every shard index exhausted below the cap
+            };
+            top_index.push(offsets[si] + shards[si].top_index[cursors[si]]);
+            cursors[si] += 1;
+        }
+        let mut by_id: Vec<u32> = (0..ids.len() as u32).collect();
+        by_id.sort_unstable_by_key(|&i| ids[i as usize]);
+        let mut snap = Self {
+            version,
+            graph_version,
+            query_id,
+            action,
+            exec,
+            ids,
+            ranks,
+            engine_metrics,
+            published_at: published_at.unwrap_or_else(Instant::now),
+            top_index,
+            by_id,
+            hot: Vec::new(),
+        };
+        snap.set_hot_set(hot);
+        snap
+    }
+
     /// Attach the hot-set membership the producing recompute used
     /// (called by the engine before publishing; sorted + deduped here so
     /// [`Self::is_hot`] can binary-search).
@@ -457,6 +539,37 @@ mod tests {
         }
         assert_eq!(s.rank_of(5), None);
         assert_eq!(s.rank_of(1000), None);
+    }
+
+    #[test]
+    fn merged_snapshot_equals_union_selection() {
+        // Two disjoint shards; the k-way merged top index and rank
+        // lookups must match a snapshot built directly on the union.
+        let a = snap(3, vec![10, 30, 50], vec![0.9, 0.1, 0.5], 3);
+        let b = snap(3, vec![20, 40], vec![0.9, 0.7], 3);
+        let m = RankSnapshot::merged(
+            3,
+            0,
+            7,
+            Action::ComputeExact,
+            ExecStats::default(),
+            &[&a, &b],
+            3,
+            Json::Null,
+            None,
+        );
+        let union = snap(3, vec![10, 30, 50, 20, 40], vec![0.9, 0.1, 0.5, 0.9, 0.7], 3);
+        assert_eq!(m.top_k_cap(), 3);
+        for k in 0..=5 {
+            assert_eq!(m.top_ids(k), union.top_ids(k), "k={k}");
+        }
+        // Tie at 0.9 broken by ascending id: 10 before 20.
+        assert_eq!(m.top_ids(2), vec![10, 20]);
+        for id in [10u64, 20, 30, 40, 50] {
+            assert_eq!(m.rank_of(id), union.rank_of(id));
+        }
+        assert_eq!(m.rank_of(11), None);
+        assert_eq!(m.num_vertices(), 5);
     }
 
     #[test]

@@ -1,0 +1,785 @@
+//! Sharded multi-engine scale-out: one in-process cluster of worker
+//! shards behind the same serving surface as a single [`Engine`].
+//!
+//! ```text
+//!             writes (EdgeOp)                reads (top / rank / stats)
+//!                   │                                   │
+//!            ┌──────▼──────┐            ┌───────────────▼─────────────┐
+//!            │ Partitioner │            │ combined RankSnapshot (Arc) │
+//!            │  (by src)   │            │   k-way merged top-K index  │
+//!            └──┬───┬───┬──┘            └───────────────▲─────────────┘
+//!               │   │   │                               │
+//!          ┌────▼┐ ┌▼──┐ ┌▼───┐   boundary-rank   ┌─────┴─────┐
+//!          │shard│ │...│ │shrd│ ◄── exchange ────► │ publish_all│
+//!          │  0  │ │   │ │ N-1│   per iteration    └───────────┘
+//!          └─────┘ └───┘ └────┘
+//! ```
+//!
+//! Each shard owns a full write stack: its own [`DynamicGraph`]
+//! slice of the vertex space (source-routed hash partition,
+//! [`Partitioner`]), its own coalescing [`UpdateBuffer`], its own rank
+//! vector, its own [`SnapshotPublisher`] and (optionally) its own worker
+//! pool. Writes route by owner and coalesce per shard; PageRank runs as
+//! the cross-shard boundary-rank exchange
+//! ([`crate::pagerank::sharded::run_exchange`]), which converges to the
+//! same fixed point as the single engine (same teleport / dangling /
+//! `scaled_epsilon(n_total)` semantics — only floating-point summation
+//! order differs, hence the documented `L1 < 1e-6` equivalence
+//! tolerance). Reads never fan out at request time: every publish
+//! freezes per-shard owned-only snapshots *and* one combined snapshot
+//! whose global top-K is a k-way merge of the per-shard top-K indexes
+//! ([`RankSnapshot::merged`]), so `top`/`rank`/`stats` stay O(k) /
+//! O(log n) off-queue lookups.
+//!
+//! The server-facing surface deliberately mirrors [`Engine`]:
+//! `ingest` / `ingest_batch` / `query` / `query_async` /
+//! `finish_recompute` / `reader`, so
+//! [`crate::coordinator::server::ServerHandle`] drives either engine
+//! behind the unchanged wire protocol. Durable serving (WAL +
+//! checkpoints) is single-engine-only for now — a crash-consistent cut
+//! across shards needs coordinated checkpointing (see ROADMAP).
+//!
+//! [`Engine`]: crate::coordinator::engine::Engine
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::engine::{AsyncQueryResult, QueryResult, ScheduleMode};
+use crate::coordinator::policies::StalenessPolicy;
+use crate::coordinator::serving::{
+    RankSnapshot, SnapshotPublisher, SnapshotReader, DEFAULT_PUBLISHED_TOP_K,
+};
+use crate::coordinator::udf::{Action, ExecStats};
+use crate::error::{Error, Result};
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::partition::Partitioner;
+use crate::graph::{VertexId, VertexIdx};
+use crate::metrics::registry::MetricsRegistry;
+use crate::pagerank::power::PageRankConfig;
+use crate::pagerank::sharded::{run_exchange, ExchangeResult, ShardPlan};
+use crate::stream::buffer::UpdateBuffer;
+use crate::stream::event::EdgeOp;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timer::Stopwatch;
+
+/// One worker shard: a full write stack over its slice of the vertex
+/// space. The graph holds every edge whose *source* this shard owns
+/// (destinations may be ghosts); `ranks` is dense in the shard-local
+/// index order, ghost slots carrying whatever the exchange last wrote
+/// (they are never published — `publish_all` projects owned vertices
+/// only).
+struct Shard {
+    graph: DynamicGraph,
+    buffer: UpdateBuffer,
+    ranks: Vec<f64>,
+    publisher: SnapshotPublisher,
+    pool: Option<Arc<ThreadPool>>,
+    /// Graph version as of this shard's latest published snapshot —
+    /// the republish trigger for topology-only changes.
+    published_graph_version: u64,
+}
+
+/// Per-shard worker pool matching the config's `parallelism` knob
+/// (the per-engine `pool_for` rule of `engine.rs`, applied
+/// shard-locally: the default serial config spawns no threads at all).
+fn pool_for_shard(pr: &PageRankConfig) -> Option<Arc<ThreadPool>> {
+    match pr.parallelism {
+        1 => None,
+        0 => Some(Arc::new(ThreadPool::with_default_size())),
+        k => Some(Arc::new(ThreadPool::new(k))),
+    }
+}
+
+impl Shard {
+    fn new(pr: &PageRankConfig) -> Self {
+        Self {
+            graph: DynamicGraph::new(),
+            buffer: UpdateBuffer::new(),
+            ranks: Vec::new(),
+            publisher: SnapshotPublisher::new(),
+            pool: pool_for_shard(pr),
+            published_graph_version: 0,
+        }
+    }
+
+    /// Drain + coalesce this shard's buffer and apply the effective ops.
+    /// Returns the number of effective ops applied.
+    fn apply_now(&mut self, pr: &PageRankConfig) -> usize {
+        if self.buffer.is_empty() {
+            return 0;
+        }
+        let batch = self.buffer.take_batch(&self.graph);
+        if batch.is_empty() {
+            return 0;
+        }
+        let shards = match self.pool.as_deref() {
+            Some(pool) => pr.effective_shards(pool),
+            None => 1,
+        };
+        self.graph.apply_batch(batch.ops(), self.pool.as_deref(), shards).applied
+    }
+}
+
+/// Builder for [`ShardedEngine`].
+pub struct ShardedEngineBuilder {
+    shards: usize,
+    pr_config: PageRankConfig,
+    published_top_k: usize,
+}
+
+impl ShardedEngineBuilder {
+    /// A cluster of `shards` workers (clamped to ≥ 1) with the default
+    /// PageRank configuration.
+    pub fn new(shards: usize) -> Self {
+        Self {
+            shards: shards.max(1),
+            pr_config: PageRankConfig::default(),
+            published_top_k: DEFAULT_PUBLISHED_TOP_K,
+        }
+    }
+
+    /// Set the PageRank configuration (shared by every shard; its
+    /// `parallelism` knob sizes each shard's *own* pool).
+    pub fn pagerank(mut self, c: PageRankConfig) -> Self {
+        self.pr_config = c;
+        self
+    }
+
+    /// Top-K entries pre-ranked per published snapshot — per shard *and*
+    /// for the combined merge (the merge is valid to exactly this cap).
+    pub fn published_top_k(mut self, k: usize) -> Self {
+        self.published_top_k = k;
+        self
+    }
+
+    /// Build the cluster over an initial edge list and run the initial
+    /// complete exchange (the paper's setup — "each execution will begin
+    /// with a complete PageRank execution" — per shard).
+    pub fn build_from_edges(
+        self,
+        edges: impl IntoIterator<Item = (VertexId, VertexId)>,
+    ) -> Result<ShardedEngine> {
+        let parts = Partitioner::new(self.shards);
+        let shards: Vec<Shard> = (0..parts.shards()).map(|_| Shard::new(&self.pr_config)).collect();
+        let mut engine = ShardedEngine {
+            parts,
+            shards,
+            pr_config: self.pr_config,
+            published_top_k: self.published_top_k,
+            combined: SnapshotPublisher::new(),
+            metrics: MetricsRegistry::new(),
+            query_count: 0,
+            queries_since_publish: 0,
+            updates_since_refresh: 0,
+            last_publish: Instant::now(),
+            last_cut_edges: 0,
+            stopped: false,
+        };
+        engine.metrics.set("shards", engine.parts.shards() as f64);
+        engine.ingest_batch(edges.into_iter().map(|(s, d)| EdgeOp::AddEdge(s, d)));
+        engine.apply_pending();
+        engine.updates_since_refresh = 0;
+        engine.extend_ranks();
+        let sw = Stopwatch::start();
+        let (ex, cut_edges) = engine.run_exchange_now();
+        let secs = sw.secs();
+        engine.metrics.time("initial_exact_secs", secs);
+        engine.install_exchange(0, ex, cut_edges, secs);
+        Ok(engine)
+    }
+}
+
+/// A version-fenced cross-shard recompute: per-shard graph clones plus
+/// warm rank vectors, captured at scheduling time so the exchange runs
+/// on a worker thread while the cluster keeps absorbing writes and
+/// serving reads — the sharded twin of
+/// [`crate::coordinator::engine::RecomputeJob`]. The exchange itself
+/// runs serially across shards inside the job (per-shard pools speed up
+/// the *apply* path instead); shard-level compute parallelism inside one
+/// job is future work.
+pub struct ShardedRecomputeJob {
+    decision: Action,
+    query_id: u64,
+    graph_versions: Vec<u64>,
+    accounted_updates: u64,
+    graphs: Vec<DynamicGraph>,
+    warm: Vec<Vec<f64>>,
+    parts: Partitioner,
+    pr_config: PageRankConfig,
+}
+
+/// One shard's recomputed ranking, keyed by external id so a fence miss
+/// can merge by id into the moved graph.
+struct ShardRanks {
+    ids: Vec<VertexId>,
+    ranks: Vec<f64>,
+}
+
+/// The outcome of a [`ShardedRecomputeJob`], handed back to the engine
+/// thread via [`ShardedEngine::finish_recompute`].
+pub struct ShardedRecomputeResult {
+    query_id: u64,
+    graph_versions: Vec<u64>,
+    accounted_updates: u64,
+    per_shard: Vec<ShardRanks>,
+    iterations: usize,
+    cut_edges: usize,
+    elapsed_secs: f64,
+}
+
+impl ShardedRecomputeJob {
+    /// The accuracy tier the policy asked for. The exchange always runs
+    /// the full cross-shard power method (there is no summarized sharded
+    /// path yet), so both escalations produce an exact refresh.
+    pub fn decision(&self) -> Action {
+        self.decision
+    }
+
+    /// Measurement point that scheduled this job.
+    pub fn query_id(&self) -> u64 {
+        self.query_id
+    }
+
+    /// Run the boundary-rank exchange over the fenced per-shard graphs.
+    /// Pure compute — safe on any thread.
+    pub fn run(self) -> ShardedRecomputeResult {
+        let sw = Stopwatch::start();
+        let refs: Vec<&DynamicGraph> = self.graphs.iter().collect();
+        let plan = ShardPlan::build(&refs, &self.parts);
+        let cut_edges = plan.cut_edges();
+        let ExchangeResult { ranks, iterations, .. } =
+            run_exchange(&plan, &self.pr_config, Some(self.warm));
+        let per_shard = self
+            .graphs
+            .iter()
+            .zip(ranks)
+            .map(|(g, ranks)| ShardRanks { ids: g.ids().to_vec(), ranks })
+            .collect();
+        ShardedRecomputeResult {
+            query_id: self.query_id,
+            graph_versions: self.graph_versions,
+            accounted_updates: self.accounted_updates,
+            per_shard,
+            iterations,
+            cut_edges,
+            elapsed_secs: sw.secs(),
+        }
+    }
+}
+
+impl ShardedRecomputeResult {
+    /// An exchange always refreshes every owned vertex (mirror of
+    /// [`crate::coordinator::engine::RecomputeResult::refreshed`], which
+    /// can be false for empty-summary approximate jobs).
+    pub fn refreshed(&self) -> bool {
+        true
+    }
+
+    /// `updates_since_refresh` this job accounted for at its fence.
+    pub fn accounted_updates(&self) -> u64 {
+        self.accounted_updates
+    }
+}
+
+/// An in-process sharded cluster behind the single-engine serving
+/// surface. See the module docs for the architecture; see
+/// [`crate::coordinator::server::ServerHandle::spawn_sharded`] for the
+/// threaded wire-protocol wrapper.
+pub struct ShardedEngine {
+    parts: Partitioner,
+    shards: Vec<Shard>,
+    pr_config: PageRankConfig,
+    published_top_k: usize,
+    /// The merged union snapshot readers answer from.
+    combined: SnapshotPublisher,
+    metrics: MetricsRegistry,
+    query_count: u64,
+    queries_since_publish: u64,
+    /// Effective ops applied across all shards since the last exchange
+    /// was fenced — the staleness policies' accumulated-error proxy.
+    updates_since_refresh: u64,
+    last_publish: Instant,
+    /// Cut edges of the most recent exchange (the boundary-exchange
+    /// volume gauge).
+    last_cut_edges: usize,
+    stopped: bool,
+}
+
+impl ShardedEngine {
+    // ---- write path ----------------------------------------------------
+
+    /// Ingest one graph operation, routed to the shard(s) it concerns.
+    pub fn ingest(&mut self, op: EdgeOp) {
+        let parts = self.parts;
+        parts.for_each_route(op, |s, op| self.shards[s].buffer.register(op));
+        self.metrics.inc("ops_ingested", 1);
+        self.refresh_ingest_gauges();
+    }
+
+    /// Ingest a batch: route every op, then one metrics update. Per-shard
+    /// order preserves the caller's order, so each shard's coalescer
+    /// replays exactly the subsequence that concerns it.
+    pub fn ingest_batch(&mut self, ops: impl IntoIterator<Item = EdgeOp>) {
+        let parts = self.parts;
+        let mut n = 0u64;
+        for op in ops {
+            n += 1;
+            parts.for_each_route(op, |s, op| self.shards[s].buffer.register(op));
+        }
+        self.metrics.inc("ops_ingested", n);
+        self.metrics.inc("batches_ingested", 1);
+        self.refresh_ingest_gauges();
+    }
+
+    /// Drain + apply every shard's pending buffer. Shards apply
+    /// independently (scoped threads when more than one shard has work —
+    /// the scale-out of the write path), and the per-shard effective-op
+    /// counts sum into the cluster staleness signal.
+    fn apply_pending(&mut self) {
+        let with_work = self.shards.iter().filter(|s| !s.buffer.is_empty()).count();
+        if with_work == 0 {
+            return;
+        }
+        let sw = Stopwatch::start();
+        let pr = self.pr_config;
+        let applied: u64 = if with_work == 1 {
+            self.shards.iter_mut().map(|sh| sh.apply_now(&pr) as u64).sum()
+        } else {
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter_mut()
+                    .map(|sh| sc.spawn(move || sh.apply_now(&pr)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard apply panicked") as u64).sum()
+            })
+        };
+        self.metrics.time("ingest_apply_secs", sw.secs());
+        self.metrics.inc("applies", 1);
+        self.updates_since_refresh += applied;
+        self.refresh_ingest_gauges();
+    }
+
+    /// Mirror the summed per-shard coalescing counters into the combined
+    /// publisher's live gauges (the wire `stats.ingest` section).
+    fn refresh_ingest_gauges(&self) {
+        use std::sync::atomic::Ordering;
+        let (mut raw, mut eff, mut pending) = (0u64, 0u64, 0u64);
+        for sh in &self.shards {
+            let (r, e) = sh.buffer.coalesce_totals();
+            raw += r as u64;
+            eff += e as u64;
+            pending += sh.buffer.pending_effective_estimate() as u64;
+        }
+        let g = self.combined.ingest_gauges();
+        g.coalesced_raw_ops.store(raw, Ordering::Relaxed);
+        g.coalesced_effective_ops.store(eff, Ordering::Relaxed);
+        g.pending_effective_estimate.store(pending, Ordering::Relaxed);
+    }
+
+    /// Extend every shard's rank vector for vertices that appeared since
+    /// the last exchange (new and ghost slots get the uniform init).
+    fn extend_ranks(&mut self) {
+        let n: usize = self.shards.iter().map(|s| s.graph.num_vertices()).sum();
+        let init = self.pr_config.init_rank(n.max(1));
+        for sh in &mut self.shards {
+            let l = sh.graph.num_vertices();
+            if sh.ranks.len() < l {
+                sh.ranks.resize(l, init);
+            }
+        }
+    }
+
+    // ---- compute -------------------------------------------------------
+
+    /// Freeze the exchange topology from the live shard graphs and run
+    /// the boundary exchange inline, warm-started from the current
+    /// per-shard rank vectors. Returns the result plus the cut-edge
+    /// count of the frozen plan.
+    fn run_exchange_now(&self) -> (ExchangeResult, usize) {
+        let refs: Vec<&DynamicGraph> = self.shards.iter().map(|s| &s.graph).collect();
+        let plan = ShardPlan::build(&refs, &self.parts);
+        let cut = plan.cut_edges();
+        let warm: Vec<Vec<f64>> = self.shards.iter().map(|s| s.ranks.clone()).collect();
+        (run_exchange(&plan, &self.pr_config, Some(warm)), cut)
+    }
+
+    /// Install exchange output as the live per-shard rankings and publish
+    /// (fresh: staleness anchors reset).
+    fn install_exchange(&mut self, query_id: u64, ex: ExchangeResult, cut: usize, secs: f64) {
+        for (sh, r) in self.shards.iter_mut().zip(ex.ranks) {
+            sh.ranks = r;
+        }
+        self.note_exchange(ex.iterations, cut);
+        let exec =
+            ExecStats { iterations: ex.iterations, elapsed_secs: secs, ..ExecStats::default() };
+        self.metrics.inc("action_exact", 1);
+        self.publish_all(query_id, Action::ComputeExact, exec, true);
+    }
+
+    fn note_exchange(&mut self, iterations: usize, cut_edges: usize) {
+        self.last_cut_edges = cut_edges;
+        self.metrics.set("exchange_iterations", iterations as f64);
+        self.metrics.set("cut_edges", cut_edges as f64);
+    }
+
+    // ---- query path ----------------------------------------------------
+
+    /// Apply pending routed updates on every shard now, without serving
+    /// a query — the server flushes before deciding whether an in-flight
+    /// recompute is stale enough to supersede.
+    pub fn flush_pending(&mut self) {
+        self.apply_pending();
+        self.extend_ranks();
+    }
+
+    /// Serve one query synchronously: absorb pending writes, run the
+    /// exchange inline, publish, answer. The blocking twin of
+    /// [`Self::query_async`] (used by tests and batch replays; the server
+    /// rides the async path).
+    pub fn query(&mut self) -> Result<QueryResult> {
+        if self.stopped {
+            return Err(Error::Engine("sharded engine is stopped".into()));
+        }
+        self.query_count += 1;
+        let query_id = self.query_count;
+        self.apply_pending();
+        self.extend_ranks();
+        let sw = Stopwatch::start();
+        let (ex, cut) = self.run_exchange_now();
+        let secs = sw.secs();
+        self.updates_since_refresh = 0;
+        self.metrics.inc("queries", 1);
+        let exec =
+            ExecStats { iterations: ex.iterations, elapsed_secs: secs, ..ExecStats::default() };
+        self.install_exchange(query_id, ex, cut, secs);
+        let snapshot = self.combined.latest();
+        Ok(QueryResult { query_id, action: Action::ComputeExact, exec, snapshot })
+    }
+
+    /// The asynchronous serving path, mirroring
+    /// [`Engine::query_async`]: absorb pending writes, answer from the
+    /// (republished) combined snapshot immediately, and — when the
+    /// staleness policy escalates and `mode` allows — hand back a
+    /// version-fenced [`ShardedRecomputeJob`] for a worker thread.
+    ///
+    /// [`Engine::query_async`]: crate::coordinator::engine::Engine::query_async
+    pub fn query_async(
+        &mut self,
+        policy: &StalenessPolicy,
+        pressure: f64,
+        mode: ScheduleMode,
+    ) -> Result<(AsyncQueryResult, Option<ShardedRecomputeJob>)> {
+        if self.stopped {
+            return Err(Error::Engine("sharded engine is stopped".into()));
+        }
+        self.query_count += 1;
+        let query_id = self.query_count;
+        self.apply_pending();
+        self.extend_ranks();
+        let age_secs = self.last_publish.elapsed().as_secs_f64();
+        self.metrics.set("snapshot_age_secs", age_secs);
+        self.metrics.set("snapshot_age_queries", self.queries_since_publish as f64);
+        let decision = policy.decide_under_pressure(
+            self.updates_since_refresh,
+            self.queries_since_publish,
+            age_secs,
+            pressure,
+        );
+        self.metrics.inc("queries", 1);
+        self.metrics.inc("async_queries", 1);
+        self.metrics.inc(
+            match decision {
+                Action::RepeatLast => "decision_repeat-last",
+                Action::ComputeApproximate => "decision_approximate",
+                Action::ComputeExact => "decision_exact",
+            },
+            1,
+        );
+        self.queries_since_publish += 1;
+        let may_schedule = match mode {
+            ScheduleMode::Never => false,
+            ScheduleMode::WhenDue => decision != Action::RepeatLast,
+            ScheduleMode::ExactOnly => decision == Action::ComputeExact,
+        };
+        let job = if may_schedule { Some(self.begin_recompute(decision, query_id)) } else { None };
+        // Readers must see absorbed topology even though the ranking is
+        // unchanged — republish carrying the age anchor forward.
+        if self.shards.iter().any(|s| s.graph.version() != s.published_graph_version) {
+            self.publish_all(query_id, Action::RepeatLast, ExecStats::default(), false);
+        }
+        let snapshot = self.combined.latest();
+        Ok((AsyncQueryResult { query_id, decision, scheduled: job.is_some(), snapshot }, job))
+    }
+
+    /// Capture a version-fenced [`ShardedRecomputeJob`], taking ownership
+    /// of the accumulated-updates signal it accounts for.
+    fn begin_recompute(&mut self, decision: Action, query_id: u64) -> ShardedRecomputeJob {
+        let accounted_updates = self.updates_since_refresh;
+        self.updates_since_refresh = 0;
+        self.metrics.inc("recomputes_scheduled", 1);
+        ShardedRecomputeJob {
+            decision,
+            query_id,
+            graph_versions: self.shards.iter().map(|s| s.graph.version()).collect(),
+            accounted_updates,
+            graphs: self.shards.iter().map(|s| s.graph.clone()).collect(),
+            warm: self.shards.iter().map(|s| s.ranks.clone()).collect(),
+            parts: self.parts,
+            pr_config: self.pr_config,
+        }
+    }
+
+    /// Integrate an off-thread exchange back into the cluster and
+    /// publish. Returns true when the fence held on *every* shard; on a
+    /// fence miss the fenced rankings merge by vertex id into the moved
+    /// shard graphs (same semantics as [`Engine::finish_recompute`]).
+    ///
+    /// [`Engine::finish_recompute`]: crate::coordinator::engine::Engine::finish_recompute
+    pub fn finish_recompute(&mut self, res: ShardedRecomputeResult) -> bool {
+        self.metrics.inc("recomputes_offthread", 1);
+        self.metrics.time("recompute_offthread_secs", res.elapsed_secs);
+        let fence_ok = res.graph_versions.len() == self.shards.len()
+            && res.graph_versions.iter().zip(&self.shards).all(|(&v, sh)| v == sh.graph.version());
+        if fence_ok {
+            for (sh, sr) in self.shards.iter_mut().zip(res.per_shard) {
+                sh.ranks = sr.ranks;
+            }
+        } else {
+            self.metrics.inc("recompute_fence_misses", 1);
+            self.extend_ranks();
+            for (sh, sr) in self.shards.iter_mut().zip(res.per_shard) {
+                for (id, r) in sr.ids.iter().zip(&sr.ranks) {
+                    if let Some(idx) = sh.graph.index(*id) {
+                        sh.ranks[idx as usize] = *r;
+                    }
+                }
+            }
+        }
+        self.metrics.inc("action_exact", 1);
+        self.note_exchange(res.iterations, res.cut_edges);
+        let exec = ExecStats {
+            iterations: res.iterations,
+            elapsed_secs: res.elapsed_secs,
+            ..ExecStats::default()
+        };
+        self.publish_all(res.query_id, Action::ComputeExact, exec, true);
+        fence_ok
+    }
+
+    // ---- publish -------------------------------------------------------
+
+    /// The one publish path: freeze per-shard owned-only snapshots (ghost
+    /// slots never leave the shard), then the combined union snapshot via
+    /// the k-way top-K merge — all under one shared version counter.
+    /// `fresh` distinguishes a genuine exchange (staleness anchors reset)
+    /// from a topology-only republish (the age anchor carries forward,
+    /// exactly as in the single engine's `publish_snapshot`).
+    fn publish_all(&mut self, query_id: u64, action: Action, exec: ExecStats, fresh: bool) {
+        let latest = self.combined.latest();
+        let version = latest.version + 1;
+        let carry = if fresh || latest.version == 0 { None } else { Some(latest.published_at) };
+        let parts = self.parts;
+        let cap = self.published_top_k;
+        let mut shard_snaps: Vec<Arc<RankSnapshot>> = Vec::with_capacity(self.shards.len());
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            let n = sh.graph.num_vertices();
+            let mut ids = Vec::with_capacity(n);
+            let mut ranks = Vec::with_capacity(n);
+            for u in 0..n as VertexIdx {
+                let id = sh.graph.id(u);
+                if parts.shard_of(id) == i {
+                    ids.push(id);
+                    ranks.push(sh.ranks[u as usize]);
+                }
+            }
+            let mut snap = RankSnapshot::new(
+                version,
+                sh.graph.version(),
+                query_id,
+                action,
+                exec.clone(),
+                ids,
+                ranks,
+                cap,
+                Json::Null,
+            );
+            if let Some(at) = carry {
+                snap.published_at = at;
+            }
+            let snap = Arc::new(snap);
+            sh.publisher.publish(Arc::clone(&snap));
+            sh.published_graph_version = sh.graph.version();
+            shard_snaps.push(snap);
+        }
+        let refs: Vec<&RankSnapshot> = shard_snaps.iter().map(|s| s.as_ref()).collect();
+        let combined = RankSnapshot::merged(
+            version,
+            self.version_token(),
+            query_id,
+            action,
+            exec,
+            &refs,
+            cap,
+            self.metrics.to_json(),
+            carry,
+        );
+        let combined = Arc::new(combined);
+        self.last_publish = combined.published_at;
+        self.combined.publish(combined);
+        if fresh {
+            self.queries_since_publish = 0;
+        }
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    /// Number of worker shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The vertex→shard assignment.
+    pub fn partitioner(&self) -> Partitioner {
+        self.parts
+    }
+
+    /// One shard's live graph (tests; the server reads snapshots).
+    pub fn shard_graph(&self, shard: usize) -> &DynamicGraph {
+        &self.shards[shard].graph
+    }
+
+    /// Read handle over the combined union snapshot — what the server's
+    /// `top` / `rank` / `stats` ops answer from.
+    pub fn reader(&self) -> SnapshotReader {
+        self.combined.reader()
+    }
+
+    /// Per-shard read handles (owned-only snapshots) — the server's
+    /// partition-routed `rank` path and per-shard stats gauges.
+    pub fn shard_readers(&self) -> Vec<SnapshotReader> {
+        self.shards.iter().map(|s| s.publisher.reader()).collect()
+    }
+
+    /// The latest combined snapshot.
+    pub fn latest_snapshot(&self) -> Arc<RankSnapshot> {
+        self.combined.latest()
+    }
+
+    /// Cluster metrics registry.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Cut edges of the most recent exchange.
+    pub fn cut_edges(&self) -> usize {
+        self.last_cut_edges
+    }
+
+    /// A cheap monotone token over the whole cluster's topology (sum of
+    /// per-shard graph versions) — moves whenever any shard's graph
+    /// moves. The sharded analogue of `graph().version()` for the
+    /// server's supersession fence.
+    pub fn version_token(&self) -> u64 {
+        self.shards.iter().map(|s| s.graph.version()).sum()
+    }
+
+    /// Stop serving (subsequent queries error).
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pagerank::power::PageRank;
+
+    fn test_edges() -> Vec<(u64, u64)> {
+        let mut edges: Vec<(u64, u64)> = (0..30u64).map(|i| (i, (i + 1) % 30)).collect();
+        edges.extend((0..10u64).map(|i| (3 * i, (i * 7 + 3) % 30)));
+        edges
+    }
+
+    /// L1 distance between the cluster's combined snapshot and a
+    /// single-engine exact PageRank over the same edges.
+    fn l1_vs_single(engine: &ShardedEngine, single: &DynamicGraph) -> f64 {
+        let exact = PageRank::new(PageRankConfig::default()).run(&single.snapshot());
+        let snap = engine.latest_snapshot();
+        assert_eq!(snap.ids.len(), single.num_vertices(), "owned union != single vertex set");
+        let mut l1 = 0.0;
+        for (idx, &id) in single.ids().iter().enumerate() {
+            let r = snap.rank_of(id).expect("combined snapshot misses a vertex");
+            l1 += (r - exact.ranks[idx]).abs();
+        }
+        l1
+    }
+
+    #[test]
+    fn initial_build_matches_single_engine() {
+        let edges = test_edges();
+        let (single, _) = DynamicGraph::from_edges(edges.clone());
+        for shards in [1usize, 2, 4] {
+            let engine = ShardedEngineBuilder::new(shards).build_from_edges(edges.clone()).unwrap();
+            let l1 = l1_vs_single(&engine, &single);
+            assert!(l1 < 1e-6, "shards={shards}: L1={l1}");
+        }
+    }
+
+    #[test]
+    fn sync_query_tracks_mutations() {
+        let edges = test_edges();
+        let mut engine = ShardedEngineBuilder::new(3).build_from_edges(edges.clone()).unwrap();
+        let (mut single, _) = DynamicGraph::from_edges(edges);
+        for (s, d) in [(30u64, 0u64), (31, 30), (5, 31)] {
+            engine.ingest(EdgeOp::AddEdge(s, d));
+            single.add_edge(s, d).unwrap();
+        }
+        engine.ingest(EdgeOp::RemoveEdge(0, 1));
+        single.remove_edge(0, 1).unwrap();
+        let res = engine.query().unwrap();
+        assert_eq!(res.action, Action::ComputeExact);
+        let l1 = l1_vs_single(&engine, &single);
+        assert!(l1 < 1e-6, "post-mutation L1={l1}");
+    }
+
+    #[test]
+    fn async_schedule_run_finish_round_trip() {
+        let mut engine = ShardedEngineBuilder::new(2).build_from_edges(test_edges()).unwrap();
+        let policy = StalenessPolicy::default();
+        engine.ingest(EdgeOp::AddEdge(40, 0));
+        let (a, job) = engine.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        assert!(a.scheduled, "an applied update must escalate past RepeatLast");
+        // The immediate answer already sees the absorbed topology.
+        assert!(a.snapshot.rank_of(40).is_some());
+        let before = engine.latest_snapshot().version;
+        let res = job.unwrap().run();
+        assert!(engine.finish_recompute(res), "no writes moved the fence");
+        assert!(engine.latest_snapshot().version > before);
+        // Never mode records the decision but schedules nothing.
+        engine.ingest(EdgeOp::AddEdge(41, 40));
+        let (a, job) = engine.query_async(&policy, 0.0, ScheduleMode::Never).unwrap();
+        assert!(!a.scheduled && job.is_none());
+        assert_ne!(a.decision, Action::RepeatLast);
+    }
+
+    #[test]
+    fn fence_miss_merges_by_id() {
+        let mut engine = ShardedEngineBuilder::new(2).build_from_edges(test_edges()).unwrap();
+        let policy = StalenessPolicy::default();
+        engine.ingest(EdgeOp::AddEdge(50, 1));
+        let (_, job) = engine.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        let job = job.unwrap();
+        // The graph moves while the job is in flight: fence must miss,
+        // fenced ranks merge by id, new vertex keeps a rank.
+        engine.ingest(EdgeOp::AddEdge(51, 50));
+        engine.apply_pending();
+        let res = job.run();
+        assert!(!engine.finish_recompute(res));
+        assert_eq!(engine.metrics().counter("recompute_fence_misses"), 1);
+        let snap = engine.latest_snapshot();
+        assert!(snap.rank_of(50).is_some());
+        assert!(snap.rank_of(51).is_some());
+    }
+}

@@ -12,6 +12,7 @@ pub mod csr;
 pub mod dynamic;
 pub mod generate;
 pub mod io;
+pub mod partition;
 pub mod snapshot;
 pub mod traversal;
 

@@ -1,0 +1,236 @@
+//! Vertex partitioning for the sharded multi-engine path.
+//!
+//! Two partitioning schemes, matching the two families the Besta et al.
+//! streaming-graph survey catalogs:
+//!
+//! * **Hash partitioning** ([`Partitioner`]) — the scheme the live
+//!   [`crate::coordinator::sharded::ShardedEngine`] uses. Every external
+//!   vertex id maps to one owning shard through a splitmix64 bit mix, so
+//!   assignment is *total* (every id owned by exactly one shard) and
+//!   *stable under mutation* (the owner never changes as the graph
+//!   evolves — no rebalancing, no routing table).
+//! * **Contiguous row ranges** ([`split_rows`] / [`concat_rows`]) — the
+//!   range-partitioned view of a frozen CSR, used by the re-concatenation
+//!   property tests and anywhere a dense `[lo, hi)` slice of the vertex
+//!   space is the natural shard shape (it is what
+//!   [`crate::graph::csr::balanced_cuts`] produces for the parallel
+//!   executors).
+//!
+//! Edges are routed by **source** vertex (a push-style edge partition):
+//! the owner of `src` stores the edge, so every shard knows the *exact*
+//! global out-degree of each vertex it owns — the quantity PageRank
+//! divides rank mass by. The destination endpoint materializes in the
+//! source owner's graph as a *ghost* (topology bookkeeping only; ghosts
+//! never gain out-edges of their own), and a cross-shard edge
+//! additionally notifies `dst`'s owner so the union of *owned* vertex
+//! sets always equals the single-engine vertex set.
+
+use crate::graph::csr::Csr;
+use crate::graph::VertexId;
+use crate::stream::event::EdgeOp;
+
+/// Finalizer of the splitmix64 generator: a cheap, well-mixed 64-bit
+/// permutation, so consecutive vertex ids (the common case for generated
+/// datasets) spread uniformly over the shards instead of striping.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Total, mutation-stable hash assignment of external vertex ids to
+/// `shards` owners.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partitioner {
+    shards: usize,
+}
+
+impl Partitioner {
+    /// A partitioner over `shards` owners (clamped to ≥ 1).
+    pub fn new(shards: usize) -> Self {
+        Self { shards: shards.max(1) }
+    }
+
+    /// Number of shards ids are spread over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard owning `id`. Pure function of `(id, shards)`: total over
+    /// the whole id space and stable under any mutation sequence.
+    #[inline]
+    pub fn shard_of(&self, id: VertexId) -> usize {
+        (mix64(id) % self.shards as u64) as usize
+    }
+
+    /// Route one op to the per-shard op lists it must reach, preserving
+    /// the caller's op order within every shard:
+    ///
+    /// * `AddEdge(s, d)` / `RemoveEdge(s, d)` → the owner of `s` (the
+    ///   edge lives with its source; `d` becomes a ghost there). A
+    ///   cross-shard `AddEdge` also sends `AddVertex(d)` to `d`'s owner,
+    ///   so the owned-vertex union matches the single-engine vertex set.
+    /// * `AddVertex(v)` → the owner of `v`.
+    /// * `RemoveVertex(v)` → **every** shard: the owner drops the vertex,
+    ///   the rest drop their ghost copies and incident edges (shards
+    ///   where `v` never appeared skip it as the usual no-op).
+    pub fn for_each_route(&self, op: EdgeOp, mut deliver: impl FnMut(usize, EdgeOp)) {
+        match op {
+            EdgeOp::AddEdge(s, d) => {
+                let owner = self.shard_of(s);
+                deliver(owner, op);
+                let dst_owner = self.shard_of(d);
+                if dst_owner != owner {
+                    deliver(dst_owner, EdgeOp::AddVertex(d));
+                }
+            }
+            EdgeOp::RemoveEdge(s, _) => deliver(self.shard_of(s), op),
+            EdgeOp::AddVertex(v) => deliver(self.shard_of(v), op),
+            EdgeOp::RemoveVertex(_) => {
+                for shard in 0..self.shards {
+                    deliver(shard, op);
+                }
+            }
+        }
+    }
+
+    /// [`Self::for_each_route`] appending into per-shard op lists.
+    pub fn route_into(&self, op: EdgeOp, out: &mut [Vec<EdgeOp>]) {
+        debug_assert_eq!(out.len(), self.shards);
+        self.for_each_route(op, |shard, op| out[shard].push(op));
+    }
+
+    /// Route a batch: one op list per shard, per-shard order preserving
+    /// the input order (so each shard's coalescer replays exactly the
+    /// subsequence that concerns it).
+    pub fn route(&self, ops: &[EdgeOp]) -> Vec<Vec<EdgeOp>> {
+        let mut out = vec![Vec::new(); self.shards];
+        for &op in ops {
+            self.route_into(op, &mut out);
+        }
+        out
+    }
+}
+
+/// Slice a CSR into contiguous row-range shards at `cuts` (as produced
+/// by [`Csr::shards`] / [`crate::graph::csr::balanced_cuts`]:
+/// `cuts[0] = 0`, `cuts[k] = |V|`). Each part keeps its rows' in-edge
+/// lists verbatim — targets stay *global* source indices, exactly as the
+/// parallel executors see their shard of the gather — with offsets
+/// rebased to the part and the out-degree array sliced to its rows.
+pub fn split_rows(csr: &Csr, cuts: &[usize]) -> Vec<Csr> {
+    assert!(cuts.len() >= 2, "cuts must hold at least [0, |V|]");
+    assert_eq!(cuts[0], 0);
+    assert_eq!(*cuts.last().unwrap(), csr.num_vertices());
+    let mut parts = Vec::with_capacity(cuts.len() - 1);
+    for w in cuts.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let mut offsets = Vec::with_capacity(hi - lo + 1);
+        let mut targets = Vec::new();
+        let mut out_degree = Vec::with_capacity(hi - lo);
+        offsets.push(0u64);
+        for v in lo..hi {
+            targets.extend_from_slice(csr.row(v as u32));
+            offsets.push(targets.len() as u64);
+            out_degree.push(csr.out_degree(v as u32));
+        }
+        parts.push(Csr::from_parts(offsets, targets, out_degree));
+    }
+    parts
+}
+
+/// Reassemble row-range shards (in order) into one CSR. Inverse of
+/// [`split_rows`]: `concat_rows(&split_rows(csr, cuts))` reproduces
+/// `csr` exactly, for any valid cut vector.
+pub fn concat_rows(parts: &[Csr]) -> Csr {
+    let n: usize = parts.iter().map(|p| p.num_vertices()).sum();
+    let m: usize = parts.iter().map(|p| p.num_edges()).sum();
+    let mut offsets = Vec::with_capacity(n + 1);
+    let mut targets = Vec::with_capacity(m);
+    let mut out_degree = Vec::with_capacity(n);
+    offsets.push(0u64);
+    for p in parts {
+        for v in 0..p.num_vertices() as u32 {
+            targets.extend_from_slice(p.row(v));
+            offsets.push(targets.len() as u64);
+            out_degree.push(p.out_degree(v));
+        }
+    }
+    Csr::from_parts(offsets, targets, out_degree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_total_and_in_range() {
+        for shards in 1..6 {
+            let p = Partitioner::new(shards);
+            for id in 0..500u64 {
+                assert!(p.shard_of(id) < shards);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let p = Partitioner::new(1);
+        for id in [0u64, 1, 17, u64::MAX] {
+            assert_eq!(p.shard_of(id), 0);
+        }
+    }
+
+    #[test]
+    fn hash_spreads_consecutive_ids() {
+        let p = Partitioner::new(4);
+        let mut counts = [0usize; 4];
+        for id in 0..4000u64 {
+            counts[p.shard_of(id)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..=1300).contains(&c), "skewed shard: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn routing_rules() {
+        let p = Partitioner::new(3);
+        // A cross-shard edge lands with the source owner plus an
+        // AddVertex with the destination owner; a same-shard edge emits
+        // exactly one op.
+        let (s, d) = (0u64, 1u64);
+        let routed = p.route(&[EdgeOp::AddEdge(s, d)]);
+        let total: usize = routed.iter().map(Vec::len).sum();
+        if p.shard_of(s) == p.shard_of(d) {
+            assert_eq!(total, 1);
+        } else {
+            assert_eq!(total, 2);
+            assert_eq!(routed[p.shard_of(s)], vec![EdgeOp::AddEdge(s, d)]);
+            assert_eq!(routed[p.shard_of(d)], vec![EdgeOp::AddVertex(d)]);
+        }
+        // RemoveVertex broadcasts to every shard.
+        let routed = p.route(&[EdgeOp::RemoveVertex(7)]);
+        for ops in &routed {
+            assert_eq!(ops, &vec![EdgeOp::RemoveVertex(7)]);
+        }
+        // RemoveEdge follows the source only.
+        let routed = p.route(&[EdgeOp::RemoveEdge(s, d)]);
+        assert_eq!(routed[p.shard_of(s)], vec![EdgeOp::RemoveEdge(s, d)]);
+        let total: usize = routed.iter().map(Vec::len).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn split_then_concat_roundtrips() {
+        let edges: Vec<(u32, u32)> = vec![(0, 1), (1, 2), (2, 0), (3, 1), (0, 3), (4, 4)];
+        let csr = Csr::from_edges(5, &edges);
+        for k in [1usize, 2, 3, 5] {
+            let cuts = csr.shards(k);
+            let parts = split_rows(&csr, &cuts);
+            assert_eq!(concat_rows(&parts), csr, "k={k}");
+        }
+    }
+}

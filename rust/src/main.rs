@@ -11,6 +11,7 @@ use veilgraph::coordinator::checkpoint::DurabilityConfig;
 use veilgraph::coordinator::engine::EngineBuilder;
 use veilgraph::coordinator::policies::StalenessPolicy;
 use veilgraph::coordinator::server::{serve_tcp_with, ServeOptions, ServerHandle};
+use veilgraph::coordinator::sharded::ShardedEngineBuilder;
 use veilgraph::coordinator::wal::SyncPolicy;
 use veilgraph::error::{Error, Result};
 use veilgraph::experiments::datasets::{all_datasets, dataset_by_name, table1};
@@ -97,6 +98,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             None,
         )
         .opt("parallelism", "PageRank shards (1 = serial, 0 = one per core)", Some("1"))
+        .opt(
+            "shards",
+            "partition the graph across N engines with cross-shard PageRank \
+             exchange (1 = single engine; >1 disables --data-dir/--communities)",
+            Some("1"),
+        )
         .opt("workers", "poll workers ticking the connections", Some("4"))
         .opt("max-conns", "simultaneous TCP client connections", Some("4096"))
         .opt("rate-limit", "per-connection read ops/sec (0 = unlimited)", Some("0"))
@@ -128,6 +135,46 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let edges = initial_edges(&p)?;
+    let mut opts = ServeOptions::new()
+        .queue_capacity(p.req_parse::<usize>("queue")?)
+        .overflow(p.req_parse::<OverflowPolicy>("overflow")?)
+        .workers(p.req_parse::<usize>("workers")?)
+        .max_connections(p.req_parse::<usize>("max-conns")?)
+        .rate_limit(p.req_parse::<f64>("rate-limit")?)
+        .window_secs(p.req_parse::<f64>("window")?)
+        .communities(p.flag("communities"));
+    if let Some(policy) = p.get_parse::<StalenessPolicy>("policy")? {
+        opts = opts.policy(policy);
+    }
+    let shards = p.req_parse::<usize>("shards")?;
+    if shards > 1 {
+        if p.get("data-dir").is_some() {
+            return Err(Error::Usage(
+                "--data-dir is single-engine only; drop it or use --shards 1".into(),
+            ));
+        }
+        if p.flag("communities") {
+            return Err(Error::Usage(
+                "--communities is single-engine only; drop it or use --shards 1".into(),
+            ));
+        }
+        let pr = PageRankConfig {
+            parallelism: p.req_parse::<usize>("parallelism")?,
+            ..PageRankConfig::default()
+        };
+        let engine = ShardedEngineBuilder::new(shards)
+            .pagerank(pr)
+            .published_top_k(p.req_parse::<usize>("top-k")?)
+            .build_from_edges(edges)?;
+        println!(
+            "sharded engine ready: {} shards, |V|={}, cut edges={}",
+            engine.shard_count(),
+            engine.latest_snapshot().num_vertices(),
+            engine.cut_edges()
+        );
+        let handle = ServerHandle::spawn_sharded(engine, &opts);
+        return serve_tcp_with(handle, p.get("addr").unwrap(), opts);
+    }
     let mut builder = EngineBuilder::new()
         .params(params_from(&p)?)
         .parallelism(p.req_parse::<usize>("parallelism")?)
@@ -175,17 +222,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         engine.graph().num_edges(),
         engine.has_xla()
     );
-    let mut opts = ServeOptions::new()
-        .queue_capacity(p.req_parse::<usize>("queue")?)
-        .overflow(p.req_parse::<OverflowPolicy>("overflow")?)
-        .workers(p.req_parse::<usize>("workers")?)
-        .max_connections(p.req_parse::<usize>("max-conns")?)
-        .rate_limit(p.req_parse::<f64>("rate-limit")?)
-        .window_secs(p.req_parse::<f64>("window")?)
-        .communities(p.flag("communities"));
-    if let Some(policy) = p.get_parse::<StalenessPolicy>("policy")? {
-        opts = opts.policy(policy);
-    }
     let handle = ServerHandle::spawn_with(engine, &opts);
     serve_tcp_with(handle, p.get("addr").unwrap(), opts)
 }

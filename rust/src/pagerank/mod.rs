@@ -3,4 +3,5 @@
 //! [`crate::runtime`]).
 
 pub mod power;
+pub mod sharded;
 pub mod summarized;

@@ -1,0 +1,296 @@
+//! Cross-shard PageRank with a boundary-rank exchange step per
+//! iteration.
+//!
+//! Each shard owns the out-edges of its vertices (source-routed
+//! partition, [`crate::graph::partition::Partitioner`]). One global
+//! power-method iteration becomes, per shard:
+//!
+//! 1. **Scatter** — scale every owned source once: `c_u = r_u /
+//!    d_out(u)`. `d_out` is exact because all of `u`'s out-edges live on
+//!    its owner.
+//! 2. **Local gather** — accumulate `c_u` over internal edges (both
+//!    endpoints owned here).
+//! 3. **Boundary exchange** — accumulate `c_u` over cut edges into the
+//!    destination shard's [`RemoteAggregate`] inbox (the remote shard is
+//!    "just another big vertex": per-target rolled-up boundary mass,
+//!    exactly the `b_z` shape of `summary/bigvertex.rs`, except
+//!    re-exchanged every iteration instead of frozen once).
+//! 4. **Apply** — `next_v = teleport + β·(local_v + inbox_v) [+
+//!    dangling]` for owned `v`; per-shard L1 deltas reduce in shard
+//!    order into the global convergence test.
+//!
+//! Every owned vertex receives exactly the contributions the
+//! single-engine gather sums for it, under the same teleport, init,
+//! dangling and `scaled_epsilon(n_total)` semantics
+//! ([`crate::pagerank::power`]) — so the exchange converges to the same
+//! fixed point. Floating-point summation *order* differs (a vertex's
+//! in-mass splits into local + per-shard inbox partial sums), which is
+//! why sharded-vs-single equivalence is stated as a tolerance
+//! (`L1 < 1e-6` in the property tests), not bit-identity.
+
+use crate::graph::dynamic::DynamicGraph;
+use crate::graph::partition::Partitioner;
+use crate::graph::VertexIdx;
+use crate::pagerank::power::PageRankConfig;
+use crate::summary::bigvertex::RemoteAggregate;
+
+/// The frozen exchange topology for one recompute: per-shard internal
+/// edge lists plus cut-edge lists pre-resolved to *destination-local*
+/// indices, so the iteration loop never touches an id map.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Per shard: local indices of the vertices it owns (ghosts skipped).
+    owned: Vec<Vec<VertexIdx>>,
+    /// Per shard: `1/d_out` per local index (0 for dangling and ghosts).
+    inv_out: Vec<Vec<f64>>,
+    /// Per shard: internal edges `(src_local, dst_local)`.
+    internal: Vec<Vec<(VertexIdx, VertexIdx)>>,
+    /// `cross[s][t]`: cut edges from shard `s` into shard `t`, as
+    /// `(src_local_in_s, dst_local_in_t)`.
+    cross: Vec<Vec<Vec<(VertexIdx, VertexIdx)>>>,
+    /// Per shard: local vector length (`graph.num_vertices()`, ghosts
+    /// included).
+    len: Vec<usize>,
+    /// Union of owned vertices — the single-engine `|V|`.
+    n_total: usize,
+    /// Total cut edges (boundary edges between shards).
+    cut_edges: usize,
+}
+
+impl ShardPlan {
+    /// Freeze the exchange topology from per-shard graphs. Ownership is
+    /// re-derived from the partitioner (ghosts are skipped), and each cut
+    /// edge resolves its destination in the owner's graph — an invariant
+    /// of source-routing (`AddEdge` notifies the destination owner), so
+    /// an unresolvable destination is a routing bug and panics in debug.
+    pub fn build(graphs: &[&DynamicGraph], parts: &Partitioner) -> Self {
+        let k = graphs.len();
+        assert_eq!(k, parts.shards(), "one graph per shard");
+        let mut owned = vec![Vec::new(); k];
+        let mut inv_out = Vec::with_capacity(k);
+        let mut internal = vec![Vec::new(); k];
+        let mut cross = vec![vec![Vec::new(); k]; k];
+        let mut len = Vec::with_capacity(k);
+        let mut n_total = 0usize;
+        let mut cut_edges = 0usize;
+        for (s, g) in graphs.iter().enumerate() {
+            let n = g.num_vertices();
+            len.push(n);
+            let mut inv = vec![0.0f64; n];
+            for u in 0..n as VertexIdx {
+                if parts.shard_of(g.id(u)) != s {
+                    continue; // ghost: no out-edges, not owned here
+                }
+                owned[s].push(u);
+                n_total += 1;
+                let d = g.out_degree(u);
+                if d > 0 {
+                    inv[u as usize] = 1.0 / d as f64;
+                }
+                for &v in g.out_neighbors(u) {
+                    let vid = g.id(v);
+                    let t = parts.shard_of(vid);
+                    if t == s {
+                        internal[s].push((u, v));
+                    } else {
+                        let dst_local = graphs[t]
+                            .index(vid)
+                            .expect("cut-edge destination unknown to its owner shard");
+                        cross[s][t].push((u, dst_local));
+                        cut_edges += 1;
+                    }
+                }
+            }
+            inv_out.push(inv);
+        }
+        Self { owned, inv_out, internal, cross, len, n_total, cut_edges }
+    }
+
+    /// Union of owned vertices across shards (the single-engine `|V|`).
+    pub fn total_vertices(&self) -> usize {
+        self.n_total
+    }
+
+    /// Cut edges crossing shard boundaries.
+    pub fn cut_edges(&self) -> usize {
+        self.cut_edges
+    }
+
+    /// Owned-vertex count of one shard.
+    pub fn owned_in(&self, shard: usize) -> usize {
+        self.owned[shard].len()
+    }
+}
+
+/// Result of one exchange run: per-shard rank vectors in local dense
+/// order (ghost slots untouched), plus the usual power-method telemetry.
+#[derive(Clone, Debug)]
+pub struct ExchangeResult {
+    /// Rank per shard, indexed by local dense index.
+    pub ranks: Vec<Vec<f64>>,
+    /// Iterations executed (global — shards iterate in lockstep).
+    pub iterations: usize,
+    /// Global L1 delta of the final iteration.
+    pub last_delta: f64,
+}
+
+/// Run the boundary-exchange power method over a frozen [`ShardPlan`].
+///
+/// `warm` seeds per-shard rank vectors (local dense order); shards whose
+/// vector is missing or mis-sized fall back to the uniform init — the
+/// same warm-start contract as [`crate::pagerank::power::PageRank`]'s
+/// `run_from`, degraded per shard instead of panicking because shard
+/// graphs can grow independently between recomputes.
+pub fn run_exchange(
+    plan: &ShardPlan,
+    cfg: &PageRankConfig,
+    warm: Option<Vec<Vec<f64>>>,
+) -> ExchangeResult {
+    let k = plan.len.len();
+    let n = plan.n_total;
+    if n == 0 {
+        return ExchangeResult {
+            ranks: plan.len.iter().map(|&l| vec![0.0; l]).collect(),
+            iterations: 0,
+            last_delta: 0.0,
+        };
+    }
+    let teleport = cfg.teleport(n);
+    let epsilon = cfg.scaled_epsilon(n);
+    let init = cfg.init_rank(n);
+    let mut warm = warm.unwrap_or_default();
+    warm.resize(k, Vec::new());
+    let mut ranks: Vec<Vec<f64>> = warm
+        .into_iter()
+        .zip(&plan.len)
+        .map(|(w, &l)| if w.len() == l { w } else { vec![init; l] })
+        .collect();
+    let mut next: Vec<Vec<f64>> = plan.len.iter().map(|&l| vec![0.0; l]).collect();
+    let mut contrib: Vec<Vec<f64>> = plan.len.iter().map(|&l| vec![0.0; l]).collect();
+    // One inbox per destination shard, refilled every iteration — the
+    // remote-shard-as-big-vertex aggregate.
+    let mut inbox: Vec<RemoteAggregate> =
+        plan.len.iter().map(|&l| RemoteAggregate::new(l)).collect();
+    let mut iterations = 0;
+    let mut last_delta = f64::INFINITY;
+    for _ in 0..cfg.max_iters {
+        // Scatter: scale each owned source once (r_u / d_out(u)).
+        for s in 0..k {
+            let (c, r, inv) = (&mut contrib[s], &ranks[s], &plan.inv_out[s]);
+            for &u in &plan.owned[s] {
+                c[u as usize] = r[u as usize] * inv[u as usize];
+            }
+        }
+        // Dangling mass is global: owned vertices with no out-edges leak
+        // rank the redistribution hands back to every vertex.
+        let dangling_share = if cfg.dangling_redistribution {
+            let mut mass = 0.0;
+            for s in 0..k {
+                for &u in &plan.owned[s] {
+                    if plan.inv_out[s][u as usize] == 0.0 {
+                        mass += ranks[s][u as usize];
+                    }
+                }
+            }
+            cfg.beta * mass / n as f64
+        } else {
+            0.0
+        };
+        // Gather: local edges accumulate directly; cut edges go through
+        // the destination shard's inbox.
+        for (s, nx) in next.iter_mut().enumerate() {
+            nx.iter_mut().for_each(|x| *x = 0.0);
+            for &(u, v) in &plan.internal[s] {
+                nx[v as usize] += contrib[s][u as usize];
+            }
+        }
+        for s in 0..k {
+            for (t, edges) in plan.cross[s].iter().enumerate() {
+                for &(u, v) in edges {
+                    inbox[t].add(v, contrib[s][u as usize]);
+                }
+            }
+        }
+        // Apply + fold the exchanged boundary mass; per-shard L1 deltas
+        // reduce in shard order (deterministic for a fixed shard count).
+        let mut delta = 0.0;
+        for s in 0..k {
+            let (nx, r, inb) = (&mut next[s], &ranks[s], &inbox[s]);
+            for &v in &plan.owned[s] {
+                let x = teleport + cfg.beta * (nx[v as usize] + inb.b()[v as usize])
+                    + dangling_share;
+                delta += (x - r[v as usize]).abs();
+                nx[v as usize] = x;
+            }
+            inbox[s].clear();
+        }
+        iterations += 1;
+        last_delta = delta;
+        std::mem::swap(&mut ranks, &mut next);
+        if cfg.epsilon > 0.0 && last_delta < epsilon {
+            break;
+        }
+    }
+    ExchangeResult { ranks, iterations, last_delta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pagerank::power::PageRank;
+    use crate::stream::event::EdgeOp;
+
+    /// Build per-shard graphs by routing edge ops, plus the matching
+    /// single-engine graph.
+    fn build_sharded(
+        edges: &[(u64, u64)],
+        shards: usize,
+    ) -> (Vec<DynamicGraph>, DynamicGraph, Partitioner) {
+        let parts = Partitioner::new(shards);
+        let ops: Vec<EdgeOp> = edges.iter().map(|&(s, d)| EdgeOp::AddEdge(s, d)).collect();
+        let routed = parts.route(&ops);
+        let mut graphs: Vec<DynamicGraph> = (0..shards).map(|_| DynamicGraph::new()).collect();
+        for (g, ops) in graphs.iter_mut().zip(&routed) {
+            g.apply_batch(ops, None, 1);
+        }
+        let (single, _) = DynamicGraph::from_edges(edges.to_vec());
+        (graphs, single, parts)
+    }
+
+    #[test]
+    fn exchange_matches_single_engine_on_a_ring() {
+        let edges: Vec<(u64, u64)> = (0..20u64).map(|i| (i, (i + 1) % 20)).collect();
+        for shards in [1usize, 2, 4] {
+            let (graphs, single, parts) = build_sharded(&edges, shards);
+            let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+            let plan = ShardPlan::build(&refs, &parts);
+            assert_eq!(plan.total_vertices(), single.num_vertices());
+            let cfg = PageRankConfig::default();
+            let ex = run_exchange(&plan, &cfg, None);
+            let exact = PageRank::new(cfg).run(&single.snapshot());
+            let mut l1 = 0.0;
+            for (s, g) in graphs.iter().enumerate() {
+                for u in 0..g.num_vertices() as VertexIdx {
+                    let id = g.id(u);
+                    if parts.shard_of(id) != s {
+                        continue;
+                    }
+                    let idx = single.index(id).unwrap();
+                    l1 += (ex.ranks[s][u as usize] - exact.ranks[idx as usize]).abs();
+                }
+            }
+            assert!(l1 < 1e-6, "shards={shards}: L1={l1}");
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_a_no_op() {
+        let parts = Partitioner::new(2);
+        let graphs = [DynamicGraph::new(), DynamicGraph::new()];
+        let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+        let plan = ShardPlan::build(&refs, &parts);
+        let ex = run_exchange(&plan, &PageRankConfig::default(), None);
+        assert_eq!(ex.iterations, 0);
+        assert!(ex.ranks.iter().all(Vec::is_empty));
+    }
+}

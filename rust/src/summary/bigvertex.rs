@@ -315,6 +315,70 @@ pub struct DenseSummary {
     pub k: usize,
 }
 
+/// The big-vertex aggregate applied to a *remote shard* instead of the
+/// cold set: per-iteration rank mass crossing a shard boundary, rolled
+/// up per local destination the way [`SummaryGraph`]'s `b` rolls up
+/// frozen boundary contributions per hot target.
+///
+/// In the summarized path, `b[z] = Σ r(w)/d_out(w)` over boundary edges
+/// `(w, z)` with `w` frozen in the big vertex B. In the sharded exchange
+/// (`pagerank::sharded`), the "big vertex" is another shard: each source
+/// shard accumulates `r(u)/d_out(u)` over its cut edges `(u, v)` into
+/// the destination shard's inbox at `v`'s local index, the destination
+/// folds the inbox into its gather and the inbox clears for the next
+/// iteration. Unlike `SummaryGraph::b`, these contributions are
+/// re-exchanged every iteration — which is why the sharded run converges
+/// to the exact fixed point instead of an approximation.
+#[derive(Clone, Debug)]
+pub struct RemoteAggregate {
+    /// Aggregated incoming mass per local destination index.
+    b: Vec<f64>,
+    /// Cut-edge contributions folded in since the last clear.
+    boundary_edges: usize,
+}
+
+impl RemoteAggregate {
+    /// An empty inbox for a shard with `n` local vertex slots.
+    pub fn new(n: usize) -> Self {
+        Self { b: vec![0.0; n], boundary_edges: 0 }
+    }
+
+    /// Accumulate one cut edge's mass at local destination `target`.
+    #[inline]
+    pub fn add(&mut self, target: VertexIdx, mass: f64) {
+        self.b[target as usize] += mass;
+        self.boundary_edges += 1;
+    }
+
+    /// Aggregated mass per local destination.
+    pub fn b(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// Total aggregated mass (the exchange twin of [`SummaryGraph::b_s`]).
+    pub fn b_s(&self) -> f64 {
+        self.b.iter().sum()
+    }
+
+    /// Cut-edge contributions folded in since the last clear.
+    pub fn num_boundary_edges(&self) -> usize {
+        self.boundary_edges
+    }
+
+    /// Fold the inbox into a gather accumulator (`acc[v] += b[v]`).
+    pub fn fold_into(&self, acc: &mut [f64]) {
+        for (a, &m) in acc.iter_mut().zip(&self.b) {
+            *a += m;
+        }
+    }
+
+    /// Zero the inbox for the next exchange round.
+    pub fn clear(&mut self) {
+        self.b.iter_mut().for_each(|m| *m = 0.0);
+        self.boundary_edges = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

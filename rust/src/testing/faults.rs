@@ -201,6 +201,61 @@ impl SegmentWriter for FaultySegment {
     }
 }
 
+/// A [`WalIo`] implementation that models the OS page cache: segment
+/// writes land in an in-memory buffer and only reach the real file when
+/// `sync` is called. Dropping a segment with unsynced bytes *discards*
+/// them — exactly what a power loss does to dirty pages the kernel
+/// never flushed. Recovery tests use it to check that
+/// [`SyncPolicy::Interval`](crate::coordinator::wal::SyncPolicy)
+/// loses at most the records appended since the last sync, and loses
+/// them *cleanly* (no torn batch survives).
+pub struct VolatileIo;
+
+impl VolatileIo {
+    /// A volatile (page-cache-modeling) WAL I/O layer.
+    pub fn new() -> VolatileIo {
+        VolatileIo
+    }
+}
+
+impl Default for VolatileIo {
+    fn default() -> Self {
+        VolatileIo::new()
+    }
+}
+
+impl WalIo for VolatileIo {
+    fn create_segment(&mut self, path: &Path) -> io::Result<Box<dyn SegmentWriter>> {
+        // Create (truncate) the real file eagerly so the segment exists
+        // on disk with whatever prefix gets synced — an empty file if
+        // nothing ever does, as after a real crash.
+        let file = File::create(path)?;
+        Ok(Box::new(VolatileSegment { file, buf: Vec::new() }))
+    }
+}
+
+/// One WAL segment behind a simulated page cache: `write_all` only
+/// dirties the in-memory buffer; `sync` flushes it to the file and
+/// fsyncs; dropping without sync throws the dirty tail away.
+struct VolatileSegment {
+    file: File,
+    buf: Vec<u8>,
+}
+
+impl SegmentWriter for VolatileSegment {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.buf.extend_from_slice(buf);
+        Ok(())
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.file.write_all(&self.buf)?;
+        self.file.sync_data()?;
+        self.buf.clear();
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -260,6 +315,24 @@ mod tests {
         assert_eq!(inj.fsync_failures(), 1);
         inj.set_fail_fsync(false);
         assert!(seg.sync().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn volatile_segment_loses_unsynced_tail() {
+        let dir = std::env::temp_dir()
+            .join(format!("vg-vol-{}-{:?}", std::process::id(), std::thread::current().id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.log");
+        let mut io_layer = VolatileIo::new();
+        let mut seg = io_layer.create_segment(&path).unwrap();
+        seg.write_all(b"synced-").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"", "dirty pages never hit the file");
+        seg.sync().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"synced-");
+        seg.write_all(b"lost").unwrap();
+        drop(seg); // crash: the dirty tail evaporates
+        assert_eq!(std::fs::read(&path).unwrap(), b"synced-", "unsynced tail discarded");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

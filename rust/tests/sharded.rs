@@ -1,0 +1,268 @@
+//! Sharded scale-out acceptance: partitioning laws, cross-shard rank
+//! equivalence, and the wire protocol against a multi-shard cluster.
+//!
+//! * Property: the hash partitioner is total, a pure function of the id,
+//!   and routes every op to exactly the shards that must see it.
+//! * Property: row-range split ∘ concat reproduces any frozen CSR.
+//! * Property: a 2- and a 4-shard cluster driven by random mutation
+//!   streams stay rank-equivalent (L1 < 1e-6) to an exact single-engine
+//!   PageRank over the mirrored graph, and the combined top-K merge
+//!   agrees with a direct selection.
+//! * The full line protocol works unchanged against `--shards 4`:
+//!   partition-routed ranks, batch writes fanning out to every shard,
+//!   and `stats` carrying the per-shard gauge section.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
+use veilgraph::coordinator::sharded::ShardedEngineBuilder;
+use veilgraph::graph::dynamic::DynamicGraph;
+use veilgraph::graph::partition::{concat_rows, split_rows, Partitioner};
+use veilgraph::pagerank::power::{PageRank, PageRankConfig};
+use veilgraph::stream::event::EdgeOp;
+use veilgraph::testing::oracle::seq_apply;
+use veilgraph::testing::vprop::{forall, Gen};
+use veilgraph::util::json::Json;
+
+fn ring(n: u64) -> Vec<(u64, u64)> {
+    (0..n).map(|i| (i, (i + 1) % n)).collect()
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Partitioning laws
+// ---------------------------------------------------------------------------
+
+/// Property: assignment is total (every id owned by a shard in range),
+/// pure (re-asking never moves an id), and routing delivers each op to
+/// exactly the shards that must see it — source owner for edges, plus
+/// one ghost registration at the destination owner for cross-shard
+/// adds, and a broadcast for vertex removals.
+#[test]
+fn partitioner_is_total_pure_and_routes_minimally() {
+    forall(40, 0x5AAD, |g: &mut Gen| {
+        let k = g.usize(1..6);
+        let p = Partitioner::new(k);
+        for _ in 0..40 {
+            let id = g.u64(0..u64::MAX);
+            let s = p.shard_of(id);
+            assert!(s < k, "owner out of range");
+            assert_eq!(s, p.shard_of(id), "assignment is a pure function of the id");
+        }
+        let n = g.usize(2..40) as u64;
+        for _ in 0..30 {
+            let (a, b) = (g.u64(0..n), g.u64(0..n));
+            let op = if g.bool(0.1) {
+                EdgeOp::RemoveVertex(a)
+            } else if g.bool(0.25) {
+                EdgeOp::remove(a, b)
+            } else {
+                EdgeOp::add(a, b)
+            };
+            let mut deliveries: Vec<(usize, EdgeOp)> = Vec::new();
+            p.for_each_route(op, |s, op| deliveries.push((s, op)));
+            match op {
+                EdgeOp::AddEdge(s, d) => {
+                    assert_eq!(deliveries[0], (p.shard_of(s), op), "edge lives with its source");
+                    if p.shard_of(s) == p.shard_of(d) {
+                        assert_eq!(deliveries.len(), 1, "same-shard add stays local");
+                    } else {
+                        assert_eq!(deliveries.len(), 2);
+                        assert_eq!(
+                            deliveries[1],
+                            (p.shard_of(d), EdgeOp::AddVertex(d)),
+                            "cross-shard add registers the destination with its owner"
+                        );
+                    }
+                }
+                EdgeOp::RemoveEdge(s, _) => {
+                    assert_eq!(deliveries, vec![(p.shard_of(s), op)], "removal follows the source");
+                }
+                EdgeOp::RemoveVertex(_) => {
+                    let shards: Vec<usize> = deliveries.iter().map(|&(s, _)| s).collect();
+                    assert_eq!(shards, (0..k).collect::<Vec<_>>(), "vertex removal broadcasts");
+                }
+                EdgeOp::AddVertex(_) => unreachable!("generator emits no bare AddVertex"),
+            }
+        }
+    });
+}
+
+/// Property: slicing a frozen CSR into contiguous row ranges and
+/// re-concatenating the parts reproduces it exactly, for random graphs
+/// and random shard counts.
+#[test]
+fn row_split_concat_roundtrips_on_random_graphs() {
+    forall(40, 0xC5A1, |g: &mut Gen| {
+        let n = g.usize(2..60);
+        let mut edges = g.edges(n, g.usize(1..120));
+        edges.push((0, 1)); // never a vertexless graph
+        let (dg, _) = DynamicGraph::from_edges(edges);
+        let csr = dg.snapshot();
+        let k = g.usize(1..8);
+        let cuts = csr.shards(k);
+        assert_eq!(concat_rows(&split_rows(&csr, &cuts)), csr, "k={k}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cross-shard rank equivalence
+// ---------------------------------------------------------------------------
+
+/// Property (the headline acceptance): 2- and 4-shard clusters driven
+/// by an arbitrary mutation stream — adds, removals, vertex drops,
+/// interleaved queries — converge to the same ranking as an exact
+/// single-engine PageRank over the mirrored graph, within the
+/// documented `L1 < 1e-6` summation-order tolerance; and the combined
+/// snapshot's k-way top-K merge agrees with a direct selection.
+#[test]
+fn sharded_ranks_match_single_engine_under_mutation() {
+    forall(10, 0x51A2DED, |g: &mut Gen| {
+        let n = g.usize(8..16);
+        let mut initial = g.edges(n, 24);
+        initial.extend((0..n as u64).map(|i| (i, (i + 1) % n as u64)));
+        let (mut mirror, _) = DynamicGraph::from_edges(initial.clone());
+        let mut engines: Vec<_> = [2usize, 4]
+            .iter()
+            .map(|&k| ShardedEngineBuilder::new(k).build_from_edges(initial.clone()).unwrap())
+            .collect();
+
+        for _ in 0..g.usize(1..4) {
+            let mut batch = Vec::new();
+            for _ in 0..g.usize(1..8) {
+                let (a, b) = (g.u64(0..n as u64 + 6), g.u64(0..n as u64 + 6));
+                if a == b {
+                    continue;
+                }
+                batch.push(if g.bool(0.08) {
+                    EdgeOp::RemoveVertex(a)
+                } else if g.bool(0.25) {
+                    EdgeOp::remove(a, b)
+                } else {
+                    EdgeOp::add(a, b)
+                });
+            }
+            seq_apply(&mut mirror, &batch);
+            let query_mid_stream = g.bool(0.5);
+            for e in &mut engines {
+                e.ingest_batch(batch.iter().copied());
+                if query_mid_stream {
+                    e.query().unwrap();
+                }
+            }
+        }
+
+        let exact = PageRank::new(PageRankConfig::default()).run(&mirror.snapshot());
+        let mut exact_sorted = exact.ranks.clone();
+        exact_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for e in &mut engines {
+            e.query().unwrap(); // settle: one exchange over the final topology
+            let snap = e.latest_snapshot();
+            let k = e.shard_count();
+            assert_eq!(
+                snap.ids.len(),
+                mirror.num_vertices(),
+                "shards={k}: owned union != single-engine vertex set"
+            );
+            let mut l1 = 0.0;
+            for (idx, &id) in mirror.ids().iter().enumerate() {
+                let r = snap.rank_of(id).expect("combined snapshot misses a vertex");
+                l1 += (r - exact.ranks[idx]).abs();
+            }
+            assert!(l1 < 1e-6, "shards={k}: L1={l1}");
+            let top = snap.top(5.min(mirror.num_vertices()));
+            for (i, (_, r)) in top.iter().enumerate() {
+                assert!(
+                    (r - exact_sorted[i]).abs() < 1e-6,
+                    "shards={k}: merged top-{i} rank diverges from direct selection"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol against a 4-shard cluster
+// ---------------------------------------------------------------------------
+
+/// Acceptance: the unchanged line protocol (v1 and v2 framing) works
+/// against `serve --shards 4`: reads come off the combined merge, `rank`
+/// routes to the owning shard's snapshot, batch writes fan out across
+/// all four shards, and `stats` carries the per-shard gauge section
+/// alongside the server counters (including `recomputes_cancelled`).
+#[test]
+fn wire_protocol_over_four_shards() {
+    let mut edges = ring(32);
+    edges.extend((0..8u64).map(|i| (4 * i, (i * 11 + 2) % 32)));
+    let engine = ShardedEngineBuilder::new(4).build_from_edges(edges).unwrap();
+    let h = ServerHandle::spawn_sharded(engine, &ServeOptions::new());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve(h, listener, ServeOptions::new().max_connections(4).workers(2)).unwrap();
+    });
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut r = BufReader::new(c.try_clone().unwrap());
+
+    // v1 read: the combined k-way merge serves `top`.
+    send_line(&mut c, r#"{"v":1,"op":"top","k":5}"#);
+    let resp = read_json_line(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("top").unwrap().as_arr().unwrap().len(), 5);
+
+    // Partition-routed rank: vertices answer wherever they are owned.
+    for id in [0u64, 7, 13, 31] {
+        send_line(&mut c, &format!(r#"{{"op":"rank","id":{id}}}"#));
+        let resp = read_json_line(&mut r);
+        assert!(resp.get("rank").unwrap().as_f64().is_some(), "vertex {id} unranked");
+    }
+    send_line(&mut c, r#"{"op":"rank","id":424242}"#);
+    assert_eq!(read_json_line(&mut r).get("rank"), Some(&Json::Null), "unknown id ranks null");
+
+    // A batch write fans out to every shard; the next query absorbs it.
+    let ops: Vec<String> = (0..16u64)
+        .map(|i| format!(r#"{{"op":"add","src":{},"dst":{}}}"#, 100 + i, i % 32))
+        .collect();
+    send_line(&mut c, &format!(r#"{{"op":"batch","ops":[{}]}}"#, ops.join(",")));
+    let resp = read_json_line(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("registered").unwrap().as_u64(), Some(16));
+    send_line(&mut c, r#"{"v":2,"op":"query","top":3}"#);
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
+    send_line(&mut c, r#"{"op":"rank","id":107}"#);
+    assert!(
+        read_json_line(&mut r).get("rank").unwrap().as_f64().is_some(),
+        "batched vertex 107 is ranked by its owning shard"
+    );
+
+    // `stats` carries the per-shard section next to the server counters.
+    send_line(&mut c, r#"{"op":"stats"}"#);
+    let stats = read_json_line(&mut r);
+    let shards = stats.get("stats").unwrap().get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 4);
+    let vertices: u64 = shards.iter().map(|s| s.get("vertices").unwrap().as_u64().unwrap()).sum();
+    assert_eq!(vertices, 48, "owned vertices partition the 32 + 16 live ids exactly");
+    let server_stats = stats.get("stats").unwrap().get("server").unwrap();
+    assert!(
+        server_stats.get("recomputes_cancelled").unwrap().as_u64().is_some(),
+        "supersession counter is exported"
+    );
+
+    send_line(&mut c, r#"{"op":"shutdown"}"#);
+    assert_eq!(read_json_line(&mut r).get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
