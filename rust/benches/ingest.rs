@@ -22,9 +22,10 @@
 //!
 //! Emits `results/ingest_bench.json` and — when the serving bench ran
 //! first (CI does) — merges `results/bench_4.json` into
-//! `results/bench_9.json`, the BENCH_9 perf-trajectory artifact
-//! (superset of the BENCH_8 schema: micro + serving + saturation +
-//! subscriptions + sharded scale-out + ingest speedups + durability).
+//! `results/bench_10.json`, the BENCH_10 perf-trajectory artifact
+//! (superset of the BENCH_9 schema: micro + serving + saturation +
+//! subscriptions + sharded scale-out + ingest speedups + durability +
+//! the recompute-plane exchange/plan-cache ratios).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -278,9 +279,11 @@ fn main() {
         .expect("write ingest json");
     println!("JSON written to results/ingest_bench.json");
 
-    // BENCH_9 = BENCH_8 schema (micro + serving + saturation +
-    // subscriptions + ingest + durability) + the sharded scale-out
-    // ratios the serving bench folded into bench_4.json.
+    // BENCH_10 = BENCH_9 schema (micro + serving + saturation +
+    // subscriptions + ingest + durability + sharded scale-out) + the
+    // recompute-plane ratios (`exchange_par4_vs_serial`,
+    // `plan_reuse_vs_rebuild`) the serving bench folded into
+    // bench_4.json.
     let mut doc = std::fs::read_to_string("results/bench_4.json")
         .or_else(|_| std::fs::read_to_string("results/micro_bench.json"))
         .ok()
@@ -333,6 +336,7 @@ fn main() {
             ]),
         );
     }
-    std::fs::write("results/bench_9.json", doc.to_string_pretty()).expect("write bench_9 json");
-    println!("JSON written to results/bench_9.json");
+    std::fs::write("results/bench_10.json", doc.to_string_pretty())
+        .expect("write bench_10 json");
+    println!("JSON written to results/bench_10.json");
 }

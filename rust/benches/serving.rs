@@ -18,9 +18,16 @@
 //!   absorbed by a 2- and a 4-shard cluster vs the single engine
 //!   (`sharded2_vs_single`, `sharded4_vs_single`).
 //!
+//! * **Recompute plane**: one full cross-shard exchange serial vs on a
+//!   4-worker pool, asserted bit-identical before timing
+//!   (`exchange_par4_vs_serial`); a one-dirty-shard plan rebuild vs a
+//!   fresh full build (`plan_reuse_vs_rebuild`); and the saturation
+//!   scenario asserting `recompute_fence_misses` ≈ 0 with fence
+//!   reconciliation on.
+//!
 //! Emits `results/serving_bench.json` and — when the micro bench ran
 //! first (CI does) — merges its numbers into `results/bench_4.json`,
-//! which the ingest bench folds into the final BENCH_9 perf-trajectory
+//! which the ingest bench folds into the final BENCH_10 perf-trajectory
 //! artifact.
 
 use std::io::{BufRead, BufReader, Write};
@@ -35,11 +42,16 @@ use veilgraph::coordinator::serving::{RankSnapshot, SnapshotPublisher};
 use veilgraph::coordinator::sharded::ShardedEngineBuilder;
 use veilgraph::coordinator::subscription::{Mailbox, Subscription};
 use veilgraph::coordinator::udf::{Action, ExecStats};
+use veilgraph::graph::dynamic::DynamicGraph;
 use veilgraph::graph::generate;
+use veilgraph::graph::partition::Partitioner;
+use veilgraph::pagerank::power::PageRankConfig;
+use veilgraph::pagerank::sharded::{run_exchange_pooled, ExchangeScratch, ShardPlan};
 use veilgraph::stream::backpressure::OverflowPolicy;
 use veilgraph::stream::event::EdgeOp;
 use veilgraph::summary::params::SummaryParams;
 use veilgraph::util::json::Json;
+use veilgraph::util::threadpool::ThreadPool;
 
 const READ_K: usize = 100;
 const MEASURE_SECS: f64 = 1.5;
@@ -279,6 +291,39 @@ fn sharded_absorb_rate(shards: usize, edges: Vec<(u64, u64)>, batches: &[Vec<Edg
     }
 }
 
+const EXCHANGE_SHARDS: usize = 4;
+const EXCHANGE_RUNS: usize = 5;
+
+/// Route an edge list into per-shard graphs — the sharded engine's
+/// build path, minus the engine.
+fn shard_graphs(edges: &[(u64, u64)], shards: usize) -> (Vec<DynamicGraph>, Partitioner) {
+    let parts = Partitioner::new(shards);
+    let ops: Vec<EdgeOp> = edges.iter().map(|&(s, d)| EdgeOp::add(s, d)).collect();
+    let routed = parts.route(&ops);
+    let mut graphs: Vec<DynamicGraph> = (0..shards).map(|_| DynamicGraph::new()).collect();
+    for (g, ops) in graphs.iter_mut().zip(&routed) {
+        g.apply_batch(ops, None, 1);
+    }
+    (graphs, parts)
+}
+
+/// Median wall seconds per full exchange over [`EXCHANGE_RUNS`] runs,
+/// reusing one scratch (the engine's steady state).
+fn time_exchange(plan: &ShardPlan, pool: Option<&ThreadPool>) -> f64 {
+    let cfg = PageRankConfig::default();
+    let mut scratch = ExchangeScratch::new();
+    let mut times: Vec<f64> = (0..EXCHANGE_RUNS)
+        .map(|_| {
+            let t0 = Instant::now();
+            let ex = run_exchange_pooled(plan, &cfg, None, pool, &mut scratch);
+            assert!(ex.iterations > 0, "exchange must iterate");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[EXCHANGE_RUNS / 2]
+}
+
 const SUB_VERTICES: usize = 10_000;
 const SUB_PUBLISHES: usize = 500;
 
@@ -379,7 +424,12 @@ fn main() {
         .params(SummaryParams::new(0.2, 1, 0.1))
         .build_from_edges(generate::copying_web(50_000, 10, 0.7, 43))
         .expect("build engine");
-    let h = ServerHandle::spawn(engine, 1 << 16, OverflowPolicy::Block);
+    // Reconciliation on (the default) + a dedicated 2-worker recompute
+    // pool: fence misses under the hot writer are salvaged, not recounted.
+    let h = ServerHandle::spawn_with(
+        engine,
+        &ServeOptions::new().queue_capacity(1 << 16).recompute_workers(2),
+    );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
@@ -390,6 +440,23 @@ fn main() {
     println!("\nsaturation: idle {idle_rps:.0} reads/sec, saturated {sat_rps:.0} reads/sec");
     println!("serve_saturated_vs_idle: {sat_ratio:.2}x");
     println!("recompute_overlap_read_p99: {:.3} ms", p99 * 1e3);
+    let (fence_misses, reconciled) = {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let line = wire_send(&mut c, &mut r, "{\"op\":\"stats\"}");
+        let stats = Json::parse(line.trim()).expect("stats json");
+        let server = stats.get("stats").unwrap().get("server").unwrap();
+        (
+            server.get("recompute_fence_misses").unwrap().as_u64().unwrap(),
+            server.get("recomputes_reconciled").unwrap().as_u64().unwrap(),
+        )
+    };
+    println!("saturation fence: {reconciled} reconciled, {fence_misses} missed");
+    assert!(
+        fence_misses <= 4,
+        "reconciliation must absorb fence misses under saturation (got {fence_misses})"
+    );
     {
         let mut c = TcpStream::connect(addr).unwrap();
         let mut r = BufReader::new(c.try_clone().unwrap());
@@ -419,6 +486,60 @@ fn main() {
     let s4_ratio = sharded4 / single_rate;
     println!("sharded_absorb_shards2  {sharded2:>12.0} ops/sec ({s2_ratio:.2}x vs single)");
     println!("sharded_absorb_shards4  {sharded4:>12.0} ops/sec ({s4_ratio:.2}x vs single)");
+
+    // ---- recompute plane: pooled exchange + plan cache ---------------
+    println!();
+    let ex_edges = generate::copying_web(50_000, 10, 0.7, 45);
+    let (ex_graphs, ex_parts) = shard_graphs(&ex_edges, EXCHANGE_SHARDS);
+    let refs: Vec<&DynamicGraph> = ex_graphs.iter().collect();
+    let plan = ShardPlan::build(&refs, &ex_parts);
+    let pool = ThreadPool::new(4);
+    // Bit-identity first: the pooled run must reproduce the serial one
+    // exactly, or the speedup below compares different computations.
+    {
+        let cfg = PageRankConfig::default();
+        let a = run_exchange_pooled(&plan, &cfg, None, None, &mut ExchangeScratch::new());
+        let b = run_exchange_pooled(&plan, &cfg, None, Some(&pool), &mut ExchangeScratch::new());
+        assert_eq!(a.iterations, b.iterations, "pooled exchange diverged (iterations)");
+        for (ra, rb) in a.ranks.iter().zip(&b.ranks) {
+            assert!(
+                ra.iter().zip(rb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "pooled exchange is not bit-identical to serial"
+            );
+        }
+    }
+    let serial_secs = time_exchange(&plan, None);
+    let par4_secs = time_exchange(&plan, Some(&pool));
+    let ex_ratio = serial_secs / par4_secs;
+    println!("exchange_serial         {:>12.1} ms/run", serial_secs * 1e3);
+    println!("exchange_par4           {:>12.1} ms/run", par4_secs * 1e3);
+    println!("exchange_par4_vs_serial: {ex_ratio:.2}x");
+    // Plan cache: a one-dirty-shard rebuild vs a fresh full build.
+    let mut fresh_times: Vec<f64> = (0..EXCHANGE_RUNS)
+        .map(|_| {
+            let t0 = Instant::now();
+            let p = ShardPlan::build(&refs, &ex_parts);
+            assert_eq!(p.total_vertices(), plan.total_vertices());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    fresh_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let fresh_secs = fresh_times[EXCHANGE_RUNS / 2];
+    let dirty: Vec<bool> = (0..EXCHANGE_SHARDS).map(|s| s == 0).collect();
+    let mut cached = plan.clone();
+    let mut rebuild_times: Vec<f64> = (0..EXCHANGE_RUNS)
+        .map(|_| {
+            let t0 = Instant::now();
+            cached.rebuild_shards(&refs, &ex_parts, &dirty);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    rebuild_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rebuild_secs = rebuild_times[EXCHANGE_RUNS / 2];
+    let plan_ratio = fresh_secs / rebuild_secs;
+    println!("plan_build_fresh        {:>12.2} ms", fresh_secs * 1e3);
+    println!("plan_rebuild_1of4       {:>12.2} ms", rebuild_secs * 1e3);
+    println!("plan_reuse_vs_rebuild: {plan_ratio:.2}x");
 
     // ---- machine-readable artifact -----------------------------------
     std::fs::create_dir_all("results").ok();
@@ -460,6 +581,20 @@ fn main() {
                 ("saturated_reads_per_sec", Json::Num(sat_rps)),
                 ("serve_saturated_vs_idle", Json::Num(sat_ratio)),
                 ("recompute_overlap_read_p99", Json::Num(p99)),
+                ("recompute_fence_misses", Json::Num(fence_misses as f64)),
+                ("recomputes_reconciled", Json::Num(reconciled as f64)),
+            ]),
+        ),
+        (
+            "recompute_plane",
+            Json::obj(vec![
+                ("shards", Json::Num(EXCHANGE_SHARDS as f64)),
+                ("exchange_serial_secs", Json::Num(serial_secs)),
+                ("exchange_par4_secs", Json::Num(par4_secs)),
+                ("exchange_par4_vs_serial", Json::Num(ex_ratio)),
+                ("plan_build_fresh_secs", Json::Num(fresh_secs)),
+                ("plan_rebuild_dirty1_secs", Json::Num(rebuild_secs)),
+                ("plan_reuse_vs_rebuild", Json::Num(plan_ratio)),
             ]),
         ),
         (
@@ -490,6 +625,8 @@ fn main() {
             ("serve_saturated_vs_idle", sat_ratio),
             ("sharded2_vs_single", s2_ratio),
             ("sharded4_vs_single", s4_ratio),
+            ("exchange_par4_vs_serial", ex_ratio),
+            ("plan_reuse_vs_rebuild", plan_ratio),
         ];
         match map.get_mut("speedups") {
             Some(Json::Obj(speedups)) => {

@@ -38,7 +38,7 @@ use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
 use crate::graph::dynamic::DynamicGraph;
 use crate::graph::snapshot::{SnapshotBuild, SnapshotCache, SnapshotStats};
-use crate::graph::VertexId;
+use crate::graph::{VertexId, VertexIdx};
 use crate::metrics::registry::MetricsRegistry;
 use crate::pagerank::power::{PageRank, PageRankConfig};
 use crate::pagerank::summarized::merge_ranks_into;
@@ -155,6 +155,54 @@ pub enum ScheduleMode {
     ExactOnly,
 }
 
+/// How [`Engine::finish_recompute`] (and its sharded twin) integrated
+/// an off-thread result: whether the version fence held, and — when it
+/// did not — whether the post-fence ops were reconciled into the
+/// published ranking instead of being counted as a plain fence miss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecomputeOutcome {
+    /// The graph did not move while the job ran; the result installed
+    /// verbatim.
+    pub fence_ok: bool,
+    /// The fence missed but the armed fence log replayed the post-fence
+    /// ops as a first-order rank correction before publishing.
+    pub reconciled: bool,
+}
+
+/// Fence-log growth bound: past this many post-fence effective ops a
+/// reconciliation sweep approaches recompute cost, so the log taints
+/// and the miss falls back to the plain by-id merge.
+pub(crate) const FENCE_LOG_CAP: usize = 65_536;
+
+/// Effective ops applied after a recompute fence was captured — the
+/// reconciliation input that turns a fence miss into a cheap
+/// first-order correction instead of a discarded result. Tainted (and
+/// emptied) by vertex removals — reconciliation needs pre-removal
+/// adjacency the live graph no longer has — and by growth past
+/// [`FENCE_LOG_CAP`].
+struct FenceLog {
+    /// Graph version the paired recompute was fenced at; the log only
+    /// reconciles the job it was armed for.
+    from_version: u64,
+    ops: Vec<EdgeOp>,
+    tainted: bool,
+}
+
+impl FenceLog {
+    fn append(&mut self, ops: &[EdgeOp]) {
+        if self.tainted {
+            return;
+        }
+        let removes = ops.iter().any(|op| matches!(op, EdgeOp::RemoveVertex(_)));
+        if removes || self.ops.len() + ops.len() > FENCE_LOG_CAP {
+            self.tainted = true;
+            self.ops.clear();
+            return;
+        }
+        self.ops.extend_from_slice(ops);
+    }
+}
+
 /// Inputs for an approximate (summarized) recompute, cloned at the
 /// version fence.
 struct ApproxInputs {
@@ -226,11 +274,24 @@ impl RecomputeJob {
         self.graph_version
     }
 
-    /// Execute the recompute. Self-contained: runs serially on the
-    /// caller's thread with no access to the engine, its pool or its
-    /// scratch (the engine keeps using those concurrently).
+    /// Execute the recompute on the caller's thread. Self-contained: no
+    /// access to the engine, its pool or its scratch (the engine keeps
+    /// using those concurrently).
     pub fn run(self) -> RecomputeResult {
+        self.run_with(None)
+    }
+
+    /// Execute the recompute, sharding its compute stages over `pool`
+    /// when one is provided — the dedicated recompute pool of
+    /// `serve --recompute-workers`, so an exact job never contends with
+    /// the engine pool serving summarized queries. Safe on any thread
+    /// that is not one of `pool`'s own workers.
+    pub fn run_with(self, pool: Option<&ThreadPool>) -> RecomputeResult {
         let sw = Stopwatch::start();
+        let shards = match pool {
+            Some(pool) => self.pr_config.effective_shards(pool),
+            None => 1,
+        };
         let mut exec = ExecStats::default();
         let mut refreshed = true;
         let mut carry_back = None;
@@ -244,7 +305,7 @@ impl RecomputeJob {
                     new_vertices: &a.new_vertices,
                     prev_ranks: &self.warm_ranks,
                 };
-                let hot = compute_hot_set_pooled(&inputs, &a.params, &mut scratch, None, 1);
+                let hot = compute_hot_set_pooled(&inputs, &a.params, &mut scratch, pool, shards);
                 let default = self.pr_config.init_rank(a.graph.num_vertices());
                 let summary = SummaryGraph::build_pooled(
                     &a.graph,
@@ -252,8 +313,8 @@ impl RecomputeJob {
                     &self.warm_ranks,
                     default,
                     &mut scratch,
-                    None,
-                    1,
+                    pool,
+                    shards,
                 );
                 hot_set = hot.all().into_iter().map(|i| a.graph.id(i)).collect();
                 scratch.recycle_hot(hot);
@@ -262,7 +323,7 @@ impl RecomputeJob {
                 let mut ranks = self.warm_ranks;
                 if summary.num_vertices() > 0 {
                     let mut executor = SummarizedExecutor::sparse_only();
-                    match executor.execute_pooled(&summary, &self.pr_config, None) {
+                    match executor.execute_pooled(&summary, &self.pr_config, pool) {
                         Ok((res, backend)) => {
                             exec.backend = Some(backend);
                             exec.iterations = res.iterations;
@@ -287,7 +348,12 @@ impl RecomputeJob {
                 let warm = self.pr_config.warm_start_exact
                     && self.warm_ranks.len() == csr.num_vertices()
                     && !self.warm_ranks.is_empty();
-                let res = if warm { pr.run_from(&csr, self.warm_ranks) } else { pr.run(&csr) };
+                let res = match (pool, warm) {
+                    (Some(pool), true) => pr.run_parallel_from(&csr, self.warm_ranks, pool),
+                    (Some(pool), false) => pr.run_parallel(&csr, pool),
+                    (None, true) => pr.run_from(&csr, self.warm_ranks),
+                    (None, false) => pr.run(&csr),
+                };
                 exec.iterations = res.iterations;
                 res.ranks
             }
@@ -510,6 +576,8 @@ impl EngineBuilder {
             last_publish: std::time::Instant::now(),
             queries_since_publish: 0,
             updates_since_refresh: 0,
+            fence_log: None,
+            reconcile: true,
             stopped: false,
             wal: None,
             durability: DurabilityStats::new(),
@@ -648,6 +716,8 @@ impl EngineBuilder {
             last_publish: std::time::Instant::now(),
             queries_since_publish: 0,
             updates_since_refresh: 0,
+            fence_log: None,
+            reconcile: true,
             stopped: false,
             wal: None,
             durability: DurabilityStats::new(),
@@ -727,6 +797,12 @@ pub struct Engine {
     /// Effective (coalesced) updates applied since the ranking was last
     /// recomputed — the accumulated-error proxy for staleness policies.
     updates_since_refresh: u64,
+    /// Post-fence effective ops, armed per recompute while
+    /// reconciliation is on.
+    fence_log: Option<FenceLog>,
+    /// Reconcile fence-missed recomputes instead of demoting them to a
+    /// plain by-id merge.
+    reconcile: bool,
     stopped: bool,
     // ---- durability (inert when the engine runs without a data dir) ----
     /// Write-ahead log; `Some` ⇔ durability configured.
@@ -844,6 +920,11 @@ impl Engine {
         let sw = Stopwatch::start();
         let res = self.graph.apply_batch(batch.ops(), self.pool.as_deref(), shards);
         self.metrics.time("ingest_apply_secs", sw.secs());
+        // While a recompute fence is armed, the effective ops feed the
+        // reconciliation log (the same records the WAL just absorbed).
+        if let Some(flog) = &mut self.fence_log {
+            flog.append(batch.ops());
+        }
         self.metrics.inc("applies", 1);
         self.metrics.inc("batch_raw_ops", batch.raw_ops as u64);
         self.metrics.inc("batch_effective_ops", batch.effective_ops() as u64);
@@ -1034,17 +1115,20 @@ impl Engine {
         Ok((AsyncQueryResult { query_id, decision, scheduled, snapshot }, job))
     }
 
-    /// Integrate an off-thread recompute back into the engine and publish
-    /// it. Returns true when the fence held (the graph did not move while
-    /// the job ran) and the result was installed verbatim; on a fence
-    /// miss the fenced ranking is merged by vertex id into the live rank
-    /// vector — internally consistent, never regressing topology for
-    /// readers — and the post-fence drift keeps accumulating toward the
-    /// next refresh. Jobs that corrected nothing (empty summary) restore
-    /// the carry state they consumed and publish nothing.
-    pub fn finish_recompute(&mut self, res: RecomputeResult) -> bool {
+    /// Integrate an off-thread recompute back into the engine and
+    /// publish it. `fence_ok` reports whether the fence held (the graph
+    /// did not move while the job ran) and the result installed
+    /// verbatim; on a fence miss the fenced ranking is merged by vertex
+    /// id into the live rank vector — internally consistent, never
+    /// regressing topology for readers — and, when the armed fence log
+    /// is clean, the post-fence ops replay as a first-order rank
+    /// correction (`reconciled`), so the miss does not demote the
+    /// publish. Jobs that corrected nothing (empty summary) restore the
+    /// carry state they consumed and publish nothing.
+    pub fn finish_recompute(&mut self, res: RecomputeResult) -> RecomputeOutcome {
         self.metrics.inc("recomputes_offthread", 1);
         self.metrics.time("recompute_offthread_secs", res.exec.elapsed_secs);
+        let log = self.fence_log.take();
         if !res.refreshed {
             self.metrics.inc("recomputes_empty", 1);
             if let Some((prev_degree, new_vertices)) = res.carry_back {
@@ -1059,18 +1143,32 @@ impl Engine {
                 }
             }
             self.updates_since_refresh += res.accounted_updates;
-            return false;
+            return RecomputeOutcome { fence_ok: false, reconciled: false };
         }
         let fence_ok = res.graph_version == self.graph.version();
+        let mut reconciled = false;
         self.last_hot_set = res.hot_set;
         if fence_ok {
             self.ranks = res.ranks;
         } else {
-            self.metrics.inc("recompute_fence_misses", 1);
             self.extend_ranks_for_new_vertices();
             for (id, r) in res.ids.iter().zip(&res.ranks) {
                 if let Some(idx) = self.graph.index(*id) {
                     self.ranks[idx as usize] = *r;
+                }
+            }
+            match log {
+                Some(log)
+                    if self.reconcile
+                        && !log.tainted
+                        && log.from_version == res.graph_version =>
+                {
+                    self.reconcile_touched(&log.ops);
+                    self.metrics.inc("recomputes_reconciled", 1);
+                    reconciled = true;
+                }
+                _ => {
+                    self.metrics.inc("recompute_fence_misses", 1);
                 }
             }
         }
@@ -1087,7 +1185,69 @@ impl Engine {
         self.metrics.set("last_summary_vertices", res.exec.summary_vertices as f64);
         self.metrics.set("last_summary_edges", res.exec.summary_edges as f64);
         self.publish_snapshot(res.query_id, res.action, res.exec, None);
-        fence_ok
+        RecomputeOutcome { fence_ok, reconciled }
+    }
+
+    /// Replay post-fence ops as a first-order rank correction: every
+    /// vertex whose in-mass an op changed (endpoints plus the source's
+    /// current out-neighbors, whose per-edge share moved with the
+    /// out-degree) gets one gather
+    /// `teleport + β·Σ_{w∈in(v)} r_w / d_out(w) + dangling-share`
+    /// from a frozen base; writes land after the sweep so the pass is
+    /// order-independent.
+    fn reconcile_touched(&mut self, ops: &[EdgeOp]) {
+        use std::collections::BTreeSet;
+        let mut touched: BTreeSet<VertexId> = BTreeSet::new();
+        for op in ops {
+            match *op {
+                EdgeOp::AddEdge(u, d) | EdgeOp::RemoveEdge(u, d) => {
+                    touched.insert(u);
+                    touched.insert(d);
+                    if let Some(ui) = self.graph.index(u) {
+                        for &w in self.graph.out_neighbors(ui) {
+                            touched.insert(self.graph.id(w));
+                        }
+                    }
+                }
+                EdgeOp::AddVertex(v) => {
+                    touched.insert(v);
+                }
+                EdgeOp::RemoveVertex(_) => unreachable!("tainted fence log reached reconciliation"),
+            }
+        }
+        let n = self.graph.num_vertices();
+        if touched.is_empty() || n == 0 {
+            return;
+        }
+        let mut dangling_mass = 0.0;
+        for u in 0..n as VertexIdx {
+            if self.graph.out_degree(u) == 0 {
+                dangling_mass += self.ranks[u as usize];
+            }
+        }
+        let cfg = &self.pr_config;
+        let teleport = cfg.teleport(n);
+        let share =
+            if cfg.dangling_redistribution { cfg.beta * dangling_mass / n as f64 } else { 0.0 };
+        let mut fixes: Vec<(VertexIdx, f64)> = Vec::with_capacity(touched.len());
+        for &vid in &touched {
+            let Some(idx) = self.graph.index(vid) else {
+                continue; // coalesced away before the fence resolved
+            };
+            let mut in_mass = 0.0;
+            for &w in self.graph.in_neighbors(idx) {
+                let d = self.graph.out_degree(w);
+                if d > 0 {
+                    in_mass += self.ranks[w as usize] / d as f64;
+                }
+            }
+            fixes.push((idx, teleport + cfg.beta * in_mass + share));
+        }
+        let fixed = fixes.len() as u64;
+        for (idx, x) in fixes {
+            self.ranks[idx as usize] = x;
+        }
+        self.metrics.inc("reconciled_vertices", fixed);
     }
 
     /// Capture a version-fenced [`RecomputeJob`] for `decision`, taking
@@ -1129,6 +1289,13 @@ impl Engine {
             None
         };
         self.metrics.inc("recomputes_scheduled", 1);
+        if self.reconcile {
+            self.fence_log = Some(FenceLog {
+                from_version: self.graph.version(),
+                ops: Vec::new(),
+                tainted: false,
+            });
+        }
         RecomputeJob {
             decision,
             query_id,
@@ -1186,6 +1353,16 @@ impl Engine {
             self.ingest_batch(pending);
         }
         Ok(())
+    }
+
+    /// Toggle fence reconciliation (on by default). Off restores the
+    /// pre-reconciliation behavior: a fence miss merges by id and
+    /// counts a `recompute_fence_misses`.
+    pub fn set_reconcile(&mut self, on: bool) {
+        self.reconcile = on;
+        if !on {
+            self.fence_log = None;
+        }
     }
 
     /// Stop the engine (Alg. 1 `OnStop`); further queries error.
@@ -2228,7 +2405,7 @@ mod tests {
         assert_eq!(job.graph_version(), e.graph().version());
         let res = std::thread::spawn(move || job.run()).join().unwrap();
         let before = e.latest_snapshot().version;
-        assert!(e.finish_recompute(res), "fence must hold on an unmutated graph");
+        assert!(e.finish_recompute(res).fence_ok, "fence must hold on an unmutated graph");
         let snap = e.latest_snapshot();
         assert!(snap.version > before, "the recompute publishes");
         assert_ne!(snap.action, Action::RepeatLast);
@@ -2245,6 +2422,7 @@ mod tests {
     #[test]
     fn fence_miss_merges_by_id_and_never_regresses_topology() {
         let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        e.set_reconcile(false);
         let policy = StalenessPolicy::default();
         e.ingest(EdgeOp::add(3, 7));
         let (_, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
@@ -2256,13 +2434,59 @@ mod tests {
         assert!(job2.is_none() && !a2.scheduled);
         assert!(a2.snapshot.rank_of(99).is_some(), "absorb republished the new vertex");
         let res = job.run();
-        assert!(!e.finish_recompute(res), "fence must miss");
+        let out = e.finish_recompute(res);
+        assert!(!out.fence_ok && !out.reconciled, "fence must miss, reconciliation is off");
         assert_eq!(e.metrics().counter("recompute_fence_misses"), 1);
         // The published result keeps the live topology: the fenced ranks
         // were merged by id, not installed wholesale.
         let snap = e.latest_snapshot();
         assert!(snap.rank_of(99).is_some(), "topology never goes backwards for readers");
         assert_eq!(snap.num_vertices(), e.graph().num_vertices());
+    }
+
+    #[test]
+    fn fence_miss_reconciles_post_fence_ops_by_default() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        let policy = StalenessPolicy::default();
+        e.ingest(EdgeOp::add(3, 7));
+        let (_, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        let job = job.unwrap();
+        // Post-fence writes land while the job runs: the armed fence
+        // log replays them instead of counting a miss.
+        e.ingest(EdgeOp::add(20, 3));
+        e.flush_pending();
+        let out = e.finish_recompute(job.run());
+        assert!(!out.fence_ok && out.reconciled);
+        assert_eq!(e.metrics().counter("recomputes_reconciled"), 1);
+        assert_eq!(e.metrics().counter("recompute_fence_misses"), 0);
+        assert!(e.metrics().counter("reconciled_vertices") >= 2);
+        let snap = e.latest_snapshot();
+        // The reconciled new vertex carries a full first-order gather,
+        // not the uniform-init placeholder.
+        let n = e.graph().num_vertices();
+        let teleport = PageRankConfig::default().teleport(n);
+        let r20 = snap.rank_of(20).expect("post-fence vertex published");
+        assert!(r20 >= teleport - 1e-12, "r20={r20} vs teleport floor {teleport}");
+        // Vertex 3 gained an in-edge from 20 — its reconciled rank must
+        // exceed what the fenced job computed for an unchanged ring slot.
+        let r4 = snap.rank_of(4).unwrap();
+        let r3 = snap.rank_of(3).unwrap();
+        assert!(r3 > r4, "the reconciled target absorbed the new in-mass: r3={r3} r4={r4}");
+    }
+
+    #[test]
+    fn vertex_removal_taints_the_single_engine_fence_log() {
+        let mut e = EngineBuilder::new().build_from_edges(ring(12)).unwrap();
+        let policy = StalenessPolicy::default();
+        e.ingest(EdgeOp::add(3, 7));
+        let (_, job) = e.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        let job = job.unwrap();
+        e.ingest(EdgeOp::RemoveVertex(5));
+        e.flush_pending();
+        let out = e.finish_recompute(job.run());
+        assert!(!out.fence_ok && !out.reconciled, "removals fall back to the plain merge");
+        assert_eq!(e.metrics().counter("recompute_fence_misses"), 1);
+        assert_eq!(e.metrics().counter("recomputes_reconciled"), 0);
     }
 
     #[test]

@@ -76,7 +76,8 @@ use std::time::{Duration, Instant};
 use crate::community::streaming::StreamingCommunities;
 use crate::coordinator::checkpoint::{CheckpointJob, CheckpointOutcome};
 use crate::coordinator::engine::{
-    AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeResult, ScheduleMode,
+    AsyncQueryResult, Engine, QueryResult, RecomputeJob, RecomputeOutcome, RecomputeResult,
+    ScheduleMode,
 };
 use crate::coordinator::policies::StalenessPolicy;
 use crate::coordinator::protocol::{Envelope, Request, Response};
@@ -93,6 +94,7 @@ use crate::stream::event::EdgeOp;
 use crate::stream::window::{SlidingWindow, WindowState};
 use crate::summary::params::SummaryParams;
 use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
 
 pub use crate::coordinator::protocol::{
     MAX_WIRE_BATCH_OPS, WIRE_PROTOCOL_V1, WIRE_PROTOCOL_VERSION,
@@ -195,14 +197,32 @@ impl EngineCore {
         }
     }
 
-    /// Install (or fence-miss-merge) a finished recompute; true = fence
-    /// hit. A result from the other engine shape cannot arise (jobs are
-    /// created by this same core); it is absorbed as a hit.
-    fn finish_recompute(&mut self, res: EngineJobResult) -> bool {
+    /// Install (or fence-miss-merge / reconcile) a finished recompute.
+    /// A result from the other engine shape cannot arise (jobs are
+    /// created by this same core); it is absorbed as a fence hit.
+    fn finish_recompute(&mut self, res: EngineJobResult) -> RecomputeOutcome {
         match (self, res) {
             (EngineCore::Single(e), EngineJobResult::Single(r)) => e.finish_recompute(*r),
             (EngineCore::Sharded(e), EngineJobResult::Sharded(r)) => e.finish_recompute(*r),
-            _ => true,
+            _ => RecomputeOutcome { fence_ok: true, reconciled: false },
+        }
+    }
+
+    /// Whether fence-missed recomputes are reconciled instead of
+    /// discarded (mirrors the engines' `set_reconcile`).
+    fn set_reconcile(&mut self, on: bool) {
+        match self {
+            EngineCore::Single(e) => e.set_reconcile(on),
+            EngineCore::Sharded(e) => e.set_reconcile(on),
+        }
+    }
+
+    /// Cumulative shard-plan cache counters (reused, rebuilt); the single
+    /// engine has no shard plan and reports zeros.
+    fn plan_counters(&self) -> (u64, u64) {
+        match self {
+            EngineCore::Single(_) => (0, 0),
+            EngineCore::Sharded(e) => e.plan_counters(),
         }
     }
 
@@ -304,10 +324,12 @@ enum EngineJob {
 }
 
 impl EngineJob {
-    fn run(self) -> EngineJobResult {
+    /// Run on the recompute worker, optionally on its dedicated pool
+    /// (`ServeOptions::recompute_workers`); `None` runs single-threaded.
+    fn run_with(self, pool: Option<&ThreadPool>) -> EngineJobResult {
         match self {
-            EngineJob::Single(j) => EngineJobResult::Single(Box::new(j.run())),
-            EngineJob::Sharded(j) => EngineJobResult::Sharded(Box::new(j.run())),
+            EngineJob::Single(j) => EngineJobResult::Single(Box::new(j.run_with(pool))),
+            EngineJob::Sharded(j) => EngineJobResult::Sharded(Box::new(j.run_with(pool))),
         }
     }
 }
@@ -346,6 +368,16 @@ pub struct WireStats {
     /// Off-thread recomputes whose result was discarded because a newer
     /// exact job superseded them while they ran.
     pub recomputes_cancelled: AtomicU64,
+    /// Fence-missed recomputes salvaged by replaying the post-fence ops
+    /// onto the fenced ranks before publishing (reconciliation).
+    pub recomputes_reconciled: AtomicU64,
+    /// Workers in the recompute worker's dedicated pool (0 = the job
+    /// runs single-threaded on the worker itself).
+    pub recompute_pool_size: AtomicUsize,
+    /// Sharded recomputes that reused the cached shard plan unchanged.
+    pub plan_reused: AtomicU64,
+    /// Sharded recomputes that (re)built at least one shard's plan.
+    pub plan_rebuilt: AtomicU64,
     /// Edges expired out of the sliding window so far.
     pub window_expired: AtomicU64,
     /// Unexpired admits currently tracked by the sliding window.
@@ -499,6 +531,12 @@ impl ServerHandle {
         let wire = Arc::new(WireStats::default());
         let gate = Arc::new(RecomputeGate::new());
         let policy = opts.policy;
+        engine.set_reconcile(opts.reconcile);
+        let reconcile = opts.reconcile;
+        // The recompute worker's own pool: a pool of < 2 workers would
+        // only add scheduling overhead, so the job runs inline instead.
+        let pool_size = if opts.recompute_workers >= 2 { opts.recompute_workers } else { 0 };
+        wire.recompute_pool_size.store(pool_size, Ordering::SeqCst);
 
         let (job_tx, job_rx) = channel::<WorkerJob>();
         let q_jobs = Arc::clone(&queue);
@@ -506,6 +544,7 @@ impl ServerHandle {
         let recompute = std::thread::Builder::new()
             .name("veilgraph-recompute".into())
             .spawn(move || {
+                let pool = (pool_size > 0).then(|| ThreadPool::new(pool_size));
                 while let Ok(job) = job_rx.recv() {
                     // Results ride the command queue ahead of capacity
                     // (control plane, at most one outstanding per kind):
@@ -516,7 +555,7 @@ impl ServerHandle {
                             if !gate2.wait_released(&q_jobs) {
                                 break;
                             }
-                            let res = job.run();
+                            let res = job.run_with(pool.as_ref());
                             if q_jobs.force_push(Command::RecomputeDone { seq, res }).is_err() {
                                 break;
                             }
@@ -642,10 +681,14 @@ impl ServerHandle {
                             // job fenced behind the current topology →
                             // only an exact job may supersede it; two
                             // outstanding (or one still current) → never
-                            // stack more.
+                            // stack more. With reconciliation on, a job
+                            // behind the fence is still salvageable (the
+                            // post-fence ops replay onto its result), so
+                            // nothing supersedes it.
                             let mode = if outstanding.is_empty() {
                                 ScheduleMode::WhenDue
-                            } else if outstanding.len() == 1
+                            } else if !reconcile
+                                && outstanding.len() == 1
                                 && outstanding[0].1 != engine.version_token()
                             {
                                 ScheduleMode::ExactOnly
@@ -690,9 +733,19 @@ impl ServerHandle {
                                 w2.recomputes_cancelled.fetch_add(1, Ordering::SeqCst);
                             } else {
                                 let refreshed = res.refreshed();
-                                if !engine.finish_recompute(res) && refreshed {
-                                    w2.recompute_fence_misses.fetch_add(1, Ordering::SeqCst);
+                                let out = engine.finish_recompute(res);
+                                if !out.fence_ok && refreshed {
+                                    if out.reconciled {
+                                        w2.recomputes_reconciled
+                                            .fetch_add(1, Ordering::SeqCst);
+                                    } else {
+                                        w2.recompute_fence_misses
+                                            .fetch_add(1, Ordering::SeqCst);
+                                    }
                                 }
+                                let (reused, rebuilt) = engine.plan_counters();
+                                w2.plan_reused.store(reused, Ordering::Relaxed);
+                                w2.plan_rebuilt.store(rebuilt, Ordering::Relaxed);
                                 publish_point = true;
                             }
                         }
@@ -949,6 +1002,16 @@ impl ServerHandle {
                 "recomputes_cancelled",
                 Json::Num(self.wire.recomputes_cancelled.load(Ordering::SeqCst) as f64),
             ),
+            (
+                "recomputes_reconciled",
+                Json::Num(self.wire.recomputes_reconciled.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "recompute_pool_size",
+                Json::Num(self.wire.recompute_pool_size.load(Ordering::SeqCst) as f64),
+            ),
+            ("plan_reused", Json::Num(self.wire.plan_reused.load(Ordering::Relaxed) as f64)),
+            ("plan_rebuilt", Json::Num(self.wire.plan_rebuilt.load(Ordering::Relaxed) as f64)),
             (
                 "window_expired",
                 Json::Num(self.wire.window_expired.load(Ordering::SeqCst) as f64),
@@ -1366,6 +1429,8 @@ pub struct ServeOptions {
     policy: StalenessPolicy,
     window_secs: f64,
     communities: bool,
+    recompute_workers: usize,
+    reconcile: bool,
 }
 
 impl Default for ServeOptions {
@@ -1379,6 +1444,8 @@ impl Default for ServeOptions {
             policy: StalenessPolicy::default(),
             window_secs: 0.0,
             communities: false,
+            recompute_workers: 0,
+            reconcile: true,
         }
     }
 }
@@ -1445,6 +1512,25 @@ impl ServeOptions {
     /// standing-analytics workload, feeding `community` subscriptions.
     pub fn communities(mut self, on: bool) -> Self {
         self.communities = on;
+        self
+    }
+
+    /// Workers in the recompute worker's dedicated [`ThreadPool`]. 0 or
+    /// 1 (the default) runs each job single-threaded on the worker
+    /// itself; ≥ 2 gives exact and pooled-exchange jobs their own pool
+    /// so they cannot starve the engine pool serving queries.
+    pub fn recompute_workers(mut self, n: usize) -> Self {
+        self.recompute_workers = n;
+        self
+    }
+
+    /// Whether fence-missed recomputes are reconciled — the post-fence
+    /// ops replayed onto the fenced ranks before publishing — instead of
+    /// merged-and-recounted as misses. On by default; turning it off
+    /// restores the supersession behaviour where an exact job may cancel
+    /// a stale in-flight one.
+    pub fn reconcile(mut self, on: bool) -> Self {
+        self.reconcile = on;
         self
     }
 }
@@ -1958,8 +2044,11 @@ mod tests {
         let engine = EngineBuilder::new().build_from_edges(edges).unwrap();
         // Every update escalates straight to exact, so the second query
         // schedules an exact successor that supersedes the pinned job.
+        // Supersession only exists with reconciliation off (on, the
+        // stale job is salvaged instead of cancelled).
         let opts = ServeOptions::new()
             .queue_capacity(64)
+            .reconcile(false)
             .policy(StalenessPolicy::new(1, 1, 8, 64, 5.0, 120.0));
         let h = ServerHandle::spawn_with(engine, &opts);
         h.hold_recompute();
@@ -1997,6 +2086,52 @@ mod tests {
         // B's installed snapshot ranks both new vertices.
         let snap = h.reader().latest();
         assert!(snap.rank_of(100).is_some() && snap.rank_of(101).is_some());
+        h.shutdown();
+    }
+
+    #[test]
+    fn fence_missed_recompute_is_reconciled_not_discarded() {
+        let edges: Vec<(u64, u64)> = (0..20).map(|i| (i, (i + 1) % 20)).collect();
+        let engine = EngineBuilder::new().build_from_edges(edges).unwrap();
+        // Reconciliation on (the default) plus a dedicated 2-worker pool:
+        // the job pinned at the gate goes stale, comes home to a fence
+        // miss, and is salvaged by replaying the post-fence op — no
+        // successor is scheduled and nothing is cancelled.
+        let opts = ServeOptions::new()
+            .queue_capacity(64)
+            .recompute_workers(2)
+            .policy(StalenessPolicy::new(1, 1, 8, 64, 5.0, 120.0));
+        let h = ServerHandle::spawn_with(engine, &opts);
+        h.hold_recompute();
+        h.ingest(EdgeOp::add(100, 0)).unwrap();
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":1}"#);
+        assert_eq!(resp.get("scheduled").unwrap().as_bool(), Some(true));
+        // The graph moves past the fence; with reconciliation on the
+        // in-flight job stays useful, so the next query stacks nothing.
+        h.ingest(EdgeOp::add(101, 0)).unwrap();
+        let (resp, _) = handle_request(&h, r#"{"op":"query","top":1}"#);
+        assert_eq!(resp.get("scheduled").unwrap().as_bool(), Some(false));
+        h.release_recompute();
+        let mut reconciled = 0;
+        for _ in 0..500 {
+            reconciled = h.wire_stats().recomputes_reconciled.load(Ordering::SeqCst);
+            if reconciled == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(reconciled, 1, "the stale job must be reconciled");
+        assert_eq!(h.wire_stats().recompute_fence_misses.load(Ordering::SeqCst), 0);
+        assert_eq!(h.wire_stats().recomputes_cancelled.load(Ordering::SeqCst), 0);
+        // The reconciled publish covers the post-fence vertex too.
+        let snap = h.reader().latest();
+        assert!(snap.rank_of(100).is_some() && snap.rank_of(101).is_some());
+        let (resp, _) = handle_request(&h, r#"{"op":"stats"}"#);
+        let server = resp.get("stats").unwrap().get("server").unwrap();
+        assert_eq!(server.get("recomputes_reconciled").unwrap().as_u64(), Some(1));
+        assert_eq!(server.get("recompute_pool_size").unwrap().as_u64(), Some(2));
+        assert_eq!(server.get("plan_reused").unwrap().as_u64(), Some(0));
+        assert_eq!(server.get("plan_rebuilt").unwrap().as_u64(), Some(0));
         h.shutdown();
     }
 
@@ -2162,7 +2297,9 @@ mod tests {
             .rate_limit(2.5)
             .overflow(OverflowPolicy::Reject)
             .window_secs(-3.0)
-            .communities(true);
+            .communities(true)
+            .recompute_workers(3)
+            .reconcile(false);
         assert_eq!(o.max_connections, 1);
         assert_eq!(o.workers, 1);
         assert_eq!(o.queue_capacity, 1);
@@ -2170,11 +2307,15 @@ mod tests {
         assert_eq!(o.overflow, OverflowPolicy::Reject);
         assert_eq!(o.window_secs, 0.0, "negative windows clamp to unbounded");
         assert!(o.communities);
+        assert_eq!(o.recompute_workers, 3);
+        assert!(!o.reconcile);
         let d = ServeOptions::default();
         assert_eq!(d.max_connections, 4096);
         assert_eq!(d.workers, 4);
         assert_eq!(d.window_secs, 0.0);
         assert!(!d.communities);
+        assert_eq!(d.recompute_workers, 0, "recompute jobs run single-threaded by default");
+        assert!(d.reconcile, "fence reconciliation is on by default");
     }
 
     #[test]

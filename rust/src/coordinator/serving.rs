@@ -20,6 +20,15 @@
 //! Snapshots are immutable once published, so torn reads are impossible
 //! by construction: version, ids, ranks and the top-K index travel in
 //! one allocation.
+//!
+//! A publish can come from three producers — an inline blocking query,
+//! an off-thread recompute whose version fence held, or a fence-missed
+//! recompute salvaged by reconciliation (the post-fence ops replayed
+//! onto its ranks before the swap; see the `recomputes_reconciled` /
+//! `plan_reused` / `plan_rebuilt` / `recompute_pool_size` gauges in the
+//! wire `stats.server` section). Readers cannot tell the difference:
+//! every snapshot is equally immutable and carries the [`Action`] and
+//! [`ExecStats`] of whatever produced it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};

@@ -21,15 +21,31 @@
 //! vector, its own [`SnapshotPublisher`] and (optionally) its own worker
 //! pool. Writes route by owner and coalesce per shard; PageRank runs as
 //! the cross-shard boundary-rank exchange
-//! ([`crate::pagerank::sharded::run_exchange`]), which converges to the
-//! same fixed point as the single engine (same teleport / dangling /
-//! `scaled_epsilon(n_total)` semantics — only floating-point summation
-//! order differs, hence the documented `L1 < 1e-6` equivalence
-//! tolerance). Reads never fan out at request time: every publish
-//! freezes per-shard owned-only snapshots *and* one combined snapshot
-//! whose global top-K is a k-way merge of the per-shard top-K indexes
-//! ([`RankSnapshot::merged`]), so `top`/`rank`/`stats` stay O(k) /
-//! O(log n) off-queue lookups.
+//! ([`crate::pagerank::sharded::run_exchange_pooled`]), which converges
+//! to the same fixed point as the single engine (same teleport /
+//! dangling / `scaled_epsilon(n_total)` semantics — only floating-point
+//! summation order differs, hence the documented `L1 < 1e-6`
+//! equivalence tolerance). Reads never fan out at request time: every
+//! publish freezes per-shard owned-only snapshots *and* one combined
+//! snapshot whose global top-K is a k-way merge of the per-shard top-K
+//! indexes ([`RankSnapshot::merged`]), so `top`/`rank`/`stats` stay
+//! O(k) / O(log n) off-queue lookups.
+//!
+//! Three pieces keep the recompute plane off the critical path:
+//!
+//! - **Pooled exchange.** The per-shard halves of every iteration run
+//!   on a cluster-level [`ThreadPool`] with fixed-shard-order
+//!   reductions, so pooled output is bit-identical to the serial
+//!   exchange at every worker count.
+//! - **Plan cache.** [`ShardPlan`] is cached keyed on the per-shard
+//!   graph versions and rebuilt incrementally — only shards whose
+//!   version moved pay the O(E_s) rebuild (`plan_reused` /
+//!   `plan_rebuilt` counters).
+//! - **Fence reconciliation.** A fence-missed off-thread exchange is no
+//!   longer discarded: the effective ops applied after the fence are
+//!   replayed as a first-order rank correction over the touched
+//!   vertices, so the published ranking absorbs the race without a
+//!   second full exchange (`recomputes_reconciled`).
 //!
 //! The server-facing surface deliberately mirrors [`Engine`]:
 //! `ingest` / `ingest_batch` / `query` / `query_async` /
@@ -44,7 +60,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::engine::{AsyncQueryResult, QueryResult, ScheduleMode};
+use crate::coordinator::engine::{
+    AsyncQueryResult, QueryResult, RecomputeOutcome, ScheduleMode, FENCE_LOG_CAP,
+};
 use crate::coordinator::policies::StalenessPolicy;
 use crate::coordinator::serving::{
     RankSnapshot, SnapshotPublisher, SnapshotReader, DEFAULT_PUBLISHED_TOP_K,
@@ -56,7 +74,7 @@ use crate::graph::partition::Partitioner;
 use crate::graph::{VertexId, VertexIdx};
 use crate::metrics::registry::MetricsRegistry;
 use crate::pagerank::power::PageRankConfig;
-use crate::pagerank::sharded::{run_exchange, ExchangeResult, ShardPlan};
+use crate::pagerank::sharded::{run_exchange_pooled, ExchangeResult, ExchangeScratch, ShardPlan};
 use crate::stream::buffer::UpdateBuffer;
 use crate::stream::event::EdgeOp;
 use crate::util::json::Json;
@@ -104,20 +122,53 @@ impl Shard {
     }
 
     /// Drain + coalesce this shard's buffer and apply the effective ops.
-    /// Returns the number of effective ops applied.
-    fn apply_now(&mut self, pr: &PageRankConfig) -> usize {
+    /// Returns the number of effective ops applied plus (when `log` is
+    /// set, i.e. a recompute fence is armed) the effective ops
+    /// themselves for the cluster fence log.
+    fn apply_now(&mut self, pr: &PageRankConfig, log: bool) -> (usize, Vec<EdgeOp>) {
         if self.buffer.is_empty() {
-            return 0;
+            return (0, Vec::new());
         }
         let batch = self.buffer.take_batch(&self.graph);
         if batch.is_empty() {
-            return 0;
+            return (0, Vec::new());
         }
+        let logged = if log { batch.ops().to_vec() } else { Vec::new() };
         let shards = match self.pool.as_deref() {
             Some(pool) => pr.effective_shards(pool),
             None => 1,
         };
-        self.graph.apply_batch(batch.ops(), self.pool.as_deref(), shards).applied
+        let applied = self.graph.apply_batch(batch.ops(), self.pool.as_deref(), shards).applied;
+        (applied, logged)
+    }
+}
+
+/// Effective ops applied after a recompute fence was captured — the
+/// reconciliation input that turns a fence miss into a cheap
+/// first-order correction instead of a discarded exchange. Tainted
+/// (and emptied) by vertex removals — reconciliation needs pre-removal
+/// adjacency the live graphs no longer have — and by growth past
+/// [`FENCE_LOG_CAP`], where replay would approach recompute cost.
+struct ShardedFenceLog {
+    /// Per-shard graph versions the paired recompute was fenced at; the
+    /// log only reconciles the job it was armed for.
+    from_versions: Vec<u64>,
+    ops: Vec<EdgeOp>,
+    tainted: bool,
+}
+
+impl ShardedFenceLog {
+    fn append(&mut self, ops: &[EdgeOp]) {
+        if self.tainted {
+            return;
+        }
+        let removes = ops.iter().any(|op| matches!(op, EdgeOp::RemoveVertex(_)));
+        if removes || self.ops.len() + ops.len() > FENCE_LOG_CAP {
+            self.tainted = true;
+            self.ops.clear();
+            return;
+        }
+        self.ops.extend_from_slice(ops);
     }
 }
 
@@ -140,7 +191,8 @@ impl ShardedEngineBuilder {
     }
 
     /// Set the PageRank configuration (shared by every shard; its
-    /// `parallelism` knob sizes each shard's *own* pool).
+    /// `parallelism` knob sizes each shard's *own* pool and the
+    /// cluster-level exchange pool).
     pub fn pagerank(mut self, c: PageRankConfig) -> Self {
         self.pr_config = c;
         self
@@ -162,6 +214,7 @@ impl ShardedEngineBuilder {
     ) -> Result<ShardedEngine> {
         let parts = Partitioner::new(self.shards);
         let shards: Vec<Shard> = (0..parts.shards()).map(|_| Shard::new(&self.pr_config)).collect();
+        let exchange_pool = pool_for_shard(&self.pr_config);
         let mut engine = ShardedEngine {
             parts,
             shards,
@@ -174,6 +227,11 @@ impl ShardedEngineBuilder {
             updates_since_refresh: 0,
             last_publish: Instant::now(),
             last_cut_edges: 0,
+            plan_cache: None,
+            scratch: None,
+            exchange_pool,
+            fence_log: None,
+            reconcile: true,
             stopped: false,
         };
         engine.metrics.set("shards", engine.parts.shards() as f64);
@@ -190,23 +248,25 @@ impl ShardedEngineBuilder {
     }
 }
 
-/// A version-fenced cross-shard recompute: per-shard graph clones plus
-/// warm rank vectors, captured at scheduling time so the exchange runs
-/// on a worker thread while the cluster keeps absorbing writes and
-/// serving reads — the sharded twin of
-/// [`crate::coordinator::engine::RecomputeJob`]. The exchange itself
-/// runs serially across shards inside the job (per-shard pools speed up
-/// the *apply* path instead); shard-level compute parallelism inside one
-/// job is future work.
+/// A version-fenced cross-shard recompute: the frozen exchange plan
+/// plus per-shard id and warm rank vectors, captured at scheduling time
+/// so the exchange runs on a worker thread while the cluster keeps
+/// absorbing writes and serving reads — the sharded twin of
+/// [`crate::coordinator::engine::RecomputeJob`]. The job carries the
+/// engine's exchange scratch with it (returned via the result), so
+/// iteration buffers are reused across recomputes instead of
+/// reallocated; [`Self::run_with`] accepts a dedicated pool so the
+/// per-shard halves of each iteration run in parallel off-thread too.
 pub struct ShardedRecomputeJob {
     decision: Action,
     query_id: u64,
     graph_versions: Vec<u64>,
     accounted_updates: u64,
-    graphs: Vec<DynamicGraph>,
+    plan: Arc<ShardPlan>,
+    ids: Vec<Vec<VertexId>>,
     warm: Vec<Vec<f64>>,
-    parts: Partitioner,
     pr_config: PageRankConfig,
+    scratch: Option<ExchangeScratch>,
 }
 
 /// One shard's recomputed ranking, keyed by external id so a fence miss
@@ -226,6 +286,7 @@ pub struct ShardedRecomputeResult {
     iterations: usize,
     cut_edges: usize,
     elapsed_secs: f64,
+    scratch: ExchangeScratch,
 }
 
 impl ShardedRecomputeJob {
@@ -241,20 +302,26 @@ impl ShardedRecomputeJob {
         self.query_id
     }
 
-    /// Run the boundary-rank exchange over the fenced per-shard graphs.
-    /// Pure compute — safe on any thread.
+    /// Run the boundary-rank exchange over the fenced plan, serially
+    /// across shards. Pure compute — safe on any thread.
     pub fn run(self) -> ShardedRecomputeResult {
+        self.run_with(None)
+    }
+
+    /// Run the boundary-rank exchange over the fenced plan, dispatching
+    /// the per-shard halves of each iteration onto `pool` (bit-identical
+    /// to [`Self::run`] at every worker count). Pure compute — safe on
+    /// any thread, as long as it is not one of `pool`'s own workers.
+    pub fn run_with(self, pool: Option<&ThreadPool>) -> ShardedRecomputeResult {
         let sw = Stopwatch::start();
-        let refs: Vec<&DynamicGraph> = self.graphs.iter().collect();
-        let plan = ShardPlan::build(&refs, &self.parts);
-        let cut_edges = plan.cut_edges();
+        let mut scratch = self.scratch.unwrap_or_default();
         let ExchangeResult { ranks, iterations, .. } =
-            run_exchange(&plan, &self.pr_config, Some(self.warm));
+            run_exchange_pooled(&self.plan, &self.pr_config, Some(self.warm), pool, &mut scratch);
         let per_shard = self
-            .graphs
-            .iter()
+            .ids
+            .into_iter()
             .zip(ranks)
-            .map(|(g, ranks)| ShardRanks { ids: g.ids().to_vec(), ranks })
+            .map(|(ids, ranks)| ShardRanks { ids, ranks })
             .collect();
         ShardedRecomputeResult {
             query_id: self.query_id,
@@ -262,8 +329,9 @@ impl ShardedRecomputeJob {
             accounted_updates: self.accounted_updates,
             per_shard,
             iterations,
-            cut_edges,
+            cut_edges: self.plan.cut_edges(),
             elapsed_secs: sw.secs(),
+            scratch,
         }
     }
 }
@@ -303,6 +371,25 @@ pub struct ShardedEngine {
     /// Cut edges of the most recent exchange (the boundary-exchange
     /// volume gauge).
     last_cut_edges: usize,
+    /// Cached exchange plan keyed on the per-shard graph versions it
+    /// was built from — reused verbatim while no shard's topology
+    /// moves, incrementally rebuilt (dirty shards only) otherwise.
+    plan_cache: Option<(Arc<ShardPlan>, Vec<u64>)>,
+    /// Exchange working memory (contribution / accumulator / inbox
+    /// buffers) carried across recomputes — the sharded analogue of
+    /// `SummaryScratch`. Taken by off-thread jobs and handed back
+    /// through their results.
+    scratch: Option<ExchangeScratch>,
+    /// Cluster-level pool the pooled exchange dispatches per-shard
+    /// halves onto (sized by `pr_config.parallelism`, like the
+    /// per-shard apply pools).
+    exchange_pool: Option<Arc<ThreadPool>>,
+    /// Post-fence effective ops, armed per recompute while
+    /// reconciliation is on.
+    fence_log: Option<ShardedFenceLog>,
+    /// Reconcile fence-missed recomputes instead of discarding their
+    /// staleness accounting to a plain merge.
+    reconcile: bool,
     stopped: bool,
 }
 
@@ -334,8 +421,10 @@ impl ShardedEngine {
 
     /// Drain + apply every shard's pending buffer. Shards apply
     /// independently (scoped threads when more than one shard has work —
-    /// the scale-out of the write path), and the per-shard effective-op
-    /// counts sum into the cluster staleness signal.
+    /// the scale-out of the write path), the per-shard effective-op
+    /// counts sum into the cluster staleness signal, and — while a
+    /// recompute fence is armed — the effective ops append to the fence
+    /// log in shard order for deterministic reconciliation.
     fn apply_pending(&mut self) {
         let with_work = self.shards.iter().filter(|s| !s.buffer.is_empty()).count();
         if with_work == 0 {
@@ -343,18 +432,25 @@ impl ShardedEngine {
         }
         let sw = Stopwatch::start();
         let pr = self.pr_config;
-        let applied: u64 = if with_work == 1 {
-            self.shards.iter_mut().map(|sh| sh.apply_now(&pr) as u64).sum()
+        let log = self.fence_log.is_some();
+        let results: Vec<(usize, Vec<EdgeOp>)> = if with_work == 1 {
+            self.shards.iter_mut().map(|sh| sh.apply_now(&pr, log)).collect()
         } else {
             std::thread::scope(|sc| {
                 let handles: Vec<_> = self
                     .shards
                     .iter_mut()
-                    .map(|sh| sc.spawn(move || sh.apply_now(&pr)))
+                    .map(|sh| sc.spawn(move || sh.apply_now(&pr, log)))
                     .collect();
-                handles.into_iter().map(|h| h.join().expect("shard apply panicked") as u64).sum()
+                handles.into_iter().map(|h| h.join().expect("shard apply panicked")).collect()
             })
         };
+        let applied: u64 = results.iter().map(|(a, _)| *a as u64).sum();
+        if let Some(flog) = &mut self.fence_log {
+            for (_, ops) in results {
+                flog.append(&ops);
+            }
+        }
         self.metrics.time("ingest_apply_secs", sw.secs());
         self.metrics.inc("applies", 1);
         self.updates_since_refresh += applied;
@@ -393,16 +489,52 @@ impl ShardedEngine {
 
     // ---- compute -------------------------------------------------------
 
-    /// Freeze the exchange topology from the live shard graphs and run
-    /// the boundary exchange inline, warm-started from the current
-    /// per-shard rank vectors. Returns the result plus the cut-edge
-    /// count of the frozen plan.
-    fn run_exchange_now(&self) -> (ExchangeResult, usize) {
-        let refs: Vec<&DynamicGraph> = self.shards.iter().map(|s| &s.graph).collect();
-        let plan = ShardPlan::build(&refs, &self.parts);
+    /// The exchange plan for the current per-shard topology, from the
+    /// cache when no shard's graph version moved, otherwise rebuilt
+    /// incrementally (clean shards keep their scatter/gather tables —
+    /// sound because [`DynamicGraph`] never reassigns a live vertex's
+    /// dense index).
+    fn ensure_plan(&mut self) -> Arc<ShardPlan> {
+        let versions: Vec<u64> = self.shards.iter().map(|s| s.graph.version()).collect();
+        if let Some((plan, cached)) = &self.plan_cache {
+            if *cached == versions {
+                self.metrics.inc("plan_reused", 1);
+                return Arc::clone(plan);
+            }
+        }
+        let graphs: Vec<&DynamicGraph> = self.shards.iter().map(|s| &s.graph).collect();
+        let plan = match self.plan_cache.take() {
+            Some((mut plan, cached)) => {
+                let dirty: Vec<bool> =
+                    cached.iter().zip(&versions).map(|(a, b)| a != b).collect();
+                Arc::make_mut(&mut plan).rebuild_shards(&graphs, &self.parts, &dirty);
+                plan
+            }
+            None => Arc::new(ShardPlan::build(&graphs, &self.parts)),
+        };
+        self.metrics.inc("plan_rebuilt", 1);
+        self.plan_cache = Some((Arc::clone(&plan), versions));
+        plan
+    }
+
+    /// Freeze the exchange topology from the live shard graphs (via the
+    /// plan cache) and run the pooled boundary exchange inline,
+    /// warm-started from the current per-shard rank vectors. Returns
+    /// the result plus the cut-edge count of the frozen plan.
+    fn run_exchange_now(&mut self) -> (ExchangeResult, usize) {
+        let plan = self.ensure_plan();
         let cut = plan.cut_edges();
         let warm: Vec<Vec<f64>> = self.shards.iter().map(|s| s.ranks.clone()).collect();
-        (run_exchange(&plan, &self.pr_config, Some(warm)), cut)
+        let mut scratch = self.scratch.take().unwrap_or_default();
+        let ex = run_exchange_pooled(
+            &plan,
+            &self.pr_config,
+            Some(warm),
+            self.exchange_pool.as_deref(),
+            &mut scratch,
+        );
+        self.scratch = Some(scratch);
+        (ex, cut)
     }
 
     /// Install exchange output as the live per-shard rankings and publish
@@ -514,46 +646,74 @@ impl ShardedEngine {
     }
 
     /// Capture a version-fenced [`ShardedRecomputeJob`], taking ownership
-    /// of the accumulated-updates signal it accounts for.
+    /// of the accumulated-updates signal it accounts for. Arms the fence
+    /// log when reconciliation is on, so writes landing while the job is
+    /// in flight stay replayable.
     fn begin_recompute(&mut self, decision: Action, query_id: u64) -> ShardedRecomputeJob {
         let accounted_updates = self.updates_since_refresh;
         self.updates_since_refresh = 0;
         self.metrics.inc("recomputes_scheduled", 1);
+        let plan = self.ensure_plan();
+        let graph_versions: Vec<u64> = self.shards.iter().map(|s| s.graph.version()).collect();
+        if self.reconcile {
+            self.fence_log = Some(ShardedFenceLog {
+                from_versions: graph_versions.clone(),
+                ops: Vec::new(),
+                tainted: false,
+            });
+        }
         ShardedRecomputeJob {
             decision,
             query_id,
-            graph_versions: self.shards.iter().map(|s| s.graph.version()).collect(),
+            graph_versions,
             accounted_updates,
-            graphs: self.shards.iter().map(|s| s.graph.clone()).collect(),
+            plan,
+            ids: self.shards.iter().map(|s| s.graph.ids().to_vec()).collect(),
             warm: self.shards.iter().map(|s| s.ranks.clone()).collect(),
-            parts: self.parts,
             pr_config: self.pr_config,
+            scratch: self.scratch.take(),
         }
     }
 
     /// Integrate an off-thread exchange back into the cluster and
-    /// publish. Returns true when the fence held on *every* shard; on a
-    /// fence miss the fenced rankings merge by vertex id into the moved
-    /// shard graphs (same semantics as [`Engine::finish_recompute`]).
-    ///
-    /// [`Engine::finish_recompute`]: crate::coordinator::engine::Engine::finish_recompute
-    pub fn finish_recompute(&mut self, res: ShardedRecomputeResult) -> bool {
+    /// publish. `fence_ok` reports whether the fence held on *every*
+    /// shard; on a miss the fenced rankings merge by vertex id into the
+    /// moved shard graphs and — when the armed fence log is clean — the
+    /// post-fence ops replay as a first-order rank correction
+    /// (`reconciled`), so the miss does not cost a second exchange.
+    pub fn finish_recompute(&mut self, res: ShardedRecomputeResult) -> RecomputeOutcome {
         self.metrics.inc("recomputes_offthread", 1);
         self.metrics.time("recompute_offthread_secs", res.elapsed_secs);
+        self.scratch = Some(res.scratch);
+        let log = self.fence_log.take();
         let fence_ok = res.graph_versions.len() == self.shards.len()
             && res.graph_versions.iter().zip(&self.shards).all(|(&v, sh)| v == sh.graph.version());
+        let mut reconciled = false;
         if fence_ok {
             for (sh, sr) in self.shards.iter_mut().zip(res.per_shard) {
                 sh.ranks = sr.ranks;
             }
         } else {
-            self.metrics.inc("recompute_fence_misses", 1);
             self.extend_ranks();
             for (sh, sr) in self.shards.iter_mut().zip(res.per_shard) {
                 for (id, r) in sr.ids.iter().zip(&sr.ranks) {
                     if let Some(idx) = sh.graph.index(*id) {
                         sh.ranks[idx as usize] = *r;
                     }
+                }
+            }
+            match log {
+                Some(log)
+                    if self.reconcile
+                        && !log.tainted
+                        && log.from_versions == res.graph_versions =>
+                {
+                    self.reconcile_touched(&log.ops);
+                    self.metrics.inc("recomputes_reconciled", 1);
+                    reconciled = true;
+                }
+                _ => {
+                    self.metrics.inc("recompute_fence_misses", 1);
                 }
             }
         }
@@ -565,7 +725,89 @@ impl ShardedEngine {
             ..ExecStats::default()
         };
         self.publish_all(res.query_id, Action::ComputeExact, exec, true);
-        fence_ok
+        RecomputeOutcome { fence_ok, reconciled }
+    }
+
+    /// Replay post-fence ops as a first-order rank correction: every
+    /// vertex whose in-mass an op changed (endpoints plus the source's
+    /// current out-neighbors, whose per-edge share moved with the
+    /// out-degree) gets one gather
+    /// `teleport + β·Σ_{w∈in(v)} r_w / d_out(w) + dangling-share`
+    /// from a frozen base, writes applied after the sweep so the pass
+    /// is order-independent. In-neighbors in any shard are always that
+    /// shard's owned sources (edges live at their source's owner), so
+    /// summing across the shards that know `v` counts each in-edge
+    /// exactly once.
+    fn reconcile_touched(&mut self, ops: &[EdgeOp]) {
+        use std::collections::BTreeSet;
+        let parts = self.parts;
+        let mut touched: BTreeSet<VertexId> = BTreeSet::new();
+        for op in ops {
+            match *op {
+                EdgeOp::AddEdge(u, d) | EdgeOp::RemoveEdge(u, d) => {
+                    touched.insert(u);
+                    touched.insert(d);
+                    let g = &self.shards[parts.shard_of(u)].graph;
+                    if let Some(ui) = g.index(u) {
+                        for &w in g.out_neighbors(ui) {
+                            touched.insert(g.id(w));
+                        }
+                    }
+                }
+                EdgeOp::AddVertex(v) => {
+                    touched.insert(v);
+                }
+                EdgeOp::RemoveVertex(_) => unreachable!("tainted fence log reached reconciliation"),
+            }
+        }
+        if touched.is_empty() {
+            return;
+        }
+        // Global owned count + dangling mass over the merged base ranks.
+        let mut n = 0usize;
+        let mut dangling_mass = 0.0;
+        for (s, sh) in self.shards.iter().enumerate() {
+            for u in 0..sh.graph.num_vertices() as VertexIdx {
+                if parts.shard_of(sh.graph.id(u)) != s {
+                    continue;
+                }
+                n += 1;
+                if sh.graph.out_degree(u) == 0 {
+                    dangling_mass += sh.ranks[u as usize];
+                }
+            }
+        }
+        if n == 0 {
+            return;
+        }
+        let cfg = &self.pr_config;
+        let teleport = cfg.teleport(n);
+        let share =
+            if cfg.dangling_redistribution { cfg.beta * dangling_mass / n as f64 } else { 0.0 };
+        let mut fixes: Vec<(usize, VertexIdx, f64)> = Vec::with_capacity(touched.len());
+        for &vid in &touched {
+            let owner = parts.shard_of(vid);
+            let Some(idx) = self.shards[owner].graph.index(vid) else {
+                continue; // coalesced away before the fence resolved
+            };
+            let mut in_mass = 0.0;
+            for sh in &self.shards {
+                if let Some(li) = sh.graph.index(vid) {
+                    for &w in sh.graph.in_neighbors(li) {
+                        let d = sh.graph.out_degree(w);
+                        if d > 0 {
+                            in_mass += sh.ranks[w as usize] / d as f64;
+                        }
+                    }
+                }
+            }
+            fixes.push((owner, idx, teleport + cfg.beta * in_mass + share));
+        }
+        let fixed = fixes.len() as u64;
+        for (owner, idx, x) in fixes {
+            self.shards[owner].ranks[idx as usize] = x;
+        }
+        self.metrics.inc("reconciled_vertices", fixed);
     }
 
     // ---- publish -------------------------------------------------------
@@ -677,6 +919,21 @@ impl ShardedEngine {
         self.last_cut_edges
     }
 
+    /// Plan-cache effectiveness counters: `(reused, rebuilt)`.
+    pub fn plan_counters(&self) -> (u64, u64) {
+        (self.metrics.counter("plan_reused"), self.metrics.counter("plan_rebuilt"))
+    }
+
+    /// Toggle fence reconciliation (on by default). Off restores the
+    /// PR-9 behavior: a fence miss merges by id and counts a
+    /// `recompute_fence_misses`.
+    pub fn set_reconcile(&mut self, on: bool) {
+        self.reconcile = on;
+        if !on {
+            self.fence_log = None;
+        }
+    }
+
     /// A cheap monotone token over the whole cluster's topology (sum of
     /// per-shard graph versions) — moves whenever any shard's graph
     /// moves. The sharded analogue of `graph().version()` for the
@@ -755,7 +1012,7 @@ mod tests {
         assert!(a.snapshot.rank_of(40).is_some());
         let before = engine.latest_snapshot().version;
         let res = job.unwrap().run();
-        assert!(engine.finish_recompute(res), "no writes moved the fence");
+        assert!(engine.finish_recompute(res).fence_ok, "no writes moved the fence");
         assert!(engine.latest_snapshot().version > before);
         // Never mode records the decision but schedules nothing.
         engine.ingest(EdgeOp::AddEdge(41, 40));
@@ -767,6 +1024,7 @@ mod tests {
     #[test]
     fn fence_miss_merges_by_id() {
         let mut engine = ShardedEngineBuilder::new(2).build_from_edges(test_edges()).unwrap();
+        engine.set_reconcile(false);
         let policy = StalenessPolicy::default();
         engine.ingest(EdgeOp::AddEdge(50, 1));
         let (_, job) = engine.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
@@ -776,10 +1034,63 @@ mod tests {
         engine.ingest(EdgeOp::AddEdge(51, 50));
         engine.apply_pending();
         let res = job.run();
-        assert!(!engine.finish_recompute(res));
+        assert!(!engine.finish_recompute(res).fence_ok);
         assert_eq!(engine.metrics().counter("recompute_fence_misses"), 1);
         let snap = engine.latest_snapshot();
         assert!(snap.rank_of(50).is_some());
         assert!(snap.rank_of(51).is_some());
+    }
+
+    #[test]
+    fn fence_miss_reconciles_instead_of_discarding() {
+        let mut engine = ShardedEngineBuilder::new(2).build_from_edges(test_edges()).unwrap();
+        let policy = StalenessPolicy::default();
+        engine.ingest(EdgeOp::AddEdge(50, 1));
+        let (_, job) = engine.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        let job = job.unwrap();
+        // Post-fence writes land while the job runs: with the fence log
+        // armed, the miss reconciles instead of counting as a miss.
+        engine.ingest(EdgeOp::AddEdge(51, 50));
+        engine.flush_pending();
+        let out = engine.finish_recompute(job.run());
+        assert!(!out.fence_ok && out.reconciled);
+        assert_eq!(engine.metrics().counter("recomputes_reconciled"), 1);
+        assert_eq!(engine.metrics().counter("recompute_fence_misses"), 0);
+        assert!(engine.metrics().counter("reconciled_vertices") >= 2);
+        let snap = engine.latest_snapshot();
+        let r50 = snap.rank_of(50).expect("fenced vertex kept its rank");
+        let r51 = snap.rank_of(51).expect("post-fence vertex got a reconciled rank");
+        // A reconciled rank is a full first-order gather: at least the
+        // teleport floor, not the uniform-init placeholder semantics.
+        let teleport = PageRankConfig::default().teleport(snap.ids.len());
+        assert!(r50 > 0.0 && r51 >= teleport - 1e-12, "r50={r50} r51={r51}");
+    }
+
+    #[test]
+    fn vertex_removal_taints_the_fence_log() {
+        let mut engine = ShardedEngineBuilder::new(2).build_from_edges(test_edges()).unwrap();
+        let policy = StalenessPolicy::default();
+        engine.ingest(EdgeOp::AddEdge(50, 1));
+        let (_, job) = engine.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        let job = job.unwrap();
+        // Removals need pre-removal adjacency the live graphs no longer
+        // have — the log taints and the miss falls back to the merge.
+        engine.ingest(EdgeOp::RemoveVertex(5));
+        engine.flush_pending();
+        let out = engine.finish_recompute(job.run());
+        assert!(!out.fence_ok && !out.reconciled, "removals must fall back to the plain merge");
+        assert_eq!(engine.metrics().counter("recompute_fence_misses"), 1);
+        assert_eq!(engine.metrics().counter("recomputes_reconciled"), 0);
+    }
+
+    #[test]
+    fn plan_cache_reuses_until_topology_moves() {
+        let mut engine = ShardedEngineBuilder::new(3).build_from_edges(test_edges()).unwrap();
+        assert_eq!(engine.plan_counters(), (0, 1), "initial exchange builds the plan");
+        engine.query().unwrap();
+        assert_eq!(engine.plan_counters(), (1, 1), "unchanged topology reuses the plan");
+        engine.ingest(EdgeOp::AddEdge(60, 0));
+        engine.query().unwrap();
+        assert_eq!(engine.plan_counters(), (1, 2), "a moved shard version rebuilds");
     }
 }

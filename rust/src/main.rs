@@ -126,6 +126,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some("batch"),
         )
         .opt("checkpoint-every", "applied batches between checkpoints", Some("64"))
+        .opt(
+            "recompute-workers",
+            "dedicated recompute-pool workers (0/1 = run jobs single-threaded)",
+            Some("0"),
+        )
+        .flag(
+            "no-reconcile",
+            "discard fence-missed recomputes instead of replaying post-fence ops",
+        )
         .flag("communities", "run streaming label propagation as a second standing workload")
         .flag("no-xla", "force the sparse executor")
         .flag("help", "show usage");
@@ -142,7 +151,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .max_connections(p.req_parse::<usize>("max-conns")?)
         .rate_limit(p.req_parse::<f64>("rate-limit")?)
         .window_secs(p.req_parse::<f64>("window")?)
-        .communities(p.flag("communities"));
+        .communities(p.flag("communities"))
+        .recompute_workers(p.req_parse::<usize>("recompute-workers")?)
+        .reconcile(!p.flag("no-reconcile"));
     if let Some(policy) = p.get_parse::<StalenessPolicy>("policy")? {
         opts = opts.policy(policy);
     }

@@ -3,21 +3,34 @@
 //!
 //! Each shard owns the out-edges of its vertices (source-routed
 //! partition, [`crate::graph::partition::Partitioner`]). One global
-//! power-method iteration becomes, per shard:
+//! power-method iteration becomes three per-shard half-steps:
 //!
 //! 1. **Scatter** — scale every owned source once: `c_u = r_u /
-//!    d_out(u)`. `d_out` is exact because all of `u`'s out-edges live on
-//!    its owner.
-//! 2. **Local gather** — accumulate `c_u` over internal edges (both
-//!    endpoints owned here).
-//! 3. **Boundary exchange** — accumulate `c_u` over cut edges into the
-//!    destination shard's [`RemoteAggregate`] inbox (the remote shard is
+//!    d_out(u)` (`d_out` is exact because all of `u`'s out-edges live on
+//!    its owner), and partial-sum the dangling mass over the plan's
+//!    precomputed dangling list.
+//! 2. **Gather** — per *destination* shard: internal edges accumulate
+//!    `c_u` directly into the gather slots; cut edges fold into the
+//!    destination's [`RemoteAggregate`] inbox (the remote shard is
 //!    "just another big vertex": per-target rolled-up boundary mass,
 //!    exactly the `b_z` shape of `summary/bigvertex.rs`, except
-//!    re-exchanged every iteration instead of frozen once).
-//! 4. **Apply** — `next_v = teleport + β·(local_v + inbox_v) [+
-//!    dangling]` for owned `v`; per-shard L1 deltas reduce in shard
-//!    order into the global convergence test.
+//!    re-exchanged every iteration instead of frozen once). Source
+//!    shards are visited in shard order, so every slot sums its in-mass
+//!    in one fixed order.
+//! 3. **Apply** — `next_v = teleport + β·(local_v + inbox_v) [+
+//!    dangling]` for owned `v`, zeroing each touched gather slot on the
+//!    way out (the hoisted zero-fill: untouched slots are already zero,
+//!    so no per-iteration `memset` remains); per-shard L1 deltas reduce
+//!    in shard order into the global convergence test.
+//!
+//! Each half-step writes one shard's state only, so
+//! [`run_exchange_pooled`] fans the shards out on a [`ThreadPool`] via
+//! `scope_chunks`, with the boundary-inbox exchange and the
+//! dangling-mass / L1 reductions as the only synchronization points.
+//! Per-shard partials come back in shard order and fold left-to-right
+//! whether the phases ran inline or pooled, so the pooled exchange is
+//! **bit-identical** to the serial one at every worker count
+//! (property-tested for 1, 2, 4 and 7 workers).
 //!
 //! Every owned vertex receives exactly the contributions the
 //! single-engine gather sums for it, under the same teleport, init,
@@ -33,16 +46,27 @@ use crate::graph::partition::Partitioner;
 use crate::graph::VertexIdx;
 use crate::pagerank::power::PageRankConfig;
 use crate::summary::bigvertex::RemoteAggregate;
+use crate::util::threadpool::ThreadPool;
 
 /// The frozen exchange topology for one recompute: per-shard internal
 /// edge lists plus cut-edge lists pre-resolved to *destination-local*
 /// indices, so the iteration loop never touches an id map.
+///
+/// Plans are rebuildable per shard ([`ShardPlan::rebuild_shards`]):
+/// only the shards whose graph moved are re-derived, which is sound
+/// because [`DynamicGraph`] never reuses or shifts dense indices (adds
+/// append, removals keep the slot) — a clean shard's cached
+/// destination-local indices into a rebuilt shard stay valid.
 #[derive(Clone, Debug)]
 pub struct ShardPlan {
     /// Per shard: local indices of the vertices it owns (ghosts skipped).
     owned: Vec<Vec<VertexIdx>>,
     /// Per shard: `1/d_out` per local index (0 for dangling and ghosts).
     inv_out: Vec<Vec<f64>>,
+    /// Per shard: owned vertices with no out-edges, in owned order — the
+    /// per-iteration dangling-mass pass reads this list instead of
+    /// re-scanning every owned vertex's `inv_out`.
+    dangling: Vec<Vec<VertexIdx>>,
     /// Per shard: internal edges `(src_local, dst_local)`.
     internal: Vec<Vec<(VertexIdx, VertexIdx)>>,
     /// `cross[s][t]`: cut edges from shard `s` into shard `t`, as
@@ -57,53 +81,117 @@ pub struct ShardPlan {
     cut_edges: usize,
 }
 
+/// One shard's freshly derived slice of a plan.
+struct ShardTopo {
+    owned: Vec<VertexIdx>,
+    inv_out: Vec<f64>,
+    dangling: Vec<VertexIdx>,
+    internal: Vec<(VertexIdx, VertexIdx)>,
+    /// Cut edges out of this shard, per destination shard.
+    cross_out: Vec<Vec<(VertexIdx, VertexIdx)>>,
+    len: usize,
+}
+
+/// Derive one shard's topology slice. Ownership is re-derived from the
+/// partitioner (ghosts are skipped), and each cut edge resolves its
+/// destination in the owner's graph — an invariant of source-routing
+/// (`AddEdge` notifies the destination owner), so an unresolvable
+/// destination is a routing bug and panics.
+fn build_shard(s: usize, graphs: &[&DynamicGraph], parts: &Partitioner) -> ShardTopo {
+    let k = graphs.len();
+    let g = graphs[s];
+    let n = g.num_vertices();
+    let mut topo = ShardTopo {
+        owned: Vec::new(),
+        inv_out: vec![0.0f64; n],
+        dangling: Vec::new(),
+        internal: Vec::new(),
+        cross_out: vec![Vec::new(); k],
+        len: n,
+    };
+    for u in 0..n as VertexIdx {
+        if parts.shard_of(g.id(u)) != s {
+            continue; // ghost: no out-edges, not owned here
+        }
+        topo.owned.push(u);
+        let d = g.out_degree(u);
+        if d > 0 {
+            topo.inv_out[u as usize] = 1.0 / d as f64;
+        } else {
+            topo.dangling.push(u);
+        }
+        for &v in g.out_neighbors(u) {
+            let vid = g.id(v);
+            let t = parts.shard_of(vid);
+            if t == s {
+                topo.internal.push((u, v));
+            } else {
+                let dst_local = graphs[t]
+                    .index(vid)
+                    .expect("cut-edge destination unknown to its owner shard");
+                topo.cross_out[t].push((u, dst_local));
+            }
+        }
+    }
+    topo
+}
+
 impl ShardPlan {
-    /// Freeze the exchange topology from per-shard graphs. Ownership is
-    /// re-derived from the partitioner (ghosts are skipped), and each cut
-    /// edge resolves its destination in the owner's graph — an invariant
-    /// of source-routing (`AddEdge` notifies the destination owner), so
-    /// an unresolvable destination is a routing bug and panics in debug.
+    /// Freeze the exchange topology from per-shard graphs.
     pub fn build(graphs: &[&DynamicGraph], parts: &Partitioner) -> Self {
         let k = graphs.len();
         assert_eq!(k, parts.shards(), "one graph per shard");
-        let mut owned = vec![Vec::new(); k];
-        let mut inv_out = Vec::with_capacity(k);
-        let mut internal = vec![Vec::new(); k];
-        let mut cross = vec![vec![Vec::new(); k]; k];
-        let mut len = Vec::with_capacity(k);
-        let mut n_total = 0usize;
-        let mut cut_edges = 0usize;
-        for (s, g) in graphs.iter().enumerate() {
-            let n = g.num_vertices();
-            len.push(n);
-            let mut inv = vec![0.0f64; n];
-            for u in 0..n as VertexIdx {
-                if parts.shard_of(g.id(u)) != s {
-                    continue; // ghost: no out-edges, not owned here
-                }
-                owned[s].push(u);
-                n_total += 1;
-                let d = g.out_degree(u);
-                if d > 0 {
-                    inv[u as usize] = 1.0 / d as f64;
-                }
-                for &v in g.out_neighbors(u) {
-                    let vid = g.id(v);
-                    let t = parts.shard_of(vid);
-                    if t == s {
-                        internal[s].push((u, v));
-                    } else {
-                        let dst_local = graphs[t]
-                            .index(vid)
-                            .expect("cut-edge destination unknown to its owner shard");
-                        cross[s][t].push((u, dst_local));
-                        cut_edges += 1;
-                    }
-                }
-            }
-            inv_out.push(inv);
+        let mut plan = Self {
+            owned: vec![Vec::new(); k],
+            inv_out: vec![Vec::new(); k],
+            dangling: vec![Vec::new(); k],
+            internal: vec![Vec::new(); k],
+            cross: vec![Vec::new(); k],
+            len: vec![0; k],
+            n_total: 0,
+            cut_edges: 0,
+        };
+        for s in 0..k {
+            plan.install_shard(s, build_shard(s, graphs, parts));
         }
-        Self { owned, inv_out, internal, cross, len, n_total, cut_edges }
+        plan.refresh_totals();
+        plan
+    }
+
+    /// Re-derive the topology of exactly the `dirty` shards, keeping
+    /// every clean shard's slice — including its cut-edge lists into
+    /// rebuilt shards, whose destination-local indices are append-stable
+    /// by the [`DynamicGraph`] index contract. The cluster-wide
+    /// aggregates are refreshed from the merged state.
+    pub fn rebuild_shards(
+        &mut self,
+        graphs: &[&DynamicGraph],
+        parts: &Partitioner,
+        dirty: &[bool],
+    ) {
+        let k = self.len.len();
+        assert_eq!(graphs.len(), k, "one graph per shard");
+        assert_eq!(dirty.len(), k, "one dirty flag per shard");
+        for (s, &moved) in dirty.iter().enumerate() {
+            if moved {
+                self.install_shard(s, build_shard(s, graphs, parts));
+            }
+        }
+        self.refresh_totals();
+    }
+
+    fn install_shard(&mut self, s: usize, topo: ShardTopo) {
+        self.owned[s] = topo.owned;
+        self.inv_out[s] = topo.inv_out;
+        self.dangling[s] = topo.dangling;
+        self.internal[s] = topo.internal;
+        self.cross[s] = topo.cross_out;
+        self.len[s] = topo.len;
+    }
+
+    fn refresh_totals(&mut self) {
+        self.n_total = self.owned.iter().map(|o| o.len()).sum();
+        self.cut_edges = self.cross.iter().flat_map(|row| row.iter().map(Vec::len)).sum();
     }
 
     /// Union of owned vertices across shards (the single-engine `|V|`).
@@ -120,10 +208,70 @@ impl ShardPlan {
     pub fn owned_in(&self, shard: usize) -> usize {
         self.owned[shard].len()
     }
+
+    /// Number of shards the plan spans.
+    pub fn shards(&self) -> usize {
+        self.len.len()
+    }
+}
+
+/// Reusable per-shard exchange buffers: the scatter contributions, the
+/// gather slots, the next-rank vectors and the [`RemoteAggregate`]
+/// inboxes. Owned by the caller (the sharded engine keeps one, like its
+/// `SummaryScratch`) so repeated recomputes reuse the allocations
+/// instead of rebuilding them per run; [`run_exchange_pooled`] sizes and
+/// zeroes everything it needs on entry, so a scratch can move freely
+/// between plans of different shapes.
+#[derive(Debug, Default)]
+pub struct ExchangeScratch {
+    /// Per shard: `r_u / d_out(u)` per local index, rewritten each
+    /// iteration.
+    contrib: Vec<Vec<f64>>,
+    slots: Vec<ShardSlot>,
+}
+
+/// One shard's mutable half of an iteration — everything the gather and
+/// apply phases write, grouped so the pool can hand each shard's slot to
+/// exactly one worker.
+#[derive(Debug, Default)]
+struct ShardSlot {
+    /// Local-gather accumulator; zero outside the apply phase.
+    acc: Vec<f64>,
+    /// The rank vector under construction this iteration.
+    next: Vec<f64>,
+    /// Boundary mass exchanged into this shard.
+    inbox: RemoteAggregate,
+}
+
+impl ExchangeScratch {
+    /// An empty scratch; buffers materialize on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for `plan`, zeroing carried values. Reuse keeps
+    /// the allocations; only a grown shard reallocates.
+    fn ensure(&mut self, plan: &ShardPlan) {
+        let k = plan.len.len();
+        self.contrib.resize_with(k, Vec::new);
+        self.slots.resize_with(k, ShardSlot::default);
+        for (s, &l) in plan.len.iter().enumerate() {
+            let c = &mut self.contrib[s];
+            c.clear();
+            c.resize(l, 0.0);
+            let slot = &mut self.slots[s];
+            slot.acc.clear();
+            slot.acc.resize(l, 0.0);
+            slot.next.clear();
+            slot.next.resize(l, 0.0);
+            slot.inbox.reset(l);
+        }
+    }
 }
 
 /// Result of one exchange run: per-shard rank vectors in local dense
-/// order (ghost slots untouched), plus the usual power-method telemetry.
+/// order (ghost slots are never published), plus the usual power-method
+/// telemetry.
 #[derive(Clone, Debug)]
 pub struct ExchangeResult {
     /// Rank per shard, indexed by local dense index.
@@ -134,19 +282,54 @@ pub struct ExchangeResult {
     pub last_delta: f64,
 }
 
-/// Run the boundary-exchange power method over a frozen [`ShardPlan`].
+/// Run `f` once per shard: inline in shard order without a pool, fanned
+/// out via `scope_chunks` over one-element chunks with one. Results come
+/// back in shard order either way, so reductions folded over the
+/// returned vector are bit-identical at every worker count.
+fn dispatch<T, R, F>(pool: Option<&ThreadPool>, data: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    match pool {
+        Some(pool) if data.len() > 1 => {
+            let cuts: Vec<usize> = (0..=data.len()).collect();
+            pool.scope_chunks(data, &cuts, |s, chunk| f(s, &mut chunk[0]))
+        }
+        _ => data.iter_mut().enumerate().map(|(s, x)| f(s, x)).collect(),
+    }
+}
+
+/// Run the boundary-exchange power method over a frozen [`ShardPlan`],
+/// serially and with one-shot scratch buffers. Equivalent to
+/// [`run_exchange_pooled`] with no pool — kept as the simple entry point
+/// for tests and one-off runs.
+pub fn run_exchange(
+    plan: &ShardPlan,
+    cfg: &PageRankConfig,
+    warm: Option<Vec<Vec<f64>>>,
+) -> ExchangeResult {
+    run_exchange_pooled(plan, cfg, warm, None, &mut ExchangeScratch::new())
+}
+
+/// Run the boundary-exchange power method over a frozen [`ShardPlan`],
+/// fanning the per-shard half-steps of each iteration out on `pool`
+/// (inline in shard order when `pool` is `None` — same code path, same
+/// floats) and reusing `scratch` buffers across calls.
 ///
 /// `warm` seeds per-shard rank vectors (local dense order); shards whose
 /// vector is missing or mis-sized fall back to the uniform init — the
 /// same warm-start contract as [`crate::pagerank::power::PageRank`]'s
 /// `run_from`, degraded per shard instead of panicking because shard
 /// graphs can grow independently between recomputes.
-pub fn run_exchange(
+pub fn run_exchange_pooled(
     plan: &ShardPlan,
     cfg: &PageRankConfig,
     warm: Option<Vec<Vec<f64>>>,
+    pool: Option<&ThreadPool>,
+    scratch: &mut ExchangeScratch,
 ) -> ExchangeResult {
-    let k = plan.len.len();
     let n = plan.n_total;
     if n == 0 {
         return ExchangeResult {
@@ -155,6 +338,7 @@ pub fn run_exchange(
             last_delta: 0.0,
         };
     }
+    let k = plan.len.len();
     let teleport = cfg.teleport(n);
     let epsilon = cfg.scaled_epsilon(n);
     let init = cfg.init_rank(n);
@@ -165,68 +349,76 @@ pub fn run_exchange(
         .zip(&plan.len)
         .map(|(w, &l)| if w.len() == l { w } else { vec![init; l] })
         .collect();
-    let mut next: Vec<Vec<f64>> = plan.len.iter().map(|&l| vec![0.0; l]).collect();
-    let mut contrib: Vec<Vec<f64>> = plan.len.iter().map(|&l| vec![0.0; l]).collect();
-    // One inbox per destination shard, refilled every iteration — the
-    // remote-shard-as-big-vertex aggregate.
-    let mut inbox: Vec<RemoteAggregate> =
-        plan.len.iter().map(|&l| RemoteAggregate::new(l)).collect();
+    scratch.ensure(plan);
+    let ExchangeScratch { contrib, slots } = scratch;
     let mut iterations = 0;
     let mut last_delta = f64::INFINITY;
     for _ in 0..cfg.max_iters {
-        // Scatter: scale each owned source once (r_u / d_out(u)).
-        for s in 0..k {
-            let (c, r, inv) = (&mut contrib[s], &ranks[s], &plan.inv_out[s]);
+        // Scatter (parallel per source shard): scale each owned source
+        // once (r_u / d_out(u)) and partial-sum the dangling mass over
+        // the plan's precomputed dangling list.
+        let r_now = &ranks;
+        let masses = dispatch(pool, contrib, |s, c| {
+            let (r, inv) = (&r_now[s], &plan.inv_out[s]);
             for &u in &plan.owned[s] {
                 c[u as usize] = r[u as usize] * inv[u as usize];
             }
-        }
-        // Dangling mass is global: owned vertices with no out-edges leak
-        // rank the redistribution hands back to every vertex.
-        let dangling_share = if cfg.dangling_redistribution {
-            let mut mass = 0.0;
-            for s in 0..k {
-                for &u in &plan.owned[s] {
-                    if plan.inv_out[s][u as usize] == 0.0 {
-                        mass += ranks[s][u as usize];
-                    }
-                }
+            if cfg.dangling_redistribution {
+                plan.dangling[s].iter().map(|&u| r[u as usize]).sum()
+            } else {
+                0.0
             }
-            cfg.beta * mass / n as f64
+        });
+        // Dangling mass is global: the per-shard partials fold in shard
+        // order, so the share is the same float at every worker count.
+        let dangling_share = if cfg.dangling_redistribution {
+            cfg.beta * masses.iter().sum::<f64>() / n as f64
         } else {
             0.0
         };
-        // Gather: local edges accumulate directly; cut edges go through
-        // the destination shard's inbox.
-        for (s, nx) in next.iter_mut().enumerate() {
-            nx.iter_mut().for_each(|x| *x = 0.0);
-            for &(u, v) in &plan.internal[s] {
-                nx[v as usize] += contrib[s][u as usize];
+        // Gather (parallel per destination shard): internal edges
+        // accumulate into the gather slots; cut edges fold into the
+        // inbox, source shards visited in shard order so every slot sums
+        // its in-mass in the serial order.
+        let c_now: &[Vec<f64>] = contrib;
+        dispatch(pool, slots, |t, slot| {
+            let c = &c_now[t];
+            for &(u, v) in &plan.internal[t] {
+                slot.acc[v as usize] += c[u as usize];
             }
-        }
-        for s in 0..k {
-            for (t, edges) in plan.cross[s].iter().enumerate() {
-                for &(u, v) in edges {
-                    inbox[t].add(v, contrib[s][u as usize]);
+            for (src, c) in c_now.iter().enumerate() {
+                for &(u, v) in &plan.cross[src][t] {
+                    slot.inbox.add(v, c[u as usize]);
                 }
             }
-        }
-        // Apply + fold the exchanged boundary mass; per-shard L1 deltas
-        // reduce in shard order (deterministic for a fixed shard count).
-        let mut delta = 0.0;
-        for s in 0..k {
-            let (nx, r, inb) = (&mut next[s], &ranks[s], &inbox[s]);
+        });
+        // Apply (parallel per shard): fold gather + inbox under the
+        // shared teleport/dangling terms, partial-sum the L1 delta, and
+        // zero each touched gather slot for the next iteration (edges
+        // only ever target owned vertices, so this sweep restores the
+        // all-zero invariant).
+        let deltas = dispatch(pool, slots, |s, slot| {
+            let ShardSlot { acc, next, inbox } = slot;
+            let r = &r_now[s];
+            let b = inbox.b();
+            let mut delta = 0.0;
             for &v in &plan.owned[s] {
-                let x = teleport + cfg.beta * (nx[v as usize] + inb.b()[v as usize])
-                    + dangling_share;
-                delta += (x - r[v as usize]).abs();
-                nx[v as usize] = x;
+                let vi = v as usize;
+                let x = teleport + cfg.beta * (acc[vi] + b[vi]) + dangling_share;
+                delta += (x - r[vi]).abs();
+                next[vi] = x;
+                acc[vi] = 0.0;
             }
-            inbox[s].clear();
-        }
+            inbox.clear();
+            delta
+        });
+        // Per-shard L1 partials reduce in shard order (deterministic for
+        // a fixed shard count at any worker count).
+        last_delta = deltas.iter().sum();
         iterations += 1;
-        last_delta = delta;
-        std::mem::swap(&mut ranks, &mut next);
+        for (r, slot) in ranks.iter_mut().zip(slots.iter_mut()) {
+            std::mem::swap(r, &mut slot.next);
+        }
         if cfg.epsilon > 0.0 && last_delta < epsilon {
             break;
         }
@@ -239,6 +431,7 @@ mod tests {
     use super::*;
     use crate::pagerank::power::PageRank;
     use crate::stream::event::EdgeOp;
+    use crate::testing::vprop::{forall, Gen};
 
     /// Build per-shard graphs by routing edge ops, plus the matching
     /// single-engine graph.
@@ -255,6 +448,16 @@ mod tests {
         }
         let (single, _) = DynamicGraph::from_edges(edges.to_vec());
         (graphs, single, parts)
+    }
+
+    /// Exact bit pattern of an exchange result, for bit-identity
+    /// assertions.
+    fn bits(r: &ExchangeResult) -> (usize, u64, Vec<Vec<u64>>) {
+        (
+            r.iterations,
+            r.last_delta.to_bits(),
+            r.ranks.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect(),
+        )
     }
 
     #[test]
@@ -292,5 +495,138 @@ mod tests {
         let ex = run_exchange(&plan, &PageRankConfig::default(), None);
         assert_eq!(ex.iterations, 0);
         assert!(ex.ranks.iter().all(Vec::is_empty));
+    }
+
+    /// Property (the tentpole acceptance): the pooled exchange returns
+    /// the exact bits of the serial exchange for every tested worker
+    /// count, cold- and warm-started, on arbitrary random topologies —
+    /// including with a scratch reused across runs.
+    #[test]
+    fn pooled_exchange_is_bit_identical_to_serial() {
+        forall(8, 0xB17F0, |g: &mut Gen| {
+            let shards = g.usize(1..5);
+            let n = g.usize(2..24);
+            let m = g.usize(0..48);
+            let mut edges = g.edges(n, m);
+            if g.bool(0.5) {
+                edges.extend((0..n as u64).map(|i| (i, (i + 1) % n as u64)));
+            }
+            let (graphs, _, parts) = build_sharded(&edges, shards);
+            let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+            let plan = ShardPlan::build(&refs, &parts);
+            let cfg = PageRankConfig::default();
+            let serial = run_exchange(&plan, &cfg, None);
+            let warm = serial.ranks.clone();
+            let serial_warm = run_exchange(&plan, &cfg, Some(warm.clone()));
+            let mut scratch = ExchangeScratch::new();
+            for workers in [1usize, 2, 4, 7] {
+                let pool = ThreadPool::new(workers);
+                let pooled = run_exchange_pooled(&plan, &cfg, None, Some(&pool), &mut scratch);
+                assert_eq!(bits(&serial), bits(&pooled), "cold, workers={workers}");
+                let pooled_warm = run_exchange_pooled(
+                    &plan,
+                    &cfg,
+                    Some(warm.clone()),
+                    Some(&pool),
+                    &mut scratch,
+                );
+                assert_eq!(bits(&serial_warm), bits(&pooled_warm), "warm, workers={workers}");
+            }
+        });
+    }
+
+    /// The degenerate shapes the pooled dispatch must not trip over:
+    /// an empty cluster, an all-dangling graph (the dangling reduction
+    /// carries all the mass) and a single shard (one chunk runs inline).
+    /// One scratch moves across all three plans, exercising the
+    /// resize-and-rezero path.
+    #[test]
+    fn pooled_exchange_handles_degenerate_shapes() {
+        let cfg = PageRankConfig::default();
+        for workers in [1usize, 2, 4, 7] {
+            let pool = ThreadPool::new(workers);
+            let mut scratch = ExchangeScratch::new();
+
+            let parts = Partitioner::new(2);
+            let graphs = [DynamicGraph::new(), DynamicGraph::new()];
+            let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+            let plan = ShardPlan::build(&refs, &parts);
+            let pooled = run_exchange_pooled(&plan, &cfg, None, Some(&pool), &mut scratch);
+            assert_eq!(pooled.iterations, 0, "empty cluster is a no-op");
+
+            let parts = Partitioner::new(3);
+            let ops: Vec<EdgeOp> = (0..12u64).map(EdgeOp::AddVertex).collect();
+            let routed = parts.route(&ops);
+            let mut graphs: Vec<DynamicGraph> = (0..3).map(|_| DynamicGraph::new()).collect();
+            for (g, ops) in graphs.iter_mut().zip(&routed) {
+                g.apply_batch(ops, None, 1);
+            }
+            let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+            let plan = ShardPlan::build(&refs, &parts);
+            let serial = run_exchange(&plan, &cfg, None);
+            let pooled = run_exchange_pooled(&plan, &cfg, None, Some(&pool), &mut scratch);
+            assert_eq!(bits(&serial), bits(&pooled), "all-dangling, workers={workers}");
+
+            let (graphs, _, parts) = build_sharded(&[(0, 1), (1, 2), (2, 0), (3, 1)], 1);
+            let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+            let plan = ShardPlan::build(&refs, &parts);
+            let serial = run_exchange(&plan, &cfg, None);
+            let pooled = run_exchange_pooled(&plan, &cfg, None, Some(&pool), &mut scratch);
+            assert_eq!(bits(&serial), bits(&pooled), "single-shard, workers={workers}");
+        }
+    }
+
+    /// Property: incrementally rebuilding only the shards whose graph
+    /// version moved reproduces a from-scratch `ShardPlan::build` under
+    /// arbitrary mutation interleavings — checked through the exchange
+    /// output bits, the vertex union and the cut-edge count.
+    #[test]
+    fn incremental_plan_rebuild_matches_fresh_build() {
+        forall(10, 0x9AB5, |g: &mut Gen| {
+            let shards = g.usize(1..5);
+            let parts = Partitioner::new(shards);
+            let n = g.usize(4..16) as u64;
+            let initial: Vec<EdgeOp> =
+                g.edges(n as usize, 16).into_iter().map(|(s, d)| EdgeOp::add(s, d)).collect();
+            let apply = |graphs: &mut Vec<DynamicGraph>, ops: &[EdgeOp]| {
+                for (sg, ops) in graphs.iter_mut().zip(&parts.route(ops)) {
+                    sg.apply_batch(ops, None, 1);
+                }
+            };
+            let mut graphs: Vec<DynamicGraph> = (0..shards).map(|_| DynamicGraph::new()).collect();
+            apply(&mut graphs, &initial);
+            let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+            let mut cached = ShardPlan::build(&refs, &parts);
+            let mut versions: Vec<u64> = graphs.iter().map(DynamicGraph::version).collect();
+            for _ in 0..g.usize(1..5) {
+                let mut batch = Vec::new();
+                for _ in 0..g.usize(1..8) {
+                    let (a, b) = (g.u64(0..n + 4), g.u64(0..n + 4));
+                    if a == b {
+                        continue;
+                    }
+                    batch.push(if g.bool(0.1) {
+                        EdgeOp::RemoveVertex(a)
+                    } else if g.bool(0.3) {
+                        EdgeOp::remove(a, b)
+                    } else {
+                        EdgeOp::add(a, b)
+                    });
+                }
+                apply(&mut graphs, &batch);
+                let now: Vec<u64> = graphs.iter().map(DynamicGraph::version).collect();
+                let dirty: Vec<bool> = versions.iter().zip(&now).map(|(a, b)| a != b).collect();
+                versions = now;
+                let refs: Vec<&DynamicGraph> = graphs.iter().collect();
+                cached.rebuild_shards(&refs, &parts, &dirty);
+                let fresh = ShardPlan::build(&refs, &parts);
+                assert_eq!(cached.total_vertices(), fresh.total_vertices());
+                assert_eq!(cached.cut_edges(), fresh.cut_edges());
+                let cfg = PageRankConfig::default();
+                let a = run_exchange(&cached, &cfg, None);
+                let b = run_exchange(&fresh, &cfg, None);
+                assert_eq!(bits(&a), bits(&b), "rebuilt plan diverges from fresh build");
+            }
+        });
     }
 }

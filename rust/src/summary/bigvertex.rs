@@ -329,7 +329,7 @@ pub struct DenseSummary {
 /// iteration. Unlike `SummaryGraph::b`, these contributions are
 /// re-exchanged every iteration — which is why the sharded run converges
 /// to the exact fixed point instead of an approximation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RemoteAggregate {
     /// Aggregated incoming mass per local destination index.
     b: Vec<f64>,
@@ -375,6 +375,15 @@ impl RemoteAggregate {
     /// Zero the inbox for the next exchange round.
     pub fn clear(&mut self) {
         self.b.iter_mut().for_each(|m| *m = 0.0);
+        self.boundary_edges = 0;
+    }
+
+    /// Zero the inbox and resize it to `n` local slots, keeping the
+    /// allocation when the shard has not grown — the reuse path for
+    /// exchange scratch carried across recomputes.
+    pub fn reset(&mut self, n: usize) {
+        self.b.clear();
+        self.b.resize(n, 0.0);
         self.boundary_edges = 0;
     }
 }

@@ -16,6 +16,8 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
+use veilgraph::coordinator::engine::ScheduleMode;
+use veilgraph::coordinator::policies::StalenessPolicy;
 use veilgraph::coordinator::server::{serve, ServeOptions, ServerHandle};
 use veilgraph::coordinator::sharded::ShardedEngineBuilder;
 use veilgraph::graph::dynamic::DynamicGraph;
@@ -107,7 +109,8 @@ fn partitioner_is_total_pure_and_routes_minimally() {
 fn row_split_concat_roundtrips_on_random_graphs() {
     forall(40, 0xC5A1, |g: &mut Gen| {
         let n = g.usize(2..60);
-        let mut edges = g.edges(n, g.usize(1..120));
+        let m = g.usize(1..120);
+        let mut edges = g.edges(n, m);
         edges.push((0, 1)); // never a vertexless graph
         let (dg, _) = DynamicGraph::from_edges(edges);
         let csr = dg.snapshot();
@@ -190,6 +193,93 @@ fn sharded_ranks_match_single_engine_under_mutation() {
                 );
             }
         }
+    });
+}
+
+/// Property (fence reconciliation): an off-thread recompute that loses
+/// its version fence to writes landing mid-flight is salvaged — the
+/// post-fence ops replay onto the fenced ranks — and the reconciled
+/// publish tracks the blocking-recompute oracle: the vertex set equals
+/// the mirror graph's, every rank is positive and finite, and one
+/// follow-up blocking query restores exact agreement (L1 < 1e-6).
+#[test]
+fn fence_reconciled_publish_tracks_blocking_oracle() {
+    forall(12, 0xF17CE, |g: &mut Gen| {
+        let n = g.usize(8..14);
+        let mut initial = g.edges(n, 20);
+        initial.extend((0..n as u64).map(|i| (i, (i + 1) % n as u64)));
+        let (mut mirror, _) = DynamicGraph::from_edges(initial.clone());
+        let k = g.usize(2..5);
+        let mut engine = ShardedEngineBuilder::new(k).build_from_edges(initial).unwrap();
+        let policy = StalenessPolicy::new(1, 1, 8, 64, 5.0, 120.0);
+
+        // Pre-fence batch (may include vertex drops — the fence log only
+        // records what lands AFTER the job is cut). One guaranteed-new
+        // edge keeps the policy escalating.
+        let mut batch = vec![EdgeOp::add(500, 0)];
+        for _ in 0..g.usize(0..6) {
+            let (a, b) = (g.u64(0..n as u64 + 4), g.u64(0..n as u64 + 4));
+            if a == b {
+                continue;
+            }
+            batch.push(if g.bool(0.1) {
+                EdgeOp::RemoveVertex(a)
+            } else if g.bool(0.25) {
+                EdgeOp::remove(a, b)
+            } else {
+                EdgeOp::add(a, b)
+            });
+        }
+        seq_apply(&mut mirror, &batch);
+        engine.ingest_batch(batch.iter().copied());
+        let (_, job) = engine.query_async(&policy, 0.0, ScheduleMode::WhenDue).unwrap();
+        let job = job.expect("one effective update must escalate the policy");
+        let res = job.run();
+
+        // Post-fence batch: edge-only mutations (a vertex drop would
+        // taint the log and demote the miss to a plain merge).
+        let mut post = Vec::new();
+        for _ in 0..g.usize(1..6) {
+            let (a, b) = (g.u64(0..n as u64 + 8), g.u64(0..n as u64 + 8));
+            if a == b {
+                continue;
+            }
+            post.push(if g.bool(0.3) { EdgeOp::remove(a, b) } else { EdgeOp::add(a, b) });
+        }
+        let (applied, _) = seq_apply(&mut mirror, &post);
+        engine.ingest_batch(post.iter().copied());
+        engine.flush_pending();
+
+        let out = engine.finish_recompute(res);
+        if applied > 0 {
+            assert!(!out.fence_ok, "effective post-fence ops must miss the fence");
+            assert!(out.reconciled, "a clean fence log must reconcile the miss");
+            assert_eq!(engine.metrics().counter("recomputes_reconciled"), 1);
+            assert_eq!(engine.metrics().counter("recompute_fence_misses"), 0);
+        } else {
+            assert!(out.fence_ok, "no effective post-fence ops ⇒ the fence holds");
+            assert!(!out.reconciled);
+        }
+
+        // The reconciled publish tracks the oracle's vertex set, with
+        // every rank positive and finite.
+        let snap = engine.latest_snapshot();
+        assert_eq!(snap.ids.len(), mirror.num_vertices(), "k={k}: published vertex set");
+        for &id in mirror.ids() {
+            let r = snap.rank_of(id).expect("reconciled snapshot misses a live vertex");
+            assert!(r.is_finite() && r > 0.0, "k={k}: rank({id})={r}");
+        }
+
+        // One blocking exchange over the settled topology restores exact
+        // agreement with the oracle graph.
+        engine.query().unwrap();
+        let exact = PageRank::new(PageRankConfig::default()).run(&mirror.snapshot());
+        let snap = engine.latest_snapshot();
+        let mut l1 = 0.0;
+        for (idx, &id) in mirror.ids().iter().enumerate() {
+            l1 += (snap.rank_of(id).unwrap() - exact.ranks[idx]).abs();
+        }
+        assert!(l1 < 1e-6, "k={k}: post-reconcile exchange diverges, L1={l1}");
     });
 }
 
